@@ -1,0 +1,74 @@
+//! Ablation: combined blocking vs the temporal-only prior work (§1, §7).
+//! Shows (a) the input-width cap of temporal-only designs per par_time,
+//! (b) throughput of both schemes where the baseline still fits, and
+//! (c) that the combined scheme keeps running far past the cap.
+//!
+//!     cargo bench --bench ablation_baseline
+
+use fstencil::baseline::{max_supported_width, temporal_only_estimate};
+use fstencil::bench_support::{BenchReport, Bencher};
+use fstencil::model::Params;
+use fstencil::simulator::{BoardSim, Device, DeviceKind};
+use fstencil::stencil::StencilKind;
+use fstencil::util::table::{f, Table};
+
+fn main() {
+    let mut rep = BenchReport::new("Ablation — combined blocking vs temporal-only prior work");
+    let b = Bencher::default();
+    let kind = StencilKind::Diffusion2D;
+    let devk = DeviceKind::StratixV;
+    let dev = Device::get(devk);
+
+    // (a) width caps.
+    let mut t = Table::new(&["par_time", "temporal-only max width"]).left_first_col();
+    for pt in [4usize, 8, 16, 24, 32] {
+        t.row(vec![pt.to_string(), max_supported_width(kind, dev, 8, pt).to_string()]);
+    }
+    rep.payload(t.render());
+
+    // (b)+(c) throughput across widths.
+    let sim = BoardSim::new(devk);
+    let mut t2 = Table::new(&[
+        "width",
+        "temporal-only est GB/s",
+        "combined est GB/s",
+        "combined meas GB/s",
+        "note",
+    ])
+    .title("par_time 16, par_vec 4 (S-V): scaling with input width")
+    .left_first_col();
+    for width in [2048usize, 4096, 8192, 16384, 32768] {
+        let dims = vec![width, width];
+        // Both "est" columns are the §4 analytic model at the same f_max —
+        // the apples-to-apples redundancy cost of spatial blocking. The
+        // "meas" column adds the simulator's controller losses (which the
+        // temporal-only literature numbers also suffered on real boards).
+        let base = temporal_only_estimate(kind, dev, &dims, 4, 16, 1000, 290.0);
+        let combined = sim.simulate(&Params::new(kind, 4, 16, 2048.min(width), &dims, 1000, 0.0));
+        let (est, meas) = combined
+            .map(|r| {
+                let scale = 290.0 / r.params.fmax_mhz; // normalize f_max
+                (r.estimate.throughput_gbps * scale, r.measured_gbps)
+            })
+            .unwrap_or((0.0, 0.0));
+        t2.row(vec![
+            width.to_string(),
+            if base.fits { f(base.throughput_gbps, 1) } else { "DOES NOT FIT".into() },
+            f(est, 1),
+            f(meas, 1),
+            if base.fits { "" } else { "<- paper's motivation" }.to_string(),
+        ]);
+    }
+    rep.payload(t2.render());
+    rep.payload(
+        "shape: at equal f_max the combined scheme loses only the halo redundancy \
+         (a few % — paper §7: 9% slower than [22] on the same device) but has NO width \
+         cap; temporal-only designs stop fitting entirely."
+            .to_string(),
+    );
+
+    rep.push(b.bench("baseline_width_search", || {
+        std::hint::black_box(max_supported_width(kind, dev, 8, 24));
+    }));
+    rep.finish();
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig 6 (Diffusion 3D performance + power efficiency
+//! vs four GPU generations, §6.4), including the roofline series.
+//!
+//!     cargo bench --bench fig6_gpu_comparison
+
+use fstencil::bench_support::{BenchReport, Bencher};
+use fstencil::report;
+
+fn main() {
+    let mut rep = BenchReport::new("Fig 6 — Diffusion 3D vs GPUs");
+    let b = Bencher::default();
+
+    rep.payload(report::fig6());
+
+    let rows = report::fig6_rows();
+    let a10 = rows.iter().find(|r| r.device.contains("Arria 10")).unwrap();
+    let k40 = rows.iter().find(|r| r.device.contains("K40c")).unwrap();
+    let ti = rows.iter().find(|r| r.device.contains("980Ti")).unwrap();
+    rep.payload(format!(
+        "orderings (paper §6.4): A10 {:.0} GF > K40c {:.0} GF: {} | A10 {:.2} GF/W > 980Ti {:.2} GF/W: {} | A10 {:.1}x over its roofline",
+        a10.gflops,
+        k40.gflops,
+        a10.gflops > k40.gflops,
+        a10.gflops_per_watt,
+        ti.gflops_per_watt,
+        a10.gflops_per_watt > ti.gflops_per_watt,
+        a10.gflops / a10.roofline_gflops,
+    ));
+
+    rep.push(b.bench("fig6_rows", || {
+        std::hint::black_box(report::fig6_rows());
+    }));
+    rep.finish();
+}

@@ -1,0 +1,129 @@
+//! L3 hot-path microbenchmarks — the profile targets of the §Perf pass
+//! (EXPERIMENTS.md): tile extraction/write-back marshalling, host tile
+//! compute, the fused pipeline end-to-end, and (when artifacts exist)
+//! PJRT tile execution.
+//!
+//!     cargo bench --bench hotpath_pipeline
+
+use fstencil::blocking::geometry::BlockGeometry;
+use fstencil::bench_support::{BenchReport, Bencher};
+use fstencil::coordinator::{Coordinator, FusedPipeline, PlanBuilder};
+use fstencil::runtime::{extract_tile, writeback_tile, Executor, HostExecutor, PjrtExecutor, TileSpec};
+use fstencil::stencil::{Grid, StencilKind};
+
+fn main() {
+    let mut rep = BenchReport::new("L3 hot path — pipeline microbenchmarks");
+    let b = Bencher::default();
+    let kind = StencilKind::Diffusion2D;
+
+    // --- tile marshalling --------------------------------------------
+    let mut grid = Grid::new2d(1024, 1024);
+    grid.fill_random(1, 0.0, 1.0);
+    let tile = vec![64usize, 64];
+    let geom = BlockGeometry::tiled(&[1024, 1024], &tile, 4);
+    let blocks: Vec<_> = geom.blocks().collect();
+    let ncells = (blocks.len() * 64 * 64) as f64;
+    let mut buf = Vec::new();
+    rep.push(b.bench_with_metric("extract_all_tiles_1024sq", "Mcell/s", ncells / 1e6, || {
+        for blk in &blocks {
+            extract_tile(&grid, blk, &tile, &mut buf);
+            std::hint::black_box(&buf);
+        }
+    }));
+    let mut out = grid.clone();
+    let result = vec![0.5f32; 64 * 64];
+    rep.push(b.bench_with_metric("writeback_all_tiles_1024sq", "Mcell/s", ncells / 1e6, || {
+        for blk in &blocks {
+            writeback_tile(&mut out, blk, &tile, &result);
+        }
+        std::hint::black_box(&out);
+    }));
+
+    // --- host tile compute -------------------------------------------
+    let host = HostExecutor::new();
+    let spec = TileSpec::new(kind, &[64, 64], 4);
+    let tdata = vec![0.5f32; spec.cells()];
+    let coeffs = kind.def().default_coeffs;
+    let updates = (spec.cells() * spec.steps) as f64;
+    rep.push(b.bench_with_metric("host_tile_64sq_s4", "Mcell-updates/s", updates / 1e6, || {
+        std::hint::black_box(host.run_tile(&spec, &tdata, None, coeffs).unwrap());
+    }));
+
+    // --- PJRT tile compute (when artifacts are built) ------------------
+    if let Ok(pjrt) = PjrtExecutor::load_default() {
+        pjrt.warm_up(kind).unwrap();
+        for s in [1usize, 4, 8] {
+            let spec = TileSpec::new(kind, &[64, 64], s);
+            if !pjrt.supports(&spec) {
+                continue;
+            }
+            let updates = (spec.cells() * s) as f64;
+            rep.push(b.bench_with_metric(
+                &format!("pjrt_tile_64sq_s{s}"),
+                "Mcell-updates/s",
+                updates / 1e6,
+                || {
+                    std::hint::black_box(pjrt.run_tile(&spec, &tdata, None, coeffs).unwrap());
+                },
+            ));
+        }
+        for (th, tw, s) in [(128usize, 128usize, 4usize), (256, 256, 8)] {
+            let spec_big = TileSpec::new(kind, &[th, tw], s);
+            if !pjrt.supports(&spec_big) {
+                continue;
+            }
+            let tdata_big = vec![0.5f32; spec_big.cells()];
+            let updates = (spec_big.cells() * s) as f64;
+            rep.push(b.bench_with_metric(
+                &format!("pjrt_tile_{th}sq_s{s}"),
+                "Mcell-updates/s",
+                updates / 1e6,
+                || {
+                    std::hint::black_box(
+                        pjrt.run_tile(&spec_big, &tdata_big, None, coeffs).unwrap(),
+                    );
+                },
+            ));
+        }
+    } else {
+        rep.payload("artifacts missing: PJRT benches skipped (run `make artifacts`)".into());
+    }
+
+    // --- end-to-end: sequential vs fused pipeline ----------------------
+    let dims = vec![512usize, 512];
+    let iters = 8;
+    let plan = PlanBuilder::new(kind)
+        .grid_dims(dims.clone())
+        .iterations(iters)
+        .tile(vec![64, 64])
+        .build()
+        .unwrap();
+    let total_updates = (512 * 512 * iters) as f64;
+    let mut g = Grid::new2d(512, 512);
+    g.fill_random(2, 0.0, 1.0);
+    rep.push(b.bench_with_metric(
+        "coordinator_sequential_512sq_x8",
+        "Mcell-updates/s",
+        total_updates / 1e6,
+        || {
+            let mut work = g.clone();
+            Coordinator::new(plan.clone()).run(&host, &mut work, None).unwrap();
+            std::hint::black_box(work);
+        },
+    ));
+    for workers in [2usize, 4, 8] {
+        rep.push(b.bench_with_metric(
+            &format!("fused_pipeline_512sq_x8_w{workers}"),
+            "Mcell-updates/s",
+            total_updates / 1e6,
+            || {
+                let mut work = g.clone();
+                FusedPipeline::with_workers(plan.clone(), workers)
+                    .run(&host, &mut work, None)
+                    .unwrap();
+                std::hint::black_box(work);
+            },
+        ));
+    }
+    rep.finish();
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Table 4 (all 21 FPGA result rows) on the board
+//! simulator and time the reproduction itself.
+//!
+//!     cargo bench --bench table4_fpga_results
+
+use fstencil::bench_support::{BenchReport, Bencher};
+use fstencil::report;
+
+fn main() {
+    let mut rep = BenchReport::new("Table 4 — FPGA results reproduction");
+    let b = Bencher::default();
+
+    // The deliverable: the table itself.
+    rep.payload(report::table4());
+
+    // Timing: full 21-row simulation sweep.
+    rep.push(b.bench_with_metric("table4_full_sweep", "rows/s", 21.0, || {
+        let rows = report::table4_rows();
+        assert_eq!(rows.len(), 21);
+        std::hint::black_box(rows);
+    }));
+
+    // Per-row cost of one board simulation (the A10 best config).
+    let cfg = report::TABLE4_CONFIGS[4];
+    let sim = fstencil::simulator::BoardSim::new(cfg.1);
+    let params = report::table4_params(cfg);
+    rep.push(b.bench("simulate_one_config", || {
+        std::hint::black_box(sim.simulate(&params).unwrap());
+    }));
+
+    rep.finish();
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate Table 6 (Stratix 10 projection, §6.3) and time the
+//! projection search.
+//!
+//!     cargo bench --bench table6_stratix10
+
+use fstencil::bench_support::{BenchReport, Bencher};
+use fstencil::model::projection::project_stratix10;
+use fstencil::report;
+
+fn main() {
+    let mut rep = BenchReport::new("Table 6 — Stratix 10 performance estimation");
+    let b = Bencher::default();
+
+    rep.payload(report::table6());
+
+    rep.push(b.bench_with_metric("project_both_devices", "rows/s", 8.0, || {
+        let p = project_stratix10(5000);
+        assert_eq!(p.rows.len(), 8);
+        std::hint::black_box(p);
+    }));
+
+    // Paper headline deltas.
+    let p = project_stratix10(5000);
+    let best2d = p.rows.iter().filter(|r| r.stencil.ndim() == 2).map(|r| r.perf_gflops).fold(0.0, f64::max);
+    let best3d = p.rows.iter().filter(|r| r.stencil.ndim() == 3).map(|r| r.perf_gflops).fold(0.0, f64::max);
+    rep.payload(format!(
+        "headline: best 2D = {best2d:.0} GFLOP/s (paper: 3558), best 3D = {best3d:.0} GFLOP/s (paper: 1585)"
+    ));
+    rep.finish();
+}

@@ -1,0 +1,111 @@
+//! End-to-end driver (DESIGN.md §5): a realistic Hotspot 2D thermal
+//! simulation of a chip floorplan, run through ALL layers of the stack —
+//! Pallas-authored kernels → AOT HLO artifacts → PJRT CPU client → Rust
+//! coordinator with overlapped blocking — on a real small workload, with
+//! the convergence curve logged and the result verified against the
+//! scalar oracle.
+//!
+//!     make artifacts && cargo run --release --example heat_sim
+//!
+//! The floorplan models a 4-core die: hot cores in the corners, a warm
+//! L3 slab in the middle, cool I/O at the edges (the workload class the
+//! paper's intro motivates: thermal simulation on Rodinia's Hotspot).
+
+use fstencil::coordinator::{Coordinator, PlanBuilder};
+use fstencil::runtime::{Executor, HostExecutor, PjrtExecutor};
+use fstencil::stencil::{reference, Grid, StencilKind};
+
+const N: usize = 384; // die resolution (N x N cells)
+const AMB: f32 = 80.0; // Rodinia-style ambient, in arbitrary units
+
+/// Build a 4-core chip power map.
+fn floorplan(n: usize) -> Grid {
+    let mut p = Grid::new2d(n, n);
+    let core = n / 4;
+    let put = |p: &mut Grid, y0: usize, x0: usize, h: usize, w: usize, v: f32| {
+        for y in y0..(y0 + h).min(n) {
+            for x in x0..(x0 + w).min(n) {
+                p.set(0, y, x, v);
+            }
+        }
+    };
+    // four cores
+    for (cy, cx) in [(n / 8, n / 8), (n / 8, 5 * n / 8), (5 * n / 8, n / 8), (5 * n / 8, 5 * n / 8)]
+    {
+        put(&mut p, cy, cx, core, core, 1.8);
+    }
+    // L3 slab in the center
+    put(&mut p, 3 * n / 8, 3 * n / 8, n / 4, n / 4, 0.6);
+    p
+}
+
+fn main() -> anyhow::Result<()> {
+    let kind = StencilKind::Hotspot2D;
+    let coeffs = kind.def().default_coeffs.to_vec();
+    let iters_total = 200;
+    let checkpoint = 25;
+
+    let mut temp = Grid::new2d(N, N);
+    temp.fill_const(AMB);
+    let power = floorplan(N);
+
+    let exec: Box<dyn Executor> = match PjrtExecutor::load_default() {
+        Ok(p) => {
+            println!("backend: PJRT ({})", p.platform());
+            Box::new(p)
+        }
+        Err(e) => {
+            println!("backend: host fallback ({e})");
+            Box::new(HostExecutor::new())
+        }
+    };
+
+    println!("thermal simulation: {N}x{N} die, {iters_total} time-steps");
+    println!("step | t_max    t_mean   | hottest-core delta | Mcell/s");
+    let t0 = std::time::Instant::now();
+    let mut done = 0;
+    let mut tiles = 0u64;
+    while done < iters_total {
+        let step = checkpoint.min(iters_total - done);
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(vec![N, N])
+            .iterations(step)
+            .coeffs(coeffs.clone())
+            .for_executor(exec.as_ref())
+            .build()?;
+        let rep = Coordinator::new(plan).run(exec.as_ref(), &mut temp, Some(&power))?;
+        tiles += rep.tiles_executed;
+        done += step;
+        let tmax = temp.data().iter().cloned().fold(f32::MIN, f32::max);
+        let tmean = temp.sum() as f32 / (N * N) as f32;
+        println!(
+            "{done:>4} | {tmax:>8.3} {tmean:>8.3} | {:>18.3} | {:>7.1}",
+            tmax - AMB,
+            rep.mcells_per_sec()
+        );
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let updates = (N * N * iters_total) as f64;
+    println!(
+        "\ntotal: {updates:.0} cell updates, {tiles} tiles, {elapsed:.2}s -> {:.1} Mcell/s end-to-end",
+        updates / elapsed / 1e6
+    );
+
+    // Full verification of the entire 200-step trajectory.
+    print!("verifying against the scalar oracle ... ");
+    let mut check = Grid::new2d(N, N);
+    check.fill_const(AMB);
+    let want = reference::run(kind, &check, Some(&power), &coeffs, iters_total);
+    let err = temp.max_abs_diff(&want);
+    println!("max |err| = {err:.3e}");
+    anyhow::ensure!(err < 5e-3, "verification failed");
+
+    // Physics: cores hotter than L3, L3 hotter than idle silicon.
+    let t_core = temp.get(0, N / 8 + N / 8, N / 8 + N / 8);
+    let t_l3 = temp.get(0, N / 2, N / 2);
+    let t_edge = temp.get(0, 1, N / 2);
+    println!("core {t_core:.2} > L3 {t_l3:.2} > edge {t_edge:.2}");
+    anyhow::ensure!(t_core > t_l3 && t_l3 > t_edge, "thermal ordering violated");
+    println!("heat_sim OK");
+    Ok(())
+}

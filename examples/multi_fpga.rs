@@ -1,0 +1,52 @@
+//! Multi-device spatial distribution (the paper's §8 future work): a
+//! large Diffusion 2D grid split into slabs across N simulated FPGAs with
+//! per-pass halo exchange. Demonstrates correctness (vs the oracle) and
+//! the communication/computation scaling that makes distribution viable.
+//!
+//!     cargo run --release --example multi_fpga
+
+use fstencil::coordinator::{DistributedCoordinator, PlanBuilder};
+use fstencil::runtime::HostExecutor;
+use fstencil::stencil::{reference, Grid, StencilKind};
+
+fn main() -> anyhow::Result<()> {
+    let kind = StencilKind::Diffusion2D;
+    let (h, w, iters) = (1024usize, 512usize, 12usize);
+
+    println!("distributing a {h}x{w} diffusion-2D grid ({iters} iters) across devices:\n");
+    println!("workers | Mcell/s | halo cells moved | comm/compute | max|err| vs oracle");
+
+    let mut base = Grid::new2d(h, w);
+    base.fill_gaussian(0.0, 1.0, 0.06);
+    let want = reference::run(kind, &base, None, kind.def().default_coeffs, iters);
+
+    for workers in [1usize, 2, 4, 8] {
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(vec![h, w])
+            .iterations(iters)
+            .tile(vec![64, 64])
+            .build()?;
+        let mut grid = base.clone();
+        let rep = DistributedCoordinator::new(plan, workers).run(
+            &HostExecutor::new(),
+            &mut grid,
+            None,
+        )?;
+        let err = grid.max_abs_diff(&want);
+        println!(
+            "{workers:>7} | {:>7.1} | {:>16} | {:>12.4} | {err:.3e}",
+            rep.mcells_per_sec(),
+            rep.halo_cells_exchanged,
+            rep.comm_ratio(),
+        );
+        anyhow::ensure!(err < 1e-3, "distributed run deviates");
+    }
+
+    println!(
+        "\nnote: halo volume grows with workers but comm/compute stays tiny — \
+         the scaling headroom §8 anticipates. Temporal-only prior work cannot \
+         distribute at all (each PE needs the whole row)."
+    );
+    println!("multi_fpga OK");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: run a Diffusion 2D problem through the public API and
+//! verify the blocked execution against the scalar oracle.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the PJRT backend when `make artifacts` has been run, otherwise
+//! falls back to the in-process host executor.
+
+use fstencil::coordinator::{Coordinator, PlanBuilder};
+use fstencil::runtime::{Executor, HostExecutor, PjrtExecutor};
+use fstencil::stencil::{reference, Grid, StencilKind};
+
+fn main() -> anyhow::Result<()> {
+    let kind = StencilKind::Diffusion2D;
+    let (h, w, iters) = (256, 256, 24);
+
+    // A Gaussian heat bump in the middle of the grid.
+    let mut grid = Grid::new2d(h, w);
+    grid.fill_gaussian(0.0, 1.0, 0.08);
+    let initial_mass = grid.sum();
+
+    // Prefer the AOT/PJRT path (python never runs here — artifacts were
+    // lowered once by `make artifacts`).
+    let exec: Box<dyn Executor> = match PjrtExecutor::load_default() {
+        Ok(p) => {
+            println!("backend: PJRT ({})", p.platform());
+            Box::new(p)
+        }
+        Err(e) => {
+            println!("backend: host fallback ({e})");
+            Box::new(HostExecutor::new())
+        }
+    };
+
+    let plan = PlanBuilder::new(kind)
+        .grid_dims(vec![h, w])
+        .iterations(iters)
+        .for_executor(exec.as_ref())
+        .build()?;
+    println!(
+        "plan: tile {:?}, chunk schedule {:?} ({} passes)",
+        plan.tile,
+        plan.chunks,
+        plan.passes()
+    );
+
+    let before = grid.clone();
+    let report = Coordinator::new(plan.clone()).run(exec.as_ref(), &mut grid, None)?;
+    println!(
+        "ran {} tiles in {:.1} ms -> {:.1} Mcell/s useful, redundancy {:.3}",
+        report.tiles_executed,
+        report.elapsed.as_secs_f64() * 1e3,
+        report.mcells_per_sec(),
+        report.redundancy()
+    );
+
+    // Check against the whole-grid scalar oracle.
+    let want = reference::run(kind, &before, None, &plan.coeffs, iters);
+    let err = grid.max_abs_diff(&want);
+    println!("max |err| vs oracle = {err:.3e}");
+    anyhow::ensure!(err < 1e-3, "verification failed");
+
+    // Physics sanity: diffusion conserves mass away from boundaries.
+    let final_mass = grid.sum();
+    println!("mass {initial_mass:.4} -> {final_mass:.4} (diffusion conserves)");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,123 @@
+"""AOT: lower every (stencil, tile, steps) tile-program variant to HLO text.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs:
+  artifacts/<name>.hlo.txt      one per variant
+  artifacts/manifest.json       what Rust loads: shapes, arg order, steps
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import STENCILS, abstract_args, build_fn
+
+#: The artifact set Rust's runtime may request. Tile shapes are powers of
+#: two (§5.3 restriction: efficient mod-indexed block traversal); `steps`
+#: is the paper's par_time folded into the tile program. The coordinator
+#: maps its (bsize, par_time) plan onto the closest variant.
+VARIANTS = [
+    # (kind, tile_shape, steps)
+    ("diffusion2d", (64, 64), 1),
+    ("diffusion2d", (64, 64), 2),
+    ("diffusion2d", (64, 64), 4),
+    ("diffusion2d", (64, 64), 8),
+    ("diffusion2d", (128, 128), 4),
+    # §Perf L1: larger VMEM tiles amortize per-dispatch overhead (a 256²
+    # f32 tile is 256 KiB — far below the ~16 MiB VMEM budget even with
+    # double buffering).
+    ("diffusion2d", (256, 256), 8),
+    ("hotspot2d", (64, 64), 1),
+    ("hotspot2d", (64, 64), 2),
+    ("hotspot2d", (64, 64), 4),
+    ("diffusion3d", (16, 16, 16), 1),
+    ("diffusion3d", (16, 16, 16), 2),
+    ("diffusion3d", (32, 32, 32), 4),
+    ("hotspot3d", (16, 16, 16), 1),
+    ("hotspot3d", (16, 16, 16), 2),
+    # §8 high-order extension: radius-2 needs halo = 2*steps per side.
+    ("diffusion2dr2", (64, 64), 1),
+    ("diffusion2dr2", (64, 64), 2),
+    ("diffusion2dr2", (64, 64), 4),
+]
+
+
+def variant_name(kind, tile_shape, steps):
+    dims = "x".join(str(d) for d in tile_shape)
+    return f"{kind}_t{dims}_s{steps}"
+
+
+def to_hlo_text(lowered):
+    """stablehlo MLIR -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(kind, tile_shape, steps):
+    fn = build_fn(kind, steps, interpret=True)
+    args = abstract_args(kind, tile_shape)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build_all(out_dir, variants=VARIANTS, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "variants": []}
+    for kind, tile_shape, steps in variants:
+        name = variant_name(kind, tile_shape, steps)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_variant(kind, tile_shape, steps)
+        with open(path, "w") as f:
+            f.write(text)
+        coeff_len, has_power, _ = STENCILS[kind]
+        manifest["variants"].append(
+            {
+                "name": name,
+                "kind": kind,
+                "tile": list(tile_shape),
+                "steps": steps,
+                "has_power": has_power,
+                "coeff_len": coeff_len,
+                "file": f"{name}.hlo.txt",
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        if verbose:
+            print(f"  {name}: {len(text)} chars", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="stamp path; artifacts land in its directory")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    manifest = build_all(out_dir)
+    # The Makefile stamp target: write the first variant's HLO there too so
+    # `make -q artifacts` sees a fresh file.
+    with open(args.out, "w") as f:
+        first = manifest["variants"][0]["file"]
+        with open(os.path.join(out_dir, first)) as g:
+            f.write(g.read())
+    print(f"wrote {len(manifest['variants'])} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

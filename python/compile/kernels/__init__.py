@@ -1,0 +1,22 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (the stencil update).
+
+One module per stencil family; `ref.py` is the pure-jnp oracle used by the
+build-time pytest suite.
+"""
+
+from .diffusion import (
+    ROW_CHUNK,
+    diffusion2d_r2_step,
+    diffusion2d_step,
+    diffusion3d_step,
+)
+from .hotspot import hotspot2d_step, hotspot3d_step
+
+__all__ = [
+    "ROW_CHUNK",
+    "diffusion2d_r2_step",
+    "diffusion2d_step",
+    "diffusion3d_step",
+    "hotspot2d_step",
+    "hotspot3d_step",
+]

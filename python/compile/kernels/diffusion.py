@@ -1,0 +1,143 @@
+"""L1 Pallas kernels: Diffusion 2D / 3D single-step tile update.
+
+Hardware adaptation (DESIGN.md §3): the paper's shift register streams rows
+of the spatial block through FPGA Block RAM with static-offset neighbor taps.
+On the TPU-shaped Pallas model the spatial block is a VMEM-resident tile:
+
+* 2D: the kernel is *row-streamed* — `pallas_call` runs a 1-D grid over row
+  chunks of the tile; the whole tile is the input block (the "shift
+  register" contents) and each program emits one row-chunk of the output
+  (the cells leaving the pipeline that cycle). Neighbor taps are static
+  offsets into the tile, exactly like the FPGA design's static shift
+  register addressing.
+* 3D: the tile (planes × rows × cols) is one VMEM block and the kernel
+  computes the full tile in a single program (plane streaming is handled by
+  the L3 coordinator's z-traversal, as in the paper's 3D z-streaming).
+
+Boundary rule inside a tile: edge clamp. The coordinator always supplies
+`halo = rad × par_time` cells of real data around the compute block, so the
+clamped ring never propagates into cells that are written back (the Fig 5
+shrinking-compute-block argument).
+
+Kernels must be lowered with interpret=True — real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Rows of the output tile emitted per grid step of the 2-D streamed kernel.
+ROW_CHUNK = 8
+
+
+def _diffusion2d_kernel(x_ref, c_ref, o_ref):
+    """One grid-step: compute ROW_CHUNK rows of the diffusion-2D update.
+
+    x_ref: (H, W) full tile (the shift-register contents)
+    c_ref: (5,) coefficients [cc, cn, cs, cw, ce]
+    o_ref: (ROW_CHUNK, W) output row chunk
+    """
+    i = pl.program_id(0)
+    x = x_ref[...]
+    h, w = x.shape
+    p = jnp.pad(x, ((1, 1), (1, 1)), mode="edge")
+    cc, cn, cs, cw, ce = (c_ref[k] for k in range(5))
+    full = (
+        cc * p[1:-1, 1:-1]
+        + cw * p[1:-1, :-2]
+        + ce * p[1:-1, 2:]
+        + cs * p[2:, 1:-1]
+        + cn * p[:-2, 1:-1]
+    )
+    o_ref[...] = lax.dynamic_slice(full, (i * ROW_CHUNK, 0), (ROW_CHUNK, w))
+
+
+def diffusion2d_step(x, coeffs, *, interpret=True):
+    """Single diffusion-2D time-step over a (H, W) tile; H % ROW_CHUNK == 0."""
+    h, w = x.shape
+    assert h % ROW_CHUNK == 0, f"tile height {h} not a multiple of {ROW_CHUNK}"
+    return pl.pallas_call(
+        _diffusion2d_kernel,
+        grid=(h // ROW_CHUNK,),
+        in_specs=[
+            pl.BlockSpec((h, w), lambda i: (0, 0)),
+            pl.BlockSpec((5,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_CHUNK, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
+        interpret=interpret,
+    )(x, coeffs)
+
+
+def _diffusion2d_r2_kernel(x_ref, c_ref, o_ref):
+    """One grid-step of the radius-2 (9-point star) diffusion update —
+    the paper's §8 high-order-stencil extension.
+
+    x_ref: (H, W) tile, c_ref: (9,) [cc, cn1, cs1, cw1, ce1, cn2, cs2,
+    cw2, ce2], o_ref: (ROW_CHUNK, W).
+    """
+    i = pl.program_id(0)
+    x = x_ref[...]
+    h, w = x.shape
+    p = jnp.pad(x, ((2, 2), (2, 2)), mode="edge")
+    cc, cn1, cs1, cw1, ce1, cn2, cs2, cw2, ce2 = (c_ref[k] for k in range(9))
+    full = (
+        cc * p[2:-2, 2:-2]
+        + cn1 * p[1:-3, 2:-2]
+        + cs1 * p[3:-1, 2:-2]
+        + cw1 * p[2:-2, 1:-3]
+        + ce1 * p[2:-2, 3:-1]
+        + cn2 * p[:-4, 2:-2]
+        + cs2 * p[4:, 2:-2]
+        + cw2 * p[2:-2, :-4]
+        + ce2 * p[2:-2, 4:]
+    )
+    o_ref[...] = lax.dynamic_slice(full, (i * ROW_CHUNK, 0), (ROW_CHUNK, w))
+
+
+def diffusion2d_r2_step(x, coeffs, *, interpret=True):
+    """Single radius-2 diffusion time-step over a (H, W) tile."""
+    h, w = x.shape
+    assert h % ROW_CHUNK == 0, f"tile height {h} not a multiple of {ROW_CHUNK}"
+    return pl.pallas_call(
+        _diffusion2d_r2_kernel,
+        grid=(h // ROW_CHUNK,),
+        in_specs=[
+            pl.BlockSpec((h, w), lambda i: (0, 0)),
+            pl.BlockSpec((9,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_CHUNK, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), x.dtype),
+        interpret=interpret,
+    )(x, coeffs)
+
+
+def _diffusion3d_kernel(x_ref, c_ref, o_ref):
+    """Full-tile diffusion-3D update; tile is one VMEM block.
+
+    x_ref: (D, H, W) tile, c_ref: (7,) [cc, cn, cs, cw, ce, ca, cb].
+    Axis 0 = z (above = z-1, below = z+1), axis 1 = y, axis 2 = x.
+    """
+    x = x_ref[...]
+    p = jnp.pad(x, ((1, 1), (1, 1), (1, 1)), mode="edge")
+    cc, cn, cs, cw, ce, ca, cb = (c_ref[k] for k in range(7))
+    o_ref[...] = (
+        cc * p[1:-1, 1:-1, 1:-1]
+        + cw * p[1:-1, 1:-1, :-2]
+        + ce * p[1:-1, 1:-1, 2:]
+        + cs * p[1:-1, 2:, 1:-1]
+        + cn * p[1:-1, :-2, 1:-1]
+        + cb * p[2:, 1:-1, 1:-1]
+        + ca * p[:-2, 1:-1, 1:-1]
+    )
+
+
+def diffusion3d_step(x, coeffs, *, interpret=True):
+    """Single diffusion-3D time-step over a (D, H, W) tile."""
+    return pl.pallas_call(
+        _diffusion3d_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, coeffs)

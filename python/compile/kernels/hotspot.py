@@ -1,0 +1,90 @@
+"""L1 Pallas kernels: Hotspot 2D / 3D (Rodinia) single-step tile update.
+
+Same tiling/streaming scheme as diffusion.py. Hotspot needs a second
+external-memory stream — the `power` grid — which the paper also caches in a
+(smaller) shift register (§5.1: only the *current* value is needed, so its
+shift register holds one row/plane). Here the power tile is a second VMEM
+block; no halo is needed on it because only the center tap is read.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .diffusion import ROW_CHUNK
+
+
+def _hotspot2d_kernel(t_ref, pw_ref, c_ref, o_ref):
+    """One grid-step: ROW_CHUNK rows of the Hotspot-2D update.
+
+    t_ref: (H, W) temperature tile, pw_ref: (H, W) power tile,
+    c_ref: (5,) [sdc, rx1, ry1, rz1, amb].
+    out = c + sdc*(power + (n+s-2c)*ry1 + (e+w-2c)*rx1 + (amb-c)*rz1)
+    """
+    i = pl.program_id(0)
+    t = t_ref[...]
+    pw = pw_ref[...]
+    h, w = t.shape
+    p = jnp.pad(t, ((1, 1), (1, 1)), mode="edge")
+    sdc, rx1, ry1, rz1, amb = (c_ref[k] for k in range(5))
+    c = p[1:-1, 1:-1]
+    n = p[:-2, 1:-1]
+    s = p[2:, 1:-1]
+    w_ = p[1:-1, :-2]
+    e = p[1:-1, 2:]
+    full = c + sdc * (
+        pw + (n + s - 2.0 * c) * ry1 + (e + w_ - 2.0 * c) * rx1 + (amb - c) * rz1
+    )
+    o_ref[...] = lax.dynamic_slice(full, (i * ROW_CHUNK, 0), (ROW_CHUNK, w))
+
+
+def hotspot2d_step(temp, power, coeffs, *, interpret=True):
+    """Single Hotspot-2D time-step over (H, W) tiles; H % ROW_CHUNK == 0."""
+    h, w = temp.shape
+    assert h % ROW_CHUNK == 0, f"tile height {h} not a multiple of {ROW_CHUNK}"
+    return pl.pallas_call(
+        _hotspot2d_kernel,
+        grid=(h // ROW_CHUNK,),
+        in_specs=[
+            pl.BlockSpec((h, w), lambda i: (0, 0)),
+            pl.BlockSpec((h, w), lambda i: (0, 0)),
+            pl.BlockSpec((5,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_CHUNK, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), temp.dtype),
+        interpret=interpret,
+    )(temp, power, coeffs)
+
+
+def _hotspot3d_kernel(t_ref, pw_ref, c_ref, o_ref):
+    """Full-tile Hotspot-3D update.
+
+    t_ref/pw_ref: (D, H, W) tiles, c_ref: (9,)
+    [cc, cn, cs, cw, ce, ca, cb, sdc, amb].
+    out = c*cc + n*cn + s*cs + e*ce + w*cw + a*ca + b*cb + sdc*power + ca*amb
+    """
+    t = t_ref[...]
+    pw = pw_ref[...]
+    p = jnp.pad(t, ((1, 1), (1, 1), (1, 1)), mode="edge")
+    cc, cn, cs, cw, ce, ca, cb, sdc, amb = (c_ref[k] for k in range(9))
+    o_ref[...] = (
+        p[1:-1, 1:-1, 1:-1] * cc
+        + p[1:-1, :-2, 1:-1] * cn
+        + p[1:-1, 2:, 1:-1] * cs
+        + p[1:-1, 1:-1, 2:] * ce
+        + p[1:-1, 1:-1, :-2] * cw
+        + p[:-2, 1:-1, 1:-1] * ca
+        + p[2:, 1:-1, 1:-1] * cb
+        + sdc * pw
+        + ca * amb
+    )
+
+
+def hotspot3d_step(temp, power, coeffs, *, interpret=True):
+    """Single Hotspot-3D time-step over (D, H, W) tiles."""
+    return pl.pallas_call(
+        _hotspot3d_kernel,
+        out_shape=jax.ShapeDtypeStruct(temp.shape, temp.dtype),
+        interpret=interpret,
+    )(temp, power, coeffs)

@@ -1,0 +1,127 @@
+"""Pure-jnp correctness oracles for the four paper stencils.
+
+These implement the exact cell-update formulas of Table 2 with the paper's
+boundary rule (§5.1): "all out-of-bound neighbors of grid cells on the grid
+boundaries will fall back on the boundary cell itself", i.e. clamp / edge
+replication.
+
+Every oracle operates on a full array (a grid or a tile) and performs ONE
+time-step. Multi-step references are built by iterating these.
+"""
+
+import jax.numpy as jnp
+
+
+def _edge_pad2d(x):
+    return jnp.pad(x, ((1, 1), (1, 1)), mode="edge")
+
+
+def _edge_pad3d(x):
+    return jnp.pad(x, ((1, 1), (1, 1), (1, 1)), mode="edge")
+
+
+def neighbors2d(x):
+    """Return (c, n, s, w, e) with clamped (edge) out-of-bound neighbors.
+
+    Axis convention: axis 0 is y (north = y-1), axis 1 is x (west = x-1).
+    """
+    p = _edge_pad2d(x)
+    c = p[1:-1, 1:-1]
+    n = p[:-2, 1:-1]
+    s = p[2:, 1:-1]
+    w = p[1:-1, :-2]
+    e = p[1:-1, 2:]
+    return c, n, s, w, e
+
+
+def neighbors3d(x):
+    """Return (c, n, s, w, e, a, b): axis 0 = z (above = z-1, below = z+1),
+    axis 1 = y, axis 2 = x. Edge-clamped."""
+    p = _edge_pad3d(x)
+    c = p[1:-1, 1:-1, 1:-1]
+    a = p[:-2, 1:-1, 1:-1]
+    b = p[2:, 1:-1, 1:-1]
+    n = p[1:-1, :-2, 1:-1]
+    s = p[1:-1, 2:, 1:-1]
+    w = p[1:-1, 1:-1, :-2]
+    e = p[1:-1, 1:-1, 2:]
+    return c, n, s, w, e, a, b
+
+
+def diffusion2d(x, cc, cn, cs, cw, ce):
+    """Diffusion 2D (Table 2): 9 FLOP per cell update."""
+    c, n, s, w, e = neighbors2d(x)
+    return cc * c + cw * w + ce * e + cs * s + cn * n
+
+
+def diffusion3d(x, cc, cn, cs, cw, ce, ca, cb):
+    """Diffusion 3D (Table 2): 13 FLOP per cell update."""
+    c, n, s, w, e, a, b = neighbors3d(x)
+    return cc * c + cw * w + ce * e + cs * s + cn * n + cb * b + ca * a
+
+
+def hotspot2d(temp, power, sdc, rx1, ry1, rz1, amb):
+    """Hotspot 2D (Rodinia, Table 2): 15 FLOP per cell update.
+
+    out = c + sdc*(power + (n + s - 2c)*Ry1 + (e + w - 2c)*Rx1 + (amb - c)*Rz1)
+    """
+    c, n, s, w, e = neighbors2d(temp)
+    return c + sdc * (
+        power + (n + s - 2.0 * c) * ry1 + (e + w - 2.0 * c) * rx1 + (amb - c) * rz1
+    )
+
+
+def hotspot3d(temp, power, cc, cn, cs, cw, ce, ca, cb, sdc, amb):
+    """Hotspot 3D (Rodinia, Table 2): 17 FLOP per cell update.
+
+    out = c*cc + n*cn + s*cs + e*ce + w*cw + a*ca + b*cb + sdc*power + ca*amb
+    """
+    c, n, s, w, e, a, b = neighbors3d(temp)
+    return (
+        c * cc
+        + n * cn
+        + s * cs
+        + e * ce
+        + w * cw
+        + a * ca
+        + b * cb
+        + sdc * power
+        + ca * amb
+    )
+
+
+
+
+def diffusion2d_r2(x, cc, cn1, cs1, cw1, ce1, cn2, cs2, cw2, ce2):
+    """Radius-2 9-point star diffusion (§8 high-order extension): 17 FLOP."""
+    p = jnp.pad(x, ((2, 2), (2, 2)), mode="edge")
+    return (
+        cc * p[2:-2, 2:-2]
+        + cn1 * p[1:-3, 2:-2]
+        + cs1 * p[3:-1, 2:-2]
+        + cw1 * p[2:-2, 1:-3]
+        + ce1 * p[2:-2, 3:-1]
+        + cn2 * p[:-4, 2:-2]
+        + cs2 * p[4:, 2:-2]
+        + cw2 * p[2:-2, :-4]
+        + ce2 * p[2:-2, 4:]
+    )
+
+
+def multi_step_ref(kind, steps, x, power=None, coeffs=()):
+    """Iterate `steps` single-step oracle applications (new buffer each step,
+    as in the paper's double-buffered iteration)."""
+    for _ in range(steps):
+        if kind == "diffusion2d":
+            x = diffusion2d(x, *coeffs)
+        elif kind == "diffusion2dr2":
+            x = diffusion2d_r2(x, *coeffs)
+        elif kind == "diffusion3d":
+            x = diffusion3d(x, *coeffs)
+        elif kind == "hotspot2d":
+            x = hotspot2d(x, power, *coeffs)
+        elif kind == "hotspot3d":
+            x = hotspot3d(x, power, *coeffs)
+        else:
+            raise ValueError(f"unknown stencil kind: {kind}")
+    return x

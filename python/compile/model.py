@@ -1,0 +1,101 @@
+"""L2: the JAX compute graph — `par_time` fused stencil time-steps per tile.
+
+The paper's temporal blocking chains `par_time` replicated PEs over on-chip
+channels so one external-memory round-trip covers `par_time` time-steps
+(§3.2). Here the same arithmetic-intensity amplification is a
+`lax.fori_loop` of the L1 Pallas step over a VMEM-resident tile: one
+HBM→VMEM→HBM round-trip per `par_time` steps.
+
+Each (stencil, tile-shape, steps) variant is lowered once by aot.py to HLO
+text and executed from Rust; the tile result's outer `rad × steps` ring is
+garbage-by-clamping and is discarded by the coordinator (the Fig 5
+shrinking compute block).
+
+Coefficients are a runtime argument array — like the paper, changing them
+does not require recompiling the kernel (§5.1).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import (
+    diffusion2d_r2_step,
+    diffusion2d_step,
+    diffusion3d_step,
+    hotspot2d_step,
+    hotspot3d_step,
+)
+
+#: kind -> (coefficient vector length, needs power-grid input, ndim)
+STENCILS = {
+    "diffusion2d": (5, False, 2),
+    "diffusion3d": (7, False, 3),
+    "hotspot2d": (5, True, 2),
+    "hotspot3d": (9, True, 3),
+    # §8 high-order extension: radius-2 star diffusion.
+    "diffusion2dr2": (9, False, 2),
+}
+
+
+def multi_step_diffusion2d(x, coeffs, *, steps, interpret=True):
+    """`steps` fused Diffusion-2D time-steps over a (H, W) tile."""
+    body = lambda _, v: diffusion2d_step(v, coeffs, interpret=interpret)
+    return (lax.fori_loop(0, steps, body, x),)
+
+
+def multi_step_diffusion3d(x, coeffs, *, steps, interpret=True):
+    """`steps` fused Diffusion-3D time-steps over a (D, H, W) tile."""
+    body = lambda _, v: diffusion3d_step(v, coeffs, interpret=interpret)
+    return (lax.fori_loop(0, steps, body, x),)
+
+
+def multi_step_diffusion2dr2(x, coeffs, *, steps, interpret=True):
+    """`steps` fused radius-2 diffusion time-steps over a (H, W) tile."""
+    body = lambda _, v: diffusion2d_r2_step(v, coeffs, interpret=interpret)
+    return (lax.fori_loop(0, steps, body, x),)
+
+
+def multi_step_hotspot2d(x, power, coeffs, *, steps, interpret=True):
+    """`steps` fused Hotspot-2D time-steps; `power` is constant across steps."""
+    body = lambda _, v: hotspot2d_step(v, power, coeffs, interpret=interpret)
+    return (lax.fori_loop(0, steps, body, x),)
+
+
+def multi_step_hotspot3d(x, power, coeffs, *, steps, interpret=True):
+    """`steps` fused Hotspot-3D time-steps; `power` is constant across steps."""
+    body = lambda _, v: hotspot3d_step(v, power, coeffs, interpret=interpret)
+    return (lax.fori_loop(0, steps, body, x),)
+
+
+_MULTI = {
+    "diffusion2d": multi_step_diffusion2d,
+    "diffusion3d": multi_step_diffusion3d,
+    "hotspot2d": multi_step_hotspot2d,
+    "hotspot3d": multi_step_hotspot3d,
+    "diffusion2dr2": multi_step_diffusion2dr2,
+}
+
+
+def build_fn(kind, steps, interpret=True):
+    """Return the jit-able tile function for `kind` with `steps` fused steps.
+
+    Signature: (x[, power], coeffs) -> (out,)  — a 1-tuple, matching the
+    `return_tuple=True` lowering convention the Rust loader unwraps with
+    `to_tuple1()`.
+    """
+    if kind not in _MULTI:
+        raise ValueError(f"unknown stencil kind: {kind}")
+    return partial(_MULTI[kind], steps=steps, interpret=interpret)
+
+
+def abstract_args(kind, tile_shape):
+    """ShapeDtypeStructs for `build_fn(kind, ...)` at `tile_shape` (f32)."""
+    coeff_len, has_power, ndim = STENCILS[kind]
+    if len(tile_shape) != ndim:
+        raise ValueError(f"{kind} expects {ndim}-D tiles, got {tile_shape}")
+    tile = jax.ShapeDtypeStruct(tuple(tile_shape), jnp.float32)
+    coeffs = jax.ShapeDtypeStruct((coeff_len,), jnp.float32)
+    return (tile, tile, coeffs) if has_power else (tile, coeffs)

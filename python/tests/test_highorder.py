@@ -1,0 +1,89 @@
+"""pytest: the radius-2 (high-order, §8 extension) stencil — kernel vs
+oracle, and the rad=2 halo-validity invariant (halo = 2·steps)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ROW_CHUNK, diffusion2d_r2_step, ref
+from compile.model import build_fn
+
+RTOL, ATOL = 1e-5, 1e-5
+
+C = jnp.asarray(np.float32([0.4, 0.12, 0.12, 0.12, 0.12, 0.03, 0.03, 0.03, 0.03]))
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).rand(*shape).astype(np.float32))
+
+
+def test_matches_ref():
+    x = rand((32, 32), 0)
+    np.testing.assert_allclose(
+        diffusion2d_r2_step(x, C), ref.diffusion2d_r2(x, *C), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_constant_fixed_point():
+    x = jnp.full((16, 16), 5.0, jnp.float32)
+    np.testing.assert_allclose(diffusion2d_r2_step(x, C), x, rtol=RTOL, atol=ATOL)
+
+
+def test_far_tap_shifts_by_two():
+    x = rand((24, 8), 3)
+    c = jnp.zeros(9, jnp.float32).at[5].set(1.0)  # pure cn2
+    out = np.asarray(diffusion2d_r2_step(x, c))
+    xs = np.asarray(x)
+    np.testing.assert_allclose(out[2:], xs[:-2], rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(out[0], xs[0], rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(out[1], xs[0], rtol=RTOL, atol=ATOL)  # clamp(-1)=0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(1, 5).map(lambda k: k * ROW_CHUNK),
+    w=st.integers(5, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_shapes(h, w, seed):
+    x = rand((h, w), seed)
+    c = jnp.asarray(np.random.RandomState(seed + 1).rand(9).astype(np.float32))
+    np.testing.assert_allclose(
+        diffusion2d_r2_step(x, c), ref.diffusion2d_r2(x, *c), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize("steps", [1, 2, 4])
+def test_halo_validity_rad2(steps):
+    """Interior at distance >= 2*steps from the tile edge is exact —
+    the Eq 2 halo for radius 2."""
+    halo = 2 * steps
+    grid = rand((96, 96), 7)
+    want = ref.multi_step_ref("diffusion2dr2", steps, grid, coeffs=tuple(C))
+    y0, x0, th, tw = 16, 24, 40, 48
+    tile = grid[y0 : y0 + th, x0 : x0 + tw]
+    got = build_fn("diffusion2dr2", steps)(tile, C)[0]
+    np.testing.assert_allclose(
+        np.asarray(got)[halo : th - halo, halo : tw - halo],
+        np.asarray(want)[y0 + halo : y0 + th - halo, x0 + halo : x0 + tw - halo],
+        rtol=RTOL,
+        atol=1e-4,
+    )
+
+
+def test_halo_distance_one_short_is_not_enough():
+    """Negative control: at distance 2*steps - 1 the clamp contamination
+    IS visible — confirming the Eq 2 halo is tight for rad = 2."""
+    steps, halo = 2, 4
+    grid = rand((96, 96), 8)
+    want = ref.multi_step_ref("diffusion2dr2", steps, grid, coeffs=tuple(C))
+    y0, x0, th, tw = 16, 24, 40, 48
+    tile = grid[y0 : y0 + th, x0 : x0 + tw]
+    got = build_fn("diffusion2dr2", steps)(tile, C)[0]
+    ring = halo - 1
+    diff = np.abs(
+        np.asarray(got)[ring : th - ring, ring : tw - ring]
+        - np.asarray(want)[y0 + ring : y0 + th - ring, x0 + ring : x0 + tw - ring]
+    )
+    assert diff.max() > 1e-6, "halo should be tight; ring-1 must differ"

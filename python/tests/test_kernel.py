@@ -1,0 +1,193 @@
+"""pytest: L1 Pallas kernels vs the pure-jnp oracle — the CORE correctness
+signal of the build path.
+
+Hypothesis sweeps shapes and values; fixed-seed cases pin the four Table 2
+formulas and the clamp boundary rule.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    ROW_CHUNK,
+    diffusion2d_step,
+    diffusion3d_step,
+    hotspot2d_step,
+    hotspot3d_step,
+    ref,
+)
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).rand(*shape).astype(np.float32))
+
+
+def diff_coeffs(n):
+    # Convex-ish weights: keeps iterated application numerically tame.
+    return jnp.asarray(np.float32([1.0 / n] * n))
+
+
+HS2D = jnp.asarray(np.float32([0.05, 0.3, 0.2, 0.1, 80.0]))  # sdc rx1 ry1 rz1 amb
+HS3D = jnp.asarray(
+    np.float32([0.4, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.01, 80.0])
+)  # cc cn cs cw ce ca cb sdc amb
+
+
+# ---------------------------------------------------------------- fixed cases
+class TestDiffusion2D:
+    def test_matches_ref(self):
+        x = rand((32, 32), 0)
+        c = diff_coeffs(5)
+        np.testing.assert_allclose(
+            diffusion2d_step(x, c), ref.diffusion2d(x, *c), rtol=RTOL, atol=ATOL
+        )
+
+    def test_constant_field_fixed_point(self):
+        """With sum(coeffs)=1, a constant field is a fixed point."""
+        x = jnp.full((16, 16), 3.5, jnp.float32)
+        out = diffusion2d_step(x, diff_coeffs(5))
+        np.testing.assert_allclose(out, x, rtol=RTOL, atol=ATOL)
+
+    def test_boundary_clamp(self):
+        """Out-of-bound neighbors fall back on the boundary cell (§5.1)."""
+        x = rand((16, 16), 3)
+        c = jnp.asarray(np.float32([0.0, 1.0, 0.0, 0.0, 0.0]))  # pure north tap
+        out = np.asarray(diffusion2d_step(x, c))
+        # row 0's north neighbor is row 0 itself
+        np.testing.assert_allclose(out[0], np.asarray(x)[0], rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(out[1:], np.asarray(x)[:-1], rtol=RTOL, atol=ATOL)
+
+    def test_asymmetric_coeffs(self):
+        x = rand((24, 40), 4)
+        c = jnp.asarray(np.float32([0.5, 0.1, 0.2, 0.15, 0.05]))
+        np.testing.assert_allclose(
+            diffusion2d_step(x, c), ref.diffusion2d(x, *c), rtol=RTOL, atol=ATOL
+        )
+
+
+class TestDiffusion3D:
+    def test_matches_ref(self):
+        x = rand((8, 16, 16), 1)
+        c = diff_coeffs(7)
+        np.testing.assert_allclose(
+            diffusion3d_step(x, c), ref.diffusion3d(x, *c), rtol=RTOL, atol=ATOL
+        )
+
+    def test_constant_field_fixed_point(self):
+        x = jnp.full((8, 8, 8), -2.25, jnp.float32)
+        out = diffusion3d_step(x, diff_coeffs(7))
+        np.testing.assert_allclose(out, x, rtol=RTOL, atol=ATOL)
+
+    def test_axis_convention(self):
+        """Above = z-1 (axis 0). A pure `ca` tap shifts planes down."""
+        x = rand((6, 8, 8), 5)
+        c = jnp.asarray(np.float32([0, 0, 0, 0, 0, 1.0, 0]))  # ca only
+        out = np.asarray(diffusion3d_step(x, c))
+        np.testing.assert_allclose(out[0], np.asarray(x)[0], rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(out[1:], np.asarray(x)[:-1], rtol=RTOL, atol=ATOL)
+
+
+class TestHotspot2D:
+    def test_matches_ref(self):
+        t, p = rand((32, 32), 2), rand((32, 32), 20)
+        np.testing.assert_allclose(
+            hotspot2d_step(t, p, HS2D),
+            ref.hotspot2d(t, p, *HS2D),
+            rtol=RTOL,
+            atol=ATOL,
+        )
+
+    def test_equilibrium(self):
+        """temp == amb everywhere, zero power => temp unchanged."""
+        t = jnp.full((16, 16), float(HS2D[4]), jnp.float32)
+        p = jnp.zeros((16, 16), jnp.float32)
+        out = hotspot2d_step(t, p, HS2D)
+        np.testing.assert_allclose(out, t, rtol=RTOL, atol=1e-4)
+
+    def test_power_injects_heat(self):
+        t = jnp.full((16, 16), float(HS2D[4]), jnp.float32)
+        p = jnp.zeros((16, 16), jnp.float32).at[8, 8].set(10.0)
+        out = np.asarray(hotspot2d_step(t, p, HS2D))
+        assert out[8, 8] > float(HS2D[4])
+        assert np.all(out >= float(HS2D[4]) - 1e-4)
+
+
+class TestHotspot3D:
+    def test_matches_ref(self):
+        t, p = rand((8, 16, 16), 6), rand((8, 16, 16), 60)
+        np.testing.assert_allclose(
+            hotspot3d_step(t, p, HS3D),
+            ref.hotspot3d(t, p, *HS3D),
+            rtol=RTOL,
+            atol=ATOL,
+        )
+
+    def test_matches_ref_noncubic(self):
+        t, p = rand((4, 8, 24), 7), rand((4, 8, 24), 70)
+        np.testing.assert_allclose(
+            hotspot3d_step(t, p, HS3D),
+            ref.hotspot3d(t, p, *HS3D),
+            rtol=RTOL,
+            atol=ATOL,
+        )
+
+
+# ------------------------------------------------------------- hypothesis
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(1, 6).map(lambda k: k * ROW_CHUNK),
+    w=st.integers(4, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_diffusion2d_shapes(h, w, seed):
+    x = rand((h, w), seed)
+    c = jnp.asarray(np.random.RandomState(seed + 1).rand(5).astype(np.float32))
+    np.testing.assert_allclose(
+        diffusion2d_step(x, c), ref.diffusion2d(x, *c), rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(2, 10),
+    h=st.integers(2, 12),
+    w=st.integers(2, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_diffusion3d_shapes(d, h, w, seed):
+    x = rand((d, h, w), seed)
+    c = jnp.asarray(np.random.RandomState(seed + 1).rand(7).astype(np.float32))
+    np.testing.assert_allclose(
+        diffusion3d_step(x, c), ref.diffusion3d(x, *c), rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(1, 4).map(lambda k: k * ROW_CHUNK),
+    w=st.integers(4, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_hotspot2d_shapes(h, w, seed):
+    t, p = rand((h, w), seed), rand((h, w), seed + 9)
+    np.testing.assert_allclose(
+        hotspot2d_step(t, p, HS2D), ref.hotspot2d(t, p, *HS2D), rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(2, 8),
+    h=st.integers(2, 10),
+    w=st.integers(2, 10),
+    seed=st.integers(0, 2**16),
+)
+def test_hotspot3d_shapes(d, h, w, seed):
+    t, p = rand((d, h, w), seed), rand((d, h, w), seed + 9)
+    np.testing.assert_allclose(
+        hotspot3d_step(t, p, HS3D), ref.hotspot3d(t, p, *HS3D), rtol=RTOL, atol=ATOL
+    )

@@ -1,0 +1,159 @@
+"""pytest: L2 multi-step tile programs — fused-step semantics and the
+halo-validity invariant that the Rust coordinator relies on.
+
+The invariant (DESIGN.md §3, paper Fig 5): run T fused steps on a tile cut
+from a larger grid with `halo = rad*T` cells of real data around the compute
+block; then the tile interior at distance >= rad*T from the tile edge must
+equal the whole-grid reference, bit-for-tolerance — i.e. the tile-edge clamp
+never contaminates cells the coordinator writes back.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ROW_CHUNK, ref
+from compile.model import STENCILS, abstract_args, build_fn
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).rand(*shape).astype(np.float32))
+
+
+COEFFS = {
+    "diffusion2d": jnp.asarray(np.float32([0.2] * 5)),
+    "diffusion3d": jnp.asarray(np.float32([1 / 7] * 7)),
+    "hotspot2d": jnp.asarray(np.float32([0.05, 0.3, 0.2, 0.1, 80.0])),
+    "hotspot3d": jnp.asarray(
+        np.float32([0.4, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.01, 80.0])
+    ),
+    "diffusion2dr2": jnp.asarray(
+        np.float32([0.4, 0.12, 0.12, 0.12, 0.12, 0.03, 0.03, 0.03, 0.03])
+    ),
+}
+
+
+def run_variant(kind, tile, steps, x, power=None):
+    fn = build_fn(kind, steps)
+    if STENCILS[kind][1]:
+        return fn(x, power, COEFFS[kind])[0]
+    return fn(x, COEFFS[kind])[0]
+
+
+# ------------------------------------------------ fused steps == iterated ref
+@pytest.mark.parametrize("steps", [1, 2, 4])
+@pytest.mark.parametrize("kind", list(STENCILS))
+def test_multi_step_matches_iterated_ref(kind, steps):
+    _, has_power, ndim = STENCILS[kind]
+    shape = (32, 32) if ndim == 2 else (8, 12, 12)
+    x = rand(shape, hash((kind, steps)) % 1000)
+    p = rand(shape, 999) if has_power else None
+    got = run_variant(kind, shape, steps, x, p)
+    want = ref.multi_step_ref(kind, steps, x, power=p, coeffs=tuple(COEFFS[kind]))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=10 * ATOL)
+
+
+# ------------------------------------------------------- halo validity (2D)
+@pytest.mark.parametrize("kind", ["diffusion2d", "hotspot2d"])
+@pytest.mark.parametrize("steps", [1, 2, 4])
+def test_halo_validity_2d(kind, steps):
+    rad = 1
+    halo = rad * steps
+    grid = rand((96, 96), 11)
+    pgrid = rand((96, 96), 12)
+    _, has_power, _ = STENCILS[kind]
+    # whole-grid reference after `steps` iterations
+    want = ref.multi_step_ref(
+        kind, steps, grid, power=pgrid if has_power else None,
+        coeffs=tuple(COEFFS[kind]),
+    )
+    # tile cut from the interior (so clamp semantics inside the tile are the
+    # only difference from the true neighborhood)
+    y0, x0, th, tw = 16, 24, 32, 48
+    tile = grid[y0 : y0 + th, x0 : x0 + tw]
+    ptile = pgrid[y0 : y0 + th, x0 : x0 + tw] if has_power else None
+    got = run_variant(kind, (th, tw), steps, tile, ptile)
+    np.testing.assert_allclose(
+        np.asarray(got)[halo : th - halo, halo : tw - halo],
+        np.asarray(want)[y0 + halo : y0 + th - halo, x0 + halo : x0 + tw - halo],
+        rtol=RTOL,
+        atol=10 * ATOL,
+    )
+
+
+# ------------------------------------------------------- halo validity (3D)
+@pytest.mark.parametrize("kind", ["diffusion3d", "hotspot3d"])
+@pytest.mark.parametrize("steps", [1, 2])
+def test_halo_validity_3d(kind, steps):
+    rad = 1
+    halo = rad * steps
+    grid = rand((24, 24, 24), 21)
+    pgrid = rand((24, 24, 24), 22)
+    _, has_power, _ = STENCILS[kind]
+    want = ref.multi_step_ref(
+        kind, steps, grid, power=pgrid if has_power else None,
+        coeffs=tuple(COEFFS[kind]),
+    )
+    z0, y0, x0, td, th, tw = 4, 6, 8, 12, 12, 16
+    tile = grid[z0 : z0 + td, y0 : y0 + th, x0 : x0 + tw]
+    ptile = pgrid[z0 : z0 + td, y0 : y0 + th, x0 : x0 + tw] if has_power else None
+    got = run_variant(kind, (td, th, tw), steps, tile, ptile)
+    np.testing.assert_allclose(
+        np.asarray(got)[halo : td - halo, halo : th - halo, halo : tw - halo],
+        np.asarray(want)[
+            z0 + halo : z0 + td - halo,
+            y0 + halo : y0 + th - halo,
+            x0 + halo : x0 + tw - halo,
+        ],
+        rtol=RTOL,
+        atol=10 * ATOL,
+    )
+
+
+# ------------------------------------------------ grid-edge tiles also valid
+def test_halo_validity_grid_corner_2d():
+    """A tile flush with the grid corner: the clamped tile edge coincides
+    with the clamped grid edge, so even the halo ring is exact there."""
+    steps, halo = 2, 2
+    grid = rand((64, 64), 31)
+    want = ref.multi_step_ref(
+        "diffusion2d", steps, grid, coeffs=tuple(COEFFS["diffusion2d"])
+    )
+    tile = grid[0:32, 0:32]
+    got = run_variant("diffusion2d", (32, 32), steps, tile)
+    # valid region: everything at least `halo` away from the two tile edges
+    # that are NOT grid edges (right, bottom)
+    np.testing.assert_allclose(
+        np.asarray(got)[: 32 - halo, : 32 - halo],
+        np.asarray(want)[: 32 - halo, : 32 - halo],
+        rtol=RTOL,
+        atol=1e-4,
+    )
+
+
+def test_abstract_args_shapes():
+    args = abstract_args("hotspot2d", (64, 64))
+    assert len(args) == 3
+    assert args[0].shape == (64, 64) and args[2].shape == (5,)
+    args = abstract_args("diffusion3d", (16, 16, 16))
+    assert len(args) == 2 and args[1].shape == (7,)
+    with pytest.raises(ValueError):
+        abstract_args("diffusion2d", (16, 16, 16))
+
+
+@settings(max_examples=8, deadline=None)
+@given(steps=st.integers(1, 4), seed=st.integers(0, 2**16))
+def test_fused_vs_two_chunks_2d(steps, seed):
+    """T fused steps twice == 2T iterated reference steps (the coordinator's
+    iteration chunking: ceil(iter/par_time) passes)."""
+    x = rand((40, 40), seed)
+    c = COEFFS["diffusion2d"]
+    once = run_variant("diffusion2d", (40, 40), steps, x)
+    twice = run_variant("diffusion2d", (40, 40), steps, once)
+    want = ref.multi_step_ref("diffusion2d", 2 * steps, x, coeffs=tuple(c))
+    # only the interior at distance 2*steps is exact (tile == whole grid here,
+    # so everything matches — clamp IS the grid boundary rule)
+    np.testing.assert_allclose(twice, want, rtol=RTOL, atol=1e-4)

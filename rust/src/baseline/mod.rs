@@ -1,0 +1,18 @@
+//! Baselines the paper compares against (§6.4, §7).
+//!
+//! * [`temporal_only`] — the prior-work FPGA designs ([9, 20, 22] in the
+//!   paper): temporal blocking *without* spatial blocking, which caps the
+//!   supported input width by on-chip memory.
+//! * [`spatial_only`] — spatial blocking without temporal blocking: the
+//!   roofline every memory-bound implementation is stuck at.
+//! * [`gpu`] — the GPU comparison model for Fig 6 (roofline + a
+//!   temporal-blocking gain that scales with on-chip capacity, anchored to
+//!   the paper's qualitative orderings).
+
+pub mod gpu;
+pub mod spatial_only;
+pub mod temporal_only;
+
+pub use gpu::{gpu_diffusion3d_gflops, gpu_roofline_gflops};
+pub use spatial_only::spatial_only_gflops;
+pub use temporal_only::{max_supported_width, temporal_only_estimate, TemporalOnlyResult};

@@ -1,0 +1,45 @@
+//! Spatial blocking WITHOUT temporal blocking: the memory-bound roofline.
+//!
+//! With par_time = 1 every iteration round-trips the grid through external
+//! memory, so the best case is full-bandwidth streaming — the "roofline"
+//! series of Fig 6. Temporal blocking is precisely the technique that
+//! multiplies performance past this line.
+
+use crate::stencil::StencilKind;
+use crate::util::bytes::CELL_BYTES;
+
+/// Roofline GFLOP/s of `stencil` on a device with `peak_bw_gbps` of
+/// external bandwidth and no temporal blocking.
+pub fn spatial_only_gflops(stencil: StencilKind, peak_bw_gbps: f64) -> f64 {
+    let def = stencil.def();
+    // Per update the streams move num_acc cells; useful bytes = bytes_pcu.
+    let gbps_useful = peak_bw_gbps * def.bytes_pcu as f64
+        / (def.num_acc() as f64 * CELL_BYTES as f64);
+    def.gflops_from_gbps(gbps_useful)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diffusion3d_rooflines_match_fig6() {
+        // Arria 10: 34.1 GB/s, 2 accesses × 4 B per 13-FLOP update
+        // -> 34.1/8 × 13 = 55.4 GFLOP/s.
+        let a10 = spatial_only_gflops(StencilKind::Diffusion3D, 34.1);
+        assert!((a10 - 55.41).abs() < 0.1, "{a10}");
+        // V100: 900.1 GB/s -> 1462.7 GFLOP/s.
+        let v100 = spatial_only_gflops(StencilKind::Diffusion3D, 900.1);
+        assert!((v100 - 1462.7).abs() < 1.0, "{v100}");
+    }
+
+    #[test]
+    fn hotspot_rooflines_lower_per_byte() {
+        // Hotspot reads two streams: 3 accesses per 12 useful bytes.
+        let d = spatial_only_gflops(StencilKind::Diffusion2D, 100.0);
+        let h = spatial_only_gflops(StencilKind::Hotspot2D, 100.0);
+        // diffusion: 100/8*9 = 112.5; hotspot: 100/12*15*... = 125
+        assert!((d - 112.5).abs() < 0.1);
+        assert!((h - 125.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,154 @@
+//! Prior-work baseline: temporal blocking WITHOUT spatial blocking.
+//!
+//! Designs like [9, 20, 22] stream the whole grid through the PE chain, so
+//! each PE's shift register must span the full input width (2D) or plane
+//! (3D). That removes halo redundancy — performance scales near-linearly
+//! with `par_time` — but hard-caps the input dimensions by on-chip memory:
+//! the paper quotes a few thousand cells of width for 2D and 128×128
+//! planes (or less) for 3D. This module quantifies both sides of that
+//! trade-off, powering the `ablation_baseline` bench and the §7
+//! comparison.
+
+use crate::model::{Params, PerfModel};
+use crate::simulator::bram::{bram_usage, BramUsage};
+use crate::simulator::device::Device;
+use crate::stencil::StencilKind;
+use crate::util::bytes::{CELL_BYTES, GB};
+
+/// Outcome of evaluating a temporal-only design point.
+#[derive(Debug, Clone, Copy)]
+pub struct TemporalOnlyResult {
+    /// Whether the input fits on-chip at all.
+    pub fits: bool,
+    pub bram: BramUsage,
+    /// Modeled throughput (GB/s useful traffic); 0 when it doesn't fit.
+    pub throughput_gbps: f64,
+    pub gflops: f64,
+}
+
+/// Evaluate a temporal-only design: `dims` streamed whole, `par_time` PEs.
+/// The shift register per PE covers the full width/plane, there are no
+/// halos, no redundancy, and writes equal the input size.
+pub fn temporal_only_estimate(
+    stencil: StencilKind,
+    dev: &Device,
+    dims: &[usize],
+    par_vec: usize,
+    par_time: usize,
+    iters: usize,
+    fmax_mhz: f64,
+) -> TemporalOnlyResult {
+    let def = stencil.def();
+    let ndim = stencil.ndim();
+    // "Block" = the whole grid row/plane.
+    let (bx, by) = match ndim {
+        2 => (dims[1], 0),
+        _ => (dims[2], dims[1]),
+    };
+    let bram = bram_usage(def, dev, ndim, bx, by, par_vec, par_time);
+    if !bram.fits(dev) {
+        return TemporalOnlyResult { fits: false, bram, throughput_gbps: 0.0, gflops: 0.0 };
+    }
+    let model = PerfModel::new(dev.peak_bw_gbps);
+    let p = Params {
+        stencil,
+        par_vec,
+        par_time,
+        bsize_x: bx,
+        bsize_y: by.max(1),
+        dims: dims.to_vec(),
+        iters,
+        fmax_mhz,
+    };
+    // No spatial blocking: traffic per pass is exactly num_acc × input.
+    let th_mem = model.th_mem(&p);
+    let size_input: usize = dims.iter().product();
+    let passes = (iters as f64 / par_time as f64).ceil();
+    let bytes_per_pass =
+        size_input as f64 * def.num_acc() as f64 * CELL_BYTES as f64;
+    let run_time = passes * bytes_per_pass / (GB * th_mem);
+    let useful = size_input as f64 * iters as f64 * def.bytes_pcu as f64;
+    let throughput = useful / run_time / GB;
+    TemporalOnlyResult {
+        fits: true,
+        bram,
+        throughput_gbps: throughput,
+        gflops: def.gflops_from_gbps(throughput),
+    }
+}
+
+/// Largest power-of-two input width (2D) or square plane edge (3D) a
+/// temporal-only design supports on `dev` with `par_time` PEs — the input
+/// restriction the paper's combined scheme removes.
+pub fn max_supported_width(
+    stencil: StencilKind,
+    dev: &Device,
+    par_vec: usize,
+    par_time: usize,
+) -> usize {
+    let def = stencil.def();
+    let ndim = stencil.ndim();
+    let mut best = 0;
+    let mut w = 64;
+    while w <= 1 << 20 {
+        let (bx, by) = if ndim == 2 { (w, 0) } else { (w, w) };
+        let usage = bram_usage(def, dev, ndim, bx, by, par_vec, par_time);
+        if usage.fits(dev) {
+            best = w;
+        } else {
+            break;
+        }
+        w *= 2;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::device::DeviceKind;
+
+    #[test]
+    fn input_width_capped_2d() {
+        // The paper: temporal-only 2D designs cap width at a few thousand
+        // cells for meaningful par_time on Stratix V-class parts.
+        let dev = Device::get(DeviceKind::StratixV);
+        let w = max_supported_width(StencilKind::Diffusion2D, dev, 8, 24);
+        assert!(w >= 2048, "too pessimistic: {w}");
+        assert!(w <= 32768, "temporal-only should be width-capped: {w}");
+    }
+
+    #[test]
+    fn input_plane_capped_3d() {
+        // §1: plane size limited to 128×128 cells or even less.
+        let dev = Device::get(DeviceKind::StratixV);
+        let w = max_supported_width(StencilKind::Diffusion3D, dev, 8, 8);
+        assert!(w <= 256, "3D plane cap should be small: {w}");
+    }
+
+    #[test]
+    fn scaling_is_linear_in_par_time() {
+        let dev = Device::get(DeviceKind::StratixV);
+        let t1 = temporal_only_estimate(StencilKind::Diffusion2D, dev, &[4096, 4096], 4, 8, 1024, 280.0);
+        let t2 = temporal_only_estimate(StencilKind::Diffusion2D, dev, &[4096, 4096], 4, 16, 1024, 280.0);
+        assert!(t1.fits && t2.fits);
+        let ratio = t2.throughput_gbps / t1.throughput_gbps;
+        assert!((ratio - 2.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn large_input_does_not_fit() {
+        let dev = Device::get(DeviceKind::StratixV);
+        let r = temporal_only_estimate(
+            StencilKind::Diffusion2D,
+            dev,
+            &[65536, 65536],
+            8,
+            24,
+            1000,
+            280.0,
+        );
+        assert!(!r.fits);
+        assert_eq!(r.throughput_gbps, 0.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Minimal benchmark harness (offline substrate for `criterion`).
+//!
+//! Each `benches/*.rs` target is a `harness = false` binary built on this
+//! module: [`Bencher`] measures a closure with warm-up + timed iterations
+//! and prints a stats line; [`BenchReport`] collects named results and can
+//! render a markdown-ish summary table plus machine-readable JSON (used by
+//! EXPERIMENTS.md tooling).
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+/// Timing configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    /// Cap total sampling time; long benches stop early once exceeded.
+    pub max_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 2, sample_iters: 10, max_time: Duration::from_secs(20) }
+    }
+}
+
+/// One benchmark's outcome.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional derived metric (e.g. Mcells/s) with its unit.
+    pub metric: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        let s = &self.summary;
+        let extra = self
+            .metric
+            .map(|(v, u)| format!("  ({v:.2} {u})"))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>10.3} ms/iter  ±{:>6.2}%  (n={}){extra}",
+            self.name,
+            s.mean * 1e3,
+            s.rsd() * 100.0,
+            s.n
+        )
+    }
+}
+
+impl Bencher {
+    /// Time `f`, returning per-iteration seconds.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        let start = Instant::now();
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if start.elapsed() > self.max_time && samples.len() >= 3 {
+                break;
+            }
+        }
+        let summary = Summary::of(&samples).expect("at least one sample");
+        let r = BenchResult { name: name.to_string(), summary, metric: None };
+        println!("{}", r.line());
+        r
+    }
+
+    /// Bench and attach a throughput metric computed from mean time.
+    pub fn bench_with_metric<F: FnMut()>(
+        &self,
+        name: &str,
+        unit: &'static str,
+        per_iter_units: f64,
+        mut f: F,
+    ) -> BenchResult {
+        let mut r = self.bench(name, &mut f);
+        r.metric = Some((per_iter_units / r.summary.mean, unit));
+        println!("{}", r.line());
+        r
+    }
+}
+
+/// Collects results for a whole bench target and renders the summary.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    pub title: String,
+    pub results: Vec<BenchResult>,
+    /// Free-form table/figure payload printed verbatim (e.g. the Table 4
+    /// reproduction the bench regenerates).
+    pub payload: Vec<String>,
+}
+
+impl BenchReport {
+    pub fn new(title: &str) -> BenchReport {
+        println!("\n=== {title} ===");
+        BenchReport { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    pub fn payload(&mut self, text: String) {
+        println!("{text}");
+        self.payload.push(text);
+    }
+
+    /// Render the timing summary table.
+    pub fn summary_table(&self) -> String {
+        let mut t = Table::new(&["bench", "mean ms", "median ms", "rsd %", "metric"])
+            .title(&self.title)
+            .left_first_col();
+        for r in &self.results {
+            t.row(vec![
+                r.name.clone(),
+                format!("{:.3}", r.summary.mean * 1e3),
+                format!("{:.3}", r.summary.median * 1e3),
+                format!("{:.1}", r.summary.rsd() * 100.0),
+                r.metric.map(|(v, u)| format!("{v:.2} {u}")).unwrap_or_default(),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Machine-readable dump for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::from(self.title.clone())),
+            (
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::from(r.name.clone())),
+                                ("mean_s", Json::from(r.summary.mean)),
+                                ("rsd", Json::from(r.summary.rsd())),
+                                (
+                                    "metric",
+                                    r.metric
+                                        .map(|(v, u)| {
+                                            Json::obj(vec![
+                                                ("value", Json::from(v)),
+                                                ("unit", Json::from(u)),
+                                            ])
+                                        })
+                                        .unwrap_or(Json::Null),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Print the footer (summary table); call at the end of main().
+    pub fn finish(&self) {
+        println!("\n{}", self.summary_table());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher { warmup_iters: 1, sample_iters: 5, max_time: Duration::from_secs(5) };
+        let mut acc = 0u64;
+        let r = b.bench("spin", || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(acc > 0);
+        assert!(r.summary.mean > 0.0);
+        assert_eq!(r.summary.n, 5);
+    }
+
+    #[test]
+    fn metric_is_throughput() {
+        let b = Bencher { warmup_iters: 0, sample_iters: 3, max_time: Duration::from_secs(5) };
+        let r = b.bench_with_metric("sleepless", "Kops/s", 1000.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        let (v, u) = r.metric.unwrap();
+        assert!(v > 0.0);
+        assert_eq!(u, "Kops/s");
+    }
+
+    #[test]
+    fn report_roundtrip() {
+        let mut rep = BenchReport::new("test report");
+        let b = Bencher { warmup_iters: 0, sample_iters: 2, max_time: Duration::from_secs(1) };
+        rep.push(b.bench("noop", || {}));
+        let json = rep.to_json();
+        assert_eq!(json.get("title").unwrap().as_str().unwrap(), "test report");
+        assert!(rep.summary_table().contains("noop"));
+    }
+}

@@ -1,0 +1,429 @@
+//! Block / compute-block / halo arithmetic — Eqs 1, 2, 4–7 of the paper.
+
+/// Halo width for `par_time` parallel time-steps of a radius-`rad` stencil
+/// (Eq 2): each chained PE consumes `rad` more cells of the block edge.
+pub fn halo_width(rad: usize, par_time: usize) -> usize {
+    rad * par_time
+}
+
+/// Shift-register size in cells (Eq 1): two full rows (2D) or planes (3D)
+/// of the spatial block, plus the `par_vec` cells in flight.
+pub fn shift_reg_cells(
+    ndim: usize,
+    rad: usize,
+    bsize_x: usize,
+    bsize_y: usize,
+    par_vec: usize,
+) -> usize {
+    match ndim {
+        2 => 2 * rad * bsize_x + par_vec,
+        3 => 2 * rad * bsize_x * bsize_y + par_vec,
+        _ => panic!("ndim must be 2 or 3"),
+    }
+}
+
+/// Blocking of a single grid axis: spatial blocks of `bsize` cells whose
+/// compute blocks (`csize = bsize - 2*halo`, Eq 4) tile the axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DimBlocking {
+    /// Grid extent along this axis (`dim` in the model).
+    pub dim: usize,
+    /// Spatial block size (`bsize`).
+    pub bsize: usize,
+    /// Halo width on each side (`size_halo`, Eq 2).
+    pub halo: usize,
+}
+
+impl DimBlocking {
+    pub fn new(dim: usize, bsize: usize, halo: usize) -> DimBlocking {
+        assert!(
+            bsize > 2 * halo,
+            "bsize {bsize} must exceed 2*halo = {}: no compute block left",
+            2 * halo
+        );
+        assert!(dim > 0);
+        DimBlocking { dim, bsize, halo }
+    }
+
+    /// Compute-block extent (Eq 4).
+    pub fn csize(&self) -> usize {
+        self.bsize - 2 * self.halo
+    }
+
+    /// Number of blocks along this axis (Eq 5).
+    pub fn bnum(&self) -> usize {
+        self.dim.div_ceil(self.csize())
+    }
+
+    /// Number of traversed cells along the axis (Eq 7):
+    /// `bnum * csize + 2*halo` — the last block may overshoot `dim`.
+    pub fn trav(&self) -> usize {
+        self.bnum() * self.csize() + 2 * self.halo
+    }
+
+    /// Signed start coordinate of block `i`'s spatial extent. Negative for
+    /// the first block (its left halo hangs off the grid and is filled by
+    /// clamping, which is exactly the boundary rule).
+    pub fn block_start(&self, i: usize) -> isize {
+        (i * self.csize()) as isize - self.halo as isize
+    }
+
+    /// Compute-block range of block `i`, clipped to the grid:
+    /// `[i*csize, min((i+1)*csize, dim))`. Cells outside are never written
+    /// (the paper's write masking / out-of-bound suppression).
+    pub fn compute_range(&self, i: usize) -> (usize, usize) {
+        let lo = i * self.csize();
+        let hi = ((i + 1) * self.csize()).min(self.dim);
+        (lo, hi)
+    }
+
+    /// Tile origin actually used by the tile executor: the ideal
+    /// `block_start` clamped so the tile lies fully inside the grid.
+    ///
+    /// This matters for multi-step (fused) tile programs: edge-clamp at a
+    /// tile border only equals the grid's §5.1 clamp rule when the tile
+    /// border *coincides with the grid border*. A tile hanging off the
+    /// grid would re-clamp replicated cells every step and corrupt a ring
+    /// of width `steps-1`. Clamping the origin pins edge tiles flush with
+    /// the grid boundary (the compute region then sits deeper than `halo`
+    /// inside the tile, which is always safe). Requires `bsize <= dim`.
+    pub fn tile_origin(&self, i: usize) -> usize {
+        if self.halo == 0 {
+            return i * self.csize();
+        }
+        assert!(
+            self.bsize <= self.dim,
+            "tile ({}) larger than grid axis ({}): shrink the tile",
+            self.bsize,
+            self.dim
+        );
+        let ideal = self.block_start(i);
+        ideal.clamp(0, (self.dim - self.bsize) as isize) as usize
+    }
+
+    /// Out-of-bound traversed cells along the axis: the last block's
+    /// compute region may overshoot `dim` when `dim % csize != 0`.
+    pub fn overshoot(&self) -> usize {
+        self.bnum() * self.csize() - self.dim
+    }
+}
+
+/// One spatial block of a (possibly multi-axis) blocking: its index vector,
+/// signed spatial origin and the clipped compute-block ranges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Block {
+    /// Block index per blocked axis, outermost axis first.
+    pub index: Vec<usize>,
+    /// Signed start (may be negative: halo clamping) per blocked axis.
+    pub start: Vec<isize>,
+    /// Clipped compute range `[lo, hi)` per blocked axis.
+    pub compute: Vec<(usize, usize)>,
+}
+
+/// Blocking across an N-dimensional grid. Axes listed outermost-first,
+/// matching `Grid::dims()` order ([ny, nx] / [nz, ny, nx]). Streamed
+/// (unblocked) axes use `bsize == dim + 2*halo`-free representation via
+/// [`BlockGeometry::streamed`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockGeometry {
+    pub axes: Vec<DimBlocking>,
+}
+
+impl BlockGeometry {
+    /// The paper's 2D scheme: 1D spatial blocking in x, streaming in y.
+    /// `dims = [ny, nx]`. The streamed y axis is represented as one block
+    /// covering the whole axis with zero halo.
+    pub fn paper_2d(dims: &[usize], bsize_x: usize, halo: usize) -> BlockGeometry {
+        assert_eq!(dims.len(), 2);
+        BlockGeometry {
+            axes: vec![
+                DimBlocking::new(dims[0], dims[0] + 1, 0), // y streamed
+                DimBlocking::new(dims[1], bsize_x, halo),
+            ],
+        }
+    }
+
+    /// The paper's 3D scheme: 2D blocking in (x, y), streaming in z.
+    /// `dims = [nz, ny, nx]`.
+    pub fn paper_3d(
+        dims: &[usize],
+        bsize_x: usize,
+        bsize_y: usize,
+        halo: usize,
+    ) -> BlockGeometry {
+        assert_eq!(dims.len(), 3);
+        BlockGeometry {
+            axes: vec![
+                DimBlocking::new(dims[0], dims[0] + 1, 0), // z streamed
+                DimBlocking::new(dims[1], bsize_y, halo),
+                DimBlocking::new(dims[2], bsize_x, halo),
+            ],
+        }
+    }
+
+    /// Fully-tiled blocking used by the coordinator's tile executor: every
+    /// axis blocked with the same halo (the VMEM-tile adaptation of the
+    /// paper's scheme — see DESIGN.md §Hardware-Adaptation).
+    pub fn tiled(dims: &[usize], tile: &[usize], halo: usize) -> BlockGeometry {
+        assert_eq!(dims.len(), tile.len());
+        BlockGeometry {
+            axes: dims
+                .iter()
+                .zip(tile)
+                .map(|(&d, &t)| DimBlocking::new(d, t, halo))
+                .collect(),
+        }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.axes.len()
+    }
+
+    /// Total number of spatial blocks (product over axes).
+    pub fn num_blocks(&self) -> usize {
+        self.axes.iter().map(|a| a.bnum()).product()
+    }
+
+    /// Iterate blocks in row-major order (innermost axis fastest), i.e.
+    /// left-to-right then top-to-bottom — the paper's traversal order.
+    pub fn blocks(&self) -> impl Iterator<Item = Block> + '_ {
+        let counts: Vec<usize> = self.axes.iter().map(|a| a.bnum()).collect();
+        let total: usize = counts.iter().product();
+        (0..total).map(move |flat| {
+            let mut rem = flat;
+            let mut index = vec![0; counts.len()];
+            for d in (0..counts.len()).rev() {
+                index[d] = rem % counts[d];
+                rem /= counts[d];
+            }
+            let start = index
+                .iter()
+                .zip(&self.axes)
+                .map(|(&i, a)| a.tile_origin(i) as isize)
+                .collect();
+            let compute = index
+                .iter()
+                .zip(&self.axes)
+                .map(|(&i, a)| a.compute_range(i))
+                .collect();
+            Block { index, start, compute }
+        })
+    }
+
+    /// Total cells read from external memory per input buffer including the
+    /// redundant halo and out-of-bound ones (Eq 6 generalized: product of
+    /// `bnum*bsize` over blocked axes × `dim` over streamed axes).
+    pub fn t_cell(&self) -> usize {
+        self.axes
+            .iter()
+            .map(|a| if a.halo == 0 { a.dim } else { a.bnum() * a.bsize })
+            .product()
+    }
+
+    /// Cells read excluding out-of-bound ones (the implementation never
+    /// issues out-of-bound reads): product over axes of the truly traversed
+    /// in-bounds extent.
+    pub fn t_cell_in_bounds(&self) -> usize {
+        self.axes
+            .iter()
+            .map(|a| {
+                if a.halo == 0 {
+                    a.dim
+                } else {
+                    // each block reads bsize cells clipped to [0, dim)
+                    (0..a.bnum())
+                        .map(|i| {
+                            let lo = a.block_start(i).max(0) as usize;
+                            let hi = ((a.block_start(i) + a.bsize as isize) as usize).min(a.dim);
+                            hi - lo
+                        })
+                        .sum()
+                }
+            })
+            .product()
+    }
+
+    /// Redundancy factor: traversed cells / useful cells. The quantity the
+    /// paper trades off against temporal parallelism (§6.1).
+    pub fn redundancy(&self) -> f64 {
+        let useful: usize = self.axes.iter().map(|a| a.dim).product();
+        self.t_cell() as f64 / useful as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Rng};
+
+    #[test]
+    fn eq1_shift_register_size() {
+        // Paper's example shapes.
+        assert_eq!(shift_reg_cells(2, 1, 4096, 0, 8), 2 * 4096 + 8);
+        assert_eq!(shift_reg_cells(3, 1, 256, 256, 16), 2 * 256 * 256 + 16);
+    }
+
+    #[test]
+    fn eq4_eq5_paper_values() {
+        // Diffusion 2D on Arria 10 best config: bsize 4096, par_time 36,
+        // rad 1 -> halo 36, csize 4024; dim chosen as multiple of csize:
+        // 16096 = 4 * 4024 (Table 4's dim column).
+        let d = DimBlocking::new(16096, 4096, halo_width(1, 36));
+        assert_eq!(d.csize(), 4024);
+        assert_eq!(d.bnum(), 4);
+        assert_eq!(d.trav(), 4 * 4024 + 72);
+    }
+
+    #[test]
+    fn block_starts_and_compute_ranges() {
+        let d = DimBlocking::new(100, 40, 4); // csize 32, bnum 4
+        assert_eq!(d.bnum(), 4);
+        assert_eq!(d.block_start(0), -4);
+        assert_eq!(d.block_start(1), 28);
+        assert_eq!(d.compute_range(0), (0, 32));
+        assert_eq!(d.compute_range(3), (96, 100)); // clipped
+    }
+
+    #[test]
+    fn blocks_iteration_order_and_count() {
+        let g = BlockGeometry::tiled(&[10, 20], &[8, 8], 2); // csize 4 -> 3x5
+        assert_eq!(g.num_blocks(), 3 * 5);
+        let blocks: Vec<Block> = g.blocks().collect();
+        assert_eq!(blocks.len(), 15);
+        // innermost (x) fastest
+        assert_eq!(blocks[0].index, vec![0, 0]);
+        assert_eq!(blocks[1].index, vec![0, 1]);
+        assert_eq!(blocks[5].index, vec![1, 0]);
+    }
+
+    #[test]
+    fn compute_blocks_partition_the_grid() {
+        // Every grid cell must be covered by exactly one compute block.
+        let g = BlockGeometry::tiled(&[37, 53], &[16, 16], 3);
+        let mut cover = vec![0u8; 37 * 53];
+        for b in g.blocks() {
+            let (y0, y1) = b.compute[0];
+            let (x0, x1) = b.compute[1];
+            for y in y0..y1 {
+                for x in x0..x1 {
+                    cover[y * 53 + x] += 1;
+                }
+            }
+        }
+        assert!(cover.iter().all(|&c| c == 1), "not an exact partition");
+    }
+
+    #[test]
+    fn prop_compute_blocks_partition() {
+        forall(
+            "compute blocks partition grid exactly once",
+            40,
+            |r: &mut Rng| {
+                let halo = r.usize_in(1, 6);
+                let bsize = 2 * halo + r.usize_in(1, 24);
+                let dim = r.usize_in(1, 300);
+                (dim, bsize, halo)
+            },
+            |&(dim, bsize, halo)| {
+                let d = DimBlocking::new(dim, bsize, halo);
+                let mut cover = vec![0u32; dim];
+                for i in 0..d.bnum() {
+                    let (lo, hi) = d.compute_range(i);
+                    for c in cover.iter_mut().take(hi).skip(lo) {
+                        *c += 1;
+                    }
+                }
+                if cover.iter().all(|&c| c == 1) {
+                    Ok(())
+                } else {
+                    Err("coverage != 1".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_block_spatial_extent_covers_compute_plus_halo() {
+        forall(
+            "spatial block = compute block + halo on both sides",
+            40,
+            |r: &mut Rng| {
+                let halo = r.usize_in(1, 5);
+                let bsize = 2 * halo + r.usize_in(1, 20);
+                let dim = r.usize_in(1, 200);
+                (dim, bsize, halo)
+            },
+            |&(dim, bsize, halo)| {
+                let d = DimBlocking::new(dim, bsize, halo);
+                for i in 0..d.bnum() {
+                    let (lo, hi) = d.compute_range(i);
+                    let s = d.block_start(i);
+                    if s != lo as isize - halo as isize {
+                        return Err(format!("block {i} start {s} != {lo} - {halo}"));
+                    }
+                    if hi > ((s + bsize as isize) - halo as isize).max(0) as usize {
+                        return Err(format!("block {i} compute {hi} exceeds block end"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn t_cell_paper_2d() {
+        // Eq 6 (2D): bnum_x * bsize_x * dim_y
+        let g = BlockGeometry::paper_2d(&[16096, 16096], 4096, 36);
+        assert_eq!(g.t_cell(), 4 * 4096 * 16096);
+    }
+
+    #[test]
+    fn t_cell_paper_3d() {
+        // Eq 6 (3D): bnum_x*bsize_x * bnum_y*bsize_y * dim_z
+        let halo = halo_width(1, 12);
+        let g = BlockGeometry::paper_3d(&[696, 696, 696], 256, 256, halo);
+        // csize = 232, bnum = 3
+        assert_eq!(g.t_cell(), (3 * 256) * (3 * 256) * 696);
+    }
+
+    #[test]
+    fn redundancy_decreases_with_bigger_blocks() {
+        // Per-block halo redundancy bsize/csize shrinks as bsize grows
+        // (§5.3: "increasing bsize reduces redundancy"). Dims chosen as
+        // csize multiples, as the paper's methodology does (§5.2).
+        let small = DimBlocking::new(480 * 8, 512, 16); // csize 480
+        let large = DimBlocking::new(4064 * 8, 4096, 16); // csize 4064
+        let r_small = small.bsize as f64 / small.csize() as f64;
+        let r_large = large.bsize as f64 / large.csize() as f64;
+        assert!(r_large < r_small);
+        // and the full-geometry redundancy agrees when dims divide evenly
+        let gs = BlockGeometry::paper_2d(&[480 * 8, 480 * 8], 512, 16);
+        let gl = BlockGeometry::paper_2d(&[4064 * 8, 4064 * 8], 4096, 16);
+        assert!(gl.redundancy() < gs.redundancy());
+        assert!(gl.redundancy() >= 1.0);
+    }
+
+    #[test]
+    fn tile_origin_pins_edge_blocks_to_grid_border() {
+        let d = DimBlocking::new(100, 40, 4); // csize 32, bnum 4
+        assert_eq!(d.tile_origin(0), 0); // ideal -4 clamped
+        assert_eq!(d.tile_origin(1), 28);
+        assert_eq!(d.tile_origin(2), 60);
+        assert_eq!(d.tile_origin(3), 60); // ideal 92 clamped to 100-40
+                                          // compute region always inside the tile, ≥halo from any
+                                          // tile edge that is not the grid border
+        for i in 0..d.bnum() {
+            let (lo, hi) = d.compute_range(i);
+            let o = d.tile_origin(i);
+            assert!(o <= lo && hi <= o + d.bsize);
+            assert!(lo - o >= d.halo || o == 0);
+            assert!(o + d.bsize - hi >= d.halo || o + d.bsize == d.dim);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must exceed")]
+    fn rejects_halo_swallowing_block() {
+        DimBlocking::new(100, 16, 8);
+    }
+}

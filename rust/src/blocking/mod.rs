@@ -1,0 +1,21 @@
+//! Overlapped spatial blocking + temporal-blocking geometry (paper §3.1–3.3).
+//!
+//! This module is pure geometry/arithmetic — no execution. It provides:
+//!
+//! * [`DimBlocking`] / [`BlockGeometry`]: block, compute-block and halo
+//!   arithmetic (Eqs 1, 2, 4–7) for the paper's blocking schemes (1D
+//!   blocking for 2D stencils, 2D blocking for 3D stencils) and for the
+//!   coordinator's fully-tiled scheme.
+//! * [`traversal`]: the collapsed-loop block/cell traversal with the
+//!   exit-condition optimization (§3.3.1–3.3.2, Listings 1–3), including
+//!   the critical-path accounting the f_max model consumes.
+//! * [`padding`]: the 512-bit external-memory alignment rules and the
+//!   device-buffer padding optimization (§3.3.3).
+
+pub mod geometry;
+pub mod padding;
+pub mod traversal;
+
+pub use geometry::{shift_reg_cells, Block, BlockGeometry, DimBlocking};
+pub use padding::{alignment_class, pad_words, AlignClass};
+pub use traversal::{CollapsedLoop, LoopStyle, TraversalStats};

@@ -1,0 +1,299 @@
+//! Multi-device spatial distribution — the paper's §8 future work:
+//! "we plan to evaluate spatial distribution of large stencils on multiple
+//! FPGAs". Spatial blocking is precisely what makes this possible (§1:
+//! temporal-only designs cannot distribute because every PE needs the full
+//! row/plane).
+//!
+//! The grid is partitioned into contiguous slabs along the outermost axis,
+//! one per (simulated) device. Each pass of `T` fused steps requires
+//! `halo = rad×T` rows/planes of neighbour data on each internal boundary;
+//! the exchange is materialized by building an *extended slab* per worker
+//! (slab ± halo, clamped at true grid edges), running the normal blocked
+//! execution on it, and keeping the interior — identical validity argument
+//! to the single-device tile halos, one level up.
+//!
+//! Communication volume (the number the paper's future-work scaling would
+//! care about) is accounted per pass in [`DistReport`].
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::Executor;
+use crate::stencil::Grid;
+
+use super::plan::Plan;
+use super::{Coordinator, ExecReport, PlanBuilder};
+
+/// Report of a distributed run.
+#[derive(Debug, Clone)]
+pub struct DistReport {
+    pub iterations: usize,
+    pub passes: usize,
+    pub workers: usize,
+    pub tiles_executed: u64,
+    pub cell_updates: u64,
+    /// Halo cells shipped between neighbouring workers, summed over passes
+    /// (per direction, counted once per receiving worker).
+    pub halo_cells_exchanged: u64,
+    pub elapsed: std::time::Duration,
+}
+
+impl DistReport {
+    pub fn mcells_per_sec(&self) -> f64 {
+        self.cell_updates as f64 / self.elapsed.as_secs_f64() / 1e6
+    }
+
+    /// Communication-to-computation ratio per pass (cells moved / cells
+    /// updated) — shrinks as slabs get taller, the scaling argument for
+    /// distribution.
+    pub fn comm_ratio(&self) -> f64 {
+        self.halo_cells_exchanged as f64 / (self.cell_updates as f64)
+    }
+}
+
+/// Distributes a [`Plan`] across `workers` simulated devices.
+#[derive(Debug, Clone)]
+pub struct DistributedCoordinator {
+    plan: Plan,
+    pub workers: usize,
+}
+
+impl DistributedCoordinator {
+    pub fn new(plan: Plan, workers: usize) -> DistributedCoordinator {
+        DistributedCoordinator { plan, workers: workers.max(1) }
+    }
+
+    /// Slab row-range `[lo, hi)` of worker `w` along axis 0.
+    fn slab(&self, w: usize) -> (usize, usize) {
+        let dim0 = self.plan.grid_dims[0];
+        let per = dim0.div_ceil(self.workers);
+        let lo = (w * per).min(dim0);
+        let hi = ((w + 1) * per).min(dim0);
+        (lo, hi)
+    }
+
+    /// Copy rows `[lo, hi)` (clamped coordinates are the caller's job) of
+    /// `src` into a fresh grid of the same trailing dims.
+    fn copy_rows(src: &Grid, lo: usize, hi: usize) -> Grid {
+        let dims = src.dims();
+        let row_cells: usize = dims[1..].iter().product();
+        let mut out_dims = dims.clone();
+        out_dims[0] = hi - lo;
+        let data = src.data()[lo * row_cells..hi * row_cells].to_vec();
+        Grid::from_vec(&out_dims, data)
+    }
+
+    /// Run the plan distributed over `workers` devices; each worker uses
+    /// `exec` (shared, so it must be `Sync` — the host executor is; a
+    /// PJRT-per-worker variant would hold one client per thread).
+    pub fn run<E: Executor + Sync + ?Sized>(
+        &self,
+        exec: &E,
+        grid: &mut Grid,
+        power: Option<&Grid>,
+    ) -> Result<DistReport> {
+        let plan = &self.plan;
+        let def = plan.stencil.def();
+        ensure!(grid.dims() == plan.grid_dims, "grid dims do not match the plan");
+        ensure!(power.is_some() == def.has_power, "power grid mismatch");
+        let dim0 = plan.grid_dims[0];
+        let min_slab = dim0 / self.workers;
+        ensure!(
+            min_slab >= plan.tile[0],
+            "slabs of ~{min_slab} rows are thinner than the {}-row tile; \
+             use fewer workers or a smaller tile",
+            plan.tile[0]
+        );
+
+        let start = Instant::now();
+        let mut cur = std::mem::replace(grid, Grid::new2d(1, 1));
+        let mut tiles_executed = 0u64;
+        let mut halo_exchanged = 0u64;
+        let row_cells: usize = plan.grid_dims[1..].iter().product();
+
+        for &steps in &plan.chunks {
+            let halo = def.radius * steps;
+            let cur_ref = &cur;
+            // Each worker computes its extended slab independently.
+            let results: Vec<Result<(usize, Grid, ExecReport, usize)>> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = (0..self.workers)
+                        .map(|w| {
+                            let (lo, hi) = self.slab(w);
+                            scope.spawn(move || -> Result<(usize, Grid, ExecReport, usize)> {
+                                // halo exchange: extend with real neighbour
+                                // rows, clamped at the true grid edges
+                                let elo = lo.saturating_sub(halo);
+                                let ehi = (hi + halo).min(dim0);
+                                let mut slab = Self::copy_rows(cur_ref, elo, ehi);
+                                let pslab = power.map(|p| Self::copy_rows(p, elo, ehi));
+                                let mut dims = plan.grid_dims.clone();
+                                dims[0] = ehi - elo;
+                                let sub_plan = PlanBuilder::new(plan.stencil)
+                                    .grid_dims(dims)
+                                    .iterations(steps)
+                                    .coeffs(plan.coeffs.clone())
+                                    .tile(plan.tile.clone())
+                                    .step_sizes(vec![steps])
+                                    .build()?;
+                                let rep = Coordinator::new(sub_plan).run(
+                                    exec,
+                                    &mut slab,
+                                    pslab.as_ref(),
+                                )?;
+                                // received halo rows (from up to 2 neighbours)
+                                let received = (lo - elo) + (ehi - hi);
+                                Ok((w, slab, rep, received))
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("worker panicked"))
+                        .collect()
+                });
+
+            // Assemble: keep each worker's interior rows.
+            let mut next = cur.clone();
+            for r in results {
+                let (w, slab, rep, received) = r?;
+                let (lo, hi) = self.slab(w);
+                let elo = lo.saturating_sub(halo);
+                let src_off = (lo - elo) * row_cells;
+                let n = (hi - lo) * row_cells;
+                next.data_mut()[lo * row_cells..hi * row_cells]
+                    .copy_from_slice(&slab.data()[src_off..src_off + n]);
+                tiles_executed += rep.tiles_executed;
+                halo_exchanged += (received * row_cells) as u64;
+            }
+            cur = next;
+        }
+        *grid = cur;
+        Ok(DistReport {
+            iterations: plan.iterations,
+            passes: plan.chunks.len(),
+            workers: self.workers,
+            tiles_executed,
+            cell_updates: plan.cell_updates(),
+            halo_cells_exchanged: halo_exchanged,
+            elapsed: start.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostExecutor;
+    use crate::stencil::{reference, StencilKind};
+
+    fn mk(kind: StencilKind, dims: &[usize], seed: u64) -> Grid {
+        let mut g = if kind.ndim() == 2 {
+            Grid::new2d(dims[0], dims[1])
+        } else {
+            Grid::new3d(dims[0], dims[1], dims[2])
+        };
+        g.fill_random(seed, 0.0, 1.0);
+        g
+    }
+
+    fn check(kind: StencilKind, dims: &[usize], iters: usize, tile: Vec<usize>, workers: usize) {
+        let def = kind.def();
+        let mut grid = mk(kind, dims, 3);
+        let power = def.has_power.then(|| mk(kind, dims, 17));
+        let want = reference::run(kind, &grid, power.as_ref(), def.default_coeffs, iters);
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(dims.to_vec())
+            .iterations(iters)
+            .tile(tile)
+            .build()
+            .unwrap();
+        let dist = DistributedCoordinator::new(plan, workers);
+        let rep = dist.run(&HostExecutor::new(), &mut grid, power.as_ref()).unwrap();
+        let err = grid.max_abs_diff(&want);
+        assert!(
+            err < 1e-3,
+            "{kind} x{workers} workers: distributed deviates {err}"
+        );
+        assert_eq!(rep.workers, workers);
+        if workers > 1 {
+            assert!(rep.halo_cells_exchanged > 0, "no halo exchange recorded");
+        }
+    }
+
+    #[test]
+    fn distributed_equals_oracle_2d() {
+        check(StencilKind::Diffusion2D, &[128, 96], 9, vec![32, 32], 3);
+        check(StencilKind::Hotspot2D, &[128, 64], 6, vec![32, 32], 2);
+    }
+
+    #[test]
+    fn distributed_equals_oracle_3d() {
+        check(StencilKind::Diffusion3D, &[48, 24, 24], 5, vec![16, 16, 16], 3);
+        check(StencilKind::Hotspot3D, &[32, 20, 20], 4, vec![16, 16, 16], 2);
+    }
+
+    #[test]
+    fn distributed_radius2() {
+        check(StencilKind::Diffusion2DR2, &[128, 96], 6, vec![32, 32], 4);
+    }
+
+    #[test]
+    fn worker_count_invariance() {
+        let kind = StencilKind::Diffusion2D;
+        let dims = vec![160, 80];
+        let mut results = Vec::new();
+        for workers in [1usize, 2, 5] {
+            let mut g = mk(kind, &dims, 9);
+            let plan = PlanBuilder::new(kind)
+                .grid_dims(dims.clone())
+                .iterations(7)
+                .tile(vec![32, 32])
+                .build()
+                .unwrap();
+            DistributedCoordinator::new(plan, workers)
+                .run(&HostExecutor::new(), &mut g, None)
+                .unwrap();
+            results.push(g);
+        }
+        assert_eq!(results[0].max_abs_diff(&results[1]), 0.0);
+        assert_eq!(results[0].max_abs_diff(&results[2]), 0.0);
+    }
+
+    #[test]
+    fn comm_ratio_shrinks_with_taller_slabs() {
+        let kind = StencilKind::Diffusion2D;
+        let mk_rep = |rows: usize| {
+            let dims = vec![rows, 64];
+            let mut g = mk(kind, &dims, 1);
+            let plan = PlanBuilder::new(kind)
+                .grid_dims(dims)
+                .iterations(4)
+                .tile(vec![32, 32])
+                .build()
+                .unwrap();
+            DistributedCoordinator::new(plan, 2)
+                .run(&HostExecutor::new(), &mut g, None)
+                .unwrap()
+        };
+        let short = mk_rep(64);
+        let tall = mk_rep(256);
+        assert!(tall.comm_ratio() < short.comm_ratio());
+    }
+
+    #[test]
+    fn too_many_workers_is_an_error() {
+        let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .iterations(2)
+            .tile(vec![32, 32])
+            .build()
+            .unwrap();
+        let mut g = Grid::new2d(64, 64);
+        let err = DistributedCoordinator::new(plan, 8)
+            .run(&HostExecutor::new(), &mut g, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("thinner"), "{err}");
+    }
+}

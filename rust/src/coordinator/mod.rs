@@ -1,0 +1,260 @@
+//! Layer-3 coordinator: drives grids through tile programs using the
+//! paper's overlapped-blocking schedule.
+//!
+//! [`Coordinator::run`] is the sequential reference path (used with the
+//! PJRT executor, which is single-threaded by design); [`pipeline`]
+//! provides the threaded equivalents of the paper's multi-kernel designs:
+//! the read→compute→write [`pipeline::FusedPipeline`] and the per-PE
+//! chained [`pipeline::ChainPipeline`] (§3.2's autorun PEs with shallow
+//! channels).
+
+pub mod distributed;
+pub mod pipeline;
+pub mod plan;
+
+pub use distributed::{DistReport, DistributedCoordinator};
+pub use pipeline::{ChainPipeline, FusedPipeline};
+pub use plan::{Plan, PlanBuilder};
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::blocking::geometry::BlockGeometry;
+use crate::runtime::{extract_tile, writeback_tile, Executor};
+use crate::stencil::Grid;
+
+/// Per-stage time accounting (read/compute/write kernels of Fig 2),
+/// summed across workers. Used by the §Perf analysis to find the
+/// bottleneck stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StageTimes {
+    pub extract: Duration,
+    pub compute: Duration,
+    pub write: Duration,
+}
+
+impl StageTimes {
+    /// The dominant stage name.
+    pub fn bottleneck(&self) -> &'static str {
+        let m = self.extract.max(self.compute).max(self.write);
+        if m == self.compute {
+            "compute"
+        } else if m == self.extract {
+            "extract"
+        } else {
+            "write"
+        }
+    }
+}
+
+/// What a run did — returned by every execution path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecReport {
+    pub iterations: usize,
+    pub passes: usize,
+    pub tiles_executed: u64,
+    /// Useful cell updates performed (grid cells × iterations).
+    pub cell_updates: u64,
+    /// Redundant cell updates (halo recomputation) — the overhead the
+    /// paper trades for synchronization freedom.
+    pub redundant_updates: u64,
+    pub elapsed: Duration,
+    pub backend: &'static str,
+    /// Per-stage times when the execution path records them (pipelines).
+    pub stages: Option<StageTimes>,
+}
+
+impl ExecReport {
+    /// Achieved useful update rate, in million cell updates per second.
+    pub fn mcells_per_sec(&self) -> f64 {
+        self.cell_updates as f64 / self.elapsed.as_secs_f64() / 1e6
+    }
+
+    /// Redundancy ratio (total work / useful work).
+    pub fn redundancy(&self) -> f64 {
+        (self.cell_updates + self.redundant_updates) as f64 / self.cell_updates as f64
+    }
+}
+
+/// The coordinator owns a [`Plan`] and executes it over grids.
+#[derive(Debug, Clone)]
+pub struct Coordinator {
+    plan: Plan,
+}
+
+impl Coordinator {
+    pub fn new(plan: Plan) -> Coordinator {
+        Coordinator { plan }
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Sequential execution: one pass per chunk, double-buffered grids,
+    /// overlapped tiles with halo `rad × chunk_steps`, write masking.
+    /// `power` is required for hotspot stencils and must match `grid` dims.
+    pub fn run<E: Executor + ?Sized>(
+        &self,
+        exec: &E,
+        grid: &mut Grid,
+        power: Option<&Grid>,
+    ) -> Result<ExecReport> {
+        let plan = &self.plan;
+        let def = plan.stencil.def();
+        ensure!(grid.dims() == plan.grid_dims, "grid dims do not match the plan");
+        if let Some(p) = power {
+            ensure!(p.dims() == plan.grid_dims, "power dims do not match the plan");
+        }
+        ensure!(
+            power.is_some() == def.has_power,
+            "stencil {} power-grid mismatch",
+            plan.stencil
+        );
+
+        let start = Instant::now();
+        let mut cur = std::mem::replace(grid, Grid::new2d(1, 1));
+        let mut next = cur.clone();
+        let mut tiles_executed = 0u64;
+        let mut redundant = 0u64;
+        let mut tile_buf: Vec<f32> = Vec::new();
+        let mut power_buf: Vec<f32> = Vec::new();
+
+        for &steps in &plan.chunks {
+            let spec = plan.tile_spec(steps);
+            ensure!(
+                exec.supports(&spec),
+                "executor {} lacks tile program {}",
+                exec.backend_name(),
+                spec.artifact_name()
+            );
+            let halo = def.radius * steps;
+            let geom = BlockGeometry::tiled(&plan.grid_dims, &plan.tile, halo);
+            for block in geom.blocks() {
+                extract_tile(&cur, &block, &plan.tile, &mut tile_buf);
+                let pw = if def.has_power {
+                    extract_tile(power.unwrap(), &block, &plan.tile, &mut power_buf);
+                    Some(power_buf.as_slice())
+                } else {
+                    None
+                };
+                let result = exec.run_tile(&spec, &tile_buf, pw, &plan.coeffs)?;
+                writeback_tile(&mut next, &block, &plan.tile, &result);
+                tiles_executed += 1;
+                let computed: usize = spec.cells();
+                let useful: usize = block
+                    .compute
+                    .iter()
+                    .map(|(lo, hi)| hi - lo)
+                    .product();
+                redundant += (computed - useful) as u64 * steps as u64;
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        *grid = cur;
+        Ok(ExecReport {
+            iterations: plan.iterations,
+            passes: plan.passes(),
+            tiles_executed,
+            cell_updates: plan.cell_updates(),
+            redundant_updates: redundant,
+            elapsed: start.elapsed(),
+            backend: exec.backend_name(),
+            stages: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostExecutor;
+    use crate::stencil::{reference, StencilKind};
+
+    fn run_and_check(kind: StencilKind, dims: &[usize], iters: usize, tile: Vec<usize>) {
+        let def = kind.def();
+        let mut grid = if kind.ndim() == 2 {
+            Grid::new2d(dims[0], dims[1])
+        } else {
+            Grid::new3d(dims[0], dims[1], dims[2])
+        };
+        grid.fill_random(7, 0.0, 1.0);
+        let power = def.has_power.then(|| {
+            let mut p = grid.clone();
+            p.fill_random(13, 0.0, 0.25);
+            p
+        });
+        let want = reference::run(kind, &grid, power.as_ref(), def.default_coeffs, iters);
+
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(dims.to_vec())
+            .iterations(iters)
+            .tile(tile)
+            .build()
+            .unwrap();
+        let coord = Coordinator::new(plan);
+        let report = coord.run(&HostExecutor::new(), &mut grid, power.as_ref()).unwrap();
+        let err = grid.max_abs_diff(&want);
+        assert!(
+            err < 1e-4,
+            "{kind} blocked result deviates from oracle: max err {err}"
+        );
+        assert_eq!(report.iterations, iters);
+        assert!(report.tiles_executed > 0);
+    }
+
+    /// THE core L3 correctness property: the overlapped-blocked, halo-
+    /// masked, chunked execution equals the plain whole-grid iteration.
+    #[test]
+    fn blocked_equals_oracle_diffusion2d() {
+        run_and_check(StencilKind::Diffusion2D, &[96, 80], 7, vec![32, 32]);
+    }
+
+    #[test]
+    fn blocked_equals_oracle_hotspot2d() {
+        run_and_check(StencilKind::Hotspot2D, &[64, 96], 6, vec![32, 32]);
+    }
+
+    #[test]
+    fn blocked_equals_oracle_diffusion3d() {
+        run_and_check(StencilKind::Diffusion3D, &[24, 20, 28], 5, vec![16, 16, 16]);
+    }
+
+    #[test]
+    fn blocked_equals_oracle_hotspot3d() {
+        run_and_check(StencilKind::Hotspot3D, &[20, 20, 20], 4, vec![16, 16, 16]);
+    }
+
+    #[test]
+    fn non_divisible_dims_are_fine() {
+        // dims deliberately not multiples of the compute block.
+        run_and_check(StencilKind::Diffusion2D, &[67, 53], 5, vec![24, 24]);
+    }
+
+    #[test]
+    fn report_accounts_redundancy() {
+        let mut grid = Grid::new2d(64, 64);
+        grid.fill_random(1, 0.0, 1.0);
+        let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .iterations(4)
+            .tile(vec![32, 32])
+            .build()
+            .unwrap();
+        let report = Coordinator::new(plan).run(&HostExecutor::new(), &mut grid, None).unwrap();
+        assert!(report.redundancy() > 1.0);
+        assert_eq!(report.cell_updates, 64 * 64 * 4);
+    }
+
+    #[test]
+    fn wrong_grid_dims_rejected() {
+        let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .iterations(1)
+            .build()
+            .unwrap();
+        let mut grid = Grid::new2d(32, 32);
+        assert!(Coordinator::new(plan).run(&HostExecutor::new(), &mut grid, None).is_err());
+    }
+}

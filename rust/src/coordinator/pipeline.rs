@@ -1,0 +1,409 @@
+//! Threaded pipelines mirroring the paper's multi-kernel FPGA design
+//! (Fig 2): a *read* kernel, compute PEs, and a *write* kernel connected
+//! by on-chip channels. Here: OS threads + bounded `sync_channel`s.
+//!
+//! Two shapes are provided:
+//!
+//! * [`FusedPipeline`] — read → compute-pool → write, where one compute
+//!   stage runs a fused `steps`-deep tile program. This is the
+//!   high-throughput host path (the PJRT analogue keeps compute on one
+//!   thread because the XLA client is not Sync).
+//! * [`ChainPipeline`] — one thread **per PE**, each applying a single
+//!   time-step and forwarding through a shallow channel, exactly like the
+//!   paper's `autorun` PE chain; PEs beyond the active chunk forward data
+//!   unchanged (§3.2's pass-through behaviour for remainder iterations).
+//!
+//! Both produce bit-identical results to [`super::Coordinator::run`]
+//! (property-tested), differing only in concurrency structure.
+
+use std::sync::mpsc::sync_channel;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::blocking::geometry::{Block, BlockGeometry};
+use crate::runtime::{extract_tile, writeback_tile, Executor, HostExecutor, TileSpec};
+use crate::stencil::Grid;
+
+use super::plan::Plan;
+use super::ExecReport;
+
+/// Channel depth — the paper's channels between kernels are shallow; a
+/// small constant keeps memory bounded while hiding stage jitter.
+const CHANNEL_DEPTH: usize = 4;
+
+/// Read → compute(pool) → write pipeline over fused tile programs.
+pub struct FusedPipeline {
+    plan: Plan,
+    /// Number of compute worker threads.
+    pub workers: usize,
+}
+
+impl FusedPipeline {
+    pub fn new(plan: Plan) -> FusedPipeline {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        FusedPipeline { plan, workers: workers.clamp(1, 8) }
+    }
+
+    pub fn with_workers(plan: Plan, workers: usize) -> FusedPipeline {
+        FusedPipeline { plan, workers: workers.max(1) }
+    }
+
+    /// Run the plan. The executor must be shareable across the compute
+    /// pool (`Sync`), which [`HostExecutor`] is.
+    pub fn run<E: Executor + Sync + ?Sized>(
+        &self,
+        exec: &E,
+        grid: &mut Grid,
+        power: Option<&Grid>,
+    ) -> Result<ExecReport> {
+        let plan = &self.plan;
+        let def = plan.stencil.def();
+        ensure!(grid.dims() == plan.grid_dims, "grid dims do not match the plan");
+        ensure!(power.is_some() == def.has_power, "power grid mismatch");
+        let start = Instant::now();
+        let mut cur = std::mem::replace(grid, Grid::new2d(1, 1));
+        let mut next = cur.clone();
+        let mut tiles_executed = 0u64;
+        let mut redundant = 0u64;
+        let mut stages = super::StageTimes::default();
+
+        for &steps in &plan.chunks {
+            let spec = plan.tile_spec(steps);
+            ensure!(exec.supports(&spec), "missing tile program {}", spec.artifact_name());
+            let halo = def.radius * steps;
+            let geom = BlockGeometry::tiled(&plan.grid_dims, &plan.tile, halo);
+            let blocks: Vec<Block> = geom.blocks().collect();
+
+            // Workers shard the block list statically (block i -> worker
+            // i % W) and do their own extraction — the dedicated read
+            // kernel became the bottleneck once extraction was memcpy-fast
+            // and the shared input channel serialized it (§Perf log).
+            // Only results flow through a channel, to the write kernel.
+            let (tx_out, rx_out) =
+                sync_channel::<(usize, Vec<f32>)>(CHANNEL_DEPTH * self.workers);
+
+            let cur_ref = &cur;
+            let blocks_ref = &blocks;
+            let spec_ref = &spec;
+            let coeffs = &plan.coeffs;
+            let tile_dims = &plan.tile;
+
+            std::thread::scope(|scope| -> Result<()> {
+                // COMPUTE pool (the replicated-PE analogue), each worker
+                // extracting + computing its shard.
+                let mut handles = Vec::new();
+                for w in 0..self.workers {
+                    let tx_out = tx_out.clone();
+                    handles.push(scope.spawn(move || -> Result<super::StageTimes> {
+                        let mut tile = Vec::new();
+                        let mut ptile = Vec::new();
+                        let mut times = super::StageTimes::default();
+                        for (i, b) in blocks_ref
+                            .iter()
+                            .enumerate()
+                            .skip(w)
+                            .step_by(self.workers.max(1))
+                        {
+                            let t0 = Instant::now();
+                            extract_tile(cur_ref, b, tile_dims, &mut tile);
+                            let pw = power.map(|pg| {
+                                extract_tile(pg, b, tile_dims, &mut ptile);
+                                ptile.as_slice()
+                            });
+                            let t1 = Instant::now();
+                            let out = exec.run_tile(spec_ref, &tile, pw, coeffs)?;
+                            times.extract += t1 - t0;
+                            times.compute += t1.elapsed();
+                            if tx_out.send((i, out)).is_err() {
+                                return Ok(times);
+                            }
+                        }
+                        Ok(times)
+                    }));
+                }
+                drop(tx_out);
+
+                // WRITE kernel (this thread): masked write-back.
+                for (i, out) in rx_out.iter() {
+                    let t0 = Instant::now();
+                    writeback_tile(&mut next, &blocks_ref[i], tile_dims, &out);
+                    stages.write += t0.elapsed();
+                    tiles_executed += 1;
+                    let useful: usize =
+                        blocks_ref[i].compute.iter().map(|(lo, hi)| hi - lo).product();
+                    redundant += (spec_ref.cells() - useful) as u64 * steps as u64;
+                }
+                for h in handles {
+                    let t = h.join().expect("compute worker panicked")?;
+                    stages.extract += t.extract;
+                    stages.compute += t.compute;
+                }
+                Ok(())
+            })?;
+            std::mem::swap(&mut cur, &mut next);
+        }
+        *grid = cur;
+        Ok(ExecReport {
+            iterations: plan.iterations,
+            passes: plan.chunks.len(),
+            tiles_executed,
+            cell_updates: plan.cell_updates(),
+            redundant_updates: redundant,
+            elapsed: start.elapsed(),
+            backend: "fused-pipeline",
+            stages: Some(stages),
+        })
+    }
+}
+
+/// One-thread-per-PE chain: PE *k* applies time-step *k* of the current
+/// chunk and forwards; PEs with `k >= chunk` pass tiles through unchanged.
+pub struct ChainPipeline {
+    plan: Plan,
+    /// Physical chain length (`par_time`); chunks shorter than this use
+    /// pass-through PEs, as on the FPGA.
+    pub chain_len: usize,
+}
+
+impl ChainPipeline {
+    /// Chain length = the plan's largest chunk (its `par_time`).
+    pub fn new(plan: Plan) -> ChainPipeline {
+        let chain_len = plan.chunks.iter().copied().max().unwrap_or(1);
+        ChainPipeline { plan, chain_len }
+    }
+
+    /// Run using per-step host PEs. Results are identical to the fused
+    /// paths; this exists to model (and test) the paper's PE-chain
+    /// structure, including remainder pass-through.
+    pub fn run(&self, grid: &mut Grid, power: Option<&Grid>) -> Result<ExecReport> {
+        let plan = &self.plan;
+        let def = plan.stencil.def();
+        ensure!(grid.dims() == plan.grid_dims, "grid dims do not match the plan");
+        ensure!(power.is_some() == def.has_power, "power grid mismatch");
+        let start = Instant::now();
+        let mut cur = std::mem::replace(grid, Grid::new2d(1, 1));
+        let mut next = cur.clone();
+        let mut tiles_executed = 0u64;
+        let mut redundant = 0u64;
+        let step_exec = HostExecutor::new();
+
+        for &steps in &plan.chunks {
+            ensure!(steps <= self.chain_len, "chunk exceeds chain length");
+            // Halo sized for the whole physical chain — the FPGA's block
+            // geometry is fixed at par_time even when iterations remain
+            // short (§3.2); pass-through PEs keep data intact.
+            let halo = def.radius * self.chain_len;
+            ensure!(
+                plan.tile.iter().all(|&t| t > 2 * halo),
+                "tile too small for chain halo {halo}"
+            );
+            let geom = BlockGeometry::tiled(&plan.grid_dims, &plan.tile, halo);
+            let blocks: Vec<Block> = geom.blocks().collect();
+            let spec1 = TileSpec::new(plan.stencil, &plan.tile, 1);
+
+            let cur_ref = &cur;
+            let blocks_ref = &blocks;
+            let tile_dims = &plan.tile;
+            let coeffs = &plan.coeffs;
+            let chain_len = self.chain_len;
+
+            std::thread::scope(|scope| -> Result<()> {
+                // Stage 0: reader.
+                let (tx0, mut rx_prev) =
+                    sync_channel::<(usize, Vec<f32>, Option<Vec<f32>>)>(CHANNEL_DEPTH);
+                scope.spawn(move || {
+                    for (i, b) in blocks_ref.iter().enumerate() {
+                        let mut tile = Vec::new();
+                        extract_tile(cur_ref, b, tile_dims, &mut tile);
+                        let pw = power.map(|pg| {
+                            let mut p = Vec::new();
+                            extract_tile(pg, b, tile_dims, &mut p);
+                            p
+                        });
+                        if tx0.send((i, tile, pw)).is_err() {
+                            return;
+                        }
+                    }
+                });
+
+                // PE chain: `chain_len` stages; stage k computes only when
+                // k < chunk steps (else forwards).
+                let mut pe_handles = Vec::new();
+                for k in 0..chain_len {
+                    let (tx_k, rx_k) =
+                        sync_channel::<(usize, Vec<f32>, Option<Vec<f32>>)>(CHANNEL_DEPTH);
+                    let rx_in = rx_prev;
+                    let spec1 = spec1.clone();
+                    let active = k < steps;
+                    pe_handles.push(scope.spawn(move || -> Result<()> {
+                        for (i, tile, pw) in rx_in.iter() {
+                            let out = if active {
+                                step_exec.run_tile(&spec1, &tile, pw.as_deref(), coeffs)?
+                            } else {
+                                tile // pass-through PE
+                            };
+                            if tx_k.send((i, out, pw)).is_err() {
+                                return Ok(());
+                            }
+                        }
+                        Ok(())
+                    }));
+                    rx_prev = rx_k;
+                }
+
+                // Writer (this thread).
+                for (i, out, _pw) in rx_prev.iter() {
+                    writeback_tile(&mut next, &blocks_ref[i], tile_dims, &out);
+                    tiles_executed += 1;
+                    let useful: usize =
+                        blocks_ref[i].compute.iter().map(|(lo, hi)| hi - lo).product();
+                    let cells: usize = tile_dims.iter().product();
+                    redundant += (cells - useful) as u64 * steps as u64;
+                }
+                for h in pe_handles {
+                    h.join().expect("PE panicked")?;
+                }
+                Ok(())
+            })?;
+            std::mem::swap(&mut cur, &mut next);
+        }
+        *grid = cur;
+        Ok(ExecReport {
+            iterations: plan.iterations,
+            passes: plan.chunks.len(),
+            tiles_executed,
+            cell_updates: plan.cell_updates(),
+            redundant_updates: redundant,
+            elapsed: start.elapsed(),
+            backend: "chain-pipeline",
+            stages: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, PlanBuilder};
+    use std::time::Duration;
+    use crate::stencil::{reference, StencilKind};
+
+    fn mk_grid(kind: StencilKind, dims: &[usize], seed: u64) -> Grid {
+        let mut g = if kind.ndim() == 2 {
+            Grid::new2d(dims[0], dims[1])
+        } else {
+            Grid::new3d(dims[0], dims[1], dims[2])
+        };
+        g.fill_random(seed, 0.0, 1.0);
+        g
+    }
+
+    #[test]
+    fn fused_pipeline_equals_sequential() {
+        for kind in [StencilKind::Diffusion2D, StencilKind::Hotspot2D] {
+            let dims = vec![72, 88];
+            let plan = PlanBuilder::new(kind)
+                .grid_dims(dims.clone())
+                .iterations(6)
+                .tile(vec![32, 32])
+                .build()
+                .unwrap();
+            let power = kind.def().has_power.then(|| mk_grid(kind, &dims, 99));
+            let mut a = mk_grid(kind, &dims, 5);
+            let mut b = a.clone();
+            Coordinator::new(plan.clone())
+                .run(&HostExecutor::new(), &mut a, power.as_ref())
+                .unwrap();
+            FusedPipeline::with_workers(plan, 3)
+                .run(&HostExecutor::new(), &mut b, power.as_ref())
+                .unwrap();
+            assert!(a.max_abs_diff(&b) == 0.0, "{kind}: pipeline deviates");
+        }
+    }
+
+    #[test]
+    fn chain_pipeline_matches_oracle_including_passthrough() {
+        // iterations = 5 with chain length 4 -> last pass uses pass-through
+        // PEs (the §3.2 remainder case).
+        let kind = StencilKind::Diffusion2D;
+        let dims = vec![64, 64];
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(dims.clone())
+            .iterations(5)
+            .tile(vec![32, 32])
+            .step_sizes(vec![4, 2, 1])
+            .build()
+            .unwrap();
+        let mut g = mk_grid(kind, &dims, 11);
+        let want = reference::run(kind, &g, None, kind.def().default_coeffs, 5);
+        let chain = ChainPipeline::new(plan);
+        assert_eq!(chain.chain_len, 4);
+        chain.run(&mut g, None).unwrap();
+        let err = g.max_abs_diff(&want);
+        assert!(err < 1e-4, "chain deviates: {err}");
+    }
+
+    #[test]
+    fn chain_pipeline_3d_hotspot() {
+        let kind = StencilKind::Hotspot3D;
+        let dims = vec![20, 20, 20];
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(dims.clone())
+            .iterations(3)
+            .tile(vec![16, 16, 16])
+            .step_sizes(vec![2, 1])
+            .build()
+            .unwrap();
+        let power = mk_grid(kind, &dims, 77);
+        let mut g = mk_grid(kind, &dims, 8);
+        let want = reference::run(kind, &g, Some(&power), kind.def().default_coeffs, 3);
+        ChainPipeline::new(plan).run(&mut g, Some(&power)).unwrap();
+        assert!(g.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn stage_times_recorded_and_compute_dominates() {
+        let kind = StencilKind::Diffusion2D;
+        let dims = vec![256usize, 256];
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(dims.clone())
+            .iterations(8)
+            .tile(vec![64, 64])
+            .build()
+            .unwrap();
+        let mut g = mk_grid(kind, &dims, 4);
+        let rep = FusedPipeline::with_workers(plan, 2)
+            .run(&HostExecutor::new(), &mut g, None)
+            .unwrap();
+        let st = rep.stages.expect("pipeline must record stage times");
+        assert!(st.compute > Duration::ZERO);
+        assert_eq!(st.bottleneck(), "compute");
+        // stage times are per-worker sums and must stay in the same order
+        // of magnitude as wall time × workers
+        assert!(st.extract + st.compute < rep.elapsed * 8);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let kind = StencilKind::Diffusion3D;
+        let dims = vec![24, 24, 24];
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(dims.clone())
+            .iterations(4)
+            .tile(vec![16, 16, 16])
+            .step_sizes(vec![2, 1])
+            .build()
+            .unwrap();
+        let mut results = Vec::new();
+        for workers in [1, 2, 5] {
+            let mut g = mk_grid(kind, &dims, 21);
+            FusedPipeline::with_workers(plan.clone(), workers)
+                .run(&HostExecutor::new(), &mut g, None)
+                .unwrap();
+            results.push(g);
+        }
+        assert!(results[0].max_abs_diff(&results[1]) == 0.0);
+        assert!(results[0].max_abs_diff(&results[2]) == 0.0);
+    }
+}

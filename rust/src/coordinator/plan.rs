@@ -1,0 +1,269 @@
+//! Execution planning: how an iteration count maps onto tile programs.
+//!
+//! The FPGA runs `ceil(iter / par_time)` passes over the grid; when the
+//! iteration count is not a multiple of `par_time` the surplus PEs forward
+//! data unchanged (§3.2). Our executor artifacts come in fixed step counts
+//! (s1/s2/s4/s8), so the planner builds a *chunk schedule*: a list of
+//! per-pass step counts summing exactly to `iterations`, greedily using
+//! the largest available tile program — the software analogue of the PE
+//! chain plus pass-through PEs.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::runtime::{Executor, TileSpec};
+use crate::stencil::StencilKind;
+
+/// A validated execution plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub stencil: StencilKind,
+    pub grid_dims: Vec<usize>,
+    pub iterations: usize,
+    /// Stencil coefficients (runtime arguments, like the paper's kernel
+    /// args — changing them requires no recompilation).
+    pub coeffs: Vec<f32>,
+    /// Tile shape used for every pass.
+    pub tile: Vec<usize>,
+    /// Steps per pass; sums to `iterations`.
+    pub chunks: Vec<usize>,
+}
+
+impl Plan {
+    /// Number of grid passes.
+    pub fn passes(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Halo width needed by the largest chunk.
+    pub fn max_halo(&self) -> usize {
+        let rad = self.stencil.def().radius;
+        self.chunks.iter().copied().max().unwrap_or(0) * rad
+    }
+
+    /// Tile spec for a chunk of `steps`.
+    pub fn tile_spec(&self, steps: usize) -> TileSpec {
+        TileSpec::new(self.stencil, &self.tile, steps)
+    }
+
+    /// Total cell updates the plan performs (useful work only).
+    pub fn cell_updates(&self) -> u64 {
+        self.grid_dims.iter().product::<usize>() as u64 * self.iterations as u64
+    }
+}
+
+/// Builder with sensible defaults matching the shipped artifact set.
+#[derive(Debug, Clone)]
+pub struct PlanBuilder {
+    stencil: StencilKind,
+    grid_dims: Option<Vec<usize>>,
+    iterations: usize,
+    coeffs: Option<Vec<f32>>,
+    tile: Option<Vec<usize>>,
+    step_sizes: Vec<usize>,
+}
+
+impl PlanBuilder {
+    pub fn new(stencil: StencilKind) -> PlanBuilder {
+        PlanBuilder {
+            stencil,
+            grid_dims: None,
+            iterations: 1,
+            coeffs: None,
+            tile: None,
+            // Default artifact step counts (see aot.py VARIANTS).
+            step_sizes: vec![4, 2, 1],
+        }
+    }
+
+    pub fn grid_dims(mut self, dims: Vec<usize>) -> Self {
+        self.grid_dims = Some(dims);
+        self
+    }
+
+    pub fn iterations(mut self, iters: usize) -> Self {
+        self.iterations = iters;
+        self
+    }
+
+    pub fn coeffs(mut self, coeffs: Vec<f32>) -> Self {
+        self.coeffs = Some(coeffs);
+        self
+    }
+
+    pub fn tile(mut self, tile: Vec<usize>) -> Self {
+        self.tile = Some(tile);
+        self
+    }
+
+    /// Restrict the chunk step sizes (e.g. what an executor's artifact set
+    /// provides). Must include enough granularity to express any count —
+    /// in practice, contain 1.
+    pub fn step_sizes(mut self, sizes: Vec<usize>) -> Self {
+        self.step_sizes = sizes;
+        self
+    }
+
+    /// Derive tile shape + step sizes from an executor's advertised
+    /// variants. Prefers the tile with the richest step granularity (it
+    /// must be able to schedule *any* iteration count, so a step-1 variant
+    /// beats a bigger tile without one), then the largest tile.
+    pub fn for_executor<E: Executor + ?Sized>(mut self, exec: &E) -> Self {
+        let variants = exec.variants(self.stencil);
+        if variants.is_empty() {
+            return self; // host executor: keep defaults
+        }
+        let best_tile = variants
+            .iter()
+            .max_by_key(|v| {
+                let steps: Vec<usize> = variants
+                    .iter()
+                    .filter(|w| w.tile == v.tile)
+                    .map(|w| w.steps)
+                    .collect();
+                (steps.contains(&1), steps.len(), v.cells())
+            })
+            .map(|v| v.tile.clone())
+            .unwrap();
+        let mut steps: Vec<usize> = variants
+            .iter()
+            .filter(|v| v.tile == best_tile)
+            .map(|v| v.steps)
+            .collect();
+        steps.sort_unstable();
+        steps.dedup();
+        steps.reverse();
+        self.tile = Some(best_tile);
+        self.step_sizes = steps;
+        self
+    }
+
+    pub fn build(self) -> Result<Plan> {
+        let stencil = self.stencil;
+        let def = stencil.def();
+        let ndim = stencil.ndim();
+        let Some(grid_dims) = self.grid_dims else {
+            bail!("grid_dims is required");
+        };
+        ensure!(grid_dims.len() == ndim, "grid dims must be {ndim}-D");
+        ensure!(grid_dims.iter().all(|&d| d > 0), "grid dims must be positive");
+        ensure!(self.iterations > 0, "iterations must be positive");
+        let coeffs = self.coeffs.unwrap_or_else(|| def.default_coeffs.to_vec());
+        ensure!(
+            coeffs.len() == def.coeff_len,
+            "need {} coefficients, got {}",
+            def.coeff_len,
+            coeffs.len()
+        );
+        let tile = self.tile.unwrap_or_else(|| match ndim {
+            2 => vec![64, 64],
+            _ => vec![16, 16, 16],
+        });
+        ensure!(tile.len() == ndim, "tile must be {ndim}-D");
+        for (t, d) in tile.iter().zip(&grid_dims) {
+            ensure!(
+                t <= d,
+                "tile dim {t} exceeds grid dim {d}: edge tiles must pin to the \
+                 grid border (see DimBlocking::tile_origin); use a smaller tile"
+            );
+        }
+        ensure!(!self.step_sizes.is_empty(), "step_sizes must not be empty");
+        let mut sizes = self.step_sizes.clone();
+        sizes.sort_unstable();
+        sizes.reverse();
+        // Greedy chunking; require granularity to land exactly.
+        let min_tile = *tile.iter().min().unwrap();
+        let rad = def.radius;
+        let mut chunks = Vec::new();
+        let mut left = self.iterations;
+        while left > 0 {
+            let step = sizes
+                .iter()
+                .copied()
+                // the chunk's halo must leave a non-empty compute block
+                .find(|&s| s <= left && min_tile > 2 * s * rad);
+            let Some(step) = step else {
+                bail!(
+                    "cannot schedule {left} remaining iterations with step sizes {sizes:?} \
+                     and tile {tile:?} (halo would swallow the tile)"
+                );
+            };
+            chunks.push(step);
+            left -= step;
+        }
+        Ok(Plan { stencil, grid_dims, iterations: self.iterations, coeffs, tile, chunks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostExecutor;
+
+    #[test]
+    fn default_plan_diffusion2d() {
+        let p = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![128, 128])
+            .iterations(11)
+            .build()
+            .unwrap();
+        assert_eq!(p.chunks, vec![4, 4, 2, 1]);
+        assert_eq!(p.chunks.iter().sum::<usize>(), 11);
+        assert_eq!(p.tile, vec![64, 64]);
+        assert_eq!(p.max_halo(), 4);
+    }
+
+    #[test]
+    fn chunk_schedule_always_sums_to_iterations() {
+        for iters in 1..50 {
+            let p = PlanBuilder::new(StencilKind::Diffusion3D)
+                .grid_dims(vec![40, 40, 40])
+                .iterations(iters)
+                .step_sizes(vec![2, 1])
+                .build()
+                .unwrap();
+            assert_eq!(p.chunks.iter().sum::<usize>(), iters, "iters={iters}");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_coeff_count() {
+        let err = PlanBuilder::new(StencilKind::Hotspot2D)
+            .grid_dims(vec![64, 64])
+            .coeffs(vec![0.1, 0.2])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("coefficients"));
+    }
+
+    #[test]
+    fn rejects_unschedulable() {
+        // tile 8 with step 8 => halo 8, 2*halo = 16 > 8.
+        let err = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .iterations(8)
+            .tile(vec![8, 8])
+            .step_sizes(vec![8])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("cannot schedule"), "{err}");
+    }
+
+    #[test]
+    fn for_executor_keeps_defaults_on_host() {
+        let p = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![100, 100])
+            .iterations(4)
+            .for_executor(&HostExecutor::new())
+            .build()
+            .unwrap();
+        assert_eq!(p.tile, vec![64, 64]);
+    }
+
+    #[test]
+    fn dims_rank_checked() {
+        assert!(PlanBuilder::new(StencilKind::Diffusion3D)
+            .grid_dims(vec![64, 64])
+            .build()
+            .is_err());
+    }
+}

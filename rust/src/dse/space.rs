@@ -1,0 +1,191 @@
+//! Configuration-space enumeration under the §5.3 restrictions.
+
+use crate::model::Params;
+use crate::simulator::area::area_report;
+use crate::simulator::device::Device;
+use crate::stencil::StencilKind;
+
+/// Bounds of the enumeration (defaults cover the paper's Table 4 space).
+#[derive(Debug, Clone)]
+pub struct SearchLimits {
+    /// Power-of-two block sizes to consider, 2D.
+    pub bsizes_2d: Vec<usize>,
+    /// Power-of-two block sizes to consider, 3D (square blocks, §5.3).
+    pub bsizes_3d: Vec<usize>,
+    /// par_vec candidates (powers of two, §5.3).
+    pub par_vecs: Vec<usize>,
+    /// Largest par_time examined.
+    pub max_par_time: usize,
+    /// Only multiples of four for par_time (§5.3 alignment preference);
+    /// when false, 1/2/6-style values are admitted too (used by the
+    /// padding ablation and to reproduce the paper's par_time = 5/6 rows).
+    pub par_time_multiple_of_4: bool,
+}
+
+impl Default for SearchLimits {
+    fn default() -> Self {
+        SearchLimits {
+            bsizes_2d: vec![1024, 2048, 4096, 8192],
+            bsizes_3d: vec![64, 128, 256, 512],
+            par_vecs: vec![1, 2, 4, 8, 16, 32],
+            max_par_time: 96,
+            par_time_multiple_of_4: true,
+        }
+    }
+}
+
+/// Enumerate all §5.3-legal configurations that pass the quick feasibility
+/// screens (geometry, DSP/BRAM/logic fit per the area model).
+pub fn enumerate_configs(
+    stencil: StencilKind,
+    dev: &Device,
+    dims: &[usize],
+    iters: usize,
+    limits: &SearchLimits,
+) -> Vec<Params> {
+    let def = stencil.def();
+    let ndim = stencil.ndim();
+    let bsizes = if ndim == 2 { &limits.bsizes_2d } else { &limits.bsizes_3d };
+    let mut out = Vec::new();
+    for &bsize in bsizes {
+        for &par_vec in &limits.par_vecs {
+            // §5.3: bsize_x must be divisible by par_vec.
+            if bsize % par_vec != 0 {
+                continue;
+            }
+            let times: Vec<usize> = if limits.par_time_multiple_of_4 {
+                (1..=limits.max_par_time / 4).map(|k| 4 * k).collect()
+            } else {
+                (1..=limits.max_par_time).collect()
+            };
+            for par_time in times {
+                let halo = def.radius * par_time;
+                if bsize <= 2 * halo {
+                    continue;
+                }
+                // Fit screen via the area model (the paper's use of the
+                // AOC area report before committing to P&R).
+                let area = area_report(def, dev, ndim, bsize, bsize, par_vec, par_time);
+                if !area.fits() {
+                    continue;
+                }
+                let p = Params {
+                    stencil,
+                    par_vec,
+                    par_time,
+                    bsize_x: bsize,
+                    bsize_y: bsize,
+                    dims: dims.to_vec(),
+                    iters,
+                    // nominal pre-P&R clock for model ranking; the board
+                    // sim replaces this with the achieved value
+                    fmax_mhz: 300.0,
+                };
+                if p.is_feasible() {
+                    out.push(p);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::device::DeviceKind;
+    use crate::util::prop::{forall, Rng};
+
+    #[test]
+    fn enumerates_nonempty_for_all_stencils() {
+        for kind in StencilKind::ALL {
+            let dims = if kind.ndim() == 2 { vec![16096, 16096] } else { vec![696, 696, 696] };
+            let cfgs = enumerate_configs(
+                kind,
+                Device::get(DeviceKind::Arria10),
+                &dims,
+                1000,
+                &SearchLimits::default(),
+            );
+            assert!(!cfgs.is_empty(), "{kind} produced no configs");
+        }
+    }
+
+    #[test]
+    fn all_configs_respect_restrictions() {
+        let cfgs = enumerate_configs(
+            StencilKind::Diffusion2D,
+            Device::get(DeviceKind::StratixV),
+            &[16096, 16096],
+            1000,
+            &SearchLimits::default(),
+        );
+        for c in &cfgs {
+            assert!(c.bsize_x.is_power_of_two());
+            assert!(c.par_vec.is_power_of_two());
+            assert_eq!(c.bsize_x % c.par_vec, 0);
+            assert_eq!(c.par_time % 4, 0);
+            assert!(c.is_feasible());
+        }
+    }
+
+    #[test]
+    fn paper_best_configs_are_in_the_space() {
+        // Table 4's best rows must be reachable by the enumeration.
+        let a10 = Device::get(DeviceKind::Arria10);
+        let cfgs = enumerate_configs(
+            StencilKind::Diffusion2D,
+            a10,
+            &[16096, 16096],
+            1000,
+            &SearchLimits::default(),
+        );
+        assert!(
+            cfgs.iter().any(|c| c.bsize_x == 4096 && c.par_vec == 8 && c.par_time == 36),
+            "A10 D2D 4096/8/36 missing from space"
+        );
+        let cfgs3 = enumerate_configs(
+            StencilKind::Diffusion3D,
+            a10,
+            &[696, 696, 696],
+            1000,
+            &SearchLimits::default(),
+        );
+        assert!(
+            cfgs3.iter().any(|c| c.bsize_x == 256 && c.par_vec == 16 && c.par_time == 12),
+            "A10 D3D 256/16/12 missing from space"
+        );
+    }
+
+    #[test]
+    fn prop_enumeration_fits_device() {
+        forall(
+            "every enumerated config fits its device",
+            8,
+            |r: &mut Rng| {
+                let kind = *r.pick(&StencilKind::ALL);
+                let dev = *r.pick(&[DeviceKind::StratixV, DeviceKind::Arria10]);
+                (kind, dev)
+            },
+            |&(kind, devk)| {
+                let dims = if kind.ndim() == 2 { vec![8192, 8192] } else { vec![512, 512, 512] };
+                let dev = Device::get(devk);
+                for c in enumerate_configs(kind, dev, &dims, 100, &SearchLimits::default()) {
+                    let area = area_report(
+                        c.def(),
+                        dev,
+                        kind.ndim(),
+                        c.bsize_x,
+                        c.bsize_y,
+                        c.par_vec,
+                        c.par_time,
+                    );
+                    if !area.fits() {
+                        return Err(format!("config {c:?} does not fit"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,388 @@
+//! `fstencil` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   run       execute a stencil workload through the three-layer stack
+//!   verify    run every execution path against the scalar oracle
+//!   dse       §5.3 design-space exploration on the board simulator
+//!   simulate  one configuration on the board simulator (a Table 4 cell)
+//!   table2..table6, fig6
+//!             regenerate the paper's tables/figure
+//!   baseline  temporal-only prior-work comparison (input-size caps)
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use fstencil::baseline::{max_supported_width, temporal_only_estimate};
+use fstencil::coordinator::{Coordinator, FusedPipeline, PlanBuilder};
+use fstencil::dse::Tuner;
+use fstencil::model::Params;
+use fstencil::report;
+use fstencil::runtime::{Executor, HostExecutor, PjrtExecutor};
+use fstencil::simulator::{BoardSim, Device, DeviceKind};
+use fstencil::stencil::{reference, Grid, StencilKind};
+use fstencil::util::cli::Args;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("dse") => cmd_dse(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("table2") => {
+            println!("{}", report::table2());
+            Ok(())
+        }
+        Some("table3") => {
+            println!("{}", report::table3());
+            Ok(())
+        }
+        Some("table4") => {
+            println!("{}", report::table4());
+            Ok(())
+        }
+        Some("table5") => {
+            println!("{}", report::table5());
+            Ok(())
+        }
+        Some("table6") => {
+            println!("{}", report::table6());
+            Ok(())
+        }
+        Some("fig6") => {
+            println!("{}", report::fig6());
+            Ok(())
+        }
+        Some("baseline") => cmd_baseline(&args),
+        Some("hlostats") => cmd_hlostats(&args),
+        Some("dram") => cmd_dram(&args),
+        _ => {
+            usage();
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "fstencil — combined spatial/temporal blocking stencil framework (FPGA'18 reproduction)
+
+USAGE: fstencil <subcommand> [options]
+
+  run       --stencil <name> --dims H,W[,D] --iters N [--tile a,b] [--backend pjrt|host]
+            [--pipeline] [--check]
+  verify    [--backend pjrt|host]
+  dse       --stencil <name> --device <sv|arria10> [--iters N]
+  simulate  --stencil <name> --device <dev> --bsize B --par-vec V --par-time T
+            [--dim D] [--iters N] [--no-padding]
+  table2|table3|table4|table5|table6|fig6
+  baseline  --stencil <name> --device <dev> [--par-vec V] [--par-time T]
+  hlostats  [--artifacts DIR]   per-artifact HLO instruction histograms
+  dram      --stencil <name> [--bsize B] [--par-vec V] [--par-time T]
+            DDR bank-state analysis of the blocked access pattern
+
+stencils: diffusion2d diffusion3d hotspot2d hotspot3d
+devices:  sv arria10 gx2800 mx2100 (simulator), k40c 980ti p100 v100 (GPU model)"
+    );
+}
+
+fn parse_stencil(args: &Args) -> anyhow::Result<StencilKind> {
+    let name = args.opt("stencil").unwrap_or("diffusion2d");
+    StencilKind::parse(name).ok_or_else(|| anyhow::anyhow!("unknown stencil {name}"))
+}
+
+fn parse_device(args: &Args) -> anyhow::Result<DeviceKind> {
+    let name = args.opt("device").unwrap_or("arria10");
+    DeviceKind::parse(name).ok_or_else(|| anyhow::anyhow!("unknown device {name}"))
+}
+
+fn make_executor(args: &Args) -> anyhow::Result<Box<dyn Executor>> {
+    match args.opt_or("backend", "auto") {
+        "host" => Ok(Box::new(HostExecutor::new())),
+        "pjrt" => Ok(Box::new(PjrtExecutor::load_default()?)),
+        "auto" => {
+            if Path::new("artifacts/manifest.json").exists() {
+                Ok(Box::new(PjrtExecutor::load_default()?))
+            } else {
+                eprintln!("note: artifacts/ missing, falling back to host backend");
+                Ok(Box::new(HostExecutor::new()))
+            }
+        }
+        other => anyhow::bail!("unknown backend {other}"),
+    }
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let kind = parse_stencil(args)?;
+    let dims = args
+        .opt_usize_list("dims")
+        .unwrap_or_else(|| if kind.ndim() == 2 { vec![512, 512] } else { vec![64, 64, 64] });
+    let iters = args.opt_usize("iters").unwrap_or(16);
+    let exec = make_executor(args)?;
+    let mut builder = PlanBuilder::new(kind)
+        .grid_dims(dims.clone())
+        .iterations(iters)
+        .for_executor(exec.as_ref());
+    if let Some(tile) = args.opt_usize_list("tile") {
+        builder = builder.tile(tile);
+    }
+    let plan = builder.build()?;
+
+    let mut grid = if let Some(path) = args.opt("input") {
+        let g = fstencil::stencil::io::load(Path::new(path))?;
+        anyhow::ensure!(g.dims() == dims, "--input grid dims {:?} != --dims {dims:?}", g.dims());
+        g
+    } else {
+        let mut g = match dims.as_slice() {
+            [h, w] => Grid::new2d(*h, *w),
+            [d, h, w] => Grid::new3d(*d, *h, *w),
+            _ => anyhow::bail!("dims must be 2 or 3 long"),
+        };
+        g.fill_gaussian(300.0, 50.0, 0.1);
+        g
+    };
+    let power = kind.def().has_power.then(|| {
+        let mut p = grid.clone();
+        p.fill_random(7, 0.0, 0.5);
+        p
+    });
+
+    let check = args.flag("check");
+    let before = grid.clone();
+    let report = if args.flag("pipeline") {
+        // pipeline requires a Sync executor — host only
+        FusedPipeline::new(plan.clone()).run(&HostExecutor::new(), &mut grid, power.as_ref())?
+    } else {
+        Coordinator::new(plan.clone()).run(exec.as_ref(), &mut grid, power.as_ref())?
+    };
+    println!(
+        "ran {} {:?} x{} iters on {}: {} tiles, {} passes, {:.1} Mcell/s, redundancy {:.3}, {:.3}s",
+        kind,
+        dims,
+        iters,
+        report.backend,
+        report.tiles_executed,
+        report.passes,
+        report.mcells_per_sec(),
+        report.redundancy(),
+        report.elapsed.as_secs_f64(),
+    );
+    if check {
+        let want = reference::run(kind, &before, power.as_ref(), &plan.coeffs, iters);
+        let err = grid.max_abs_diff(&want);
+        println!("verification vs scalar oracle: max |err| = {err:.3e}");
+        anyhow::ensure!(err < 1e-3, "verification FAILED");
+        println!("verification OK");
+    }
+    if let Some(path) = args.opt("output") {
+        fstencil::stencil::io::save(&grid, Path::new(path))?;
+        println!("wrote result grid to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_hlostats(args: &Args) -> anyhow::Result<()> {
+    use fstencil::runtime::{hlostats, Manifest};
+    let dir = Path::new(args.opt_or("artifacts", "artifacts"));
+    let manifest = Manifest::load(dir)?;
+    println!(
+        "{:<28} {:>6} {:>6} {:>6} {:>7} {:>8}",
+        "artifact", "instrs", "arith", "while", "fusions", "max-elem"
+    );
+    for v in &manifest.variants {
+        let stats = hlostats::stats_for_file(&manifest.hlo_path(v))?;
+        println!(
+            "{:<28} {:>6} {:>6} {:>6} {:>7} {:>8}",
+            v.spec.artifact_name(),
+            stats.instructions,
+            stats.arith_ops(),
+            stats.while_loops,
+            stats.fusions,
+            stats.max_operand_elems
+        );
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    let exec = make_executor(args)?;
+    println!("verifying backend '{}' against the scalar oracle", exec.backend_name());
+    let mut failures = 0;
+    for kind in StencilKind::ALL {
+        let dims = if kind.ndim() == 2 { vec![96, 96] } else { vec![24, 24, 24] };
+        let iters = 6;
+        let mut grid =
+            if kind.ndim() == 2 { Grid::new2d(96, 96) } else { Grid::new3d(24, 24, 24) };
+        grid.fill_random(11, 0.0, 1.0);
+        let power = kind.def().has_power.then(|| {
+            let mut p = grid.clone();
+            p.fill_random(23, 0.0, 0.25);
+            p
+        });
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(dims)
+            .iterations(iters)
+            .for_executor(exec.as_ref())
+            .build()?;
+        let want = reference::run(kind, &grid, power.as_ref(), &plan.coeffs, iters);
+        Coordinator::new(plan).run(exec.as_ref(), &mut grid, power.as_ref())?;
+        let err = grid.max_abs_diff(&want);
+        let ok = err < 1e-3;
+        println!("  {kind:<12} max|err| = {err:.3e}  {}", if ok { "OK" } else { "FAIL" });
+        if !ok {
+            failures += 1;
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures} stencil(s) failed verification");
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> anyhow::Result<()> {
+    let kind = parse_stencil(args)?;
+    let device = parse_device(args)?;
+    let iters = args.opt_usize("iters").unwrap_or(1000);
+    let dims = if kind.ndim() == 2 { vec![16096, 16096] } else { vec![696, 696, 696] };
+    let tuner = Tuner::new(device);
+    let out = tuner
+        .tune(kind, &dims, iters)
+        .ok_or_else(|| anyhow::anyhow!("no feasible configuration"))?;
+    println!("candidates ({} after pruning):", out.candidates.len());
+    for c in &out.candidates {
+        println!(
+            "  bsize {:>5} par_vec {:>3} par_time {:>3}  model {:>8.1} GB/s",
+            c.params.bsize_x, c.params.par_vec, c.params.par_time, c.predicted_gbps
+        );
+    }
+    let t = &out.tuned;
+    println!(
+        "\nbest (after seed sweep): bsize {} par_vec {} par_time {} @ {:.1} MHz -> {:.1} GB/s \
+         ({:.1} GFLOP/s), accuracy {:.0}%, power {:.1} W",
+        t.params.bsize_x,
+        t.params.par_vec,
+        t.params.par_time,
+        t.params.fmax_mhz,
+        t.measured_gbps,
+        t.measured_gflops,
+        t.model_accuracy * 100.0,
+        t.power_w
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let kind = parse_stencil(args)?;
+    let device = parse_device(args)?;
+    let bsize = args.opt_usize("bsize").unwrap_or(if kind.ndim() == 2 { 4096 } else { 256 });
+    let par_vec = args.opt_usize("par-vec").unwrap_or(8);
+    let par_time = args.opt_usize("par-time").unwrap_or(8);
+    let iters = args.opt_usize("iters").unwrap_or(1000);
+    let dim = args.opt_usize("dim").unwrap_or(if kind.ndim() == 2 { 16096 } else { 696 });
+    let dims = vec![dim; kind.ndim()];
+    let mut sim = BoardSim::new(device);
+    if args.flag("no-padding") {
+        sim.opts.padded = false;
+    }
+    let p = Params {
+        stencil: kind,
+        par_vec,
+        par_time,
+        bsize_x: bsize,
+        bsize_y: bsize,
+        dims,
+        iters,
+        fmax_mhz: 0.0,
+    };
+    let r = sim.simulate(&p).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "{kind} on {}: bsize {bsize} par_vec {par_vec} par_time {par_time} dim {dim} iters {iters}",
+        Device::get(device).name
+    );
+    println!(
+        "  fmax {:.1} MHz | logic {:.0}% mem {:.0}%|{:.0}% dsp {:.0}% | power {:.1} W",
+        r.params.fmax_mhz,
+        r.area.logic_frac * 100.0,
+        r.area.bram_bits_frac * 100.0,
+        r.area.bram_blocks_frac * 100.0,
+        r.area.dsp_frac * 100.0,
+        r.power_w
+    );
+    println!(
+        "  estimated {:.1} GB/s | measured {:.1} GB/s = {:.1} GFLOP/s = {:.2} GCell/s | accuracy {:.0}%",
+        r.estimate.throughput_gbps,
+        r.measured_gbps,
+        r.measured_gflops,
+        r.measured_gcells,
+        r.model_accuracy * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_dram(args: &Args) -> anyhow::Result<()> {
+    use fstencil::blocking::padding::pad_words;
+    use fstencil::simulator::dram::{block_row_trace, Ddr, DdrParams};
+    let kind = parse_stencil(args)?;
+    let def = kind.def();
+    let bsize = args.opt_usize("bsize").unwrap_or(4096);
+    let par_vec = args.opt_usize("par-vec").unwrap_or(8);
+    let par_time = args.opt_usize("par-time").unwrap_or(8);
+    let halo = def.radius * par_time;
+    anyhow::ensure!(bsize > 2 * halo, "halo swallows block");
+    let csize = bsize - 2 * halo;
+    println!(
+        "DDR bank-state analysis: {kind} bsize {bsize} par_vec {par_vec} par_time {par_time}"
+    );
+    println!("{:<10} {:>10} {:>12} {:>10}", "padding", "hit rate", "cycles", "eff");
+    for padded in [true, false] {
+        let pad = if padded { pad_words(def.radius, par_time) } else { 0 };
+        let mut ddr = Ddr::new(DdrParams::default());
+        let mut useful = 0u64;
+        for row in 0..256u64 {
+            let base = pad + row as usize * 4 * bsize; // rows far apart
+            let t = block_row_trace(base, bsize, base + halo, csize, par_vec);
+            useful += t.iter().map(|a| a.len as u64).sum::<u64>();
+            ddr.run_trace(t);
+        }
+        let ideal = useful / 64;
+        println!(
+            "{:<10} {:>9.1}% {:>12} {:>9.2}",
+            if padded { "padded" } else { "unpadded" },
+            ddr.row_hit_rate() * 100.0,
+            ddr.total_cycles(),
+            ideal as f64 / ddr.total_cycles() as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> anyhow::Result<()> {
+    let kind = parse_stencil(args)?;
+    let device = parse_device(args)?;
+    let dev = Device::get(device);
+    let par_vec = args.opt_usize("par-vec").unwrap_or(8);
+    let par_time = args.opt_usize("par-time").unwrap_or(8);
+    let w = max_supported_width(kind, dev, par_vec, par_time);
+    println!(
+        "temporal-only prior-work baseline for {kind} on {} (par_vec {par_vec}, par_time {par_time}):",
+        dev.name
+    );
+    println!("  max supported width: {w} cells ({}D)", kind.ndim());
+    if w > 0 {
+        let dims = vec![w; kind.ndim()];
+        let r = temporal_only_estimate(kind, dev, &dims, par_vec, par_time, 1000, 300.0);
+        println!(
+            "  at that size: {:.1} GB/s = {:.1} GFLOP/s (no redundancy, linear par_time scaling)",
+            r.throughput_gbps, r.gflops
+        );
+    }
+    println!(
+        "  combined blocking (this work) supports UNRESTRICTED dims — e.g. 16384+ cells wide"
+    );
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! The paper's analytic performance model (§4) and the Stratix 10
+//! projection built on it (§6.3).
+//!
+//! The model assumes stencil computation is external-memory bound and that
+//! the deep pipeline hides memory latency; it predicts run time from the
+//! exact count of external-memory accesses (including halo redundancy and
+//! out-of-bound suppression) and an estimated memory throughput that
+//! scales with `f_max × par_vec` up to the board's peak (Eq 3).
+
+pub mod perf;
+pub mod projection;
+
+pub use perf::{ModelEstimate, Params, PerfModel};
+pub use projection::{project_stratix10, Projection, ProjectionRow};

@@ -1,0 +1,291 @@
+//! Eqs 3–9: run-time and throughput prediction.
+
+use crate::blocking::geometry::{halo_width, BlockGeometry};
+use crate::stencil::{StencilDef, StencilKind};
+use crate::util::bytes::{CELL_BYTES, GB};
+
+/// Accelerator configuration parameters (Table 1). One `Params` describes
+/// one candidate design point for one stencil on one input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Params {
+    pub stencil: StencilKind,
+    /// Compute vector width (`par_vec`): cells updated per clock per PE.
+    pub par_vec: usize,
+    /// Parallel time-steps (`par_time`): number of chained PEs.
+    pub par_time: usize,
+    /// Spatial block size along x (`bsize_x`).
+    pub bsize_x: usize,
+    /// Spatial block size along y — 3D stencils only (`bsize_y`); ignored
+    /// for 2D. The paper uses square blocks (`bsize_y == bsize_x`).
+    pub bsize_y: usize,
+    /// Input extent per dimension, `[ny, nx]` or `[nz, ny, nx]`.
+    pub dims: Vec<usize>,
+    /// Number of time-steps to run (`iter`).
+    pub iters: usize,
+    /// Kernel operating frequency in MHz (`f_max`).
+    pub fmax_mhz: f64,
+}
+
+impl Params {
+    /// Convenience constructor with square 3D blocks.
+    pub fn new(
+        stencil: StencilKind,
+        par_vec: usize,
+        par_time: usize,
+        bsize: usize,
+        dims: &[usize],
+        iters: usize,
+        fmax_mhz: f64,
+    ) -> Params {
+        Params {
+            stencil,
+            par_vec,
+            par_time,
+            bsize_x: bsize,
+            bsize_y: bsize,
+            dims: dims.to_vec(),
+            iters,
+            fmax_mhz,
+        }
+    }
+
+    pub fn def(&self) -> &'static StencilDef {
+        self.stencil.def()
+    }
+
+    /// Halo width (Eq 2).
+    pub fn halo(&self) -> usize {
+        halo_width(self.def().radius, self.par_time)
+    }
+
+    /// The blocking geometry this configuration induces (paper scheme:
+    /// 1D blocking for 2D stencils, 2D blocking for 3D).
+    pub fn geometry(&self) -> BlockGeometry {
+        match self.stencil.ndim() {
+            2 => BlockGeometry::paper_2d(&self.dims, self.bsize_x, self.halo()),
+            _ => BlockGeometry::paper_3d(&self.dims, self.bsize_x, self.bsize_y, self.halo()),
+        }
+    }
+
+    /// Total cells in the input grid (`size_input`).
+    pub fn size_input(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Geometry feasibility: the halo must not swallow the block.
+    pub fn is_feasible(&self) -> bool {
+        let h = 2 * self.halo();
+        match self.stencil.ndim() {
+            2 => self.bsize_x > h,
+            _ => self.bsize_x > h && self.bsize_y > h,
+        }
+    }
+}
+
+/// What the analytic model predicts for a configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelEstimate {
+    /// Estimated external-memory throughput (Eq 3), GB/s.
+    pub th_mem_gbps: f64,
+    /// External-memory reads per pass, in cells (Eq 7 generalized).
+    pub t_read: u64,
+    /// External-memory writes per pass, in cells.
+    pub t_write: u64,
+    /// Grid passes: `ceil(iter / par_time)` (Eq 8).
+    pub passes: u64,
+    /// Predicted run time, seconds (Eq 8).
+    pub run_time_s: f64,
+    /// Useful-traffic throughput, GB/s (Eq 9 — the paper's headline GB/s).
+    pub throughput_gbps: f64,
+    /// Compute performance, GFLOP/s (throughput ÷ bytes-per-FLOP).
+    pub gflops: f64,
+    /// Cell-update rate, Gcell/s.
+    pub gcells: f64,
+}
+
+/// The analytic performance model, parameterized by the board's peak
+/// external-memory throughput (`th_max`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfModel {
+    /// Board peak memory throughput, GB/s (Table 3 column).
+    pub th_max_gbps: f64,
+}
+
+impl PerfModel {
+    pub fn new(th_max_gbps: f64) -> PerfModel {
+        PerfModel { th_max_gbps }
+    }
+
+    /// Eq 3: memory throughput demanded by the pipeline, capped at peak.
+    /// Demand scales with f_max × par_vec × cell size × accesses-per-cell.
+    pub fn th_mem(&self, p: &Params) -> f64 {
+        let demand = p.fmax_mhz * 1e6
+            * p.par_vec as f64
+            * CELL_BYTES as f64
+            * p.def().num_acc() as f64
+            / GB;
+        demand.min(self.th_max_gbps)
+    }
+
+    /// Full model evaluation (Eqs 3–9).
+    pub fn estimate(&self, p: &Params) -> ModelEstimate {
+        assert!(p.is_feasible(), "infeasible config: {p:?}");
+        let def = p.def();
+        let geom = p.geometry();
+        // Reads: in-bounds traversed cells × reads per cell update. The
+        // implementation suppresses out-of-bound reads (Eq 7's subtraction)
+        // but does re-read overlap/halo cells.
+        let t_read = (geom.t_cell_in_bounds() * def.num_read) as u64;
+        // Writes: only compute-block interiors are written (halo masking),
+        // so exactly the input size per pass.
+        let t_write = (p.size_input() * def.num_write) as u64;
+        let th_mem = self.th_mem(p);
+        let passes = (p.iters as u64).div_ceil(p.par_time as u64);
+        // Eq 8
+        let bytes_per_pass = (t_read + t_write) as f64 * CELL_BYTES as f64;
+        let run_time_s = passes as f64 * bytes_per_pass / (GB * th_mem);
+        // Eq 9: useful traffic per the stencil's bytes-per-cell-update.
+        let useful_bytes =
+            p.size_input() as f64 * p.iters as f64 * def.bytes_pcu as f64;
+        let throughput_gbps = useful_bytes / run_time_s / GB;
+        ModelEstimate {
+            th_mem_gbps: th_mem,
+            t_read,
+            t_write,
+            passes,
+            run_time_s,
+            throughput_gbps,
+            gflops: def.gflops_from_gbps(throughput_gbps),
+            gcells: def.gcells_from_gbps(throughput_gbps),
+        }
+    }
+
+    /// Roofline throughput without temporal blocking (par_time = 1, no
+    /// redundancy): peak memory bandwidth × useful-bytes ratio. Used for
+    /// the Fig 6 roofline series.
+    pub fn roofline_gflops(&self, kind: StencilKind) -> f64 {
+        let def = kind.def();
+        // one pass per iteration; all traffic useful
+        let gbps = self.th_max_gbps * def.bytes_pcu as f64
+            / (def.num_acc() as f64 * CELL_BYTES as f64);
+        def.gflops_from_gbps(gbps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 4's Diffusion 2D / Arria 10 best row: bsize 4096, par_vec 8,
+    /// par_time 36, dim 16096, f_max 343.76 MHz -> estimated 780.5 GB/s.
+    #[test]
+    fn paper_table4_diffusion2d_a10_estimate() {
+        let p = Params::new(
+            StencilKind::Diffusion2D,
+            8,
+            36,
+            4096,
+            &[16096, 16096],
+            1000,
+            343.76,
+        );
+        let m = PerfModel::new(34.1).estimate(&p);
+        assert!(
+            (m.throughput_gbps - 780.5).abs() < 8.0,
+            "estimated {} GB/s, paper says 780.5",
+            m.throughput_gbps
+        );
+        assert_eq!(m.passes, 28);
+        // GFLOP/s consistency: measured 673.959 GB/s -> 758.204 GFLOP/s
+        let def = StencilKind::Diffusion2D.def();
+        assert!((def.gflops_from_gbps(673.959) - 758.204).abs() < 0.5);
+    }
+
+    /// Table 4's Diffusion 2D / Stratix V rows: the estimate must
+    /// reproduce ~107.9 / 111.8 / 114.7 GB/s at the paper's f_max values.
+    #[test]
+    fn paper_table4_diffusion2d_sv_estimates() {
+        let cases = [
+            (8usize, 6usize, 16336usize, 281.76, 107.861),
+            (4, 12, 16288, 294.20, 111.829),
+            (2, 24, 16192, 302.48, 114.720),
+        ];
+        let model = PerfModel::new(25.6);
+        for (par_vec, par_time, dim, fmax, expect) in cases {
+            let p = Params::new(
+                StencilKind::Diffusion2D,
+                par_vec,
+                par_time,
+                4096,
+                &[dim, dim],
+                1000,
+                fmax,
+            );
+            let m = model.estimate(&p);
+            assert!(
+                (m.throughput_gbps - expect).abs() / expect < 0.02,
+                "par_vec={par_vec} par_time={par_time}: got {:.2}, paper {expect}",
+                m.throughput_gbps
+            );
+        }
+    }
+
+    /// Hotspot has num_acc = 3, so its demand saturates the memory at
+    /// lower par_vec — the effect §6.1 credits for Hotspot's S-V win.
+    #[test]
+    fn hotspot_saturates_earlier() {
+        let model = PerfModel::new(25.6);
+        let d = Params::new(StencilKind::Diffusion2D, 4, 12, 4096, &[16288, 16288], 1000, 280.0);
+        let h = Params::new(StencilKind::Hotspot2D, 4, 12, 4096, &[16288, 16288], 1000, 280.0);
+        assert!(model.th_mem(&h) > model.th_mem(&d));
+    }
+
+    #[test]
+    fn th_mem_caps_at_peak() {
+        let model = PerfModel::new(25.6);
+        let p = Params::new(StencilKind::Diffusion2D, 64, 4, 4096, &[8192, 8192], 100, 300.0);
+        assert_eq!(model.th_mem(&p), 25.6);
+    }
+
+    #[test]
+    fn temporal_blocking_amplifies_throughput() {
+        // Same geometry overheads aside, doubling par_time should nearly
+        // double modeled throughput while memory traffic per pass is flat.
+        let mk = |par_time| {
+            Params::new(StencilKind::Diffusion2D, 4, par_time, 4096, &[16384, 16384], 1024, 300.0)
+        };
+        let model = PerfModel::new(34.1);
+        let t8 = model.estimate(&mk(8)).throughput_gbps;
+        let t16 = model.estimate(&mk(16)).throughput_gbps;
+        let ratio = t16 / t8;
+        assert!(ratio > 1.9 && ratio < 2.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn redundancy_hurts_small_blocks() {
+        let model = PerfModel::new(34.1);
+        let big = Params::new(StencilKind::Diffusion3D, 8, 8, 256, &[720, 720, 720], 1000, 300.0);
+        let small = Params::new(StencilKind::Diffusion3D, 8, 8, 64, &[720, 720, 720], 1000, 300.0);
+        let tb = model.estimate(&big).throughput_gbps;
+        let ts = model.estimate(&small).throughput_gbps;
+        // traffic ratio: (1.138²+1) vs (1.77²+1) per pass => ~1.3×
+        assert!(tb > 1.2 * ts, "big {tb} vs small {ts}");
+    }
+
+    #[test]
+    fn roofline_diffusion3d_values() {
+        // Fig 6 roofline: full-bandwidth, no temporal blocking.
+        // Diffusion 3D: 8 useful bytes / 8 accessed bytes per update,
+        // 13 FLOP / 8 B.
+        let m = PerfModel::new(34.1); // Arria 10
+        let r = m.roofline_gflops(StencilKind::Diffusion3D);
+        assert!((r - 34.1 / 8.0 * 13.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "infeasible")]
+    fn infeasible_config_panics() {
+        let p = Params::new(StencilKind::Diffusion2D, 2, 64, 128, &[1024, 1024], 10, 300.0);
+        PerfModel::new(25.6).estimate(&p);
+    }
+}

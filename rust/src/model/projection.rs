@@ -1,0 +1,252 @@
+//! Stratix 10 performance projection (§6.3, Tables 5–6).
+//!
+//! The paper extrapolates Arria 10 utilization to the announced GX 2800
+//! and MX 2100 parts, assumes a conservative +100 MHz over Arria 10
+//! (450 MHz for 2D, 400 MHz for 3D — HyperFlex does not shorten the
+//! dimension-variable critical path), searches the §5.3-restricted
+//! configuration space with the analytic model, and calibrates the result
+//! by the measured model accuracy: ×80% for 2D, ×60% for 3D stencils.
+
+use crate::simulator::area::area_report;
+use crate::simulator::device::{Device, DeviceKind};
+use crate::stencil::StencilKind;
+
+use super::perf::{Params, PerfModel};
+
+/// Calibration factors from measured Table 4 accuracy (§6.3).
+pub const CALIBRATION_2D: f64 = 0.80;
+pub const CALIBRATION_3D: f64 = 0.60;
+
+/// Projected f_max assumptions (§6.3).
+pub const FMAX_2D_MHZ: f64 = 450.0;
+pub const FMAX_3D_MHZ: f64 = 400.0;
+
+/// Leave a little DSP headroom, as the paper's chosen configs do (97–98%
+/// rather than 100%): demand is capped at 98.5% of the device's columns.
+const DSP_CAP: f64 = 0.985;
+
+/// One row of Table 6.
+#[derive(Debug, Clone)]
+pub struct ProjectionRow {
+    pub device: DeviceKind,
+    pub stencil: StencilKind,
+    pub bsize: usize,
+    pub par_vec: usize,
+    pub par_time: usize,
+    pub fmax_mhz: f64,
+    pub calibration: f64,
+    /// Calibrated performance.
+    pub perf_gbps: f64,
+    pub perf_gflops: f64,
+    /// Used external-memory bandwidth, GB/s and fraction of peak.
+    pub used_bw_gbps: f64,
+    pub used_bw_frac: f64,
+    pub mem_bits_frac: f64,
+    pub mem_blocks_frac: f64,
+    pub dsp_frac: f64,
+}
+
+/// Full projection result.
+#[derive(Debug, Clone)]
+pub struct Projection {
+    pub rows: Vec<ProjectionRow>,
+}
+
+/// Candidate block sizes per dimensionality (§5.3: powers of two; larger
+/// blocks become available with Stratix 10's bigger BRAM).
+fn bsize_candidates(ndim: usize) -> &'static [usize] {
+    if ndim == 2 {
+        &[4096, 8192, 16384]
+    } else {
+        &[128, 256, 512]
+    }
+}
+
+/// par_vec candidates: powers of two (§5.3 — coalesced port widths).
+const PAR_VEC: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+
+/// Project the best configuration of `stencil` on `devkind` for `iters`
+/// time-steps. Returns None when nothing fits (does not happen for the
+/// Table 6 devices).
+pub fn project_best(
+    devkind: DeviceKind,
+    stencil: StencilKind,
+    iters: usize,
+) -> Option<ProjectionRow> {
+    let dev = Device::get(devkind);
+    let def = stencil.def();
+    let ndim = stencil.ndim();
+    let fmax = if ndim == 2 { FMAX_2D_MHZ } else { FMAX_3D_MHZ };
+    let model = PerfModel::new(dev.peak_bw_gbps);
+    let dsp_per_cell = crate::simulator::dsp::dsp_per_cell(def, dev.family).max(1);
+    let dsp_budget = (dev.dsps as f64 * DSP_CAP) as usize;
+
+    let mut all: Vec<(f64, ProjectionRow)> = Vec::new();
+    for &bsize in bsize_candidates(ndim) {
+        for &par_vec in &PAR_VEC {
+            if bsize % par_vec != 0 {
+                continue;
+            }
+            // Largest par_time (preferring multiples of 4, §5.3) under the
+            // DSP budget; also sweep smaller values — wider halos may lose
+            // to less temporal parallelism via redundancy.
+            let tmax = dsp_budget / (dsp_per_cell * par_vec);
+            if tmax == 0 {
+                continue;
+            }
+            let mut cands: Vec<usize> = (1..=tmax / 4).map(|k| 4 * k).collect();
+            if cands.is_empty() {
+                cands.push(tmax);
+            }
+            for par_time in cands {
+                let halo = def.radius * par_time;
+                if bsize <= 2 * halo {
+                    continue;
+                }
+                let csize = bsize - 2 * halo;
+                // §5.2: dims chosen as csize multiples, >= ~1 GB inputs.
+                let reps = if ndim == 2 {
+                    (24_000 / csize).max(2)
+                } else {
+                    (600 / csize).max(2)
+                };
+                let dims = vec![csize * reps; ndim];
+                let p = Params {
+                    stencil,
+                    par_vec,
+                    par_time,
+                    bsize_x: bsize,
+                    bsize_y: bsize,
+                    dims,
+                    iters,
+                    fmax_mhz: fmax,
+                };
+                // §6.3 memory rule: overutilized only if BITS exceed 100%.
+                let area = area_report(def, dev, ndim, bsize, bsize, par_vec, par_time);
+                if area.bram_bits_frac > 1.0 {
+                    continue;
+                }
+                let est = model.estimate(&p);
+                let cal = if ndim == 2 { CALIBRATION_2D } else { CALIBRATION_3D };
+                let perf = est.throughput_gbps * cal;
+                all.push((
+                    perf,
+                    ProjectionRow {
+                        device: devkind,
+                        stencil,
+                        bsize,
+                        par_vec,
+                        par_time,
+                        fmax_mhz: fmax,
+                        calibration: cal,
+                        perf_gbps: perf,
+                        perf_gflops: def.gflops_from_gbps(perf),
+                        used_bw_gbps: est.th_mem_gbps,
+                        used_bw_frac: est.th_mem_gbps / dev.peak_bw_gbps,
+                        mem_bits_frac: area.bram_bits_frac,
+                        mem_blocks_frac: area.bram_blocks_frac.min(1.0),
+                        dsp_frac: area.dsp_frac,
+                    },
+                ));
+            }
+        }
+    }
+    // Best predicted performance; near-ties (within 2% — model noise) are
+    // resolved by the paper's §6.1 design rule: 2D stencils spend
+    // resources on temporal parallelism (prefer the highest par_time and
+    // the largest block), 3D stencils on vector width (prefer the fewest
+    // PEs — smaller halos and BRAM, the Table 6 choice).
+    let best_perf = all.iter().map(|(p, _)| *p).fold(f64::MIN, f64::max);
+    all.into_iter()
+        .filter(|(p, _)| *p >= 0.98 * best_perf)
+        .max_by_key(|(_, r)| {
+            if ndim == 2 {
+                (r.par_time as isize, r.bsize as isize)
+            } else {
+                (-(r.par_time as isize), r.bsize as isize)
+            }
+        })
+        .map(|(_, row)| row)
+}
+
+/// Regenerate Table 6: both Stratix 10 devices × all four stencils at
+/// 5000 iterations (the paper's projection setting).
+pub fn project_stratix10(iters: usize) -> Projection {
+    let mut rows = Vec::new();
+    for dev in [DeviceKind::Stratix10Gx2800, DeviceKind::Stratix10Mx2100] {
+        for stencil in StencilKind::ALL {
+            if let Some(r) = project_best(dev, stencil, iters) {
+                rows.push(r);
+            }
+        }
+    }
+    Projection { rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gx2800_diffusion2d_lands_near_paper() {
+        // Table 6: 8192 / 8 / 140 @ 450 MHz -> 3162.7 GB/s, 3558 GFLOP/s,
+        // DSP 97%.
+        let r = project_best(DeviceKind::Stratix10Gx2800, StencilKind::Diffusion2D, 5000).unwrap();
+        assert!(r.perf_gflops > 2800.0, "projected {}", r.perf_gflops);
+        assert!(r.dsp_frac > 0.90, "dsp {}", r.dsp_frac);
+        assert_eq!(r.par_vec, 8);
+        assert!((100..=160).contains(&r.par_time), "par_time {}", r.par_time);
+    }
+
+    #[test]
+    fn headline_claims_hold() {
+        // Abstract: "up to 3.5 TFLOP/s and 1.6 TFLOP/s for 2D and 3D".
+        let p = project_stratix10(5000);
+        let best2d = p
+            .rows
+            .iter()
+            .filter(|r| r.stencil.ndim() == 2)
+            .map(|r| r.perf_gflops)
+            .fold(0.0, f64::max);
+        let best3d = p
+            .rows
+            .iter()
+            .filter(|r| r.stencil.ndim() == 3)
+            .map(|r| r.perf_gflops)
+            .fold(0.0, f64::max);
+        assert!(best2d > 2800.0 && best2d < 4500.0, "2D {best2d}");
+        assert!(best3d > 1100.0 && best3d < 2200.0, "3D {best3d}");
+    }
+
+    #[test]
+    fn mx2100_3d_uses_its_bandwidth() {
+        // §6.3: MX 2100's HBM makes 3D bandwidth-rich but area-bound —
+        // only slightly faster than GX 2800 for 3D.
+        let p = project_stratix10(5000);
+        let gx3 = p
+            .rows
+            .iter()
+            .find(|r| r.device == DeviceKind::Stratix10Gx2800 && r.stencil == StencilKind::Diffusion3D)
+            .unwrap();
+        let mx3 = p
+            .rows
+            .iter()
+            .find(|r| r.device == DeviceKind::Stratix10Mx2100 && r.stencil == StencilKind::Diffusion3D)
+            .unwrap();
+        assert!(mx3.perf_gflops > gx3.perf_gflops * 0.9);
+        assert!(mx3.perf_gflops < gx3.perf_gflops * 2.0, "MX should not dominate: area-bound");
+        // GX 2800 3D saturates its DDR4 bandwidth; MX does not saturate HBM.
+        assert!(gx3.used_bw_frac > 0.9);
+        assert!(mx3.used_bw_frac < 0.95);
+    }
+
+    #[test]
+    fn all_eight_rows_project() {
+        let p = project_stratix10(5000);
+        assert_eq!(p.rows.len(), 8);
+        for r in &p.rows {
+            assert!(r.perf_gflops > 100.0);
+            assert!(r.dsp_frac <= 1.0 && r.mem_bits_frac <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! HLO-text analysis: a lightweight parser over the AOT artifacts used by
+//! the §Perf L2 pass (EXPERIMENTS.md) — instruction histograms, fusion
+//! counts, while-loop detection — without needing the XLA C++ API.
+//!
+//! HLO text lines look like
+//! `  %add.5 = f32[64,64]{1,0} add(%a, %b), metadata=...`
+//! and computations start with `%name (params) -> type {` or `ENTRY ...`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Summary statistics of one HLO module.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HloStats {
+    /// Instruction count per opcode.
+    pub opcodes: BTreeMap<String, usize>,
+    /// Number of (sub-)computations in the module.
+    pub computations: usize,
+    /// Total instructions.
+    pub instructions: usize,
+    /// Number of `while` instructions — our fused-step `fori_loop`s.
+    pub while_loops: usize,
+    /// Number of fusion instructions (XLA fused elementwise chains).
+    pub fusions: usize,
+    /// f32 elements flowing through the largest single instruction.
+    pub max_operand_elems: u64,
+}
+
+impl HloStats {
+    /// Count of one opcode.
+    pub fn count(&self, op: &str) -> usize {
+        self.opcodes.get(op).copied().unwrap_or(0)
+    }
+
+    /// Floating-point "work" opcodes (rough FLOP proxy for the tile).
+    pub fn arith_ops(&self) -> usize {
+        ["add", "subtract", "multiply", "divide", "negate"]
+            .iter()
+            .map(|op| self.count(op))
+            .sum()
+    }
+}
+
+/// Parse HLO text into [`HloStats`].
+pub fn parse_hlo_text(text: &str) -> HloStats {
+    let mut stats = HloStats::default();
+    for line in text.lines() {
+        let t = line.trim_start();
+        if t.starts_with("ENTRY ") || (t.starts_with('%') && t.ends_with('{')) {
+            stats.computations += 1;
+            continue;
+        }
+        // instruction lines: `%name = type opcode(...)` or `name = ...`
+        let Some(eq) = t.find(" = ") else { continue };
+        let rest = &t[eq + 3..];
+        // Skip the shape. Tuple shapes `(s32[], f32[64,64]{1,0})` contain
+        // spaces, so match balanced parens; plain shapes end at a space.
+        let shape_end = if rest.starts_with('(') {
+            let mut depth = 0usize;
+            let mut end = rest.len();
+            for (i, c) in rest.char_indices() {
+                match c {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = i + 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            end
+        } else {
+            match rest.find(' ') {
+                Some(i) => i,
+                None => continue,
+            }
+        };
+        if shape_end + 1 >= rest.len() {
+            continue;
+        }
+        let shape = &rest[..shape_end];
+        let after = rest[shape_end..].trim_start();
+        let opcode: String = after
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+            .collect();
+        if opcode.is_empty() {
+            continue;
+        }
+        stats.instructions += 1;
+        if opcode == "while" {
+            stats.while_loops += 1;
+        }
+        if opcode == "fusion" {
+            stats.fusions += 1;
+        }
+        stats.max_operand_elems = stats.max_operand_elems.max(shape_elems(shape));
+        *stats.opcodes.entry(opcode).or_insert(0) += 1;
+    }
+    stats
+}
+
+/// Element count of an HLO shape string like `f32[64,64]{1,0}`.
+fn shape_elems(shape: &str) -> u64 {
+    let Some(lb) = shape.find('[') else { return 0 };
+    let Some(rb) = shape[lb..].find(']') else { return 0 };
+    let dims = &shape[lb + 1..lb + rb];
+    if dims.is_empty() {
+        return 1;
+    }
+    dims.split(',')
+        .map(|d| d.trim().parse::<u64>().unwrap_or(0))
+        .product()
+}
+
+/// Load + parse an artifact file.
+pub fn stats_for_file(path: &Path) -> Result<HloStats> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(parse_hlo_text(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_f, entry_computation_layout={(f32[64,64]{1,0})->(f32[64,64]{1,0})}
+
+%body (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]{1,0}) parameter(0)
+  %idx = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %next = s32[] add(%idx, %one)
+  %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
+  %y = f32[64,64]{1,0} multiply(%x, %x)
+}
+
+ENTRY %main (a: f32[64,64]) -> (f32[64,64]) {
+  %a = f32[64,64]{1,0} parameter(0)
+  %w = (s32[], f32[64,64]{1,0}) while(%init), condition=%cond, body=%body
+  %out = f32[64,64]{1,0} get-tuple-element(%w), index=1
+}
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let s = parse_hlo_text(SAMPLE);
+        assert_eq!(s.while_loops, 1);
+        assert_eq!(s.count("multiply"), 1);
+        assert_eq!(s.count("add"), 1);
+        assert!(s.computations >= 2);
+        assert_eq!(s.max_operand_elems, 64 * 64);
+    }
+
+    #[test]
+    fn shape_elem_math() {
+        assert_eq!(shape_elems("f32[64,64]{1,0}"), 4096);
+        assert_eq!(shape_elems("f32[]"), 1);
+        assert_eq!(shape_elems("s32[5]"), 5);
+        assert_eq!(shape_elems("pred"), 0);
+    }
+
+    #[test]
+    fn real_artifacts_have_stencil_arithmetic() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let s = stats_for_file(&dir.join("diffusion2d_t64x64_s4.hlo.txt")).unwrap();
+        // a stencil step must contain multiplies and adds over 64x64 tiles
+        assert!(s.count("multiply") >= 5, "{:?}", s.opcodes);
+        assert!(s.count("add") >= 4);
+        assert!(s.while_loops >= 1, "fused steps should lower to a while loop");
+        assert!(s.max_operand_elems >= 64 * 64);
+    }
+}

@@ -1,0 +1,116 @@
+//! Pure-Rust tile executor: the scalar oracle applied `steps` times over
+//! the tile with edge clamping — bit-compatible (to f32 rounding) with the
+//! Pallas/HLO path. Used as the default test/CI backend and wherever
+//! artifacts are unavailable; also the 1-step PE body of the chained
+//! pipeline.
+
+use anyhow::{ensure, Result};
+
+use crate::stencil::{reference, Grid, StencilKind};
+
+use super::{Executor, TileSpec};
+
+/// In-process executor. Supports every tile shape and step count.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HostExecutor;
+
+impl HostExecutor {
+    pub fn new() -> HostExecutor {
+        HostExecutor
+    }
+}
+
+impl Executor for HostExecutor {
+    fn run_tile(
+        &self,
+        spec: &TileSpec,
+        tile: &[f32],
+        power: Option<&[f32]>,
+        coeffs: &[f32],
+    ) -> Result<Vec<f32>> {
+        let def = spec.kind.def();
+        ensure!(
+            tile.len() == spec.cells(),
+            "tile data {} != spec cells {}",
+            tile.len(),
+            spec.cells()
+        );
+        ensure!(
+            coeffs.len() == def.coeff_len,
+            "coeffs {} != {}",
+            coeffs.len(),
+            def.coeff_len
+        );
+        ensure!(
+            power.is_some() == def.has_power,
+            "power grid presence mismatch for {}",
+            spec.kind
+        );
+        let mut cur = Grid::from_vec(&spec.tile, tile.to_vec());
+        let pgrid = power.map(|p| {
+            assert_eq!(p.len(), spec.cells(), "power tile size mismatch");
+            Grid::from_vec(&spec.tile, p.to_vec())
+        });
+        // double-buffered iteration, allocation-free inner loop (§Perf)
+        let mut next = cur.clone();
+        for _ in 0..spec.steps {
+            reference::step_into(spec.kind, &cur, pgrid.as_ref(), coeffs, &mut next);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        Ok(cur.into_data())
+    }
+
+    fn variants(&self, _kind: StencilKind) -> Vec<TileSpec> {
+        Vec::new() // anything goes
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "host-scalar"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::StencilDef;
+
+    #[test]
+    fn matches_whole_grid_reference_when_tile_is_grid() {
+        let mut g = Grid::new2d(24, 24);
+        g.fill_random(5, 0.0, 1.0);
+        let coeffs = StencilDef::get(StencilKind::Diffusion2D).default_coeffs;
+        let spec = TileSpec::new(StencilKind::Diffusion2D, &[24, 24], 3);
+        let got = HostExecutor::new()
+            .run_tile(&spec, g.data(), None, coeffs)
+            .unwrap();
+        let want = reference::run(StencilKind::Diffusion2D, &g, None, coeffs, 3);
+        let got_grid = Grid::from_vec(&[24, 24], got);
+        assert!(got_grid.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn hotspot_requires_power_argument() {
+        let spec = TileSpec::new(StencilKind::Hotspot2D, &[8, 8], 1);
+        let tile = vec![0.0f32; 64];
+        let coeffs = StencilKind::Hotspot2D.def().default_coeffs;
+        assert!(HostExecutor::new().run_tile(&spec, &tile, None, coeffs).is_err());
+        let power = vec![0.0f32; 64];
+        assert!(HostExecutor::new()
+            .run_tile(&spec, &tile, Some(&power), coeffs)
+            .is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        let spec = TileSpec::new(StencilKind::Diffusion2D, &[8, 8], 1);
+        let coeffs = StencilKind::Diffusion2D.def().default_coeffs;
+        assert!(HostExecutor::new().run_tile(&spec, &[0.0; 63], None, coeffs).is_err());
+        assert!(HostExecutor::new().run_tile(&spec, &[0.0; 64], None, &[0.1; 3]).is_err());
+    }
+
+    #[test]
+    fn supports_everything() {
+        let h = HostExecutor::new();
+        assert!(h.supports(&TileSpec::new(StencilKind::Diffusion3D, &[5, 7, 9], 11)));
+    }
+}

@@ -1,0 +1,171 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::stencil::StencilKind;
+use crate::util::json::Json;
+
+use super::TileSpec;
+
+/// One AOT-lowered tile-program artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    pub spec: TileSpec,
+    pub has_power: bool,
+    pub coeff_len: usize,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: String,
+    pub sha256: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Load and validate a manifest from `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let format = root
+            .get("format")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing format"))?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let mut variants = Vec::new();
+        for v in root
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing variants"))?
+        {
+            let kind_s = v
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("variant missing kind"))?;
+            let kind = StencilKind::parse(kind_s)
+                .ok_or_else(|| anyhow!("unknown stencil kind {kind_s}"))?;
+            let tile: Vec<usize> = v
+                .get("tile")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("variant missing tile"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad tile dim")))
+                .collect::<Result<_>>()?;
+            let steps = v
+                .get("steps")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("variant missing steps"))?;
+            let spec = TileSpec::new(kind, &tile, steps);
+            let name = v.get("name").and_then(Json::as_str).unwrap_or_default();
+            if name != spec.artifact_name() {
+                bail!("variant name {name} != derived {}", spec.artifact_name());
+            }
+            variants.push(Variant {
+                spec,
+                has_power: v.get("has_power").and_then(Json::as_bool).unwrap_or(false),
+                coeff_len: v
+                    .get("coeff_len")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("variant missing coeff_len"))?,
+                file: v
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("variant missing file"))?
+                    .to_string(),
+                sha256: v
+                    .get("sha256")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+            });
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    /// Variants for one stencil.
+    pub fn for_kind(&self, kind: StencilKind) -> Vec<&Variant> {
+        self.variants.iter().filter(|v| v.spec.kind == kind).collect()
+    }
+
+    /// Exact-match lookup.
+    pub fn find(&self, spec: &TileSpec) -> Option<&Variant> {
+        self.variants.iter().find(|v| &v.spec == spec)
+    }
+
+    /// Absolute path of a variant's HLO text.
+    pub fn hlo_path(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = std::env::temp_dir().join("fstencil_manifest_ok");
+        write_manifest(
+            &dir,
+            r#"{"format":1,"variants":[
+                {"name":"diffusion2d_t64x64_s4","kind":"diffusion2d","tile":[64,64],
+                 "steps":4,"has_power":false,"coeff_len":5,
+                 "file":"diffusion2d_t64x64_s4.hlo.txt","sha256":"x"}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.variants.len(), 1);
+        let spec = TileSpec::new(StencilKind::Diffusion2D, &[64, 64], 4);
+        assert!(m.find(&spec).is_some());
+        assert!(m.for_kind(StencilKind::Hotspot2D).is_empty());
+    }
+
+    #[test]
+    fn rejects_name_mismatch() {
+        let dir = std::env::temp_dir().join("fstencil_manifest_bad");
+        write_manifest(
+            &dir,
+            r#"{"format":1,"variants":[
+                {"name":"wrong","kind":"diffusion2d","tile":[64,64],
+                 "steps":4,"coeff_len":5,"file":"f.hlo.txt"}]}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = std::env::temp_dir().join("fstencil_manifest_none");
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_when_present() {
+        // Integration hook: if `make artifacts` has run, validate it.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.variants.len() >= 4);
+            for v in &m.variants {
+                assert!(m.hlo_path(v).exists(), "{} missing", v.file);
+            }
+        }
+    }
+}

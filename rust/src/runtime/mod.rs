@@ -1,0 +1,100 @@
+//! Execution runtime: runs one *tile program* — `steps` fused time-steps
+//! over a halo-carrying tile — either through the AOT-compiled HLO
+//! artifacts on the PJRT CPU client ([`PjrtExecutor`]) or through the
+//! in-process scalar oracle ([`HostExecutor`]).
+//!
+//! Python never appears here: artifacts are produced once by
+//! `make artifacts` (python/compile/aot.py) and loaded as HLO text
+//! (`HloModuleProto::from_text_file` → compile → execute), following
+//! /opt/xla-example/load_hlo.
+
+pub mod hlostats;
+pub mod host;
+pub mod manifest;
+pub mod pjrt;
+pub mod tile;
+
+pub use hlostats::{parse_hlo_text, HloStats};
+pub use host::HostExecutor;
+pub use manifest::{Manifest, Variant};
+pub use pjrt::PjrtExecutor;
+pub use tile::{extract_tile, writeback_tile};
+
+use crate::stencil::StencilKind;
+
+/// Identifies a tile program: stencil kind, tile shape, fused steps.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TileSpec {
+    pub kind: StencilKind,
+    /// Tile dims, `[h, w]` or `[d, h, w]`.
+    pub tile: Vec<usize>,
+    /// Fused time-steps (the artifact's `s<N>` suffix; = chunk of
+    /// par_time).
+    pub steps: usize,
+}
+
+impl TileSpec {
+    pub fn new(kind: StencilKind, tile: &[usize], steps: usize) -> TileSpec {
+        assert_eq!(tile.len(), kind.ndim());
+        TileSpec { kind, tile: tile.to_vec(), steps }
+    }
+
+    /// Cells in the tile.
+    pub fn cells(&self) -> usize {
+        self.tile.iter().product()
+    }
+
+    /// Canonical artifact name (must match `aot.py::variant_name`).
+    pub fn artifact_name(&self) -> String {
+        let dims: Vec<String> = self.tile.iter().map(|d| d.to_string()).collect();
+        format!("{}_t{}_s{}", self.kind.name(), dims.join("x"), self.steps)
+    }
+}
+
+/// A tile-program executor. Implementations must be deterministic and
+/// match the Python reference semantics: edge-clamp at tile borders,
+/// `steps` Jacobi-style iterations, full tile returned (caller discards
+/// the invalid halo ring).
+pub trait Executor {
+    /// Execute the tile program. `power` must be `Some` iff the stencil
+    /// has a power input; `coeffs` length must match the stencil.
+    fn run_tile(
+        &self,
+        spec: &TileSpec,
+        tile: &[f32],
+        power: Option<&[f32]>,
+        coeffs: &[f32],
+    ) -> anyhow::Result<Vec<f32>>;
+
+    /// Tile programs this executor can run for `kind`. An empty vec means
+    /// "anything" (the host executor).
+    fn variants(&self, kind: StencilKind) -> Vec<TileSpec>;
+
+    /// Whether a specific spec is runnable.
+    fn supports(&self, spec: &TileSpec) -> bool {
+        let v = self.variants(spec.kind);
+        v.is_empty() || v.contains(spec)
+    }
+
+    /// Human-readable backend name (reports/logs).
+    fn backend_name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_match_python_convention() {
+        let s = TileSpec::new(StencilKind::Diffusion2D, &[64, 64], 4);
+        assert_eq!(s.artifact_name(), "diffusion2d_t64x64_s4");
+        let s3 = TileSpec::new(StencilKind::Hotspot3D, &[16, 16, 16], 2);
+        assert_eq!(s3.artifact_name(), "hotspot3d_t16x16x16_s2");
+    }
+
+    #[test]
+    #[should_panic]
+    fn tile_rank_must_match_stencil() {
+        TileSpec::new(StencilKind::Diffusion3D, &[64, 64], 1);
+    }
+}

@@ -1,0 +1,217 @@
+//! PJRT-backed executor: loads the AOT HLO-text artifacts and executes
+//! them on the XLA CPU client (`xla` crate / PJRT C API).
+//!
+//! Pattern per /opt/xla-example/load_hlo.rs:
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute` → `to_tuple1` (aot.py lowers with
+//! `return_tuple=True`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::stencil::StencilKind;
+
+use super::manifest::Manifest;
+use super::{Executor, TileSpec};
+
+/// Executor running AOT artifacts on the PJRT CPU client. Compiled
+/// executables are cached per artifact (compile once, execute many).
+pub struct PjrtExecutor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtExecutor {
+    /// Load from an artifacts directory (must contain `manifest.json`).
+    pub fn load(dir: &Path) -> Result<PjrtExecutor> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtExecutor { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Load from the conventional `./artifacts` directory.
+    pub fn load_default() -> Result<PjrtExecutor> {
+        Self::load(Path::new("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compiled(&self, spec: &TileSpec) -> Result<()> {
+        let name = spec.artifact_name();
+        if self.cache.borrow().contains_key(&name) {
+            return Ok(());
+        }
+        let variant = self
+            .manifest
+            .find(spec)
+            .ok_or_else(|| anyhow!("no artifact for {name}; re-run `make artifacts`"))?;
+        let path = self.manifest.hlo_path(variant);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name} on PJRT"))?;
+        self.cache.borrow_mut().insert(name, exe);
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Eagerly compile every artifact for `kind` (warm-up, keeps compile
+    /// time out of the measured hot path).
+    pub fn warm_up(&self, kind: StencilKind) -> Result<usize> {
+        let specs: Vec<TileSpec> =
+            self.manifest.for_kind(kind).iter().map(|v| v.spec.clone()).collect();
+        for spec in &specs {
+            self.compiled(spec)?;
+        }
+        Ok(specs.len())
+    }
+
+    fn literal_from(&self, data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let shape: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&shape)?)
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn run_tile(
+        &self,
+        spec: &TileSpec,
+        tile: &[f32],
+        power: Option<&[f32]>,
+        coeffs: &[f32],
+    ) -> Result<Vec<f32>> {
+        let def = spec.kind.def();
+        ensure!(tile.len() == spec.cells(), "tile size mismatch");
+        ensure!(coeffs.len() == def.coeff_len, "coeff length mismatch");
+        ensure!(power.is_some() == def.has_power, "power presence mismatch");
+        self.compiled(spec)?;
+        let name = spec.artifact_name();
+        let cache = self.cache.borrow();
+        let exe = cache.get(&name).expect("just compiled");
+
+        // Argument order matches python model.py: (x[, power], coeffs).
+        let x = self.literal_from(tile, &spec.tile)?;
+        let c = self.literal_from(coeffs, &[coeffs.len()])?;
+        let bufs = if let Some(p) = power {
+            let pw = self.literal_from(p, &spec.tile)?;
+            exe.execute::<xla::Literal>(&[x, pw, c])?
+        } else {
+            exe.execute::<xla::Literal>(&[x, c])?
+        };
+        let result = bufs[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        ensure!(v.len() == spec.cells(), "output size mismatch: {}", v.len());
+        Ok(v)
+    }
+
+    fn variants(&self, kind: StencilKind) -> Vec<TileSpec> {
+        self.manifest.for_kind(kind).iter().map(|v| v.spec.clone()).collect()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt-cpu"
+    }
+}
+
+// PJRT execution is funneled through a RefCell'd cache; the executor is
+// used from one thread at a time (the coordinator's compute stage).
+// (Deliberately NOT Sync.)
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostExecutor;
+    use crate::util::prop::Rng;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    /// The load-bearing integration test: PJRT-executed HLO must agree
+    /// with the scalar oracle on every artifact variant.
+    #[test]
+    fn pjrt_matches_host_oracle_on_all_variants() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let pjrt = PjrtExecutor::load(&dir).unwrap();
+        let host = HostExecutor::new();
+        let mut rng = Rng::new(42);
+        for variant in pjrt.manifest().variants.clone() {
+            let spec = &variant.spec;
+            let def = spec.kind.def();
+            let n = spec.cells();
+            let tile = rng.f32_vec(n, 0.0, 1.0);
+            let power = def.has_power.then(|| rng.f32_vec(n, 0.0, 0.5));
+            let coeffs: Vec<f32> = def.default_coeffs.to_vec();
+            let got = pjrt
+                .run_tile(spec, &tile, power.as_deref(), &coeffs)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", spec.artifact_name()));
+            let want = host.run_tile(spec, &tile, power.as_deref(), &coeffs).unwrap();
+            let max_err = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_err < 2e-4,
+                "{}: PJRT vs oracle max err {max_err}",
+                spec.artifact_name()
+            );
+        }
+    }
+
+    #[test]
+    fn executable_cache_reuses_compilations() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let pjrt = PjrtExecutor::load(&dir).unwrap();
+        let spec = TileSpec::new(StencilKind::Diffusion2D, &[64, 64], 1);
+        let tile = vec![0.5f32; spec.cells()];
+        let coeffs = StencilKind::Diffusion2D.def().default_coeffs;
+        pjrt.run_tile(&spec, &tile, None, coeffs).unwrap();
+        assert_eq!(pjrt.cached_count(), 1);
+        pjrt.run_tile(&spec, &tile, None, coeffs).unwrap();
+        assert_eq!(pjrt.cached_count(), 1);
+    }
+
+    #[test]
+    fn missing_variant_is_a_clean_error() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let pjrt = PjrtExecutor::load(&dir).unwrap();
+        let spec = TileSpec::new(StencilKind::Diffusion2D, &[48, 48], 3);
+        let tile = vec![0.0f32; spec.cells()];
+        let err = pjrt
+            .run_tile(&spec, &tile, None, StencilKind::Diffusion2D.def().default_coeffs)
+            .unwrap_err();
+        assert!(err.to_string().contains("no artifact"), "{err}");
+    }
+}

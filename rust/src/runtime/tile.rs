@@ -1,0 +1,185 @@
+//! Tile marshalling: extract halo-carrying tiles from a grid (clamping at
+//! grid boundaries — which IS the §5.1 boundary rule) and write back only
+//! the compute-block interior (the paper's halo write masking).
+
+use crate::blocking::geometry::Block;
+use crate::stencil::Grid;
+
+/// Extract a tile of `tile_dims` starting at `block.start` (signed; may
+/// hang off the grid, in which case cells clamp to the boundary).
+/// `buf` is resized and overwritten — pass a reused buffer to keep the
+/// hot path allocation-free.
+///
+/// Perf (§Perf, EXPERIMENTS.md): rows fully inside the grid are bulk-
+/// copied with `extend_from_slice` (memcpy); clamping happens only on the
+/// out-of-range prefix/suffix. Since `tile_origin` pins tiles inside the
+/// grid, the interior fast path covers virtually every row — this took
+/// extraction from 725 to >3000 Mcell/s.
+pub fn extract_tile(grid: &Grid, block: &Block, tile_dims: &[usize], buf: &mut Vec<f32>) {
+    let n: usize = tile_dims.iter().product();
+    buf.clear();
+    buf.reserve(n);
+    match tile_dims {
+        [th, tw] => {
+            let (sy, sx) = (block.start[0], block.start[1]);
+            for dy in 0..*th {
+                let y = (sy + dy as isize).clamp(0, grid.ny() as isize - 1) as usize;
+                extract_row(grid, 0, y, sx, *tw, buf);
+            }
+        }
+        [td, th, tw] => {
+            let (sz, sy, sx) = (block.start[0], block.start[1], block.start[2]);
+            for dz in 0..*td {
+                let z = (sz + dz as isize).clamp(0, grid.nz() as isize - 1) as usize;
+                for dy in 0..*th {
+                    let y = (sy + dy as isize).clamp(0, grid.ny() as isize - 1) as usize;
+                    extract_row(grid, z, y, sx, *tw, buf);
+                }
+            }
+        }
+        _ => panic!("tile must be 2-D or 3-D"),
+    }
+}
+
+/// Append `tw` cells of row (z, y) starting at signed x-offset `sx`,
+/// clamping x out-of-range cells to the row ends.
+#[inline]
+fn extract_row(grid: &Grid, z: usize, y: usize, sx: isize, tw: usize, buf: &mut Vec<f32>) {
+    let nx = grid.nx() as isize;
+    let row_base = grid.idx(z, y, 0);
+    let row = &grid.data()[row_base..row_base + nx as usize];
+    // prefix: x < 0 clamps to row[0]
+    let prefix = (-sx).clamp(0, tw as isize) as usize;
+    // suffix: x >= nx clamps to row[nx-1]
+    let in_end = (nx - sx).clamp(0, tw as isize) as usize;
+    let interior = in_end - prefix;
+    if prefix > 0 {
+        buf.extend(std::iter::repeat(row[0]).take(prefix));
+    }
+    if interior > 0 {
+        let x0 = (sx + prefix as isize) as usize;
+        buf.extend_from_slice(&row[x0..x0 + interior]);
+    }
+    if tw > in_end {
+        buf.extend(std::iter::repeat(row[nx as usize - 1]).take(tw - in_end));
+    }
+}
+
+/// Write the computed tile back into `grid`: only cells inside the block's
+/// clipped compute ranges are stored (write masking). `result` is the full
+/// tile as returned by an executor.
+pub fn writeback_tile(grid: &mut Grid, block: &Block, tile_dims: &[usize], result: &[f32]) {
+    assert_eq!(result.len(), tile_dims.iter().product::<usize>());
+    match tile_dims {
+        [_, tw] => {
+            let (sy, sx) = (block.start[0], block.start[1]);
+            let (y0, y1) = block.compute[0];
+            let (x0, x1) = block.compute[1];
+            for y in y0..y1 {
+                let ty = (y as isize - sy) as usize;
+                let tx0 = (x0 as isize - sx) as usize;
+                let row = &result[ty * tw + tx0..ty * tw + tx0 + (x1 - x0)];
+                for (i, &v) in row.iter().enumerate() {
+                    grid.set(0, y, x0 + i, v);
+                }
+            }
+        }
+        [_, th, tw] => {
+            let (sz, sy, sx) = (block.start[0], block.start[1], block.start[2]);
+            let (z0, z1) = block.compute[0];
+            let (y0, y1) = block.compute[1];
+            let (x0, x1) = block.compute[2];
+            for z in z0..z1 {
+                let tz = (z as isize - sz) as usize;
+                for y in y0..y1 {
+                    let ty = (y as isize - sy) as usize;
+                    let tx0 = (x0 as isize - sx) as usize;
+                    let base = (tz * th + ty) * tw + tx0;
+                    let row = &result[base..base + (x1 - x0)];
+                    for (i, &v) in row.iter().enumerate() {
+                        grid.set(z, y, x0 + i, v);
+                    }
+                }
+            }
+        }
+        _ => panic!("tile must be 2-D or 3-D"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocking::geometry::BlockGeometry;
+
+    #[test]
+    fn extract_interior_tile_copies_verbatim() {
+        let mut g = Grid::new2d(16, 16);
+        g.fill_gradient();
+        let block = Block {
+            index: vec![0, 0],
+            start: vec![4, 4],
+            compute: vec![(5, 11), (5, 11)],
+        };
+        let mut buf = Vec::new();
+        extract_tile(&g, &block, &[8, 8], &mut buf);
+        assert_eq!(buf.len(), 64);
+        assert_eq!(buf[0], g.get(0, 4, 4));
+        assert_eq!(buf[63], g.get(0, 11, 11));
+    }
+
+    #[test]
+    fn extract_clamps_at_grid_edges() {
+        let mut g = Grid::new2d(8, 8);
+        g.fill_gradient();
+        let block = Block {
+            index: vec![0, 0],
+            start: vec![-2, -2],
+            compute: vec![(0, 4), (0, 4)],
+        };
+        let mut buf = Vec::new();
+        extract_tile(&g, &block, &[8, 8], &mut buf);
+        // the top-left 2x2 halo is all clamped to g[0,0]
+        assert_eq!(buf[0], g.get(0, 0, 0));
+        assert_eq!(buf[1], g.get(0, 0, 0));
+        assert_eq!(buf[8], g.get(0, 0, 0));
+        // first real cell
+        assert_eq!(buf[2 * 8 + 2], g.get(0, 0, 0));
+        assert_eq!(buf[2 * 8 + 3], g.get(0, 0, 1));
+    }
+
+    #[test]
+    fn writeback_masks_halo() {
+        let mut g = Grid::new2d(8, 8);
+        g.fill_const(7.0);
+        let block = Block {
+            index: vec![0, 0],
+            start: vec![0, 0],
+            compute: vec![(2, 6), (2, 6)],
+        };
+        let result = vec![1.0f32; 64];
+        writeback_tile(&mut g, &block, &[8, 8], &result);
+        // outside compute region untouched
+        assert_eq!(g.get(0, 0, 0), 7.0);
+        assert_eq!(g.get(0, 1, 5), 7.0);
+        assert_eq!(g.get(0, 6, 2), 7.0);
+        // inside written
+        assert_eq!(g.get(0, 2, 2), 1.0);
+        assert_eq!(g.get(0, 5, 5), 1.0);
+    }
+
+    #[test]
+    fn round_trip_via_geometry_3d() {
+        let mut g = Grid::new3d(10, 10, 10);
+        g.fill_random(3, 0.0, 1.0);
+        let geom = BlockGeometry::tiled(&[10, 10, 10], &[8, 8, 8], 2);
+        let mut out = g.clone();
+        let mut buf = Vec::new();
+        // "identity stencil": write back what was read
+        for b in geom.blocks() {
+            extract_tile(&g, &b, &[8, 8, 8], &mut buf);
+            let result = buf.clone();
+            writeback_tile(&mut out, &b, &[8, 8, 8], &result);
+        }
+        assert!(out.max_abs_diff(&g) < 1e-9, "identity round trip must preserve grid");
+    }
+}

@@ -1,0 +1,204 @@
+//! Block-RAM (M20K) model: shift-register storage, port-replication
+//! overhead and block packing — the "Memory (Bits | Blocks)" columns of
+//! Table 4.
+//!
+//! Mechanics modeled (§3.1):
+//! * Each PE holds the Eq-1 shift register: 2×rad rows (2D) or planes (3D)
+//!   of the spatial block, plus `par_vec` cells in flight.
+//! * The `2·rad + 1` row segments feeding parallel neighbor taps must be
+//!   replicated to satisfy M20K port limits when `par_vec` is wide; AOC
+//!   replicates *segments*, not the whole FIFO, which is why 3D designs
+//!   (whose shift register is dominated by full planes, not tap rows) show
+//!   near-raw bit counts while 2D designs grow with `par_vec`.
+//! * Hotspot streams a second (power) input: one extra row (2D) or a
+//!   plane-pair FIFO (3D) per PE to delay power values until their cell
+//!   reaches the PE (§5.1).
+//! * Inter-PE channels and misc FIFOs add a small per-PE constant.
+//! * Packing: mapped blocks exceed bits/20480 because buffers are padded
+//!   to power-of-two depths and narrow FIFOs strand capacity; the packing
+//!   ratio falls as designs grow denser (fitted to Table 4's bits→blocks
+//!   pairs).
+
+use crate::blocking::geometry::shift_reg_cells;
+use crate::stencil::StencilDef;
+
+use super::device::Device;
+
+/// Bits per cell (f32).
+const CELL_BITS: u64 = 32;
+/// Per-PE fixed overhead (inter-PE channel FIFOs, control): 16 kbit.
+const PE_OVERHEAD_BITS: u64 = 16 * 1024;
+
+/// BRAM usage of one configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BramUsage {
+    pub bits: u64,
+    pub blocks: u64,
+}
+
+impl BramUsage {
+    pub fn bits_frac(&self, dev: &Device) -> f64 {
+        self.bits as f64 / dev.m20k_bits() as f64
+    }
+    pub fn blocks_frac(&self, dev: &Device) -> f64 {
+        (self.blocks as f64 / dev.m20k_blocks as f64).min(1.0)
+    }
+    /// Whether the design physically fits (blocks is the binding limit;
+    /// bits > 100% is definitionally unmappable too).
+    pub fn fits(&self, dev: &Device) -> bool {
+        self.blocks <= dev.m20k_blocks && self.bits <= dev.m20k_bits()
+    }
+}
+
+/// Shift-register + replication bits for ONE PE.
+pub fn pe_bits(
+    def: &StencilDef,
+    ndim: usize,
+    bsize_x: usize,
+    bsize_y: usize,
+    par_vec: usize,
+) -> u64 {
+    let rad = def.radius;
+    let sr = shift_reg_cells(ndim, rad, bsize_x, bsize_y, par_vec) as u64 * CELL_BITS;
+    // Tap-segment replication: (2·rad + 1) rows in the current plane plus,
+    // for 3D, the center rows of the 2·rad adjacent planes. Replication
+    // factor grows with vector width, saturating at full duplication once
+    // par_vec reaches the 8-word port budget.
+    let tap_rows: u64 = match ndim {
+        2 => (2 * rad + 1) as u64,
+        _ => (2 * rad + 1) as u64 + (2 * rad) as u64,
+    };
+    let repl = (par_vec as f64 / 8.0).min(1.0);
+    let taps = (tap_rows as f64 * bsize_x as f64 * CELL_BITS as f64 * repl) as u64;
+    // Second input stream (power): 2D = one row FIFO; 3D = plane pair
+    // (latency-matching the main shift register).
+    let power: u64 = if def.has_power {
+        match ndim {
+            2 => bsize_x as u64 * CELL_BITS,
+            _ => sr,
+        }
+    } else {
+        0
+    };
+    sr + taps + power + PE_OVERHEAD_BITS
+}
+
+/// Total BRAM usage for `par_time` PEs.
+pub fn bram_usage(
+    def: &StencilDef,
+    dev: &Device,
+    ndim: usize,
+    bsize_x: usize,
+    bsize_y: usize,
+    par_vec: usize,
+    par_time: usize,
+) -> BramUsage {
+    let bits = pe_bits(def, ndim, bsize_x, bsize_y, par_vec) * par_time as u64;
+    let frac = bits as f64 / dev.m20k_bits() as f64;
+    let blocks = (bits as f64 * packing_ratio(frac) / (20.0 * 1024.0)).ceil() as u64;
+    BramUsage { bits, blocks }
+}
+
+/// Blocks-per-bit packing inefficiency as a function of design density,
+/// fitted to Table 4's (bits%, blocks%) pairs:
+/// 10%→3.2×, 14%→2.9×, 22%→2.4×, 38%→2.2×, 65%→1.54×, 90%→1.1×.
+pub fn packing_ratio(bits_frac: f64) -> f64 {
+    const PTS: [(f64, f64); 6] = [
+        (0.10, 3.2),
+        (0.14, 2.9),
+        (0.22, 2.4),
+        (0.38, 2.2),
+        (0.65, 1.54),
+        (0.90, 1.10),
+    ];
+    if bits_frac <= PTS[0].0 {
+        return PTS[0].1;
+    }
+    if bits_frac >= PTS[5].0 {
+        return PTS[5].1;
+    }
+    for w in PTS.windows(2) {
+        let (x0, y0) = w[0];
+        let (x1, y1) = w[1];
+        if bits_frac <= x1 {
+            let t = (bits_frac - x0) / (x1 - x0);
+            return y0 + t * (y1 - y0);
+        }
+    }
+    1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::device::DeviceKind;
+    use crate::stencil::StencilKind;
+
+    #[test]
+    fn diffusion2d_sv_bits_near_table4() {
+        // Table 4: D2D S-V 4096 / par_vec 8 / par_time 6 -> 10% bits.
+        let dev = Device::get(DeviceKind::StratixV);
+        let def = StencilKind::Diffusion2D.def();
+        let u = bram_usage(def, dev, 2, 4096, 0, 8, 6);
+        let frac = u.bits_frac(dev);
+        assert!((0.05..=0.15).contains(&frac), "bits frac {frac}");
+    }
+
+    #[test]
+    fn diffusion3d_a10_bits_near_table4() {
+        // Table 4: D3D A10 256 / 16 / 12 -> 94% bits, 100% blocks.
+        let dev = Device::get(DeviceKind::Arria10);
+        let def = StencilKind::Diffusion3D.def();
+        let u = bram_usage(def, dev, 3, 256, 256, 16, 12);
+        let frac = u.bits_frac(dev);
+        assert!((0.85..=1.05).contains(&frac), "bits frac {frac}");
+        assert!(u.blocks_frac(dev) > 0.95);
+    }
+
+    #[test]
+    fn replication_grows_with_par_vec_in_2d() {
+        let dev = Device::get(DeviceKind::StratixV);
+        let def = StencilKind::Diffusion2D.def();
+        let narrow = bram_usage(def, dev, 2, 4096, 0, 2, 12);
+        let wide = bram_usage(def, dev, 2, 4096, 0, 8, 12);
+        assert!(wide.bits > narrow.bits);
+        // ...but 3D usage is SR-dominated: widening the vector barely moves it
+        let def3 = StencilKind::Diffusion3D.def();
+        let n3 = bram_usage(def3, dev, 3, 256, 256, 2, 4);
+        let w3 = bram_usage(def3, dev, 3, 256, 256, 8, 4);
+        let rel3 = w3.bits as f64 / n3.bits as f64;
+        assert!(rel3 < 1.05, "3D replication overhead too large: {rel3}");
+    }
+
+    #[test]
+    fn hotspot3d_doubles_storage() {
+        // §5.1 + Table 4: Hotspot 3D S-V 8×4 uses ~2× Diffusion 3D's bits
+        // (68% vs 36%) because of the power stream.
+        let dev = Device::get(DeviceKind::StratixV);
+        let d = bram_usage(StencilKind::Diffusion3D.def(), dev, 3, 256, 256, 8, 4);
+        let h = bram_usage(StencilKind::Hotspot3D.def(), dev, 3, 256, 256, 8, 4);
+        let ratio = h.bits as f64 / d.bits as f64;
+        assert!((1.8..=2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn packing_monotone_decreasing() {
+        let mut last = f64::INFINITY;
+        for i in 1..=20 {
+            let r = packing_ratio(i as f64 * 0.05);
+            assert!(r <= last + 1e-9, "packing not monotone at {i}");
+            last = r;
+        }
+        assert!(packing_ratio(0.0) > 3.0);
+        assert!(packing_ratio(1.0) < 1.2);
+    }
+
+    #[test]
+    fn fits_detects_overflow() {
+        let dev = Device::get(DeviceKind::StratixV);
+        let def = StencilKind::Diffusion3D.def();
+        // 512³ blocks at par_time 8 cannot fit Stratix V.
+        let u = bram_usage(def, dev, 3, 512, 512, 8, 8);
+        assert!(!u.fits(dev));
+    }
+}

@@ -1,0 +1,297 @@
+//! Device database: the boards/GPUs of Table 3 and the Stratix 10 parts of
+//! Table 5, with the micro-architectural parameters the simulator needs
+//! (ALM/M20K/DSP counts, memory-controller frequency) that the paper quotes
+//! in the text.
+
+/// FPGA device family — decides DSP mapping rules and f_max baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    StratixV,
+    Arria10,
+    Stratix10,
+    Gpu,
+}
+
+/// Device identifiers used across the evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    StratixV,      // Terasic DE5-net, Stratix V GX A7
+    Arria10,       // Nallatech 385A, Arria 10 GX 1150
+    Stratix10Gx2800,
+    Stratix10Mx2100,
+    TeslaK40c,
+    Gtx980Ti,
+    TeslaP100,
+    TeslaV100,
+}
+
+impl DeviceKind {
+    pub const FPGAS: [DeviceKind; 2] = [DeviceKind::StratixV, DeviceKind::Arria10];
+    pub const STRATIX10: [DeviceKind; 2] =
+        [DeviceKind::Stratix10Gx2800, DeviceKind::Stratix10Mx2100];
+    pub const GPUS: [DeviceKind; 4] = [
+        DeviceKind::TeslaK40c,
+        DeviceKind::Gtx980Ti,
+        DeviceKind::TeslaP100,
+        DeviceKind::TeslaV100,
+    ];
+
+    pub fn parse(s: &str) -> Option<DeviceKind> {
+        Some(match s {
+            "stratixv" | "stratix-v" | "sv" => DeviceKind::StratixV,
+            "arria10" | "a10" => DeviceKind::Arria10,
+            "s10gx2800" | "gx2800" => DeviceKind::Stratix10Gx2800,
+            "s10mx2100" | "mx2100" => DeviceKind::Stratix10Mx2100,
+            "k40c" => DeviceKind::TeslaK40c,
+            "980ti" => DeviceKind::Gtx980Ti,
+            "p100" => DeviceKind::TeslaP100,
+            "v100" => DeviceKind::TeslaV100,
+            _ => return None,
+        })
+    }
+
+    pub fn device(self) -> &'static Device {
+        Device::get(self)
+    }
+}
+
+/// Static description of one device (Table 3 / Table 5 + text constants).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub kind: DeviceKind,
+    pub family: Family,
+    pub name: &'static str,
+    /// Peak external-memory bandwidth, GB/s (Table 3).
+    pub peak_bw_gbps: f64,
+    /// Peak single-precision compute, GFLOP/s (Table 3).
+    pub peak_gflops: f64,
+    /// Process node, nm.
+    pub node_nm: u32,
+    /// Transistor count, billions (0 when the paper doesn't report it).
+    pub transistors_b: f64,
+    /// On-chip memory, MiB: (primary M20K/register, secondary MLAB/L2).
+    pub on_chip_mib: (f64, f64),
+    /// On-board memory, GiB.
+    pub on_board_gib: f64,
+    pub tdp_w: f64,
+    pub release_year: u32,
+    // ---- FPGA-only micro-architecture (0 / None-ish for GPUs) ----
+    /// Adaptive logic modules.
+    pub alms: u64,
+    /// M20K block count (20 kbit each).
+    pub m20k_blocks: u64,
+    /// DSP block count.
+    pub dsps: u64,
+    /// External-memory controller operating frequency, MHz (§6.2: 200 for
+    /// Stratix V, 266 for Arria 10).
+    pub mem_ctrl_mhz: f64,
+}
+
+impl Device {
+    /// Total M20K bits.
+    pub fn m20k_bits(&self) -> u64 {
+        self.m20k_blocks * 20 * 1024
+    }
+
+    pub fn is_fpga(&self) -> bool {
+        self.family != Family::Gpu
+    }
+
+    pub fn get(kind: DeviceKind) -> &'static Device {
+        DEVICES.iter().find(|d| d.kind == kind).unwrap()
+    }
+
+    pub fn all() -> &'static [Device] {
+        &DEVICES
+    }
+}
+
+pub static DEVICES: [Device; 8] = [
+    Device {
+        kind: DeviceKind::StratixV,
+        family: Family::StratixV,
+        name: "Stratix V GX A7",
+        peak_bw_gbps: 25.6,
+        peak_gflops: 200.0,
+        node_nm: 28,
+        transistors_b: 3.8,
+        on_chip_mib: (6.25, 0.895),
+        on_board_gib: 4.0,
+        tdp_w: 40.0,
+        release_year: 2011,
+        alms: 234_720,
+        m20k_blocks: 2_560,
+        dsps: 256,
+        mem_ctrl_mhz: 200.0,
+    },
+    Device {
+        kind: DeviceKind::Arria10,
+        family: Family::Arria10,
+        name: "Arria 10 GX 1150",
+        peak_bw_gbps: 34.1,
+        peak_gflops: 1450.0,
+        node_nm: 20,
+        transistors_b: 5.3,
+        on_chip_mib: (6.62, 1.585),
+        on_board_gib: 8.0,
+        tdp_w: 70.0,
+        release_year: 2014,
+        alms: 427_200,
+        m20k_blocks: 2_713,
+        dsps: 1_518,
+        mem_ctrl_mhz: 266.0,
+    },
+    // Table 5: Stratix 10 projections. ALMs assumed sufficient (§6.3: "we
+    // assume the devices will have enough logic"); controller frequency
+    // taken as DDR4-2400/HBM-class, 300 MHz.
+    Device {
+        kind: DeviceKind::Stratix10Gx2800,
+        family: Family::Stratix10,
+        name: "Stratix 10 GX 2800",
+        peak_bw_gbps: 76.8,
+        peak_gflops: 9_200.0,
+        node_nm: 14,
+        transistors_b: 30.0,
+        on_chip_mib: (28.6, 6.0),
+        on_board_gib: 32.0,
+        tdp_w: 148.0, // §6.4: 140–150 W estimated at 400–450 MHz
+        release_year: 2018,
+        alms: 933_120,
+        m20k_blocks: 11_721,
+        dsps: 5_760,
+        mem_ctrl_mhz: 300.0,
+    },
+    Device {
+        kind: DeviceKind::Stratix10Mx2100,
+        family: Family::Stratix10,
+        name: "Stratix 10 MX 2100",
+        peak_bw_gbps: 512.0,
+        peak_gflops: 6_000.0,
+        node_nm: 14,
+        transistors_b: 20.0,
+        on_chip_mib: (15.9, 3.0),
+        on_board_gib: 16.0,
+        tdp_w: 125.0, // §6.4: typical assumed for efficiency estimate
+        release_year: 2018,
+        alms: 702_720,
+        m20k_blocks: 6_501,
+        dsps: 3_744,
+        mem_ctrl_mhz: 300.0,
+    },
+    Device {
+        kind: DeviceKind::TeslaK40c,
+        family: Family::Gpu,
+        name: "Tesla K40c",
+        peak_bw_gbps: 288.4,
+        peak_gflops: 4_300.0,
+        node_nm: 28,
+        transistors_b: 7.08,
+        on_chip_mib: (3.75, 1.5),
+        on_board_gib: 12.0,
+        tdp_w: 235.0,
+        release_year: 2013,
+        alms: 0,
+        m20k_blocks: 0,
+        dsps: 0,
+        mem_ctrl_mhz: 0.0,
+    },
+    Device {
+        kind: DeviceKind::Gtx980Ti,
+        family: Family::Gpu,
+        name: "GTX 980Ti",
+        peak_bw_gbps: 336.6,
+        peak_gflops: 6_900.0,
+        node_nm: 28,
+        transistors_b: 8.0,
+        on_chip_mib: (5.5, 3.0),
+        on_board_gib: 6.0,
+        tdp_w: 275.0,
+        release_year: 2015,
+        alms: 0,
+        m20k_blocks: 0,
+        dsps: 0,
+        mem_ctrl_mhz: 0.0,
+    },
+    Device {
+        kind: DeviceKind::TeslaP100,
+        family: Family::Gpu,
+        name: "Tesla P100 PCI-E",
+        peak_bw_gbps: 720.9,
+        peak_gflops: 9_300.0,
+        node_nm: 16,
+        transistors_b: 15.3,
+        on_chip_mib: (14.0, 4.0),
+        on_board_gib: 16.0,
+        tdp_w: 250.0,
+        release_year: 2016,
+        alms: 0,
+        m20k_blocks: 0,
+        dsps: 0,
+        mem_ctrl_mhz: 0.0,
+    },
+    Device {
+        kind: DeviceKind::TeslaV100,
+        family: Family::Gpu,
+        name: "Tesla V100 SXM2",
+        peak_bw_gbps: 900.1,
+        peak_gflops: 14_900.0,
+        node_nm: 12,
+        transistors_b: 21.1,
+        on_chip_mib: (20.0, 6.0),
+        on_board_gib: 16.0,
+        tdp_w: 300.0,
+        release_year: 2017,
+        alms: 0,
+        m20k_blocks: 0,
+        dsps: 0,
+        mem_ctrl_mhz: 0.0,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_values() {
+        let sv = Device::get(DeviceKind::StratixV);
+        assert_eq!(sv.peak_bw_gbps, 25.6);
+        assert_eq!(sv.tdp_w, 40.0);
+        assert_eq!(sv.release_year, 2011);
+        let a10 = Device::get(DeviceKind::Arria10);
+        assert_eq!(a10.peak_bw_gbps, 34.1);
+        assert_eq!(a10.peak_gflops, 1450.0);
+        let v100 = Device::get(DeviceKind::TeslaV100);
+        assert_eq!(v100.peak_bw_gbps, 900.1);
+        assert!(!v100.is_fpga());
+    }
+
+    #[test]
+    fn table5_ratios() {
+        // Table 5 quotes the improvement ratios vs Arria 10.
+        let a10 = Device::get(DeviceKind::Arria10);
+        let gx = Device::get(DeviceKind::Stratix10Gx2800);
+        let mx = Device::get(DeviceKind::Stratix10Mx2100);
+        assert!((gx.dsps as f64 / a10.dsps as f64 - 3.8).abs() < 0.05);
+        assert!((gx.m20k_blocks as f64 / a10.m20k_blocks as f64 - 4.3).abs() < 0.05);
+        assert!((gx.peak_bw_gbps / a10.peak_bw_gbps - 2.25).abs() < 0.01);
+        assert!((mx.dsps as f64 / a10.dsps as f64 - 2.5).abs() < 0.05);
+        assert!((mx.peak_bw_gbps / a10.peak_bw_gbps - 15.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn m20k_bits_match_on_chip_mib() {
+        // 2560 × 20 kbit = 51.2 Mbit ≈ 6.25 MiB (paper Table 3).
+        let sv = Device::get(DeviceKind::StratixV);
+        let mib = sv.m20k_bits() as f64 / 8.0 / 1024.0 / 1024.0;
+        assert!((mib - sv.on_chip_mib.0).abs() < 0.1, "{mib}");
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(DeviceKind::parse("arria10"), Some(DeviceKind::Arria10));
+        assert_eq!(DeviceKind::parse("sv"), Some(DeviceKind::StratixV));
+        assert_eq!(DeviceKind::parse("v100"), Some(DeviceKind::TeslaV100));
+        assert_eq!(DeviceKind::parse("xyz"), None);
+    }
+}

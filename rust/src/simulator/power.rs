@@ -1,0 +1,101 @@
+//! Power model (§5.2): per-resource activity coefficients fitted to the
+//! paper's measured board powers, standing in for the Nallatech power
+//! sensor (Arria 10) and the PowerPlay + DIMM estimate (Stratix V).
+//!
+//! Structure: static floor + dynamic terms proportional to
+//! `utilization × f_max` per resource class + the external-memory DIMM
+//! power the paper adds explicitly (2.34 W per active interface on the
+//! DE5-net's datasheet figure).
+
+use super::area::AreaReport;
+use super::device::{Device, Family};
+
+/// Fitted per-family coefficients (Watts).
+struct PowerCoef {
+    /// Static + BSP floor.
+    floor_w: f64,
+    /// Logic dynamic power at 100% utilization and 300 MHz.
+    logic_w: f64,
+    /// BRAM dynamic power at 100% blocks and 300 MHz.
+    bram_w: f64,
+    /// DSP dynamic power at 100% utilization and 300 MHz.
+    dsp_w: f64,
+    /// External memory at full bandwidth.
+    mem_w: f64,
+}
+
+/// Fit targets: Table 4 Stratix V rows span 21.1–36.1 W.
+const COEF_SV: PowerCoef =
+    PowerCoef { floor_w: 9.0, logic_w: 14.0, bram_w: 7.0, dsp_w: 5.0, mem_w: 2.34 };
+/// Fit targets: Table 4 Arria 10 rows span 33.4–73.4 W (over its 70 W TDP
+/// for the densest designs, §6.1).
+const COEF_A10: PowerCoef =
+    PowerCoef { floor_w: 16.0, logic_w: 30.0, bram_w: 22.0, dsp_w: 16.0, mem_w: 4.0 };
+/// §6.4: 140–150 W at 400–450 MHz for GX 2800; 125 W typical for MX 2100.
+/// Dense Table 6 designs (~80% logic, ~100% blocks, ~97% DSP at 450 MHz)
+/// must land in that band: 40 + 1.5×(32·0.8 + 22·1.0 + 20·0.97) ≈ 141 W.
+const COEF_S10: PowerCoef =
+    PowerCoef { floor_w: 40.0, logic_w: 32.0, bram_w: 22.0, dsp_w: 20.0, mem_w: 8.0 };
+
+fn coef(family: Family) -> &'static PowerCoef {
+    match family {
+        Family::StratixV => &COEF_SV,
+        Family::Arria10 => &COEF_A10,
+        Family::Stratix10 => &COEF_S10,
+        Family::Gpu => panic!("FPGA power model applied to a GPU"),
+    }
+}
+
+/// Estimated board power (W) for a placed design running at `fmax_mhz`
+/// with external-memory utilization `mem_frac` (0..=1).
+pub fn board_power_w(dev: &Device, area: &AreaReport, fmax_mhz: f64, mem_frac: f64) -> f64 {
+    let c = coef(dev.family);
+    let fscale = fmax_mhz / 300.0;
+    c.floor_w
+        + fscale
+            * (c.logic_w * area.logic_frac
+                + c.bram_w * area.bram_blocks_frac
+                + c.dsp_w * area.dsp_frac)
+        + c.mem_w * mem_frac.clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::area::area_report;
+    use crate::simulator::device::DeviceKind;
+    use crate::stencil::StencilKind;
+
+    fn power(kind: StencilKind, devk: DeviceKind, b: usize, v: usize, t: usize, f: f64) -> f64 {
+        let dev = Device::get(devk);
+        let area = area_report(kind.def(), dev, kind.ndim(), b, b, v, t);
+        board_power_w(dev, &area, f, 0.9)
+    }
+
+    #[test]
+    fn sv_band() {
+        // Table 4 Stratix V: 21.1–36.1 W across all configs.
+        let p = power(StencilKind::Diffusion2D, DeviceKind::StratixV, 4096, 4, 12, 294.2);
+        assert!((18.0..=40.0).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn a10_dense_designs_can_exceed_tdp() {
+        // §6.1: "in many cases we are using over 70 W on the Arria 10".
+        let p = power(StencilKind::Diffusion2D, DeviceKind::Arria10, 4096, 8, 36, 343.76);
+        assert!(p > 55.0 && p < 90.0, "{p}");
+    }
+
+    #[test]
+    fn power_scales_with_fmax() {
+        let lo = power(StencilKind::Diffusion2D, DeviceKind::Arria10, 4096, 8, 36, 250.0);
+        let hi = power(StencilKind::Diffusion2D, DeviceKind::Arria10, 4096, 8, 36, 340.0);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn s10_band_matches_section64() {
+        let p = power(StencilKind::Diffusion2D, DeviceKind::Stratix10Gx2800, 8192, 8, 140, 450.0);
+        assert!((110.0..=170.0).contains(&p), "{p}");
+    }
+}

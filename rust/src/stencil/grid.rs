@@ -1,0 +1,262 @@
+//! Dense f32 grids (2D / 3D) with clamp-boundary accessors.
+//!
+//! Storage is row-major with x fastest: index = (z*ny + y)*nx + x. 2D grids
+//! are 3D grids with nz == 1. This matches the (z, y, x) axis convention of
+//! the Python layers.
+
+use crate::util::prop::Rng;
+
+/// A dense single-precision grid. The unit of data the coordinator blocks,
+/// streams and updates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grid {
+    data: Vec<f32>,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    ndim: usize,
+}
+
+impl Grid {
+    /// New zero-filled 2D grid of ny rows × nx columns.
+    pub fn new2d(ny: usize, nx: usize) -> Grid {
+        assert!(ny > 0 && nx > 0);
+        Grid { data: vec![0.0; ny * nx], nz: 1, ny, nx, ndim: 2 }
+    }
+
+    /// New zero-filled 3D grid of nz planes × ny rows × nx columns.
+    pub fn new3d(nz: usize, ny: usize, nx: usize) -> Grid {
+        assert!(nz > 0 && ny > 0 && nx > 0);
+        Grid { data: vec![0.0; nz * ny * nx], nz, ny, nx, ndim: 3 }
+    }
+
+    /// Build from existing data; `dims` is [ny, nx] or [nz, ny, nx].
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Grid {
+        match dims {
+            [ny, nx] => {
+                assert_eq!(data.len(), ny * nx);
+                Grid { data, nz: 1, ny: *ny, nx: *nx, ndim: 2 }
+            }
+            [nz, ny, nx] => {
+                assert_eq!(data.len(), nz * ny * nx);
+                Grid { data, nz: *nz, ny: *ny, nx: *nx, ndim: 3 }
+            }
+            _ => panic!("dims must be 2 or 3 long, got {dims:?}"),
+        }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.ndim
+    }
+    pub fn nx(&self) -> usize {
+        self.nx
+    }
+    pub fn ny(&self) -> usize {
+        self.ny
+    }
+    pub fn nz(&self) -> usize {
+        self.nz
+    }
+
+    /// Dims in the conventional order: [ny, nx] (2D) or [nz, ny, nx] (3D).
+    pub fn dims(&self) -> Vec<usize> {
+        if self.ndim == 2 {
+            vec![self.ny, self.nx]
+        } else {
+            vec![self.nz, self.ny, self.nx]
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    /// Consume the grid, returning its backing storage (no copy).
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn idx(&self, z: usize, y: usize, x: usize) -> usize {
+        debug_assert!(z < self.nz && y < self.ny && x < self.nx);
+        (z * self.ny + y) * self.nx + x
+    }
+
+    #[inline]
+    pub fn get(&self, z: usize, y: usize, x: usize) -> f32 {
+        self.data[self.idx(z, y, x)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, z: usize, y: usize, x: usize, v: f32) {
+        let i = self.idx(z, y, x);
+        self.data[i] = v;
+    }
+
+    /// Clamped accessor: out-of-bound indices fall back on the boundary
+    /// cell (§5.1's boundary rule). Takes signed coordinates.
+    #[inline]
+    pub fn get_clamped(&self, z: isize, y: isize, x: isize) -> f32 {
+        let zc = z.clamp(0, self.nz as isize - 1) as usize;
+        let yc = y.clamp(0, self.ny as isize - 1) as usize;
+        let xc = x.clamp(0, self.nx as isize - 1) as usize;
+        self.get(zc, yc, xc)
+    }
+
+    // ------------------------------------------------------------- fills
+
+    pub fn fill_const(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Deterministic pseudo-random fill in [lo, hi).
+    pub fn fill_random(&mut self, seed: u64, lo: f32, hi: f32) {
+        let mut rng = Rng::new(seed);
+        for v in &mut self.data {
+            *v = rng.f32_in(lo, hi);
+        }
+    }
+
+    /// Smooth x+y(+z) gradient — useful for visual sanity checks and for
+    /// tests that want a non-trivial but non-random field.
+    pub fn fill_gradient(&mut self) {
+        let (nx, ny, nz) = (self.nx, self.ny, self.nz);
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    let v = x as f32 / nx as f32
+                        + y as f32 / ny as f32
+                        + z as f32 / nz.max(1) as f32;
+                    self.set(z, y, x, v);
+                }
+            }
+        }
+    }
+
+    /// Gaussian bump centered mid-grid; `amp` peak over a `base` floor.
+    /// A realistic initial condition for diffusion experiments.
+    pub fn fill_gaussian(&mut self, base: f32, amp: f32, sigma_frac: f32) {
+        let (nx, ny, nz) = (self.nx as f32, self.ny as f32, self.nz as f32);
+        let sigma2 = (sigma_frac * nx.max(ny)).powi(2);
+        for z in 0..self.nz {
+            for y in 0..self.ny {
+                for x in 0..self.nx {
+                    let dx = x as f32 - nx / 2.0;
+                    let dy = y as f32 - ny / 2.0;
+                    let dz = if self.ndim == 3 { z as f32 - nz / 2.0 } else { 0.0 };
+                    let r2 = dx * dx + dy * dy + dz * dz;
+                    self.set(z, y, x, base + amp * (-r2 / (2.0 * sigma2)).exp());
+                }
+            }
+        }
+    }
+
+    /// Max absolute difference against another grid of identical dims.
+    pub fn max_abs_diff(&self, other: &Grid) -> f32 {
+        assert_eq!(self.dims(), other.dims(), "grid dims mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Root-mean-square difference against another grid.
+    pub fn rms_diff(&self, other: &Grid) -> f64 {
+        assert_eq!(self.dims(), other.dims(), "grid dims mismatch");
+        let sum: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        (sum / self.data.len() as f64).sqrt()
+    }
+
+    /// Sum of all cells (f64 accumulation) — conservation checks.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|v| *v as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major_x_fastest() {
+        let mut g = Grid::new3d(2, 3, 4);
+        g.set(1, 2, 3, 9.0);
+        assert_eq!(g.idx(0, 0, 1), 1);
+        assert_eq!(g.idx(0, 1, 0), 4);
+        assert_eq!(g.idx(1, 0, 0), 12);
+        assert_eq!(g.data()[23], 9.0);
+    }
+
+    #[test]
+    fn clamp_boundary() {
+        let mut g = Grid::new2d(2, 2);
+        g.set(0, 0, 0, 1.0);
+        g.set(0, 0, 1, 2.0);
+        g.set(0, 1, 0, 3.0);
+        g.set(0, 1, 1, 4.0);
+        assert_eq!(g.get_clamped(0, -1, -1), 1.0);
+        assert_eq!(g.get_clamped(0, -5, 1), 2.0);
+        assert_eq!(g.get_clamped(0, 2, 0), 3.0);
+        assert_eq!(g.get_clamped(5, 5, 5), 4.0);
+    }
+
+    #[test]
+    fn dims_and_from_vec() {
+        let g = Grid::from_vec(&[2, 3], vec![0.0; 6]);
+        assert_eq!(g.ndim(), 2);
+        assert_eq!(g.dims(), vec![2, 3]);
+        let g3 = Grid::from_vec(&[2, 3, 4], vec![0.0; 24]);
+        assert_eq!(g3.ndim(), 3);
+        assert_eq!(g3.dims(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_mismatch_panics() {
+        Grid::from_vec(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn fills_are_deterministic() {
+        let mut a = Grid::new2d(8, 8);
+        let mut b = Grid::new2d(8, 8);
+        a.fill_random(42, 0.0, 1.0);
+        b.fill_random(42, 0.0, 1.0);
+        assert_eq!(a, b);
+        a.fill_random(43, 0.0, 1.0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let mut a = Grid::new2d(4, 4);
+        let mut b = Grid::new2d(4, 4);
+        a.fill_const(1.0);
+        b.fill_const(1.5);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+        assert!((a.rms_diff(&b) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gaussian_peak_at_center() {
+        let mut g = Grid::new2d(33, 33);
+        g.fill_gaussian(300.0, 50.0, 0.1);
+        let center = g.get(0, 16, 16);
+        assert!(center > 340.0);
+        assert!(g.get(0, 0, 0) < center);
+    }
+}

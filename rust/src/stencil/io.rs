@@ -1,0 +1,119 @@
+//! Grid file I/O: a small binary format (`FSG1`) for checkpointing and for
+//! feeding real datasets through the CLI (`fstencil run --input/--output`).
+//!
+//! Layout (little-endian):
+//!   magic  4 B  "FSG1"
+//!   ndim   u32
+//!   dims   u64 × ndim      (outermost first, matching Grid::dims())
+//!   data   f32 × product(dims)
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::Grid;
+
+const MAGIC: &[u8; 4] = b"FSG1";
+
+/// Serialize a grid to a writer.
+pub fn write_grid<W: Write>(grid: &Grid, mut w: W) -> Result<()> {
+    w.write_all(MAGIC)?;
+    let dims = grid.dims();
+    w.write_all(&(dims.len() as u32).to_le_bytes())?;
+    for d in &dims {
+        w.write_all(&(*d as u64).to_le_bytes())?;
+    }
+    // bulk little-endian f32 dump
+    let mut buf = Vec::with_capacity(grid.len() * 4);
+    for v in grid.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Deserialize a grid from a reader.
+pub fn read_grid<R: Read>(mut r: R) -> Result<Grid> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("not an FSG1 grid file");
+    }
+    let mut u32b = [0u8; 4];
+    r.read_exact(&mut u32b)?;
+    let ndim = u32::from_le_bytes(u32b) as usize;
+    ensure!((2..=3).contains(&ndim), "unsupported ndim {ndim}");
+    let mut dims = Vec::with_capacity(ndim);
+    let mut u64b = [0u8; 8];
+    for _ in 0..ndim {
+        r.read_exact(&mut u64b)?;
+        let d = u64::from_le_bytes(u64b) as usize;
+        ensure!(d > 0 && d < (1 << 32), "implausible dim {d}");
+        dims.push(d);
+    }
+    let n: usize = dims.iter().product();
+    ensure!(n < (1 << 34), "grid too large: {n} cells");
+    let mut raw = vec![0u8; n * 4];
+    r.read_exact(&mut raw).context("reading grid data")?;
+    let data: Vec<f32> = raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Grid::from_vec(&dims, data))
+}
+
+/// File-path conveniences.
+pub fn save(grid: &Grid, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    write_grid(grid, std::io::BufWriter::new(f))
+}
+
+pub fn load(path: &Path) -> Result<Grid> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    read_grid(std::io::BufReader::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_2d() {
+        let mut g = Grid::new2d(17, 33);
+        g.fill_random(5, -2.0, 2.0);
+        let mut buf = Vec::new();
+        write_grid(&g, &mut buf).unwrap();
+        let back = read_grid(buf.as_slice()).unwrap();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn round_trip_3d_via_file() {
+        let mut g = Grid::new3d(5, 7, 9);
+        g.fill_gradient();
+        let path = std::env::temp_dir().join("fstencil_io_test.fsg");
+        save(&g, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(g, back);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let err = read_grid(&b"NOPE\x02\x00\x00\x00"[..]).unwrap_err();
+        assert!(err.to_string().contains("FSG1"));
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut g = Grid::new2d(4, 4);
+        g.fill_const(1.0);
+        let mut buf = Vec::new();
+        write_grid(&g, &mut buf).unwrap();
+        buf.truncate(buf.len() - 7);
+        assert!(read_grid(buf.as_slice()).is_err());
+    }
+}

@@ -1,0 +1,327 @@
+//! Stencil definitions, grids and the scalar reference oracle.
+//!
+//! The four evaluated stencils are the paper's (Table 2): Diffusion 2D/3D
+//! (Maruyama & Aoki) and Hotspot 2D/3D (Rodinia). Each definition carries
+//! the computation's characteristics — FLOP per cell update, external-memory
+//! bytes per cell update, read/write stream counts — plus the floating-point
+//! op mix the FPGA simulator's DSP mapper consumes.
+//!
+//! Axis conventions match the Python layers exactly: 2D arrays are (y, x)
+//! with north = y-1 and west = x-1; 3D arrays are (z, y, x) with
+//! above = z-1 and below = z+1. Out-of-bound neighbors clamp to the
+//! boundary cell (§5.1).
+
+pub mod grid;
+pub mod io;
+pub mod reference;
+
+pub use grid::Grid;
+
+/// Which stencil: the paper's four benchmarks plus the high-order
+/// (radius-2) extension its future work calls for (§8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StencilKind {
+    Diffusion2D,
+    Diffusion3D,
+    Hotspot2D,
+    Hotspot3D,
+    /// Second-order 9-point star diffusion (radius 2) — the §8 future-work
+    /// direction: "many real-world HPC applications use high-order
+    /// stencils". Exercises every `rad`-parameterized code path with
+    /// rad = 2 (halo = 2·par_time, Eq 1 shift registers of 4 rows, ...).
+    Diffusion2DR2,
+}
+
+impl StencilKind {
+    /// The paper's evaluated set (Tables 2/4).
+    pub const ALL: [StencilKind; 4] = [
+        StencilKind::Diffusion2D,
+        StencilKind::Diffusion3D,
+        StencilKind::Hotspot2D,
+        StencilKind::Hotspot3D,
+    ];
+
+    /// Paper set + extensions.
+    pub const ALL_EXT: [StencilKind; 5] = [
+        StencilKind::Diffusion2D,
+        StencilKind::Diffusion3D,
+        StencilKind::Hotspot2D,
+        StencilKind::Hotspot3D,
+        StencilKind::Diffusion2DR2,
+    ];
+
+    /// Canonical lowercase name, used in artifact names and the CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            StencilKind::Diffusion2D => "diffusion2d",
+            StencilKind::Diffusion3D => "diffusion3d",
+            StencilKind::Hotspot2D => "hotspot2d",
+            StencilKind::Hotspot3D => "hotspot3d",
+            StencilKind::Diffusion2DR2 => "diffusion2dr2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StencilKind> {
+        StencilKind::ALL_EXT.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Spatial dimensionality (2 or 3).
+    pub fn ndim(self) -> usize {
+        match self {
+            StencilKind::Diffusion2D | StencilKind::Hotspot2D | StencilKind::Diffusion2DR2 => 2,
+            StencilKind::Diffusion3D | StencilKind::Hotspot3D => 3,
+        }
+    }
+
+    pub fn def(self) -> &'static StencilDef {
+        StencilDef::get(self)
+    }
+}
+
+impl std::fmt::Display for StencilKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Floating-point operation mix of one cell update, as the FPGA toolchain
+/// sees it after strength reduction. Drives the simulator's DSP/logic
+/// mapping (see `simulator::dsp`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpMix {
+    /// Genuine multiplies (multiplications by 2.0 are exponent increments,
+    /// implemented in logic, and excluded here — this is why Hotspot 2D
+    /// fits in far fewer Stratix V DSPs than its FLOP count suggests).
+    pub mults: usize,
+    /// Additions / subtractions.
+    pub adds: usize,
+    /// How many of `adds` fuse with a preceding multiply into one
+    /// hard-FP MAC on devices with native FP DSPs (Arria 10 / Stratix 10).
+    /// Determined by the expression tree: an add fuses only when it
+    /// directly consumes a multiply result.
+    pub fusable: usize,
+}
+
+/// Static description of one stencil benchmark (paper Table 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StencilDef {
+    pub kind: StencilKind,
+    /// Stencil radius in cells. All four paper stencils are first-order.
+    pub radius: usize,
+    /// FLOP per cell update (Table 2).
+    pub flop_pcu: usize,
+    /// External-memory bytes per cell update with full spatial locality
+    /// (Table 2): diffusion reads 1 + writes 1 cell = 8 B; hotspot reads
+    /// 2 (temp + power) + writes 1 = 12 B.
+    pub bytes_pcu: usize,
+    /// External-memory reads per cell update (`num_read` in the model).
+    pub num_read: usize,
+    /// External-memory writes per cell update (`num_write`).
+    pub num_write: usize,
+    /// Number of runtime coefficient arguments (matches the Python layer).
+    pub coeff_len: usize,
+    /// Whether a second (power) input grid is streamed.
+    pub has_power: bool,
+    /// FP op mix for the DSP mapper.
+    pub ops: OpMix,
+    /// Default coefficient values used by examples/tests; physically
+    /// sensible (convex diffusion weights; Rodinia-like hotspot constants).
+    pub default_coeffs: &'static [f32],
+}
+
+impl StencilDef {
+    pub fn get(kind: StencilKind) -> &'static StencilDef {
+        match kind {
+            StencilKind::Diffusion2D => &DIFFUSION2D,
+            StencilKind::Diffusion3D => &DIFFUSION3D,
+            StencilKind::Hotspot2D => &HOTSPOT2D,
+            StencilKind::Hotspot3D => &HOTSPOT3D,
+            StencilKind::Diffusion2DR2 => &DIFFUSION2DR2,
+        }
+    }
+
+    /// Bytes-to-FLOP ratio (Table 2 rightmost column).
+    pub fn bytes_per_flop(&self) -> f64 {
+        self.bytes_pcu as f64 / self.flop_pcu as f64
+    }
+
+    /// Total accesses per cell update (`num_acc` in Eq 3).
+    pub fn num_acc(&self) -> usize {
+        self.num_read + self.num_write
+    }
+
+    /// Convert a memory throughput (GB/s over useful traffic) into compute
+    /// performance (GFLOP/s) via the bytes-to-FLOP ratio, as §4 does.
+    pub fn gflops_from_gbps(&self, gbps: f64) -> f64 {
+        gbps / self.bytes_per_flop()
+    }
+
+    /// Cell updates per second from GB/s of useful traffic.
+    pub fn gcells_from_gbps(&self, gbps: f64) -> f64 {
+        gbps / self.bytes_pcu as f64
+    }
+}
+
+/// Diffusion 2D: `cc*c + cw*w + ce*e + cs*s + cn*n` — 5 mult, 4 add,
+/// 9 FLOP; every add consumes a product, so 4 fuse on hard-FP DSPs.
+pub static DIFFUSION2D: StencilDef = StencilDef {
+    kind: StencilKind::Diffusion2D,
+    radius: 1,
+    flop_pcu: 9,
+    bytes_pcu: 8,
+    num_read: 1,
+    num_write: 1,
+    coeff_len: 5,
+    has_power: false,
+    ops: OpMix { mults: 5, adds: 4, fusable: 4 },
+    default_coeffs: &[0.2, 0.2, 0.2, 0.2, 0.2],
+};
+
+/// Diffusion 3D: 7-point, 7 mult + 6 add = 13 FLOP, all adds fusable.
+pub static DIFFUSION3D: StencilDef = StencilDef {
+    kind: StencilKind::Diffusion3D,
+    radius: 1,
+    flop_pcu: 13,
+    bytes_pcu: 8,
+    num_read: 1,
+    num_write: 1,
+    coeff_len: 7,
+    has_power: false,
+    ops: OpMix { mults: 7, adds: 6, fusable: 6 },
+    default_coeffs: &[
+        1.0 / 7.0,
+        1.0 / 7.0,
+        1.0 / 7.0,
+        1.0 / 7.0,
+        1.0 / 7.0,
+        1.0 / 7.0,
+        1.0 / 7.0,
+    ],
+};
+
+/// Hotspot 2D: `c + sdc*(power + (n+s-2c)*Ry1 + (e+w-2c)*Rx1 + (amb-c)*Rz1)`
+/// — 15 FLOP counting the 2.0* ops; genuine mults are {Ry1, Rx1, Rz1, sdc}
+/// = 4 (the ×2.0 are strength-reduced), adds/subs = 9. Only 3 adds sit
+/// directly on a multiply output in the tree, so fusable = 3: the A10 DSP
+/// demand per cell update is 4 + 9 − 3 = 10 (matches Table 4's 95% at
+/// par_vec×par_time = 4×36).
+/// Coefficients: [sdc, rx1, ry1, rz1, amb].
+pub static HOTSPOT2D: StencilDef = StencilDef {
+    kind: StencilKind::Hotspot2D,
+    radius: 1,
+    flop_pcu: 15,
+    bytes_pcu: 12,
+    num_read: 2,
+    num_write: 1,
+    coeff_len: 5,
+    has_power: true,
+    ops: OpMix { mults: 4, adds: 9, fusable: 3 },
+    default_coeffs: &[0.05, 0.3, 0.2, 0.1, 80.0],
+};
+
+/// Hotspot 3D: `c*cc + n*cn + s*cs + e*ce + w*cw + a*ca + b*cb + sdc*power
+/// + ca*amb` — 9 mult + 8 add = 17 FLOP, all adds fuse (sum of products).
+/// Coefficients: [cc, cn, cs, cw, ce, ca, cb, sdc, amb].
+pub static HOTSPOT3D: StencilDef = StencilDef {
+    kind: StencilKind::Hotspot3D,
+    radius: 1,
+    flop_pcu: 17,
+    bytes_pcu: 12,
+    num_read: 2,
+    num_write: 1,
+    coeff_len: 9,
+    has_power: true,
+    ops: OpMix { mults: 9, adds: 8, fusable: 8 },
+    default_coeffs: &[0.4, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.01, 80.0],
+};
+
+/// Second-order 9-point star diffusion (radius 2, §8 extension):
+/// `cc*c + Σ c_d1*near_d + Σ c_d2*far_d` over the 4 axis directions at
+/// distances 1 and 2 — 9 mult + 8 add = 17 FLOP, all adds fusable.
+/// Coefficients: [cc, cn1, cs1, cw1, ce1, cn2, cs2, cw2, ce2].
+pub static DIFFUSION2DR2: StencilDef = StencilDef {
+    kind: StencilKind::Diffusion2DR2,
+    radius: 2,
+    flop_pcu: 17,
+    bytes_pcu: 8,
+    num_read: 1,
+    num_write: 1,
+    coeff_len: 9,
+    has_power: false,
+    ops: OpMix { mults: 9, adds: 8, fusable: 8 },
+    // A stable 4th-order-flavoured weighting: center + strong near ring +
+    // weak far ring, summing to 1.
+    default_coeffs: &[0.4, 0.12, 0.12, 0.12, 0.12, 0.03, 0.03, 0.03, 0.03],
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn radius2_extension_consistent() {
+        let d = StencilDef::get(StencilKind::Diffusion2DR2);
+        assert_eq!(d.radius, 2);
+        assert_eq!(d.ops.mults + d.ops.adds, d.flop_pcu);
+        assert_eq!(d.coeff_len, d.default_coeffs.len());
+        let sum: f32 = d.default_coeffs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "weights must sum to 1: {sum}");
+        assert_eq!(StencilKind::parse("diffusion2dr2"), Some(StencilKind::Diffusion2DR2));
+    }
+
+    #[test]
+    fn table2_characteristics() {
+        // The Bytes/FLOP column of Table 2.
+        assert!((DIFFUSION2D.bytes_per_flop() - 0.889).abs() < 1e-3);
+        assert!((DIFFUSION3D.bytes_per_flop() - 0.615).abs() < 1e-3);
+        assert!((HOTSPOT2D.bytes_per_flop() - 0.800).abs() < 1e-3);
+        assert!((HOTSPOT3D.bytes_per_flop() - 0.706).abs() < 1e-3);
+    }
+
+    #[test]
+    fn num_acc_matches_paper() {
+        assert_eq!(DIFFUSION2D.num_acc(), 2);
+        assert_eq!(HOTSPOT2D.num_acc(), 3);
+        assert_eq!(HOTSPOT3D.num_acc(), 3);
+    }
+
+    #[test]
+    fn op_mix_consistent_with_flop_count() {
+        // FLOP counts in Table 2 include the strength-reduced ×2.0 ops for
+        // hotspot 2D (2 of them), so: mults + adds (+ reduced) == flop_pcu.
+        assert_eq!(DIFFUSION2D.ops.mults + DIFFUSION2D.ops.adds, 9);
+        assert_eq!(DIFFUSION3D.ops.mults + DIFFUSION3D.ops.adds, 13);
+        assert_eq!(HOTSPOT2D.ops.mults + HOTSPOT2D.ops.adds + 2, 15);
+        assert_eq!(HOTSPOT3D.ops.mults + HOTSPOT3D.ops.adds, 17);
+        for k in StencilKind::ALL {
+            let d = k.def();
+            assert!(d.ops.fusable <= d.ops.adds);
+            assert!(d.ops.fusable <= d.ops.mults + 5);
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for k in StencilKind::ALL {
+            assert_eq!(StencilKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(StencilKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn coeff_lengths_match_python_layer() {
+        assert_eq!(DIFFUSION2D.coeff_len, DIFFUSION2D.default_coeffs.len());
+        assert_eq!(DIFFUSION3D.coeff_len, DIFFUSION3D.default_coeffs.len());
+        assert_eq!(HOTSPOT2D.coeff_len, HOTSPOT2D.default_coeffs.len());
+        assert_eq!(HOTSPOT3D.coeff_len, HOTSPOT3D.default_coeffs.len());
+    }
+
+    #[test]
+    fn gflops_conversion() {
+        // 100 GB/s of diffusion-2D traffic = 100/0.889 = 112.5 GFLOP/s
+        let g = DIFFUSION2D.gflops_from_gbps(100.0);
+        assert!((g - 112.5).abs() < 0.1);
+        // and 12.5 Gcell/s
+        assert!((DIFFUSION2D.gcells_from_gbps(100.0) - 12.5).abs() < 1e-9);
+    }
+}

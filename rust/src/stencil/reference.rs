@@ -1,0 +1,535 @@
+//! Scalar reference oracle: the golden numerics every other execution path
+//! (Pallas kernels, HLO-executed tiles, blocked pipeline) is checked
+//! against. Mirrors `python/compile/kernels/ref.py` exactly.
+//!
+//! Perf (§Perf, EXPERIMENTS.md): interior cells — everything at least
+//! `radius` away from the grid faces — are computed with branch-free
+//! running-index loops over the raw data; only the boundary shell takes the
+//! clamped (branchy) path. `step_into` writes into a caller-provided
+//! buffer so iteration alternates two grids with zero allocation.
+
+use super::{Grid, StencilKind};
+
+/// One time-step of `kind` over the whole grid, clamp boundary, writing a
+/// fresh output grid (the paper's double-buffered iteration).
+pub fn step(kind: StencilKind, input: &Grid, power: Option<&Grid>, coeffs: &[f32]) -> Grid {
+    let mut out = input.clone();
+    step_into(kind, input, power, coeffs, &mut out);
+    out
+}
+
+/// One time-step into an existing output grid (same dims as `input`).
+pub fn step_into(
+    kind: StencilKind,
+    input: &Grid,
+    power: Option<&Grid>,
+    coeffs: &[f32],
+    out: &mut Grid,
+) {
+    let def = kind.def();
+    assert_eq!(coeffs.len(), def.coeff_len, "coefficient count mismatch");
+    assert_eq!(input.ndim(), kind.ndim(), "grid dimensionality mismatch");
+    assert_eq!(out.dims(), input.dims(), "output grid dims mismatch");
+    if def.has_power {
+        let p = power.expect("hotspot stencils require a power grid");
+        assert_eq!(p.dims(), input.dims(), "power grid dims mismatch");
+    }
+    match kind {
+        StencilKind::Diffusion2D => diffusion2d(input, coeffs, out),
+        StencilKind::Diffusion3D => diffusion3d(input, coeffs, out),
+        StencilKind::Hotspot2D => hotspot2d(input, power.unwrap(), coeffs, out),
+        StencilKind::Hotspot3D => hotspot3d(input, power.unwrap(), coeffs, out),
+        StencilKind::Diffusion2DR2 => diffusion2d_r2(input, coeffs, out),
+    }
+}
+
+/// `iters` time-steps with buffer swapping (two grids total).
+pub fn run(
+    kind: StencilKind,
+    input: &Grid,
+    power: Option<&Grid>,
+    coeffs: &[f32],
+    iters: usize,
+) -> Grid {
+    let mut cur = input.clone();
+    let mut next = input.clone();
+    for _ in 0..iters {
+        step_into(kind, &cur, power, coeffs, &mut next);
+        std::mem::swap(&mut cur, &mut next);
+    }
+    cur
+}
+
+// ---------------------------------------------------------------- 2D kinds
+
+fn diffusion2d(g: &Grid, c: &[f32], out: &mut Grid) {
+    let (cc, cn, cs, cw, ce) = (c[0], c[1], c[2], c[3], c[4]);
+    let (ny, nx) = (g.ny(), g.nx());
+    let d = g.data();
+    // interior fast path
+    if ny >= 3 && nx >= 3 {
+        let o = out.data_mut();
+        for y in 1..ny - 1 {
+            let base = y * nx;
+            for x in 1..nx - 1 {
+                let i = base + x;
+                o[i] = cc * d[i] + cw * d[i - 1] + ce * d[i + 1] + cs * d[i + nx]
+                    + cn * d[i - nx];
+            }
+        }
+    }
+    // boundary shell (clamped)
+    let cell = |y: usize, x: usize, out: &mut Grid| {
+        let (yi, xi) = (y as isize, x as isize);
+        let v = cc * g.get(0, y, x)
+            + cw * g.get_clamped(0, yi, xi - 1)
+            + ce * g.get_clamped(0, yi, xi + 1)
+            + cs * g.get_clamped(0, yi + 1, xi)
+            + cn * g.get_clamped(0, yi - 1, xi);
+        out.set(0, y, x, v);
+    };
+    boundary_shell_2d(ny, nx, 1, |y, x| cell(y, x, out));
+}
+
+fn diffusion2d_r2(g: &Grid, c: &[f32], out: &mut Grid) {
+    // [cc, cn1, cs1, cw1, ce1, cn2, cs2, cw2, ce2] — radius-2 star.
+    let (cc, cn1, cs1, cw1, ce1) = (c[0], c[1], c[2], c[3], c[4]);
+    let (cn2, cs2, cw2, ce2) = (c[5], c[6], c[7], c[8]);
+    let (ny, nx) = (g.ny(), g.nx());
+    let d = g.data();
+    if ny >= 5 && nx >= 5 {
+        let o = out.data_mut();
+        for y in 2..ny - 2 {
+            let base = y * nx;
+            for x in 2..nx - 2 {
+                let i = base + x;
+                o[i] = cc * d[i]
+                    + cn1 * d[i - nx]
+                    + cs1 * d[i + nx]
+                    + cw1 * d[i - 1]
+                    + ce1 * d[i + 1]
+                    + cn2 * d[i - 2 * nx]
+                    + cs2 * d[i + 2 * nx]
+                    + cw2 * d[i - 2]
+                    + ce2 * d[i + 2];
+            }
+        }
+    }
+    let cell = |y: usize, x: usize, out: &mut Grid| {
+        let (yi, xi) = (y as isize, x as isize);
+        let v = cc * g.get(0, y, x)
+            + cn1 * g.get_clamped(0, yi - 1, xi)
+            + cs1 * g.get_clamped(0, yi + 1, xi)
+            + cw1 * g.get_clamped(0, yi, xi - 1)
+            + ce1 * g.get_clamped(0, yi, xi + 1)
+            + cn2 * g.get_clamped(0, yi - 2, xi)
+            + cs2 * g.get_clamped(0, yi + 2, xi)
+            + cw2 * g.get_clamped(0, yi, xi - 2)
+            + ce2 * g.get_clamped(0, yi, xi + 2);
+        out.set(0, y, x, v);
+    };
+    boundary_shell_2d(ny, nx, 2, |y, x| cell(y, x, out));
+}
+
+fn hotspot2d(g: &Grid, pw: &Grid, c: &[f32], out: &mut Grid) {
+    let (sdc, rx1, ry1, rz1, amb) = (c[0], c[1], c[2], c[3], c[4]);
+    let (ny, nx) = (g.ny(), g.nx());
+    let d = g.data();
+    let p = pw.data();
+    if ny >= 3 && nx >= 3 {
+        let o = out.data_mut();
+        for y in 1..ny - 1 {
+            let base = y * nx;
+            for x in 1..nx - 1 {
+                let i = base + x;
+                let cv = d[i];
+                o[i] = cv
+                    + sdc
+                        * (p[i]
+                            + (d[i - nx] + d[i + nx] - 2.0 * cv) * ry1
+                            + (d[i + 1] + d[i - 1] - 2.0 * cv) * rx1
+                            + (amb - cv) * rz1);
+            }
+        }
+    }
+    let cell = |y: usize, x: usize, out: &mut Grid| {
+        let (yi, xi) = (y as isize, x as isize);
+        let cv = g.get(0, y, x);
+        let n = g.get_clamped(0, yi - 1, xi);
+        let s = g.get_clamped(0, yi + 1, xi);
+        let w = g.get_clamped(0, yi, xi - 1);
+        let e = g.get_clamped(0, yi, xi + 1);
+        let v = cv
+            + sdc
+                * (pw.get(0, y, x)
+                    + (n + s - 2.0 * cv) * ry1
+                    + (e + w - 2.0 * cv) * rx1
+                    + (amb - cv) * rz1);
+        out.set(0, y, x, v);
+    };
+    boundary_shell_2d(ny, nx, 1, |y, x| cell(y, x, out));
+}
+
+/// Visit every cell within `rad` of a 2D grid face exactly once.
+fn boundary_shell_2d(ny: usize, nx: usize, rad: usize, mut f: impl FnMut(usize, usize)) {
+    if ny <= 2 * rad || nx <= 2 * rad {
+        // grid too small for an interior: visit everything
+        for y in 0..ny {
+            for x in 0..nx {
+                f(y, x);
+            }
+        }
+        return;
+    }
+    for y in 0..rad {
+        for x in 0..nx {
+            f(y, x);
+            f(ny - 1 - y, x);
+        }
+    }
+    for y in rad..ny - rad {
+        for x in 0..rad {
+            f(y, x);
+            f(y, nx - 1 - x);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- 3D kinds
+
+fn diffusion3d(g: &Grid, c: &[f32], out: &mut Grid) {
+    let (cc, cn, cs, cw, ce, ca, cb) = (c[0], c[1], c[2], c[3], c[4], c[5], c[6]);
+    let (nz, ny, nx) = (g.nz(), g.ny(), g.nx());
+    let d = g.data();
+    let plane = ny * nx;
+    if nz >= 3 && ny >= 3 && nx >= 3 {
+        let o = out.data_mut();
+        for z in 1..nz - 1 {
+            for y in 1..ny - 1 {
+                let base = (z * ny + y) * nx;
+                for x in 1..nx - 1 {
+                    let i = base + x;
+                    o[i] = cc * d[i]
+                        + cw * d[i - 1]
+                        + ce * d[i + 1]
+                        + cs * d[i + nx]
+                        + cn * d[i - nx]
+                        + cb * d[i + plane]
+                        + ca * d[i - plane];
+                }
+            }
+        }
+    }
+    let cell = |z: usize, y: usize, x: usize, out: &mut Grid| {
+        let (zi, yi, xi) = (z as isize, y as isize, x as isize);
+        let v = cc * g.get(z, y, x)
+            + cw * g.get_clamped(zi, yi, xi - 1)
+            + ce * g.get_clamped(zi, yi, xi + 1)
+            + cs * g.get_clamped(zi, yi + 1, xi)
+            + cn * g.get_clamped(zi, yi - 1, xi)
+            + cb * g.get_clamped(zi + 1, yi, xi)
+            + ca * g.get_clamped(zi - 1, yi, xi);
+        out.set(z, y, x, v);
+    };
+    boundary_shell_3d(nz, ny, nx, |z, y, x| cell(z, y, x, out));
+}
+
+fn hotspot3d(g: &Grid, pw: &Grid, c: &[f32], out: &mut Grid) {
+    let (cc, cn, cs, cw, ce, ca, cb, sdc, amb) =
+        (c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7], c[8]);
+    let (nz, ny, nx) = (g.nz(), g.ny(), g.nx());
+    let d = g.data();
+    let p = pw.data();
+    let plane = ny * nx;
+    if nz >= 3 && ny >= 3 && nx >= 3 {
+        let o = out.data_mut();
+        for z in 1..nz - 1 {
+            for y in 1..ny - 1 {
+                let base = (z * ny + y) * nx;
+                for x in 1..nx - 1 {
+                    let i = base + x;
+                    o[i] = d[i] * cc
+                        + d[i - nx] * cn
+                        + d[i + nx] * cs
+                        + d[i + 1] * ce
+                        + d[i - 1] * cw
+                        + d[i - plane] * ca
+                        + d[i + plane] * cb
+                        + sdc * p[i]
+                        + ca * amb;
+                }
+            }
+        }
+    }
+    let cell = |z: usize, y: usize, x: usize, out: &mut Grid| {
+        let (zi, yi, xi) = (z as isize, y as isize, x as isize);
+        let v = g.get(z, y, x) * cc
+            + g.get_clamped(zi, yi - 1, xi) * cn
+            + g.get_clamped(zi, yi + 1, xi) * cs
+            + g.get_clamped(zi, yi, xi + 1) * ce
+            + g.get_clamped(zi, yi, xi - 1) * cw
+            + g.get_clamped(zi - 1, yi, xi) * ca
+            + g.get_clamped(zi + 1, yi, xi) * cb
+            + sdc * pw.get(z, y, x)
+            + ca * amb;
+        out.set(z, y, x, v);
+    };
+    boundary_shell_3d(nz, ny, nx, |z, y, x| cell(z, y, x, out));
+}
+
+/// Visit every cell within 1 of a 3D grid face exactly once.
+fn boundary_shell_3d(nz: usize, ny: usize, nx: usize, mut f: impl FnMut(usize, usize, usize)) {
+    if nz < 3 || ny < 3 || nx < 3 {
+        for z in 0..nz {
+            for y in 0..ny {
+                for x in 0..nx {
+                    f(z, y, x);
+                }
+            }
+        }
+        return;
+    }
+    // z faces
+    for y in 0..ny {
+        for x in 0..nx {
+            f(0, y, x);
+            f(nz - 1, y, x);
+        }
+    }
+    // y faces (excluding z faces)
+    for z in 1..nz - 1 {
+        for x in 0..nx {
+            f(z, 0, x);
+            f(z, ny - 1, x);
+        }
+    }
+    // x faces (excluding z & y faces)
+    for z in 1..nz - 1 {
+        for y in 1..ny - 1 {
+            f(z, y, 0);
+            f(z, y, nx - 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::StencilDef;
+    use crate::util::prop::{forall, Rng};
+
+    #[test]
+    fn diffusion2d_constant_fixed_point() {
+        let mut g = Grid::new2d(8, 8);
+        g.fill_const(3.0);
+        let out = step(StencilKind::Diffusion2D, &g, None, &[0.2; 5]);
+        assert!(out.max_abs_diff(&g) < 1e-6);
+    }
+
+    #[test]
+    fn diffusion3d_constant_fixed_point() {
+        let mut g = Grid::new3d(4, 4, 4);
+        g.fill_const(-1.5);
+        let c = StencilDef::get(StencilKind::Diffusion3D).default_coeffs;
+        let out = step(StencilKind::Diffusion3D, &g, None, c);
+        assert!(out.max_abs_diff(&g) < 1e-5);
+    }
+
+    #[test]
+    fn diffusion2d_pure_north_tap_shifts_rows() {
+        let mut g = Grid::new2d(4, 3);
+        g.fill_gradient();
+        let out = step(StencilKind::Diffusion2D, &g, None, &[0.0, 1.0, 0.0, 0.0, 0.0]);
+        // row 0 clamps onto itself; row y takes row y-1
+        for x in 0..3 {
+            assert_eq!(out.get(0, 0, x), g.get(0, 0, x));
+            for y in 1..4 {
+                assert_eq!(out.get(0, y, x), g.get(0, y - 1, x));
+            }
+        }
+    }
+
+    #[test]
+    fn hotspot2d_equilibrium() {
+        // temp == ambient everywhere + zero power => unchanged
+        let c = StencilDef::get(StencilKind::Hotspot2D).default_coeffs;
+        let amb = c[4];
+        let mut t = Grid::new2d(6, 6);
+        t.fill_const(amb);
+        let p = Grid::new2d(6, 6);
+        let out = step(StencilKind::Hotspot2D, &t, Some(&p), c);
+        assert!(out.max_abs_diff(&t) < 1e-4);
+    }
+
+    #[test]
+    fn hotspot2d_power_heats() {
+        let c = StencilDef::get(StencilKind::Hotspot2D).default_coeffs;
+        let amb = c[4];
+        let mut t = Grid::new2d(8, 8);
+        t.fill_const(amb);
+        let mut p = Grid::new2d(8, 8);
+        p.set(0, 4, 4, 10.0);
+        let out = run(StencilKind::Hotspot2D, &t, Some(&p), c, 3);
+        assert!(out.get(0, 4, 4) > amb);
+        // heat spreads to neighbors over iterations
+        assert!(out.get(0, 3, 4) > amb);
+    }
+
+    #[test]
+    fn diffusion_conserves_mass_in_interior() {
+        // With convex symmetric weights and a bump far from boundaries,
+        // total mass is conserved to fp tolerance for a few steps.
+        let mut g = Grid::new2d(64, 64);
+        g.fill_gaussian(0.0, 1.0, 0.05);
+        let before = g.sum();
+        let out = run(StencilKind::Diffusion2D, &g, None, &[0.2; 5], 5);
+        let after = out.sum();
+        assert!(
+            (before - after).abs() / before.abs().max(1.0) < 1e-4,
+            "mass not conserved: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn diffusion2d_r2_constant_fixed_point() {
+        let mut g = Grid::new2d(12, 12);
+        g.fill_const(2.5);
+        let c = StencilDef::get(StencilKind::Diffusion2DR2).default_coeffs;
+        let out = step(StencilKind::Diffusion2DR2, &g, None, c);
+        assert!(out.max_abs_diff(&g) < 1e-5);
+    }
+
+    #[test]
+    fn diffusion2d_r2_pure_far_north_tap() {
+        // A pure distance-2 north tap shifts rows by two, clamped.
+        let mut g = Grid::new2d(6, 4);
+        g.fill_gradient();
+        let mut c = [0.0f32; 9];
+        c[5] = 1.0; // cn2
+        let out = step(StencilKind::Diffusion2DR2, &g, None, &c);
+        for x in 0..4 {
+            assert_eq!(out.get(0, 0, x), g.get(0, 0, x));
+            assert_eq!(out.get(0, 1, x), g.get(0, 0, x)); // clamp(-1) = 0
+            for y in 2..6 {
+                assert_eq!(out.get(0, y, x), g.get(0, y - 2, x));
+            }
+        }
+    }
+
+    /// The fast interior loops must agree exactly with a fully-clamped
+    /// naive evaluation — checked per kind on random grids (this is the
+    /// §Perf guard: optimization must not change a single bit).
+    #[test]
+    fn prop_fast_paths_match_naive() {
+        forall(
+            "interior fast path == naive clamped loop",
+            20,
+            |r: &mut Rng| {
+                let kind = *r.pick(&StencilKind::ALL_EXT);
+                let (a, b, c) = (r.usize_in(1, 12), r.usize_in(1, 12), r.usize_in(1, 12));
+                (kind, a, b, c, r.next_u64())
+            },
+            |&(kind, a, b, c, seed)| {
+                let dims: Vec<usize> =
+                    if kind.ndim() == 2 { vec![a + 1, b + 1] } else { vec![a + 1, b + 1, c + 1] };
+                let mut g = if kind.ndim() == 2 {
+                    Grid::new2d(dims[0], dims[1])
+                } else {
+                    Grid::new3d(dims[0], dims[1], dims[2])
+                };
+                g.fill_random(seed, -1.0, 1.0);
+                let def = kind.def();
+                let power = def.has_power.then(|| {
+                    let mut p = g.clone();
+                    p.fill_random(seed ^ 0xABCD, 0.0, 0.5);
+                    p
+                });
+                let fast = step(kind, &g, power.as_ref(), def.default_coeffs);
+                // naive: clamped accessor for every cell
+                let mut naive = g.clone();
+                naive_step(kind, &g, power.as_ref(), def.default_coeffs, &mut naive);
+                if fast.max_abs_diff(&naive) != 0.0 {
+                    return Err(format!("{kind} {dims:?}: fast path diverges"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Naive fully-clamped evaluation used as the fast-path check.
+    fn naive_step(
+        kind: StencilKind,
+        g: &Grid,
+        power: Option<&Grid>,
+        c: &[f32],
+        out: &mut Grid,
+    ) {
+        let get = |z: isize, y: isize, x: isize| g.get_clamped(z, y, x);
+        for z in 0..g.nz() {
+            for y in 0..g.ny() {
+                for x in 0..g.nx() {
+                    let (zi, yi, xi) = (z as isize, y as isize, x as isize);
+                    let v = match kind {
+                        StencilKind::Diffusion2D => {
+                            c[0] * get(zi, yi, xi)
+                                + c[3] * get(zi, yi, xi - 1)
+                                + c[4] * get(zi, yi, xi + 1)
+                                + c[2] * get(zi, yi + 1, xi)
+                                + c[1] * get(zi, yi - 1, xi)
+                        }
+                        StencilKind::Diffusion2DR2 => {
+                            c[0] * get(zi, yi, xi)
+                                + c[1] * get(zi, yi - 1, xi)
+                                + c[2] * get(zi, yi + 1, xi)
+                                + c[3] * get(zi, yi, xi - 1)
+                                + c[4] * get(zi, yi, xi + 1)
+                                + c[5] * get(zi, yi - 2, xi)
+                                + c[6] * get(zi, yi + 2, xi)
+                                + c[7] * get(zi, yi, xi - 2)
+                                + c[8] * get(zi, yi, xi + 2)
+                        }
+                        StencilKind::Diffusion3D => {
+                            c[0] * get(zi, yi, xi)
+                                + c[3] * get(zi, yi, xi - 1)
+                                + c[4] * get(zi, yi, xi + 1)
+                                + c[2] * get(zi, yi + 1, xi)
+                                + c[1] * get(zi, yi - 1, xi)
+                                + c[6] * get(zi + 1, yi, xi)
+                                + c[5] * get(zi - 1, yi, xi)
+                        }
+                        StencilKind::Hotspot2D => {
+                            let cv = get(zi, yi, xi);
+                            cv + c[0]
+                                * (power.unwrap().get(z, y, x)
+                                    + (get(zi, yi - 1, xi) + get(zi, yi + 1, xi) - 2.0 * cv)
+                                        * c[2]
+                                    + (get(zi, yi, xi + 1) + get(zi, yi, xi - 1) - 2.0 * cv)
+                                        * c[1]
+                                    + (c[4] - cv) * c[3])
+                        }
+                        StencilKind::Hotspot3D => {
+                            get(zi, yi, xi) * c[0]
+                                + get(zi, yi - 1, xi) * c[1]
+                                + get(zi, yi + 1, xi) * c[2]
+                                + get(zi, yi, xi + 1) * c[4]
+                                + get(zi, yi, xi - 1) * c[3]
+                                + get(zi - 1, yi, xi) * c[5]
+                                + get(zi + 1, yi, xi) * c[6]
+                                + c[7] * power.unwrap().get(z, y, x)
+                                + c[5] * c[8]
+                        }
+                    };
+                    out.set(z, y, x, v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power")]
+    fn hotspot_requires_power() {
+        let g = Grid::new2d(4, 4);
+        let c = StencilDef::get(StencilKind::Hotspot2D).default_coeffs;
+        step(StencilKind::Hotspot2D, &g, None, c);
+    }
+}

@@ -1,0 +1,97 @@
+//! Byte / throughput formatting helpers.
+//!
+//! The paper is explicit (§4 footnote) that all throughput numbers are in
+//! GB/s = 1e9 B/s, *not* GiB/s — these helpers keep that convention in one
+//! place.
+
+/// 1 GB = 1e9 bytes (paper convention; NOT GiB).
+pub const GB: f64 = 1e9;
+
+/// Bytes per single-precision float grid cell.
+pub const CELL_BYTES: usize = 4;
+
+/// External memory interface width the paper's alignment analysis uses
+/// (§3.3.3): 512 bits = 64 bytes = 16 f32 words.
+pub const MEM_IF_BITS: usize = 512;
+pub const MEM_IF_BYTES: usize = MEM_IF_BITS / 8;
+pub const MEM_IF_WORDS: usize = MEM_IF_BYTES / CELL_BYTES;
+
+/// Format a byte count with binary units (KiB/MiB/GiB) for human display.
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a rate in GB/s (1e9 B/s, paper convention).
+pub fn gbps(bytes_per_sec: f64) -> String {
+    format!("{:.3} GB/s", bytes_per_sec / GB)
+}
+
+/// Round `n` up to the next multiple of `m` (m > 0).
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// True when a byte offset is aligned to the 512-bit memory interface.
+pub fn is_if_aligned(byte_offset: usize) -> bool {
+    byte_offset % MEM_IF_BYTES == 0
+}
+
+/// Number of 512-bit lines an access of `len` bytes starting at byte
+/// `offset` touches — the quantity the memory controller actually moves.
+pub fn lines_touched(offset: usize, len: usize) -> usize {
+    if len == 0 {
+        return 0;
+    }
+    let first = offset / MEM_IF_BYTES;
+    let last = (offset + len - 1) / MEM_IF_BYTES;
+    last - first + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn round_up_cases() {
+        assert_eq!(round_up(0, 16), 0);
+        assert_eq!(round_up(1, 16), 16);
+        assert_eq!(round_up(16, 16), 16);
+        assert_eq!(round_up(17, 16), 32);
+    }
+
+    #[test]
+    fn alignment() {
+        assert!(is_if_aligned(0));
+        assert!(is_if_aligned(64));
+        assert!(!is_if_aligned(32));
+        assert_eq!(MEM_IF_WORDS, 16);
+    }
+
+    #[test]
+    fn lines() {
+        assert_eq!(lines_touched(0, 64), 1);
+        assert_eq!(lines_touched(0, 65), 2);
+        assert_eq!(lines_touched(32, 64), 2); // unaligned access splits
+        assert_eq!(lines_touched(32, 32), 1);
+        assert_eq!(lines_touched(100, 0), 0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Tiny CLI argument parser (offline substrate for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands. Unknown options are collected so the caller can report them.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand (first positional, if any), named
+/// options, boolean flags and remaining positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut a = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` when the next token isn't an option and a
+                    // value is plausible; otherwise a boolean flag. We treat
+                    // the next token as a value unless it starts with `--`.
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            a.opts.insert(stripped.to_string(), v);
+                        }
+                        _ => a.flags.push(stripped.to_string()),
+                    }
+                }
+            } else if a.subcommand.is_none() && a.positional.is_empty() {
+                a.subcommand = Some(tok);
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    /// From the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str) -> Option<usize> {
+        self.opt(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Option<f64> {
+        self.opt(name).and_then(|s| s.parse().ok())
+    }
+
+    /// Comma-separated list option, e.g. `--dims 4096,4096`.
+    pub fn opt_list(&self, name: &str) -> Option<Vec<String>> {
+        self.opt(name)
+            .map(|s| s.split(',').map(|p| p.trim().to_string()).collect())
+    }
+
+    pub fn opt_usize_list(&self, name: &str) -> Option<Vec<usize>> {
+        self.opt_list(name)?
+            .iter()
+            .map(|s| s.parse().ok())
+            .collect::<Option<Vec<usize>>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("run --verbose --iters 100 input.grid");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_usize("iters"), Some(100));
+        assert_eq!(a.positional, vec!["input.grid"]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("dse --device=arria10 --stencil=hotspot2d");
+        assert_eq!(a.opt("device"), Some("arria10"));
+        assert_eq!(a.opt("stencil"), Some("hotspot2d"));
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse("table4 --json --quiet");
+        assert!(a.flag("json"));
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("run --dims 4096,2048");
+        assert_eq!(a.opt_usize_list("dims"), Some(vec![4096, 2048]));
+        let b = parse("run --dims 4096,x");
+        assert_eq!(b.opt_usize_list("dims"), None);
+    }
+
+    #[test]
+    fn negative_like_values() {
+        // `--key value` consumes the next token even if numeric
+        let a = parse("run --seed 42 --check");
+        assert_eq!(a.opt_usize("seed"), Some(42));
+        assert!(a.flag("check"));
+    }
+}

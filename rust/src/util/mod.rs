@@ -1,0 +1,16 @@
+//! In-tree substrates that would normally be third-party crates.
+//!
+//! The build environment is fully offline with only the `xla` dependency
+//! tree available, so this module provides the small infrastructure pieces
+//! the rest of the crate needs: a JSON reader/writer ([`json`]) for the
+//! artifact manifest and machine-readable reports, descriptive statistics
+//! ([`stats`]) for the bench harness, a property-based-testing harness
+//! ([`prop`]), a CLI argument parser ([`cli`]), size formatting ([`bytes`])
+//! and an ASCII table renderer ([`table`]) used to print the paper's tables.
+
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod stats;
+pub mod table;

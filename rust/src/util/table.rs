@@ -1,0 +1,168 @@
+//! ASCII table renderer used to print the paper's tables (2–6) and the
+//! Fig 6 series from our measurements.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder: set headers, push rows, render with box-drawing
+/// separators. Cell values are preformatted strings.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: Option<String>,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            title: None,
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn title(mut self, t: &str) -> Table {
+        self.title = Some(t.to_string());
+        self
+    }
+
+    /// Set per-column alignment (defaults to Right; Left is typical for the
+    /// first, label, column).
+    pub fn aligns(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn left_first_col(mut self) -> Table {
+        if !self.aligns.is_empty() {
+            self.aligns[0] = Align::Left;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width must match header width"
+        );
+        self.rows.push(cells);
+    }
+
+    /// Insert a horizontal separator row (rendered as a rule).
+    pub fn separator(&mut self) {
+        self.rows.push(Vec::new());
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let rule = |sep: char, fill: char| -> String {
+            let mut s = String::new();
+            s.push(sep);
+            for (i, w) in widths.iter().enumerate() {
+                for _ in 0..w + 2 {
+                    s.push(fill);
+                }
+                s.push(if i + 1 == ncols { sep } else { sep });
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let cell = cells.get(i).map(|c| c.as_str()).unwrap_or("");
+                match self.aligns[i] {
+                    Align::Left => s.push_str(&format!(" {:<w$} |", cell, w = widths[i])),
+                    Align::Right => s.push_str(&format!(" {:>w$} |", cell, w = widths[i])),
+                }
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&rule('+', '-'));
+        out.push_str(&fmt_row(&self.headers));
+        out.push_str(&rule('+', '='));
+        for row in &self.rows {
+            if row.is_empty() {
+                out.push_str(&rule('+', '-'));
+            } else {
+                out.push_str(&fmt_row(row));
+            }
+        }
+        out.push_str(&rule('+', '-'));
+        out
+    }
+}
+
+/// Format a float with `prec` decimals, trimming to a fixed display width.
+pub fn f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// Format a percentage (0.55 -> "55%").
+pub fn pct(v: f64) -> String {
+    format!("{:.0}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "value"]).left_first_col();
+        t.row(vec!["alpha".into(), "1".into()]);
+        t.row(vec!["b".into(), "12345".into()]);
+        let s = t.render();
+        assert!(s.contains("| alpha |     1 |"), "got:\n{s}");
+        assert!(s.contains("| b     | 12345 |"), "got:\n{s}");
+    }
+
+    #[test]
+    fn title_and_separator() {
+        let mut t = Table::new(&["a"]).title("Table X");
+        t.row(vec!["1".into()]);
+        t.separator();
+        t.row(vec!["2".into()]);
+        let s = t.render();
+        assert!(s.starts_with("Table X\n"));
+        assert!(s.matches("+---+").count() >= 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(pct(0.857), "86%");
+    }
+}

@@ -1,0 +1,109 @@
+//! Integration: the §5.3 tuner end-to-end on both boards and all stencils,
+//! checking the paper's qualitative tuning conclusions.
+
+use fstencil::dse::{SearchLimits, Tuner};
+use fstencil::simulator::DeviceKind;
+use fstencil::stencil::StencilKind;
+
+fn dims_for(kind: StencilKind) -> Vec<usize> {
+    if kind.ndim() == 2 {
+        vec![16096, 16096]
+    } else {
+        vec![696, 696, 696]
+    }
+}
+
+#[test]
+fn tuner_finds_configs_for_all_stencils_on_both_boards() {
+    for dev in [DeviceKind::StratixV, DeviceKind::Arria10] {
+        for kind in StencilKind::ALL {
+            let out = Tuner::new(dev)
+                .tune(kind, &dims_for(kind), 1000)
+                .unwrap_or_else(|| panic!("{kind} on {dev:?}: no config"));
+            assert!(out.candidates.len() <= 6, "pruning failed: {}", out.candidates.len());
+            assert!(out.tuned.measured_gbps > 10.0, "{kind} on {dev:?} too slow");
+            // every shortlisted candidate respects §5.3
+            for c in &out.candidates {
+                assert!(c.params.bsize_x.is_power_of_two());
+                assert!(c.params.par_vec.is_power_of_two());
+                assert_eq!(c.params.bsize_x % c.params.par_vec, 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn paper_conclusion_2d_temporal_3d_vector() {
+    // §6.1: "For 3D stencils it is better to spend FPGA resources on a
+    // larger vector size ... for 2D stencils on temporal parallelism".
+    let a10 = Tuner::new(DeviceKind::Arria10);
+    let d2 = a10.tune(StencilKind::Diffusion2D, &dims_for(StencilKind::Diffusion2D), 1000).unwrap();
+    let d3 = a10.tune(StencilKind::Diffusion3D, &dims_for(StencilKind::Diffusion3D), 1000).unwrap();
+    let r2 = d2.tuned.params.par_time as f64 / d2.tuned.params.par_vec as f64;
+    let r3 = d3.tuned.params.par_time as f64 / d3.tuned.params.par_vec as f64;
+    assert!(
+        r2 > r3,
+        "2D should favour temporal parallelism more than 3D: {r2} vs {r3}"
+    );
+    assert!(d3.tuned.params.par_vec >= 8, "3D should pick wide vectors");
+}
+
+#[test]
+fn tuner_beats_naive_configs() {
+    // The tuned config must outperform an arbitrary mid-space config.
+    let t = Tuner::new(DeviceKind::Arria10);
+    let out = t.tune(StencilKind::Diffusion2D, &[16096, 16096], 1000).unwrap();
+    let naive = fstencil::simulator::BoardSim::new(DeviceKind::Arria10)
+        .simulate(&fstencil::model::Params::new(
+            StencilKind::Diffusion2D,
+            2,
+            4,
+            1024,
+            &[16096, 16096],
+            1000,
+            0.0,
+        ))
+        .unwrap();
+    assert!(
+        out.tuned.measured_gbps > 2.0 * naive.measured_gbps,
+        "tuned {} vs naive {}",
+        out.tuned.measured_gbps,
+        naive.measured_gbps
+    );
+}
+
+#[test]
+fn custom_limits_respected() {
+    let mut t = Tuner::new(DeviceKind::StratixV);
+    t.limits = SearchLimits {
+        bsizes_2d: vec![2048],
+        bsizes_3d: vec![128],
+        par_vecs: vec![4],
+        max_par_time: 16,
+        par_time_multiple_of_4: true,
+    };
+    let out = t.tune(StencilKind::Diffusion2D, &[8192, 8192], 500).unwrap();
+    for c in &out.candidates {
+        assert_eq!(c.params.bsize_x, 2048);
+        assert_eq!(c.params.par_vec, 4);
+        assert!(c.params.par_time <= 16);
+        assert_eq!(c.params.par_time % 4, 0);
+    }
+}
+
+#[test]
+fn stratix_v_vs_arria10_generation_gap() {
+    // Table 4: Arria 10 outperforms Stratix V by ~5-7x on 2D stencils
+    // (more DSPs, more bandwidth, higher fmax).
+    let sv = Tuner::new(DeviceKind::StratixV)
+        .tune(StencilKind::Diffusion2D, &[16096, 16096], 1000)
+        .unwrap();
+    let a10 = Tuner::new(DeviceKind::Arria10)
+        .tune(StencilKind::Diffusion2D, &[16096, 16096], 1000)
+        .unwrap();
+    let ratio = a10.tuned.measured_gbps / sv.tuned.measured_gbps;
+    assert!(
+        (3.0..=10.0).contains(&ratio),
+        "A10/S-V = {ratio} (paper: ~6.8x)"
+    );
+}

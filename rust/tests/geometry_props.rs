@@ -1,0 +1,240 @@
+//! Property tests on the blocking geometry and scheduling invariants that
+//! the whole system rests on (DESIGN.md §6.2).
+
+use fstencil::blocking::geometry::{halo_width, BlockGeometry, DimBlocking};
+use fstencil::blocking::padding::{alignment_class, pad_words, AlignClass};
+use fstencil::blocking::traversal::{nested_order, CollapsedLoop, LoopStyle};
+use fstencil::coordinator::PlanBuilder;
+use fstencil::stencil::StencilKind;
+use fstencil::util::prop::{forall, Rng};
+
+#[test]
+fn prop_partition_and_halo_2d_3d() {
+    forall(
+        "tiled geometry partitions grids exactly once (2D & 3D)",
+        60,
+        |r: &mut Rng| {
+            let ndim = r.usize_in(2, 3);
+            let halo = r.usize_in(1, 4);
+            let tile = 2 * halo + r.usize_in(1, 20);
+            let dims: Vec<usize> =
+                (0..ndim).map(|_| tile + r.usize_in(0, 60)).collect();
+            (dims, tile, halo)
+        },
+        |(dims, tile, halo)| {
+            let tiles = vec![*tile; dims.len()];
+            let geom = BlockGeometry::tiled(dims, &tiles, *halo);
+            let total: usize = dims.iter().product();
+            let mut cover = vec![0u8; total];
+            let strides: Vec<usize> = {
+                let mut s = vec![1; dims.len()];
+                for d in (0..dims.len() - 1).rev() {
+                    s[d] = s[d + 1] * dims[d + 1];
+                }
+                s
+            };
+            for b in geom.blocks() {
+                // every tile must lie inside the grid (origin-clamped)
+                for (d, (&start, &td)) in b.start.iter().zip(&tiles).enumerate() {
+                    if start < 0 || start as usize + td > dims[d] {
+                        return Err(format!("tile out of bounds: {b:?}"));
+                    }
+                }
+                let ranges = &b.compute;
+                // walk the compute box
+                let mut idx: Vec<usize> = ranges.iter().map(|(lo, _)| *lo).collect();
+                'outer: loop {
+                    let flat: usize =
+                        idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+                    cover[flat] += 1;
+                    for d in (0..idx.len()).rev() {
+                        idx[d] += 1;
+                        if idx[d] < ranges[d].1 {
+                            continue 'outer;
+                        }
+                        if d == 0 {
+                            break 'outer;
+                        }
+                        idx[d] = ranges[d].0;
+                    }
+                }
+            }
+            if cover.iter().all(|&c| c == 1) {
+                Ok(())
+            } else {
+                let over = cover.iter().filter(|&&c| c != 1).count();
+                Err(format!("{over} cells not covered exactly once"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_halo_eq2() {
+    forall(
+        "Eq 2: halo = rad * par_time",
+        20,
+        |r: &mut Rng| (r.usize_in(1, 4), r.usize_in(1, 96)),
+        |&(rad, pt)| {
+            if halo_width(rad, pt) == rad * pt {
+                Ok(())
+            } else {
+                Err("halo mismatch".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_collapsed_loop_equivalence_high_dims() {
+    forall(
+        "collapsed loop == nested loops up to 5 dims",
+        25,
+        |r: &mut Rng| {
+            let nd = r.usize_in(1, 5);
+            (0..nd).map(|_| r.usize_in(1, 5)).collect::<Vec<usize>>()
+        },
+        |extents| {
+            for style in [LoopStyle::Nested, LoopStyle::Collapsed, LoopStyle::ExitOpt] {
+                let got: Vec<_> = CollapsedLoop::new(extents, style).collect();
+                if got != nested_order(extents) {
+                    return Err(format!("{style:?} diverges on {extents:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_chunk_schedules_exact() {
+    forall(
+        "plan chunk schedule sums to iterations and respects halos",
+        40,
+        |r: &mut Rng| {
+            let iters = r.usize_in(1, 100);
+            let tile = 8 * r.usize_in(3, 8);
+            (iters, tile)
+        },
+        |&(iters, tile)| {
+            let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+                .grid_dims(vec![tile.max(64), tile.max(64)])
+                .iterations(iters)
+                .tile(vec![tile, tile])
+                .build()
+                .map_err(|e| e.to_string())?;
+            if plan.chunks.iter().sum::<usize>() != iters {
+                return Err("chunks don't sum".into());
+            }
+            for &c in &plan.chunks {
+                if tile <= 2 * c {
+                    return Err(format!("chunk {c} halo swallows tile {tile}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_padding_decision_table() {
+    forall(
+        "§3.3.3 alignment classes",
+        60,
+        |r: &mut Rng| r.usize_in(1, 160),
+        |&pt| {
+            let padded = alignment_class(1, pt, true);
+            let unpadded = alignment_class(1, pt, false);
+            match (pt % 8, pt % 4) {
+                (0, _) => {
+                    if padded != AlignClass::Full || unpadded != AlignClass::Full {
+                        return Err(format!("pt={pt} should be Full both ways"));
+                    }
+                    if pad_words(1, pt) != 0 {
+                        return Err("no padding needed".into());
+                    }
+                }
+                (_, 0) => {
+                    if padded != AlignClass::Full {
+                        return Err(format!("pt={pt} padded should be Full"));
+                    }
+                    if unpadded == AlignClass::Full {
+                        return Err(format!("pt={pt} unpadded can't be Full"));
+                    }
+                }
+                _ => {
+                    if padded == AlignClass::Full {
+                        return Err(format!("pt={pt} can never be fully aligned"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_redundancy_monotone_in_par_time() {
+    // Larger par_time -> wider halos -> more redundant traffic per pass
+    // (the §6.1 trade-off), for a fixed block size and aligned dims.
+    forall(
+        "redundancy grows with par_time",
+        30,
+        |r: &mut Rng| {
+            let bsize = r.pow2_in(9, 12);
+            let pt = 4 * r.usize_in(1, 8);
+            (bsize, pt)
+        },
+        |&(bsize, pt)| {
+            if bsize <= 2 * (pt + 4) {
+                return Ok(());
+            }
+            let dim = 16 * bsize;
+            let a = BlockGeometry::paper_2d(&[dim, dim], bsize, pt);
+            let b = BlockGeometry::paper_2d(&[dim, dim], bsize, pt + 4);
+            if b.redundancy() >= a.redundancy() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "redundancy fell: {} -> {}",
+                    a.redundancy(),
+                    b.redundancy()
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_dim_blocking_internal_consistency() {
+    forall(
+        "DimBlocking invariants",
+        60,
+        |r: &mut Rng| {
+            let halo = r.usize_in(0, 8);
+            let bsize = 2 * halo + r.usize_in(1, 64);
+            let dim = bsize + r.usize_in(0, 500);
+            (dim, bsize, halo)
+        },
+        |&(dim, bsize, halo)| {
+            let d = DimBlocking::new(dim, bsize, halo);
+            // Eq 4
+            if d.csize() != bsize - 2 * halo {
+                return Err("Eq 4 violated".into());
+            }
+            // Eq 5
+            if d.bnum() != dim.div_ceil(d.csize()) {
+                return Err("Eq 5 violated".into());
+            }
+            // Eq 7 identity: trav = bnum*csize + 2*halo
+            if d.trav() != d.bnum() * d.csize() + 2 * halo {
+                return Err("Eq 7 violated".into());
+            }
+            // overshoot < csize
+            if d.overshoot() >= d.csize() {
+                return Err("overshoot too large".into());
+            }
+            Ok(())
+        },
+    );
+}

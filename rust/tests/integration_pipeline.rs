@@ -1,0 +1,270 @@
+//! Integration: the full blocked execution stack (plan → coordinator →
+//! executor → write-masked assembly) against the whole-grid scalar oracle,
+//! across stencils, grid shapes, iteration counts and pipeline flavours.
+
+use fstencil::coordinator::{ChainPipeline, Coordinator, FusedPipeline, PlanBuilder};
+use fstencil::runtime::HostExecutor;
+use fstencil::stencil::{reference, Grid, StencilKind};
+use fstencil::util::prop::{forall, Rng};
+
+fn mk_grid(ndim: usize, dims: &[usize], seed: u64) -> Grid {
+    let mut g = if ndim == 2 {
+        Grid::new2d(dims[0], dims[1])
+    } else {
+        Grid::new3d(dims[0], dims[1], dims[2])
+    };
+    g.fill_random(seed, 0.0, 1.0);
+    g
+}
+
+fn check(kind: StencilKind, dims: &[usize], iters: usize, tile: Vec<usize>, seed: u64) {
+    let def = kind.def();
+    let mut grid = mk_grid(kind.ndim(), dims, seed);
+    let power = def.has_power.then(|| mk_grid(kind.ndim(), dims, seed + 1000));
+    let want = reference::run(kind, &grid, power.as_ref(), def.default_coeffs, iters);
+    let plan = PlanBuilder::new(kind)
+        .grid_dims(dims.to_vec())
+        .iterations(iters)
+        .tile(tile.clone())
+        .build()
+        .unwrap();
+    Coordinator::new(plan)
+        .run(&HostExecutor::new(), &mut grid, power.as_ref())
+        .unwrap();
+    let err = grid.max_abs_diff(&want);
+    assert!(
+        err < 1e-3,
+        "{kind} dims {dims:?} iters {iters} tile {tile:?}: max err {err}"
+    );
+}
+
+#[test]
+fn all_stencils_long_iteration_runs() {
+    // Longer runs than the unit tests: chunk schedules with many passes.
+    check(StencilKind::Diffusion2D, &[128, 128], 25, vec![48, 48], 1);
+    check(StencilKind::Hotspot2D, &[128, 96], 19, vec![48, 48], 2);
+    check(StencilKind::Diffusion3D, &[32, 32, 32], 13, vec![16, 16, 16], 3);
+    check(StencilKind::Hotspot3D, &[32, 28, 36], 9, vec![16, 16, 16], 4);
+}
+
+#[test]
+fn awkward_grid_shapes() {
+    // Primes and non-multiples stress the clipped last blocks.
+    check(StencilKind::Diffusion2D, &[97, 61], 6, vec![32, 32], 5);
+    check(StencilKind::Diffusion2D, &[64, 211], 6, vec![64, 64], 6);
+    check(StencilKind::Diffusion3D, &[17, 23, 19], 4, vec![16, 16, 16], 7);
+}
+
+#[test]
+fn high_order_radius2_blocked_equals_oracle() {
+    // §8 extension: radius-2 stencils double every halo; the whole
+    // geometry stack must honour rad = 2.
+    check(StencilKind::Diffusion2DR2, &[96, 96], 9, vec![48, 48], 11);
+    check(StencilKind::Diffusion2DR2, &[70, 90], 5, vec![32, 32], 12);
+}
+
+#[test]
+fn grid_exactly_one_tile() {
+    check(StencilKind::Diffusion2D, &[64, 64], 9, vec![64, 64], 8);
+    check(StencilKind::Hotspot3D, &[16, 16, 16], 5, vec![16, 16, 16], 9);
+}
+
+#[test]
+fn prop_blocked_execution_equals_oracle_2d() {
+    forall(
+        "blocked == oracle (random 2D cases)",
+        12,
+        |r: &mut Rng| {
+            let kind = *r.pick(&[StencilKind::Diffusion2D, StencilKind::Hotspot2D]);
+            let tile = 8 * r.usize_in(3, 8); // 24..64
+            let h = tile + r.usize_in(0, 80);
+            let w = tile + r.usize_in(0, 80);
+            let iters = r.usize_in(1, 10);
+            (kind, h, w, tile, iters, r.next_u64())
+        },
+        |&(kind, h, w, tile, iters, seed)| {
+            check(kind, &[h, w], iters, vec![tile, tile], seed);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_blocked_execution_equals_oracle_3d() {
+    forall(
+        "blocked == oracle (random 3D cases)",
+        8,
+        |r: &mut Rng| {
+            let kind = *r.pick(&[StencilKind::Diffusion3D, StencilKind::Hotspot3D]);
+            let d = 16 + r.usize_in(0, 16);
+            let h = 16 + r.usize_in(0, 16);
+            let w = 16 + r.usize_in(0, 16);
+            let iters = r.usize_in(1, 6);
+            (kind, d, h, w, iters, r.next_u64())
+        },
+        |&(kind, d, h, w, iters, seed)| {
+            check(kind, &[d, h, w], iters, vec![16, 16, 16], seed);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn three_execution_paths_agree_exactly() {
+    // sequential coordinator, fused pipeline and PE-chain pipeline must be
+    // bit-identical (same f32 operations in the same order per tile).
+    for kind in StencilKind::ALL {
+        let dims = if kind.ndim() == 2 { vec![80, 72] } else { vec![24, 24, 24] };
+        let tile = if kind.ndim() == 2 { vec![32, 32] } else { vec![16, 16, 16] };
+        let iters = 7;
+        let power = kind.def().has_power.then(|| mk_grid(kind.ndim(), &dims, 777));
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(dims.clone())
+            .iterations(iters)
+            .tile(tile)
+            .build()
+            .unwrap();
+
+        let mut seq = mk_grid(kind.ndim(), &dims, 42);
+        let mut fused = seq.clone();
+        let mut chain = seq.clone();
+        Coordinator::new(plan.clone())
+            .run(&HostExecutor::new(), &mut seq, power.as_ref())
+            .unwrap();
+        FusedPipeline::with_workers(plan.clone(), 4)
+            .run(&HostExecutor::new(), &mut fused, power.as_ref())
+            .unwrap();
+        assert_eq!(seq.max_abs_diff(&fused), 0.0, "{kind}: fused pipeline differs");
+        // chain pipeline recomputes with halo sized for the whole chain, so
+        // results agree with the oracle to tolerance (not bitwise with seq)
+        ChainPipeline::new(plan).run(&mut chain, power.as_ref()).unwrap();
+        let want = reference::run(
+            kind,
+            &mk_grid(kind.ndim(), &dims, 42),
+            power.as_ref(),
+            kind.def().default_coeffs,
+            iters,
+        );
+        let err = chain.max_abs_diff(&want);
+        assert!(err < 1e-3, "{kind}: chain deviates {err}");
+    }
+}
+
+// ------------------------------------------------------ failure injection
+
+/// Executor that fails deterministically on the Nth tile — exercises
+/// error propagation through every execution path (no hangs, no panics,
+/// no partial-result corruption passed off as success).
+struct FlakyExecutor {
+    inner: HostExecutor,
+    fail_on: u64,
+    count: std::sync::atomic::AtomicU64,
+}
+
+impl FlakyExecutor {
+    fn new(fail_on: u64) -> Self {
+        FlakyExecutor {
+            inner: HostExecutor::new(),
+            fail_on,
+            count: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+}
+
+impl fstencil::runtime::Executor for FlakyExecutor {
+    fn run_tile(
+        &self,
+        spec: &fstencil::runtime::TileSpec,
+        tile: &[f32],
+        power: Option<&[f32]>,
+        coeffs: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let n = self.count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        if n == self.fail_on {
+            anyhow::bail!("injected failure on tile {n}");
+        }
+        self.inner.run_tile(spec, tile, power, coeffs)
+    }
+
+    fn variants(&self, kind: StencilKind) -> Vec<fstencil::runtime::TileSpec> {
+        self.inner.variants(kind)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "flaky"
+    }
+}
+
+#[test]
+fn injected_failures_propagate_cleanly() {
+    let dims = vec![96usize, 96];
+    let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+        .grid_dims(dims.clone())
+        .iterations(6)
+        .tile(vec![32, 32])
+        .build()
+        .unwrap();
+    for fail_on in [0u64, 3, 10] {
+        // sequential coordinator
+        let mut g = mk_grid(2, &dims, 1);
+        let err = Coordinator::new(plan.clone())
+            .run(&FlakyExecutor::new(fail_on), &mut g, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("injected failure"), "{err}");
+        // fused pipeline (multi-threaded): must return Err, not hang
+        let mut g = mk_grid(2, &dims, 1);
+        let err = FusedPipeline::with_workers(plan.clone(), 3)
+            .run(&FlakyExecutor::new(fail_on), &mut g, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("injected failure"), "{err}");
+    }
+}
+
+#[test]
+fn flaky_executor_that_never_fires_behaves_normally() {
+    let dims = vec![64usize, 64];
+    let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+        .grid_dims(dims.clone())
+        .iterations(4)
+        .tile(vec![32, 32])
+        .build()
+        .unwrap();
+    let mut g = mk_grid(2, &dims, 2);
+    let want = reference::run(
+        StencilKind::Diffusion2D,
+        &g,
+        None,
+        StencilKind::Diffusion2D.def().default_coeffs,
+        4,
+    );
+    Coordinator::new(plan)
+        .run(&FlakyExecutor::new(u64::MAX), &mut g, None)
+        .unwrap();
+    assert!(g.max_abs_diff(&want) < 1e-4);
+}
+
+#[test]
+fn hotspot_physics_stay_bounded() {
+    // Thermal simulation sanity: temperatures stay within [amb, amb+K] for
+    // bounded power — guards against halo assembly bugs that silently
+    // inject energy.
+    let kind = StencilKind::Hotspot2D;
+    let coeffs = kind.def().default_coeffs;
+    let amb = coeffs[4];
+    let dims = vec![96, 96];
+    let mut grid = Grid::new2d(96, 96);
+    grid.fill_const(amb);
+    let mut power = Grid::new2d(96, 96);
+    power.fill_random(3, 0.0, 1.0);
+    let plan = PlanBuilder::new(kind)
+        .grid_dims(dims)
+        .iterations(40)
+        .tile(vec![32, 32])
+        .build()
+        .unwrap();
+    Coordinator::new(plan).run(&HostExecutor::new(), &mut grid, Some(&power)).unwrap();
+    for &v in grid.data() {
+        assert!(v >= amb - 1e-3, "cooled below ambient: {v}");
+        assert!(v < amb + 50.0, "runaway heating: {v}");
+    }
+}

@@ -1,0 +1,183 @@
+//! Integration: the PJRT runtime path — AOT HLO artifacts loaded and
+//! executed through the XLA CPU client, composed with the full
+//! coordinator. These tests require `make artifacts` to have run; they
+//! skip (with a note) when artifacts are absent so `cargo test` stays
+//! usable on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use fstencil::coordinator::{Coordinator, PlanBuilder};
+use fstencil::runtime::{Executor, HostExecutor, PjrtExecutor, TileSpec};
+use fstencil::stencil::{reference, Grid, StencilKind};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn full_stack_diffusion2d_pjrt_vs_oracle() {
+    let dir = require_artifacts!();
+    let exec = PjrtExecutor::load(&dir).unwrap();
+    let dims = vec![160, 160];
+    let iters = 12;
+    let mut grid = Grid::new2d(160, 160);
+    grid.fill_gaussian(0.0, 1.0, 0.08);
+    let want =
+        reference::run(StencilKind::Diffusion2D, &grid, None, StencilKind::Diffusion2D.def().default_coeffs, iters);
+    let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+        .grid_dims(dims)
+        .iterations(iters)
+        .for_executor(&exec)
+        .build()
+        .unwrap();
+    let report = Coordinator::new(plan).run(&exec, &mut grid, None).unwrap();
+    assert_eq!(report.backend, "pjrt-cpu");
+    let err = grid.max_abs_diff(&want);
+    assert!(err < 1e-3, "PJRT full stack deviates: {err}");
+}
+
+#[test]
+fn full_stack_all_stencils_pjrt_vs_oracle() {
+    let dir = require_artifacts!();
+    let exec = PjrtExecutor::load(&dir).unwrap();
+    for kind in StencilKind::ALL {
+        let def = kind.def();
+        let dims = if kind.ndim() == 2 { vec![96, 128] } else { vec![20, 24, 20] };
+        let iters = 5;
+        let mut grid = if kind.ndim() == 2 {
+            Grid::new2d(dims[0], dims[1])
+        } else {
+            Grid::new3d(dims[0], dims[1], dims[2])
+        };
+        grid.fill_random(31, 0.0, 1.0);
+        let power = def.has_power.then(|| {
+            let mut p = grid.clone();
+            p.fill_random(37, 0.0, 0.25);
+            p
+        });
+        let want = reference::run(kind, &grid, power.as_ref(), def.default_coeffs, iters);
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(dims)
+            .iterations(iters)
+            .for_executor(&exec)
+            .build()
+            .unwrap();
+        Coordinator::new(plan).run(&exec, &mut grid, power.as_ref()).unwrap();
+        let err = grid.max_abs_diff(&want);
+        assert!(err < 1e-3, "{kind} PJRT deviates: {err}");
+    }
+}
+
+#[test]
+fn pjrt_and_host_agree_tile_by_tile() {
+    let dir = require_artifacts!();
+    let pjrt = PjrtExecutor::load(&dir).unwrap();
+    let host = HostExecutor::new();
+    // Larger fused-step variants hit the fori_loop path in the HLO.
+    for spec in [
+        TileSpec::new(StencilKind::Diffusion2D, &[64, 64], 8),
+        TileSpec::new(StencilKind::Diffusion2D, &[128, 128], 4),
+        TileSpec::new(StencilKind::Hotspot2D, &[64, 64], 4),
+        TileSpec::new(StencilKind::Diffusion3D, &[32, 32, 32], 4),
+    ] {
+        if !pjrt.supports(&spec) {
+            continue;
+        }
+        let def = spec.kind.def();
+        let n = spec.cells();
+        let tile: Vec<f32> = (0..n).map(|i| (i % 97) as f32 / 97.0).collect();
+        let power: Option<Vec<f32>> =
+            def.has_power.then(|| (0..n).map(|i| (i % 13) as f32 / 26.0).collect());
+        let a = pjrt
+            .run_tile(&spec, &tile, power.as_deref(), def.default_coeffs)
+            .unwrap();
+        let b = host.run_tile(&spec, &tile, power.as_deref(), def.default_coeffs).unwrap();
+        let err = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 5e-4, "{}: {err}", spec.artifact_name());
+    }
+}
+
+#[test]
+fn full_stack_radius2_pjrt_vs_oracle() {
+    // §8 extension through the AOT path: rad=2 halos on real HLO.
+    let dir = require_artifacts!();
+    let exec = PjrtExecutor::load(&dir).unwrap();
+    let kind = StencilKind::Diffusion2DR2;
+    let mut grid = Grid::new2d(160, 128);
+    grid.fill_random(51, 0.0, 1.0);
+    let iters = 7;
+    let want = reference::run(kind, &grid, None, kind.def().default_coeffs, iters);
+    let plan = PlanBuilder::new(kind)
+        .grid_dims(vec![160, 128])
+        .iterations(iters)
+        .for_executor(&exec)
+        .build()
+        .unwrap();
+    Coordinator::new(plan).run(&exec, &mut grid, None).unwrap();
+    let err = grid.max_abs_diff(&want);
+    assert!(err < 1e-3, "radius-2 PJRT deviates: {err}");
+}
+
+#[test]
+fn warm_up_compiles_all_artifacts() {
+    let dir = require_artifacts!();
+    let pjrt = PjrtExecutor::load(&dir).unwrap();
+    let mut total = 0;
+    for kind in StencilKind::ALL_EXT {
+        total += pjrt.warm_up(kind).unwrap();
+    }
+    assert_eq!(total, pjrt.manifest().variants.len());
+    assert_eq!(pjrt.cached_count(), total);
+}
+
+#[test]
+fn warm_up_compiles_paper_artifacts() {
+    let dir = require_artifacts!();
+    let pjrt = PjrtExecutor::load(&dir).unwrap();
+    let mut total = 0;
+    for kind in StencilKind::ALL {
+        total += pjrt.warm_up(kind).unwrap();
+    }
+    // the paper set is a strict subset (extension variants excluded)
+    assert!(total < pjrt.manifest().variants.len());
+    assert_eq!(pjrt.cached_count(), total);
+}
+
+#[test]
+fn plan_adapts_to_artifact_step_set() {
+    let dir = require_artifacts!();
+    let exec = PjrtExecutor::load(&dir).unwrap();
+    // diffusion2d ships s1/s2/s4/s8 at 64x64 and s4-only at 128x128; the
+    // builder must choose the schedulable tile (64x64 has step 1).
+    let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+        .grid_dims(vec![256, 256])
+        .iterations(11)
+        .for_executor(&exec)
+        .build()
+        .unwrap();
+    assert_eq!(plan.tile, vec![64, 64]);
+    assert_eq!(plan.chunks.iter().sum::<usize>(), 11);
+    for &c in &plan.chunks {
+        assert!(
+            exec.supports(&plan.tile_spec(c)),
+            "plan chose unsupported chunk {c}"
+        );
+    }
+}
