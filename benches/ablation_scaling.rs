@@ -6,9 +6,10 @@
 //!     cargo bench --bench ablation_scaling
 
 use fstencil::bench_support::{BenchReport, Bencher};
-use fstencil::model::Params;
-use fstencil::simulator::{BoardSim, DeviceKind};
+use fstencil::model::{Params, PerfModel};
+use fstencil::runtime::{Executor, TileSpec, VecExecutor};
 use fstencil::stencil::StencilKind;
+use fstencil::simulator::{BoardSim, DeviceKind};
 use fstencil::util::table::{f, Table};
 
 fn sweep(
@@ -75,10 +76,64 @@ fn main() {
             .to_string(),
     );
 
+    // --- the same trade measured on the real host hot path: VecExecutor
+    //     par_vec sweep, validated against the Eq 3 host transposition ---
+    host_par_vec_sweep(&mut rep, &b, StencilKind::Diffusion2D, vec![256, 256]);
+    host_par_vec_sweep(&mut rep, &b, StencilKind::Diffusion3D, vec![32, 32, 32]);
+
     let p = Params::new(StencilKind::Diffusion2D, 8, 36, 4096, &[16096, 16096], 1000, 0.0);
     let sim = BoardSim::new(DeviceKind::Arria10);
     rep.push(b.bench("simulate_sweep_point", || {
         std::hint::black_box(sim.simulate(&p).unwrap());
     }));
     rep.finish();
+}
+
+/// Notional single-core streaming bandwidth used as the host model's
+/// `th_max`; the ablation's point is the *shape* (linear then memory-bound),
+/// not the absolute roof.
+const HOST_TH_MAX_GBPS: f64 = 20.0;
+
+/// Measure `VecExecutor` tile throughput across lane widths and print the
+/// measured scaling next to the Eq 3 host model
+/// (`PerfModel::host_par_vec_mcells`). This is the scalar-vs-vector
+/// ablation EXPERIMENTS.md records.
+fn host_par_vec_sweep(rep: &mut BenchReport, b: &Bencher, kind: StencilKind, tile: Vec<usize>) {
+    let def = kind.def();
+    let spec = TileSpec::new(kind, &tile, 2);
+    let data = vec![0.5f32; spec.cells()];
+    let updates_m = (spec.cells() * spec.steps) as f64 / 1e6;
+    let model = PerfModel::new(HOST_TH_MAX_GBPS);
+    let mut scalar_mcells = 0.0;
+    let mut t = Table::new(&["par_vec", "measured Mcell/s", "speedup", "Eq3 model Mcell/s"])
+        .title(&format!(
+            "{kind} host scalar-vs-vector ablation (tile {tile:?}, s2; model th_max \
+             {HOST_TH_MAX_GBPS} GB/s)"
+        ))
+        .left_first_col();
+    for pv in [1usize, 2, 4, 8, 16] {
+        let exec = VecExecutor::with_par_vec(pv);
+        let r = b.bench_with_metric(
+            &format!("{kind}_vec_tile_pv{pv}"),
+            "Mcell-updates/s",
+            updates_m,
+            || {
+                std::hint::black_box(
+                    exec.run_tile(&spec, &data, None, def.default_coeffs).unwrap(),
+                );
+            },
+        );
+        let measured = r.metric.expect("bench_with_metric sets the metric").0;
+        if pv == 1 {
+            scalar_mcells = measured;
+        }
+        t.row(vec![
+            pv.to_string(),
+            f(measured, 1),
+            f(measured / scalar_mcells, 2),
+            f(model.host_par_vec_mcells(def, scalar_mcells, pv), 1),
+        ]);
+        rep.push(r);
+    }
+    rep.payload(t.render());
 }

@@ -8,7 +8,9 @@
 use fstencil::blocking::geometry::BlockGeometry;
 use fstencil::bench_support::{BenchReport, Bencher};
 use fstencil::coordinator::{Coordinator, FusedPipeline, PlanBuilder};
-use fstencil::runtime::{extract_tile, writeback_tile, Executor, HostExecutor, PjrtExecutor, TileSpec};
+use fstencil::runtime::{
+    extract_tile, writeback_tile, Executor, HostExecutor, PjrtExecutor, TileSpec, VecExecutor,
+};
 use fstencil::stencil::{Grid, StencilKind};
 
 fn main() {
@@ -39,15 +41,35 @@ fn main() {
         std::hint::black_box(&out);
     }));
 
-    // --- host tile compute -------------------------------------------
+    // --- host tile compute: scalar vs vectorized ---------------------
     let host = HostExecutor::new();
     let spec = TileSpec::new(kind, &[64, 64], 4);
     let tdata = vec![0.5f32; spec.cells()];
     let coeffs = kind.def().default_coeffs;
     let updates = (spec.cells() * spec.steps) as f64;
-    rep.push(b.bench_with_metric("host_tile_64sq_s4", "Mcell-updates/s", updates / 1e6, || {
-        std::hint::black_box(host.run_tile(&spec, &tdata, None, coeffs).unwrap());
-    }));
+    let scalar_tile =
+        b.bench_with_metric("host_tile_64sq_s4", "Mcell-updates/s", updates / 1e6, || {
+            std::hint::black_box(host.run_tile(&spec, &tdata, None, coeffs).unwrap());
+        });
+    let scalar_mean = scalar_tile.summary.mean;
+    rep.push(scalar_tile);
+    for pv in [4usize, 8, 16] {
+        let vexec = VecExecutor::with_par_vec(pv);
+        let r = b.bench_with_metric(
+            &format!("vec_tile_64sq_s4_pv{pv}"),
+            "Mcell-updates/s",
+            updates / 1e6,
+            || {
+                std::hint::black_box(vexec.run_tile(&spec, &tdata, None, coeffs).unwrap());
+            },
+        );
+        rep.payload(format!(
+            "scalar-vs-vector ablation: par_vec {pv} speedup {:.2}x over host-scalar \
+             (acceptance: >= 1.5x at par_vec >= 4)",
+            scalar_mean / r.summary.mean
+        ));
+        rep.push(r);
+    }
 
     // --- PJRT tile compute (when artifacts are built) ------------------
     if let Ok(pjrt) = PjrtExecutor::load_default() {
@@ -120,6 +142,30 @@ fn main() {
                 let mut work = g.clone();
                 FusedPipeline::with_workers(plan.clone(), workers)
                     .run(&host, &mut work, None)
+                    .unwrap();
+                std::hint::black_box(work);
+            },
+        ));
+    }
+
+    // --- end-to-end with the vectorized backend (par_vec as a plan
+    //     parameter, run through run_planned) ---------------------------
+    for pv in [4usize, 8] {
+        let vplan = PlanBuilder::new(kind)
+            .grid_dims(dims.clone())
+            .iterations(iters)
+            .tile(vec![64, 64])
+            .par_vec(pv)
+            .build()
+            .unwrap();
+        rep.push(b.bench_with_metric(
+            &format!("fused_pipeline_512sq_x8_w4_pv{pv}"),
+            "Mcell-updates/s",
+            total_updates / 1e6,
+            || {
+                let mut work = g.clone();
+                FusedPipeline::with_workers(vplan.clone(), 4)
+                    .run_planned(&mut work, None)
                     .unwrap();
                 std::hint::black_box(work);
             },

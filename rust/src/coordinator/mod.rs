@@ -7,6 +7,12 @@
 //! the read→compute→write [`pipeline::FusedPipeline`] and the per-PE
 //! chained [`pipeline::ChainPipeline`] (§3.2's autorun PEs with shallow
 //! channels).
+//!
+//! The compute backend is a plan parameter: `PlanBuilder::par_vec` selects
+//! between the scalar oracle and the vectorized host executor. The
+//! `run_planned` entry points on [`Coordinator`] and
+//! [`pipeline::FusedPipeline`] honour it, and
+//! [`pipeline::ChainPipeline::run`] builds its PE bodies from it directly.
 
 pub mod distributed;
 pub mod pipeline;
@@ -90,6 +96,14 @@ impl Coordinator {
 
     pub fn plan(&self) -> &Plan {
         &self.plan
+    }
+
+    /// Run with the executor the plan itself selects ([`Plan::executor`]):
+    /// the scalar oracle at `par_vec == 1`, the vectorized host backend
+    /// otherwise. Results are bit-identical either way.
+    pub fn run_planned(&self, grid: &mut Grid, power: Option<&Grid>) -> Result<ExecReport> {
+        let exec = self.plan.executor();
+        self.run(exec.as_ref(), grid, power)
     }
 
     /// Sequential execution: one pass per chunk, double-buffered grids,

@@ -22,7 +22,7 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::blocking::geometry::{Block, BlockGeometry};
-use crate::runtime::{extract_tile, writeback_tile, Executor, HostExecutor, TileSpec};
+use crate::runtime::{extract_tile, writeback_tile, Executor, TileSpec};
 use crate::stencil::Grid;
 
 use super::plan::Plan;
@@ -49,8 +49,16 @@ impl FusedPipeline {
         FusedPipeline { plan, workers: workers.max(1) }
     }
 
+    /// Run with the executor the plan selects via its `par_vec`
+    /// ([`Plan::executor`]).
+    pub fn run_planned(&self, grid: &mut Grid, power: Option<&Grid>) -> Result<ExecReport> {
+        let exec = self.plan.executor();
+        self.run(exec.as_ref(), grid, power)
+    }
+
     /// Run the plan. The executor must be shareable across the compute
-    /// pool (`Sync`), which [`HostExecutor`] is.
+    /// pool (`Sync`), which [`crate::runtime::HostExecutor`] and the
+    /// vectorized backend both are.
     pub fn run<E: Executor + Sync + ?Sized>(
         &self,
         exec: &E,
@@ -173,7 +181,8 @@ impl ChainPipeline {
         ChainPipeline { plan, chain_len }
     }
 
-    /// Run using per-step host PEs. Results are identical to the fused
+    /// Run using per-step host PEs — scalar or vectorized per the plan's
+    /// `par_vec` ([`Plan::executor`]). Results are identical to the fused
     /// paths; this exists to model (and test) the paper's PE-chain
     /// structure, including remainder pass-through.
     pub fn run(&self, grid: &mut Grid, power: Option<&Grid>) -> Result<ExecReport> {
@@ -186,7 +195,8 @@ impl ChainPipeline {
         let mut next = cur.clone();
         let mut tiles_executed = 0u64;
         let mut redundant = 0u64;
-        let step_exec = HostExecutor::new();
+        let exec_box = plan.executor();
+        let step_exec: &(dyn Executor + Send + Sync) = exec_box.as_ref();
 
         for &steps in &plan.chunks {
             ensure!(steps <= self.chain_len, "chunk exceeds chain length");
@@ -286,6 +296,7 @@ impl ChainPipeline {
 mod tests {
     use super::*;
     use crate::coordinator::{Coordinator, PlanBuilder};
+    use crate::runtime::HostExecutor;
     use std::time::Duration;
     use crate::stencil::{reference, StencilKind};
 
@@ -382,6 +393,53 @@ mod tests {
         // stage times are per-worker sums and must stay in the same order
         // of magnitude as wall time × workers
         assert!(st.extract + st.compute < rep.elapsed * 8);
+    }
+
+    #[test]
+    fn vectorized_plan_is_bit_identical_across_paths() {
+        let kind = StencilKind::Hotspot2D;
+        let dims = vec![72usize, 88];
+        let mk_plan = |pv: usize| {
+            PlanBuilder::new(kind)
+                .grid_dims(dims.clone())
+                .iterations(6)
+                .tile(vec![32, 32])
+                .par_vec(pv)
+                .build()
+                .unwrap()
+        };
+        let power = mk_grid(kind, &dims, 99);
+        let mut scalar = mk_grid(kind, &dims, 5);
+        let mut vector = scalar.clone();
+        let mut fused = scalar.clone();
+        Coordinator::new(mk_plan(1)).run_planned(&mut scalar, Some(&power)).unwrap();
+        Coordinator::new(mk_plan(8)).run_planned(&mut vector, Some(&power)).unwrap();
+        FusedPipeline::with_workers(mk_plan(8), 3)
+            .run_planned(&mut fused, Some(&power))
+            .unwrap();
+        assert!(scalar.max_abs_diff(&vector) == 0.0, "vec coordinator deviates");
+        assert!(scalar.max_abs_diff(&fused) == 0.0, "vec fused pipeline deviates");
+    }
+
+    #[test]
+    fn chain_pipeline_honours_plan_par_vec() {
+        let kind = StencilKind::Diffusion2D;
+        let dims = vec![64usize, 64];
+        let mk_plan = |pv: usize| {
+            PlanBuilder::new(kind)
+                .grid_dims(dims.clone())
+                .iterations(5)
+                .tile(vec![32, 32])
+                .step_sizes(vec![4, 2, 1])
+                .par_vec(pv)
+                .build()
+                .unwrap()
+        };
+        let mut scalar = mk_grid(kind, &dims, 11);
+        let mut vector = scalar.clone();
+        ChainPipeline::new(mk_plan(1)).run(&mut scalar, None).unwrap();
+        ChainPipeline::new(mk_plan(8)).run(&mut vector, None).unwrap();
+        assert!(scalar.max_abs_diff(&vector) == 0.0, "vectorized PE chain deviates");
     }
 
     #[test]

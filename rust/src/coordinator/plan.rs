@@ -10,7 +10,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::runtime::{Executor, TileSpec};
+use crate::runtime::{vec::is_valid_par_vec, Executor, HostExecutor, TileSpec, VecExecutor};
 use crate::stencil::StencilKind;
 
 /// A validated execution plan.
@@ -26,6 +26,9 @@ pub struct Plan {
     pub tile: Vec<usize>,
     /// Steps per pass; sums to `iterations`.
     pub chunks: Vec<usize>,
+    /// Host compute vector width (Table 1's `par_vec`): 1 selects the
+    /// scalar oracle, >1 the vectorized backend in [`Plan::executor`].
+    pub par_vec: usize,
 }
 
 impl Plan {
@@ -49,6 +52,18 @@ impl Plan {
     pub fn cell_updates(&self) -> u64 {
         self.grid_dims.iter().product::<usize>() as u64 * self.iterations as u64
     }
+
+    /// The host executor this plan selects: the scalar oracle at
+    /// `par_vec == 1`, the vectorized backend otherwise. This is how the
+    /// executor choice becomes a plan parameter — `Coordinator::run_planned`
+    /// and the pipelines' `run_planned` use it.
+    pub fn executor(&self) -> Box<dyn Executor + Send + Sync> {
+        if self.par_vec > 1 {
+            Box::new(VecExecutor::with_par_vec(self.par_vec))
+        } else {
+            Box::new(HostExecutor::new())
+        }
+    }
 }
 
 /// Builder with sensible defaults matching the shipped artifact set.
@@ -60,6 +75,7 @@ pub struct PlanBuilder {
     coeffs: Option<Vec<f32>>,
     tile: Option<Vec<usize>>,
     step_sizes: Vec<usize>,
+    par_vec: usize,
 }
 
 impl PlanBuilder {
@@ -72,7 +88,16 @@ impl PlanBuilder {
             tile: None,
             // Default artifact step counts (see aot.py VARIANTS).
             step_sizes: vec![4, 2, 1],
+            // Scalar by default — existing call sites keep their behaviour.
+            par_vec: 1,
         }
+    }
+
+    /// Host compute vector width (`par_vec`, a power of two ≤ 64). Values
+    /// above 1 make [`Plan::executor`] select the vectorized backend.
+    pub fn par_vec(mut self, par_vec: usize) -> Self {
+        self.par_vec = par_vec;
+        self
     }
 
     pub fn grid_dims(mut self, dims: Vec<usize>) -> Self {
@@ -166,6 +191,11 @@ impl PlanBuilder {
                  grid border (see DimBlocking::tile_origin); use a smaller tile"
             );
         }
+        ensure!(
+            is_valid_par_vec(self.par_vec),
+            "par_vec must be a power of two in 1..=64, got {}",
+            self.par_vec
+        );
         ensure!(!self.step_sizes.is_empty(), "step_sizes must not be empty");
         let mut sizes = self.step_sizes.clone();
         sizes.sort_unstable();
@@ -190,7 +220,15 @@ impl PlanBuilder {
             chunks.push(step);
             left -= step;
         }
-        Ok(Plan { stencil, grid_dims, iterations: self.iterations, coeffs, tile, chunks })
+        Ok(Plan {
+            stencil,
+            grid_dims,
+            iterations: self.iterations,
+            coeffs,
+            tile,
+            chunks,
+            par_vec: self.par_vec,
+        })
     }
 }
 
@@ -257,6 +295,35 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(p.tile, vec![64, 64]);
+    }
+
+    #[test]
+    fn par_vec_selects_executor() {
+        let scalar = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .build()
+            .unwrap();
+        assert_eq!(scalar.par_vec, 1);
+        assert_eq!(scalar.executor().backend_name(), "host-scalar");
+        let vector = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .par_vec(8)
+            .build()
+            .unwrap();
+        assert_eq!(vector.par_vec, 8);
+        assert_eq!(vector.executor().backend_name(), "host-vec");
+    }
+
+    #[test]
+    fn rejects_bad_par_vec() {
+        for bad in [0usize, 3, 6, 128] {
+            let err = PlanBuilder::new(StencilKind::Diffusion2D)
+                .grid_dims(vec![64, 64])
+                .par_vec(bad)
+                .build()
+                .unwrap_err();
+            assert!(err.to_string().contains("par_vec"), "{bad}: {err}");
+        }
     }
 
     #[test]

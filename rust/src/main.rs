@@ -17,7 +17,7 @@ use fstencil::coordinator::{Coordinator, FusedPipeline, PlanBuilder};
 use fstencil::dse::Tuner;
 use fstencil::model::Params;
 use fstencil::report;
-use fstencil::runtime::{Executor, HostExecutor, PjrtExecutor};
+use fstencil::runtime::{vec as vec_backend, Executor, HostExecutor, PjrtExecutor, VecExecutor};
 use fstencil::simulator::{BoardSim, Device, DeviceKind};
 use fstencil::stencil::{reference, Grid, StencilKind};
 use fstencil::util::cli::Args;
@@ -76,9 +76,9 @@ fn usage() {
 
 USAGE: fstencil <subcommand> [options]
 
-  run       --stencil <name> --dims H,W[,D] --iters N [--tile a,b] [--backend pjrt|host]
-            [--pipeline] [--check]
-  verify    [--backend pjrt|host]
+  run       --stencil <name> --dims H,W[,D] --iters N [--tile a,b]
+            [--backend pjrt|host|vec|auto] [--par-vec V] [--pipeline] [--check]
+  verify    [--backend pjrt|host|vec|auto] [--par-vec V]
   dse       --stencil <name> --device <sv|arria10> [--iters N]
   simulate  --stencil <name> --device <dev> --bsize B --par-vec V --par-time T
             [--dim D] [--iters N] [--no-padding]
@@ -103,16 +103,42 @@ fn parse_device(args: &Args) -> anyhow::Result<DeviceKind> {
     DeviceKind::parse(name).ok_or_else(|| anyhow::anyhow!("unknown device {name}"))
 }
 
-fn make_executor(args: &Args) -> anyhow::Result<Box<dyn Executor>> {
+fn parse_par_vec(args: &Args) -> anyhow::Result<usize> {
+    let pv = args.opt_usize("par-vec").unwrap_or(vec_backend::DEFAULT_PAR_VEC);
+    anyhow::ensure!(
+        vec_backend::is_valid_par_vec(pv),
+        "--par-vec must be a power of two in 1..={}, got {pv}",
+        vec_backend::MAX_PAR_VEC
+    );
+    Ok(pv)
+}
+
+/// Resolve the backend choice once. Returns the executor plus the
+/// `par_vec` the plan should record (1 unless a vector backend was
+/// chosen), so the plan parameter and the executor cannot diverge.
+fn make_executor(args: &Args) -> anyhow::Result<(Box<dyn Executor>, usize)> {
+    let mk_vec = |args: &Args| -> anyhow::Result<(Box<dyn Executor>, usize)> {
+        let pv = parse_par_vec(args)?;
+        Ok((Box::new(VecExecutor::with_par_vec(pv)), pv))
+    };
     match args.opt_or("backend", "auto") {
-        "host" => Ok(Box::new(HostExecutor::new())),
-        "pjrt" => Ok(Box::new(PjrtExecutor::load_default()?)),
+        "host" => Ok((Box::new(HostExecutor::new()), 1)),
+        "vec" => mk_vec(args),
+        "pjrt" => Ok((Box::new(PjrtExecutor::load_default()?), 1)),
         "auto" => {
             if Path::new("artifacts/manifest.json").exists() {
-                Ok(Box::new(PjrtExecutor::load_default()?))
+                match PjrtExecutor::load_default() {
+                    Ok(p) => Ok((Box::new(p), 1)),
+                    Err(e) => {
+                        eprintln!(
+                            "note: pjrt unavailable ({e:#}); using vectorized host backend"
+                        );
+                        mk_vec(args)
+                    }
+                }
             } else {
-                eprintln!("note: artifacts/ missing, falling back to host backend");
-                Ok(Box::new(HostExecutor::new()))
+                eprintln!("note: artifacts/ missing, using vectorized host backend");
+                mk_vec(args)
             }
         }
         other => anyhow::bail!("unknown backend {other}"),
@@ -125,11 +151,16 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         .opt_usize_list("dims")
         .unwrap_or_else(|| if kind.ndim() == 2 { vec![512, 512] } else { vec![64, 64, 64] });
     let iters = args.opt_usize("iters").unwrap_or(16);
-    let exec = make_executor(args)?;
+    let (exec, plan_par_vec) = make_executor(args)?;
     let mut builder = PlanBuilder::new(kind)
         .grid_dims(dims.clone())
         .iterations(iters)
-        .for_executor(exec.as_ref());
+        .for_executor(exec.as_ref())
+        // Record the host vector width in the plan so the pipeline path
+        // picks the same backend (the executor choice is a plan
+        // parameter). An explicit `--backend host` stays scalar (pv = 1)
+        // even when --par-vec is given.
+        .par_vec(plan_par_vec);
     if let Some(tile) = args.opt_usize_list("tile") {
         builder = builder.tile(tile);
     }
@@ -157,8 +188,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let check = args.flag("check");
     let before = grid.clone();
     let report = if args.flag("pipeline") {
-        // pipeline requires a Sync executor — host only
-        FusedPipeline::new(plan.clone()).run(&HostExecutor::new(), &mut grid, power.as_ref())?
+        // pipeline requires a Sync executor — run_planned picks the host
+        // scalar or vector backend from the plan's par_vec
+        FusedPipeline::new(plan.clone()).run_planned(&mut grid, power.as_ref())?
     } else {
         Coordinator::new(plan.clone()).run(exec.as_ref(), &mut grid, power.as_ref())?
     };
@@ -212,7 +244,7 @@ fn cmd_hlostats(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_verify(args: &Args) -> anyhow::Result<()> {
-    let exec = make_executor(args)?;
+    let (exec, _par_vec) = make_executor(args)?;
     println!("verifying backend '{}' against the scalar oracle", exec.backend_name());
     let mut failures = 0;
     for kind in StencilKind::ALL {

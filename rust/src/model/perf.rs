@@ -170,6 +170,28 @@ impl PerfModel {
             / (def.num_acc() as f64 * CELL_BYTES as f64);
         def.gflops_from_gbps(gbps)
     }
+
+    /// Eq 3 transposed onto the host backend: compute demand grows
+    /// linearly with `par_vec` (each lane updates one more cell per
+    /// "cycle") until it hits the memory roof `th_max`, exactly like the
+    /// FPGA pipeline's `th_mem` term. Given a measured *scalar* update
+    /// rate (Mcell/s), returns the modeled rate at `par_vec` lanes —
+    /// `min(scalar × par_vec, roof)` with the roof expressed in Mcell/s
+    /// through the stencil's bytes-per-cell-update.
+    ///
+    /// The scalar-vs-vector ablation (`cargo bench --bench
+    /// ablation_scaling`) prints this prediction next to the measured
+    /// `VecExecutor` throughput; EXPERIMENTS.md records the comparison.
+    pub fn host_par_vec_mcells(
+        &self,
+        def: &StencilDef,
+        scalar_mcells: f64,
+        par_vec: usize,
+    ) -> f64 {
+        let linear = scalar_mcells * par_vec as f64;
+        let roof_mcells = self.th_max_gbps * GB / 1e6 / def.bytes_pcu as f64;
+        linear.min(roof_mcells)
+    }
 }
 
 #[cfg(test)]
@@ -280,6 +302,26 @@ mod tests {
         let m = PerfModel::new(34.1); // Arria 10
         let r = m.roofline_gflops(StencilKind::Diffusion3D);
         assert!((r - 34.1 / 8.0 * 13.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn host_par_vec_model_is_linear_then_memory_bound() {
+        // 20 GB/s host roof, diffusion 2D (8 B per cell update) ->
+        // 2500 Mcell/s ceiling.
+        let m = PerfModel::new(20.0);
+        let def = StencilKind::Diffusion2D.def();
+        let scalar = 400.0; // Mcell/s measured at par_vec = 1
+        assert_eq!(m.host_par_vec_mcells(def, scalar, 1), 400.0);
+        assert_eq!(m.host_par_vec_mcells(def, scalar, 4), 1600.0);
+        // par_vec 8 would be 3200 linear, capped at the 2500 roof
+        assert_eq!(m.host_par_vec_mcells(def, scalar, 8), 2500.0);
+        // monotone non-decreasing in par_vec
+        let mut last = 0.0;
+        for pv in [1usize, 2, 4, 8, 16, 32] {
+            let v = m.host_par_vec_mcells(def, scalar, pv);
+            assert!(v >= last, "not monotone at {pv}");
+            last = v;
+        }
     }
 
     #[test]

@@ -4,11 +4,11 @@
 //! artifacts are unavailable; also the 1-step PE body of the chained
 //! pipeline.
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
-use crate::stencil::{reference, Grid, StencilKind};
+use crate::stencil::{reference, StencilKind};
 
-use super::{Executor, TileSpec};
+use super::{run_tile_with, Executor, TileSpec};
 
 /// In-process executor. Supports every tile shape and step count.
 #[derive(Debug, Clone, Copy, Default)]
@@ -28,36 +28,9 @@ impl Executor for HostExecutor {
         power: Option<&[f32]>,
         coeffs: &[f32],
     ) -> Result<Vec<f32>> {
-        let def = spec.kind.def();
-        ensure!(
-            tile.len() == spec.cells(),
-            "tile data {} != spec cells {}",
-            tile.len(),
-            spec.cells()
-        );
-        ensure!(
-            coeffs.len() == def.coeff_len,
-            "coeffs {} != {}",
-            coeffs.len(),
-            def.coeff_len
-        );
-        ensure!(
-            power.is_some() == def.has_power,
-            "power grid presence mismatch for {}",
-            spec.kind
-        );
-        let mut cur = Grid::from_vec(&spec.tile, tile.to_vec());
-        let pgrid = power.map(|p| {
-            assert_eq!(p.len(), spec.cells(), "power tile size mismatch");
-            Grid::from_vec(&spec.tile, p.to_vec())
-        });
-        // double-buffered iteration, allocation-free inner loop (§Perf)
-        let mut next = cur.clone();
-        for _ in 0..spec.steps {
-            reference::step_into(spec.kind, &cur, pgrid.as_ref(), coeffs, &mut next);
-            std::mem::swap(&mut cur, &mut next);
-        }
-        Ok(cur.into_data())
+        run_tile_with(spec, tile, power, coeffs, |cur, pw, c, next| {
+            reference::step_into(spec.kind, cur, pw, c, next)
+        })
     }
 
     fn variants(&self, _kind: StencilKind) -> Vec<TileSpec> {
@@ -72,7 +45,7 @@ impl Executor for HostExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::stencil::StencilDef;
+    use crate::stencil::{Grid, StencilDef};
 
     #[test]
     fn matches_whole_grid_reference_when_tile_is_grid() {

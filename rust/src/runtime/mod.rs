@@ -1,7 +1,8 @@
 //! Execution runtime: runs one *tile program* — `steps` fused time-steps
-//! over a halo-carrying tile — either through the AOT-compiled HLO
-//! artifacts on the PJRT CPU client ([`PjrtExecutor`]) or through the
-//! in-process scalar oracle ([`HostExecutor`]).
+//! over a halo-carrying tile — through the AOT-compiled HLO artifacts on
+//! the PJRT CPU client ([`PjrtExecutor`]), the in-process scalar oracle
+//! ([`HostExecutor`]), or the vectorized host backend ([`VecExecutor`],
+//! the software analogue of the paper's `par_vec` compute lanes).
 //!
 //! Python never appears here: artifacts are produced once by
 //! `make artifacts` (python/compile/aot.py) and loaded as HLO text
@@ -13,14 +14,16 @@ pub mod host;
 pub mod manifest;
 pub mod pjrt;
 pub mod tile;
+pub mod vec;
 
 pub use hlostats::{parse_hlo_text, HloStats};
 pub use host::HostExecutor;
 pub use manifest::{Manifest, Variant};
 pub use pjrt::PjrtExecutor;
 pub use tile::{extract_tile, writeback_tile};
+pub use vec::VecExecutor;
 
-use crate::stencil::StencilKind;
+use crate::stencil::{Grid, StencilKind};
 
 /// Identifies a tile program: stencil kind, tile shape, fused steps.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -49,6 +52,50 @@ impl TileSpec {
         let dims: Vec<String> = self.tile.iter().map(|d| d.to_string()).collect();
         format!("{}_t{}_s{}", self.kind.name(), dims.join("x"), self.steps)
     }
+}
+
+/// Shared tile-program driver for the in-process executors
+/// ([`HostExecutor`], [`VecExecutor`]): validates the
+/// (spec, tile, power, coeffs) contract, then runs `spec.steps`
+/// double-buffered applications of `step` with an allocation-free inner
+/// loop (§Perf). Keeping the validation in one place means the two host
+/// backends cannot drift apart.
+pub(crate) fn run_tile_with(
+    spec: &TileSpec,
+    tile: &[f32],
+    power: Option<&[f32]>,
+    coeffs: &[f32],
+    mut step: impl FnMut(&Grid, Option<&Grid>, &[f32], &mut Grid),
+) -> anyhow::Result<Vec<f32>> {
+    let def = spec.kind.def();
+    anyhow::ensure!(
+        tile.len() == spec.cells(),
+        "tile data {} != spec cells {}",
+        tile.len(),
+        spec.cells()
+    );
+    anyhow::ensure!(
+        coeffs.len() == def.coeff_len,
+        "coeffs {} != {}",
+        coeffs.len(),
+        def.coeff_len
+    );
+    anyhow::ensure!(
+        power.is_some() == def.has_power,
+        "power grid presence mismatch for {}",
+        spec.kind
+    );
+    let mut cur = Grid::from_vec(&spec.tile, tile.to_vec());
+    let pgrid = power.map(|p| {
+        assert_eq!(p.len(), spec.cells(), "power tile size mismatch");
+        Grid::from_vec(&spec.tile, p.to_vec())
+    });
+    let mut next = cur.clone();
+    for _ in 0..spec.steps {
+        step(&cur, pgrid.as_ref(), coeffs, &mut next);
+        std::mem::swap(&mut cur, &mut next);
+    }
+    Ok(cur.into_data())
 }
 
 /// A tile-program executor. Implementations must be deterministic and

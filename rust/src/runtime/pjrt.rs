@@ -5,143 +5,236 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute` → `to_tuple1` (aot.py lowers with
 //! `return_tuple=True`).
+//!
+//! The `xla` bindings are not part of the offline build environment, so
+//! the real implementation is gated behind the `xla` cargo feature. The
+//! default build ships a stub [`PjrtExecutor`] with the same surface whose
+//! `load` fails with a clear message; every caller (CLI `--backend auto`,
+//! benches, integration tests) already falls back to [`super::HostExecutor`]
+//! or skips when loading fails, so behaviour degrades gracefully.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "xla")]
+mod imp {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::Path;
 
-use anyhow::{anyhow, ensure, Context, Result};
+    use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::stencil::StencilKind;
+    use crate::stencil::StencilKind;
 
-use super::manifest::Manifest;
-use super::{Executor, TileSpec};
+    use super::super::manifest::Manifest;
+    use super::super::{Executor, TileSpec};
 
-/// Executor running AOT artifacts on the PJRT CPU client. Compiled
-/// executables are cached per artifact (compile once, execute many).
-pub struct PjrtExecutor {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
-
-impl PjrtExecutor {
-    /// Load from an artifacts directory (must contain `manifest.json`).
-    pub fn load(dir: &Path) -> Result<PjrtExecutor> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtExecutor { client, manifest, cache: RefCell::new(HashMap::new()) })
+    /// Executor running AOT artifacts on the PJRT CPU client. Compiled
+    /// executables are cached per artifact (compile once, execute many).
+    pub struct PjrtExecutor {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     }
 
-    /// Load from the conventional `./artifacts` directory.
-    pub fn load_default() -> Result<PjrtExecutor> {
-        Self::load(Path::new("artifacts"))
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn compiled(&self, spec: &TileSpec) -> Result<()> {
-        let name = spec.artifact_name();
-        if self.cache.borrow().contains_key(&name) {
-            return Ok(());
+    impl PjrtExecutor {
+        /// Load from an artifacts directory (must contain `manifest.json`).
+        pub fn load(dir: &Path) -> Result<PjrtExecutor> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(PjrtExecutor { client, manifest, cache: RefCell::new(HashMap::new()) })
         }
-        let variant = self
-            .manifest
-            .find(spec)
-            .ok_or_else(|| anyhow!("no artifact for {name}; re-run `make artifacts`"))?;
-        let path = self.manifest.hlo_path(variant);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name} on PJRT"))?;
-        self.cache.borrow_mut().insert(name, exe);
-        Ok(())
+
+        /// Load from the conventional `./artifacts` directory.
+        pub fn load_default() -> Result<PjrtExecutor> {
+            Self::load(Path::new("artifacts"))
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn compiled(&self, spec: &TileSpec) -> Result<()> {
+            let name = spec.artifact_name();
+            if self.cache.borrow().contains_key(&name) {
+                return Ok(());
+            }
+            let variant = self
+                .manifest
+                .find(spec)
+                .ok_or_else(|| anyhow!("no artifact for {name}; re-run `make artifacts`"))?;
+            let path = self.manifest.hlo_path(variant);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name} on PJRT"))?;
+            self.cache.borrow_mut().insert(name, exe);
+            Ok(())
+        }
+
+        /// Number of compiled executables currently cached.
+        pub fn cached_count(&self) -> usize {
+            self.cache.borrow().len()
+        }
+
+        /// Eagerly compile every artifact for `kind` (warm-up, keeps compile
+        /// time out of the measured hot path).
+        pub fn warm_up(&self, kind: StencilKind) -> Result<usize> {
+            let specs: Vec<TileSpec> =
+                self.manifest.for_kind(kind).iter().map(|v| v.spec.clone()).collect();
+            for spec in &specs {
+                self.compiled(spec)?;
+            }
+            Ok(specs.len())
+        }
+
+        fn literal_from(&self, data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+            let shape: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            Ok(xla::Literal::vec1(data).reshape(&shape)?)
+        }
     }
 
-    /// Number of compiled executables currently cached.
-    pub fn cached_count(&self) -> usize {
-        self.cache.borrow().len()
-    }
-
-    /// Eagerly compile every artifact for `kind` (warm-up, keeps compile
-    /// time out of the measured hot path).
-    pub fn warm_up(&self, kind: StencilKind) -> Result<usize> {
-        let specs: Vec<TileSpec> =
-            self.manifest.for_kind(kind).iter().map(|v| v.spec.clone()).collect();
-        for spec in &specs {
+    impl Executor for PjrtExecutor {
+        fn run_tile(
+            &self,
+            spec: &TileSpec,
+            tile: &[f32],
+            power: Option<&[f32]>,
+            coeffs: &[f32],
+        ) -> Result<Vec<f32>> {
+            let def = spec.kind.def();
+            ensure!(tile.len() == spec.cells(), "tile size mismatch");
+            ensure!(coeffs.len() == def.coeff_len, "coeff length mismatch");
+            ensure!(power.is_some() == def.has_power, "power presence mismatch");
             self.compiled(spec)?;
+            let name = spec.artifact_name();
+            let cache = self.cache.borrow();
+            let exe = cache.get(&name).expect("just compiled");
+
+            // Argument order matches python model.py: (x[, power], coeffs).
+            let x = self.literal_from(tile, &spec.tile)?;
+            let c = self.literal_from(coeffs, &[coeffs.len()])?;
+            let bufs = if let Some(p) = power {
+                let pw = self.literal_from(p, &spec.tile)?;
+                exe.execute::<xla::Literal>(&[x, pw, c])?
+            } else {
+                exe.execute::<xla::Literal>(&[x, c])?
+            };
+            let result = bufs[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+            let out = result.to_tuple1()?;
+            let v = out.to_vec::<f32>()?;
+            ensure!(v.len() == spec.cells(), "output size mismatch: {}", v.len());
+            Ok(v)
         }
-        Ok(specs.len())
+
+        fn variants(&self, kind: StencilKind) -> Vec<TileSpec> {
+            self.manifest.for_kind(kind).iter().map(|v| v.spec.clone()).collect()
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "pjrt-cpu"
+        }
     }
 
-    fn literal_from(&self, data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-        let shape: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(data).reshape(&shape)?)
+    // PJRT execution is funneled through a RefCell'd cache; the executor is
+    // used from one thread at a time (the coordinator's compute stage).
+    // (Deliberately NOT Sync.)
+}
+
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use crate::stencil::StencilKind;
+
+    use super::super::manifest::Manifest;
+    use super::super::{Executor, TileSpec};
+
+    /// Stub PJRT executor used when the crate is built without the `xla`
+    /// feature. [`PjrtExecutor::load`] always fails, so none of the other
+    /// methods can be reached; they exist to keep the API identical to the
+    /// real backend.
+    pub struct PjrtExecutor {
+        manifest: Manifest,
+    }
+
+    impl PjrtExecutor {
+        /// Always fails: the `xla` bindings are absent from this build.
+        /// The manifest is still validated first so configuration errors
+        /// surface with the more specific message.
+        pub fn load(dir: &Path) -> Result<PjrtExecutor> {
+            let _manifest = Manifest::load(dir)?;
+            bail!(
+                "PJRT backend unavailable: fstencil was built without the `xla` \
+                 feature (the offline environment has no xla bindings); use the \
+                 host or vec backend instead"
+            );
+        }
+
+        /// Load from the conventional `./artifacts` directory.
+        pub fn load_default() -> Result<PjrtExecutor> {
+            Self::load(Path::new("artifacts"))
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without `xla`)".to_string()
+        }
+
+        /// Number of compiled executables currently cached (always 0).
+        pub fn cached_count(&self) -> usize {
+            0
+        }
+
+        /// Eagerly compile every artifact for `kind` — unreachable on the
+        /// stub, since [`PjrtExecutor::load`] never succeeds.
+        pub fn warm_up(&self, _kind: StencilKind) -> Result<usize> {
+            unreachable!("stub PjrtExecutor cannot be constructed")
+        }
+    }
+
+    impl Executor for PjrtExecutor {
+        fn run_tile(
+            &self,
+            _spec: &TileSpec,
+            _tile: &[f32],
+            _power: Option<&[f32]>,
+            _coeffs: &[f32],
+        ) -> Result<Vec<f32>> {
+            unreachable!("stub PjrtExecutor cannot be constructed")
+        }
+
+        fn variants(&self, _kind: StencilKind) -> Vec<TileSpec> {
+            unreachable!("stub PjrtExecutor cannot be constructed")
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "pjrt-stub"
+        }
     }
 }
 
-impl Executor for PjrtExecutor {
-    fn run_tile(
-        &self,
-        spec: &TileSpec,
-        tile: &[f32],
-        power: Option<&[f32]>,
-        coeffs: &[f32],
-    ) -> Result<Vec<f32>> {
-        let def = spec.kind.def();
-        ensure!(tile.len() == spec.cells(), "tile size mismatch");
-        ensure!(coeffs.len() == def.coeff_len, "coeff length mismatch");
-        ensure!(power.is_some() == def.has_power, "power presence mismatch");
-        self.compiled(spec)?;
-        let name = spec.artifact_name();
-        let cache = self.cache.borrow();
-        let exe = cache.get(&name).expect("just compiled");
+pub use imp::PjrtExecutor;
 
-        // Argument order matches python model.py: (x[, power], coeffs).
-        let x = self.literal_from(tile, &spec.tile)?;
-        let c = self.literal_from(coeffs, &[coeffs.len()])?;
-        let bufs = if let Some(p) = power {
-            let pw = self.literal_from(p, &spec.tile)?;
-            exe.execute::<xla::Literal>(&[x, pw, c])?
-        } else {
-            exe.execute::<xla::Literal>(&[x, c])?
-        };
-        let result = bufs[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        let v = out.to_vec::<f32>()?;
-        ensure!(v.len() == spec.cells(), "output size mismatch: {}", v.len());
-        Ok(v)
-    }
-
-    fn variants(&self, kind: StencilKind) -> Vec<TileSpec> {
-        self.manifest.for_kind(kind).iter().map(|v| v.spec.clone()).collect()
-    }
-
-    fn backend_name(&self) -> &'static str {
-        "pjrt-cpu"
-    }
-}
-
-// PJRT execution is funneled through a RefCell'd cache; the executor is
-// used from one thread at a time (the coordinator's compute stage).
-// (Deliberately NOT Sync.)
-
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
+    use std::path::Path;
+
     use super::*;
-    use crate::runtime::HostExecutor;
+    use crate::runtime::{Executor, HostExecutor, TileSpec};
+    use crate::stencil::StencilKind;
     use crate::util::prop::Rng;
 
     fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -213,5 +306,36 @@ mod tests {
             .run_tile(&spec, &tile, None, StencilKind::Diffusion2D.def().default_coeffs)
             .unwrap_err();
         assert!(err.to_string().contains("no artifact"), "{err}");
+    }
+}
+
+#[cfg(all(test, not(feature = "xla")))]
+mod stub_tests {
+    use std::path::Path;
+
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_with_clear_message() {
+        // Point at a directory with a valid manifest so the failure is the
+        // stub's, not a manifest error.
+        let dir = std::env::temp_dir().join("fstencil_pjrt_stub_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":1,"variants":[
+                {"name":"diffusion2d_t64x64_s4","kind":"diffusion2d","tile":[64,64],
+                 "steps":4,"has_power":false,"coeff_len":5,
+                 "file":"diffusion2d_t64x64_s4.hlo.txt","sha256":"x"}]}"#,
+        )
+        .unwrap();
+        let err = PjrtExecutor::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn stub_load_reports_manifest_errors_first() {
+        let err = PjrtExecutor::load(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert!(!err.to_string().contains("xla"), "{err:#}");
     }
 }

@@ -1,0 +1,623 @@
+//! Vectorized host tile executor: the software analogue of the paper's
+//! `par_vec` compute lanes (§3.2, Table 1).
+//!
+//! On the FPGA, `par_vec` replicates the cell-update datapath so each PE
+//! updates `par_vec` cells per clock. Here the same parameter selects a
+//! lane count `L` and the kernels process each interior row in `L`-wide
+//! chunks through fixed-size array views (`&[f32; L]`), which removes all
+//! per-cell bounds checks and lets LLVM autovectorize the lane loop into
+//! SIMD — one lane per cell, exactly like the hardware's vectorized PE.
+//!
+//! **Bit-compatibility.** Every lane evaluates the stencil expression in
+//! the same operand order as the scalar oracle
+//! ([`crate::stencil::reference`]), and lane-parallel SIMD never
+//! reassociates per-cell arithmetic, so results are bit-identical to
+//! [`super::HostExecutor`] — property-tested in this module and in
+//! `rust/tests/integration_pipeline.rs`. The split mirrors the oracle's:
+//! a branch-free interior fast path plus a clamped boundary slow path that
+//! calls the oracle's own shell visitor and clamped cell evaluators.
+//!
+//! The four paper stencils (Diffusion 2D/3D, Hotspot 2D/3D) have dedicated
+//! vector kernels; the radius-2 extension falls back to the scalar oracle
+//! (still bit-identical, trivially).
+
+use anyhow::Result;
+
+use crate::stencil::{reference, Grid, StencilKind};
+
+use super::{run_tile_with, Executor, TileSpec};
+
+/// In-process vectorized executor. Supports every tile shape and step
+/// count, like [`super::HostExecutor`], but updates `par_vec` cells per
+/// inner-loop iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VecExecutor {
+    par_vec: usize,
+}
+
+/// Default lane count — matches the paper's most common Arria 10
+/// configuration (Table 4 uses par_vec = 8 for 3 of 4 stencils).
+pub const DEFAULT_PAR_VEC: usize = 8;
+
+/// Largest supported lane count (wider than any SIMD unit we target;
+/// beyond this the chunk remainder handling starts to dominate).
+pub const MAX_PAR_VEC: usize = 64;
+
+impl VecExecutor {
+    /// Executor with the default lane count ([`DEFAULT_PAR_VEC`]).
+    pub fn new() -> VecExecutor {
+        VecExecutor { par_vec: DEFAULT_PAR_VEC }
+    }
+
+    /// Executor with an explicit lane count.
+    ///
+    /// # Panics
+    /// If `par_vec` is not a power of two in `1..=`[`MAX_PAR_VEC`] (the
+    /// §5.3 restriction the DSE space also applies).
+    pub fn with_par_vec(par_vec: usize) -> VecExecutor {
+        assert!(
+            is_valid_par_vec(par_vec),
+            "par_vec must be a power of two in 1..={MAX_PAR_VEC}, got {par_vec}"
+        );
+        VecExecutor { par_vec }
+    }
+
+    /// The configured lane count.
+    pub fn par_vec(&self) -> usize {
+        self.par_vec
+    }
+}
+
+impl Default for VecExecutor {
+    fn default() -> VecExecutor {
+        VecExecutor::new()
+    }
+}
+
+/// Whether `par_vec` is accepted by [`VecExecutor::with_par_vec`] (and by
+/// `PlanBuilder::par_vec`): a power of two in `1..=`[`MAX_PAR_VEC`].
+pub fn is_valid_par_vec(par_vec: usize) -> bool {
+    par_vec.is_power_of_two() && par_vec <= MAX_PAR_VEC
+}
+
+impl Executor for VecExecutor {
+    fn run_tile(
+        &self,
+        spec: &TileSpec,
+        tile: &[f32],
+        power: Option<&[f32]>,
+        coeffs: &[f32],
+    ) -> Result<Vec<f32>> {
+        run_tile_with(spec, tile, power, coeffs, |cur, pw, c, next| {
+            step_into(self.par_vec, spec.kind, cur, pw, c, next)
+        })
+    }
+
+    fn variants(&self, _kind: StencilKind) -> Vec<TileSpec> {
+        Vec::new() // anything goes
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "host-vec"
+    }
+}
+
+/// One vectorized time-step of `kind` with `par_vec` lanes. Semantics
+/// (and bits) identical to [`reference::step_into`].
+pub fn step_into(
+    par_vec: usize,
+    kind: StencilKind,
+    input: &Grid,
+    power: Option<&Grid>,
+    coeffs: &[f32],
+    out: &mut Grid,
+) {
+    assert!(is_valid_par_vec(par_vec), "invalid par_vec {par_vec}");
+    match par_vec {
+        1 => step_into_lanes::<1>(kind, input, power, coeffs, out),
+        2 => step_into_lanes::<2>(kind, input, power, coeffs, out),
+        4 => step_into_lanes::<4>(kind, input, power, coeffs, out),
+        8 => step_into_lanes::<8>(kind, input, power, coeffs, out),
+        16 => step_into_lanes::<16>(kind, input, power, coeffs, out),
+        32 => step_into_lanes::<32>(kind, input, power, coeffs, out),
+        64 => step_into_lanes::<64>(kind, input, power, coeffs, out),
+        _ => unreachable!("is_valid_par_vec admits only powers of two <= 64"),
+    }
+}
+
+fn step_into_lanes<const L: usize>(
+    kind: StencilKind,
+    input: &Grid,
+    power: Option<&Grid>,
+    coeffs: &[f32],
+    out: &mut Grid,
+) {
+    let def = kind.def();
+    assert_eq!(coeffs.len(), def.coeff_len, "coefficient count mismatch");
+    assert_eq!(input.ndim(), kind.ndim(), "grid dimensionality mismatch");
+    assert_eq!(out.dims(), input.dims(), "output grid dims mismatch");
+    if def.has_power {
+        let p = power.expect("hotspot stencils require a power grid");
+        assert_eq!(p.dims(), input.dims(), "power grid dims mismatch");
+    }
+    match kind {
+        StencilKind::Diffusion2D => diffusion2d::<L>(input, coeffs, out),
+        StencilKind::Diffusion3D => diffusion3d::<L>(input, coeffs, out),
+        StencilKind::Hotspot2D => hotspot2d::<L>(input, power.unwrap(), coeffs, out),
+        StencilKind::Hotspot3D => hotspot3d::<L>(input, power.unwrap(), coeffs, out),
+        // Radius-2 extension: scalar oracle fallback (no vector kernel yet).
+        StencilKind::Diffusion2DR2 => reference::step_into(kind, input, power, coeffs, out),
+    }
+}
+
+// ------------------------------------------------------------ lane helpers
+
+/// Fixed-width array view into a slice: one bounds check per chunk instead
+/// of one per lane, and a shape LLVM reliably turns into vector loads.
+#[inline(always)]
+fn lanes<const L: usize>(s: &[f32], at: usize) -> &[f32; L] {
+    s[at..at + L].try_into().unwrap()
+}
+
+#[inline(always)]
+fn lanes_mut<const L: usize>(s: &mut [f32], at: usize) -> &mut [f32; L] {
+    (&mut s[at..at + L]).try_into().unwrap()
+}
+
+// ------------------------------------------------------------- row kernels
+//
+// Each kernel evaluates one interior row span. Operand order per lane is
+// copied verbatim from the scalar oracle so results match bit-for-bit.
+
+/// Diffusion 2D/weights row: `o = kc*c + kw*w + ke*e + ks*s + kn*n`.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn row_diffusion2d<const L: usize>(
+    o: &mut [f32],
+    c: &[f32],
+    w: &[f32],
+    e: &[f32],
+    s: &[f32],
+    n: &[f32],
+    k: &[f32],
+) {
+    let (kc, kn, ks, kw, ke) = (k[0], k[1], k[2], k[3], k[4]);
+    let len = o.len();
+    let full = len / L * L;
+    let mut at = 0;
+    while at < full {
+        let ov = lanes_mut::<L>(o, at);
+        let cv = lanes::<L>(c, at);
+        let wv = lanes::<L>(w, at);
+        let ev = lanes::<L>(e, at);
+        let sv = lanes::<L>(s, at);
+        let nv = lanes::<L>(n, at);
+        for j in 0..L {
+            ov[j] = kc * cv[j] + kw * wv[j] + ke * ev[j] + ks * sv[j] + kn * nv[j];
+        }
+        at += L;
+    }
+    // remainder: the same kernel at L = 1, so the expression above is the
+    // single copy of this stencil's arithmetic (bit-identity by construction)
+    if L > 1 && full < len {
+        row_diffusion2d::<1>(
+            &mut o[full..],
+            &c[full..],
+            &w[full..],
+            &e[full..],
+            &s[full..],
+            &n[full..],
+            k,
+        );
+    }
+}
+
+/// Diffusion 3D row: adds the above/below plane taps.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn row_diffusion3d<const L: usize>(
+    o: &mut [f32],
+    c: &[f32],
+    w: &[f32],
+    e: &[f32],
+    s: &[f32],
+    n: &[f32],
+    b: &[f32],
+    a: &[f32],
+    k: &[f32],
+) {
+    let (kc, kn, ks, kw, ke, ka, kb) = (k[0], k[1], k[2], k[3], k[4], k[5], k[6]);
+    let len = o.len();
+    let full = len / L * L;
+    let mut at = 0;
+    while at < full {
+        let ov = lanes_mut::<L>(o, at);
+        let cv = lanes::<L>(c, at);
+        let wv = lanes::<L>(w, at);
+        let ev = lanes::<L>(e, at);
+        let sv = lanes::<L>(s, at);
+        let nv = lanes::<L>(n, at);
+        let bv = lanes::<L>(b, at);
+        let av = lanes::<L>(a, at);
+        for j in 0..L {
+            ov[j] = kc * cv[j]
+                + kw * wv[j]
+                + ke * ev[j]
+                + ks * sv[j]
+                + kn * nv[j]
+                + kb * bv[j]
+                + ka * av[j];
+        }
+        at += L;
+    }
+    if L > 1 && full < len {
+        row_diffusion3d::<1>(
+            &mut o[full..],
+            &c[full..],
+            &w[full..],
+            &e[full..],
+            &s[full..],
+            &n[full..],
+            &b[full..],
+            &a[full..],
+            k,
+        );
+    }
+}
+
+/// Hotspot 2D row: Rodinia update with the power input.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn row_hotspot2d<const L: usize>(
+    o: &mut [f32],
+    c: &[f32],
+    w: &[f32],
+    e: &[f32],
+    s: &[f32],
+    n: &[f32],
+    p: &[f32],
+    k: &[f32],
+) {
+    let (sdc, rx1, ry1, rz1, amb) = (k[0], k[1], k[2], k[3], k[4]);
+    let len = o.len();
+    let full = len / L * L;
+    let mut at = 0;
+    while at < full {
+        let ov = lanes_mut::<L>(o, at);
+        let cv = lanes::<L>(c, at);
+        let wv = lanes::<L>(w, at);
+        let ev = lanes::<L>(e, at);
+        let sv = lanes::<L>(s, at);
+        let nv = lanes::<L>(n, at);
+        let pv = lanes::<L>(p, at);
+        for j in 0..L {
+            let t = cv[j];
+            ov[j] = t
+                + sdc
+                    * (pv[j]
+                        + (nv[j] + sv[j] - 2.0 * t) * ry1
+                        + (ev[j] + wv[j] - 2.0 * t) * rx1
+                        + (amb - t) * rz1);
+        }
+        at += L;
+    }
+    if L > 1 && full < len {
+        row_hotspot2d::<1>(
+            &mut o[full..],
+            &c[full..],
+            &w[full..],
+            &e[full..],
+            &s[full..],
+            &n[full..],
+            &p[full..],
+            k,
+        );
+    }
+}
+
+/// Hotspot 3D row: 7-point sum of products plus power and ambient terms.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn row_hotspot3d<const L: usize>(
+    o: &mut [f32],
+    c: &[f32],
+    w: &[f32],
+    e: &[f32],
+    s: &[f32],
+    n: &[f32],
+    b: &[f32],
+    a: &[f32],
+    p: &[f32],
+    k: &[f32],
+) {
+    let (kc, kn, ks, kw, ke, ka, kb, sdc, amb) =
+        (k[0], k[1], k[2], k[3], k[4], k[5], k[6], k[7], k[8]);
+    let len = o.len();
+    let full = len / L * L;
+    let mut at = 0;
+    while at < full {
+        let ov = lanes_mut::<L>(o, at);
+        let cv = lanes::<L>(c, at);
+        let wv = lanes::<L>(w, at);
+        let ev = lanes::<L>(e, at);
+        let sv = lanes::<L>(s, at);
+        let nv = lanes::<L>(n, at);
+        let bv = lanes::<L>(b, at);
+        let av = lanes::<L>(a, at);
+        let pv = lanes::<L>(p, at);
+        for j in 0..L {
+            ov[j] = cv[j] * kc
+                + nv[j] * kn
+                + sv[j] * ks
+                + ev[j] * ke
+                + wv[j] * kw
+                + av[j] * ka
+                + bv[j] * kb
+                + sdc * pv[j]
+                + ka * amb;
+        }
+        at += L;
+    }
+    if L > 1 && full < len {
+        row_hotspot3d::<1>(
+            &mut o[full..],
+            &c[full..],
+            &w[full..],
+            &e[full..],
+            &s[full..],
+            &n[full..],
+            &b[full..],
+            &a[full..],
+            &p[full..],
+            k,
+        );
+    }
+}
+
+// -------------------------------------------------------------- 2D drivers
+
+fn diffusion2d<const L: usize>(g: &Grid, k: &[f32], out: &mut Grid) {
+    let (ny, nx) = (g.ny(), g.nx());
+    // interior fast path: rows in L-wide chunks, no per-cell bounds checks
+    if ny >= 3 && nx >= 3 {
+        let d = g.data();
+        let o = out.data_mut();
+        let span = nx - 2;
+        for y in 1..ny - 1 {
+            let r = y * nx;
+            row_diffusion2d::<L>(
+                &mut o[r + 1..r + 1 + span],
+                &d[r + 1..r + 1 + span],
+                &d[r..r + span],
+                &d[r + 2..r + 2 + span],
+                &d[r + nx + 1..r + nx + 1 + span],
+                &d[r - nx + 1..r - nx + 1 + span],
+                k,
+            );
+        }
+    }
+    // boundary shell: the oracle's own clamped slow path
+    reference::boundary_shell_2d(ny, nx, 1, |y, x| {
+        out.set(0, y, x, reference::clamped_cell_diffusion2d(g, k, y, x));
+    });
+}
+
+fn hotspot2d<const L: usize>(g: &Grid, pw: &Grid, k: &[f32], out: &mut Grid) {
+    let (ny, nx) = (g.ny(), g.nx());
+    if ny >= 3 && nx >= 3 {
+        let d = g.data();
+        let p = pw.data();
+        let o = out.data_mut();
+        let span = nx - 2;
+        for y in 1..ny - 1 {
+            let r = y * nx;
+            row_hotspot2d::<L>(
+                &mut o[r + 1..r + 1 + span],
+                &d[r + 1..r + 1 + span],
+                &d[r..r + span],
+                &d[r + 2..r + 2 + span],
+                &d[r + nx + 1..r + nx + 1 + span],
+                &d[r - nx + 1..r - nx + 1 + span],
+                &p[r + 1..r + 1 + span],
+                k,
+            );
+        }
+    }
+    reference::boundary_shell_2d(ny, nx, 1, |y, x| {
+        out.set(0, y, x, reference::clamped_cell_hotspot2d(g, pw, k, y, x));
+    });
+}
+
+// -------------------------------------------------------------- 3D drivers
+
+fn diffusion3d<const L: usize>(g: &Grid, k: &[f32], out: &mut Grid) {
+    let (nz, ny, nx) = (g.nz(), g.ny(), g.nx());
+    let plane = ny * nx;
+    if nz >= 3 && ny >= 3 && nx >= 3 {
+        let d = g.data();
+        let o = out.data_mut();
+        let span = nx - 2;
+        for z in 1..nz - 1 {
+            for y in 1..ny - 1 {
+                let r = (z * ny + y) * nx;
+                row_diffusion3d::<L>(
+                    &mut o[r + 1..r + 1 + span],
+                    &d[r + 1..r + 1 + span],
+                    &d[r..r + span],
+                    &d[r + 2..r + 2 + span],
+                    &d[r + nx + 1..r + nx + 1 + span],
+                    &d[r - nx + 1..r - nx + 1 + span],
+                    &d[r + plane + 1..r + plane + 1 + span],
+                    &d[r - plane + 1..r - plane + 1 + span],
+                    k,
+                );
+            }
+        }
+    }
+    reference::boundary_shell_3d(nz, ny, nx, |z, y, x| {
+        out.set(z, y, x, reference::clamped_cell_diffusion3d(g, k, z, y, x));
+    });
+}
+
+fn hotspot3d<const L: usize>(g: &Grid, pw: &Grid, k: &[f32], out: &mut Grid) {
+    let (nz, ny, nx) = (g.nz(), g.ny(), g.nx());
+    let plane = ny * nx;
+    if nz >= 3 && ny >= 3 && nx >= 3 {
+        let d = g.data();
+        let p = pw.data();
+        let o = out.data_mut();
+        let span = nx - 2;
+        for z in 1..nz - 1 {
+            for y in 1..ny - 1 {
+                let r = (z * ny + y) * nx;
+                row_hotspot3d::<L>(
+                    &mut o[r + 1..r + 1 + span],
+                    &d[r + 1..r + 1 + span],
+                    &d[r..r + span],
+                    &d[r + 2..r + 2 + span],
+                    &d[r + nx + 1..r + nx + 1 + span],
+                    &d[r - nx + 1..r - nx + 1 + span],
+                    &d[r + plane + 1..r + plane + 1 + span],
+                    &d[r - plane + 1..r - plane + 1 + span],
+                    &p[r + 1..r + 1 + span],
+                    k,
+                );
+            }
+        }
+    }
+    reference::boundary_shell_3d(nz, ny, nx, |z, y, x| {
+        out.set(z, y, x, reference::clamped_cell_hotspot3d(g, pw, k, z, y, x));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostExecutor;
+    use crate::util::prop::{forall, Rng};
+
+    fn bitwise_equal(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn run_both(
+        kind: StencilKind,
+        dims: &[usize],
+        steps: usize,
+        par_vec: usize,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let def = kind.def();
+        let n: usize = dims.iter().product();
+        let mut rng = Rng::new(seed);
+        let tile = rng.f32_vec(n, -1.0, 1.0);
+        let power = def.has_power.then(|| rng.f32_vec(n, 0.0, 0.5));
+        let spec = TileSpec::new(kind, dims, steps);
+        let scalar = HostExecutor::new()
+            .run_tile(&spec, &tile, power.as_deref(), def.default_coeffs)
+            .unwrap();
+        let vector = VecExecutor::with_par_vec(par_vec)
+            .run_tile(&spec, &tile, power.as_deref(), def.default_coeffs)
+            .unwrap();
+        (scalar, vector)
+    }
+
+    /// THE core claim: vectorized == scalar, to the bit, for every paper
+    /// stencil at a production-ish tile size.
+    #[test]
+    fn bit_identical_to_host_fixed_shapes() {
+        for kind in StencilKind::ALL {
+            let dims: Vec<usize> =
+                if kind.ndim() == 2 { vec![64, 64] } else { vec![16, 16, 16] };
+            let (scalar, vector) = run_both(kind, &dims, 4, 8, 7);
+            assert!(bitwise_equal(&scalar, &vector), "{kind}: vector path deviates");
+        }
+    }
+
+    /// Property test over random grids, shapes, step counts and lane
+    /// widths — the acceptance gate for the vectorized backend.
+    #[test]
+    fn prop_bit_identical_to_host() {
+        forall(
+            "VecExecutor == HostExecutor bit-for-bit",
+            25,
+            |r: &mut Rng| {
+                let kind = *r.pick(&StencilKind::ALL_EXT);
+                let dims: Vec<usize> =
+                    (0..kind.ndim()).map(|_| r.usize_in(1, 24)).collect();
+                let steps = r.usize_in(1, 4);
+                let par_vec = *r.pick(&[1usize, 2, 4, 8, 16, 32, 64]);
+                (kind, dims, steps, par_vec, r.next_u64())
+            },
+            |(kind, dims, steps, par_vec, seed)| {
+                let (scalar, vector) = run_both(*kind, dims, *steps, *par_vec, *seed);
+                if !bitwise_equal(&scalar, &vector) {
+                    return Err(format!(
+                        "{kind} dims {dims:?} steps {steps} par_vec {par_vec}: \
+                         vector deviates from scalar"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn all_lane_widths_agree() {
+        let kind = StencilKind::Diffusion2D;
+        let dims = [37usize, 53]; // deliberately non-multiples of any L
+        let base = run_both(kind, &dims, 3, 1, 11).1;
+        for pv in [2usize, 4, 8, 16, 32, 64] {
+            let v = run_both(kind, &dims, 3, pv, 11).1;
+            assert!(bitwise_equal(&base, &v), "par_vec {pv} deviates from par_vec 1");
+        }
+    }
+
+    #[test]
+    fn radius2_falls_back_to_oracle() {
+        let (scalar, vector) = run_both(StencilKind::Diffusion2DR2, &[20, 20], 2, 8, 3);
+        assert!(bitwise_equal(&scalar, &vector));
+    }
+
+    #[test]
+    fn tiny_grids_are_all_boundary() {
+        // 1xN and Nx1 grids exercise the shell-only path.
+        for dims in [vec![1usize, 9], vec![9, 1], vec![2, 2], vec![1, 1]] {
+            let (scalar, vector) = run_both(StencilKind::Diffusion2D, &dims, 2, 8, 5);
+            assert!(bitwise_equal(&scalar, &vector), "dims {dims:?}");
+        }
+    }
+
+    #[test]
+    fn validates_inputs_like_host() {
+        let exec = VecExecutor::new();
+        let spec = TileSpec::new(StencilKind::Diffusion2D, &[8, 8], 1);
+        let coeffs = StencilKind::Diffusion2D.def().default_coeffs;
+        assert!(exec.run_tile(&spec, &[0.0; 63], None, coeffs).is_err());
+        assert!(exec.run_tile(&spec, &[0.0; 64], None, &[0.1; 3]).is_err());
+        let hspec = TileSpec::new(StencilKind::Hotspot2D, &[8, 8], 1);
+        let hcoeffs = StencilKind::Hotspot2D.def().default_coeffs;
+        assert!(exec.run_tile(&hspec, &[0.0; 64], None, hcoeffs).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "par_vec")]
+    fn rejects_non_power_of_two_lanes() {
+        VecExecutor::with_par_vec(3);
+    }
+
+    #[test]
+    #[should_panic(expected = "par_vec")]
+    fn rejects_oversized_lanes() {
+        VecExecutor::with_par_vec(128);
+    }
+
+    #[test]
+    fn supports_everything() {
+        let v = VecExecutor::new();
+        assert!(v.supports(&TileSpec::new(StencilKind::Hotspot3D, &[5, 7, 9], 11)));
+        assert_eq!(v.par_vec(), DEFAULT_PAR_VEC);
+        assert_eq!(VecExecutor::with_par_vec(4).par_vec(), 4);
+    }
+}

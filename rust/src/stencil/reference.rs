@@ -79,16 +79,22 @@ fn diffusion2d(g: &Grid, c: &[f32], out: &mut Grid) {
         }
     }
     // boundary shell (clamped)
-    let cell = |y: usize, x: usize, out: &mut Grid| {
-        let (yi, xi) = (y as isize, x as isize);
-        let v = cc * g.get(0, y, x)
-            + cw * g.get_clamped(0, yi, xi - 1)
-            + ce * g.get_clamped(0, yi, xi + 1)
-            + cs * g.get_clamped(0, yi + 1, xi)
-            + cn * g.get_clamped(0, yi - 1, xi);
-        out.set(0, y, x, v);
-    };
-    boundary_shell_2d(ny, nx, 1, |y, x| cell(y, x, out));
+    boundary_shell_2d(ny, nx, 1, |y, x| {
+        out.set(0, y, x, clamped_cell_diffusion2d(g, c, y, x));
+    });
+}
+
+/// Clamped evaluation of one Diffusion 2D cell — the boundary slow path,
+/// shared with the vectorized backend so both stay bit-identical.
+#[inline]
+pub(crate) fn clamped_cell_diffusion2d(g: &Grid, c: &[f32], y: usize, x: usize) -> f32 {
+    let (cc, cn, cs, cw, ce) = (c[0], c[1], c[2], c[3], c[4]);
+    let (yi, xi) = (y as isize, x as isize);
+    cc * g.get(0, y, x)
+        + cw * g.get_clamped(0, yi, xi - 1)
+        + ce * g.get_clamped(0, yi, xi + 1)
+        + cs * g.get_clamped(0, yi + 1, xi)
+        + cn * g.get_clamped(0, yi - 1, xi)
 }
 
 fn diffusion2d_r2(g: &Grid, c: &[f32], out: &mut Grid) {
@@ -152,26 +158,33 @@ fn hotspot2d(g: &Grid, pw: &Grid, c: &[f32], out: &mut Grid) {
             }
         }
     }
-    let cell = |y: usize, x: usize, out: &mut Grid| {
-        let (yi, xi) = (y as isize, x as isize);
-        let cv = g.get(0, y, x);
-        let n = g.get_clamped(0, yi - 1, xi);
-        let s = g.get_clamped(0, yi + 1, xi);
-        let w = g.get_clamped(0, yi, xi - 1);
-        let e = g.get_clamped(0, yi, xi + 1);
-        let v = cv
-            + sdc
-                * (pw.get(0, y, x)
-                    + (n + s - 2.0 * cv) * ry1
-                    + (e + w - 2.0 * cv) * rx1
-                    + (amb - cv) * rz1);
-        out.set(0, y, x, v);
-    };
-    boundary_shell_2d(ny, nx, 1, |y, x| cell(y, x, out));
+    boundary_shell_2d(ny, nx, 1, |y, x| {
+        out.set(0, y, x, clamped_cell_hotspot2d(g, pw, c, y, x));
+    });
 }
 
-/// Visit every cell within `rad` of a 2D grid face exactly once.
-fn boundary_shell_2d(ny: usize, nx: usize, rad: usize, mut f: impl FnMut(usize, usize)) {
+/// Clamped evaluation of one Hotspot 2D cell (boundary slow path, shared
+/// with the vectorized backend).
+#[inline]
+pub(crate) fn clamped_cell_hotspot2d(g: &Grid, pw: &Grid, c: &[f32], y: usize, x: usize) -> f32 {
+    let (sdc, rx1, ry1, rz1, amb) = (c[0], c[1], c[2], c[3], c[4]);
+    let (yi, xi) = (y as isize, x as isize);
+    let cv = g.get(0, y, x);
+    let n = g.get_clamped(0, yi - 1, xi);
+    let s = g.get_clamped(0, yi + 1, xi);
+    let w = g.get_clamped(0, yi, xi - 1);
+    let e = g.get_clamped(0, yi, xi + 1);
+    cv + sdc
+        * (pw.get(0, y, x)
+            + (n + s - 2.0 * cv) * ry1
+            + (e + w - 2.0 * cv) * rx1
+            + (amb - cv) * rz1)
+}
+
+/// Visit every cell within `rad` of a 2D grid face exactly once. Shared
+/// with the vectorized backend (`runtime::vec`), whose clamped slow path
+/// must visit exactly the same cells.
+pub(crate) fn boundary_shell_2d(ny: usize, nx: usize, rad: usize, mut f: impl FnMut(usize, usize)) {
     if ny <= 2 * rad || nx <= 2 * rad {
         // grid too small for an interior: visit everything
         for y in 0..ny {
@@ -220,18 +233,24 @@ fn diffusion3d(g: &Grid, c: &[f32], out: &mut Grid) {
             }
         }
     }
-    let cell = |z: usize, y: usize, x: usize, out: &mut Grid| {
-        let (zi, yi, xi) = (z as isize, y as isize, x as isize);
-        let v = cc * g.get(z, y, x)
-            + cw * g.get_clamped(zi, yi, xi - 1)
-            + ce * g.get_clamped(zi, yi, xi + 1)
-            + cs * g.get_clamped(zi, yi + 1, xi)
-            + cn * g.get_clamped(zi, yi - 1, xi)
-            + cb * g.get_clamped(zi + 1, yi, xi)
-            + ca * g.get_clamped(zi - 1, yi, xi);
-        out.set(z, y, x, v);
-    };
-    boundary_shell_3d(nz, ny, nx, |z, y, x| cell(z, y, x, out));
+    boundary_shell_3d(nz, ny, nx, |z, y, x| {
+        out.set(z, y, x, clamped_cell_diffusion3d(g, c, z, y, x));
+    });
+}
+
+/// Clamped evaluation of one Diffusion 3D cell (boundary slow path, shared
+/// with the vectorized backend).
+#[inline]
+pub(crate) fn clamped_cell_diffusion3d(g: &Grid, c: &[f32], z: usize, y: usize, x: usize) -> f32 {
+    let (cc, cn, cs, cw, ce, ca, cb) = (c[0], c[1], c[2], c[3], c[4], c[5], c[6]);
+    let (zi, yi, xi) = (z as isize, y as isize, x as isize);
+    cc * g.get(z, y, x)
+        + cw * g.get_clamped(zi, yi, xi - 1)
+        + ce * g.get_clamped(zi, yi, xi + 1)
+        + cs * g.get_clamped(zi, yi + 1, xi)
+        + cn * g.get_clamped(zi, yi - 1, xi)
+        + cb * g.get_clamped(zi + 1, yi, xi)
+        + ca * g.get_clamped(zi - 1, yi, xi)
 }
 
 fn hotspot3d(g: &Grid, pw: &Grid, c: &[f32], out: &mut Grid) {
@@ -261,24 +280,39 @@ fn hotspot3d(g: &Grid, pw: &Grid, c: &[f32], out: &mut Grid) {
             }
         }
     }
-    let cell = |z: usize, y: usize, x: usize, out: &mut Grid| {
-        let (zi, yi, xi) = (z as isize, y as isize, x as isize);
-        let v = g.get(z, y, x) * cc
-            + g.get_clamped(zi, yi - 1, xi) * cn
-            + g.get_clamped(zi, yi + 1, xi) * cs
-            + g.get_clamped(zi, yi, xi + 1) * ce
-            + g.get_clamped(zi, yi, xi - 1) * cw
-            + g.get_clamped(zi - 1, yi, xi) * ca
-            + g.get_clamped(zi + 1, yi, xi) * cb
-            + sdc * pw.get(z, y, x)
-            + ca * amb;
-        out.set(z, y, x, v);
-    };
-    boundary_shell_3d(nz, ny, nx, |z, y, x| cell(z, y, x, out));
+    boundary_shell_3d(nz, ny, nx, |z, y, x| {
+        out.set(z, y, x, clamped_cell_hotspot3d(g, pw, c, z, y, x));
+    });
 }
 
-/// Visit every cell within 1 of a 3D grid face exactly once.
-fn boundary_shell_3d(nz: usize, ny: usize, nx: usize, mut f: impl FnMut(usize, usize, usize)) {
+/// Clamped evaluation of one Hotspot 3D cell (boundary slow path, shared
+/// with the vectorized backend).
+#[inline]
+pub(crate) fn clamped_cell_hotspot3d(
+    g: &Grid,
+    pw: &Grid,
+    c: &[f32],
+    z: usize,
+    y: usize,
+    x: usize,
+) -> f32 {
+    let (cc, cn, cs, cw, ce, ca, cb, sdc, amb) =
+        (c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7], c[8]);
+    let (zi, yi, xi) = (z as isize, y as isize, x as isize);
+    g.get(z, y, x) * cc
+        + g.get_clamped(zi, yi - 1, xi) * cn
+        + g.get_clamped(zi, yi + 1, xi) * cs
+        + g.get_clamped(zi, yi, xi + 1) * ce
+        + g.get_clamped(zi, yi, xi - 1) * cw
+        + g.get_clamped(zi - 1, yi, xi) * ca
+        + g.get_clamped(zi + 1, yi, xi) * cb
+        + sdc * pw.get(z, y, x)
+        + ca * amb
+}
+
+/// Visit every cell within 1 of a 3D grid face exactly once. Shared with
+/// the vectorized backend (`runtime::vec`).
+pub(crate) fn boundary_shell_3d(nz: usize, ny: usize, nx: usize, mut f: impl FnMut(usize, usize, usize)) {
     if nz < 3 || ny < 3 || nx < 3 {
         for z in 0..nz {
             for y in 0..ny {

@@ -1,8 +1,9 @@
 //! In-tree substrates that would normally be third-party crates.
 //!
-//! The build environment is fully offline with only the `xla` dependency
-//! tree available, so this module provides the small infrastructure pieces
-//! the rest of the crate needs: a JSON reader/writer ([`json`]) for the
+//! The build environment is fully offline (no crates registry; even the
+//! `xla` bindings are optional, gated behind the `xla` feature, and
+//! `anyhow` is vendored at `vendor/anyhow`), so this module provides the
+//! small infrastructure pieces the rest of the crate needs: a JSON reader/writer ([`json`]) for the
 //! artifact manifest and machine-readable reports, descriptive statistics
 //! ([`stats`]) for the bench harness, a property-based-testing harness
 //! ([`prop`]), a CLI argument parser ([`cli`]), size formatting ([`bytes`])

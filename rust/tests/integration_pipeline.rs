@@ -3,7 +3,7 @@
 //! across stencils, grid shapes, iteration counts and pipeline flavours.
 
 use fstencil::coordinator::{ChainPipeline, Coordinator, FusedPipeline, PlanBuilder};
-use fstencil::runtime::HostExecutor;
+use fstencil::runtime::{HostExecutor, VecExecutor};
 use fstencil::stencil::{reference, Grid, StencilKind};
 use fstencil::util::prop::{forall, Rng};
 
@@ -148,6 +148,87 @@ fn three_execution_paths_agree_exactly() {
         let err = chain.max_abs_diff(&want);
         assert!(err < 1e-3, "{kind}: chain deviates {err}");
     }
+}
+
+#[test]
+fn prop_vectorized_full_stack_bit_identical() {
+    // The tentpole property at system level: the whole blocked stack
+    // (plan -> coordinator -> executor -> write-masked assembly) produces
+    // bit-identical grids whether the tiles run on the scalar oracle or
+    // the vectorized backend, for every stencil, random shapes, iteration
+    // counts and lane widths.
+    forall(
+        "vectorized full stack == scalar full stack (bitwise)",
+        10,
+        |r: &mut Rng| {
+            let kind = *r.pick(&StencilKind::ALL);
+            let (dims, tile) = if kind.ndim() == 2 {
+                let t = 8 * r.usize_in(3, 6);
+                (vec![t + r.usize_in(0, 60), t + r.usize_in(0, 60)], vec![t, t])
+            } else {
+                (
+                    vec![
+                        16 + r.usize_in(0, 12),
+                        16 + r.usize_in(0, 12),
+                        16 + r.usize_in(0, 12),
+                    ],
+                    vec![16, 16, 16],
+                )
+            };
+            let iters = r.usize_in(1, 8);
+            let par_vec = *r.pick(&[2usize, 4, 8, 16]);
+            (kind, dims, tile, iters, par_vec, r.next_u64())
+        },
+        |(kind, dims, tile, iters, par_vec, seed)| {
+            let power = kind.def().has_power.then(|| mk_grid(kind.ndim(), dims, seed + 1));
+            let plan = PlanBuilder::new(*kind)
+                .grid_dims(dims.clone())
+                .iterations(*iters)
+                .tile(tile.clone())
+                .build()
+                .map_err(|e| e.to_string())?;
+            let mut scalar = mk_grid(kind.ndim(), dims, *seed);
+            let mut vector = scalar.clone();
+            Coordinator::new(plan.clone())
+                .run(&HostExecutor::new(), &mut scalar, power.as_ref())
+                .map_err(|e| e.to_string())?;
+            Coordinator::new(plan)
+                .run(&VecExecutor::with_par_vec(*par_vec), &mut vector, power.as_ref())
+                .map_err(|e| e.to_string())?;
+            let a = scalar.data();
+            let b = vector.data();
+            if a.iter().zip(b).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                return Err(format!(
+                    "{kind} dims {dims:?} tile {tile:?} iters {iters} par_vec \
+                     {par_vec}: vectorized stack deviates"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn planned_executor_selection_is_transparent() {
+    // A par_vec > 1 plan run through run_planned must equal the same plan
+    // run explicitly on the scalar executor, bit for bit.
+    let kind = StencilKind::Diffusion3D;
+    let dims = vec![24usize, 20, 28];
+    let mk_plan = |pv: usize| {
+        PlanBuilder::new(kind)
+            .grid_dims(dims.clone())
+            .iterations(5)
+            .tile(vec![16, 16, 16])
+            .par_vec(pv)
+            .build()
+            .unwrap()
+    };
+    let mut explicit = mk_grid(3, &dims, 63);
+    let mut planned = explicit.clone();
+    Coordinator::new(mk_plan(1)).run(&HostExecutor::new(), &mut explicit, None).unwrap();
+    let report = Coordinator::new(mk_plan(16)).run_planned(&mut planned, None).unwrap();
+    assert_eq!(report.backend, "host-vec");
+    assert_eq!(explicit.max_abs_diff(&planned), 0.0);
 }
 
 // ------------------------------------------------------ failure injection
