@@ -14,7 +14,7 @@ use fstencil::util::table::{f, Table};
 
 fn main() {
     let mut rep = BenchReport::new("Ablation — combined blocking vs temporal-only prior work");
-    let b = Bencher::default();
+    let b = Bencher::from_env();
     let kind = StencilKind::Diffusion2D;
     let devk = DeviceKind::StratixV;
     let dev = Device::get(devk);

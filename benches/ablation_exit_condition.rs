@@ -15,7 +15,7 @@ use fstencil::util::table::{f, Table};
 
 fn main() {
     let mut rep = BenchReport::new("Ablation — exit-condition optimization (§3.3.2)");
-    let b = Bencher::default();
+    let b = Bencher::from_env();
 
     // (a) end-to-end f_max + throughput effect on the board simulator.
     let mut t = Table::new(&["loop style", "fmax MHz", "measured GB/s"]).left_first_col();

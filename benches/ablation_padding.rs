@@ -12,7 +12,7 @@ use fstencil::util::table::{f, Table};
 
 fn main() {
     let mut rep = BenchReport::new("Ablation — §3.3.3 alignment padding");
-    let b = Bencher::default();
+    let b = Bencher::from_env();
 
     let mut t = Table::new(&[
         "par_time",

@@ -1,11 +1,12 @@
 //! Ablation: the §6.1 resource-allocation conclusion — 2D stencils scale
 //! best with temporal parallelism (par_time), 3D stencils with vector
 //! width (par_vec). Sweeps each axis at fixed total parallelism on the
-//! board simulator.
+//! board simulator, then measures the same trade on the real host hot
+//! path. Results are persisted to `BENCH_scaling.json` at the repo root.
 //!
 //!     cargo bench --bench ablation_scaling
 
-use fstencil::bench_support::{BenchReport, Bencher};
+use fstencil::bench_support::{smoke, BenchReport, Bencher};
 use fstencil::model::{Params, PerfModel};
 use fstencil::runtime::{Executor, TileSpec, VecExecutor};
 use fstencil::stencil::StencilKind;
@@ -52,7 +53,7 @@ fn sweep(
 
 fn main() {
     let mut rep = BenchReport::new("Ablation — vectorization vs temporal parallelism (§6.1)");
-    let b = Bencher::default();
+    let b = Bencher::from_env();
 
     // 2D: same total parallelism 288, traded between the two axes.
     sweep(
@@ -78,15 +79,26 @@ fn main() {
 
     // --- the same trade measured on the real host hot path: VecExecutor
     //     par_vec sweep, validated against the Eq 3 host transposition ---
-    host_par_vec_sweep(&mut rep, &b, StencilKind::Diffusion2D, vec![256, 256]);
-    host_par_vec_sweep(&mut rep, &b, StencilKind::Diffusion3D, vec![32, 32, 32]);
+    let (t2d, t3d) = if smoke() {
+        (vec![64, 64], vec![16, 16, 16])
+    } else {
+        (vec![256, 256], vec![32, 32, 32])
+    };
+    host_par_vec_sweep(&mut rep, &b, StencilKind::Diffusion2D, t2d);
+    host_par_vec_sweep(&mut rep, &b, StencilKind::Diffusion3D, t3d);
 
     let p = Params::new(StencilKind::Diffusion2D, 8, 36, 4096, &[16096, 16096], 1000, 0.0);
     let sim = BoardSim::new(DeviceKind::Arria10);
     rep.push(b.bench("simulate_sweep_point", || {
         std::hint::black_box(sim.simulate(&p).unwrap());
     }));
-    rep.finish();
+    // Smoke runs are correctness checks, not measurements — never let
+    // them overwrite the persisted perf trajectory.
+    if smoke() {
+        rep.finish();
+    } else {
+        rep.finish_json("BENCH_scaling.json");
+    }
 }
 
 /// Notional single-core streaming bandwidth used as the host model's

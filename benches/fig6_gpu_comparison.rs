@@ -8,7 +8,7 @@ use fstencil::report;
 
 fn main() {
     let mut rep = BenchReport::new("Fig 6 — Diffusion 3D vs GPUs");
-    let b = Bencher::default();
+    let b = Bencher::from_env();
 
     rep.payload(report::fig6());
 

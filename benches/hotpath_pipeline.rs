@@ -1,45 +1,69 @@
 //! L3 hot-path microbenchmarks — the profile targets of the §Perf pass
 //! (EXPERIMENTS.md): tile extraction/write-back marshalling, host tile
-//! compute, the fused pipeline end-to-end, and (when artifacts exist)
-//! PJRT tile execution.
+//! compute, the step-fusion (streaming) T-sweep ablation, the fused
+//! pipeline end-to-end, and (when artifacts exist) PJRT tile execution.
+//!
+//! Results are persisted to `BENCH_pipeline.json` at the repo root so the
+//! perf trajectory is tracked across PRs. `FSTENCIL_BENCH_SMOKE=1` shrinks
+//! every grid to CI-smoke sizes.
 //!
 //!     cargo bench --bench hotpath_pipeline
 
+use fstencil::bench_support::{smoke, BenchReport, Bencher};
 use fstencil::blocking::geometry::BlockGeometry;
-use fstencil::bench_support::{BenchReport, Bencher};
 use fstencil::coordinator::{Coordinator, FusedPipeline, PlanBuilder};
+use fstencil::model::PerfModel;
 use fstencil::runtime::{
-    extract_tile, writeback_tile, Executor, HostExecutor, PjrtExecutor, TileSpec, VecExecutor,
+    extract_tile, writeback_tile, Executor, HostExecutor, PjrtExecutor, StreamExecutor,
+    TileSpec, VecExecutor,
 };
 use fstencil::stencil::{Grid, StencilKind};
+use fstencil::util::table::{f, Table};
+
+/// Notional single-core streaming bandwidth used as the host model's
+/// `th_max` (same constant as `ablation_scaling`); the ablation's point is
+/// the *shape* (memory-bound roof scaling with T), not the absolute roof.
+const HOST_TH_MAX_GBPS: f64 = 20.0;
 
 fn main() {
     let mut rep = BenchReport::new("L3 hot path — pipeline microbenchmarks");
-    let b = Bencher::default();
+    let b = Bencher::from_env();
     let kind = StencilKind::Diffusion2D;
+    let sm = smoke();
 
     // --- tile marshalling --------------------------------------------
-    let mut grid = Grid::new2d(1024, 1024);
+    let msize = if sm { 256 } else { 1024 };
+    let mut grid = Grid::new2d(msize, msize);
     grid.fill_random(1, 0.0, 1.0);
     let tile = vec![64usize, 64];
-    let geom = BlockGeometry::tiled(&[1024, 1024], &tile, 4);
+    let geom = BlockGeometry::tiled(&[msize, msize], &tile, 4);
     let blocks: Vec<_> = geom.blocks().collect();
     let ncells = (blocks.len() * 64 * 64) as f64;
     let mut buf = Vec::new();
-    rep.push(b.bench_with_metric("extract_all_tiles_1024sq", "Mcell/s", ncells / 1e6, || {
-        for blk in &blocks {
-            extract_tile(&grid, blk, &tile, &mut buf);
-            std::hint::black_box(&buf);
-        }
-    }));
+    rep.push(b.bench_with_metric(
+        &format!("extract_all_tiles_{msize}sq"),
+        "Mcell/s",
+        ncells / 1e6,
+        || {
+            for blk in &blocks {
+                extract_tile(&grid, blk, &tile, &mut buf);
+                std::hint::black_box(&buf);
+            }
+        },
+    ));
     let mut out = grid.clone();
     let result = vec![0.5f32; 64 * 64];
-    rep.push(b.bench_with_metric("writeback_all_tiles_1024sq", "Mcell/s", ncells / 1e6, || {
-        for blk in &blocks {
-            writeback_tile(&mut out, blk, &tile, &result);
-        }
-        std::hint::black_box(&out);
-    }));
+    rep.push(b.bench_with_metric(
+        &format!("writeback_all_tiles_{msize}sq"),
+        "Mcell/s",
+        ncells / 1e6,
+        || {
+            for blk in &blocks {
+                writeback_tile(&mut out, blk, &tile, &result);
+            }
+            std::hint::black_box(&out);
+        },
+    ));
 
     // --- host tile compute: scalar vs vectorized ---------------------
     let host = HostExecutor::new();
@@ -70,6 +94,82 @@ fn main() {
         ));
         rep.push(r);
     }
+
+    // --- step-fusion ablation: per-step vec sweep vs streaming executor
+    //     on a host-scale tile (the §3.2 T-fold intensity mechanism) -----
+    let sdim = if sm { 128usize } else { 3072 };
+    let sweep_dims = vec![sdim, sdim];
+    let pv = 8usize;
+    let vexec = VecExecutor::with_par_vec(pv);
+    let sexec = StreamExecutor::with_par_vec(pv);
+    let sweep_data = vec![0.5f32; sdim * sdim];
+    let model = PerfModel::new(HOST_TH_MAX_GBPS);
+    let def = kind.def();
+    // Scalar single-sweep rate anchors the Eq 3 host-stream model column.
+    let spec1 = TileSpec::new(kind, &sweep_dims, 1);
+    let anchor = b.bench_with_metric(
+        &format!("host_fulltile_{sdim}sq_s1"),
+        "Mcell-updates/s",
+        (sdim * sdim) as f64 / 1e6,
+        || {
+            std::hint::black_box(host.run_tile(&spec1, &sweep_data, None, coeffs).unwrap());
+        },
+    );
+    let scalar_mcells = anchor.metric.expect("bench_with_metric sets the metric").0;
+    rep.push(anchor);
+    let mut t = Table::new(&[
+        "T",
+        "per-step vec Mcell/s",
+        "stream Mcell/s",
+        "speedup",
+        "Eq3 stream model Mcell/s",
+    ])
+    .title(&format!(
+        "{kind} step-fusion T-sweep (tile {sdim}x{sdim}, par_vec {pv}; model th_max \
+         {HOST_TH_MAX_GBPS} GB/s): T sweeps through memory vs one streamed sweep"
+    ))
+    .left_first_col();
+    for steps in [1usize, 2, 4, 8] {
+        let spec_t = TileSpec::new(kind, &sweep_dims, steps);
+        let updates_m = (spec_t.cells() * steps) as f64 / 1e6;
+        let rv = b.bench_with_metric(
+            &format!("vec_fulltile_{sdim}sq_s{steps}_pv{pv}"),
+            "Mcell-updates/s",
+            updates_m,
+            || {
+                std::hint::black_box(
+                    vexec.run_tile(&spec_t, &sweep_data, None, coeffs).unwrap(),
+                );
+            },
+        );
+        let rs = b.bench_with_metric(
+            &format!("stream_fulltile_{sdim}sq_s{steps}_pv{pv}"),
+            "Mcell-updates/s",
+            updates_m,
+            || {
+                std::hint::black_box(
+                    sexec.run_tile(&spec_t, &sweep_data, None, coeffs).unwrap(),
+                );
+            },
+        );
+        let vec_mcells = rv.metric.unwrap().0;
+        let stream_mcells = rs.metric.unwrap().0;
+        let speedup = stream_mcells / vec_mcells;
+        t.row(vec![
+            steps.to_string(),
+            f(vec_mcells, 1),
+            f(stream_mcells, 1),
+            f(speedup, 2),
+            f(model.host_stream_mcells(def, scalar_mcells, pv, steps), 1),
+        ]);
+        rep.payload(format!(
+            "step-fusion ablation: T={steps} stream speedup {speedup:.2}x over the \
+             per-step vec sweep (acceptance: >= 1.5x at T >= 4)"
+        ));
+        rep.push(rv);
+        rep.push(rs);
+    }
+    rep.payload(t.render());
 
     // --- PJRT tile compute (when artifacts are built) ------------------
     if let Ok(pjrt) = PjrtExecutor::load_default() {
@@ -112,7 +212,8 @@ fn main() {
     }
 
     // --- end-to-end: sequential vs fused pipeline ----------------------
-    let dims = vec![512usize, 512];
+    let gdim = if sm { 128usize } else { 512 };
+    let dims = vec![gdim, gdim];
     let iters = 8;
     let plan = PlanBuilder::new(kind)
         .grid_dims(dims.clone())
@@ -120,11 +221,11 @@ fn main() {
         .tile(vec![64, 64])
         .build()
         .unwrap();
-    let total_updates = (512 * 512 * iters) as f64;
-    let mut g = Grid::new2d(512, 512);
+    let total_updates = (gdim * gdim * iters) as f64;
+    let mut g = Grid::new2d(gdim, gdim);
     g.fill_random(2, 0.0, 1.0);
     rep.push(b.bench_with_metric(
-        "coordinator_sequential_512sq_x8",
+        &format!("coordinator_sequential_{gdim}sq_x8"),
         "Mcell-updates/s",
         total_updates / 1e6,
         || {
@@ -135,7 +236,7 @@ fn main() {
     ));
     for workers in [2usize, 4, 8] {
         rep.push(b.bench_with_metric(
-            &format!("fused_pipeline_512sq_x8_w{workers}"),
+            &format!("fused_pipeline_{gdim}sq_x8_w{workers}"),
             "Mcell-updates/s",
             total_updates / 1e6,
             || {
@@ -148,8 +249,8 @@ fn main() {
         ));
     }
 
-    // --- end-to-end with the vectorized backend (par_vec as a plan
-    //     parameter, run through run_planned) ---------------------------
+    // --- end-to-end with the vectorized and streaming backends (plan
+    //     parameters, run through run_planned) --------------------------
     for pv in [4usize, 8] {
         let vplan = PlanBuilder::new(kind)
             .grid_dims(dims.clone())
@@ -159,7 +260,7 @@ fn main() {
             .build()
             .unwrap();
         rep.push(b.bench_with_metric(
-            &format!("fused_pipeline_512sq_x8_w4_pv{pv}"),
+            &format!("fused_pipeline_{gdim}sq_x8_w4_pv{pv}"),
             "Mcell-updates/s",
             total_updates / 1e6,
             || {
@@ -171,5 +272,56 @@ fn main() {
             },
         ));
     }
-    rep.finish();
+    // Streaming backend through the whole pipeline: one big tile per pass
+    // (the paper's 1D spatial block), T=8 fused steps in flight.
+    let edim = if sm { 128usize } else { 1536 };
+    let eplan = PlanBuilder::new(kind)
+        .grid_dims(vec![edim, edim])
+        .iterations(8)
+        .tile(vec![edim, edim.min(512)])
+        .step_sizes(vec![8])
+        .par_vec(8)
+        .stream(true)
+        .build()
+        .unwrap();
+    let vplan8 = {
+        let mut p = eplan.clone();
+        p.stream = false;
+        p
+    };
+    let mut ge = Grid::new2d(edim, edim);
+    ge.fill_random(3, 0.0, 1.0);
+    let e_updates = (edim * edim * 8) as f64;
+    rep.push(b.bench_with_metric(
+        &format!("fused_pipeline_{edim}sq_x8_vec_plan"),
+        "Mcell-updates/s",
+        e_updates / 1e6,
+        || {
+            let mut work = ge.clone();
+            FusedPipeline::with_workers(vplan8.clone(), 4)
+                .run_planned(&mut work, None)
+                .unwrap();
+            std::hint::black_box(work);
+        },
+    ));
+    rep.push(b.bench_with_metric(
+        &format!("fused_pipeline_{edim}sq_x8_stream_plan"),
+        "Mcell-updates/s",
+        e_updates / 1e6,
+        || {
+            let mut work = ge.clone();
+            FusedPipeline::with_workers(eplan.clone(), 4)
+                .run_planned(&mut work, None)
+                .unwrap();
+            std::hint::black_box(work);
+        },
+    ));
+
+    // Smoke runs are correctness checks, not measurements — never let
+    // them overwrite the persisted perf trajectory.
+    if sm {
+        rep.finish();
+    } else {
+        rep.finish_json("BENCH_pipeline.json");
+    }
 }

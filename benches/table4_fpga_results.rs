@@ -8,7 +8,7 @@ use fstencil::report;
 
 fn main() {
     let mut rep = BenchReport::new("Table 4 — FPGA results reproduction");
-    let b = Bencher::default();
+    let b = Bencher::from_env();
 
     // The deliverable: the table itself.
     rep.payload(report::table4());

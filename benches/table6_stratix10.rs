@@ -9,7 +9,7 @@ use fstencil::report;
 
 fn main() {
     let mut rep = BenchReport::new("Table 6 — Stratix 10 performance estimation");
-    let b = Bencher::default();
+    let b = Bencher::from_env();
 
     rep.payload(report::table6());
 

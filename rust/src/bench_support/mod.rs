@@ -4,7 +4,13 @@
 //! module: [`Bencher`] measures a closure with warm-up + timed iterations
 //! and prints a stats line; [`BenchReport`] collects named results and can
 //! render a markdown-ish summary table plus machine-readable JSON (used by
-//! EXPERIMENTS.md tooling).
+//! EXPERIMENTS.md tooling and persisted as `BENCH_*.json` at the repo root
+//! so the perf trajectory is tracked across PRs).
+//!
+//! Setting `FSTENCIL_BENCH_SMOKE=1` puts every bench target into *smoke
+//! mode* ([`smoke`], [`Bencher::from_env`]): one sample, no warm-up, tiny
+//! problem sizes — CI runs each target this way so bench bit-rot is caught
+//! at PR time without paying measurement-grade runtimes.
 
 use std::time::{Duration, Instant};
 
@@ -24,6 +30,26 @@ pub struct Bencher {
 impl Default for Bencher {
     fn default() -> Self {
         Bencher { warmup_iters: 2, sample_iters: 10, max_time: Duration::from_secs(20) }
+    }
+}
+
+/// Whether smoke mode is requested (`FSTENCIL_BENCH_SMOKE` set to anything
+/// but `0`/empty). Bench targets consult this to shrink their grids.
+pub fn smoke() -> bool {
+    std::env::var("FSTENCIL_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+impl Bencher {
+    /// Default timing config, or a single-sample no-warm-up config when
+    /// [`smoke`] mode is on.
+    pub fn from_env() -> Bencher {
+        if smoke() {
+            Bencher { warmup_iters: 0, sample_iters: 1, max_time: Duration::from_secs(2) }
+        } else {
+            Bencher::default()
+        }
     }
 }
 
@@ -169,6 +195,24 @@ impl BenchReport {
     pub fn finish(&self) {
         println!("\n{}", self.summary_table());
     }
+
+    /// Persist the machine-readable dump ([`BenchReport::to_json`]) to
+    /// `path`. `cargo bench` runs with the workspace root as cwd, so bench
+    /// targets pass a bare `BENCH_*.json` name to land it at the repo root.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+
+    /// [`BenchReport::finish`] plus [`BenchReport::write_json`], logging
+    /// where the results went (write failures are reported, not fatal —
+    /// benches may run from read-only checkouts).
+    pub fn finish_json(&self, path: &str) {
+        self.finish();
+        match self.write_json(path) {
+            Ok(()) => println!("wrote machine-readable results to {path}"),
+            Err(e) => eprintln!("note: could not write {path}: {e}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -208,5 +252,22 @@ mod tests {
         let json = rep.to_json();
         assert_eq!(json.get("title").unwrap().as_str().unwrap(), "test report");
         assert!(rep.summary_table().contains("noop"));
+    }
+
+    #[test]
+    fn json_dump_is_parseable_and_written() {
+        let mut rep = BenchReport::new("persist test");
+        let b = Bencher { warmup_iters: 0, sample_iters: 2, max_time: Duration::from_secs(1) };
+        rep.push(b.bench_with_metric("unit", "ops/s", 1.0, || {}));
+        let path = std::env::temp_dir().join("fstencil_bench_persist_test.json");
+        let path = path.to_str().unwrap().to_string();
+        rep.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("title").unwrap().as_str().unwrap(), "persist test");
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].get("metric").unwrap().get("value").unwrap().as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -9,9 +9,12 @@
 //! channels).
 //!
 //! The compute backend is a plan parameter: `PlanBuilder::par_vec` selects
-//! between the scalar oracle and the vectorized host executor. The
-//! `run_planned` entry points on [`Coordinator`] and
-//! [`pipeline::FusedPipeline`] honour it, and
+//! between the scalar oracle and the vectorized host executor, and
+//! `PlanBuilder::stream` the streaming shift-register backend
+//! ([`crate::runtime::StreamExecutor`], the paper's cascaded PE chain: one
+//! tile sweep per chunk with all fused steps in flight). The `run_planned`
+//! entry points on [`Coordinator`], [`pipeline::FusedPipeline`] and
+//! [`distributed::DistributedCoordinator`] honour it, and
 //! [`pipeline::ChainPipeline::run`] builds its PE bodies from it directly.
 
 pub mod distributed;
@@ -99,8 +102,9 @@ impl Coordinator {
     }
 
     /// Run with the executor the plan itself selects ([`Plan::executor`]):
-    /// the scalar oracle at `par_vec == 1`, the vectorized host backend
-    /// otherwise. Results are bit-identical either way.
+    /// the streaming backend when `stream` is set, else the scalar oracle
+    /// at `par_vec == 1` or the vectorized host backend above it. Results
+    /// are bit-identical across all three.
     pub fn run_planned(&self, grid: &mut Grid, power: Option<&Grid>) -> Result<ExecReport> {
         let exec = self.plan.executor();
         self.run(exec.as_ref(), grid, power)
@@ -134,6 +138,7 @@ impl Coordinator {
         let mut redundant = 0u64;
         let mut tile_buf: Vec<f32> = Vec::new();
         let mut power_buf: Vec<f32> = Vec::new();
+        let mut result_buf: Vec<f32> = Vec::new();
 
         for &steps in &plan.chunks {
             let spec = plan.tile_spec(steps);
@@ -153,8 +158,8 @@ impl Coordinator {
                 } else {
                     None
                 };
-                let result = exec.run_tile(&spec, &tile_buf, pw, &plan.coeffs)?;
-                writeback_tile(&mut next, &block, &plan.tile, &result);
+                exec.run_tile_into(&spec, &tile_buf, pw, &plan.coeffs, &mut result_buf)?;
+                writeback_tile(&mut next, &block, &plan.tile, &result_buf);
                 tiles_executed += 1;
                 let computed: usize = spec.cells();
                 let useful: usize = block

@@ -15,11 +15,21 @@
 //!
 //! Both produce bit-identical results to [`super::Coordinator::run`]
 //! (property-tested), differing only in concurrency structure.
+//!
+//! **Hot-path allocation discipline (§Perf).** Like the FPGA's statically
+//! allocated channels and BRAM buffers, the steady state allocates
+//! nothing: worker/PE threads are spawned once per run and stay alive
+//! across chunks (jobs flow over per-worker channels); tile result
+//! buffers recirculate from the write kernel back to the producers over
+//! pool channels; and the grid double buffer is two persistent
+//! [`RwLock`]-wrapped grids whose read/write roles alternate per chunk —
+//! no per-chunk `Grid` clone, no per-tile `Vec` allocation after warm-up.
 
 use std::sync::mpsc::sync_channel;
+use std::sync::RwLock;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::blocking::geometry::{Block, BlockGeometry};
 use crate::runtime::{extract_tile, writeback_tile, Executor, TileSpec};
@@ -40,25 +50,32 @@ pub struct FusedPipeline {
 }
 
 impl FusedPipeline {
+    /// Worker count from the plan (`PlanBuilder::workers`), defaulting to
+    /// one worker per available core — the host analogue of replicating
+    /// PEs until the device runs out of logic.
     pub fn new(plan: Plan) -> FusedPipeline {
-        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
-        FusedPipeline { plan, workers: workers.clamp(1, 8) }
+        let workers = plan
+            .workers
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
+            })
+            .max(1);
+        FusedPipeline { plan, workers }
     }
 
     pub fn with_workers(plan: Plan, workers: usize) -> FusedPipeline {
         FusedPipeline { plan, workers: workers.max(1) }
     }
 
-    /// Run with the executor the plan selects via its `par_vec`
-    /// ([`Plan::executor`]).
+    /// Run with the executor the plan selects via its `par_vec`/`stream`
+    /// parameters ([`Plan::executor`]).
     pub fn run_planned(&self, grid: &mut Grid, power: Option<&Grid>) -> Result<ExecReport> {
         let exec = self.plan.executor();
         self.run(exec.as_ref(), grid, power)
     }
 
     /// Run the plan. The executor must be shareable across the compute
-    /// pool (`Sync`), which [`crate::runtime::HostExecutor`] and the
-    /// vectorized backend both are.
+    /// pool (`Sync`), which all three host backends are.
     pub fn run<E: Executor + Sync + ?Sized>(
         &self,
         exec: &E,
@@ -70,88 +87,171 @@ impl FusedPipeline {
         ensure!(grid.dims() == plan.grid_dims, "grid dims do not match the plan");
         ensure!(power.is_some() == def.has_power, "power grid mismatch");
         let start = Instant::now();
-        let mut cur = std::mem::replace(grid, Grid::new2d(1, 1));
-        let mut next = cur.clone();
+        let workers = self.workers;
+
+        // One (spec, blocks) per distinct chunk step count; the schedule
+        // indexes into it. Computed once so chunks of equal depth share
+        // geometry and workers never re-derive it.
+        let mut specs: Vec<(TileSpec, Vec<Block>)> = Vec::new();
+        let mut schedule: Vec<usize> = Vec::with_capacity(plan.chunks.len());
+        for &steps in &plan.chunks {
+            let idx = match specs.iter().position(|(sp, _)| sp.steps == steps) {
+                Some(i) => i,
+                None => {
+                    let spec = plan.tile_spec(steps);
+                    ensure!(exec.supports(&spec), "missing tile program {}", spec.artifact_name());
+                    let halo = def.radius * steps;
+                    let geom = BlockGeometry::tiled(&plan.grid_dims, &plan.tile, halo);
+                    specs.push((spec, geom.blocks().collect()));
+                    specs.len() - 1
+                }
+            };
+            schedule.push(idx);
+        }
+
+        // Persistent double buffer: roles (read source / write target)
+        // alternate per chunk, so workers lock one grid for reading while
+        // the write kernel holds the other. Lock traffic is per-chunk,
+        // not per-tile.
+        let cur = std::mem::replace(grid, Grid::new2d(1, 1));
+        let next = cur.clone();
+        let bufs = [RwLock::new(cur), RwLock::new(next)];
+
         let mut tiles_executed = 0u64;
         let mut redundant = 0u64;
         let mut stages = super::StageTimes::default();
 
-        for &steps in &plan.chunks {
-            let spec = plan.tile_spec(steps);
-            ensure!(exec.supports(&spec), "missing tile program {}", spec.artifact_name());
-            let halo = def.radius * steps;
-            let geom = BlockGeometry::tiled(&plan.grid_dims, &plan.tile, halo);
-            let blocks: Vec<Block> = geom.blocks().collect();
+        // Jobs broadcast per chunk: (spec index, source-buffer index).
+        // Results carry the tile buffer or the worker's error; the write
+        // kernel returns drained buffers to the producing worker's pool.
+        let (job_txs, job_rxs): (Vec<_>, Vec<_>) =
+            (0..workers).map(|_| sync_channel::<(usize, usize)>(1)).unzip();
+        let (pool_txs, pool_rxs): (Vec<_>, Vec<_>) =
+            (0..workers).map(|_| sync_channel::<Vec<f32>>(CHANNEL_DEPTH + 2)).unzip();
+        let (tx_out, rx_out) =
+            sync_channel::<(usize, Result<Vec<f32>>)>(CHANNEL_DEPTH * workers);
 
-            // Workers shard the block list statically (block i -> worker
-            // i % W) and do their own extraction — the dedicated read
-            // kernel became the bottleneck once extraction was memcpy-fast
-            // and the shared input channel serialized it (§Perf log).
-            // Only results flow through a channel, to the write kernel.
-            let (tx_out, rx_out) =
-                sync_channel::<(usize, Vec<f32>)>(CHANNEL_DEPTH * self.workers);
+        let specs_ref = &specs;
+        let bufs_ref = &bufs;
+        let tile_dims = &plan.tile;
+        let coeffs = &plan.coeffs;
 
-            let cur_ref = &cur;
-            let blocks_ref = &blocks;
-            let spec_ref = &spec;
-            let coeffs = &plan.coeffs;
-            let tile_dims = &plan.tile;
-
-            std::thread::scope(|scope| -> Result<()> {
-                // COMPUTE pool (the replicated-PE analogue), each worker
-                // extracting + computing its shard.
-                let mut handles = Vec::new();
-                for w in 0..self.workers {
-                    let tx_out = tx_out.clone();
-                    handles.push(scope.spawn(move || -> Result<super::StageTimes> {
-                        let mut tile = Vec::new();
-                        let mut ptile = Vec::new();
-                        let mut times = super::StageTimes::default();
-                        for (i, b) in blocks_ref
-                            .iter()
-                            .enumerate()
-                            .skip(w)
-                            .step_by(self.workers.max(1))
+        std::thread::scope(|scope| -> Result<()> {
+            // COMPUTE pool (the replicated-PE analogue): spawned once,
+            // alive across all chunks. Workers shard the block list
+            // statically (block i -> worker i % W) and do their own
+            // extraction — a dedicated read kernel serialized it (§Perf).
+            let mut handles = Vec::new();
+            for (w, (rx_job, pool_rx)) in
+                job_rxs.into_iter().zip(pool_rxs.into_iter()).enumerate()
+            {
+                let tx_out = tx_out.clone();
+                handles.push(scope.spawn(move || -> Result<super::StageTimes> {
+                    let mut tile = Vec::new();
+                    let mut ptile = Vec::new();
+                    let mut times = super::StageTimes::default();
+                    while let Ok((spec_i, src)) = rx_job.recv() {
+                        let (spec, blocks) = &specs_ref[spec_i];
+                        let cur = bufs_ref[src].read().expect("grid lock poisoned");
+                        for (i, b) in
+                            blocks.iter().enumerate().skip(w).step_by(workers)
                         {
                             let t0 = Instant::now();
-                            extract_tile(cur_ref, b, tile_dims, &mut tile);
+                            extract_tile(&cur, b, tile_dims, &mut tile);
                             let pw = power.map(|pg| {
                                 extract_tile(pg, b, tile_dims, &mut ptile);
                                 ptile.as_slice()
                             });
                             let t1 = Instant::now();
-                            let out = exec.run_tile(spec_ref, &tile, pw, coeffs)?;
+                            let mut out = pool_rx.try_recv().unwrap_or_default();
+                            let res = exec.run_tile_into(spec, &tile, pw, coeffs, &mut out);
                             times.extract += t1 - t0;
                             times.compute += t1.elapsed();
-                            if tx_out.send((i, out)).is_err() {
-                                return Ok(times);
+                            match res {
+                                Ok(()) => {
+                                    if tx_out.send((i, Ok(out))).is_err() {
+                                        return Ok(times);
+                                    }
+                                }
+                                Err(e) => {
+                                    let _ = tx_out.send((i, Err(e)));
+                                    return Ok(times);
+                                }
                             }
                         }
-                        Ok(times)
-                    }));
-                }
-                drop(tx_out);
+                    }
+                    Ok(times)
+                }));
+            }
+            drop(tx_out);
 
-                // WRITE kernel (this thread): masked write-back.
-                for (i, out) in rx_out.iter() {
-                    let t0 = Instant::now();
-                    writeback_tile(&mut next, &blocks_ref[i], tile_dims, &out);
-                    stages.write += t0.elapsed();
-                    tiles_executed += 1;
-                    let useful: usize =
-                        blocks_ref[i].compute.iter().map(|(lo, hi)| hi - lo).product();
-                    redundant += (spec_ref.cells() - useful) as u64 * steps as u64;
+            // WRITE kernel (this thread): masked write-back per chunk.
+            let mut run_err: Option<anyhow::Error> = None;
+            'chunks: for (ci, &spec_i) in schedule.iter().enumerate() {
+                let src = ci % 2;
+                let dst = (ci + 1) % 2;
+                for tx in &job_txs {
+                    if tx.send((spec_i, src)).is_err() {
+                        run_err = Some(anyhow!("compute worker exited early"));
+                        break 'chunks;
+                    }
                 }
-                for h in handles {
-                    let t = h.join().expect("compute worker panicked")?;
-                    stages.extract += t.extract;
-                    stages.compute += t.compute;
+                let (spec, blocks) = &specs[spec_i];
+                let mut next = bufs[dst].write().expect("grid lock poisoned");
+                for _ in 0..blocks.len() {
+                    match rx_out.recv() {
+                        Ok((i, Ok(out))) => {
+                            let t0 = Instant::now();
+                            writeback_tile(&mut next, &blocks[i], tile_dims, &out);
+                            stages.write += t0.elapsed();
+                            tiles_executed += 1;
+                            let useful: usize =
+                                blocks[i].compute.iter().map(|(lo, hi)| hi - lo).product();
+                            redundant += (spec.cells() - useful) as u64 * spec.steps as u64;
+                            // Recycle the buffer to its producing worker.
+                            let _ = pool_txs[i % workers].try_send(out);
+                        }
+                        Ok((_, Err(e))) => {
+                            run_err = Some(e);
+                            break 'chunks;
+                        }
+                        Err(_) => {
+                            run_err = Some(anyhow!("compute workers disconnected"));
+                            break 'chunks;
+                        }
+                    }
                 }
-                Ok(())
-            })?;
-            std::mem::swap(&mut cur, &mut next);
-        }
-        *grid = cur;
+            }
+
+            // Retire the pool: closing the job/result channels unblocks
+            // every worker, then collect their stage times (or error).
+            drop(job_txs);
+            drop(rx_out);
+            drop(pool_txs);
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(t)) => {
+                        stages.extract += t.extract;
+                        stages.compute += t.compute;
+                    }
+                    Ok(Err(e)) => {
+                        if run_err.is_none() {
+                            run_err = Some(e);
+                        }
+                    }
+                    Err(_) => panic!("compute worker panicked"),
+                }
+            }
+            match run_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })?;
+
+        let [b0, b1] = bufs;
+        let g0 = b0.into_inner().unwrap_or_else(|p| p.into_inner());
+        let g1 = b1.into_inner().unwrap_or_else(|p| p.into_inner());
+        *grid = if plan.chunks.len() % 2 == 0 { g0 } else { g1 };
         Ok(ExecReport {
             iterations: plan.iterations,
             passes: plan.chunks.len(),
@@ -163,6 +263,14 @@ impl FusedPipeline {
             stages: Some(stages),
         })
     }
+}
+
+/// Message flowing down the PE chain: a per-pass header (which PEs are
+/// active this pass) followed by the pass's tiles. Buffers inside `Tile`
+/// recirculate from the write kernel back to the reader.
+enum ChainMsg {
+    Pass { steps: usize },
+    Tile { idx: usize, data: Vec<f32>, power: Option<Vec<f32>> },
 }
 
 /// One-thread-per-PE chain: PE *k* applies time-step *k* of the current
@@ -181,104 +289,172 @@ impl ChainPipeline {
         ChainPipeline { plan, chain_len }
     }
 
-    /// Run using per-step host PEs — scalar or vectorized per the plan's
-    /// `par_vec` ([`Plan::executor`]). Results are identical to the fused
-    /// paths; this exists to model (and test) the paper's PE-chain
-    /// structure, including remainder pass-through.
+    /// Run using per-step host PEs — scalar, vectorized or streaming per
+    /// the plan's parameters ([`Plan::executor`]). Results are identical
+    /// to the fused paths; this exists to model (and test) the paper's
+    /// PE-chain structure, including remainder pass-through. The chain is
+    /// built once and stays alive across chunks; per-pass activity flows
+    /// down the chain as a pass header message ahead of the pass's tiles.
     pub fn run(&self, grid: &mut Grid, power: Option<&Grid>) -> Result<ExecReport> {
         let plan = &self.plan;
         let def = plan.stencil.def();
         ensure!(grid.dims() == plan.grid_dims, "grid dims do not match the plan");
         ensure!(power.is_some() == def.has_power, "power grid mismatch");
+        for &steps in &plan.chunks {
+            ensure!(steps <= self.chain_len, "chunk exceeds chain length");
+        }
+        // Halo sized for the whole physical chain — the FPGA's block
+        // geometry is fixed at par_time even when iterations remain
+        // short (§3.2); pass-through PEs keep data intact. One geometry
+        // serves every chunk.
+        let halo = def.radius * self.chain_len;
+        ensure!(
+            plan.tile.iter().all(|&t| t > 2 * halo),
+            "tile too small for chain halo {halo}"
+        );
         let start = Instant::now();
-        let mut cur = std::mem::replace(grid, Grid::new2d(1, 1));
-        let mut next = cur.clone();
-        let mut tiles_executed = 0u64;
-        let mut redundant = 0u64;
+        let geom = BlockGeometry::tiled(&plan.grid_dims, &plan.tile, halo);
+        let blocks: Vec<Block> = geom.blocks().collect();
+        let spec1 = TileSpec::new(plan.stencil, &plan.tile, 1);
         let exec_box = plan.executor();
         let step_exec: &(dyn Executor + Send + Sync) = exec_box.as_ref();
 
-        for &steps in &plan.chunks {
-            ensure!(steps <= self.chain_len, "chunk exceeds chain length");
-            // Halo sized for the whole physical chain — the FPGA's block
-            // geometry is fixed at par_time even when iterations remain
-            // short (§3.2); pass-through PEs keep data intact.
-            let halo = def.radius * self.chain_len;
-            ensure!(
-                plan.tile.iter().all(|&t| t > 2 * halo),
-                "tile too small for chain halo {halo}"
+        let cur = std::mem::replace(grid, Grid::new2d(1, 1));
+        let next = cur.clone();
+        let bufs = [RwLock::new(cur), RwLock::new(next)];
+        let mut tiles_executed = 0u64;
+        let mut redundant = 0u64;
+
+        let blocks_ref = &blocks;
+        let bufs_ref = &bufs;
+        let tile_dims = &plan.tile;
+        let coeffs = &plan.coeffs;
+        let chunks = &plan.chunks;
+
+        std::thread::scope(|scope| -> Result<()> {
+            // Buffer recirculation: write kernel -> reader.
+            let (pool_tx, pool_rx) = sync_channel::<(Vec<f32>, Option<Vec<f32>>)>(
+                CHANNEL_DEPTH * (self.chain_len + 2) + 4,
             );
-            let geom = BlockGeometry::tiled(&plan.grid_dims, &plan.tile, halo);
-            let blocks: Vec<Block> = geom.blocks().collect();
-            let spec1 = TileSpec::new(plan.stencil, &plan.tile, 1);
+            let (tx0, rx0) = sync_channel::<ChainMsg>(CHANNEL_DEPTH);
+            let mut rx_prev = rx0;
 
-            let cur_ref = &cur;
-            let blocks_ref = &blocks;
-            let tile_dims = &plan.tile;
-            let coeffs = &plan.coeffs;
-            let chain_len = self.chain_len;
-
-            std::thread::scope(|scope| -> Result<()> {
-                // Stage 0: reader.
-                let (tx0, mut rx_prev) =
-                    sync_channel::<(usize, Vec<f32>, Option<Vec<f32>>)>(CHANNEL_DEPTH);
-                scope.spawn(move || {
+            // READ kernel: streams every pass; alive across chunks.
+            let reader = scope.spawn(move || {
+                for (ci, &steps) in chunks.iter().enumerate() {
+                    if tx0.send(ChainMsg::Pass { steps }).is_err() {
+                        return;
+                    }
+                    let cur = bufs_ref[ci % 2].read().expect("grid lock poisoned");
                     for (i, b) in blocks_ref.iter().enumerate() {
-                        let mut tile = Vec::new();
-                        extract_tile(cur_ref, b, tile_dims, &mut tile);
+                        let (mut tile, mut pbuf) = pool_rx.try_recv().unwrap_or_default();
+                        extract_tile(&cur, b, tile_dims, &mut tile);
                         let pw = power.map(|pg| {
-                            let mut p = Vec::new();
+                            let mut p = pbuf.take().unwrap_or_default();
                             extract_tile(pg, b, tile_dims, &mut p);
                             p
                         });
-                        if tx0.send((i, tile, pw)).is_err() {
+                        if tx0.send(ChainMsg::Tile { idx: i, data: tile, power: pw }).is_err() {
                             return;
                         }
                     }
-                });
+                }
+            });
 
-                // PE chain: `chain_len` stages; stage k computes only when
-                // k < chunk steps (else forwards).
-                let mut pe_handles = Vec::new();
-                for k in 0..chain_len {
-                    let (tx_k, rx_k) =
-                        sync_channel::<(usize, Vec<f32>, Option<Vec<f32>>)>(CHANNEL_DEPTH);
-                    let rx_in = rx_prev;
-                    let spec1 = spec1.clone();
-                    let active = k < steps;
-                    pe_handles.push(scope.spawn(move || -> Result<()> {
-                        for (i, tile, pw) in rx_in.iter() {
-                            let out = if active {
-                                step_exec.run_tile(&spec1, &tile, pw.as_deref(), coeffs)?
-                            } else {
-                                tile // pass-through PE
-                            };
-                            if tx_k.send((i, out, pw)).is_err() {
-                                return Ok(());
+            // PE chain: `chain_len` stages, spawned once; stage k computes
+            // only when k < the current pass's chunk (else forwards).
+            let mut pe_handles = Vec::new();
+            for k in 0..self.chain_len {
+                let (tx_k, rx_k) = sync_channel::<ChainMsg>(CHANNEL_DEPTH);
+                let rx_in = rx_prev;
+                let spec1 = spec1.clone();
+                pe_handles.push(scope.spawn(move || -> Result<()> {
+                    let mut active = false;
+                    // The PE's second buffer: output of the last tile it
+                    // computed, swapped with the incoming tile each time.
+                    let mut spare: Vec<f32> = Vec::new();
+                    for msg in rx_in.iter() {
+                        let fwd = match msg {
+                            ChainMsg::Pass { steps } => {
+                                active = k < steps;
+                                ChainMsg::Pass { steps }
                             }
+                            ChainMsg::Tile { idx, mut data, power } => {
+                                if active {
+                                    step_exec.run_tile_into(
+                                        &spec1,
+                                        &data,
+                                        power.as_deref(),
+                                        coeffs,
+                                        &mut spare,
+                                    )?;
+                                    std::mem::swap(&mut data, &mut spare);
+                                }
+                                ChainMsg::Tile { idx, data, power }
+                            }
+                        };
+                        if tx_k.send(fwd).is_err() {
+                            return Ok(());
                         }
-                        Ok(())
-                    }));
-                    rx_prev = rx_k;
-                }
+                    }
+                    Ok(())
+                }));
+                rx_prev = rx_k;
+            }
 
-                // Writer (this thread).
-                for (i, out, _pw) in rx_prev.iter() {
-                    writeback_tile(&mut next, &blocks_ref[i], tile_dims, &out);
-                    tiles_executed += 1;
-                    let useful: usize =
-                        blocks_ref[i].compute.iter().map(|(lo, hi)| hi - lo).product();
-                    let cells: usize = tile_dims.iter().product();
-                    redundant += (cells - useful) as u64 * steps as u64;
+            // WRITE kernel (this thread).
+            let mut run_err: Option<anyhow::Error> = None;
+            'passes: for (ci, &steps) in chunks.iter().enumerate() {
+                match rx_prev.recv() {
+                    Ok(ChainMsg::Pass { .. }) => {}
+                    _ => {
+                        run_err = Some(anyhow!("PE chain terminated early"));
+                        break 'passes;
+                    }
                 }
-                for h in pe_handles {
-                    h.join().expect("PE panicked")?;
+                let mut next = bufs[(ci + 1) % 2].write().expect("grid lock poisoned");
+                for _ in 0..blocks.len() {
+                    match rx_prev.recv() {
+                        Ok(ChainMsg::Tile { idx, data, power }) => {
+                            writeback_tile(&mut next, &blocks[idx], tile_dims, &data);
+                            tiles_executed += 1;
+                            let useful: usize =
+                                blocks[idx].compute.iter().map(|(lo, hi)| hi - lo).product();
+                            let cells: usize = tile_dims.iter().product();
+                            redundant += (cells - useful) as u64 * steps as u64;
+                            let _ = pool_tx.try_send((data, power));
+                        }
+                        _ => {
+                            run_err = Some(anyhow!("PE chain terminated early"));
+                            break 'passes;
+                        }
+                    }
                 }
-                Ok(())
-            })?;
-            std::mem::swap(&mut cur, &mut next);
-        }
-        *grid = cur;
+            }
+
+            // Tear down the chain and surface the most specific error.
+            drop(rx_prev);
+            drop(pool_tx);
+            if reader.join().is_err() {
+                panic!("read kernel panicked");
+            }
+            for h in pe_handles {
+                match h.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => run_err = Some(e),
+                    Err(_) => panic!("PE panicked"),
+                }
+            }
+            match run_err {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        })?;
+
+        let [b0, b1] = bufs;
+        let g0 = b0.into_inner().unwrap_or_else(|p| p.into_inner());
+        let g1 = b1.into_inner().unwrap_or_else(|p| p.into_inner());
+        *grid = if plan.chunks.len() % 2 == 0 { g0 } else { g1 };
         Ok(ExecReport {
             iterations: plan.iterations,
             passes: plan.chunks.len(),
@@ -297,8 +473,8 @@ mod tests {
     use super::*;
     use crate::coordinator::{Coordinator, PlanBuilder};
     use crate::runtime::HostExecutor;
-    use std::time::Duration;
     use crate::stencil::{reference, StencilKind};
+    use std::time::Duration;
 
     fn mk_grid(kind: StencilKind, dims: &[usize], seed: u64) -> Grid {
         let mut g = if kind.ndim() == 2 {
@@ -422,6 +598,42 @@ mod tests {
     }
 
     #[test]
+    fn streaming_plan_is_bit_identical_across_paths() {
+        // The tentpole composition: the streaming backend as a plan
+        // parameter, through the sequential coordinator, the fused
+        // pipeline's persistent worker pool, and the PE chain.
+        let kind = StencilKind::Hotspot2D;
+        let dims = vec![72usize, 88];
+        let mk_plan = |stream: bool| {
+            PlanBuilder::new(kind)
+                .grid_dims(dims.clone())
+                .iterations(6)
+                .tile(vec![32, 32])
+                .par_vec(4)
+                .stream(stream)
+                .build()
+                .unwrap()
+        };
+        let power = mk_grid(kind, &dims, 99);
+        let mut base = mk_grid(kind, &dims, 5);
+        let mut seq = base.clone();
+        let mut fused = base.clone();
+        let mut chain_a = base.clone();
+        let mut chain_b = base.clone();
+        Coordinator::new(mk_plan(false)).run_planned(&mut base, Some(&power)).unwrap();
+        let rep = Coordinator::new(mk_plan(true)).run_planned(&mut seq, Some(&power)).unwrap();
+        assert_eq!(rep.backend, "host-stream");
+        FusedPipeline::with_workers(mk_plan(true), 3)
+            .run_planned(&mut fused, Some(&power))
+            .unwrap();
+        ChainPipeline::new(mk_plan(false)).run(&mut chain_a, Some(&power)).unwrap();
+        ChainPipeline::new(mk_plan(true)).run(&mut chain_b, Some(&power)).unwrap();
+        assert!(base.max_abs_diff(&seq) == 0.0, "stream coordinator deviates");
+        assert!(base.max_abs_diff(&fused) == 0.0, "stream fused pipeline deviates");
+        assert!(chain_a.max_abs_diff(&chain_b) == 0.0, "stream PE chain deviates");
+    }
+
+    #[test]
     fn chain_pipeline_honours_plan_par_vec() {
         let kind = StencilKind::Diffusion2D;
         let dims = vec![64usize, 64];
@@ -463,5 +675,24 @@ mod tests {
         }
         assert!(results[0].max_abs_diff(&results[1]) == 0.0);
         assert!(results[0].max_abs_diff(&results[2]) == 0.0);
+    }
+
+    #[test]
+    fn new_respects_plan_worker_cap() {
+        let mk = |workers: Option<usize>| {
+            let mut b = PlanBuilder::new(StencilKind::Diffusion2D)
+                .grid_dims(vec![64, 64])
+                .iterations(2);
+            if let Some(w) = workers {
+                b = b.workers(w);
+            }
+            FusedPipeline::new(b.build().unwrap())
+        };
+        assert_eq!(mk(Some(3)).workers, 3);
+        // uncapped: one worker per available core (no arbitrary clamp)
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        assert_eq!(mk(None).workers, cores.max(1));
+        // a cap above 8 must be honoured (the old hard clamp regressed it)
+        assert_eq!(mk(Some(24)).workers, 24);
     }
 }

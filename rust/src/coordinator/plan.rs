@@ -10,7 +10,9 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::runtime::{vec::is_valid_par_vec, Executor, HostExecutor, TileSpec, VecExecutor};
+use crate::runtime::{
+    vec::is_valid_par_vec, Executor, HostExecutor, StreamExecutor, TileSpec, VecExecutor,
+};
 use crate::stencil::StencilKind;
 
 /// A validated execution plan.
@@ -29,6 +31,16 @@ pub struct Plan {
     /// Host compute vector width (Table 1's `par_vec`): 1 selects the
     /// scalar oracle, >1 the vectorized backend in [`Plan::executor`].
     pub par_vec: usize,
+    /// Select the streaming shift-register backend
+    /// ([`StreamExecutor`]): each chunk's tile is swept once while all
+    /// its fused steps are applied in flight through cascaded
+    /// ring-buffer stages (the paper's §3.2 PE chain). Composes with
+    /// `par_vec` (stage row kernels use that lane count).
+    pub stream: bool,
+    /// Compute-worker cap for the threaded pipelines (`None` = one worker
+    /// per available core). A plan parameter so the CLI can override it
+    /// (`--workers`).
+    pub workers: Option<usize>,
 }
 
 impl Plan {
@@ -53,12 +65,16 @@ impl Plan {
         self.grid_dims.iter().product::<usize>() as u64 * self.iterations as u64
     }
 
-    /// The host executor this plan selects: the scalar oracle at
-    /// `par_vec == 1`, the vectorized backend otherwise. This is how the
+    /// The host executor this plan selects: the streaming backend when
+    /// `stream` is set (at `par_vec` lanes), else the scalar oracle at
+    /// `par_vec == 1` or the vectorized backend above it. This is how the
     /// executor choice becomes a plan parameter — `Coordinator::run_planned`
-    /// and the pipelines' `run_planned` use it.
+    /// and the pipelines' `run_planned` use it. All three produce
+    /// bit-identical grids (property-tested).
     pub fn executor(&self) -> Box<dyn Executor + Send + Sync> {
-        if self.par_vec > 1 {
+        if self.stream {
+            Box::new(StreamExecutor::with_par_vec(self.par_vec))
+        } else if self.par_vec > 1 {
             Box::new(VecExecutor::with_par_vec(self.par_vec))
         } else {
             Box::new(HostExecutor::new())
@@ -76,6 +92,8 @@ pub struct PlanBuilder {
     tile: Option<Vec<usize>>,
     step_sizes: Vec<usize>,
     par_vec: usize,
+    stream: bool,
+    workers: Option<usize>,
 }
 
 impl PlanBuilder {
@@ -90,13 +108,30 @@ impl PlanBuilder {
             step_sizes: vec![4, 2, 1],
             // Scalar by default — existing call sites keep their behaviour.
             par_vec: 1,
+            stream: false,
+            workers: None,
         }
     }
 
     /// Host compute vector width (`par_vec`, a power of two ≤ 64). Values
-    /// above 1 make [`Plan::executor`] select the vectorized backend.
+    /// above 1 make [`Plan::executor`] select the vectorized backend
+    /// (or set the stage lane count under [`PlanBuilder::stream`]).
     pub fn par_vec(mut self, par_vec: usize) -> Self {
         self.par_vec = par_vec;
+        self
+    }
+
+    /// Select the streaming shift-register backend: one tile sweep per
+    /// chunk with all fused steps applied in flight (`--backend stream`).
+    pub fn stream(mut self, stream: bool) -> Self {
+        self.stream = stream;
+        self
+    }
+
+    /// Cap the threaded pipelines' compute-worker count (default: one
+    /// worker per available core).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers);
         self
     }
 
@@ -196,6 +231,9 @@ impl PlanBuilder {
             "par_vec must be a power of two in 1..=64, got {}",
             self.par_vec
         );
+        if let Some(w) = self.workers {
+            ensure!(w > 0, "workers must be positive");
+        }
         ensure!(!self.step_sizes.is_empty(), "step_sizes must not be empty");
         let mut sizes = self.step_sizes.clone();
         sizes.sort_unstable();
@@ -228,6 +266,8 @@ impl PlanBuilder {
             tile,
             chunks,
             par_vec: self.par_vec,
+            stream: self.stream,
+            workers: self.workers,
         })
     }
 }
@@ -312,6 +352,41 @@ mod tests {
             .unwrap();
         assert_eq!(vector.par_vec, 8);
         assert_eq!(vector.executor().backend_name(), "host-vec");
+    }
+
+    #[test]
+    fn stream_selects_executor() {
+        let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .stream(true)
+            .par_vec(8)
+            .build()
+            .unwrap();
+        assert!(plan.stream);
+        assert_eq!(plan.executor().backend_name(), "host-stream");
+        // stream at par_vec 1 is still the streaming backend (scalar rows)
+        let scalar_stream = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .stream(true)
+            .build()
+            .unwrap();
+        assert_eq!(scalar_stream.executor().backend_name(), "host-stream");
+    }
+
+    #[test]
+    fn workers_is_a_plan_parameter() {
+        let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .workers(3)
+            .build()
+            .unwrap();
+        assert_eq!(plan.workers, Some(3));
+        let err = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .workers(0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("workers"), "{err}");
     }
 
     #[test]

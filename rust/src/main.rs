@@ -17,7 +17,9 @@ use fstencil::coordinator::{Coordinator, FusedPipeline, PlanBuilder};
 use fstencil::dse::Tuner;
 use fstencil::model::Params;
 use fstencil::report;
-use fstencil::runtime::{vec as vec_backend, Executor, HostExecutor, PjrtExecutor, VecExecutor};
+use fstencil::runtime::{
+    vec as vec_backend, Executor, HostExecutor, PjrtExecutor, StreamExecutor, VecExecutor,
+};
 use fstencil::simulator::{BoardSim, Device, DeviceKind};
 use fstencil::stencil::{reference, Grid, StencilKind};
 use fstencil::util::cli::Args;
@@ -77,8 +79,9 @@ fn usage() {
 USAGE: fstencil <subcommand> [options]
 
   run       --stencil <name> --dims H,W[,D] --iters N [--tile a,b]
-            [--backend pjrt|host|vec|auto] [--par-vec V] [--pipeline] [--check]
-  verify    [--backend pjrt|host|vec|auto] [--par-vec V]
+            [--backend pjrt|host|vec|stream|auto] [--par-vec V] [--pipeline]
+            [--workers W] [--check]
+  verify    [--backend pjrt|host|vec|stream|auto] [--par-vec V]
   dse       --stencil <name> --device <sv|arria10> [--iters N]
   simulate  --stencil <name> --device <dev> --bsize B --par-vec V --par-time T
             [--dim D] [--iters N] [--no-padding]
@@ -113,22 +116,44 @@ fn parse_par_vec(args: &Args) -> anyhow::Result<usize> {
     Ok(pv)
 }
 
-/// Resolve the backend choice once. Returns the executor plus the
-/// `par_vec` the plan should record (1 unless a vector backend was
-/// chosen), so the plan parameter and the executor cannot diverge.
-fn make_executor(args: &Args) -> anyhow::Result<(Box<dyn Executor>, usize)> {
-    let mk_vec = |args: &Args| -> anyhow::Result<(Box<dyn Executor>, usize)> {
+/// Resolved backend choice: the executor plus the plan parameters that
+/// reproduce it through `Plan::executor`, so the plan and the explicit
+/// executor cannot diverge.
+struct BackendChoice {
+    exec: Box<dyn Executor>,
+    /// `par_vec` the plan should record (1 unless a vector-lane backend
+    /// was chosen).
+    par_vec: usize,
+    /// Whether the plan should select the streaming backend.
+    stream: bool,
+}
+
+/// Resolve the backend choice once.
+fn make_executor(args: &Args) -> anyhow::Result<BackendChoice> {
+    let mk_vec = |args: &Args| -> anyhow::Result<BackendChoice> {
         let pv = parse_par_vec(args)?;
-        Ok((Box::new(VecExecutor::with_par_vec(pv)), pv))
+        Ok(BackendChoice { exec: Box::new(VecExecutor::with_par_vec(pv)), par_vec: pv, stream: false })
     };
     match args.opt_or("backend", "auto") {
-        "host" => Ok((Box::new(HostExecutor::new()), 1)),
+        "host" => Ok(BackendChoice { exec: Box::new(HostExecutor::new()), par_vec: 1, stream: false }),
         "vec" => mk_vec(args),
-        "pjrt" => Ok((Box::new(PjrtExecutor::load_default()?), 1)),
+        "stream" => {
+            let pv = parse_par_vec(args)?;
+            Ok(BackendChoice {
+                exec: Box::new(StreamExecutor::with_par_vec(pv)),
+                par_vec: pv,
+                stream: true,
+            })
+        }
+        "pjrt" => Ok(BackendChoice {
+            exec: Box::new(PjrtExecutor::load_default()?),
+            par_vec: 1,
+            stream: false,
+        }),
         "auto" => {
             if Path::new("artifacts/manifest.json").exists() {
                 match PjrtExecutor::load_default() {
-                    Ok(p) => Ok((Box::new(p), 1)),
+                    Ok(p) => Ok(BackendChoice { exec: Box::new(p), par_vec: 1, stream: false }),
                     Err(e) => {
                         eprintln!(
                             "note: pjrt unavailable ({e:#}); using vectorized host backend"
@@ -151,18 +176,23 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         .opt_usize_list("dims")
         .unwrap_or_else(|| if kind.ndim() == 2 { vec![512, 512] } else { vec![64, 64, 64] });
     let iters = args.opt_usize("iters").unwrap_or(16);
-    let (exec, plan_par_vec) = make_executor(args)?;
+    let choice = make_executor(args)?;
+    let exec = choice.exec;
     let mut builder = PlanBuilder::new(kind)
         .grid_dims(dims.clone())
         .iterations(iters)
         .for_executor(exec.as_ref())
-        // Record the host vector width in the plan so the pipeline path
-        // picks the same backend (the executor choice is a plan
-        // parameter). An explicit `--backend host` stays scalar (pv = 1)
-        // even when --par-vec is given.
-        .par_vec(plan_par_vec);
+        // Record the backend choice in the plan so the pipeline path
+        // picks the same one (the executor choice is a plan parameter).
+        // An explicit `--backend host` stays scalar (pv = 1) even when
+        // --par-vec is given.
+        .par_vec(choice.par_vec)
+        .stream(choice.stream);
     if let Some(tile) = args.opt_usize_list("tile") {
         builder = builder.tile(tile);
+    }
+    if let Some(w) = args.opt_usize("workers") {
+        builder = builder.workers(w);
     }
     let plan = builder.build()?;
 
@@ -189,7 +219,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let before = grid.clone();
     let report = if args.flag("pipeline") {
         // pipeline requires a Sync executor — run_planned picks the host
-        // scalar or vector backend from the plan's par_vec
+        // scalar/vector/stream backend from the plan parameters
         FusedPipeline::new(plan.clone()).run_planned(&mut grid, power.as_ref())?
     } else {
         Coordinator::new(plan.clone()).run(exec.as_ref(), &mut grid, power.as_ref())?
@@ -244,7 +274,7 @@ fn cmd_hlostats(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_verify(args: &Args) -> anyhow::Result<()> {
-    let (exec, _par_vec) = make_executor(args)?;
+    let exec = make_executor(args)?.exec;
     println!("verifying backend '{}' against the scalar oracle", exec.backend_name());
     let mut failures = 0;
     for kind in StencilKind::ALL {

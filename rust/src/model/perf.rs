@@ -192,6 +192,33 @@ impl PerfModel {
         let roof_mcells = self.th_max_gbps * GB / 1e6 / def.bytes_pcu as f64;
         linear.min(roof_mcells)
     }
+
+    /// Eq 3 transposed onto the *streaming* host backend
+    /// ([`crate::runtime::StreamExecutor`]): fusing `par_time` time-steps
+    /// into one tile sweep multiplies arithmetic intensity by `par_time`
+    /// (the tile crosses memory once instead of `par_time` times), so the
+    /// memory roof of [`PerfModel::host_par_vec_mcells`] scales by the
+    /// temporal depth while the compute term (linear in `par_vec`) is
+    /// unchanged:
+    /// `min(scalar × par_vec, par_time × roof)`.
+    ///
+    /// This is exactly the paper's §3.2 mechanism — temporal blocking
+    /// raises the compute-to-traffic ratio until the design is
+    /// compute-bound — restated in host Mcell/s. The step-fusion ablation
+    /// (`cargo bench --bench hotpath_pipeline`, T-sweep section) prints
+    /// this prediction next to the measured `StreamExecutor` throughput;
+    /// EXPERIMENTS.md records the comparison.
+    pub fn host_stream_mcells(
+        &self,
+        def: &StencilDef,
+        scalar_mcells: f64,
+        par_vec: usize,
+        par_time: usize,
+    ) -> f64 {
+        let linear = scalar_mcells * par_vec as f64;
+        let roof_mcells = self.th_max_gbps * GB / 1e6 / def.bytes_pcu as f64;
+        linear.min(roof_mcells * par_time.max(1) as f64)
+    }
 }
 
 #[cfg(test)]
@@ -322,6 +349,41 @@ mod tests {
             assert!(v >= last, "not monotone at {pv}");
             last = v;
         }
+    }
+
+    #[test]
+    fn host_stream_model_scales_roof_with_temporal_depth() {
+        // Same setup as the par_vec model test: 20 GB/s roof, Diffusion 2D
+        // (8 B per cell update) -> 2500 Mcell/s memory ceiling per sweep.
+        let m = PerfModel::new(20.0);
+        let def = StencilKind::Diffusion2D.def();
+        let scalar = 400.0;
+        // T = 1 degenerates to the per-step vec model.
+        for pv in [1usize, 2, 4, 8, 16] {
+            assert_eq!(
+                m.host_stream_mcells(def, scalar, pv, 1),
+                m.host_par_vec_mcells(def, scalar, pv),
+                "T=1 must equal the par_vec model at pv={pv}"
+            );
+        }
+        // par_vec 8 is memory-bound at T=1 (3200 linear vs 2500 roof)...
+        assert_eq!(m.host_stream_mcells(def, scalar, 8, 1), 2500.0);
+        // ...and compute-bound once T=2 doubles the roof (5000 > 3200).
+        assert_eq!(m.host_stream_mcells(def, scalar, 8, 2), 3200.0);
+        // The T-fold roof shows below the compute line: pv=16 (6400
+        // linear) crosses at T=3 (7500 roof).
+        assert_eq!(m.host_stream_mcells(def, scalar, 16, 2), 5000.0);
+        assert_eq!(m.host_stream_mcells(def, scalar, 16, 3), 6400.0);
+        // Monotone non-decreasing in T, capped by the compute term.
+        let mut last = 0.0;
+        for t in 1..=40usize {
+            let v = m.host_stream_mcells(def, scalar, 8, t);
+            assert!(v >= last, "not monotone at T={t}");
+            assert!(v <= scalar * 8.0 + 1e-9);
+            last = v;
+        }
+        // T = 0 is treated as 1 (defensive).
+        assert_eq!(m.host_stream_mcells(def, scalar, 8, 0), 2500.0);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::stencil::{reference, StencilKind};
 
-use super::{run_tile_with, Executor, TileSpec};
+use super::{run_tile_with_into, Executor, TileSpec};
 
 /// In-process executor. Supports every tile shape and step count.
 #[derive(Debug, Clone, Copy, Default)]
@@ -28,9 +28,27 @@ impl Executor for HostExecutor {
         power: Option<&[f32]>,
         coeffs: &[f32],
     ) -> Result<Vec<f32>> {
-        run_tile_with(spec, tile, power, coeffs, |cur, pw, c, next| {
-            reference::step_into(spec.kind, cur, pw, c, next)
-        })
+        let mut out = Vec::new();
+        self.run_tile_into(spec, tile, power, coeffs, &mut out)?;
+        Ok(out)
+    }
+
+    fn run_tile_into(
+        &self,
+        spec: &TileSpec,
+        tile: &[f32],
+        power: Option<&[f32]>,
+        coeffs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        run_tile_with_into(
+            spec,
+            tile,
+            power,
+            coeffs,
+            |cur, pw, c, next| reference::step_into(spec.kind, cur, pw, c, next),
+            out,
+        )
     }
 
     fn variants(&self, _kind: StencilKind) -> Vec<TileSpec> {

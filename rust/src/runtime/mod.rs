@@ -1,8 +1,11 @@
 //! Execution runtime: runs one *tile program* — `steps` fused time-steps
 //! over a halo-carrying tile — through the AOT-compiled HLO artifacts on
 //! the PJRT CPU client ([`PjrtExecutor`]), the in-process scalar oracle
-//! ([`HostExecutor`]), or the vectorized host backend ([`VecExecutor`],
-//! the software analogue of the paper's `par_vec` compute lanes).
+//! ([`HostExecutor`]), the vectorized host backend ([`VecExecutor`], the
+//! software analogue of the paper's `par_vec` compute lanes), or the
+//! streaming shift-register backend ([`StreamExecutor`], the analogue of
+//! the paper's §3.2 cascaded PE chain: the tile is swept once while all
+//! `steps` time-steps are applied in flight).
 //!
 //! Python never appears here: artifacts are produced once by
 //! `make artifacts` (python/compile/aot.py) and loaded as HLO text
@@ -13,6 +16,7 @@ pub mod hlostats;
 pub mod host;
 pub mod manifest;
 pub mod pjrt;
+pub mod stream;
 pub mod tile;
 pub mod vec;
 
@@ -20,6 +24,7 @@ pub use hlostats::{parse_hlo_text, HloStats};
 pub use host::HostExecutor;
 pub use manifest::{Manifest, Variant};
 pub use pjrt::PjrtExecutor;
+pub use stream::StreamExecutor;
 pub use tile::{extract_tile, writeback_tile};
 pub use vec::VecExecutor;
 
@@ -54,19 +59,15 @@ impl TileSpec {
     }
 }
 
-/// Shared tile-program driver for the in-process executors
-/// ([`HostExecutor`], [`VecExecutor`]): validates the
-/// (spec, tile, power, coeffs) contract, then runs `spec.steps`
-/// double-buffered applications of `step` with an allocation-free inner
-/// loop (§Perf). Keeping the validation in one place means the two host
-/// backends cannot drift apart.
-pub(crate) fn run_tile_with(
+/// Validate the (spec, tile, power, coeffs) contract shared by every
+/// in-process executor. Keeping the validation in one place means the
+/// host backends cannot drift apart.
+pub(crate) fn validate_tile_args(
     spec: &TileSpec,
     tile: &[f32],
     power: Option<&[f32]>,
     coeffs: &[f32],
-    mut step: impl FnMut(&Grid, Option<&Grid>, &[f32], &mut Grid),
-) -> anyhow::Result<Vec<f32>> {
+) -> anyhow::Result<()> {
     let def = spec.kind.def();
     anyhow::ensure!(
         tile.len() == spec.cells(),
@@ -85,17 +86,73 @@ pub(crate) fn run_tile_with(
         "power grid presence mismatch for {}",
         spec.kind
     );
-    let mut cur = Grid::from_vec(&spec.tile, tile.to_vec());
-    let pgrid = power.map(|p| {
-        assert_eq!(p.len(), spec.cells(), "power tile size mismatch");
-        Grid::from_vec(&spec.tile, p.to_vec())
-    });
-    let mut next = cur.clone();
-    for _ in 0..spec.steps {
-        step(&cur, pgrid.as_ref(), coeffs, &mut next);
-        std::mem::swap(&mut cur, &mut next);
+    if let Some(p) = power {
+        anyhow::ensure!(p.len() == spec.cells(), "power tile size mismatch");
     }
-    Ok(cur.into_data())
+    Ok(())
+}
+
+// Per-thread double-buffer scratch reused across run_tile calls, so the
+// steady-state hot path performs no allocation (§Perf: the pipelines call
+// run_tile_into once per tile; cloning three tile-sized buffers per call
+// dominated small-tile profiles). Thread-local because executors are
+// `Sync` and shared across the compute pool.
+thread_local! {
+    static TILE_SCRATCH: std::cell::RefCell<TileScratch> =
+        std::cell::RefCell::new(TileScratch::default());
+}
+
+#[derive(Default)]
+struct TileScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    p: Vec<f32>,
+}
+
+/// Shared tile-program driver for the double-buffered in-process executors
+/// ([`HostExecutor`], [`VecExecutor`]): validates the contract, then runs
+/// `spec.steps` applications of `step` over thread-local scratch grids and
+/// writes the final tile into `out` — zero allocation in the steady state.
+/// Not reentrant (the `step` closure must not itself call back into a
+/// scratch-using executor on the same thread).
+pub(crate) fn run_tile_with_into(
+    spec: &TileSpec,
+    tile: &[f32],
+    power: Option<&[f32]>,
+    coeffs: &[f32],
+    mut step: impl FnMut(&Grid, Option<&Grid>, &[f32], &mut Grid),
+    out: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    validate_tile_args(spec, tile, power, coeffs)?;
+    TILE_SCRATCH.with(|scratch| {
+        let mut sc = scratch.borrow_mut();
+        let mut a = std::mem::take(&mut sc.a);
+        a.clear();
+        a.extend_from_slice(tile);
+        let mut cur = Grid::from_vec(&spec.tile, a);
+        let mut b = std::mem::take(&mut sc.b);
+        // `next` is fully overwritten by each step; only the shape matters.
+        b.resize(spec.cells(), 0.0);
+        let mut next = Grid::from_vec(&spec.tile, b);
+        let pgrid = power.map(|p| {
+            let mut pb = std::mem::take(&mut sc.p);
+            pb.clear();
+            pb.extend_from_slice(p);
+            Grid::from_vec(&spec.tile, pb)
+        });
+        for _ in 0..spec.steps {
+            step(&cur, pgrid.as_ref(), coeffs, &mut next);
+            std::mem::swap(&mut cur, &mut next);
+        }
+        out.clear();
+        out.extend_from_slice(cur.data());
+        sc.a = cur.into_data();
+        sc.b = next.into_data();
+        if let Some(pg) = pgrid {
+            sc.p = pg.into_data();
+        }
+    });
+    Ok(())
 }
 
 /// A tile-program executor. Implementations must be deterministic and
@@ -112,6 +169,23 @@ pub trait Executor {
         power: Option<&[f32]>,
         coeffs: &[f32],
     ) -> anyhow::Result<Vec<f32>>;
+
+    /// Execute the tile program into a caller-provided buffer (resized to
+    /// the tile's cell count). The pipelines recycle these buffers through
+    /// their channels, so backends that override this (all host backends
+    /// do) make the steady-state hot path allocation-free. The default
+    /// falls back to [`Executor::run_tile`].
+    fn run_tile_into(
+        &self,
+        spec: &TileSpec,
+        tile: &[f32],
+        power: Option<&[f32]>,
+        coeffs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        *out = self.run_tile(spec, tile, power, coeffs)?;
+        Ok(())
+    }
 
     /// Tile programs this executor can run for `kind`. An empty vec means
     /// "anything" (the host executor).

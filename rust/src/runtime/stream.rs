@@ -1,0 +1,624 @@
+//! Streaming shift-register tile executor: the host analogue of the
+//! paper's §3.2 / Fig 2 cascaded PE chain.
+//!
+//! On the FPGA, `par_time` chained PEs each hold a shift register covering
+//! a `(2·radius+1)`-row (2D) or -plane (3D) sliding window; cells stream
+//! through the chain so the block is read from and written to external
+//! memory **once** while `par_time` time-steps are applied in flight —
+//! this is what turns the memory-bound stencil into a compute-bound one
+//! (arithmetic intensity grows linearly with the temporal block size).
+//!
+//! [`StreamExecutor`] reproduces that dataflow on the host. For a tile
+//! program of `steps` fused time-steps it runs `steps` cascaded *stages*.
+//! Stage *k* keeps only a `(2·radius+1)`-deep ring buffer of x-padded rows
+//! (2D) or planes (3D) of stage *k−1*'s output — the shift-register
+//! window, sized to stay L1/L2-resident — and emits its own output rows
+//! depth-first into stage *k+1*'s ring the moment its window allows.
+//! The tile is swept exactly once: stage 0 consumes input rows in order,
+//! the final stage writes output rows in order, and no stage ever
+//! materializes a full intermediate tile. Contrast [`super::HostExecutor`]
+//! / [`super::VecExecutor`], which sweep the whole tile through memory
+//! once per time-step (`steps` round trips).
+//!
+//! **Emission schedule.** With radius `r`, output row `y` needs input rows
+//! `y−r..=y+r` (edge-clamped), so it becomes ready once input row
+//! `min(y+r, ny−1)` has been fed. Each emitted row is pushed *immediately*
+//! through the rest of the chain (depth-first) before the stage emits its
+//! next row; this keeps every downstream window exactly `2r+1` deep even
+//! during the end-of-tile flush, where a stage emits `r+1` rows for one
+//! input. (A breadth-first drain would overwrite a still-needed ring slot
+//! — caught by the property tests.)
+//!
+//! **Bit-compatibility.** Stages evaluate rows with the *same* row kernels
+//! as the vectorized backend (`super::vec`), whose per-lane operand order
+//! is copied from the scalar oracle, and x-clamping is materialized as
+//! `radius` ghost cells replicating the row ends — the same values the
+//! oracle's clamped accessors read, in the same expression order. Results
+//! are therefore bit-identical to [`super::HostExecutor`] for every
+//! stencil, shape, step count and lane width (property-tested here and in
+//! `rust/tests/integration_pipeline.rs`).
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+
+use crate::stencil::StencilKind;
+
+use super::vec::{
+    is_valid_par_vec, row_diffusion2d, row_diffusion3d, row_hotspot2d, row_hotspot3d,
+    DEFAULT_PAR_VEC, MAX_PAR_VEC,
+};
+use super::{validate_tile_args, Executor, TileSpec};
+
+/// In-process streaming executor. Supports every tile shape and step
+/// count; `steps` becomes the depth of the cascaded stage chain
+/// (`par_time`), and `par_vec` the SIMD lane count of each stage's row
+/// kernel — the two Table 1 axes composed, exactly as on the FPGA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamExecutor {
+    par_vec: usize,
+}
+
+impl StreamExecutor {
+    /// Executor with the default lane count
+    /// ([`DEFAULT_PAR_VEC`](super::vec::DEFAULT_PAR_VEC)).
+    pub fn new() -> StreamExecutor {
+        StreamExecutor { par_vec: DEFAULT_PAR_VEC }
+    }
+
+    /// Executor with an explicit per-stage lane count.
+    ///
+    /// # Panics
+    /// If `par_vec` is not a power of two in
+    /// `1..=`[`MAX_PAR_VEC`](super::vec::MAX_PAR_VEC) (the §5.3
+    /// restriction the DSE space also applies).
+    pub fn with_par_vec(par_vec: usize) -> StreamExecutor {
+        assert!(
+            is_valid_par_vec(par_vec),
+            "par_vec must be a power of two in 1..={MAX_PAR_VEC}, got {par_vec}"
+        );
+        StreamExecutor { par_vec }
+    }
+
+    /// The configured lane count.
+    pub fn par_vec(&self) -> usize {
+        self.par_vec
+    }
+}
+
+impl Default for StreamExecutor {
+    fn default() -> StreamExecutor {
+        StreamExecutor::new()
+    }
+}
+
+impl Executor for StreamExecutor {
+    fn run_tile(
+        &self,
+        spec: &TileSpec,
+        tile: &[f32],
+        power: Option<&[f32]>,
+        coeffs: &[f32],
+    ) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.run_tile_into(spec, tile, power, coeffs, &mut out)?;
+        Ok(out)
+    }
+
+    fn run_tile_into(
+        &self,
+        spec: &TileSpec,
+        tile: &[f32],
+        power: Option<&[f32]>,
+        coeffs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        validate_tile_args(spec, tile, power, coeffs)?;
+        if spec.steps == 0 {
+            out.clear();
+            out.extend_from_slice(tile);
+            return Ok(());
+        }
+        match self.par_vec {
+            1 => run_stream::<1>(spec, tile, power, coeffs, out),
+            2 => run_stream::<2>(spec, tile, power, coeffs, out),
+            4 => run_stream::<4>(spec, tile, power, coeffs, out),
+            8 => run_stream::<8>(spec, tile, power, coeffs, out),
+            16 => run_stream::<16>(spec, tile, power, coeffs, out),
+            32 => run_stream::<32>(spec, tile, power, coeffs, out),
+            64 => run_stream::<64>(spec, tile, power, coeffs, out),
+            _ => unreachable!("is_valid_par_vec admits only powers of two <= 64"),
+        }
+        Ok(())
+    }
+
+    fn variants(&self, _kind: StencilKind) -> Vec<TileSpec> {
+        Vec::new() // anything goes
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "host-stream"
+    }
+}
+
+// Per-thread ring storage reused across run_tile calls (the executor is
+// `Sync` and shared across pipeline workers; the rings are tiny —
+// `steps × (2r+1)` rows/planes — so the reuse is about allocation count,
+// not footprint).
+thread_local! {
+    static STREAM_SCRATCH: RefCell<StreamScratch> = RefCell::new(StreamScratch::default());
+}
+
+#[derive(Default)]
+struct StreamScratch {
+    ring: Vec<f32>,
+    stages: Vec<StageState>,
+}
+
+/// Shift-register stage bookkeeping: rows (2D) or planes (3D) fed into the
+/// stage's ring so far, and output rows/planes emitted downstream.
+#[derive(Debug, Clone, Copy, Default)]
+struct StageState {
+    fed: usize,
+    emitted: usize,
+}
+
+impl StageState {
+    /// Whether output index `emitted` is computable: its clamped window
+    /// `emitted−r ..= emitted+r` is fully fed (the trailing clamp resolves
+    /// once everything was fed).
+    fn ready(&self, extent: usize, r: usize) -> bool {
+        self.emitted < extent && (self.emitted + r < self.fed || self.fed == extent)
+    }
+}
+
+fn run_stream<const L: usize>(
+    spec: &TileSpec,
+    tile: &[f32],
+    power: Option<&[f32]>,
+    coeffs: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let r = spec.kind.def().radius;
+    let steps = spec.steps;
+    STREAM_SCRATCH.with(|scratch| {
+        let mut sc = scratch.borrow_mut();
+        let StreamScratch { ring, stages } = &mut *sc;
+        stages.clear();
+        stages.resize(steps, StageState::default());
+        out.clear();
+        out.resize(spec.cells(), 0.0);
+        match spec.tile.as_slice() {
+            &[ny, nx] => {
+                let pw = nx + 2 * r;
+                let win = 2 * r + 1;
+                // Stale ring contents are harmless: a slot is always
+                // rewritten before the window covers it.
+                ring.resize(steps * win * pw, 0.0);
+                for j in 0..ny {
+                    let at = (j % win) * pw;
+                    write_padded_row(&mut ring[at..at + pw], &tile[j * nx..(j + 1) * nx], r);
+                    stages[0].fed = j + 1;
+                    cascade2d::<L>(
+                        spec.kind, stages, ring, 0, steps, ny, nx, r, power, coeffs, out,
+                    );
+                }
+            }
+            &[nz, ny, nx] => {
+                // All 3D kinds are radius 1.
+                let pw = nx + 2;
+                let plane = ny * pw;
+                ring.resize(steps * 3 * plane, 0.0);
+                for j in 0..nz {
+                    let at = (j % 3) * plane;
+                    let dst = &mut ring[at..at + plane];
+                    for y in 0..ny {
+                        let src = &tile[(j * ny + y) * nx..(j * ny + y + 1) * nx];
+                        write_padded_row(&mut dst[y * pw..(y + 1) * pw], src, 1);
+                    }
+                    stages[0].fed = j + 1;
+                    cascade3d::<L>(
+                        spec.kind, stages, ring, 0, steps, nz, ny, nx, power, coeffs, out,
+                    );
+                }
+            }
+            _ => unreachable!("TileSpec is 2-D or 3-D by construction"),
+        }
+        debug_assert!(stages.iter().all(|s| s.emitted == spec.tile[0]));
+    });
+}
+
+/// Copy an unpadded row into a padded ring slot, replicating the row ends
+/// into the `r` ghost cells on each side (the §5.1 x-clamp, materialized).
+fn write_padded_row(dst: &mut [f32], src: &[f32], r: usize) {
+    let nx = src.len();
+    dst[r..r + nx].copy_from_slice(src);
+    for i in 0..r {
+        dst[i] = src[0];
+        dst[r + nx + i] = src[nx - 1];
+    }
+}
+
+/// Replicate the ends of an in-place computed padded row into its ghosts.
+fn fill_ghosts(dst: &mut [f32], nx: usize, r: usize) {
+    let left = dst[r];
+    let right = dst[r + nx - 1];
+    for i in 0..r {
+        dst[i] = left;
+        dst[r + nx + i] = right;
+    }
+}
+
+/// Padded ring row `y+dy` (edge-clamped) of a stage's ring region.
+fn ring_row(stage: &[f32], y: usize, dy: isize, extent: usize, win: usize, pw: usize) -> &[f32] {
+    let idx = (y as isize + dy).clamp(0, extent as isize - 1) as usize;
+    &stage[(idx % win) * pw..(idx % win + 1) * pw]
+}
+
+// ------------------------------------------------------------- 2D cascade
+
+/// Drain every ready output row of stage `s`, pushing each emitted row
+/// depth-first through the remaining stages before emitting the next (see
+/// module docs for why depth-first is load-bearing).
+#[allow(clippy::too_many_arguments)]
+fn cascade2d<const L: usize>(
+    kind: StencilKind,
+    st: &mut [StageState],
+    ring: &mut [f32],
+    s: usize,
+    steps: usize,
+    ny: usize,
+    nx: usize,
+    r: usize,
+    power: Option<&[f32]>,
+    k: &[f32],
+    out: &mut [f32],
+) {
+    let pw = nx + 2 * r;
+    let win = 2 * r + 1;
+    let stage_sz = win * pw;
+    while st[s].ready(ny, r) {
+        let y = st[s].emitted;
+        st[s].emitted += 1;
+        if s + 1 < steps {
+            let (left, right) = ring.split_at_mut((s + 1) * stage_sz);
+            let src = &left[s * stage_sz..(s + 1) * stage_sz];
+            let dst = &mut right[(y % win) * pw..(y % win + 1) * pw];
+            compute_row_2d::<L>(kind, src, y, ny, nx, r, power, k, &mut dst[r..r + nx]);
+            fill_ghosts(dst, nx, r);
+            st[s + 1].fed = y + 1;
+            cascade2d::<L>(kind, st, ring, s + 1, steps, ny, nx, r, power, k, out);
+        } else {
+            let src = &ring[s * stage_sz..(s + 1) * stage_sz];
+            compute_row_2d::<L>(kind, src, y, ny, nx, r, power, k, &mut out[y * nx..(y + 1) * nx]);
+        }
+    }
+}
+
+/// One output row of a 2D stage, from its padded ring window. Taps and
+/// operand order match the vectorized backend's drivers exactly.
+#[allow(clippy::too_many_arguments)]
+fn compute_row_2d<const L: usize>(
+    kind: StencilKind,
+    stage: &[f32],
+    y: usize,
+    ny: usize,
+    nx: usize,
+    r: usize,
+    power: Option<&[f32]>,
+    k: &[f32],
+    o: &mut [f32],
+) {
+    let pw = nx + 2 * r;
+    let win = 2 * r + 1;
+    let c = ring_row(stage, y, 0, ny, win, pw);
+    match kind {
+        StencilKind::Diffusion2D => {
+            let n = ring_row(stage, y, -1, ny, win, pw);
+            let s = ring_row(stage, y, 1, ny, win, pw);
+            row_diffusion2d::<L>(
+                o,
+                &c[1..1 + nx],
+                &c[..nx],
+                &c[2..2 + nx],
+                &s[1..1 + nx],
+                &n[1..1 + nx],
+                k,
+            );
+        }
+        StencilKind::Hotspot2D => {
+            let n = ring_row(stage, y, -1, ny, win, pw);
+            let s = ring_row(stage, y, 1, ny, win, pw);
+            let p = &power.expect("hotspot stencils require a power grid")[y * nx..(y + 1) * nx];
+            row_hotspot2d::<L>(
+                o,
+                &c[1..1 + nx],
+                &c[..nx],
+                &c[2..2 + nx],
+                &s[1..1 + nx],
+                &n[1..1 + nx],
+                p,
+                k,
+            );
+        }
+        StencilKind::Diffusion2DR2 => {
+            let n1 = ring_row(stage, y, -1, ny, win, pw);
+            let s1 = ring_row(stage, y, 1, ny, win, pw);
+            let n2 = ring_row(stage, y, -2, ny, win, pw);
+            let s2 = ring_row(stage, y, 2, ny, win, pw);
+            row_diffusion2d_r2(
+                o,
+                c,
+                &n1[2..2 + nx],
+                &s1[2..2 + nx],
+                &n2[2..2 + nx],
+                &s2[2..2 + nx],
+                k,
+            );
+        }
+        _ => unreachable!("3D kinds use the plane cascade"),
+    }
+}
+
+/// Radius-2 star row (scalar, like the vectorized backend's fallback);
+/// operand order copied from the oracle's `diffusion2d_r2`.
+fn row_diffusion2d_r2(
+    o: &mut [f32],
+    c: &[f32],
+    n1: &[f32],
+    s1: &[f32],
+    n2: &[f32],
+    s2: &[f32],
+    k: &[f32],
+) {
+    let (cc, cn1, cs1, cw1, ce1) = (k[0], k[1], k[2], k[3], k[4]);
+    let (cn2, cs2, cw2, ce2) = (k[5], k[6], k[7], k[8]);
+    for x in 0..o.len() {
+        let i = x + 2;
+        o[x] = cc * c[i]
+            + cn1 * n1[x]
+            + cs1 * s1[x]
+            + cw1 * c[i - 1]
+            + ce1 * c[i + 1]
+            + cn2 * n2[x]
+            + cs2 * s2[x]
+            + cw2 * c[i - 2]
+            + ce2 * c[i + 2];
+    }
+}
+
+// ------------------------------------------------------------- 3D cascade
+
+/// 3D analogue of [`cascade2d`]: the ring unit is an x-padded *plane*, the
+/// in-plane y-clamp is resolved by row selection inside [`compute_row_3d`].
+#[allow(clippy::too_many_arguments)]
+fn cascade3d<const L: usize>(
+    kind: StencilKind,
+    st: &mut [StageState],
+    ring: &mut [f32],
+    s: usize,
+    steps: usize,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    power: Option<&[f32]>,
+    k: &[f32],
+    out: &mut [f32],
+) {
+    let pw = nx + 2;
+    let plane = ny * pw;
+    let stage_sz = 3 * plane;
+    while st[s].ready(nz, 1) {
+        let z = st[s].emitted;
+        st[s].emitted += 1;
+        if s + 1 < steps {
+            let (left, right) = ring.split_at_mut((s + 1) * stage_sz);
+            let src = &left[s * stage_sz..(s + 1) * stage_sz];
+            let dst = &mut right[(z % 3) * plane..(z % 3 + 1) * plane];
+            for y in 0..ny {
+                let row = &mut dst[y * pw..(y + 1) * pw];
+                compute_row_3d::<L>(kind, src, z, y, nz, ny, nx, power, k, &mut row[1..1 + nx]);
+                fill_ghosts(row, nx, 1);
+            }
+            st[s + 1].fed = z + 1;
+            cascade3d::<L>(kind, st, ring, s + 1, steps, nz, ny, nx, power, k, out);
+        } else {
+            let src = &ring[s * stage_sz..(s + 1) * stage_sz];
+            for y in 0..ny {
+                let at = (z * ny + y) * nx;
+                compute_row_3d::<L>(kind, src, z, y, nz, ny, nx, power, k, &mut out[at..at + nx]);
+            }
+        }
+    }
+}
+
+/// One output row of a 3D stage: center/above/below planes come from the
+/// ring window (z-clamped), north/south rows from the center plane
+/// (y-clamped). Tap order matches the vectorized backend's 3D drivers.
+#[allow(clippy::too_many_arguments)]
+fn compute_row_3d<const L: usize>(
+    kind: StencilKind,
+    stage: &[f32],
+    z: usize,
+    y: usize,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    power: Option<&[f32]>,
+    k: &[f32],
+    o: &mut [f32],
+) {
+    let pw = nx + 2;
+    let plane = ny * pw;
+    let cp = ring_row(stage, z, 0, nz, 3, plane);
+    let ap = ring_row(stage, z, -1, nz, 3, plane);
+    let bp = ring_row(stage, z, 1, nz, 3, plane);
+    let c = &cp[y * pw..(y + 1) * pw];
+    let yn = y.saturating_sub(1);
+    let ys = (y + 1).min(ny - 1);
+    let n = &cp[yn * pw..(yn + 1) * pw];
+    let s = &cp[ys * pw..(ys + 1) * pw];
+    let a = &ap[y * pw..(y + 1) * pw];
+    let b = &bp[y * pw..(y + 1) * pw];
+    match kind {
+        StencilKind::Diffusion3D => {
+            row_diffusion3d::<L>(
+                o,
+                &c[1..1 + nx],
+                &c[..nx],
+                &c[2..2 + nx],
+                &s[1..1 + nx],
+                &n[1..1 + nx],
+                &b[1..1 + nx],
+                &a[1..1 + nx],
+                k,
+            );
+        }
+        StencilKind::Hotspot3D => {
+            let p = &power.expect("hotspot stencils require a power grid")
+                [(z * ny + y) * nx..(z * ny + y + 1) * nx];
+            row_hotspot3d::<L>(
+                o,
+                &c[1..1 + nx],
+                &c[..nx],
+                &c[2..2 + nx],
+                &s[1..1 + nx],
+                &n[1..1 + nx],
+                &b[1..1 + nx],
+                &a[1..1 + nx],
+                p,
+                k,
+            );
+        }
+        _ => unreachable!("2D kinds use the row cascade"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostExecutor;
+    use crate::util::prop::{forall, Rng};
+
+    fn bitwise_equal(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn run_both(
+        kind: StencilKind,
+        dims: &[usize],
+        steps: usize,
+        par_vec: usize,
+        seed: u64,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let def = kind.def();
+        let n: usize = dims.iter().product();
+        let mut rng = Rng::new(seed);
+        let tile = rng.f32_vec(n, -1.0, 1.0);
+        let power = def.has_power.then(|| rng.f32_vec(n, 0.0, 0.5));
+        let spec = TileSpec::new(kind, dims, steps);
+        let scalar = HostExecutor::new()
+            .run_tile(&spec, &tile, power.as_deref(), def.default_coeffs)
+            .unwrap();
+        let stream = StreamExecutor::with_par_vec(par_vec)
+            .run_tile(&spec, &tile, power.as_deref(), def.default_coeffs)
+            .unwrap();
+        (scalar, stream)
+    }
+
+    /// THE core claim: the single-sweep cascaded-window execution equals
+    /// the T-sweep oracle to the bit, for every paper stencil at a
+    /// production-ish tile size and temporal depth.
+    #[test]
+    fn bit_identical_to_host_fixed_shapes() {
+        for kind in StencilKind::ALL {
+            let dims: Vec<usize> =
+                if kind.ndim() == 2 { vec![64, 64] } else { vec![16, 16, 16] };
+            for steps in [1usize, 2, 4, 8] {
+                let (scalar, stream) = run_both(kind, &dims, steps, 8, 7);
+                assert!(
+                    bitwise_equal(&scalar, &stream),
+                    "{kind} steps {steps}: stream path deviates"
+                );
+            }
+        }
+    }
+
+    /// Property test over random grids, shapes, temporal depths and lane
+    /// widths — the acceptance gate for the streaming backend.
+    #[test]
+    fn prop_bit_identical_to_host() {
+        forall(
+            "StreamExecutor == HostExecutor bit-for-bit",
+            30,
+            |r: &mut Rng| {
+                let kind = *r.pick(&StencilKind::ALL_EXT);
+                let dims: Vec<usize> =
+                    (0..kind.ndim()).map(|_| r.usize_in(1, 24)).collect();
+                let steps = r.usize_in(1, 6);
+                let par_vec = *r.pick(&[1usize, 2, 4, 8, 16, 32, 64]);
+                (kind, dims, steps, par_vec, r.next_u64())
+            },
+            |(kind, dims, steps, par_vec, seed)| {
+                let (scalar, stream) = run_both(*kind, dims, *steps, *par_vec, *seed);
+                if !bitwise_equal(&scalar, &stream) {
+                    return Err(format!(
+                        "{kind} dims {dims:?} steps {steps} par_vec {par_vec}: \
+                         stream deviates from scalar"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The flush corner: tiles whose extent along the streamed axis is
+    /// comparable to the window (ring wrap + multi-row flush per input).
+    #[test]
+    fn short_axis_flush_cases() {
+        for ny in 1..=7usize {
+            let (scalar, stream) = run_both(StencilKind::Diffusion2D, &[ny, 9], 4, 4, 21);
+            assert!(bitwise_equal(&scalar, &stream), "ny = {ny}");
+            let (scalar, stream) = run_both(StencilKind::Diffusion2DR2, &[ny, 9], 3, 1, 22);
+            assert!(bitwise_equal(&scalar, &stream), "r2 ny = {ny}");
+        }
+        for nz in 1..=5usize {
+            let (scalar, stream) = run_both(StencilKind::Hotspot3D, &[nz, 5, 6], 4, 2, 23);
+            assert!(bitwise_equal(&scalar, &stream), "nz = {nz}");
+        }
+    }
+
+    #[test]
+    fn tiny_grids_are_all_boundary() {
+        for dims in [vec![1usize, 9], vec![9, 1], vec![2, 2], vec![1, 1]] {
+            let (scalar, stream) = run_both(StencilKind::Diffusion2D, &dims, 3, 8, 5);
+            assert!(bitwise_equal(&scalar, &stream), "dims {dims:?}");
+        }
+    }
+
+    #[test]
+    fn validates_inputs_like_host() {
+        let exec = StreamExecutor::new();
+        let spec = TileSpec::new(StencilKind::Diffusion2D, &[8, 8], 1);
+        let coeffs = StencilKind::Diffusion2D.def().default_coeffs;
+        assert!(exec.run_tile(&spec, &[0.0; 63], None, coeffs).is_err());
+        assert!(exec.run_tile(&spec, &[0.0; 64], None, &[0.1; 3]).is_err());
+        let hspec = TileSpec::new(StencilKind::Hotspot2D, &[8, 8], 1);
+        let hcoeffs = StencilKind::Hotspot2D.def().default_coeffs;
+        assert!(exec.run_tile(&hspec, &[0.0; 64], None, hcoeffs).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "par_vec")]
+    fn rejects_bad_lane_count() {
+        StreamExecutor::with_par_vec(3);
+    }
+
+    #[test]
+    fn supports_everything() {
+        let s = StreamExecutor::new();
+        assert!(s.supports(&TileSpec::new(StencilKind::Hotspot3D, &[5, 7, 9], 11)));
+        assert_eq!(s.backend_name(), "host-stream");
+        assert_eq!(StreamExecutor::with_par_vec(4).par_vec(), 4);
+    }
+}

@@ -25,7 +25,7 @@ use anyhow::Result;
 
 use crate::stencil::{reference, Grid, StencilKind};
 
-use super::{run_tile_with, Executor, TileSpec};
+use super::{run_tile_with_into, Executor, TileSpec};
 
 /// In-process vectorized executor. Supports every tile shape and step
 /// count, like [`super::HostExecutor`], but updates `par_vec` cells per
@@ -88,9 +88,27 @@ impl Executor for VecExecutor {
         power: Option<&[f32]>,
         coeffs: &[f32],
     ) -> Result<Vec<f32>> {
-        run_tile_with(spec, tile, power, coeffs, |cur, pw, c, next| {
-            step_into(self.par_vec, spec.kind, cur, pw, c, next)
-        })
+        let mut out = Vec::new();
+        self.run_tile_into(spec, tile, power, coeffs, &mut out)?;
+        Ok(out)
+    }
+
+    fn run_tile_into(
+        &self,
+        spec: &TileSpec,
+        tile: &[f32],
+        power: Option<&[f32]>,
+        coeffs: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        run_tile_with_into(
+            spec,
+            tile,
+            power,
+            coeffs,
+            |cur, pw, c, next| step_into(self.par_vec, spec.kind, cur, pw, c, next),
+            out,
+        )
     }
 
     fn variants(&self, _kind: StencilKind) -> Vec<TileSpec> {
@@ -168,11 +186,14 @@ fn lanes_mut<const L: usize>(s: &mut [f32], at: usize) -> &mut [f32; L] {
 //
 // Each kernel evaluates one interior row span. Operand order per lane is
 // copied verbatim from the scalar oracle so results match bit-for-bit.
+// `pub(crate)` because the streaming backend (`runtime::stream`) reuses
+// these as its per-stage row kernels — one copy of each stencil's
+// arithmetic keeps all three host backends bit-identical by construction.
 
 /// Diffusion 2D/weights row: `o = kc*c + kw*w + ke*e + ks*s + kn*n`.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn row_diffusion2d<const L: usize>(
+pub(crate) fn row_diffusion2d<const L: usize>(
     o: &mut [f32],
     c: &[f32],
     w: &[f32],
@@ -215,7 +236,7 @@ fn row_diffusion2d<const L: usize>(
 /// Diffusion 3D row: adds the above/below plane taps.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn row_diffusion3d<const L: usize>(
+pub(crate) fn row_diffusion3d<const L: usize>(
     o: &mut [f32],
     c: &[f32],
     w: &[f32],
@@ -268,7 +289,7 @@ fn row_diffusion3d<const L: usize>(
 /// Hotspot 2D row: Rodinia update with the power input.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn row_hotspot2d<const L: usize>(
+pub(crate) fn row_hotspot2d<const L: usize>(
     o: &mut [f32],
     c: &[f32],
     w: &[f32],
@@ -318,7 +339,7 @@ fn row_hotspot2d<const L: usize>(
 /// Hotspot 3D row: 7-point sum of products plus power and ambient terms.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn row_hotspot3d<const L: usize>(
+pub(crate) fn row_hotspot3d<const L: usize>(
     o: &mut [f32],
     c: &[f32],
     w: &[f32],

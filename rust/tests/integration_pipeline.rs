@@ -3,7 +3,7 @@
 //! across stencils, grid shapes, iteration counts and pipeline flavours.
 
 use fstencil::coordinator::{ChainPipeline, Coordinator, FusedPipeline, PlanBuilder};
-use fstencil::runtime::{HostExecutor, VecExecutor};
+use fstencil::runtime::{HostExecutor, StreamExecutor, VecExecutor};
 use fstencil::stencil::{reference, Grid, StencilKind};
 use fstencil::util::prop::{forall, Rng};
 
@@ -206,6 +206,112 @@ fn prop_vectorized_full_stack_bit_identical() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_stream_full_stack_bit_identical() {
+    // The PR-2 tentpole property at system level: the whole blocked stack
+    // produces bit-identical grids whether the tiles run on the scalar
+    // oracle (T memory sweeps per chunk) or the streaming shift-register
+    // executor (one sweep, T cascaded window stages), for every stencil,
+    // random shapes, iteration counts and lane widths.
+    forall(
+        "streaming full stack == scalar full stack (bitwise)",
+        10,
+        |r: &mut Rng| {
+            let kind = *r.pick(&StencilKind::ALL);
+            let (dims, tile) = if kind.ndim() == 2 {
+                let t = 8 * r.usize_in(3, 6);
+                (vec![t + r.usize_in(0, 60), t + r.usize_in(0, 60)], vec![t, t])
+            } else {
+                (
+                    vec![
+                        16 + r.usize_in(0, 12),
+                        16 + r.usize_in(0, 12),
+                        16 + r.usize_in(0, 12),
+                    ],
+                    vec![16, 16, 16],
+                )
+            };
+            let iters = r.usize_in(1, 8);
+            let par_vec = *r.pick(&[1usize, 2, 4, 8, 16]);
+            (kind, dims, tile, iters, par_vec, r.next_u64())
+        },
+        |(kind, dims, tile, iters, par_vec, seed)| {
+            let power = kind.def().has_power.then(|| mk_grid(kind.ndim(), dims, seed + 1));
+            let plan = PlanBuilder::new(*kind)
+                .grid_dims(dims.clone())
+                .iterations(*iters)
+                .tile(tile.clone())
+                .build()
+                .map_err(|e| e.to_string())?;
+            let mut scalar = mk_grid(kind.ndim(), dims, *seed);
+            let mut stream = scalar.clone();
+            Coordinator::new(plan.clone())
+                .run(&HostExecutor::new(), &mut scalar, power.as_ref())
+                .map_err(|e| e.to_string())?;
+            Coordinator::new(plan)
+                .run(&StreamExecutor::with_par_vec(*par_vec), &mut stream, power.as_ref())
+                .map_err(|e| e.to_string())?;
+            let a = scalar.data();
+            let b = stream.data();
+            if a.iter().zip(b).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                return Err(format!(
+                    "{kind} dims {dims:?} tile {tile:?} iters {iters} par_vec \
+                     {par_vec}: streaming stack deviates"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn stream_plan_through_pipelines_bit_identical() {
+    // run_planned routing of the streaming backend through the fused
+    // pipeline (persistent worker pool + recycled buffers) and the PE
+    // chain, vs the scalar coordinator — bitwise, for a 2D and a 3D kind.
+    for kind in [StencilKind::Hotspot2D, StencilKind::Diffusion3D] {
+        let dims = if kind.ndim() == 2 { vec![80, 72] } else { vec![24, 24, 24] };
+        let tile = if kind.ndim() == 2 { vec![32, 32] } else { vec![16, 16, 16] };
+        let mk_plan = |stream: bool| {
+            PlanBuilder::new(kind)
+                .grid_dims(dims.clone())
+                .iterations(7)
+                .tile(tile.clone())
+                .step_sizes(if kind.ndim() == 2 { vec![4, 2, 1] } else { vec![2, 1] })
+                .par_vec(4)
+                .stream(stream)
+                .build()
+                .unwrap()
+        };
+        let power = kind.def().has_power.then(|| mk_grid(kind.ndim(), &dims, 777));
+        let mut scalar = mk_grid(kind.ndim(), &dims, 42);
+        let mut fused = scalar.clone();
+        let mut chain_scalar = scalar.clone();
+        let mut chain_stream = scalar.clone();
+        Coordinator::new(mk_plan(false))
+            .run(&HostExecutor::new(), &mut scalar, power.as_ref())
+            .unwrap();
+        let rep = FusedPipeline::with_workers(mk_plan(true), 4)
+            .run_planned(&mut fused, power.as_ref())
+            .unwrap();
+        assert_eq!(rep.backend, "fused-pipeline");
+        assert_eq!(
+            scalar.max_abs_diff(&fused),
+            0.0,
+            "{kind}: streamed fused pipeline deviates"
+        );
+        // The chain recomputes with chain-length halos, so it is compared
+        // stream-vs-scalar (both chains), which must match bitwise.
+        ChainPipeline::new(mk_plan(false)).run(&mut chain_scalar, power.as_ref()).unwrap();
+        ChainPipeline::new(mk_plan(true)).run(&mut chain_stream, power.as_ref()).unwrap();
+        assert_eq!(
+            chain_scalar.max_abs_diff(&chain_stream),
+            0.0,
+            "{kind}: streamed PE chain deviates"
+        );
+    }
 }
 
 #[test]
