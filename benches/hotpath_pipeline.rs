@@ -12,6 +12,7 @@
 use fstencil::bench_support::{smoke, BenchReport, Bencher};
 use fstencil::blocking::geometry::BlockGeometry;
 use fstencil::coordinator::{Coordinator, FusedPipeline, PlanBuilder};
+use fstencil::engine::{Backend, StencilEngine};
 use fstencil::model::PerfModel;
 use fstencil::runtime::{
     extract_tile, writeback_tile, Executor, HostExecutor, PjrtExecutor, StreamExecutor,
@@ -256,7 +257,7 @@ fn main() {
             .grid_dims(dims.clone())
             .iterations(iters)
             .tile(vec![64, 64])
-            .par_vec(pv)
+            .backend(Backend::Vec { par_vec: pv })
             .build()
             .unwrap();
         rep.push(b.bench_with_metric(
@@ -280,13 +281,12 @@ fn main() {
         .iterations(8)
         .tile(vec![edim, edim.min(512)])
         .step_sizes(vec![8])
-        .par_vec(8)
-        .stream(true)
+        .backend(Backend::Stream { par_vec: 8 })
         .build()
         .unwrap();
     let vplan8 = {
         let mut p = eplan.clone();
-        p.stream = false;
+        p.backend = Backend::Vec { par_vec: 8 };
         p
     };
     let mut ge = Grid::new2d(edim, edim);
@@ -316,6 +316,60 @@ fn main() {
             std::hint::black_box(work);
         },
     ));
+
+    // --- engine session ablation: a batch of jobs through ONE warm
+    //     session (threads + tile pools + grid pair reused) vs a fresh
+    //     session per job (the old per-run setup cost) -----------------
+    let bdim = if sm { 96usize } else { 384 };
+    let bjobs = if sm { 2usize } else { 8 };
+    let bplan = PlanBuilder::new(kind)
+        .grid_dims(vec![bdim, bdim])
+        .iterations(8)
+        .tile(vec![48, 48])
+        .backend(Backend::Vec { par_vec: 8 })
+        .workers(4)
+        .build()
+        .unwrap();
+    let engine = StencilEngine::new();
+    let jobs: Vec<Grid> = (0..bjobs)
+        .map(|j| {
+            let mut g = Grid::new2d(bdim, bdim);
+            g.fill_random(10 + j as u64, 0.0, 1.0);
+            g
+        })
+        .collect();
+    let batch_updates = (bdim * bdim * 8 * bjobs) as f64;
+    let warm = b.bench_with_metric(
+        &format!("session_warm_{bdim}sq_x8_{bjobs}jobs"),
+        "Mcell-updates/s",
+        batch_updates / 1e6,
+        || {
+            let mut session = engine.session(bplan.clone()).unwrap();
+            for g in &jobs {
+                std::hint::black_box(session.submit(g.clone()).wait().unwrap());
+            }
+        },
+    );
+    let cold = b.bench_with_metric(
+        &format!("session_cold_{bdim}sq_x8_{bjobs}jobs"),
+        "Mcell-updates/s",
+        batch_updates / 1e6,
+        || {
+            for g in &jobs {
+                let mut work = g.clone();
+                engine.run(bplan.clone(), &mut work, None).unwrap();
+                std::hint::black_box(work);
+            }
+        },
+    );
+    rep.ablation(
+        &format!("warm-vs-cold session ablation ({bjobs} jobs)"),
+        cold.summary.mean,
+        warm.summary.mean,
+        "acceptance: >= 1.0x — session setup amortized across the batch",
+    );
+    rep.push(warm);
+    rep.push(cold);
 
     // Smoke runs are correctness checks, not measurements — never let
     // them overwrite the persisted perf trajectory.

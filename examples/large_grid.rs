@@ -16,9 +16,9 @@
 //!     cargo run --release --example large_grid
 
 use fstencil::baseline::max_supported_width;
-use fstencil::coordinator::{FusedPipeline, PlanBuilder};
+use fstencil::coordinator::PlanBuilder;
+use fstencil::engine::{Backend, StencilEngine};
 use fstencil::model::Params;
-use fstencil::runtime::HostExecutor;
 use fstencil::simulator::{BoardSim, Device, DeviceKind};
 use fstencil::stencil::{reference, Grid, StencilKind};
 
@@ -62,8 +62,9 @@ fn main() -> anyhow::Result<()> {
         .iterations(iters)
         .tile(vec![128, 128])
         .step_sizes(vec![4, 2, 1])
+        .backend(Backend::Vec { par_vec: 8 })
         .build()?;
-    let rep = FusedPipeline::new(plan.clone()).run(&HostExecutor::new(), &mut grid, None)?;
+    let rep = StencilEngine::new().session(plan.clone())?.run(&mut grid, None)?;
     println!(
         "  {} tiles, {} passes, {:.2}s -> {:.1} Mcell/s (redundancy {:.3})",
         rep.tiles_executed,

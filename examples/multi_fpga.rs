@@ -6,7 +6,7 @@
 //!     cargo run --release --example multi_fpga
 
 use fstencil::coordinator::{DistributedCoordinator, PlanBuilder};
-use fstencil::runtime::HostExecutor;
+use fstencil::engine::Backend;
 use fstencil::stencil::{reference, Grid, StencilKind};
 
 fn main() -> anyhow::Result<()> {
@@ -25,13 +25,10 @@ fn main() -> anyhow::Result<()> {
             .grid_dims(vec![h, w])
             .iterations(iters)
             .tile(vec![64, 64])
+            .backend(Backend::Vec { par_vec: 8 })
             .build()?;
         let mut grid = base.clone();
-        let rep = DistributedCoordinator::new(plan, workers).run(
-            &HostExecutor::new(),
-            &mut grid,
-            None,
-        )?;
+        let rep = DistributedCoordinator::new(plan, workers).run_planned(&mut grid, None)?;
         let err = grid.max_abs_diff(&want);
         println!(
             "{workers:>7} | {:>7.1} | {:>16} | {:>12.4} | {err:.3e}",

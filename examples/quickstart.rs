@@ -1,13 +1,15 @@
-//! Quickstart: run a Diffusion 2D problem through the public API and
+//! Quickstart: run a Diffusion 2D problem through the engine API and
 //! verify the blocked execution against the scalar oracle.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Uses the PJRT backend when `make artifacts` has been run, otherwise
-//! falls back to the in-process host executor.
+//! The front door is `StencilEngine`: pick a typed `Backend`, build a
+//! `Plan`, open a warm `Session`, submit grids. (For the AOT/PJRT
+//! artifact path see `examples/heat_sim.rs` or `fstencil run --backend
+//! pjrt`.)
 
-use fstencil::coordinator::{Coordinator, PlanBuilder};
-use fstencil::runtime::{Executor, HostExecutor, PjrtExecutor};
+use fstencil::coordinator::PlanBuilder;
+use fstencil::engine::{Backend, StencilEngine};
 use fstencil::stencil::{reference, Grid, StencilKind};
 
 fn main() -> anyhow::Result<()> {
@@ -19,36 +21,29 @@ fn main() -> anyhow::Result<()> {
     grid.fill_gaussian(0.0, 1.0, 0.08);
     let initial_mass = grid.sum();
 
-    // Prefer the AOT/PJRT path (python never runs here — artifacts were
-    // lowered once by `make artifacts`).
-    let exec: Box<dyn Executor> = match PjrtExecutor::load_default() {
-        Ok(p) => {
-            println!("backend: PJRT ({})", p.platform());
-            Box::new(p)
-        }
-        Err(e) => {
-            println!("backend: host fallback ({e})");
-            Box::new(HostExecutor::new())
-        }
-    };
-
+    let backend = Backend::Vec { par_vec: 8 };
     let plan = PlanBuilder::new(kind)
         .grid_dims(vec![h, w])
         .iterations(iters)
-        .for_executor(exec.as_ref())
+        .backend(backend)
         .build()?;
     println!(
-        "plan: tile {:?}, chunk schedule {:?} ({} passes)",
+        "plan: backend {backend}, tile {:?}, chunk schedule {:?} ({} passes)",
         plan.tile,
         plan.chunks,
         plan.passes()
     );
 
+    // A session owns warm worker threads + tile pools; this example
+    // submits once, but every further submit would reuse them.
+    let mut session = StencilEngine::new().session(plan.clone())?;
     let before = grid.clone();
-    let report = Coordinator::new(plan.clone()).run(exec.as_ref(), &mut grid, None)?;
+    let out = session.submit(grid).wait()?;
+    let report = &out.report;
     println!(
-        "ran {} tiles in {:.1} ms -> {:.1} Mcell/s useful, redundancy {:.3}",
+        "ran {} tiles on {} in {:.1} ms -> {:.1} Mcell/s useful, redundancy {:.3}",
         report.tiles_executed,
+        report.backend,
         report.elapsed.as_secs_f64() * 1e3,
         report.mcells_per_sec(),
         report.redundancy()
@@ -56,12 +51,12 @@ fn main() -> anyhow::Result<()> {
 
     // Check against the whole-grid scalar oracle.
     let want = reference::run(kind, &before, None, &plan.coeffs, iters);
-    let err = grid.max_abs_diff(&want);
+    let err = out.grid.max_abs_diff(&want);
     println!("max |err| vs oracle = {err:.3e}");
     anyhow::ensure!(err < 1e-3, "verification failed");
 
     // Physics sanity: diffusion conserves mass away from boundaries.
-    let final_mass = grid.sum();
+    let final_mass = out.grid.sum();
     println!("mass {initial_mass:.4} -> {final_mass:.4} (diffusion conserves)");
     println!("quickstart OK");
     Ok(())

@@ -141,6 +141,22 @@ impl BenchReport {
         self.payload.push(text);
     }
 
+    /// Record an A/B ablation outcome as a payload line: the speedup of
+    /// `new` over `base` (mean seconds per iteration) plus the acceptance
+    /// criterion it targets. Returns the speedup so callers can branch on
+    /// it. Used by the backend and warm-vs-cold session ablations.
+    pub fn ablation(
+        &mut self,
+        label: &str,
+        base_mean_s: f64,
+        new_mean_s: f64,
+        acceptance: &str,
+    ) -> f64 {
+        let speedup = base_mean_s / new_mean_s;
+        self.payload(format!("{label}: speedup {speedup:.2}x ({acceptance})"));
+        speedup
+    }
+
     /// Render the timing summary table.
     pub fn summary_table(&self) -> String {
         let mut t = Table::new(&["bench", "mean ms", "median ms", "rsd %", "metric"])
@@ -252,6 +268,14 @@ mod tests {
         let json = rep.to_json();
         assert_eq!(json.get("title").unwrap().as_str().unwrap(), "test report");
         assert!(rep.summary_table().contains("noop"));
+    }
+
+    #[test]
+    fn ablation_records_speedup() {
+        let mut rep = BenchReport::new("ablation test");
+        let s = rep.ablation("warm-vs-cold", 2.0, 1.0, "acceptance: >= 1x");
+        assert!((s - 2.0).abs() < 1e-12);
+        assert!(rep.payload.iter().any(|p| p.contains("2.00x")));
     }
 
     #[test]

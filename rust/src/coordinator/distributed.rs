@@ -147,6 +147,7 @@ impl DistributedCoordinator {
                                     .coeffs(plan.coeffs.clone())
                                     .tile(plan.tile.clone())
                                     .step_sizes(vec![steps])
+                                    .backend(plan.backend)
                                     .build()?;
                                 let rep = Coordinator::new(sub_plan).run(
                                     exec,
@@ -253,22 +254,26 @@ mod tests {
     fn run_planned_stream_matches_scalar() {
         // Backend selection through the plan: the streaming executor is
         // bit-identical to the scalar oracle across the slab decomposition.
+        use crate::engine::Backend;
         let kind = StencilKind::Diffusion2D;
         let dims = vec![128usize, 64];
-        let mk_plan = |stream: bool| {
+        let mk_plan = |backend: Backend| {
             PlanBuilder::new(kind)
                 .grid_dims(dims.clone())
                 .iterations(6)
                 .tile(vec![32, 32])
-                .par_vec(4)
-                .stream(stream)
+                .backend(backend)
                 .build()
                 .unwrap()
         };
         let mut a = mk(kind, &dims, 3);
         let mut b = a.clone();
-        DistributedCoordinator::new(mk_plan(false), 2).run_planned(&mut a, None).unwrap();
-        DistributedCoordinator::new(mk_plan(true), 2).run_planned(&mut b, None).unwrap();
+        DistributedCoordinator::new(mk_plan(Backend::Vec { par_vec: 4 }), 2)
+            .run_planned(&mut a, None)
+            .unwrap();
+        DistributedCoordinator::new(mk_plan(Backend::Stream { par_vec: 4 }), 2)
+            .run_planned(&mut b, None)
+            .unwrap();
         assert_eq!(a.max_abs_diff(&b), 0.0, "distributed stream deviates");
     }
 

@@ -8,14 +8,17 @@
 //! chained [`pipeline::ChainPipeline`] (§3.2's autorun PEs with shallow
 //! channels).
 //!
-//! The compute backend is a plan parameter: `PlanBuilder::par_vec` selects
-//! between the scalar oracle and the vectorized host executor, and
-//! `PlanBuilder::stream` the streaming shift-register backend
-//! ([`crate::runtime::StreamExecutor`], the paper's cascaded PE chain: one
-//! tile sweep per chunk with all fused steps in flight). The `run_planned`
-//! entry points on [`Coordinator`], [`pipeline::FusedPipeline`] and
-//! [`distributed::DistributedCoordinator`] honour it, and
-//! [`pipeline::ChainPipeline::run`] builds its PE bodies from it directly.
+//! The compute backend is a typed plan parameter
+//! ([`crate::engine::Backend`], set via `PlanBuilder::backend`): the
+//! scalar oracle, the vectorized lane backend, or the streaming
+//! shift-register cascade ([`crate::runtime::StreamExecutor`], the
+//! paper's PE chain: one tile sweep per chunk with all fused steps in
+//! flight). The `run_planned` entry points on [`Coordinator`],
+//! [`pipeline::FusedPipeline`] and [`distributed::DistributedCoordinator`]
+//! honour it, and [`pipeline::ChainPipeline::run`] builds its PE bodies
+//! from it directly. Batched workloads should go through the
+//! [`crate::engine`] layer, whose warm sessions reuse threads and buffers
+//! across submissions.
 
 pub mod distributed;
 pub mod pipeline;
@@ -101,10 +104,9 @@ impl Coordinator {
         &self.plan
     }
 
-    /// Run with the executor the plan itself selects ([`Plan::executor`]):
-    /// the streaming backend when `stream` is set, else the scalar oracle
-    /// at `par_vec == 1` or the vectorized host backend above it. Results
-    /// are bit-identical across all three.
+    /// Run with the executor the plan's [`crate::engine::Backend`]
+    /// selects ([`Plan::executor`]). Results are bit-identical across
+    /// all three backends.
     pub fn run_planned(&self, grid: &mut Grid, power: Option<&Grid>) -> Result<ExecReport> {
         let exec = self.plan.executor();
         self.run(exec.as_ref(), grid, power)

@@ -67,11 +67,14 @@ impl FusedPipeline {
         FusedPipeline { plan, workers: workers.max(1) }
     }
 
-    /// Run with the executor the plan selects via its `par_vec`/`stream`
-    /// parameters ([`Plan::executor`]).
+    /// Run with the executor the plan's [`crate::engine::Backend`]
+    /// selects. Thin wrapper over a one-shot engine
+    /// [`crate::engine::Session`] (same sharding, bit-identical results);
+    /// batched callers should hold a session directly and amortize the
+    /// setup this wrapper pays per call.
     pub fn run_planned(&self, grid: &mut Grid, power: Option<&Grid>) -> Result<ExecReport> {
-        let exec = self.plan.executor();
-        self.run(exec.as_ref(), grid, power)
+        let mut session = crate::engine::Session::spawn(self.plan.clone(), Some(self.workers))?;
+        Ok(session.run(grid, power)?)
     }
 
     /// Run the plan. The executor must be shareable across the compute
@@ -472,6 +475,7 @@ impl ChainPipeline {
 mod tests {
     use super::*;
     use crate::coordinator::{Coordinator, PlanBuilder};
+    use crate::engine::Backend;
     use crate::runtime::HostExecutor;
     use crate::stencil::{reference, StencilKind};
     use std::time::Duration;
@@ -575,12 +579,12 @@ mod tests {
     fn vectorized_plan_is_bit_identical_across_paths() {
         let kind = StencilKind::Hotspot2D;
         let dims = vec![72usize, 88];
-        let mk_plan = |pv: usize| {
+        let mk_plan = |backend: Backend| {
             PlanBuilder::new(kind)
                 .grid_dims(dims.clone())
                 .iterations(6)
                 .tile(vec![32, 32])
-                .par_vec(pv)
+                .backend(backend)
                 .build()
                 .unwrap()
         };
@@ -588,9 +592,13 @@ mod tests {
         let mut scalar = mk_grid(kind, &dims, 5);
         let mut vector = scalar.clone();
         let mut fused = scalar.clone();
-        Coordinator::new(mk_plan(1)).run_planned(&mut scalar, Some(&power)).unwrap();
-        Coordinator::new(mk_plan(8)).run_planned(&mut vector, Some(&power)).unwrap();
-        FusedPipeline::with_workers(mk_plan(8), 3)
+        Coordinator::new(mk_plan(Backend::Scalar))
+            .run_planned(&mut scalar, Some(&power))
+            .unwrap();
+        Coordinator::new(mk_plan(Backend::Vec { par_vec: 8 }))
+            .run_planned(&mut vector, Some(&power))
+            .unwrap();
+        FusedPipeline::with_workers(mk_plan(Backend::Vec { par_vec: 8 }), 3)
             .run_planned(&mut fused, Some(&power))
             .unwrap();
         assert!(scalar.max_abs_diff(&vector) == 0.0, "vec coordinator deviates");
@@ -599,58 +607,62 @@ mod tests {
 
     #[test]
     fn streaming_plan_is_bit_identical_across_paths() {
-        // The tentpole composition: the streaming backend as a plan
+        // The tentpole composition: the streaming backend as a typed plan
         // parameter, through the sequential coordinator, the fused
-        // pipeline's persistent worker pool, and the PE chain.
+        // pipeline's warm-session wrapper, and the PE chain.
         let kind = StencilKind::Hotspot2D;
         let dims = vec![72usize, 88];
-        let mk_plan = |stream: bool| {
+        let mk_plan = |backend: Backend| {
             PlanBuilder::new(kind)
                 .grid_dims(dims.clone())
                 .iterations(6)
                 .tile(vec![32, 32])
-                .par_vec(4)
-                .stream(stream)
+                .backend(backend)
                 .build()
                 .unwrap()
         };
+        let vec4 = Backend::Vec { par_vec: 4 };
+        let stream4 = Backend::Stream { par_vec: 4 };
         let power = mk_grid(kind, &dims, 99);
         let mut base = mk_grid(kind, &dims, 5);
         let mut seq = base.clone();
         let mut fused = base.clone();
         let mut chain_a = base.clone();
         let mut chain_b = base.clone();
-        Coordinator::new(mk_plan(false)).run_planned(&mut base, Some(&power)).unwrap();
-        let rep = Coordinator::new(mk_plan(true)).run_planned(&mut seq, Some(&power)).unwrap();
+        Coordinator::new(mk_plan(vec4)).run_planned(&mut base, Some(&power)).unwrap();
+        let rep = Coordinator::new(mk_plan(stream4)).run_planned(&mut seq, Some(&power)).unwrap();
         assert_eq!(rep.backend, "host-stream");
-        FusedPipeline::with_workers(mk_plan(true), 3)
+        let rep = FusedPipeline::with_workers(mk_plan(stream4), 3)
             .run_planned(&mut fused, Some(&power))
             .unwrap();
-        ChainPipeline::new(mk_plan(false)).run(&mut chain_a, Some(&power)).unwrap();
-        ChainPipeline::new(mk_plan(true)).run(&mut chain_b, Some(&power)).unwrap();
+        assert_eq!(rep.backend, "session-stream");
+        ChainPipeline::new(mk_plan(vec4)).run(&mut chain_a, Some(&power)).unwrap();
+        ChainPipeline::new(mk_plan(stream4)).run(&mut chain_b, Some(&power)).unwrap();
         assert!(base.max_abs_diff(&seq) == 0.0, "stream coordinator deviates");
         assert!(base.max_abs_diff(&fused) == 0.0, "stream fused pipeline deviates");
         assert!(chain_a.max_abs_diff(&chain_b) == 0.0, "stream PE chain deviates");
     }
 
     #[test]
-    fn chain_pipeline_honours_plan_par_vec() {
+    fn chain_pipeline_honours_plan_backend() {
         let kind = StencilKind::Diffusion2D;
         let dims = vec![64usize, 64];
-        let mk_plan = |pv: usize| {
+        let mk_plan = |backend: Backend| {
             PlanBuilder::new(kind)
                 .grid_dims(dims.clone())
                 .iterations(5)
                 .tile(vec![32, 32])
                 .step_sizes(vec![4, 2, 1])
-                .par_vec(pv)
+                .backend(backend)
                 .build()
                 .unwrap()
         };
         let mut scalar = mk_grid(kind, &dims, 11);
         let mut vector = scalar.clone();
-        ChainPipeline::new(mk_plan(1)).run(&mut scalar, None).unwrap();
-        ChainPipeline::new(mk_plan(8)).run(&mut vector, None).unwrap();
+        ChainPipeline::new(mk_plan(Backend::Scalar)).run(&mut scalar, None).unwrap();
+        ChainPipeline::new(mk_plan(Backend::Vec { par_vec: 8 }))
+            .run(&mut vector, None)
+            .unwrap();
         assert!(scalar.max_abs_diff(&vector) == 0.0, "vectorized PE chain deviates");
     }
 

@@ -7,12 +7,15 @@
 //! per-pass step counts summing exactly to `iterations`, greedily using
 //! the largest available tile program — the software analogue of the PE
 //! chain plus pass-through PEs.
+//!
+//! Which executor runs the tiles is the plan's [`Backend`] parameter —
+//! one typed field, set via [`PlanBuilder::backend`], consumed by
+//! [`Plan::executor`] and the engine's sessions.
 
 use anyhow::{bail, ensure, Result};
 
-use crate::runtime::{
-    vec::is_valid_par_vec, Executor, HostExecutor, StreamExecutor, TileSpec, VecExecutor,
-};
+use crate::engine::Backend;
+use crate::runtime::{Executor, TileSpec};
 use crate::stencil::StencilKind;
 
 /// A validated execution plan.
@@ -28,15 +31,15 @@ pub struct Plan {
     pub tile: Vec<usize>,
     /// Steps per pass; sums to `iterations`.
     pub chunks: Vec<usize>,
-    /// Host compute vector width (Table 1's `par_vec`): 1 selects the
-    /// scalar oracle, >1 the vectorized backend in [`Plan::executor`].
-    pub par_vec: usize,
-    /// Select the streaming shift-register backend
-    /// ([`StreamExecutor`]): each chunk's tile is swept once while all
-    /// its fused steps are applied in flight through cascaded
-    /// ring-buffer stages (the paper's §3.2 PE chain). Composes with
-    /// `par_vec` (stage row kernels use that lane count).
-    pub stream: bool,
+    /// The step granularity the schedule was built from (descending).
+    /// Kept on the plan so warm sessions can reschedule per-job
+    /// iteration overrides ([`Plan::schedule_for`]).
+    pub step_sizes: Vec<usize>,
+    /// Compute backend: the single, typed selection point for the scalar
+    /// oracle, the vectorized lane backend and the streaming
+    /// shift-register cascade. All three are bit-identical
+    /// (property-tested).
+    pub backend: Backend,
     /// Compute-worker cap for the threaded pipelines (`None` = one worker
     /// per available core). A plan parameter so the CLI can override it
     /// (`--workers`).
@@ -65,21 +68,54 @@ impl Plan {
         self.grid_dims.iter().product::<usize>() as u64 * self.iterations as u64
     }
 
-    /// The host executor this plan selects: the streaming backend when
-    /// `stream` is set (at `par_vec` lanes), else the scalar oracle at
-    /// `par_vec == 1` or the vectorized backend above it. This is how the
-    /// executor choice becomes a plan parameter — `Coordinator::run_planned`
-    /// and the pipelines' `run_planned` use it. All three produce
-    /// bit-identical grids (property-tested).
+    /// The executor the plan's [`Backend`] selects. `run_planned` on the
+    /// coordinator and pipelines, and the engine's sessions, all route
+    /// through this single point.
     pub fn executor(&self) -> Box<dyn Executor + Send + Sync> {
-        if self.stream {
-            Box::new(StreamExecutor::with_par_vec(self.par_vec))
-        } else if self.par_vec > 1 {
-            Box::new(VecExecutor::with_par_vec(self.par_vec))
-        } else {
-            Box::new(HostExecutor::new())
-        }
+        self.backend.executor()
     }
+
+    /// Chunk schedule for an arbitrary iteration count, using this plan's
+    /// tile and step granularity — what lets a warm session accept
+    /// per-job iteration overrides without rebuilding the plan.
+    pub fn schedule_for(&self, iterations: usize) -> Result<Vec<usize>> {
+        ensure!(iterations > 0, "iterations must be positive");
+        greedy_schedule(
+            &self.step_sizes,
+            iterations,
+            &self.tile,
+            self.stencil.def().radius,
+        )
+    }
+}
+
+/// Greedy chunking: largest step first, constrained so every chunk's halo
+/// leaves a non-empty compute block. `sizes` must be sorted descending.
+fn greedy_schedule(
+    sizes: &[usize],
+    iterations: usize,
+    tile: &[usize],
+    rad: usize,
+) -> Result<Vec<usize>> {
+    let min_tile = *tile.iter().min().unwrap();
+    let mut chunks = Vec::new();
+    let mut left = iterations;
+    while left > 0 {
+        let step = sizes
+            .iter()
+            .copied()
+            // the chunk's halo must leave a non-empty compute block
+            .find(|&s| s <= left && min_tile > 2 * s * rad);
+        let Some(step) = step else {
+            bail!(
+                "cannot schedule {left} remaining iterations with step sizes {sizes:?} \
+                 and tile {tile:?} (halo would swallow the tile)"
+            );
+        };
+        chunks.push(step);
+        left -= step;
+    }
+    Ok(chunks)
 }
 
 /// Builder with sensible defaults matching the shipped artifact set.
@@ -91,8 +127,7 @@ pub struct PlanBuilder {
     coeffs: Option<Vec<f32>>,
     tile: Option<Vec<usize>>,
     step_sizes: Vec<usize>,
-    par_vec: usize,
-    stream: bool,
+    backend: Backend,
     workers: Option<usize>,
 }
 
@@ -106,25 +141,17 @@ impl PlanBuilder {
             tile: None,
             // Default artifact step counts (see aot.py VARIANTS).
             step_sizes: vec![4, 2, 1],
-            // Scalar by default — existing call sites keep their behaviour.
-            par_vec: 1,
-            stream: false,
+            // Scalar oracle by default — existing call sites keep their
+            // behaviour.
+            backend: Backend::Scalar,
             workers: None,
         }
     }
 
-    /// Host compute vector width (`par_vec`, a power of two ≤ 64). Values
-    /// above 1 make [`Plan::executor`] select the vectorized backend
-    /// (or set the stage lane count under [`PlanBuilder::stream`]).
-    pub fn par_vec(mut self, par_vec: usize) -> Self {
-        self.par_vec = par_vec;
-        self
-    }
-
-    /// Select the streaming shift-register backend: one tile sweep per
-    /// chunk with all fused steps applied in flight (`--backend stream`).
-    pub fn stream(mut self, stream: bool) -> Self {
-        self.stream = stream;
+    /// Select the compute backend (see [`Backend`]); validated in
+    /// [`PlanBuilder::build`].
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -166,33 +193,36 @@ impl PlanBuilder {
     /// Derive tile shape + step sizes from an executor's advertised
     /// variants. Prefers the tile with the richest step granularity (it
     /// must be able to schedule *any* iteration count, so a step-1 variant
-    /// beats a bigger tile without one), then the largest tile.
+    /// beats a bigger tile without one), then the largest tile. A single
+    /// grouping pass over the variant list.
     pub fn for_executor<E: Executor + ?Sized>(mut self, exec: &E) -> Self {
         let variants = exec.variants(self.stencil);
         if variants.is_empty() {
-            return self; // host executor: keep defaults
+            return self; // host executors: keep defaults
         }
-        let best_tile = variants
-            .iter()
-            .max_by_key(|v| {
-                let steps: Vec<usize> = variants
-                    .iter()
-                    .filter(|w| w.tile == v.tile)
-                    .map(|w| w.steps)
-                    .collect();
-                (steps.contains(&1), steps.len(), v.cells())
+        // Group step counts by tile shape in one pass (the variant list
+        // is small, but the old per-candidate rescan was O(n²)).
+        let mut groups: Vec<(Vec<usize>, Vec<usize>)> = Vec::new();
+        for v in &variants {
+            match groups.iter_mut().find(|(tile, _)| *tile == v.tile) {
+                Some((_, steps)) => steps.push(v.steps),
+                None => groups.push((v.tile.clone(), vec![v.steps])),
+            }
+        }
+        let (tile, mut steps) = groups
+            .into_iter()
+            .max_by_key(|(tile, steps)| {
+                (
+                    steps.contains(&1),
+                    steps.len(),
+                    tile.iter().product::<usize>(),
+                )
             })
-            .map(|v| v.tile.clone())
             .unwrap();
-        let mut steps: Vec<usize> = variants
-            .iter()
-            .filter(|v| v.tile == best_tile)
-            .map(|v| v.steps)
-            .collect();
         steps.sort_unstable();
         steps.dedup();
         steps.reverse();
-        self.tile = Some(best_tile);
+        self.tile = Some(tile);
         self.step_sizes = steps;
         self
     }
@@ -214,9 +244,16 @@ impl PlanBuilder {
             def.coeff_len,
             coeffs.len()
         );
-        let tile = self.tile.unwrap_or_else(|| match ndim {
-            2 => vec![64, 64],
-            _ => vec![16, 16, 16],
+        // The *default* tile clamps to the grid shape (a 32² grid gets a
+        // 32² tile, not a rejected 64² one); explicit user tiles are
+        // still validated strictly below.
+        let tile = self.tile.unwrap_or_else(|| {
+            let default: &[usize] = if ndim == 2 { &[64, 64] } else { &[16, 16, 16] };
+            default
+                .iter()
+                .zip(&grid_dims)
+                .map(|(&t, &d)| t.min(d))
+                .collect()
         });
         ensure!(tile.len() == ndim, "tile must be {ndim}-D");
         for (t, d) in tile.iter().zip(&grid_dims) {
@@ -226,11 +263,7 @@ impl PlanBuilder {
                  grid border (see DimBlocking::tile_origin); use a smaller tile"
             );
         }
-        ensure!(
-            is_valid_par_vec(self.par_vec),
-            "par_vec must be a power of two in 1..=64, got {}",
-            self.par_vec
-        );
+        self.backend.validate()?;
         if let Some(w) = self.workers {
             ensure!(w > 0, "workers must be positive");
         }
@@ -238,26 +271,7 @@ impl PlanBuilder {
         let mut sizes = self.step_sizes.clone();
         sizes.sort_unstable();
         sizes.reverse();
-        // Greedy chunking; require granularity to land exactly.
-        let min_tile = *tile.iter().min().unwrap();
-        let rad = def.radius;
-        let mut chunks = Vec::new();
-        let mut left = self.iterations;
-        while left > 0 {
-            let step = sizes
-                .iter()
-                .copied()
-                // the chunk's halo must leave a non-empty compute block
-                .find(|&s| s <= left && min_tile > 2 * s * rad);
-            let Some(step) = step else {
-                bail!(
-                    "cannot schedule {left} remaining iterations with step sizes {sizes:?} \
-                     and tile {tile:?} (halo would swallow the tile)"
-                );
-            };
-            chunks.push(step);
-            left -= step;
-        }
+        let chunks = greedy_schedule(&sizes, self.iterations, &tile, def.radius)?;
         Ok(Plan {
             stencil,
             grid_dims,
@@ -265,8 +279,8 @@ impl PlanBuilder {
             coeffs,
             tile,
             chunks,
-            par_vec: self.par_vec,
-            stream: self.stream,
+            step_sizes: sizes,
+            backend: self.backend,
             workers: self.workers,
         })
     }
@@ -288,6 +302,35 @@ mod tests {
         assert_eq!(p.chunks.iter().sum::<usize>(), 11);
         assert_eq!(p.tile, vec![64, 64]);
         assert_eq!(p.max_halo(), 4);
+        assert_eq!(p.backend, Backend::Scalar);
+    }
+
+    #[test]
+    fn default_tile_clamps_to_small_grids() {
+        // A grid smaller than the default tile must build (the default
+        // tile clamps), not error out with "tile dim exceeds grid dim".
+        let p = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![32, 48])
+            .iterations(4)
+            .build()
+            .unwrap();
+        assert_eq!(p.tile, vec![32, 48]);
+        let p3 = PlanBuilder::new(StencilKind::Diffusion3D)
+            .grid_dims(vec![8, 16, 12])
+            .iterations(2)
+            .build()
+            .unwrap();
+        assert_eq!(p3.tile, vec![8, 16, 12]);
+    }
+
+    #[test]
+    fn explicit_oversized_tile_still_rejected() {
+        let err = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![32, 32])
+            .tile(vec![64, 64])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("exceeds grid dim"), "{err}");
     }
 
     #[test]
@@ -301,6 +344,21 @@ mod tests {
                 .unwrap();
             assert_eq!(p.chunks.iter().sum::<usize>(), iters, "iters={iters}");
         }
+    }
+
+    #[test]
+    fn schedule_for_reschedules_other_iteration_counts() {
+        let p = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![128, 128])
+            .iterations(8)
+            .build()
+            .unwrap();
+        assert_eq!(p.chunks, vec![4, 4]);
+        for iters in 1..30 {
+            let chunks = p.schedule_for(iters).unwrap();
+            assert_eq!(chunks.iter().sum::<usize>(), iters, "iters={iters}");
+        }
+        assert!(p.schedule_for(0).is_err());
     }
 
     #[test]
@@ -338,39 +396,26 @@ mod tests {
     }
 
     #[test]
-    fn par_vec_selects_executor() {
+    fn backend_selects_executor() {
         let scalar = PlanBuilder::new(StencilKind::Diffusion2D)
             .grid_dims(vec![64, 64])
             .build()
             .unwrap();
-        assert_eq!(scalar.par_vec, 1);
+        assert_eq!(scalar.backend, Backend::Scalar);
         assert_eq!(scalar.executor().backend_name(), "host-scalar");
         let vector = PlanBuilder::new(StencilKind::Diffusion2D)
             .grid_dims(vec![64, 64])
-            .par_vec(8)
+            .backend(Backend::Vec { par_vec: 8 })
             .build()
             .unwrap();
-        assert_eq!(vector.par_vec, 8);
+        assert_eq!(vector.backend.par_vec(), 8);
         assert_eq!(vector.executor().backend_name(), "host-vec");
-    }
-
-    #[test]
-    fn stream_selects_executor() {
-        let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+        let stream = PlanBuilder::new(StencilKind::Diffusion2D)
             .grid_dims(vec![64, 64])
-            .stream(true)
-            .par_vec(8)
+            .backend(Backend::Stream { par_vec: 1 })
             .build()
             .unwrap();
-        assert!(plan.stream);
-        assert_eq!(plan.executor().backend_name(), "host-stream");
-        // stream at par_vec 1 is still the streaming backend (scalar rows)
-        let scalar_stream = PlanBuilder::new(StencilKind::Diffusion2D)
-            .grid_dims(vec![64, 64])
-            .stream(true)
-            .build()
-            .unwrap();
-        assert_eq!(scalar_stream.executor().backend_name(), "host-stream");
+        assert_eq!(stream.executor().backend_name(), "host-stream");
     }
 
     #[test]
@@ -394,7 +439,7 @@ mod tests {
         for bad in [0usize, 3, 6, 128] {
             let err = PlanBuilder::new(StencilKind::Diffusion2D)
                 .grid_dims(vec![64, 64])
-                .par_vec(bad)
+                .backend(Backend::Vec { par_vec: bad })
                 .build()
                 .unwrap_err();
             assert!(err.to_string().contains("par_vec"), "{bad}: {err}");

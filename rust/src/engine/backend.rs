@@ -1,0 +1,216 @@
+//! First-class compute-backend selection.
+//!
+//! The paper programs the FPGA once with a fixed (`par_vec`, `par_time`)
+//! configuration and then feeds it kernel invocations; which bitstream is
+//! loaded is an explicit, typed choice. [`Backend`] is the host analogue:
+//! one enum is the single selection point for the scalar oracle, the
+//! vectorized lane backend and the streaming shift-register cascade,
+//! replacing the old implicit `stream: bool` + `par_vec > 1` convention
+//! that was smeared across `Plan`.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::runtime::{
+    vec::{is_valid_par_vec, DEFAULT_PAR_VEC},
+    Executor, HostExecutor, StreamExecutor, VecExecutor,
+};
+
+use super::EngineError;
+
+/// Which in-process executor a [`crate::coordinator::Plan`] runs on.
+///
+/// All three produce bit-identical grids (property-tested); they differ
+/// only in how the same f32 operations are scheduled. `parse`/`Display`
+/// round-trip (`scalar`, `vec:8`, `stream:4`), and the parser also accepts
+/// the bare CLI spellings `vec` / `stream` at the default lane count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Backend {
+    /// The scalar reference oracle ([`HostExecutor`]). The default.
+    #[default]
+    Scalar,
+    /// The vectorized lane backend ([`VecExecutor`]) — Table 1's
+    /// `par_vec` compute lanes, one tile sweep per fused step.
+    Vec { par_vec: usize },
+    /// The streaming shift-register cascade ([`StreamExecutor`]) — the
+    /// paper's §3.2 PE chain: one tile sweep per chunk with all fused
+    /// steps in flight, rows kernels at `par_vec` lanes.
+    Stream { par_vec: usize },
+}
+
+impl Backend {
+    /// Every selectable backend at its default lane count, in
+    /// oracle-first order — handy for verify sweeps and tests.
+    pub const ALL: [Backend; 3] = [
+        Backend::Scalar,
+        Backend::Vec { par_vec: DEFAULT_PAR_VEC },
+        Backend::Stream { par_vec: DEFAULT_PAR_VEC },
+    ];
+
+    /// Effective lane count (1 for the scalar oracle).
+    pub fn par_vec(&self) -> usize {
+        match self {
+            Backend::Scalar => 1,
+            Backend::Vec { par_vec } | Backend::Stream { par_vec } => *par_vec,
+        }
+    }
+
+    /// Replace the lane count on the lane backends; the scalar oracle is
+    /// unaffected (an explicit `--backend scalar` stays scalar even when
+    /// `--par-vec` is also given).
+    pub fn with_par_vec(self, par_vec: usize) -> Backend {
+        match self {
+            Backend::Scalar => Backend::Scalar,
+            Backend::Vec { .. } => Backend::Vec { par_vec },
+            Backend::Stream { .. } => Backend::Stream { par_vec },
+        }
+    }
+
+    /// Short family name (`scalar`/`vec`/`stream`), without the lane count.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Vec { .. } => "vec",
+            Backend::Stream { .. } => "stream",
+        }
+    }
+
+    /// Static label used by [`crate::coordinator::ExecReport::backend`]
+    /// when a warm [`super::Session`] produced the report.
+    pub fn session_label(&self) -> &'static str {
+        match self {
+            Backend::Scalar => "session-scalar",
+            Backend::Vec { .. } => "session-vec",
+            Backend::Stream { .. } => "session-stream",
+        }
+    }
+
+    /// Validate the lane count (a power of two in
+    /// `1..=`[`MAX_PAR_VEC`](crate::runtime::vec::MAX_PAR_VEC)).
+    pub fn validate(&self) -> Result<(), EngineError> {
+        if is_valid_par_vec(self.par_vec()) {
+            Ok(())
+        } else {
+            Err(EngineError::InvalidParVec(self.par_vec()))
+        }
+    }
+
+    /// Build the executor this backend names — the single point where the
+    /// selection becomes a concrete [`Executor`] (the old triple-branch
+    /// `Plan::executor` logic lived here and nowhere else).
+    pub fn executor(&self) -> Box<dyn Executor + Send + Sync> {
+        match self {
+            Backend::Scalar => Box::new(HostExecutor::new()),
+            Backend::Vec { par_vec } => Box::new(VecExecutor::with_par_vec(*par_vec)),
+            Backend::Stream { par_vec } => Box::new(StreamExecutor::with_par_vec(*par_vec)),
+        }
+    }
+
+    /// Parse a backend spec: `scalar` (alias `host`), `vec`/`stream` at
+    /// the default lane count, or `vec:N`/`stream:N` with an explicit
+    /// one. Inverse of `Display` for every valid value.
+    pub fn parse(s: &str) -> Result<Backend, EngineError> {
+        let (family, lanes) = match s.split_once(':') {
+            Some((f, l)) => (f, Some(l)),
+            None => (s, None),
+        };
+        let par_vec = match lanes {
+            Some(l) => l
+                .parse::<usize>()
+                .map_err(|_| EngineError::UnknownBackend(s.to_string()))?,
+            None => DEFAULT_PAR_VEC,
+        };
+        let backend = match family {
+            "scalar" | "host" => {
+                if lanes.is_some() {
+                    return Err(EngineError::UnknownBackend(s.to_string()));
+                }
+                Backend::Scalar
+            }
+            "vec" => Backend::Vec { par_vec },
+            "stream" => Backend::Stream { par_vec },
+            _ => return Err(EngineError::UnknownBackend(s.to_string())),
+        };
+        backend.validate()?;
+        Ok(backend)
+    }
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Backend::Scalar => f.write_str("scalar"),
+            Backend::Vec { par_vec } => write!(f, "vec:{par_vec}"),
+            Backend::Stream { par_vec } => write!(f, "stream:{par_vec}"),
+        }
+    }
+}
+
+impl FromStr for Backend {
+    type Err = EngineError;
+
+    fn from_str(s: &str) -> Result<Backend, EngineError> {
+        Backend::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_cli_spellings() {
+        assert_eq!(Backend::parse("scalar").unwrap(), Backend::Scalar);
+        assert_eq!(Backend::parse("host").unwrap(), Backend::Scalar);
+        assert_eq!(
+            Backend::parse("vec").unwrap(),
+            Backend::Vec { par_vec: DEFAULT_PAR_VEC }
+        );
+        assert_eq!(
+            Backend::parse("stream:4").unwrap(),
+            Backend::Stream { par_vec: 4 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        for bad in ["", "pjrt", "vec:3", "vec:0", "vec:128", "scalar:2", "vec:x"] {
+            assert!(Backend::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn display_parse_round_trip() {
+        for pv in [1usize, 2, 4, 8, 16, 32, 64] {
+            for b in [
+                Backend::Scalar,
+                Backend::Vec { par_vec: pv },
+                Backend::Stream { par_vec: pv },
+            ] {
+                assert_eq!(Backend::parse(&b.to_string()).unwrap(), b, "{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn executor_selection() {
+        assert_eq!(Backend::Scalar.executor().backend_name(), "host-scalar");
+        assert_eq!(
+            Backend::Vec { par_vec: 8 }.executor().backend_name(),
+            "host-vec"
+        );
+        assert_eq!(
+            Backend::Stream { par_vec: 1 }.executor().backend_name(),
+            "host-stream"
+        );
+    }
+
+    #[test]
+    fn with_par_vec_keeps_scalar_scalar() {
+        assert_eq!(Backend::Scalar.with_par_vec(8), Backend::Scalar);
+        assert_eq!(
+            Backend::Vec { par_vec: 2 }.with_par_vec(16),
+            Backend::Vec { par_vec: 16 }
+        );
+    }
+}

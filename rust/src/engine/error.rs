@@ -1,0 +1,95 @@
+//! Typed errors for the engine's public boundary.
+//!
+//! Inside the crate the coordinator/runtime layers use `anyhow`-style
+//! context-chained strings; at the [`super::StencilEngine`] boundary every
+//! failure is one of these variants so callers can match on *what* went
+//! wrong instead of grepping messages. `EngineError` implements
+//! `std::error::Error`, so `?` still lifts it into `anyhow::Result`
+//! contexts (the CLI does exactly that).
+
+use std::fmt;
+
+use crate::runtime::vec::MAX_PAR_VEC;
+
+/// Everything the engine API can fail with.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// A backend spec string did not name a backend.
+    UnknownBackend(String),
+    /// A lane count was not a power of two in `1..=`[`MAX_PAR_VEC`].
+    InvalidParVec(usize),
+    /// The plan is internally inconsistent (bad tile, unschedulable
+    /// iteration count, missing tile program, ...). Carries the
+    /// planner's message.
+    InvalidPlan(String),
+    /// A submitted grid's shape does not match the session's plan.
+    GridShape { expected: Vec<usize>, got: Vec<usize> },
+    /// A power grid was required but missing, supplied but unexpected,
+    /// or mis-shaped for the session's plan.
+    PowerMismatch { expected: bool, got: bool },
+    /// A tile program failed while executing (executor-reported).
+    Execution(String),
+    /// The session's worker pool disappeared mid-submission (a worker
+    /// thread exited or a channel closed unexpectedly).
+    WorkerLost,
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::UnknownBackend(s) => write!(
+                f,
+                "unknown backend {s:?} (expected scalar, vec[:N] or stream[:N])"
+            ),
+            EngineError::InvalidParVec(pv) => write!(
+                f,
+                "par_vec must be a power of two in 1..={MAX_PAR_VEC}, got {pv}"
+            ),
+            EngineError::InvalidPlan(msg) => write!(f, "invalid plan: {msg}"),
+            EngineError::GridShape { expected, got } => {
+                write!(f, "grid dims {got:?} do not match the plan's {expected:?}")
+            }
+            EngineError::PowerMismatch { expected, got } => match (expected, got) {
+                (true, false) => f.write_str("stencil requires a power grid, none supplied"),
+                (false, true) => f.write_str("stencil takes no power grid, one supplied"),
+                _ => f.write_str("power grid dims do not match the plan"),
+            },
+            EngineError::Execution(msg) => write!(f, "tile execution failed: {msg}"),
+            EngineError::WorkerLost => f.write_str("session worker pool exited early"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<anyhow::Error> for EngineError {
+    fn from(e: anyhow::Error) -> EngineError {
+        EngineError::Execution(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_problem() {
+        assert!(EngineError::UnknownBackend("foo".into())
+            .to_string()
+            .contains("foo"));
+        assert!(EngineError::InvalidParVec(3).to_string().contains("3"));
+        assert!(EngineError::GridShape { expected: vec![64, 64], got: vec![32, 32] }
+            .to_string()
+            .contains("[32, 32]"));
+    }
+
+    #[test]
+    fn lifts_into_anyhow() {
+        fn boundary() -> anyhow::Result<()> {
+            Err(EngineError::WorkerLost)?;
+            Ok(())
+        }
+        let e = boundary().unwrap_err();
+        assert!(e.to_string().contains("worker pool"));
+    }
+}

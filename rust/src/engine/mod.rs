@@ -1,0 +1,138 @@
+//! The engine layer: the crate's front door for executing plans.
+//!
+//! The paper's runtime model is *program once, invoke many times*: the
+//! FPGA is configured with a (`par_vec`, `par_time`) design and then fed
+//! a stream of kernel invocations whose coefficients and grids are
+//! runtime arguments (§3.2). This module is the host-side reproduction
+//! of that contract:
+//!
+//! * [`Backend`] — the typed, single point of executor selection
+//!   (scalar oracle / vectorized lanes / streaming shift-register),
+//!   replacing the old implicit `stream: bool` + `par_vec > 1` pair.
+//! * [`StencilEngine`] — the facade. [`StencilEngine::session`] turns a
+//!   [`Plan`] into a warm [`Session`]; [`StencilEngine::run`] is the
+//!   one-shot convenience.
+//! * [`Session`] — persistent worker threads, recirculating tile-buffer
+//!   pools and a role-alternating grid pair, reused by every
+//!   [`Session::submit`] so batched workloads amortize setup.
+//! * [`EngineError`] — typed errors at the public boundary.
+//!
+//! ```no_run
+//! use fstencil::prelude::*;
+//!
+//! let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+//!     .grid_dims(vec![256, 256])
+//!     .iterations(8)
+//!     .backend(Backend::Vec { par_vec: 8 })
+//!     .build()?;
+//! let mut session = StencilEngine::new().session(plan)?;
+//! for seed in 0..4u64 {
+//!     let mut grid = Grid::new2d(256, 256);
+//!     grid.fill_random(seed, 0.0, 1.0);
+//!     let out = session.submit(grid).wait()?;
+//!     println!("job: {:.1} Mcell/s", out.report.mcells_per_sec());
+//! }
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+mod backend;
+mod error;
+mod session;
+
+pub use backend::Backend;
+pub use error::EngineError;
+pub use session::{JobHandle, JobOutput, Session, Workload};
+
+use crate::coordinator::{ExecReport, Plan};
+use crate::stencil::Grid;
+
+/// The engine facade. Stateless today (sessions own all warm state);
+/// exists so serving-layer concerns — session routing, admission
+/// control, sharding — have one place to land.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StencilEngine;
+
+impl StencilEngine {
+    pub fn new() -> StencilEngine {
+        StencilEngine
+    }
+
+    /// Open a warm [`Session`] for `plan`: spawns the worker pool once;
+    /// every subsequent [`Session::submit`] reuses it.
+    pub fn session(&self, plan: Plan) -> Result<Session, EngineError> {
+        Session::spawn(plan, None)
+    }
+
+    /// [`StencilEngine::session`] with an explicit worker-pool size,
+    /// overriding the plan's cap.
+    pub fn session_with_workers(
+        &self,
+        plan: Plan,
+        workers: usize,
+    ) -> Result<Session, EngineError> {
+        Session::spawn(plan, Some(workers.max(1)))
+    }
+
+    /// One-shot convenience: open a session, run `grid` through it
+    /// in-place, tear it down. Batched callers should hold a [`Session`]
+    /// instead and amortize the setup.
+    pub fn run(
+        &self,
+        plan: Plan,
+        grid: &mut Grid,
+        power: Option<&Grid>,
+    ) -> Result<ExecReport, EngineError> {
+        self.session(plan)?.run(grid, power)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PlanBuilder;
+    use crate::stencil::StencilKind;
+
+    #[test]
+    fn one_shot_run_matches_plan() {
+        let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .iterations(3)
+            .build()
+            .unwrap();
+        let mut grid = Grid::new2d(64, 64);
+        grid.fill_random(5, 0.0, 1.0);
+        let rep = StencilEngine::new().run(plan, &mut grid, None).unwrap();
+        assert_eq!(rep.iterations, 3);
+        assert_eq!(rep.backend, "session-scalar");
+        assert!(rep.tiles_executed > 0);
+    }
+
+    #[test]
+    fn session_rejects_wrong_grid_shape() {
+        let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .build()
+            .unwrap();
+        let mut session = StencilEngine::new().session(plan).unwrap();
+        let err = session.submit(Grid::new2d(32, 32)).wait().unwrap_err();
+        assert_eq!(
+            err,
+            EngineError::GridShape { expected: vec![64, 64], got: vec![32, 32] }
+        );
+        // the session survives a rejected job
+        let mut ok = Grid::new2d(64, 64);
+        ok.fill_random(1, 0.0, 1.0);
+        assert!(session.submit(ok).is_ok());
+    }
+
+    #[test]
+    fn session_rejects_power_mismatch() {
+        let plan = PlanBuilder::new(StencilKind::Hotspot2D)
+            .grid_dims(vec![64, 64])
+            .build()
+            .unwrap();
+        let mut session = StencilEngine::new().session(plan).unwrap();
+        let err = session.submit(Grid::new2d(64, 64)).wait().unwrap_err();
+        assert_eq!(err, EngineError::PowerMismatch { expected: true, got: false });
+    }
+}

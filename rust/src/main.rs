@@ -1,7 +1,8 @@
 //! `fstencil` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   run       execute a stencil workload through the three-layer stack
+//!   run       execute a stencil workload through the engine
+//!   batch     submit N workloads through one warm engine session
 //!   verify    run every execution path against the scalar oracle
 //!   dse       §5.3 design-space exploration on the board simulator
 //!   simulate  one configuration on the board simulator (a Table 4 cell)
@@ -11,15 +12,15 @@
 
 use std::path::Path;
 use std::process::ExitCode;
+use std::time::Instant;
 
 use fstencil::baseline::{max_supported_width, temporal_only_estimate};
-use fstencil::coordinator::{Coordinator, FusedPipeline, PlanBuilder};
+use fstencil::coordinator::{Coordinator, Plan, PlanBuilder};
 use fstencil::dse::Tuner;
+use fstencil::engine::{Backend, StencilEngine, Workload};
 use fstencil::model::Params;
 use fstencil::report;
-use fstencil::runtime::{
-    vec as vec_backend, Executor, HostExecutor, PjrtExecutor, StreamExecutor, VecExecutor,
-};
+use fstencil::runtime::{vec as vec_backend, Executor, PjrtExecutor};
 use fstencil::simulator::{BoardSim, Device, DeviceKind};
 use fstencil::stencil::{reference, Grid, StencilKind};
 use fstencil::util::cli::Args;
@@ -28,6 +29,7 @@ fn main() -> ExitCode {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("batch") => cmd_batch(&args),
         Some("verify") => cmd_verify(&args),
         Some("dse") => cmd_dse(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -79,9 +81,12 @@ fn usage() {
 USAGE: fstencil <subcommand> [options]
 
   run       --stencil <name> --dims H,W[,D] --iters N [--tile a,b]
-            [--backend pjrt|host|vec|stream|auto] [--par-vec V] [--pipeline]
+            [--backend scalar|vec|stream|pjrt|auto] [--par-vec V]
             [--workers W] [--check]
-  verify    [--backend pjrt|host|vec|stream|auto] [--par-vec V]
+  batch     --stencil <name> --dims H,W[,D] --iters N --jobs J
+            [--backend scalar|vec|stream] [--par-vec V] [--tile a,b]
+            [--workers W] [--check]   N workloads through one warm session
+  verify    [--backend scalar|vec|stream|pjrt|auto] [--par-vec V]
   dse       --stencil <name> --device <sv|arria10> [--iters N]
   simulate  --stencil <name> --device <dev> --bsize B --par-vec V --par-time T
             [--dim D] [--iters N] [--no-padding]
@@ -92,7 +97,9 @@ USAGE: fstencil <subcommand> [options]
             DDR bank-state analysis of the blocked access pattern
 
 stencils: diffusion2d diffusion3d hotspot2d hotspot3d
-devices:  sv arria10 gx2800 mx2100 (simulator), k40c 980ti p100 v100 (GPU model)"
+devices:  sv arria10 gx2800 mx2100 (simulator), k40c 980ti p100 v100 (GPU model)
+backends: scalar (alias: host), vec[:N], stream[:N] — host engine backends
+          (lane count from :N or --par-vec); pjrt (AOT artifacts), auto"
     );
 }
 
@@ -116,85 +123,82 @@ fn parse_par_vec(args: &Args) -> anyhow::Result<usize> {
     Ok(pv)
 }
 
-/// Resolved backend choice: the executor plus the plan parameters that
-/// reproduce it through `Plan::executor`, so the plan and the explicit
-/// executor cannot diverge.
-struct BackendChoice {
-    exec: Box<dyn Executor>,
-    /// `par_vec` the plan should record (1 unless a vector-lane backend
-    /// was chosen).
-    par_vec: usize,
-    /// Whether the plan should select the streaming backend.
-    stream: bool,
+/// Resolved `--backend` choice: a typed host [`Backend`] (routed through
+/// the engine) or the PJRT artifact executor (sequential coordinator —
+/// the XLA client is not `Sync`).
+enum ExecChoice {
+    Host(Backend),
+    Pjrt(Box<PjrtExecutor>),
 }
 
-/// Resolve the backend choice once.
-fn make_executor(args: &Args) -> anyhow::Result<BackendChoice> {
-    let mk_vec = |args: &Args| -> anyhow::Result<BackendChoice> {
-        let pv = parse_par_vec(args)?;
-        Ok(BackendChoice { exec: Box::new(VecExecutor::with_par_vec(pv)), par_vec: pv, stream: false })
-    };
+/// Resolve the backend choice once. Host specs go through
+/// [`Backend::parse`] (`scalar`/`host`, `vec[:N]`, `stream[:N]`), with
+/// `--par-vec` overriding the lane count on the lane backends.
+fn resolve_backend(args: &Args) -> anyhow::Result<ExecChoice> {
     match args.opt_or("backend", "auto") {
-        "host" => Ok(BackendChoice { exec: Box::new(HostExecutor::new()), par_vec: 1, stream: false }),
-        "vec" => mk_vec(args),
-        "stream" => {
-            let pv = parse_par_vec(args)?;
-            Ok(BackendChoice {
-                exec: Box::new(StreamExecutor::with_par_vec(pv)),
-                par_vec: pv,
-                stream: true,
-            })
-        }
-        "pjrt" => Ok(BackendChoice {
-            exec: Box::new(PjrtExecutor::load_default()?),
-            par_vec: 1,
-            stream: false,
-        }),
+        "pjrt" => Ok(ExecChoice::Pjrt(Box::new(PjrtExecutor::load_default()?))),
         "auto" => {
             if Path::new("artifacts/manifest.json").exists() {
                 match PjrtExecutor::load_default() {
-                    Ok(p) => Ok(BackendChoice { exec: Box::new(p), par_vec: 1, stream: false }),
+                    Ok(p) => return Ok(ExecChoice::Pjrt(Box::new(p))),
                     Err(e) => {
-                        eprintln!(
-                            "note: pjrt unavailable ({e:#}); using vectorized host backend"
-                        );
-                        mk_vec(args)
+                        eprintln!("note: pjrt unavailable ({e:#}); using vectorized host backend")
                     }
                 }
             } else {
                 eprintln!("note: artifacts/ missing, using vectorized host backend");
-                mk_vec(args)
             }
+            Ok(ExecChoice::Host(Backend::Vec { par_vec: parse_par_vec(args)? }))
         }
-        other => anyhow::bail!("unknown backend {other}"),
+        spec => {
+            // An explicit `--backend scalar` stays scalar even when
+            // --par-vec is also given (Backend::with_par_vec is a no-op
+            // on Scalar).
+            let mut backend = Backend::parse(spec)?;
+            if let Some(pv) = args.opt_usize("par-vec") {
+                backend = backend.with_par_vec(pv);
+                backend.validate()?;
+            }
+            Ok(ExecChoice::Host(backend))
+        }
     }
 }
 
-fn cmd_run(args: &Args) -> anyhow::Result<()> {
-    let kind = parse_stencil(args)?;
-    let dims = args
-        .opt_usize_list("dims")
-        .unwrap_or_else(|| if kind.ndim() == 2 { vec![512, 512] } else { vec![64, 64, 64] });
-    let iters = args.opt_usize("iters").unwrap_or(16);
-    let choice = make_executor(args)?;
-    let exec = choice.exec;
-    let mut builder = PlanBuilder::new(kind)
-        .grid_dims(dims.clone())
-        .iterations(iters)
-        .for_executor(exec.as_ref())
-        // Record the backend choice in the plan so the pipeline path
-        // picks the same one (the executor choice is a plan parameter).
-        // An explicit `--backend host` stays scalar (pv = 1) even when
-        // --par-vec is given.
-        .par_vec(choice.par_vec)
-        .stream(choice.stream);
+/// Build the plan a subcommand's arguments describe, recording the typed
+/// backend choice (host) or deriving tile/step granularity from the
+/// artifact set (pjrt).
+fn build_plan(
+    args: &Args,
+    kind: StencilKind,
+    dims: &[usize],
+    iters: usize,
+    choice: &ExecChoice,
+) -> anyhow::Result<Plan> {
+    let mut builder = PlanBuilder::new(kind).grid_dims(dims.to_vec()).iterations(iters);
+    builder = match choice {
+        ExecChoice::Host(b) => builder.backend(*b),
+        ExecChoice::Pjrt(p) => builder.for_executor(p.as_ref()),
+    };
     if let Some(tile) = args.opt_usize_list("tile") {
         builder = builder.tile(tile);
     }
     if let Some(w) = args.opt_usize("workers") {
         builder = builder.workers(w);
     }
-    let plan = builder.build()?;
+    builder.build()
+}
+
+fn default_dims(args: &Args, kind: StencilKind) -> Vec<usize> {
+    args.opt_usize_list("dims")
+        .unwrap_or_else(|| if kind.ndim() == 2 { vec![512, 512] } else { vec![64, 64, 64] })
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let kind = parse_stencil(args)?;
+    let dims = default_dims(args, kind);
+    let iters = args.opt_usize("iters").unwrap_or(16);
+    let choice = resolve_backend(args)?;
+    let plan = build_plan(args, kind, &dims, iters, &choice)?;
 
     let mut grid = if let Some(path) = args.opt("input") {
         let g = fstencil::stencil::io::load(Path::new(path))?;
@@ -215,14 +219,23 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         p
     });
 
+    if args.flag("pipeline") {
+        eprintln!(
+            "note: --pipeline is obsolete; host backends always run through the \
+             engine's warm pipeline session now"
+        );
+    }
     let check = args.flag("check");
     let before = grid.clone();
-    let report = if args.flag("pipeline") {
-        // pipeline requires a Sync executor — run_planned picks the host
-        // scalar/vector/stream backend from the plan parameters
-        FusedPipeline::new(plan.clone()).run_planned(&mut grid, power.as_ref())?
-    } else {
-        Coordinator::new(plan.clone()).run(exec.as_ref(), &mut grid, power.as_ref())?
+    let report = match &choice {
+        // Host backends route through the engine: a session (one-shot
+        // here; `batch` amortizes it) owns the warm pipeline state.
+        ExecChoice::Host(_) => {
+            StencilEngine::new().session(plan.clone())?.run(&mut grid, power.as_ref())?
+        }
+        ExecChoice::Pjrt(p) => {
+            Coordinator::new(plan.clone()).run(p.as_ref(), &mut grid, power.as_ref())?
+        }
     };
     println!(
         "ran {} {:?} x{} iters on {}: {} tiles, {} passes, {:.1} Mcell/s, redundancy {:.3}, {:.3}s",
@@ -274,8 +287,12 @@ fn cmd_hlostats(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_verify(args: &Args) -> anyhow::Result<()> {
-    let exec = make_executor(args)?.exec;
-    println!("verifying backend '{}' against the scalar oracle", exec.backend_name());
+    let choice = resolve_backend(args)?;
+    let label = match &choice {
+        ExecChoice::Host(b) => b.to_string(),
+        ExecChoice::Pjrt(p) => p.backend_name().to_string(),
+    };
+    println!("verifying backend '{label}' against the scalar oracle");
     let mut failures = 0;
     for kind in StencilKind::ALL {
         let dims = if kind.ndim() == 2 { vec![96, 96] } else { vec![24, 24, 24] };
@@ -288,13 +305,21 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
             p.fill_random(23, 0.0, 0.25);
             p
         });
-        let plan = PlanBuilder::new(kind)
-            .grid_dims(dims)
-            .iterations(iters)
-            .for_executor(exec.as_ref())
-            .build()?;
+        let mut builder = PlanBuilder::new(kind).grid_dims(dims).iterations(iters);
+        builder = match &choice {
+            ExecChoice::Host(b) => builder.backend(*b),
+            ExecChoice::Pjrt(p) => builder.for_executor(p.as_ref()),
+        };
+        let plan = builder.build()?;
         let want = reference::run(kind, &grid, power.as_ref(), &plan.coeffs, iters);
-        Coordinator::new(plan).run(exec.as_ref(), &mut grid, power.as_ref())?;
+        match &choice {
+            ExecChoice::Host(_) => {
+                StencilEngine::new().session(plan)?.run(&mut grid, power.as_ref())?;
+            }
+            ExecChoice::Pjrt(p) => {
+                Coordinator::new(plan).run(p.as_ref(), &mut grid, power.as_ref())?;
+            }
+        }
         let err = grid.max_abs_diff(&want);
         let ok = err < 1e-3;
         println!("  {kind:<12} max|err| = {err:.3e}  {}", if ok { "OK" } else { "FAIL" });
@@ -303,6 +328,101 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
         }
     }
     anyhow::ensure!(failures == 0, "{failures} stencil(s) failed verification");
+    Ok(())
+}
+
+/// `batch`: N workloads through ONE warm engine session — the paper's
+/// program-once / invoke-many contract at the CLI. Reports per-job and
+/// amortized throughput plus the session's reuse counters, and compares
+/// against paying session setup on every job.
+fn cmd_batch(args: &Args) -> anyhow::Result<()> {
+    let kind = parse_stencil(args)?;
+    let dims = default_dims(args, kind);
+    let iters = args.opt_usize("iters").unwrap_or(16);
+    let jobs = args.opt_usize("jobs").unwrap_or(8).max(1);
+    let choice = resolve_backend(args)?;
+    let ExecChoice::Host(backend) = &choice else {
+        anyhow::bail!("batch mode runs on the host backends (scalar, vec, stream)");
+    };
+    let backend = *backend;
+    let plan = build_plan(args, kind, &dims, iters, &choice)?;
+    let check = args.flag("check");
+
+    let mk_job = |seed: u64| -> (Grid, Option<Grid>) {
+        let mut g = match dims.as_slice() {
+            [h, w] => Grid::new2d(*h, *w),
+            [d, h, w] => Grid::new3d(*d, *h, *w),
+            _ => unreachable!("plan validated dims"),
+        };
+        g.fill_random(seed, 0.0, 1.0);
+        let power = kind.def().has_power.then(|| {
+            let mut p = g.clone();
+            p.fill_random(seed + 1000, 0.0, 0.25);
+            p
+        });
+        (g, power)
+    };
+
+    let engine = StencilEngine::new();
+    // Warm: one session, N submissions. Verification happens AFTER the
+    // timed region (the oracle is O(cells x iters) per job and would
+    // swamp the warm-vs-cold comparison).
+    let mut outputs: Vec<(u64, Grid)> = Vec::new();
+    let warm_t0 = Instant::now();
+    let mut session = engine.session(plan.clone())?;
+    let mut cells = 0u64;
+    for j in 0..jobs as u64 {
+        let (grid, power) = mk_job(j);
+        let mut workload = Workload::new(grid);
+        if let Some(p) = power {
+            workload = workload.power(p);
+        }
+        let out = session.submit(workload).wait()?;
+        cells += out.report.cell_updates;
+        if check {
+            outputs.push((j, out.grid));
+        }
+    }
+    let warm = warm_t0.elapsed();
+    for (j, got) in &outputs {
+        let (before, power) = mk_job(*j);
+        let want = reference::run(kind, &before, power.as_ref(), &plan.coeffs, iters);
+        let err = got.max_abs_diff(&want);
+        anyhow::ensure!(err < 1e-3, "job {j} deviates from oracle: max |err| {err:.3e}");
+    }
+    drop(outputs);
+    // Cold: a fresh session (threads + pools + grid pair) per job.
+    let cold_t0 = Instant::now();
+    for j in 0..jobs as u64 {
+        let (mut grid, power) = mk_job(j);
+        engine.run(plan.clone(), &mut grid, power.as_ref())?;
+    }
+    let cold = cold_t0.elapsed();
+
+    println!(
+        "batch: {jobs} x {kind} {dims:?} x{iters} iters on backend {backend} \
+         ({} workers)",
+        session.worker_threads()
+    );
+    println!(
+        "  warm session: {:.3}s total, {:.3}s/job, {:.1} Mcell/s \
+         ({} threads spawned, {} fresh tile buffers, {} submissions)",
+        warm.as_secs_f64(),
+        warm.as_secs_f64() / jobs as f64,
+        cells as f64 / warm.as_secs_f64() / 1e6,
+        session.threads_spawned(),
+        session.fresh_tile_allocs(),
+        session.submissions(),
+    );
+    println!(
+        "  cold (session per job): {:.3}s total, {:.3}s/job -> warm is {:.2}x",
+        cold.as_secs_f64(),
+        cold.as_secs_f64() / jobs as f64,
+        cold.as_secs_f64() / warm.as_secs_f64().max(1e-12),
+    );
+    if check {
+        println!("  verification vs scalar oracle: all {jobs} jobs OK");
+    }
     Ok(())
 }
 

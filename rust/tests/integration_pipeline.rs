@@ -3,6 +3,7 @@
 //! across stencils, grid shapes, iteration counts and pipeline flavours.
 
 use fstencil::coordinator::{ChainPipeline, Coordinator, FusedPipeline, PlanBuilder};
+use fstencil::engine::Backend;
 use fstencil::runtime::{HostExecutor, StreamExecutor, VecExecutor};
 use fstencil::stencil::{reference, Grid, StencilKind};
 use fstencil::util::prop::{forall, Rng};
@@ -274,29 +275,30 @@ fn stream_plan_through_pipelines_bit_identical() {
     for kind in [StencilKind::Hotspot2D, StencilKind::Diffusion3D] {
         let dims = if kind.ndim() == 2 { vec![80, 72] } else { vec![24, 24, 24] };
         let tile = if kind.ndim() == 2 { vec![32, 32] } else { vec![16, 16, 16] };
-        let mk_plan = |stream: bool| {
+        let mk_plan = |backend: Backend| {
             PlanBuilder::new(kind)
                 .grid_dims(dims.clone())
                 .iterations(7)
                 .tile(tile.clone())
                 .step_sizes(if kind.ndim() == 2 { vec![4, 2, 1] } else { vec![2, 1] })
-                .par_vec(4)
-                .stream(stream)
+                .backend(backend)
                 .build()
                 .unwrap()
         };
+        let vec4 = Backend::Vec { par_vec: 4 };
+        let stream4 = Backend::Stream { par_vec: 4 };
         let power = kind.def().has_power.then(|| mk_grid(kind.ndim(), &dims, 777));
         let mut scalar = mk_grid(kind.ndim(), &dims, 42);
         let mut fused = scalar.clone();
         let mut chain_scalar = scalar.clone();
         let mut chain_stream = scalar.clone();
-        Coordinator::new(mk_plan(false))
+        Coordinator::new(mk_plan(vec4))
             .run(&HostExecutor::new(), &mut scalar, power.as_ref())
             .unwrap();
-        let rep = FusedPipeline::with_workers(mk_plan(true), 4)
+        let rep = FusedPipeline::with_workers(mk_plan(stream4), 4)
             .run_planned(&mut fused, power.as_ref())
             .unwrap();
-        assert_eq!(rep.backend, "fused-pipeline");
+        assert_eq!(rep.backend, "session-stream");
         assert_eq!(
             scalar.max_abs_diff(&fused),
             0.0,
@@ -304,8 +306,8 @@ fn stream_plan_through_pipelines_bit_identical() {
         );
         // The chain recomputes with chain-length halos, so it is compared
         // stream-vs-scalar (both chains), which must match bitwise.
-        ChainPipeline::new(mk_plan(false)).run(&mut chain_scalar, power.as_ref()).unwrap();
-        ChainPipeline::new(mk_plan(true)).run(&mut chain_stream, power.as_ref()).unwrap();
+        ChainPipeline::new(mk_plan(vec4)).run(&mut chain_scalar, power.as_ref()).unwrap();
+        ChainPipeline::new(mk_plan(stream4)).run(&mut chain_stream, power.as_ref()).unwrap();
         assert_eq!(
             chain_scalar.max_abs_diff(&chain_stream),
             0.0,
@@ -316,23 +318,27 @@ fn stream_plan_through_pipelines_bit_identical() {
 
 #[test]
 fn planned_executor_selection_is_transparent() {
-    // A par_vec > 1 plan run through run_planned must equal the same plan
-    // run explicitly on the scalar executor, bit for bit.
+    // A vector-backend plan run through run_planned must equal the same
+    // plan run explicitly on the scalar executor, bit for bit.
     let kind = StencilKind::Diffusion3D;
     let dims = vec![24usize, 20, 28];
-    let mk_plan = |pv: usize| {
+    let mk_plan = |backend: Backend| {
         PlanBuilder::new(kind)
             .grid_dims(dims.clone())
             .iterations(5)
             .tile(vec![16, 16, 16])
-            .par_vec(pv)
+            .backend(backend)
             .build()
             .unwrap()
     };
     let mut explicit = mk_grid(3, &dims, 63);
     let mut planned = explicit.clone();
-    Coordinator::new(mk_plan(1)).run(&HostExecutor::new(), &mut explicit, None).unwrap();
-    let report = Coordinator::new(mk_plan(16)).run_planned(&mut planned, None).unwrap();
+    Coordinator::new(mk_plan(Backend::Scalar))
+        .run(&HostExecutor::new(), &mut explicit, None)
+        .unwrap();
+    let report = Coordinator::new(mk_plan(Backend::Vec { par_vec: 16 }))
+        .run_planned(&mut planned, None)
+        .unwrap();
     assert_eq!(report.backend, "host-vec");
     assert_eq!(explicit.max_abs_diff(&planned), 0.0);
 }
