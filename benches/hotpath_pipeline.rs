@@ -78,6 +78,7 @@ fn main() {
         });
     let scalar_mean = scalar_tile.summary.mean;
     rep.push(scalar_tile);
+    let mut vec_pv8_mean = scalar_mean;
     for pv in [4usize, 8, 16] {
         let vexec = VecExecutor::with_par_vec(pv);
         let r = b.bench_with_metric(
@@ -93,8 +94,42 @@ fn main() {
              (acceptance: >= 1.5x at par_vec >= 4)",
             scalar_mean / r.summary.mean
         ));
+        if pv == 8 {
+            vec_pv8_mean = r.summary.mean;
+        }
         rep.push(r);
     }
+
+    // --- interpreter-vs-specialized ablation: the generic tap
+    //     interpreter (what runtime-defined programs run) against the
+    //     registry-selected specialized kernel, same program, same lanes --
+    let interp_id = fstencil::stencil::StencilRegistry::register(
+        kind.def().as_interpreted("diffusion2d-interp-bench"),
+    )
+    .expect("twin registration");
+    let ispec = TileSpec::new(interp_id, &[64, 64], 4);
+    let vexec8 = VecExecutor::with_par_vec(8);
+    let ir = b.bench_with_metric(
+        "interp_tile_64sq_s4_pv8",
+        "Mcell-updates/s",
+        updates / 1e6,
+        || {
+            std::hint::black_box(vexec8.run_tile(&ispec, &tdata, None, coeffs).unwrap());
+        },
+    );
+    let overhead = rep.ablation(
+        "interp_vs_specialized",
+        ir.summary.mean,
+        vec_pv8_mean,
+        "specialized speedup over generic interpreter; acceptance: interpreter \
+         overhead <= 1.3x on built-ins",
+    );
+    rep.payload(format!(
+        "interp_vs_specialized overhead {:.2}x ({})",
+        overhead,
+        if overhead <= 1.3 { "PASS" } else { "FAIL: interpreter too slow" }
+    ));
+    rep.push(ir);
 
     // --- step-fusion ablation: per-step vec sweep vs streaming executor
     //     on a host-scale tile (the §3.2 T-fold intensity mechanism) -----

@@ -12,7 +12,7 @@
 use crate::model::{Params, PerfModel};
 use crate::simulator::bram::{bram_usage, BramUsage};
 use crate::simulator::device::Device;
-use crate::stencil::StencilKind;
+use crate::stencil::StencilId;
 use crate::util::bytes::{CELL_BYTES, GB};
 
 /// Outcome of evaluating a temporal-only design point.
@@ -30,7 +30,7 @@ pub struct TemporalOnlyResult {
 /// The shift register per PE covers the full width/plane, there are no
 /// halos, no redundancy, and writes equal the input size.
 pub fn temporal_only_estimate(
-    stencil: StencilKind,
+    stencil: impl Into<StencilId>,
     dev: &Device,
     dims: &[usize],
     par_vec: usize,
@@ -38,6 +38,7 @@ pub fn temporal_only_estimate(
     iters: usize,
     fmax_mhz: f64,
 ) -> TemporalOnlyResult {
+    let stencil = stencil.into();
     let def = stencil.def();
     let ndim = stencil.ndim();
     // "Block" = the whole grid row/plane.
@@ -81,11 +82,12 @@ pub fn temporal_only_estimate(
 /// temporal-only design supports on `dev` with `par_time` PEs — the input
 /// restriction the paper's combined scheme removes.
 pub fn max_supported_width(
-    stencil: StencilKind,
+    stencil: impl Into<StencilId>,
     dev: &Device,
     par_vec: usize,
     par_time: usize,
 ) -> usize {
+    let stencil = stencil.into();
     let def = stencil.def();
     let ndim = stencil.ndim();
     let mut best = 0;
@@ -107,6 +109,7 @@ pub fn max_supported_width(
 mod tests {
     use super::*;
     use crate::simulator::device::DeviceKind;
+    use crate::stencil::StencilKind;
 
     #[test]
     fn input_width_capped_2d() {

@@ -179,6 +179,10 @@ impl BenchReport {
         Json::obj(vec![
             ("title", Json::from(self.title.clone())),
             (
+                "payload",
+                Json::Arr(self.payload.iter().map(|p| Json::from(p.clone())).collect()),
+            ),
+            (
                 "results",
                 Json::Arr(
                     self.results

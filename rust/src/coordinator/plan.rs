@@ -16,12 +16,15 @@ use anyhow::{bail, ensure, Result};
 
 use crate::engine::Backend;
 use crate::runtime::{Executor, TileSpec};
-use crate::stencil::StencilKind;
+use crate::stencil::StencilId;
 
 /// A validated execution plan.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Plan {
-    pub stencil: StencilKind,
+    /// The stencil program the plan runs — any registered
+    /// [`crate::stencil::StencilProgram`], not just a built-in
+    /// [`crate::stencil::StencilKind`] (which converts via `Into`).
+    pub stencil: StencilId,
     pub grid_dims: Vec<usize>,
     pub iterations: usize,
     /// Stencil coefficients (runtime arguments, like the paper's kernel
@@ -121,7 +124,7 @@ fn greedy_schedule(
 /// Builder with sensible defaults matching the shipped artifact set.
 #[derive(Debug, Clone)]
 pub struct PlanBuilder {
-    stencil: StencilKind,
+    stencil: StencilId,
     grid_dims: Option<Vec<usize>>,
     iterations: usize,
     coeffs: Option<Vec<f32>>,
@@ -132,9 +135,9 @@ pub struct PlanBuilder {
 }
 
 impl PlanBuilder {
-    pub fn new(stencil: StencilKind) -> PlanBuilder {
+    pub fn new(stencil: impl Into<StencilId>) -> PlanBuilder {
         PlanBuilder {
-            stencil,
+            stencil: stencil.into(),
             grid_dims: None,
             iterations: 1,
             coeffs: None,
@@ -290,6 +293,7 @@ impl PlanBuilder {
 mod tests {
     use super::*;
     use crate::runtime::HostExecutor;
+    use crate::stencil::StencilKind;
 
     #[test]
     fn default_plan_diffusion2d() {

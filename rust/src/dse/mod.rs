@@ -17,7 +17,7 @@ pub mod space;
 
 use crate::model::{Params, PerfModel};
 use crate::simulator::{BoardSim, DeviceKind, SimResult};
-use crate::stencil::StencilKind;
+use crate::stencil::StencilId;
 
 pub use space::{enumerate_configs, SearchLimits};
 
@@ -65,7 +65,13 @@ impl Tuner {
     }
 
     /// Run the full tuning flow for one stencil.
-    pub fn tune(&self, stencil: StencilKind, dims: &[usize], iters: usize) -> Option<TunerOutcome> {
+    pub fn tune(
+        &self,
+        stencil: impl Into<StencilId>,
+        dims: &[usize],
+        iters: usize,
+    ) -> Option<TunerOutcome> {
+        let stencil = stencil.into();
         let sim = BoardSim::new(self.device);
         let dev = sim.device();
         let model = PerfModel::new(dev.peak_bw_gbps);
@@ -129,6 +135,7 @@ impl Tuner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stencil::StencilKind;
 
     #[test]
     fn tunes_diffusion2d_on_arria10() {

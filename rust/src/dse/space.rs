@@ -3,7 +3,7 @@
 use crate::model::Params;
 use crate::simulator::area::area_report;
 use crate::simulator::device::Device;
-use crate::stencil::StencilKind;
+use crate::stencil::StencilId;
 
 /// Bounds of the enumeration (defaults cover the paper's Table 4 space).
 #[derive(Debug, Clone)]
@@ -37,12 +37,13 @@ impl Default for SearchLimits {
 /// Enumerate all §5.3-legal configurations that pass the quick feasibility
 /// screens (geometry, DSP/BRAM/logic fit per the area model).
 pub fn enumerate_configs(
-    stencil: StencilKind,
+    stencil: impl Into<StencilId>,
     dev: &Device,
     dims: &[usize],
     iters: usize,
     limits: &SearchLimits,
 ) -> Vec<Params> {
+    let stencil = stencil.into();
     let def = stencil.def();
     let ndim = stencil.ndim();
     let bsizes = if ndim == 2 { &limits.bsizes_2d } else { &limits.bsizes_3d };
@@ -94,6 +95,7 @@ pub fn enumerate_configs(
 mod tests {
     use super::*;
     use crate::simulator::device::DeviceKind;
+    use crate::stencil::StencilKind;
     use crate::util::prop::{forall, Rng};
 
     #[test]

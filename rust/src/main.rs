@@ -4,11 +4,16 @@
 //!   run       execute a stencil workload through the engine
 //!   batch     submit N workloads through one warm engine session
 //!   verify    run every execution path against the scalar oracle
+//!   stencil   list / show the registered stencil programs
 //!   dse       §5.3 design-space exploration on the board simulator
 //!   simulate  one configuration on the board simulator (a Table 4 cell)
 //!   table2..table6, fig6
 //!             regenerate the paper's tables/figure
 //!   baseline  temporal-only prior-work comparison (input-size caps)
+//!
+//! `--stencil-file <path.json>` (accepted by every subcommand) registers
+//! runtime-defined stencil programs before anything else runs, so
+//! `--stencil <name>` resolves user programs exactly like built-ins.
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -22,56 +27,75 @@ use fstencil::model::Params;
 use fstencil::report;
 use fstencil::runtime::{vec as vec_backend, Executor, PjrtExecutor};
 use fstencil::simulator::{BoardSim, Device, DeviceKind};
-use fstencil::stencil::{reference, Grid, StencilKind};
+use fstencil::stencil::{reference, Grid, StencilId, StencilKind, StencilRegistry};
 use fstencil::util::cli::Args;
+use fstencil::util::table::{f as fnum, Table};
 
 fn main() -> ExitCode {
     let args = Args::from_env();
-    let result = match args.subcommand.as_deref() {
-        Some("run") => cmd_run(&args),
-        Some("batch") => cmd_batch(&args),
-        Some("verify") => cmd_verify(&args),
-        Some("dse") => cmd_dse(&args),
-        Some("simulate") => cmd_simulate(&args),
-        Some("table2") => {
-            println!("{}", report::table2());
-            Ok(())
-        }
-        Some("table3") => {
-            println!("{}", report::table3());
-            Ok(())
-        }
-        Some("table4") => {
-            println!("{}", report::table4());
-            Ok(())
-        }
-        Some("table5") => {
-            println!("{}", report::table5());
-            Ok(())
-        }
-        Some("table6") => {
-            println!("{}", report::table6());
-            Ok(())
-        }
-        Some("fig6") => {
-            println!("{}", report::fig6());
-            Ok(())
-        }
-        Some("baseline") => cmd_baseline(&args),
-        Some("hlostats") => cmd_hlostats(&args),
-        Some("dram") => cmd_dram(&args),
-        _ => {
-            usage();
-            return ExitCode::from(2);
-        }
+    let Some(sub) = args.subcommand.clone() else {
+        usage();
+        return ExitCode::from(2);
     };
-    match result {
-        Ok(()) => ExitCode::SUCCESS,
+    match dispatch(&sub, &args) {
+        Ok(code) => code,
         Err(e) => {
             eprintln!("error: {e:#}");
             ExitCode::FAILURE
         }
     }
+}
+
+fn dispatch(sub: &str, args: &Args) -> anyhow::Result<ExitCode> {
+    // Register user stencil programs first, so --stencil resolves them
+    // in every subcommand.
+    if let Some(path) = args.opt("stencil-file") {
+        let ids = StencilRegistry::load_file(Path::new(path))?;
+        let names: Vec<&str> = ids.iter().map(|id| id.name()).collect();
+        eprintln!("registered {} stencil program(s) from {path}: {}", ids.len(), names.join(", "));
+    }
+    let result = match sub {
+        "run" => cmd_run(args),
+        "batch" => cmd_batch(args),
+        "verify" => cmd_verify(args),
+        "stencil" => cmd_stencil(args),
+        "dse" => cmd_dse(args),
+        "simulate" => cmd_simulate(args),
+        "table2" => {
+            println!("{}", report::table2());
+            Ok(())
+        }
+        "table3" => {
+            println!("{}", report::table3());
+            Ok(())
+        }
+        "table4" => {
+            println!("{}", report::table4());
+            Ok(())
+        }
+        "table5" => {
+            println!("{}", report::table5());
+            Ok(())
+        }
+        "table6" => {
+            println!("{}", report::table6());
+            Ok(())
+        }
+        "fig6" => {
+            println!("{}", report::fig6());
+            Ok(())
+        }
+        "baseline" => cmd_baseline(args),
+        "hlostats" => cmd_hlostats(args),
+        "dram" => cmd_dram(args),
+        _ => {
+            // Same usage-error exit code (2) as the missing-subcommand
+            // path, distinct from runtime failures (1).
+            usage();
+            return Ok(ExitCode::from(2));
+        }
+    };
+    result.map(|()| ExitCode::SUCCESS)
 }
 
 fn usage() {
@@ -87,6 +111,8 @@ USAGE: fstencil <subcommand> [options]
             [--backend scalar|vec|stream] [--par-vec V] [--tile a,b]
             [--workers W] [--check]   N workloads through one warm session
   verify    [--backend scalar|vec|stream|pjrt|auto] [--par-vec V]
+  stencil   list                      registered programs + characteristics
+            show <name>               one program's tap table
   dse       --stencil <name> --device <sv|arria10> [--iters N]
   simulate  --stencil <name> --device <dev> --bsize B --par-vec V --par-time T
             [--dim D] [--iters N] [--no-padding]
@@ -96,16 +122,117 @@ USAGE: fstencil <subcommand> [options]
   dram      --stencil <name> [--bsize B] [--par-vec V] [--par-time T]
             DDR bank-state analysis of the blocked access pattern
 
-stencils: diffusion2d diffusion3d hotspot2d hotspot3d
+every subcommand also accepts --stencil-file <path.json>, which registers
+runtime-defined stencil programs (see stencils/vonneumann_r3.json); they
+then work everywhere a built-in name does.
+
+stencils: diffusion2d diffusion3d hotspot2d hotspot3d diffusion2dr2,
+          plus anything registered via --stencil-file (fstencil stencil list)
 devices:  sv arria10 gx2800 mx2100 (simulator), k40c 980ti p100 v100 (GPU model)
 backends: scalar (alias: host), vec[:N], stream[:N] — host engine backends
           (lane count from :N or --par-vec); pjrt (AOT artifacts), auto"
     );
 }
 
-fn parse_stencil(args: &Args) -> anyhow::Result<StencilKind> {
+fn parse_stencil(args: &Args) -> anyhow::Result<StencilId> {
     let name = args.opt("stencil").unwrap_or("diffusion2d");
-    StencilKind::parse(name).ok_or_else(|| anyhow::anyhow!("unknown stencil {name}"))
+    StencilRegistry::lookup(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown stencil {name} (try `fstencil stencil list`, or register it \
+             with --stencil-file)"
+        )
+    })
+}
+
+/// `stencil list` / `stencil show <name>`: the registry as a CLI surface.
+fn cmd_stencil(args: &Args) -> anyhow::Result<()> {
+    match args.positional.first().map(String::as_str) {
+        None | Some("list") => {
+            let mut t = Table::new(&[
+                "name", "ndim", "radius", "FLOP/cell", "bytes/cell", "coeffs", "power", "source",
+            ])
+            .title("Registered stencil programs")
+            .left_first_col();
+            for id in StencilRegistry::all() {
+                let p = id.program();
+                t.row(vec![
+                    p.name().to_string(),
+                    p.ndim().to_string(),
+                    p.radius.to_string(),
+                    p.flop_pcu.to_string(),
+                    p.bytes_pcu.to_string(),
+                    p.coeff_len.to_string(),
+                    if p.has_power { "yes" } else { "no" }.to_string(),
+                    if id.is_builtin() { "builtin" } else { "file" }.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+        Some("show") => {
+            let name = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("usage: fstencil stencil show <name>"))?;
+            let id = StencilRegistry::lookup(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown stencil {name}"))?;
+            let p = id.program();
+            println!(
+                "{}: {}D, radius {}, {} FLOP/cell, {} B/cell ({:.3} B/FLOP), \
+                 {} coeffs, power input: {}",
+                p.name(),
+                p.ndim(),
+                p.radius,
+                p.flop_pcu,
+                p.bytes_pcu,
+                p.bytes_per_flop(),
+                p.coeff_len,
+                if p.has_power { "yes" } else { "no" },
+            );
+            println!(
+                "op mix: {} mult, {} add ({} MAC-fusable) -> DSP demand/cell {} (hard-FP)",
+                p.ops.mults,
+                p.ops.adds,
+                p.ops.fusable,
+                fstencil::simulator::dsp::dsp_per_cell(p, fstencil::simulator::Family::Arria10),
+            );
+            let mut t = Table::new(&["#", "term", "offset [z,y,x]", "coeff"]).left_first_col();
+            use fstencil::stencil::Term;
+            for (i, term) in p.terms().iter().enumerate() {
+                let (kind, off, coeff) = match term {
+                    Term::Tap(tap) => {
+                        ("tap", format!("{:?}", tap.offset), tap.coeff_idx.to_string())
+                    }
+                    Term::AxisPair { a, b, coeff_idx } => {
+                        ("axis_pair", format!("{a:?}+{b:?}"), coeff_idx.to_string())
+                    }
+                    Term::Power => ("power", "-".to_string(), "-".to_string()),
+                    Term::PowerScaled { coeff_idx } => {
+                        ("power_scaled", "-".to_string(), coeff_idx.to_string())
+                    }
+                    Term::AmbientDrift { amb_idx, coeff_idx } => {
+                        ("ambient_drift", format!("amb=k[{amb_idx}]"), coeff_idx.to_string())
+                    }
+                    Term::CoeffProduct { a_idx, b_idx } => {
+                        ("coeff_product", format!("k[{a_idx}]*k[{b_idx}]"), "-".to_string())
+                    }
+                };
+                t.row(vec![i.to_string(), kind.to_string(), off, coeff]);
+            }
+            println!("{}", t.render());
+            match p.post() {
+                fstencil::stencil::PostOp::Identity => println!("post: identity"),
+                fstencil::stencil::PostOp::ScaledResidual { scale_idx } => {
+                    println!("post: out = c + k[{scale_idx}] * acc")
+                }
+            }
+            let coeffs: Vec<String> =
+                p.default_coeffs.iter().map(|c| fnum(*c as f64, 4)).collect();
+            println!("default coeffs: [{}]", coeffs.join(", "));
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown stencil subcommand {other:?} (list | show <name>)"),
+    }
 }
 
 fn parse_device(args: &Args) -> anyhow::Result<DeviceKind> {
@@ -169,7 +296,7 @@ fn resolve_backend(args: &Args) -> anyhow::Result<ExecChoice> {
 /// artifact set (pjrt).
 fn build_plan(
     args: &Args,
-    kind: StencilKind,
+    kind: StencilId,
     dims: &[usize],
     iters: usize,
     choice: &ExecChoice,
@@ -188,7 +315,7 @@ fn build_plan(
     builder.build()
 }
 
-fn default_dims(args: &Args, kind: StencilKind) -> Vec<usize> {
+fn default_dims(args: &Args, kind: StencilId) -> Vec<usize> {
     args.opt_usize_list("dims")
         .unwrap_or_else(|| if kind.ndim() == 2 { vec![512, 512] } else { vec![64, 64, 64] })
 }

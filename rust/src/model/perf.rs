@@ -1,14 +1,17 @@
 //! Eqs 3–9: run-time and throughput prediction.
 
 use crate::blocking::geometry::{halo_width, BlockGeometry};
-use crate::stencil::{StencilDef, StencilKind};
+use crate::stencil::{StencilId, StencilProgram};
 use crate::util::bytes::{CELL_BYTES, GB};
 
 /// Accelerator configuration parameters (Table 1). One `Params` describes
 /// one candidate design point for one stencil on one input.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Params {
-    pub stencil: StencilKind,
+    /// The stencil program this design point accelerates — any registered
+    /// [`StencilProgram`] (built-ins convert from
+    /// [`crate::stencil::StencilKind`] via `Into`).
+    pub stencil: StencilId,
     /// Compute vector width (`par_vec`): cells updated per clock per PE.
     pub par_vec: usize,
     /// Parallel time-steps (`par_time`): number of chained PEs.
@@ -29,7 +32,7 @@ pub struct Params {
 impl Params {
     /// Convenience constructor with square 3D blocks.
     pub fn new(
-        stencil: StencilKind,
+        stencil: impl Into<StencilId>,
         par_vec: usize,
         par_time: usize,
         bsize: usize,
@@ -38,7 +41,7 @@ impl Params {
         fmax_mhz: f64,
     ) -> Params {
         Params {
-            stencil,
+            stencil: stencil.into(),
             par_vec,
             par_time,
             bsize_x: bsize,
@@ -49,7 +52,7 @@ impl Params {
         }
     }
 
-    pub fn def(&self) -> &'static StencilDef {
+    pub fn def(&self) -> &'static StencilProgram {
         self.stencil.def()
     }
 
@@ -163,8 +166,8 @@ impl PerfModel {
     /// Roofline throughput without temporal blocking (par_time = 1, no
     /// redundancy): peak memory bandwidth × useful-bytes ratio. Used for
     /// the Fig 6 roofline series.
-    pub fn roofline_gflops(&self, kind: StencilKind) -> f64 {
-        let def = kind.def();
+    pub fn roofline_gflops(&self, stencil: impl Into<StencilId>) -> f64 {
+        let def = stencil.into().def();
         // one pass per iteration; all traffic useful
         let gbps = self.th_max_gbps * def.bytes_pcu as f64
             / (def.num_acc() as f64 * CELL_BYTES as f64);
@@ -184,7 +187,7 @@ impl PerfModel {
     /// `VecExecutor` throughput; EXPERIMENTS.md records the comparison.
     pub fn host_par_vec_mcells(
         &self,
-        def: &StencilDef,
+        def: &StencilProgram,
         scalar_mcells: f64,
         par_vec: usize,
     ) -> f64 {
@@ -210,7 +213,7 @@ impl PerfModel {
     /// EXPERIMENTS.md records the comparison.
     pub fn host_stream_mcells(
         &self,
-        def: &StencilDef,
+        def: &StencilProgram,
         scalar_mcells: f64,
         par_vec: usize,
         par_time: usize,
@@ -224,6 +227,7 @@ impl PerfModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stencil::StencilKind;
 
     /// Table 4's Diffusion 2D / Arria 10 best row: bsize 4096, par_vec 8,
     /// par_time 36, dim 16096, f_max 343.76 MHz -> estimated 780.5 GB/s.

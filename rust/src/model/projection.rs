@@ -112,7 +112,7 @@ pub fn project_best(
                 };
                 let dims = vec![csize * reps; ndim];
                 let p = Params {
-                    stencil,
+                    stencil: stencil.into(),
                     par_vec,
                     par_time,
                     bsize_x: bsize,

@@ -51,7 +51,7 @@ pub fn table4_params(
 ) -> Params {
     let dims = if kind.ndim() == 2 { vec![dim, dim] } else { vec![dim, dim, dim] };
     Params {
-        stencil: kind,
+        stencil: kind.into(),
         par_vec,
         par_time,
         bsize_x: bsize,

@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use crate::stencil::{reference, StencilKind};
+use crate::stencil::{reference, StencilId};
 
 use super::{run_tile_with_into, Executor, TileSpec};
 
@@ -46,12 +46,12 @@ impl Executor for HostExecutor {
             tile,
             power,
             coeffs,
-            |cur, pw, c, next| reference::step_into(spec.kind, cur, pw, c, next),
+            |cur, pw, c, next| reference::step_into(spec.stencil, cur, pw, c, next),
             out,
         )
     }
 
-    fn variants(&self, _kind: StencilKind) -> Vec<TileSpec> {
+    fn variants(&self, _stencil: StencilId) -> Vec<TileSpec> {
         Vec::new() // anything goes
     }
 
@@ -63,7 +63,7 @@ impl Executor for HostExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::stencil::{Grid, StencilDef};
+    use crate::stencil::{Grid, StencilDef, StencilKind};
 
     #[test]
     fn matches_whole_grid_reference_when_tile_is_grid() {

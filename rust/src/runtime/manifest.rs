@@ -4,7 +4,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::stencil::StencilKind;
+use crate::stencil::{StencilId, StencilRegistry};
 use crate::util::json::Json;
 
 use super::TileSpec;
@@ -51,8 +51,8 @@ impl Manifest {
                 .get("kind")
                 .and_then(Json::as_str)
                 .ok_or_else(|| anyhow!("variant missing kind"))?;
-            let kind = StencilKind::parse(kind_s)
-                .ok_or_else(|| anyhow!("unknown stencil kind {kind_s}"))?;
+            let stencil = StencilRegistry::lookup(kind_s)
+                .ok_or_else(|| anyhow!("unknown stencil {kind_s} (not registered)"))?;
             let tile: Vec<usize> = v
                 .get("tile")
                 .and_then(Json::as_arr)
@@ -64,7 +64,7 @@ impl Manifest {
                 .get("steps")
                 .and_then(Json::as_usize)
                 .ok_or_else(|| anyhow!("variant missing steps"))?;
-            let spec = TileSpec::new(kind, &tile, steps);
+            let spec = TileSpec::new(stencil, &tile, steps);
             let name = v.get("name").and_then(Json::as_str).unwrap_or_default();
             if name != spec.artifact_name() {
                 bail!("variant name {name} != derived {}", spec.artifact_name());
@@ -95,8 +95,9 @@ impl Manifest {
     }
 
     /// Variants for one stencil.
-    pub fn for_kind(&self, kind: StencilKind) -> Vec<&Variant> {
-        self.variants.iter().filter(|v| v.spec.kind == kind).collect()
+    pub fn for_kind(&self, stencil: impl Into<StencilId>) -> Vec<&Variant> {
+        let stencil = stencil.into();
+        self.variants.iter().filter(|v| v.spec.stencil == stencil).collect()
     }
 
     /// Exact-match lookup.
@@ -113,6 +114,7 @@ impl Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stencil::StencilKind;
 
     fn write_manifest(dir: &Path, body: &str) {
         std::fs::create_dir_all(dir).unwrap();

@@ -28,12 +28,15 @@ pub use stream::StreamExecutor;
 pub use tile::{extract_tile, writeback_tile};
 pub use vec::VecExecutor;
 
-use crate::stencil::{Grid, StencilKind};
+use crate::stencil::{Grid, StencilId, StencilProgram};
 
-/// Identifies a tile program: stencil kind, tile shape, fused steps.
+/// Identifies a tile program: stencil program, tile shape, fused steps.
+/// Carries an open [`StencilId`] — any registered [`StencilProgram`] runs
+/// through every executor; `TileSpec::new` still accepts a plain
+/// [`crate::stencil::StencilKind`] via `Into`.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct TileSpec {
-    pub kind: StencilKind,
+    pub stencil: StencilId,
     /// Tile dims, `[h, w]` or `[d, h, w]`.
     pub tile: Vec<usize>,
     /// Fused time-steps (the artifact's `s<N>` suffix; = chunk of
@@ -42,9 +45,15 @@ pub struct TileSpec {
 }
 
 impl TileSpec {
-    pub fn new(kind: StencilKind, tile: &[usize], steps: usize) -> TileSpec {
-        assert_eq!(tile.len(), kind.ndim());
-        TileSpec { kind, tile: tile.to_vec(), steps }
+    pub fn new(stencil: impl Into<StencilId>, tile: &[usize], steps: usize) -> TileSpec {
+        let stencil = stencil.into();
+        assert_eq!(tile.len(), stencil.ndim());
+        TileSpec { stencil, tile: tile.to_vec(), steps }
+    }
+
+    /// The stencil program this spec runs.
+    pub fn program(&self) -> &'static StencilProgram {
+        self.stencil.program()
     }
 
     /// Cells in the tile.
@@ -55,7 +64,7 @@ impl TileSpec {
     /// Canonical artifact name (must match `aot.py::variant_name`).
     pub fn artifact_name(&self) -> String {
         let dims: Vec<String> = self.tile.iter().map(|d| d.to_string()).collect();
-        format!("{}_t{}_s{}", self.kind.name(), dims.join("x"), self.steps)
+        format!("{}_t{}_s{}", self.stencil.name(), dims.join("x"), self.steps)
     }
 }
 
@@ -68,7 +77,7 @@ pub(crate) fn validate_tile_args(
     power: Option<&[f32]>,
     coeffs: &[f32],
 ) -> anyhow::Result<()> {
-    let def = spec.kind.def();
+    let def = spec.program();
     anyhow::ensure!(
         tile.len() == spec.cells(),
         "tile data {} != spec cells {}",
@@ -84,7 +93,7 @@ pub(crate) fn validate_tile_args(
     anyhow::ensure!(
         power.is_some() == def.has_power,
         "power grid presence mismatch for {}",
-        spec.kind
+        spec.stencil
     );
     if let Some(p) = power {
         anyhow::ensure!(p.len() == spec.cells(), "power tile size mismatch");
@@ -187,13 +196,14 @@ pub trait Executor {
         Ok(())
     }
 
-    /// Tile programs this executor can run for `kind`. An empty vec means
-    /// "anything" (the host executor).
-    fn variants(&self, kind: StencilKind) -> Vec<TileSpec>;
+    /// Tile programs this executor can run for `stencil`. An empty vec
+    /// means "anything" (the host executors, which run any registered
+    /// program).
+    fn variants(&self, stencil: StencilId) -> Vec<TileSpec>;
 
     /// Whether a specific spec is runnable.
     fn supports(&self, spec: &TileSpec) -> bool {
-        let v = self.variants(spec.kind);
+        let v = self.variants(spec.stencil);
         v.is_empty() || v.contains(spec)
     }
 
@@ -204,6 +214,7 @@ pub trait Executor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stencil::StencilKind;
 
     #[test]
     fn artifact_names_match_python_convention() {

@@ -21,7 +21,7 @@ mod imp {
 
     use anyhow::{anyhow, ensure, Context, Result};
 
-    use crate::stencil::StencilKind;
+    use crate::stencil::{StencilId, StencilKind};
 
     use super::super::manifest::Manifest;
     use super::super::{Executor, TileSpec};
@@ -108,7 +108,7 @@ mod imp {
             power: Option<&[f32]>,
             coeffs: &[f32],
         ) -> Result<Vec<f32>> {
-            let def = spec.kind.def();
+            let def = spec.program();
             ensure!(tile.len() == spec.cells(), "tile size mismatch");
             ensure!(coeffs.len() == def.coeff_len, "coeff length mismatch");
             ensure!(power.is_some() == def.has_power, "power presence mismatch");
@@ -134,8 +134,8 @@ mod imp {
             Ok(v)
         }
 
-        fn variants(&self, kind: StencilKind) -> Vec<TileSpec> {
-            self.manifest.for_kind(kind).iter().map(|v| v.spec.clone()).collect()
+        fn variants(&self, stencil: StencilId) -> Vec<TileSpec> {
+            self.manifest.for_kind(stencil).iter().map(|v| v.spec.clone()).collect()
         }
 
         fn backend_name(&self) -> &'static str {
@@ -154,7 +154,7 @@ mod imp {
 
     use anyhow::{bail, Result};
 
-    use crate::stencil::StencilKind;
+    use crate::stencil::{StencilId, StencilKind};
 
     use super::super::manifest::Manifest;
     use super::super::{Executor, TileSpec};
@@ -216,7 +216,7 @@ mod imp {
             unreachable!("stub PjrtExecutor cannot be constructed")
         }
 
-        fn variants(&self, _kind: StencilKind) -> Vec<TileSpec> {
+        fn variants(&self, _stencil: StencilId) -> Vec<TileSpec> {
             unreachable!("stub PjrtExecutor cannot be constructed")
         }
 
@@ -255,7 +255,7 @@ mod tests {
         let mut rng = Rng::new(42);
         for variant in pjrt.manifest().variants.clone() {
             let spec = &variant.spec;
-            let def = spec.kind.def();
+            let def = spec.program();
             let n = spec.cells();
             let tile = rng.f32_vec(n, 0.0, 1.0);
             let power = def.has_power.then(|| rng.f32_vec(n, 0.0, 0.5));

@@ -42,7 +42,8 @@ use std::cell::RefCell;
 
 use anyhow::Result;
 
-use crate::stencil::StencilKind;
+use crate::stencil::interp::{self, RowTap};
+use crate::stencil::{StencilId, StencilKind, StencilProgram};
 
 use super::vec::{
     is_valid_par_vec, row_diffusion2d, row_diffusion3d, row_hotspot2d, row_hotspot3d,
@@ -132,7 +133,7 @@ impl Executor for StreamExecutor {
         Ok(())
     }
 
-    fn variants(&self, _kind: StencilKind) -> Vec<TileSpec> {
+    fn variants(&self, _stencil: StencilId) -> Vec<TileSpec> {
         Vec::new() // anything goes
     }
 
@@ -179,7 +180,8 @@ fn run_stream<const L: usize>(
     coeffs: &[f32],
     out: &mut Vec<f32>,
 ) {
-    let r = spec.kind.def().radius;
+    let prog = spec.program();
+    let r = prog.radius;
     let steps = spec.steps;
     STREAM_SCRATCH.with(|scratch| {
         let mut sc = scratch.borrow_mut();
@@ -200,25 +202,27 @@ fn run_stream<const L: usize>(
                     write_padded_row(&mut ring[at..at + pw], &tile[j * nx..(j + 1) * nx], r);
                     stages[0].fed = j + 1;
                     cascade2d::<L>(
-                        spec.kind, stages, ring, 0, steps, ny, nx, r, power, coeffs, out,
+                        prog, stages, ring, 0, steps, ny, nx, r, power, coeffs, out,
                     );
                 }
             }
             &[nz, ny, nx] => {
-                // All 3D kinds are radius 1.
-                let pw = nx + 2;
+                // The plane window is `2·radius + 1` deep (3 for every
+                // built-in; wider for custom high-order 3-D programs).
+                let pw = nx + 2 * r;
+                let win = 2 * r + 1;
                 let plane = ny * pw;
-                ring.resize(steps * 3 * plane, 0.0);
+                ring.resize(steps * win * plane, 0.0);
                 for j in 0..nz {
-                    let at = (j % 3) * plane;
+                    let at = (j % win) * plane;
                     let dst = &mut ring[at..at + plane];
                     for y in 0..ny {
                         let src = &tile[(j * ny + y) * nx..(j * ny + y + 1) * nx];
-                        write_padded_row(&mut dst[y * pw..(y + 1) * pw], src, 1);
+                        write_padded_row(&mut dst[y * pw..(y + 1) * pw], src, r);
                     }
                     stages[0].fed = j + 1;
                     cascade3d::<L>(
-                        spec.kind, stages, ring, 0, steps, nz, ny, nx, power, coeffs, out,
+                        prog, stages, ring, 0, steps, nz, ny, nx, r, power, coeffs, out,
                     );
                 }
             }
@@ -262,7 +266,7 @@ fn ring_row(stage: &[f32], y: usize, dy: isize, extent: usize, win: usize, pw: u
 /// module docs for why depth-first is load-bearing).
 #[allow(clippy::too_many_arguments)]
 fn cascade2d<const L: usize>(
-    kind: StencilKind,
+    prog: &'static StencilProgram,
     st: &mut [StageState],
     ring: &mut [f32],
     s: usize,
@@ -284,22 +288,24 @@ fn cascade2d<const L: usize>(
             let (left, right) = ring.split_at_mut((s + 1) * stage_sz);
             let src = &left[s * stage_sz..(s + 1) * stage_sz];
             let dst = &mut right[(y % win) * pw..(y % win + 1) * pw];
-            compute_row_2d::<L>(kind, src, y, ny, nx, r, power, k, &mut dst[r..r + nx]);
+            compute_row_2d::<L>(prog, src, y, ny, nx, r, power, k, &mut dst[r..r + nx]);
             fill_ghosts(dst, nx, r);
             st[s + 1].fed = y + 1;
-            cascade2d::<L>(kind, st, ring, s + 1, steps, ny, nx, r, power, k, out);
+            cascade2d::<L>(prog, st, ring, s + 1, steps, ny, nx, r, power, k, out);
         } else {
             let src = &ring[s * stage_sz..(s + 1) * stage_sz];
-            compute_row_2d::<L>(kind, src, y, ny, nx, r, power, k, &mut out[y * nx..(y + 1) * nx]);
+            compute_row_2d::<L>(prog, src, y, ny, nx, r, power, k, &mut out[y * nx..(y + 1) * nx]);
         }
     }
 }
 
-/// One output row of a 2D stage, from its padded ring window. Taps and
-/// operand order match the vectorized backend's drivers exactly.
+/// One output row of a 2D stage, from its padded ring window. Specialized
+/// kinds use the vectorized backend's row kernels (registry-selected);
+/// everything else — including the radius-2 extension — runs the generic
+/// lane interpreter over slices resolved straight out of the ring.
 #[allow(clippy::too_many_arguments)]
 fn compute_row_2d<const L: usize>(
-    kind: StencilKind,
+    prog: &'static StencilProgram,
     stage: &[f32],
     y: usize,
     ny: usize,
@@ -312,8 +318,8 @@ fn compute_row_2d<const L: usize>(
     let pw = nx + 2 * r;
     let win = 2 * r + 1;
     let c = ring_row(stage, y, 0, ny, win, pw);
-    match kind {
-        StencilKind::Diffusion2D => {
+    match prog.specialized() {
+        Some(StencilKind::Diffusion2D) => {
             let n = ring_row(stage, y, -1, ny, win, pw);
             let s = ring_row(stage, y, 1, ny, win, pw);
             row_diffusion2d::<L>(
@@ -326,7 +332,7 @@ fn compute_row_2d<const L: usize>(
                 k,
             );
         }
-        StencilKind::Hotspot2D => {
+        Some(StencilKind::Hotspot2D) => {
             let n = ring_row(stage, y, -1, ny, win, pw);
             let s = ring_row(stage, y, 1, ny, win, pw);
             let p = &power.expect("hotspot stencils require a power grid")[y * nx..(y + 1) * nx];
@@ -341,49 +347,29 @@ fn compute_row_2d<const L: usize>(
                 k,
             );
         }
-        StencilKind::Diffusion2DR2 => {
-            let n1 = ring_row(stage, y, -1, ny, win, pw);
-            let s1 = ring_row(stage, y, 1, ny, win, pw);
-            let n2 = ring_row(stage, y, -2, ny, win, pw);
-            let s2 = ring_row(stage, y, 2, ny, win, pw);
-            row_diffusion2d_r2(
-                o,
-                c,
-                &n1[2..2 + nx],
-                &s1[2..2 + nx],
-                &n2[2..2 + nx],
-                &s2[2..2 + nx],
-                k,
-            );
+        Some(StencilKind::Diffusion3D) | Some(StencilKind::Hotspot3D) => {
+            unreachable!("3D kinds use the plane cascade")
         }
-        _ => unreachable!("3D kinds use the plane cascade"),
-    }
-}
-
-/// Radius-2 star row (scalar, like the vectorized backend's fallback);
-/// operand order copied from the oracle's `diffusion2d_r2`.
-fn row_diffusion2d_r2(
-    o: &mut [f32],
-    c: &[f32],
-    n1: &[f32],
-    s1: &[f32],
-    n2: &[f32],
-    s2: &[f32],
-    k: &[f32],
-) {
-    let (cc, cn1, cs1, cw1, ce1) = (k[0], k[1], k[2], k[3], k[4]);
-    let (cn2, cs2, cw2, ce2) = (k[5], k[6], k[7], k[8]);
-    for x in 0..o.len() {
-        let i = x + 2;
-        o[x] = cc * c[i]
-            + cn1 * n1[x]
-            + cs1 * s1[x]
-            + cw1 * c[i - 1]
-            + ce1 * c[i + 1]
-            + cn2 * n2[x]
-            + cs2 * s2[x]
-            + cw2 * c[i - 2]
-            + ce2 * c[i + 2];
+        Some(StencilKind::Diffusion2DR2) | None => {
+            // Stack-resolved terms: the per-row hot path stays
+            // allocation-free, like the specialized kernels.
+            let mut taps = [RowTap::Power; interp::MAX_TERMS];
+            let n = interp::resolve_terms(
+                prog,
+                k,
+                |_dz, dy, dx| {
+                    let row = ring_row(stage, y, dy, ny, win, pw);
+                    let start = (r as isize + dx) as usize;
+                    &row[start..start + nx]
+                },
+                &mut taps,
+            );
+            let p = prog
+                .has_power
+                .then(|| &power.expect("power-consuming program without power stream")
+                    [y * nx..(y + 1) * nx]);
+            interp::interp_row::<L>(prog.post(), &taps[..n], k, &c[r..r + nx], p, o);
+        }
     }
 }
 
@@ -393,7 +379,7 @@ fn row_diffusion2d_r2(
 /// in-plane y-clamp is resolved by row selection inside [`compute_row_3d`].
 #[allow(clippy::too_many_arguments)]
 fn cascade3d<const L: usize>(
-    kind: StencilKind,
+    prog: &'static StencilProgram,
     st: &mut [StageState],
     ring: &mut [f32],
     s: usize,
@@ -401,96 +387,128 @@ fn cascade3d<const L: usize>(
     nz: usize,
     ny: usize,
     nx: usize,
+    r: usize,
     power: Option<&[f32]>,
     k: &[f32],
     out: &mut [f32],
 ) {
-    let pw = nx + 2;
+    let pw = nx + 2 * r;
+    let win = 2 * r + 1;
     let plane = ny * pw;
-    let stage_sz = 3 * plane;
-    while st[s].ready(nz, 1) {
+    let stage_sz = win * plane;
+    while st[s].ready(nz, r) {
         let z = st[s].emitted;
         st[s].emitted += 1;
         if s + 1 < steps {
             let (left, right) = ring.split_at_mut((s + 1) * stage_sz);
             let src = &left[s * stage_sz..(s + 1) * stage_sz];
-            let dst = &mut right[(z % 3) * plane..(z % 3 + 1) * plane];
+            let dst = &mut right[(z % win) * plane..(z % win + 1) * plane];
             for y in 0..ny {
                 let row = &mut dst[y * pw..(y + 1) * pw];
-                compute_row_3d::<L>(kind, src, z, y, nz, ny, nx, power, k, &mut row[1..1 + nx]);
-                fill_ghosts(row, nx, 1);
+                compute_row_3d::<L>(prog, src, z, y, nz, ny, nx, r, power, k, &mut row[r..r + nx]);
+                fill_ghosts(row, nx, r);
             }
             st[s + 1].fed = z + 1;
-            cascade3d::<L>(kind, st, ring, s + 1, steps, nz, ny, nx, power, k, out);
+            cascade3d::<L>(prog, st, ring, s + 1, steps, nz, ny, nx, r, power, k, out);
         } else {
             let src = &ring[s * stage_sz..(s + 1) * stage_sz];
             for y in 0..ny {
                 let at = (z * ny + y) * nx;
-                compute_row_3d::<L>(kind, src, z, y, nz, ny, nx, power, k, &mut out[at..at + nx]);
+                compute_row_3d::<L>(prog, src, z, y, nz, ny, nx, r, power, k, &mut out[at..at + nx]);
             }
         }
     }
 }
 
 /// One output row of a 3D stage: center/above/below planes come from the
-/// ring window (z-clamped), north/south rows from the center plane
-/// (y-clamped). Tap order matches the vectorized backend's 3D drivers.
+/// ring window (z-clamped), in-plane rows from the selected plane
+/// (y-clamped). Specialized kinds use the vectorized backend's 3D row
+/// kernels; custom programs run the generic lane interpreter over slices
+/// resolved straight out of the plane ring (arbitrary radius).
 #[allow(clippy::too_many_arguments)]
 fn compute_row_3d<const L: usize>(
-    kind: StencilKind,
+    prog: &'static StencilProgram,
     stage: &[f32],
     z: usize,
     y: usize,
     nz: usize,
     ny: usize,
     nx: usize,
+    r: usize,
     power: Option<&[f32]>,
     k: &[f32],
     o: &mut [f32],
 ) {
-    let pw = nx + 2;
+    let pw = nx + 2 * r;
+    let win = 2 * r + 1;
     let plane = ny * pw;
-    let cp = ring_row(stage, z, 0, nz, 3, plane);
-    let ap = ring_row(stage, z, -1, nz, 3, plane);
-    let bp = ring_row(stage, z, 1, nz, 3, plane);
-    let c = &cp[y * pw..(y + 1) * pw];
-    let yn = y.saturating_sub(1);
-    let ys = (y + 1).min(ny - 1);
-    let n = &cp[yn * pw..(yn + 1) * pw];
-    let s = &cp[ys * pw..(ys + 1) * pw];
-    let a = &ap[y * pw..(y + 1) * pw];
-    let b = &bp[y * pw..(y + 1) * pw];
-    match kind {
-        StencilKind::Diffusion3D => {
-            row_diffusion3d::<L>(
-                o,
-                &c[1..1 + nx],
-                &c[..nx],
-                &c[2..2 + nx],
-                &s[1..1 + nx],
-                &n[1..1 + nx],
-                &b[1..1 + nx],
-                &a[1..1 + nx],
-                k,
-            );
+    match prog.specialized() {
+        Some(kind @ (StencilKind::Diffusion3D | StencilKind::Hotspot3D)) => {
+            // All specialized 3D kinds are radius 1 (pw = nx + 2, win 3).
+            let cp = ring_row(stage, z, 0, nz, win, plane);
+            let ap = ring_row(stage, z, -1, nz, win, plane);
+            let bp = ring_row(stage, z, 1, nz, win, plane);
+            let c = &cp[y * pw..(y + 1) * pw];
+            let yn = y.saturating_sub(1);
+            let ys = (y + 1).min(ny - 1);
+            let n = &cp[yn * pw..(yn + 1) * pw];
+            let s = &cp[ys * pw..(ys + 1) * pw];
+            let a = &ap[y * pw..(y + 1) * pw];
+            let b = &bp[y * pw..(y + 1) * pw];
+            match kind {
+                StencilKind::Diffusion3D => row_diffusion3d::<L>(
+                    o,
+                    &c[1..1 + nx],
+                    &c[..nx],
+                    &c[2..2 + nx],
+                    &s[1..1 + nx],
+                    &n[1..1 + nx],
+                    &b[1..1 + nx],
+                    &a[1..1 + nx],
+                    k,
+                ),
+                StencilKind::Hotspot3D => {
+                    let p = &power.expect("hotspot stencils require a power grid")
+                        [(z * ny + y) * nx..(z * ny + y + 1) * nx];
+                    row_hotspot3d::<L>(
+                        o,
+                        &c[1..1 + nx],
+                        &c[..nx],
+                        &c[2..2 + nx],
+                        &s[1..1 + nx],
+                        &n[1..1 + nx],
+                        &b[1..1 + nx],
+                        &a[1..1 + nx],
+                        p,
+                        k,
+                    );
+                }
+                _ => unreachable!("arm admits only the 3D kinds"),
+            }
         }
-        StencilKind::Hotspot3D => {
-            let p = &power.expect("hotspot stencils require a power grid")
-                [(z * ny + y) * nx..(z * ny + y + 1) * nx];
-            row_hotspot3d::<L>(
-                o,
-                &c[1..1 + nx],
-                &c[..nx],
-                &c[2..2 + nx],
-                &s[1..1 + nx],
-                &n[1..1 + nx],
-                &b[1..1 + nx],
-                &a[1..1 + nx],
-                p,
+        Some(_) => unreachable!("2D kinds use the row cascade"),
+        None => {
+            let mut taps = [RowTap::Power; interp::MAX_TERMS];
+            let n = interp::resolve_terms(
+                prog,
                 k,
+                |dz, dy, dx| {
+                    let pl = ring_row(stage, z, dz, nz, win, plane);
+                    let yy = (y as isize + dy).clamp(0, ny as isize - 1) as usize;
+                    let row = &pl[yy * pw..(yy + 1) * pw];
+                    let start = (r as isize + dx) as usize;
+                    &row[start..start + nx]
+                },
+                &mut taps,
             );
+            let cp = ring_row(stage, z, 0, nz, win, plane);
+            let c = &cp[y * pw..(y + 1) * pw];
+            let p = prog
+                .has_power
+                .then(|| &power.expect("power-consuming program without power stream")
+                    [(z * ny + y) * nx..(z * ny + y + 1) * nx]);
+            interp::interp_row::<L>(prog.post(), &taps[..n], k, &c[r..r + nx], p, o);
         }
-        _ => unreachable!("2D kinds use the row cascade"),
     }
 }
 

@@ -18,12 +18,16 @@
 //! calls the oracle's own shell visitor and clamped cell evaluators.
 //!
 //! The four paper stencils (Diffusion 2D/3D, Hotspot 2D/3D) have dedicated
-//! vector kernels; the radius-2 extension falls back to the scalar oracle
-//! (still bit-identical, trivially).
+//! vector kernels selected by registry lookup
+//! ([`StencilProgram::specialized`]); every other registered program —
+//! including the radius-2 extension, which used to fall back to the
+//! scalar oracle here — runs through the generic lane-vectorized tap
+//! interpreter ([`crate::stencil::interp`]), `L`-wide chunks with the
+//! same per-cell operand order as the scalar path.
 
 use anyhow::Result;
 
-use crate::stencil::{reference, Grid, StencilKind};
+use crate::stencil::{interp, reference, Grid, StencilId, StencilKind, StencilProgram};
 
 use super::{run_tile_with_into, Executor, TileSpec};
 
@@ -106,12 +110,12 @@ impl Executor for VecExecutor {
             tile,
             power,
             coeffs,
-            |cur, pw, c, next| step_into(self.par_vec, spec.kind, cur, pw, c, next),
+            |cur, pw, c, next| step_into(self.par_vec, spec.stencil, cur, pw, c, next),
             out,
         )
     }
 
-    fn variants(&self, _kind: StencilKind) -> Vec<TileSpec> {
+    fn variants(&self, _stencil: StencilId) -> Vec<TileSpec> {
         Vec::new() // anything goes
     }
 
@@ -120,51 +124,56 @@ impl Executor for VecExecutor {
     }
 }
 
-/// One vectorized time-step of `kind` with `par_vec` lanes. Semantics
-/// (and bits) identical to [`reference::step_into`].
+/// One vectorized time-step of `stencil` with `par_vec` lanes. Semantics
+/// (and bits) identical to [`reference::step_into`] for every registered
+/// program.
 pub fn step_into(
     par_vec: usize,
-    kind: StencilKind,
+    stencil: impl Into<StencilId>,
     input: &Grid,
     power: Option<&Grid>,
     coeffs: &[f32],
     out: &mut Grid,
 ) {
     assert!(is_valid_par_vec(par_vec), "invalid par_vec {par_vec}");
+    let prog = stencil.into().program();
     match par_vec {
-        1 => step_into_lanes::<1>(kind, input, power, coeffs, out),
-        2 => step_into_lanes::<2>(kind, input, power, coeffs, out),
-        4 => step_into_lanes::<4>(kind, input, power, coeffs, out),
-        8 => step_into_lanes::<8>(kind, input, power, coeffs, out),
-        16 => step_into_lanes::<16>(kind, input, power, coeffs, out),
-        32 => step_into_lanes::<32>(kind, input, power, coeffs, out),
-        64 => step_into_lanes::<64>(kind, input, power, coeffs, out),
+        1 => step_into_lanes::<1>(prog, input, power, coeffs, out),
+        2 => step_into_lanes::<2>(prog, input, power, coeffs, out),
+        4 => step_into_lanes::<4>(prog, input, power, coeffs, out),
+        8 => step_into_lanes::<8>(prog, input, power, coeffs, out),
+        16 => step_into_lanes::<16>(prog, input, power, coeffs, out),
+        32 => step_into_lanes::<32>(prog, input, power, coeffs, out),
+        64 => step_into_lanes::<64>(prog, input, power, coeffs, out),
         _ => unreachable!("is_valid_par_vec admits only powers of two <= 64"),
     }
 }
 
 fn step_into_lanes<const L: usize>(
-    kind: StencilKind,
+    prog: &'static StencilProgram,
     input: &Grid,
     power: Option<&Grid>,
     coeffs: &[f32],
     out: &mut Grid,
 ) {
-    let def = kind.def();
-    assert_eq!(coeffs.len(), def.coeff_len, "coefficient count mismatch");
-    assert_eq!(input.ndim(), kind.ndim(), "grid dimensionality mismatch");
+    assert_eq!(coeffs.len(), prog.coeff_len, "coefficient count mismatch");
+    assert_eq!(input.ndim(), prog.ndim(), "grid dimensionality mismatch");
     assert_eq!(out.dims(), input.dims(), "output grid dims mismatch");
-    if def.has_power {
-        let p = power.expect("hotspot stencils require a power grid");
+    if prog.has_power {
+        let p = power.expect("power-consuming stencils require a power grid");
         assert_eq!(p.dims(), input.dims(), "power grid dims mismatch");
     }
-    match kind {
-        StencilKind::Diffusion2D => diffusion2d::<L>(input, coeffs, out),
-        StencilKind::Diffusion3D => diffusion3d::<L>(input, coeffs, out),
-        StencilKind::Hotspot2D => hotspot2d::<L>(input, power.unwrap(), coeffs, out),
-        StencilKind::Hotspot3D => hotspot3d::<L>(input, power.unwrap(), coeffs, out),
-        // Radius-2 extension: scalar oracle fallback (no vector kernel yet).
-        StencilKind::Diffusion2DR2 => reference::step_into(kind, input, power, coeffs, out),
+    match prog.specialized() {
+        Some(StencilKind::Diffusion2D) => diffusion2d::<L>(input, coeffs, out),
+        Some(StencilKind::Diffusion3D) => diffusion3d::<L>(input, coeffs, out),
+        Some(StencilKind::Hotspot2D) => hotspot2d::<L>(input, power.unwrap(), coeffs, out),
+        Some(StencilKind::Hotspot3D) => hotspot3d::<L>(input, power.unwrap(), coeffs, out),
+        // Radius-2 extension and every runtime-defined program: the
+        // generic lane-vectorized tap interpreter (same lane shape as the
+        // dedicated kernels, arbitrary radius).
+        Some(StencilKind::Diffusion2DR2) | None => {
+            interp::step_into_lanes::<L>(prog, input, power, coeffs, out)
+        }
     }
 }
 
@@ -475,7 +484,7 @@ fn diffusion3d<const L: usize>(g: &Grid, k: &[f32], out: &mut Grid) {
             }
         }
     }
-    reference::boundary_shell_3d(nz, ny, nx, |z, y, x| {
+    reference::boundary_shell_3d(nz, ny, nx, 1, |z, y, x| {
         out.set(z, y, x, reference::clamped_cell_diffusion3d(g, k, z, y, x));
     });
 }
@@ -506,7 +515,7 @@ fn hotspot3d<const L: usize>(g: &Grid, pw: &Grid, k: &[f32], out: &mut Grid) {
             }
         }
     }
-    reference::boundary_shell_3d(nz, ny, nx, |z, y, x| {
+    reference::boundary_shell_3d(nz, ny, nx, 1, |z, y, x| {
         out.set(z, y, x, reference::clamped_cell_hotspot3d(g, pw, k, z, y, x));
     });
 }
@@ -595,10 +604,18 @@ mod tests {
         }
     }
 
+    /// Radius-2 runs through the generic lane interpreter (not a scalar
+    /// fallback) and must still match the oracle to the bit — and actually
+    /// exercise the interpreter path.
     #[test]
-    fn radius2_falls_back_to_oracle() {
+    fn radius2_vectorizes_through_interpreter() {
+        let before = crate::stencil::interp_invocations();
         let (scalar, vector) = run_both(StencilKind::Diffusion2DR2, &[20, 20], 2, 8, 3);
         assert!(bitwise_equal(&scalar, &vector));
+        assert!(
+            crate::stencil::interp_invocations() > before,
+            "radius-2 vec path must route through the generic interpreter"
+        );
     }
 
     #[test]

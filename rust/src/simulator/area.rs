@@ -7,7 +7,7 @@
 //! control/channel overhead, soft floating-point adders on Stratix V, DSP
 //! spill-over into logic, and the extra dimension variables of 3D.
 
-use crate::stencil::StencilDef;
+use crate::stencil::StencilProgram;
 
 use super::bram::{bram_usage, BramUsage};
 use super::device::{Device, Family};
@@ -132,7 +132,7 @@ fn coef(family: Family) -> &'static LogicCoef {
 
 /// Estimate the logic fraction of one configuration.
 pub fn logic_frac(
-    def: &StencilDef,
+    def: &StencilProgram,
     dev: &Device,
     ndim: usize,
     par_vec: usize,
@@ -161,7 +161,7 @@ pub fn logic_frac(
 
 /// Build the full area report for a configuration.
 pub fn area_report(
-    def: &StencilDef,
+    def: &StencilProgram,
     dev: &Device,
     ndim: usize,
     bsize_x: usize,

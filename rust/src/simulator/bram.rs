@@ -20,7 +20,7 @@
 //!   pairs).
 
 use crate::blocking::geometry::shift_reg_cells;
-use crate::stencil::StencilDef;
+use crate::stencil::StencilProgram;
 
 use super::device::Device;
 
@@ -52,7 +52,7 @@ impl BramUsage {
 
 /// Shift-register + replication bits for ONE PE.
 pub fn pe_bits(
-    def: &StencilDef,
+    def: &StencilProgram,
     ndim: usize,
     bsize_x: usize,
     bsize_y: usize,
@@ -85,7 +85,7 @@ pub fn pe_bits(
 
 /// Total BRAM usage for `par_time` PEs.
 pub fn bram_usage(
-    def: &StencilDef,
+    def: &StencilProgram,
     dev: &Device,
     ndim: usize,
     bsize_x: usize,

@@ -14,12 +14,12 @@
 //! Multiplications by 2.0 are exponent increments done in logic and are
 //! already excluded from `OpMix::mults`.
 
-use crate::stencil::StencilDef;
+use crate::stencil::StencilProgram;
 
 use super::device::{Device, Family};
 
 /// DSP blocks needed for ONE cell update of `def` on `family`.
-pub fn dsp_per_cell(def: &StencilDef, family: Family) -> usize {
+pub fn dsp_per_cell(def: &StencilProgram, family: Family) -> usize {
     match family {
         Family::StratixV => def.ops.mults,
         Family::Arria10 | Family::Stratix10 => {
@@ -51,7 +51,7 @@ impl DspUsage {
 }
 
 /// Compute DSP usage of `par_vec × par_time` parallel cell updates.
-pub fn dsp_usage(def: &StencilDef, dev: &Device, par_vec: usize, par_time: usize) -> DspUsage {
+pub fn dsp_usage(def: &StencilProgram, dev: &Device, par_vec: usize, par_time: usize) -> DspUsage {
     let demand = (dsp_per_cell(def, dev.family) * par_vec * par_time) as u64;
     let placed = demand.min(dev.dsps);
     DspUsage { demand, placed, spilled: demand - placed }

@@ -188,7 +188,7 @@ mod tests {
         fmax: f64,
     ) -> Params {
         let dims = if kind.ndim() == 2 { vec![dim, dim] } else { vec![dim, dim, dim] };
-        Params { stencil: kind, par_vec: v, par_time: t, bsize_x: bsize, bsize_y: bsize, dims, iters: 1000, fmax_mhz: fmax }
+        Params { stencil: kind.into(), par_vec: v, par_time: t, bsize_x: bsize, bsize_y: bsize, dims, iters: 1000, fmax_mhz: fmax }
     }
 
     #[test]

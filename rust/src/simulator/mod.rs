@@ -218,7 +218,7 @@ mod tests {
     fn params(kind: StencilKind, v: usize, t: usize, bsize: usize, dim: usize) -> Params {
         let dims = if kind.ndim() == 2 { vec![dim, dim] } else { vec![dim, dim, dim] };
         Params {
-            stencil: kind,
+            stencil: kind.into(),
             par_vec: v,
             par_time: t,
             bsize_x: bsize,

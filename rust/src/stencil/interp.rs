@@ -1,0 +1,454 @@
+//! Generic tap-interpreter kernels: run *any* [`StencilProgram`] with the
+//! same numerics on every backend.
+//!
+//! Three entry shapes (the first two are crate-internal):
+//!
+//! * `step_into_lanes` — one whole-grid time-step, const-generic over
+//!   the lane count `L` (the `par_vec` analogue): interior rows are
+//!   evaluated in `L`-wide chunks through pre-resolved per-term row
+//!   slices (the same shape LLVM autovectorizes in `runtime::vec`'s
+//!   specialized kernels), the boundary shell through the program's
+//!   clamped [`StencilProgram::eval_cell`]. `L = 1` is the scalar
+//!   interpreter — the oracle for runtime-defined programs.
+//! * `resolve_terms` + `interp_row` — the row kernel alone, fed by a
+//!   caller-supplied layout resolver. The streaming backend uses this to
+//!   evaluate rows straight out of its shift-register rings.
+//! * [`StencilProgram::eval_cell`] — single-cell evaluation for boundary
+//!   and plane-cascade paths.
+//!
+//! **Bit-compatibility.** All three walk the term list in order with
+//! identical per-term operand order and left-to-right accumulation, so a
+//! program produces bit-identical results on the scalar, vectorized and
+//! streaming backends — and, for the built-ins, bit-identical results to
+//! their hand-written specialized kernels (property-tested in
+//! `rust/tests/stencil_program.rs`).
+//!
+//! The module-level invocation counter ([`interp_invocations`]) is how
+//! tests and the CLI verify *which* path ran: built-ins must leave it
+//! untouched (registry lookup selects their specialized kernels), custom
+//! programs must advance it.
+
+use std::cell::Cell;
+
+use super::program::{PostOp, StencilProgram, Term};
+use super::reference::{boundary_shell_2d, boundary_shell_3d};
+use super::Grid;
+
+thread_local! {
+    static INTERP_INVOCATIONS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// How many times a generic-interpreter kernel has run **on this thread**
+/// (whole-grid steps and streaming rows both count). Monotonic;
+/// thread-local so tests can sample it before/after a direct executor
+/// call to verify kernel selection without racing other threads.
+pub fn interp_invocations() -> u64 {
+    INTERP_INVOCATIONS.with(|c| c.get())
+}
+
+pub(crate) fn note_invocation() {
+    INTERP_INVOCATIONS.with(|c| c.set(c.get() + 1));
+}
+
+/// Upper bound on a program's term count (enforced by
+/// `ProgramBuilder::build`), so resolved-term buffers can live on the
+/// stack — the streaming cascade resolves per emitted row and must not
+/// allocate on the hot path.
+pub(crate) const MAX_TERMS: usize = 64;
+
+/// One term of a program resolved against a concrete row layout: every
+/// slice is aligned so index `i` holds the term's tap value for output
+/// cell `i` of the row.
+#[derive(Clone, Copy)]
+pub(crate) enum RowTap<'a> {
+    Tap { k: f32, s: &'a [f32] },
+    Pair { k: f32, a: &'a [f32], b: &'a [f32] },
+    Power,
+    PowerScaled { k: f32 },
+    Ambient { amb: f32, k: f32 },
+    Const { v: f32 },
+}
+
+/// Resolve a program's terms for one output row into a caller-provided
+/// buffer (at least [`MAX_TERMS`] long — stack arrays work, keeping the
+/// per-row hot path allocation-free), returning the term count.
+/// `row(dz, dy, dx)` must return the aligned tap slice for that offset
+/// (at least as long as the output row).
+pub(crate) fn resolve_terms<'a, F>(
+    prog: &StencilProgram,
+    k: &[f32],
+    mut row: F,
+    out: &mut [RowTap<'a>],
+) -> usize
+where
+    F: FnMut(isize, isize, isize) -> &'a [f32],
+{
+    assert!(out.len() >= prog.terms().len(), "resolved-term buffer too small");
+    for (slot, t) in out.iter_mut().zip(prog.terms()) {
+        *slot = match *t {
+            Term::Tap(tap) => RowTap::Tap {
+                k: k[tap.coeff_idx],
+                s: row(tap.offset[0], tap.offset[1], tap.offset[2]),
+            },
+            Term::AxisPair { a, b, coeff_idx } => RowTap::Pair {
+                k: k[coeff_idx],
+                a: row(a[0], a[1], a[2]),
+                b: row(b[0], b[1], b[2]),
+            },
+            Term::Power => RowTap::Power,
+            Term::PowerScaled { coeff_idx } => RowTap::PowerScaled { k: k[coeff_idx] },
+            Term::AmbientDrift { amb_idx, coeff_idx } => {
+                RowTap::Ambient { amb: k[amb_idx], k: k[coeff_idx] }
+            }
+            Term::CoeffProduct { a_idx, b_idx } => RowTap::Const { v: k[a_idx] * k[b_idx] },
+        };
+    }
+    prog.terms().len()
+}
+
+/// Accumulate one resolved term into an `L`-wide lane accumulator.
+/// `first` replaces instead of adding (the term sum is seeded by term 0,
+/// exactly like the scalar expression — no `0.0 +` that could flip a
+/// signed zero).
+#[inline(always)]
+fn lane_term<const L: usize>(
+    acc: &mut [f32; L],
+    first: bool,
+    t: &RowTap,
+    c: &[f32],
+    p: Option<&[f32]>,
+    at: usize,
+) {
+    match *t {
+        RowTap::Tap { k, s } => {
+            let sv = &s[at..at + L];
+            if first {
+                for j in 0..L {
+                    acc[j] = k * sv[j];
+                }
+            } else {
+                for j in 0..L {
+                    acc[j] += k * sv[j];
+                }
+            }
+        }
+        RowTap::Pair { k, a, b } => {
+            let av = &a[at..at + L];
+            let bv = &b[at..at + L];
+            let cv = &c[at..at + L];
+            if first {
+                for j in 0..L {
+                    acc[j] = (av[j] + bv[j] - 2.0 * cv[j]) * k;
+                }
+            } else {
+                for j in 0..L {
+                    acc[j] += (av[j] + bv[j] - 2.0 * cv[j]) * k;
+                }
+            }
+        }
+        RowTap::Power => {
+            let pv = &p.expect("power term requires a power stream")[at..at + L];
+            if first {
+                for j in 0..L {
+                    acc[j] = pv[j];
+                }
+            } else {
+                for j in 0..L {
+                    acc[j] += pv[j];
+                }
+            }
+        }
+        RowTap::PowerScaled { k } => {
+            let pv = &p.expect("power term requires a power stream")[at..at + L];
+            if first {
+                for j in 0..L {
+                    acc[j] = k * pv[j];
+                }
+            } else {
+                for j in 0..L {
+                    acc[j] += k * pv[j];
+                }
+            }
+        }
+        RowTap::Ambient { amb, k } => {
+            let cv = &c[at..at + L];
+            if first {
+                for j in 0..L {
+                    acc[j] = (amb - cv[j]) * k;
+                }
+            } else {
+                for j in 0..L {
+                    acc[j] += (amb - cv[j]) * k;
+                }
+            }
+        }
+        RowTap::Const { v } => {
+            if first {
+                for j in 0..L {
+                    acc[j] = v;
+                }
+            } else {
+                for j in 0..L {
+                    acc[j] += v;
+                }
+            }
+        }
+    }
+}
+
+/// Scalar twin of [`lane_term`]: the value of one resolved term at cell
+/// `x`. Op-for-op identical to one lane of the vector body.
+#[inline(always)]
+fn term_val(t: &RowTap, c: &[f32], p: Option<&[f32]>, x: usize) -> f32 {
+    match *t {
+        RowTap::Tap { k, s } => k * s[x],
+        RowTap::Pair { k, a, b } => (a[x] + b[x] - 2.0 * c[x]) * k,
+        RowTap::Power => p.expect("power term requires a power stream")[x],
+        RowTap::PowerScaled { k } => k * p.expect("power term requires a power stream")[x],
+        RowTap::Ambient { amb, k } => (amb - c[x]) * k,
+        RowTap::Const { v } => v,
+    }
+}
+
+/// Evaluate one output row from pre-resolved terms, `L` lanes at a time
+/// with a scalar remainder (per-cell op order identical in both bodies).
+/// `c` is the aligned center slice, `p` the aligned power slice.
+pub(crate) fn interp_row<const L: usize>(
+    post: PostOp,
+    terms: &[RowTap],
+    k: &[f32],
+    c: &[f32],
+    p: Option<&[f32]>,
+    o: &mut [f32],
+) {
+    note_invocation();
+    let len = o.len();
+    let full = len / L * L;
+    let mut at = 0;
+    while at < full {
+        let mut acc = [0.0f32; L];
+        for (ti, t) in terms.iter().enumerate() {
+            lane_term::<L>(&mut acc, ti == 0, t, c, p, at);
+        }
+        match post {
+            PostOp::Identity => o[at..at + L].copy_from_slice(&acc),
+            PostOp::ScaledResidual { scale_idx } => {
+                let kk = k[scale_idx];
+                let cv = &c[at..at + L];
+                let ov = &mut o[at..at + L];
+                for j in 0..L {
+                    ov[j] = cv[j] + kk * acc[j];
+                }
+            }
+        }
+        at += L;
+    }
+    for x in full..len {
+        let mut acc = 0.0f32;
+        for (ti, t) in terms.iter().enumerate() {
+            let v = term_val(t, c, p, x);
+            acc = if ti == 0 { v } else { acc + v };
+        }
+        o[x] = match post {
+            PostOp::Identity => acc,
+            PostOp::ScaledResidual { scale_idx } => c[x] + k[scale_idx] * acc,
+        };
+    }
+}
+
+/// One whole-grid time-step of `prog` at `L` lanes: interior rows through
+/// [`interp_row`], boundary shell through the clamped
+/// [`StencilProgram::eval_cell`]. Semantics (and bits) match the built-in
+/// kernels' split exactly: branch-free interior, clamped shell of width
+/// `radius`.
+pub(crate) fn step_into_lanes<const L: usize>(
+    prog: &StencilProgram,
+    input: &Grid,
+    power: Option<&Grid>,
+    k: &[f32],
+    out: &mut Grid,
+) {
+    assert_eq!(k.len(), prog.coeff_len, "coefficient count mismatch");
+    assert_eq!(input.ndim(), prog.ndim(), "grid dimensionality mismatch");
+    assert_eq!(out.dims(), input.dims(), "output grid dims mismatch");
+    if prog.has_power {
+        let p = power.expect("stencil program requires a power grid");
+        assert_eq!(p.dims(), input.dims(), "power grid dims mismatch");
+    }
+    // Count the step itself too, so all-boundary (tiny) grids — which
+    // never reach a row kernel — still register as interpreted.
+    note_invocation();
+    let r = prog.radius;
+    let d = input.data();
+    let pdata = power.map(|p| p.data());
+    // Stack buffer for the resolved terms (bounded by the builder's
+    // term cap): the row loop performs no allocation.
+    let mut terms = [RowTap::Power; MAX_TERMS];
+    match input.ndim() {
+        2 => {
+            let (ny, nx) = (input.ny(), input.nx());
+            if ny > 2 * r && nx > 2 * r {
+                let span = nx - 2 * r;
+                let o = out.data_mut();
+                for y in r..ny - r {
+                    let n = resolve_terms(
+                        prog,
+                        k,
+                        |_dz, dy, dx| {
+                            let start =
+                                (y as isize + dy) * nx as isize + r as isize + dx;
+                            &d[start as usize..start as usize + span]
+                        },
+                        &mut terms,
+                    );
+                    let base = y * nx + r;
+                    let c = &d[base..base + span];
+                    let p = pdata.map(|p| &p[base..base + span]);
+                    interp_row::<L>(prog.post(), &terms[..n], k, c, p, &mut o[base..base + span]);
+                }
+            }
+            boundary_shell_2d(ny, nx, r, |y, x| {
+                let pv = power.map_or(0.0, |p| p.get(0, y, x));
+                let v = prog.eval_cell(
+                    |_dz, dy, dx| input.get_clamped(0, y as isize + dy, x as isize + dx),
+                    pv,
+                    k,
+                );
+                out.set(0, y, x, v);
+            });
+        }
+        _ => {
+            let (nz, ny, nx) = (input.nz(), input.ny(), input.nx());
+            if nz > 2 * r && ny > 2 * r && nx > 2 * r {
+                let span = nx - 2 * r;
+                let o = out.data_mut();
+                for z in r..nz - r {
+                    for y in r..ny - r {
+                        let n = resolve_terms(
+                            prog,
+                            k,
+                            |dz, dy, dx| {
+                                let start = ((z as isize + dz) * ny as isize
+                                    + (y as isize + dy))
+                                    * nx as isize
+                                    + r as isize
+                                    + dx;
+                                &d[start as usize..start as usize + span]
+                            },
+                            &mut terms,
+                        );
+                        let base = (z * ny + y) * nx + r;
+                        let c = &d[base..base + span];
+                        let p = pdata.map(|p| &p[base..base + span]);
+                        interp_row::<L>(
+                            prog.post(),
+                            &terms[..n],
+                            k,
+                            c,
+                            p,
+                            &mut o[base..base + span],
+                        );
+                    }
+                }
+            }
+            boundary_shell_3d(nz, ny, nx, r, |z, y, x| {
+                let pv = power.map_or(0.0, |p| p.get(z, y, x));
+                let v = prog.eval_cell(
+                    |dz, dy, dx| {
+                        input.get_clamped(z as isize + dz, y as isize + dy, x as isize + dx)
+                    },
+                    pv,
+                    k,
+                );
+                out.set(z, y, x, v);
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{reference, StencilKind, StencilProgram};
+    use crate::util::prop::{forall, Rng};
+
+    fn bitwise_equal(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// The tentpole numerics claim at module scope: for every built-in,
+    /// one interpreted step equals one specialized oracle step to the bit,
+    /// at several lane widths, across random shapes.
+    #[test]
+    fn prop_interpreter_matches_specialized_oracle() {
+        forall(
+            "generic interpreter == specialized oracle, bit-for-bit",
+            30,
+            |r: &mut Rng| {
+                let kind = *r.pick(&StencilKind::ALL_EXT);
+                let dims: Vec<usize> =
+                    (0..kind.ndim()).map(|_| r.usize_in(1, 20)).collect();
+                (kind, dims, r.next_u64())
+            },
+            |&(kind, ref dims, seed)| {
+                let prog = kind.def();
+                let mut g = if kind.ndim() == 2 {
+                    Grid::new2d(dims[0], dims[1])
+                } else {
+                    Grid::new3d(dims[0], dims[1], dims[2])
+                };
+                g.fill_random(seed, -1.0, 1.0);
+                let power = prog.has_power.then(|| {
+                    let mut p = g.clone();
+                    p.fill_random(seed ^ 0x5555, 0.0, 0.5);
+                    p
+                });
+                let want =
+                    reference::step(kind, &g, power.as_ref(), prog.default_coeffs);
+                for lanes in [1usize, 4, 8] {
+                    let mut got = g.clone();
+                    match lanes {
+                        1 => step_into_lanes::<1>(
+                            prog,
+                            &g,
+                            power.as_ref(),
+                            prog.default_coeffs,
+                            &mut got,
+                        ),
+                        4 => step_into_lanes::<4>(
+                            prog,
+                            &g,
+                            power.as_ref(),
+                            prog.default_coeffs,
+                            &mut got,
+                        ),
+                        _ => step_into_lanes::<8>(
+                            prog,
+                            &g,
+                            power.as_ref(),
+                            prog.default_coeffs,
+                            &mut got,
+                        ),
+                    }
+                    if !bitwise_equal(got.data(), want.data()) {
+                        return Err(format!(
+                            "{kind} dims {dims:?} lanes {lanes}: interpreter deviates"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn invocation_counter_advances() {
+        let prog = StencilProgram::get(StencilKind::Diffusion2D);
+        let mut g = Grid::new2d(12, 12);
+        g.fill_random(3, 0.0, 1.0);
+        let mut out = g.clone();
+        let before = interp_invocations();
+        step_into_lanes::<4>(prog, &g, None, prog.default_coeffs, &mut out);
+        assert!(interp_invocations() > before, "interpreter must count itself");
+    }
+}

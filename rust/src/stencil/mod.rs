@@ -1,10 +1,19 @@
 //! Stencil definitions, grids and the scalar reference oracle.
 //!
-//! The four evaluated stencils are the paper's (Table 2): Diffusion 2D/3D
-//! (Maruyama & Aoki) and Hotspot 2D/3D (Rodinia). Each definition carries
-//! the computation's characteristics — FLOP per cell update, external-memory
-//! bytes per cell update, read/write stream counts — plus the floating-point
-//! op mix the FPGA simulator's DSP mapper consumes.
+//! Stencils are *data*: a [`StencilProgram`] describes the computation as
+//! a term list (see [`program`]) from which every characteristic the
+//! paper's Table 2 tabulates — FLOP per cell update, external-memory
+//! bytes per cell update, read/write stream counts, the floating-point
+//! op mix the FPGA simulator's DSP mapper consumes — is *derived*. The
+//! paper's four benchmarks (Diffusion 2D/3D, Hotspot 2D/3D; Maruyama &
+//! Aoki and Rodinia) plus the radius-2 extension are pre-registered in
+//! the [`StencilRegistry`]; new workloads register at runtime or load
+//! from JSON, no enum edits required.
+//!
+//! [`StencilKind`] remains as the closed name set of those built-ins (the
+//! paper's evaluation iterates it); execution layers carry the open
+//! [`StencilId`] instead, and `impl From<StencilKind> for StencilId`
+//! bridges the two.
 //!
 //! Axis conventions match the Python layers exactly: 2D arrays are (y, x)
 //! with north = y-1 and west = x-1; 3D arrays are (z, y, x) with
@@ -12,13 +21,25 @@
 //! boundary cell (§5.1).
 
 pub mod grid;
+pub mod interp;
 pub mod io;
+pub mod program;
 pub mod reference;
 
 pub use grid::Grid;
+pub use interp::interp_invocations;
+pub use program::{
+    PostOp, ProgramBuilder, StencilId, StencilProgram, StencilRegistry, Tap, Term,
+};
 
-/// Which stencil: the paper's four benchmarks plus the high-order
-/// (radius-2) extension its future work calls for (§8).
+/// Compat alias: the old hand-maintained `StencilDef` is subsumed by the
+/// derived [`StencilProgram`] (same field names, derived values).
+pub type StencilDef = StencilProgram;
+
+/// The built-in benchmark set: the paper's four stencils plus the
+/// high-order (radius-2) extension its future work calls for (§8).
+/// Open-world code should carry [`StencilId`] instead; this enum names
+/// the programs with hand-written specialized kernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StencilKind {
     Diffusion2D,
@@ -41,7 +62,8 @@ impl StencilKind {
         StencilKind::Hotspot3D,
     ];
 
-    /// Paper set + extensions.
+    /// Paper set + extensions. Registration order in the
+    /// [`StencilRegistry`] — a kind's position here IS its [`StencilId`].
     pub const ALL_EXT: [StencilKind; 5] = [
         StencilKind::Diffusion2D,
         StencilKind::Diffusion3D,
@@ -73,8 +95,10 @@ impl StencilKind {
         }
     }
 
-    pub fn def(self) -> &'static StencilDef {
-        StencilDef::get(self)
+    /// The built-in's registered program (all characteristics derived from
+    /// its term list).
+    pub fn def(self) -> &'static StencilProgram {
+        StencilProgram::get(self)
     }
 }
 
@@ -85,8 +109,9 @@ impl std::fmt::Display for StencilKind {
 }
 
 /// Floating-point operation mix of one cell update, as the FPGA toolchain
-/// sees it after strength reduction. Drives the simulator's DSP/logic
-/// mapping (see `simulator::dsp`).
+/// sees it after strength reduction. Derived from a program's term list
+/// (see [`program`]); drives the simulator's DSP/logic mapping
+/// (see `crate::simulator::dsp`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OpMix {
     /// Genuine multiplies (multiplications by 2.0 are exponent increments,
@@ -102,165 +127,13 @@ pub struct OpMix {
     pub fusable: usize,
 }
 
-/// Static description of one stencil benchmark (paper Table 2).
-#[derive(Debug, Clone, PartialEq)]
-pub struct StencilDef {
-    pub kind: StencilKind,
-    /// Stencil radius in cells. All four paper stencils are first-order.
-    pub radius: usize,
-    /// FLOP per cell update (Table 2).
-    pub flop_pcu: usize,
-    /// External-memory bytes per cell update with full spatial locality
-    /// (Table 2): diffusion reads 1 + writes 1 cell = 8 B; hotspot reads
-    /// 2 (temp + power) + writes 1 = 12 B.
-    pub bytes_pcu: usize,
-    /// External-memory reads per cell update (`num_read` in the model).
-    pub num_read: usize,
-    /// External-memory writes per cell update (`num_write`).
-    pub num_write: usize,
-    /// Number of runtime coefficient arguments (matches the Python layer).
-    pub coeff_len: usize,
-    /// Whether a second (power) input grid is streamed.
-    pub has_power: bool,
-    /// FP op mix for the DSP mapper.
-    pub ops: OpMix,
-    /// Default coefficient values used by examples/tests; physically
-    /// sensible (convex diffusion weights; Rodinia-like hotspot constants).
-    pub default_coeffs: &'static [f32],
-}
-
-impl StencilDef {
-    pub fn get(kind: StencilKind) -> &'static StencilDef {
-        match kind {
-            StencilKind::Diffusion2D => &DIFFUSION2D,
-            StencilKind::Diffusion3D => &DIFFUSION3D,
-            StencilKind::Hotspot2D => &HOTSPOT2D,
-            StencilKind::Hotspot3D => &HOTSPOT3D,
-            StencilKind::Diffusion2DR2 => &DIFFUSION2DR2,
-        }
-    }
-
-    /// Bytes-to-FLOP ratio (Table 2 rightmost column).
-    pub fn bytes_per_flop(&self) -> f64 {
-        self.bytes_pcu as f64 / self.flop_pcu as f64
-    }
-
-    /// Total accesses per cell update (`num_acc` in Eq 3).
-    pub fn num_acc(&self) -> usize {
-        self.num_read + self.num_write
-    }
-
-    /// Convert a memory throughput (GB/s over useful traffic) into compute
-    /// performance (GFLOP/s) via the bytes-to-FLOP ratio, as §4 does.
-    pub fn gflops_from_gbps(&self, gbps: f64) -> f64 {
-        gbps / self.bytes_per_flop()
-    }
-
-    /// Cell updates per second from GB/s of useful traffic.
-    pub fn gcells_from_gbps(&self, gbps: f64) -> f64 {
-        gbps / self.bytes_pcu as f64
-    }
-}
-
-/// Diffusion 2D: `cc*c + cw*w + ce*e + cs*s + cn*n` — 5 mult, 4 add,
-/// 9 FLOP; every add consumes a product, so 4 fuse on hard-FP DSPs.
-pub static DIFFUSION2D: StencilDef = StencilDef {
-    kind: StencilKind::Diffusion2D,
-    radius: 1,
-    flop_pcu: 9,
-    bytes_pcu: 8,
-    num_read: 1,
-    num_write: 1,
-    coeff_len: 5,
-    has_power: false,
-    ops: OpMix { mults: 5, adds: 4, fusable: 4 },
-    default_coeffs: &[0.2, 0.2, 0.2, 0.2, 0.2],
-};
-
-/// Diffusion 3D: 7-point, 7 mult + 6 add = 13 FLOP, all adds fusable.
-pub static DIFFUSION3D: StencilDef = StencilDef {
-    kind: StencilKind::Diffusion3D,
-    radius: 1,
-    flop_pcu: 13,
-    bytes_pcu: 8,
-    num_read: 1,
-    num_write: 1,
-    coeff_len: 7,
-    has_power: false,
-    ops: OpMix { mults: 7, adds: 6, fusable: 6 },
-    default_coeffs: &[
-        1.0 / 7.0,
-        1.0 / 7.0,
-        1.0 / 7.0,
-        1.0 / 7.0,
-        1.0 / 7.0,
-        1.0 / 7.0,
-        1.0 / 7.0,
-    ],
-};
-
-/// Hotspot 2D: `c + sdc*(power + (n+s-2c)*Ry1 + (e+w-2c)*Rx1 + (amb-c)*Rz1)`
-/// — 15 FLOP counting the 2.0* ops; genuine mults are {Ry1, Rx1, Rz1, sdc}
-/// = 4 (the ×2.0 are strength-reduced), adds/subs = 9. Only 3 adds sit
-/// directly on a multiply output in the tree, so fusable = 3: the A10 DSP
-/// demand per cell update is 4 + 9 − 3 = 10 (matches Table 4's 95% at
-/// par_vec×par_time = 4×36).
-/// Coefficients: [sdc, rx1, ry1, rz1, amb].
-pub static HOTSPOT2D: StencilDef = StencilDef {
-    kind: StencilKind::Hotspot2D,
-    radius: 1,
-    flop_pcu: 15,
-    bytes_pcu: 12,
-    num_read: 2,
-    num_write: 1,
-    coeff_len: 5,
-    has_power: true,
-    ops: OpMix { mults: 4, adds: 9, fusable: 3 },
-    default_coeffs: &[0.05, 0.3, 0.2, 0.1, 80.0],
-};
-
-/// Hotspot 3D: `c*cc + n*cn + s*cs + e*ce + w*cw + a*ca + b*cb + sdc*power
-/// + ca*amb` — 9 mult + 8 add = 17 FLOP, all adds fuse (sum of products).
-/// Coefficients: [cc, cn, cs, cw, ce, ca, cb, sdc, amb].
-pub static HOTSPOT3D: StencilDef = StencilDef {
-    kind: StencilKind::Hotspot3D,
-    radius: 1,
-    flop_pcu: 17,
-    bytes_pcu: 12,
-    num_read: 2,
-    num_write: 1,
-    coeff_len: 9,
-    has_power: true,
-    ops: OpMix { mults: 9, adds: 8, fusable: 8 },
-    default_coeffs: &[0.4, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.01, 80.0],
-};
-
-/// Second-order 9-point star diffusion (radius 2, §8 extension):
-/// `cc*c + Σ c_d1*near_d + Σ c_d2*far_d` over the 4 axis directions at
-/// distances 1 and 2 — 9 mult + 8 add = 17 FLOP, all adds fusable.
-/// Coefficients: [cc, cn1, cs1, cw1, ce1, cn2, cs2, cw2, ce2].
-pub static DIFFUSION2DR2: StencilDef = StencilDef {
-    kind: StencilKind::Diffusion2DR2,
-    radius: 2,
-    flop_pcu: 17,
-    bytes_pcu: 8,
-    num_read: 1,
-    num_write: 1,
-    coeff_len: 9,
-    has_power: false,
-    ops: OpMix { mults: 9, adds: 8, fusable: 8 },
-    // A stable 4th-order-flavoured weighting: center + strong near ring +
-    // weak far ring, summing to 1.
-    default_coeffs: &[0.4, 0.12, 0.12, 0.12, 0.12, 0.03, 0.03, 0.03, 0.03],
-};
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn radius2_extension_consistent() {
-        let d = StencilDef::get(StencilKind::Diffusion2DR2);
+        let d = StencilKind::Diffusion2DR2.def();
         assert_eq!(d.radius, 2);
         assert_eq!(d.ops.mults + d.ops.adds, d.flop_pcu);
         assert_eq!(d.coeff_len, d.default_coeffs.len());
@@ -271,28 +144,32 @@ mod tests {
 
     #[test]
     fn table2_characteristics() {
-        // The Bytes/FLOP column of Table 2.
-        assert!((DIFFUSION2D.bytes_per_flop() - 0.889).abs() < 1e-3);
-        assert!((DIFFUSION3D.bytes_per_flop() - 0.615).abs() < 1e-3);
-        assert!((HOTSPOT2D.bytes_per_flop() - 0.800).abs() < 1e-3);
-        assert!((HOTSPOT3D.bytes_per_flop() - 0.706).abs() < 1e-3);
+        // The Bytes/FLOP column of Table 2 — now computed from term lists.
+        assert!((StencilKind::Diffusion2D.def().bytes_per_flop() - 0.889).abs() < 1e-3);
+        assert!((StencilKind::Diffusion3D.def().bytes_per_flop() - 0.615).abs() < 1e-3);
+        assert!((StencilKind::Hotspot2D.def().bytes_per_flop() - 0.800).abs() < 1e-3);
+        assert!((StencilKind::Hotspot3D.def().bytes_per_flop() - 0.706).abs() < 1e-3);
     }
 
     #[test]
     fn num_acc_matches_paper() {
-        assert_eq!(DIFFUSION2D.num_acc(), 2);
-        assert_eq!(HOTSPOT2D.num_acc(), 3);
-        assert_eq!(HOTSPOT3D.num_acc(), 3);
+        assert_eq!(StencilKind::Diffusion2D.def().num_acc(), 2);
+        assert_eq!(StencilKind::Hotspot2D.def().num_acc(), 3);
+        assert_eq!(StencilKind::Hotspot3D.def().num_acc(), 3);
     }
 
     #[test]
     fn op_mix_consistent_with_flop_count() {
         // FLOP counts in Table 2 include the strength-reduced ×2.0 ops for
         // hotspot 2D (2 of them), so: mults + adds (+ reduced) == flop_pcu.
-        assert_eq!(DIFFUSION2D.ops.mults + DIFFUSION2D.ops.adds, 9);
-        assert_eq!(DIFFUSION3D.ops.mults + DIFFUSION3D.ops.adds, 13);
-        assert_eq!(HOTSPOT2D.ops.mults + HOTSPOT2D.ops.adds + 2, 15);
-        assert_eq!(HOTSPOT3D.ops.mults + HOTSPOT3D.ops.adds, 17);
+        let d2 = StencilKind::Diffusion2D.def();
+        assert_eq!(d2.ops.mults + d2.ops.adds, 9);
+        let d3 = StencilKind::Diffusion3D.def();
+        assert_eq!(d3.ops.mults + d3.ops.adds, 13);
+        let h2 = StencilKind::Hotspot2D.def();
+        assert_eq!(h2.ops.mults + h2.ops.adds + 2, 15);
+        let h3 = StencilKind::Hotspot3D.def();
+        assert_eq!(h3.ops.mults + h3.ops.adds, 17);
         for k in StencilKind::ALL {
             let d = k.def();
             assert!(d.ops.fusable <= d.ops.adds);
@@ -304,24 +181,26 @@ mod tests {
     fn names_round_trip() {
         for k in StencilKind::ALL {
             assert_eq!(StencilKind::parse(k.name()), Some(k));
+            assert_eq!(StencilRegistry::lookup(k.name()), Some(StencilId::from(k)));
         }
         assert_eq!(StencilKind::parse("nope"), None);
     }
 
     #[test]
     fn coeff_lengths_match_python_layer() {
-        assert_eq!(DIFFUSION2D.coeff_len, DIFFUSION2D.default_coeffs.len());
-        assert_eq!(DIFFUSION3D.coeff_len, DIFFUSION3D.default_coeffs.len());
-        assert_eq!(HOTSPOT2D.coeff_len, HOTSPOT2D.default_coeffs.len());
-        assert_eq!(HOTSPOT3D.coeff_len, HOTSPOT3D.default_coeffs.len());
+        for k in StencilKind::ALL {
+            let d = k.def();
+            assert_eq!(d.coeff_len, d.default_coeffs.len(), "{k}");
+        }
     }
 
     #[test]
     fn gflops_conversion() {
         // 100 GB/s of diffusion-2D traffic = 100/0.889 = 112.5 GFLOP/s
-        let g = DIFFUSION2D.gflops_from_gbps(100.0);
+        let d = StencilKind::Diffusion2D.def();
+        let g = d.gflops_from_gbps(100.0);
         assert!((g - 112.5).abs() < 0.1);
         // and 12.5 Gcell/s
-        assert!((DIFFUSION2D.gcells_from_gbps(100.0) - 12.5).abs() < 1e-9);
+        assert!((d.gcells_from_gbps(100.0) - 12.5).abs() < 1e-9);
     }
 }

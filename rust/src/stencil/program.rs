@@ -1,0 +1,1019 @@
+//! The open stencil-definition layer: stencils as *data*, not enum arms.
+//!
+//! The paper's accelerator is parameterized over the stencil — radius
+//! `rad`, coefficients as runtime kernel arguments, an optional second
+//! (power) input stream (§3.2, Table 2) — but the original reproduction
+//! hardwired a closed [`StencilKind`] enum that every layer `match`ed on.
+//! This module replaces that with:
+//!
+//! * [`StencilProgram`] — a value type describing one stencil as a list of
+//!   [`Term`]s (coefficient×tap products, Hotspot-style axis pairs, power
+//!   and constant terms) plus an optional affine [`PostOp`]. Everything
+//!   the rest of the system needs — `radius`, `flop_pcu`, `bytes_pcu`,
+//!   [`OpMix`] for the DSP mapper, `coeff_len`, `has_power` — is *derived*
+//!   from the term list at build time instead of hand-maintained.
+//! * [`StencilRegistry`] — a process-wide registry. The five built-ins are
+//!   pre-registered under their existing names; user programs register at
+//!   runtime ([`StencilRegistry::register`]) or load from a JSON file
+//!   ([`StencilRegistry::load_file`], CLI `--stencil-file`).
+//! * [`StencilId`] — a cheap copyable handle into the registry. This is
+//!   what [`crate::runtime::TileSpec`], [`crate::coordinator::Plan`],
+//!   [`crate::model::Params`] and the engine sessions carry;
+//!   `impl From<StencilKind> for StencilId` keeps every existing call
+//!   site compiling.
+//!
+//! **Evaluation model.** A program evaluates one cell as
+//!
+//! ```text
+//! acc  = term_0 + term_1 + ... + term_{n-1}     (left-to-right)
+//! out  = acc                                    (PostOp::Identity)
+//! out  = c + k[s] * acc                         (PostOp::ScaledResidual)
+//! ```
+//!
+//! with each term shape chosen so the generic interpreter reproduces the
+//! hand-written kernels *bit for bit* (same operand order per f32 op —
+//! property-tested in `rust/tests/stencil_program.rs`). Registered
+//! programs are leaked to `&'static` so handles stay `Copy` and executors
+//! need no lifetimes; a process registers a bounded handful of programs,
+//! so the leak is a few KiB at most.
+
+use std::fmt;
+use std::path::Path;
+use std::sync::{OnceLock, RwLock};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+use super::{OpMix, StencilKind};
+
+/// One coefficient×neighbor product: `k[coeff_idx] * in[offset]`.
+/// Offsets are `[dz, dy, dx]` (z is 0 for 2-D programs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tap {
+    pub offset: [isize; 3],
+    pub coeff_idx: usize,
+}
+
+/// One additive term of a stencil program. Shapes cover the paper's four
+/// benchmarks (and the radius-2 extension) exactly, so the built-ins'
+/// generic form is bit-identical to their specialized kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Term {
+    /// `k[coeff_idx] * in[offset]` — the sum-of-products workhorse.
+    Tap(Tap),
+    /// `(in[a] + in[b] - 2*c) * k[coeff_idx]` — Hotspot's strength-reduced
+    /// second-difference pair (the ×2 is an exponent increment in logic,
+    /// not a DSP multiply).
+    AxisPair {
+        a: [isize; 3],
+        b: [isize; 3],
+        coeff_idx: usize,
+    },
+    /// The bare power-stream value at the cell.
+    Power,
+    /// `k[coeff_idx] * power` — a scaled power term (Hotspot 3D's `sdc*p`).
+    PowerScaled { coeff_idx: usize },
+    /// `(k[amb_idx] - c) * k[coeff_idx]` — ambient drift toward a
+    /// coefficient-supplied constant (Hotspot 2D's `(amb - c)*Rz1`).
+    AmbientDrift { amb_idx: usize, coeff_idx: usize },
+    /// `k[a_idx] * k[b_idx]` — a pure-coefficient constant term
+    /// (Hotspot 3D's `ca*amb`).
+    CoeffProduct { a_idx: usize, b_idx: usize },
+}
+
+impl Term {
+    /// `(mults, internal_adds, strength_reduced, yields_mult_result)` of
+    /// one term — the raw material of the derived Table-2 characteristics.
+    /// `strength_reduced` counts ×2.0-style ops that the FLOP column
+    /// includes but the DSP mapper excludes.
+    fn op_counts(&self) -> (usize, usize, usize, bool) {
+        match self {
+            Term::Tap(_) => (1, 0, 0, true),
+            Term::AxisPair { .. } => (1, 2, 1, true),
+            Term::Power => (0, 0, 0, false),
+            Term::PowerScaled { .. } => (1, 0, 0, true),
+            Term::AmbientDrift { .. } => (1, 1, 0, true),
+            Term::CoeffProduct { .. } => (1, 0, 0, true),
+        }
+    }
+
+    fn reads_power(&self) -> bool {
+        matches!(self, Term::Power | Term::PowerScaled { .. })
+    }
+
+    /// Neighbor offsets this term reads (empty for non-spatial terms).
+    fn offsets(&self) -> Vec<[isize; 3]> {
+        match self {
+            Term::Tap(t) => vec![t.offset],
+            Term::AxisPair { a, b, .. } => vec![*a, *b],
+            _ => Vec::new(),
+        }
+    }
+
+    /// Largest coefficient index referenced, if any.
+    fn max_coeff_idx(&self) -> Option<usize> {
+        match self {
+            Term::Tap(t) => Some(t.coeff_idx),
+            Term::AxisPair { coeff_idx, .. } | Term::PowerScaled { coeff_idx } => Some(*coeff_idx),
+            Term::AmbientDrift { amb_idx, coeff_idx } => Some(*amb_idx.max(coeff_idx)),
+            Term::CoeffProduct { a_idx, b_idx } => Some(*a_idx.max(b_idx)),
+            Term::Power => None,
+        }
+    }
+}
+
+/// Affine post-op applied to the accumulated term sum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PostOp {
+    /// `out = acc`.
+    #[default]
+    Identity,
+    /// `out = c + k[scale_idx] * acc` — the Rodinia Hotspot update form.
+    ScaledResidual { scale_idx: usize },
+}
+
+/// A runtime-definable stencil program. Build one with
+/// [`StencilProgram::builder`] or load it from JSON; the characteristic
+/// fields (`radius`, `flop_pcu`, ..., [`OpMix`]) are derived from the
+/// term list at build time and are exactly the quantities the paper's
+/// Table 2 tabulates per benchmark.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StencilProgram {
+    name: &'static str,
+    ndim: usize,
+    terms: Vec<Term>,
+    post: PostOp,
+    /// `Some(kind)` when the executors have a hand-written fast-path
+    /// kernel for this program (the five built-ins); `None` runs the
+    /// generic tap interpreter on every backend.
+    specialized: Option<StencilKind>,
+    /// Stencil radius in cells, derived from the largest tap offset.
+    pub radius: usize,
+    /// FLOP per cell update (Table 2; includes strength-reduced ×2 ops).
+    pub flop_pcu: usize,
+    /// External-memory bytes per cell update with full spatial locality.
+    pub bytes_pcu: usize,
+    /// External-memory reads per cell update (`num_read` in the model).
+    pub num_read: usize,
+    /// External-memory writes per cell update (`num_write`).
+    pub num_write: usize,
+    /// Number of runtime coefficient arguments.
+    pub coeff_len: usize,
+    /// Whether a second (power) input grid is streamed.
+    pub has_power: bool,
+    /// FP op mix for the DSP mapper, derived from the term list.
+    pub ops: OpMix,
+    /// Default coefficient values used by examples/tests.
+    pub default_coeffs: &'static [f32],
+}
+
+impl StencilProgram {
+    /// Start building a program. `ndim` is 2 or 3; offsets passed to the
+    /// builder use `[dy, dx]` (2-D) or `[dz, dy, dx]` (3-D) order.
+    pub fn builder(name: &str, ndim: usize) -> ProgramBuilder {
+        ProgramBuilder {
+            name: name.to_string(),
+            ndim,
+            terms: Vec::new(),
+            post: PostOp::Identity,
+            default_coeffs: Vec::new(),
+            specialized: None,
+        }
+    }
+
+    /// The built-in program for `kind` (compat spelling of the old
+    /// `StencilDef::get`).
+    pub fn get(kind: StencilKind) -> &'static StencilProgram {
+        StencilId::from(kind).program()
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.ndim
+    }
+
+    pub fn terms(&self) -> &[Term] {
+        &self.terms
+    }
+
+    pub fn post(&self) -> PostOp {
+        self.post
+    }
+
+    /// Which built-in fast-path kernel family this program selects, if
+    /// any. `None` means every backend runs the generic tap interpreter.
+    pub fn specialized(&self) -> Option<StencilKind> {
+        self.specialized
+    }
+
+    /// A clone of this program with the specialized-kernel hint stripped
+    /// (and a fresh name), so it runs through the generic interpreter on
+    /// every backend — the interpreter-vs-specialized test/bench hook.
+    pub fn as_interpreted(&self, name: &str) -> StencilProgram {
+        let mut p = self.clone();
+        p.name = leak_str(name.to_string());
+        p.specialized = None;
+        p
+    }
+
+    /// Bytes-to-FLOP ratio (Table 2 rightmost column).
+    pub fn bytes_per_flop(&self) -> f64 {
+        self.bytes_pcu as f64 / self.flop_pcu as f64
+    }
+
+    /// Total accesses per cell update (`num_acc` in Eq 3).
+    pub fn num_acc(&self) -> usize {
+        self.num_read + self.num_write
+    }
+
+    /// Convert a memory throughput (GB/s over useful traffic) into compute
+    /// performance (GFLOP/s) via the bytes-to-FLOP ratio, as §4 does.
+    pub fn gflops_from_gbps(&self, gbps: f64) -> f64 {
+        gbps / self.bytes_per_flop()
+    }
+
+    /// Cell updates per second from GB/s of useful traffic.
+    pub fn gcells_from_gbps(&self, gbps: f64) -> f64 {
+        gbps / self.bytes_pcu as f64
+    }
+
+    /// Evaluate one cell of the program. `read` resolves a `[dz, dy, dx]`
+    /// neighbor offset (clamping is the reader's responsibility),
+    /// `power_val` is the power-stream value at the cell. Every backend's
+    /// boundary path and the streaming 3-D interpreter route through this
+    /// single expression, which is what keeps them bit-identical.
+    #[inline]
+    pub fn eval_cell<F: Fn(isize, isize, isize) -> f32>(
+        &self,
+        read: F,
+        power_val: f32,
+        k: &[f32],
+    ) -> f32 {
+        let c = read(0, 0, 0);
+        let mut acc = 0.0f32;
+        for (i, t) in self.terms.iter().enumerate() {
+            let v = match *t {
+                Term::Tap(tap) => {
+                    k[tap.coeff_idx] * read(tap.offset[0], tap.offset[1], tap.offset[2])
+                }
+                Term::AxisPair { a, b, coeff_idx } => {
+                    (read(a[0], a[1], a[2]) + read(b[0], b[1], b[2]) - 2.0 * c) * k[coeff_idx]
+                }
+                Term::Power => power_val,
+                Term::PowerScaled { coeff_idx } => k[coeff_idx] * power_val,
+                Term::AmbientDrift { amb_idx, coeff_idx } => (k[amb_idx] - c) * k[coeff_idx],
+                Term::CoeffProduct { a_idx, b_idx } => k[a_idx] * k[b_idx],
+            };
+            acc = if i == 0 { v } else { acc + v };
+        }
+        match self.post {
+            PostOp::Identity => acc,
+            PostOp::ScaledResidual { scale_idx } => c + k[scale_idx] * acc,
+        }
+    }
+
+    // ------------------------------------------------------------- serde
+
+    /// Serialize to the JSON schema `--stencil-file` reads (round-trips
+    /// through [`StencilProgram::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let off = |o: &[isize; 3]| -> Json {
+            let ds: Vec<Json> = o[3 - self.ndim..].iter().map(|&d| Json::Num(d as f64)).collect();
+            Json::Arr(ds)
+        };
+        let terms: Vec<Json> = self
+            .terms
+            .iter()
+            .map(|t| match t {
+                Term::Tap(tap) => Json::obj(vec![
+                    ("op", "tap".into()),
+                    ("offset", off(&tap.offset)),
+                    ("coeff", tap.coeff_idx.into()),
+                ]),
+                Term::AxisPair { a, b, coeff_idx } => Json::obj(vec![
+                    ("op", "axis_pair".into()),
+                    ("a", off(a)),
+                    ("b", off(b)),
+                    ("coeff", (*coeff_idx).into()),
+                ]),
+                Term::Power => Json::obj(vec![("op", "power".into())]),
+                Term::PowerScaled { coeff_idx } => Json::obj(vec![
+                    ("op", "power_scaled".into()),
+                    ("coeff", (*coeff_idx).into()),
+                ]),
+                Term::AmbientDrift { amb_idx, coeff_idx } => Json::obj(vec![
+                    ("op", "ambient_drift".into()),
+                    ("amb", (*amb_idx).into()),
+                    ("coeff", (*coeff_idx).into()),
+                ]),
+                Term::CoeffProduct { a_idx, b_idx } => Json::obj(vec![
+                    ("op", "coeff_product".into()),
+                    ("a", (*a_idx).into()),
+                    ("b", (*b_idx).into()),
+                ]),
+            })
+            .collect();
+        let post = match self.post {
+            PostOp::Identity => Json::obj(vec![("op", "identity".into())]),
+            PostOp::ScaledResidual { scale_idx } => Json::obj(vec![
+                ("op", "scaled_residual".into()),
+                ("coeff", scale_idx.into()),
+            ]),
+        };
+        let coeffs: Vec<Json> =
+            self.default_coeffs.iter().map(|&c| Json::Num(c as f64)).collect();
+        Json::obj(vec![
+            ("name", self.name.into()),
+            ("ndim", self.ndim.into()),
+            ("terms", Json::Arr(terms)),
+            ("post", post),
+            ("default_coeffs", Json::Arr(coeffs)),
+        ])
+    }
+
+    /// Parse a program from its JSON form (see `stencils/*.json` for the
+    /// schema). Validation is the same as the builder's.
+    pub fn from_json(v: &Json) -> Result<StencilProgram> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("stencil program missing \"name\""))?;
+        let ndim = v
+            .get("ndim")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("stencil program {name}: missing \"ndim\""))?;
+        let mut b = StencilProgram::builder(name, ndim);
+        let idx = |t: &Json, key: &str| -> Result<usize> {
+            t.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("stencil program {name}: term missing \"{key}\""))
+        };
+        let offset = |t: &Json, key: &str| -> Result<Vec<isize>> {
+            let arr = t
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("stencil program {name}: term missing \"{key}\""))?;
+            arr.iter()
+                .map(|d| {
+                    d.as_f64()
+                        .filter(|f| f.fract() == 0.0 && f.abs() <= 64.0)
+                        .map(|f| f as isize)
+                        .ok_or_else(|| anyhow!("stencil program {name}: bad offset component"))
+                })
+                .collect()
+        };
+        for t in v
+            .get("terms")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("stencil program {name}: missing \"terms\""))?
+        {
+            let op = t
+                .get("op")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("stencil program {name}: term missing \"op\""))?;
+            b = match op {
+                "tap" => b.tap(&offset(t, "offset")?, idx(t, "coeff")?),
+                "axis_pair" => b.axis_pair(&offset(t, "a")?, &offset(t, "b")?, idx(t, "coeff")?),
+                "power" => b.power(),
+                "power_scaled" => b.power_scaled(idx(t, "coeff")?),
+                "ambient_drift" => b.ambient_drift(idx(t, "amb")?, idx(t, "coeff")?),
+                "coeff_product" => b.coeff_product(idx(t, "a")?, idx(t, "b")?),
+                other => bail!("stencil program {name}: unknown term op {other:?}"),
+            };
+        }
+        match v.get("post") {
+            None => {}
+            Some(p) => match p.get("op").and_then(Json::as_str) {
+                Some("identity") => {}
+                Some("scaled_residual") => b = b.scaled_residual(idx(p, "coeff")?),
+                _ => bail!("stencil program {name}: bad \"post\""),
+            },
+        }
+        let coeffs: Vec<f32> = v
+            .get("default_coeffs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("stencil program {name}: missing \"default_coeffs\""))?
+            .iter()
+            .map(|c| {
+                c.as_f64()
+                    .map(|f| f as f32)
+                    .ok_or_else(|| anyhow!("stencil program {name}: bad coefficient"))
+            })
+            .collect::<Result<_>>()?;
+        b.default_coeffs(coeffs).build()
+    }
+}
+
+impl fmt::Display for StencilProgram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name)
+    }
+}
+
+fn leak_str(s: String) -> &'static str {
+    Box::leak(s.into_boxed_str())
+}
+
+fn leak_coeffs(v: Vec<f32>) -> &'static [f32] {
+    Box::leak(v.into_boxed_slice())
+}
+
+/// Builder for [`StencilProgram`]. Term order is evaluation order (and
+/// therefore f32 accumulation order — it is part of the program's
+/// numerics, not just cosmetics).
+#[derive(Debug, Clone)]
+pub struct ProgramBuilder {
+    name: String,
+    ndim: usize,
+    terms: Vec<Term>,
+    post: PostOp,
+    default_coeffs: Vec<f32>,
+    specialized: Option<StencilKind>,
+}
+
+impl ProgramBuilder {
+    fn pad(&self, offset: &[isize]) -> [isize; 3] {
+        // Rank is validated in tap()/axis_pair() (mismatches become the
+        // sentinel build() rejects); this only left-pads with zeros.
+        let mut o = [0isize; 3];
+        let n = offset.len().min(3);
+        o[3 - n..].copy_from_slice(&offset[..n]);
+        o
+    }
+
+    /// Add a `k[coeff_idx] * in[offset]` term. `offset` is `[dy, dx]`
+    /// (2-D) or `[dz, dy, dx]` (3-D).
+    pub fn tap(mut self, offset: &[isize], coeff_idx: usize) -> Self {
+        if offset.len() != self.ndim {
+            // remembered as an invalid term; build() reports it
+            self.terms.push(Term::Tap(Tap { offset: [isize::MAX; 3], coeff_idx }));
+            return self;
+        }
+        let offset = self.pad(offset);
+        self.terms.push(Term::Tap(Tap { offset, coeff_idx }));
+        self
+    }
+
+    /// Add a Hotspot-style `(in[a] + in[b] - 2c) * k[coeff_idx]` pair.
+    pub fn axis_pair(mut self, a: &[isize], b: &[isize], coeff_idx: usize) -> Self {
+        if a.len() != self.ndim || b.len() != self.ndim {
+            self.terms.push(Term::Tap(Tap { offset: [isize::MAX; 3], coeff_idx }));
+            return self;
+        }
+        let (a, b) = (self.pad(a), self.pad(b));
+        self.terms.push(Term::AxisPair { a, b, coeff_idx });
+        self
+    }
+
+    /// Add the bare power-stream value.
+    pub fn power(mut self) -> Self {
+        self.terms.push(Term::Power);
+        self
+    }
+
+    /// Add `k[coeff_idx] * power`.
+    pub fn power_scaled(mut self, coeff_idx: usize) -> Self {
+        self.terms.push(Term::PowerScaled { coeff_idx });
+        self
+    }
+
+    /// Add `(k[amb_idx] - c) * k[coeff_idx]`.
+    pub fn ambient_drift(mut self, amb_idx: usize, coeff_idx: usize) -> Self {
+        self.terms.push(Term::AmbientDrift { amb_idx, coeff_idx });
+        self
+    }
+
+    /// Add the constant `k[a_idx] * k[b_idx]`.
+    pub fn coeff_product(mut self, a_idx: usize, b_idx: usize) -> Self {
+        self.terms.push(Term::CoeffProduct { a_idx, b_idx });
+        self
+    }
+
+    /// Wrap the term sum as `out = c + k[scale_idx] * acc`.
+    pub fn scaled_residual(mut self, scale_idx: usize) -> Self {
+        self.post = PostOp::ScaledResidual { scale_idx };
+        self
+    }
+
+    /// Default coefficient values (length must equal the derived
+    /// coefficient count).
+    pub fn default_coeffs(mut self, coeffs: Vec<f32>) -> Self {
+        self.default_coeffs = coeffs;
+        self
+    }
+
+    /// Mark this program as having a hand-written fast-path kernel
+    /// (built-ins only; crate-internal).
+    pub(crate) fn specialized(mut self, kind: StencilKind) -> Self {
+        self.specialized = Some(kind);
+        self
+    }
+
+    /// Validate and derive the program's characteristics.
+    pub fn build(self) -> Result<StencilProgram> {
+        let name = self.name;
+        ensure!(!name.is_empty(), "stencil program needs a non-empty name");
+        ensure!(
+            self.ndim == 2 || self.ndim == 3,
+            "stencil program {name}: ndim must be 2 or 3, got {}",
+            self.ndim
+        );
+        ensure!(!self.terms.is_empty(), "stencil program {name}: needs at least one term");
+        ensure!(
+            self.terms.len() <= 64,
+            "stencil program {name}: too many terms ({} > 64)",
+            self.terms.len()
+        );
+
+        // Derive radius and validate offsets.
+        let mut radius = 0usize;
+        for t in &self.terms {
+            for o in t.offsets() {
+                ensure!(
+                    o[0] != isize::MAX,
+                    "stencil program {name}: offset rank must equal ndim ({})",
+                    self.ndim
+                );
+                if self.ndim == 2 {
+                    ensure!(o[0] == 0, "stencil program {name}: 2-D offsets cannot move in z");
+                }
+                for &d in &o {
+                    radius = radius.max(d.unsigned_abs());
+                }
+            }
+        }
+        ensure!(radius >= 1, "stencil program {name}: needs at least one non-center tap");
+        ensure!(radius <= 8, "stencil program {name}: radius {radius} > 8 unsupported");
+
+        // Derive coefficient count.
+        let mut max_idx: Option<usize> = None;
+        for t in &self.terms {
+            max_idx = max_idx.max(t.max_coeff_idx());
+        }
+        if let PostOp::ScaledResidual { scale_idx } = self.post {
+            max_idx = max_idx.max(Some(scale_idx));
+        }
+        let coeff_len = max_idx.map_or(0, |m| m + 1);
+        ensure!(coeff_len >= 1, "stencil program {name}: references no coefficients");
+        ensure!(
+            self.default_coeffs.len() == coeff_len,
+            "stencil program {name}: default_coeffs length {} != derived coefficient \
+             count {coeff_len} (max referenced index + 1)",
+            self.default_coeffs.len()
+        );
+
+        let has_power = self.terms.iter().any(Term::reads_power);
+
+        // Derive the op mix exactly as the hand-maintained Table-2
+        // constants counted it: per-term mults/adds/strength-reduced ops,
+        // one join-add per term after the first (fusable into a hard-FP
+        // MAC iff the joined term's result comes straight off a multiply),
+        // plus the post-op's multiply-add (whose add consumes the full
+        // accumulator chain, which the toolchain keeps in logic — not
+        // fusable).
+        let (mut mults, mut adds, mut reduced, mut fusable) = (0usize, 0usize, 0usize, 0usize);
+        for (i, t) in self.terms.iter().enumerate() {
+            let (m, a, r, is_mult) = t.op_counts();
+            mults += m;
+            adds += a;
+            reduced += r;
+            if i > 0 {
+                adds += 1;
+                if is_mult {
+                    fusable += 1;
+                }
+            }
+        }
+        if let PostOp::ScaledResidual { .. } = self.post {
+            mults += 1;
+            adds += 1;
+        }
+        let ops = OpMix { mults, adds, fusable };
+        let flop_pcu = mults + adds + reduced;
+
+        let num_read = 1 + has_power as usize;
+        let num_write = 1;
+        let bytes_pcu = (num_read + num_write) * crate::util::bytes::CELL_BYTES;
+
+        Ok(StencilProgram {
+            name: leak_str(name),
+            ndim: self.ndim,
+            terms: self.terms,
+            post: self.post,
+            specialized: self.specialized,
+            radius,
+            flop_pcu,
+            bytes_pcu,
+            num_read,
+            num_write,
+            coeff_len,
+            has_power,
+            ops,
+            default_coeffs: leak_coeffs(self.default_coeffs),
+        })
+    }
+}
+
+// ------------------------------------------------------------------ registry
+
+/// Handle to a registered [`StencilProgram`]. Cheap to copy, hash and
+/// compare — this is the type the execution layers carry where they used
+/// to carry [`StencilKind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StencilId(u32);
+
+impl StencilId {
+    /// The registered program this id names.
+    pub fn program(self) -> &'static StencilProgram {
+        StencilRegistry::get(self)
+    }
+
+    /// Compat spelling mirroring the old `StencilKind::def()`.
+    pub fn def(self) -> &'static StencilProgram {
+        self.program()
+    }
+
+    pub fn name(self) -> &'static str {
+        self.program().name()
+    }
+
+    /// Spatial dimensionality (2 or 3).
+    pub fn ndim(self) -> usize {
+        self.program().ndim()
+    }
+
+    /// Whether this id names one of the pre-registered built-ins.
+    pub fn is_builtin(self) -> bool {
+        (self.0 as usize) < StencilKind::ALL_EXT.len()
+    }
+}
+
+impl fmt::Display for StencilId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl From<StencilKind> for StencilId {
+    fn from(kind: StencilKind) -> StencilId {
+        // Built-ins are registered in ALL_EXT order, so the kind's
+        // position IS its id.
+        let idx = StencilKind::ALL_EXT
+            .iter()
+            .position(|k| *k == kind)
+            .expect("every StencilKind is in ALL_EXT");
+        registry(); // make sure the built-ins exist
+        StencilId(idx as u32)
+    }
+}
+
+/// The process-wide stencil registry. Built-ins are pre-registered under
+/// their existing names ("diffusion2d", ..., "diffusion2dr2"); user
+/// programs join at runtime via [`StencilRegistry::register`] or
+/// [`StencilRegistry::load_file`].
+pub struct StencilRegistry;
+
+static REGISTRY: OnceLock<RwLock<Vec<&'static StencilProgram>>> = OnceLock::new();
+
+fn registry() -> &'static RwLock<Vec<&'static StencilProgram>> {
+    REGISTRY.get_or_init(|| {
+        let builtins: Vec<&'static StencilProgram> = StencilKind::ALL_EXT
+            .iter()
+            .map(|&k| -> &'static StencilProgram { Box::leak(Box::new(builtin_program(k))) })
+            .collect();
+        RwLock::new(builtins)
+    })
+}
+
+impl StencilRegistry {
+    /// Register a program, returning its id. Re-registering an identical
+    /// program under the same name is idempotent (returns the existing
+    /// id); a *different* program under an existing name is an error.
+    pub fn register(program: StencilProgram) -> Result<StencilId> {
+        let reg = registry();
+        {
+            let progs = reg.read().expect("stencil registry poisoned");
+            if let Some(i) = progs.iter().position(|p| p.name() == program.name()) {
+                ensure!(
+                    *progs[i] == program,
+                    "a different stencil program named {:?} is already registered",
+                    program.name()
+                );
+                return Ok(StencilId(i as u32));
+            }
+        }
+        let mut progs = reg.write().expect("stencil registry poisoned");
+        // Re-check under the write lock (another thread may have won).
+        if let Some(i) = progs.iter().position(|p| p.name() == program.name()) {
+            ensure!(
+                *progs[i] == program,
+                "a different stencil program named {:?} is already registered",
+                program.name()
+            );
+            return Ok(StencilId(i as u32));
+        }
+        progs.push(Box::leak(Box::new(program)));
+        Ok(StencilId(progs.len() as u32 - 1))
+    }
+
+    /// Look up a program by name (built-ins and registered programs).
+    pub fn lookup(name: &str) -> Option<StencilId> {
+        let progs = registry().read().expect("stencil registry poisoned");
+        progs.iter().position(|p| p.name() == name).map(|i| StencilId(i as u32))
+    }
+
+    /// The program behind an id.
+    pub fn get(id: StencilId) -> &'static StencilProgram {
+        let progs = registry().read().expect("stencil registry poisoned");
+        progs[id.0 as usize]
+    }
+
+    /// Every registered id, in registration order (built-ins first).
+    pub fn all() -> Vec<StencilId> {
+        let progs = registry().read().expect("stencil registry poisoned");
+        (0..progs.len() as u32).map(StencilId).collect()
+    }
+
+    /// Load program(s) from a JSON file: either one program object or an
+    /// array of them. Returns the registered ids. The whole file is
+    /// parsed and checked against existing registrations *before*
+    /// anything is registered, so a bad entry never leaves earlier
+    /// entries half-registered.
+    pub fn load_file(path: &Path) -> Result<Vec<StencilId>> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading stencil file {}", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let objs: Vec<&Json> = match &root {
+            Json::Arr(a) => a.iter().collect(),
+            obj => vec![obj],
+        };
+        ensure!(!objs.is_empty(), "{}: no stencil programs", path.display());
+        let programs: Vec<StencilProgram> = objs
+            .iter()
+            .map(|o| StencilProgram::from_json(o))
+            .collect::<Result<_>>()
+            .with_context(|| format!("in stencil file {}", path.display()))?;
+        for (i, p) in programs.iter().enumerate() {
+            if let Some(existing) = StencilRegistry::lookup(p.name()) {
+                ensure!(
+                    existing.program() == p,
+                    "{}: a different stencil program named {:?} is already registered",
+                    path.display(),
+                    p.name()
+                );
+            }
+            // ...and against siblings in the same file, so registration
+            // below cannot fail halfway through.
+            ensure!(
+                !programs[..i].iter().any(|q| q.name() == p.name() && q != p),
+                "{}: two different stencil programs named {:?} in one file",
+                path.display(),
+                p.name()
+            );
+        }
+        programs.into_iter().map(StencilRegistry::register).collect()
+    }
+}
+
+// ------------------------------------------------------------------ builtins
+
+/// Construct the built-in program for `kind`. Term order matches the
+/// scalar oracle's expression order exactly (see
+/// `crate::stencil::reference`), which is what makes the generic
+/// interpreter bit-identical to the specialized kernels.
+fn builtin_program(kind: StencilKind) -> StencilProgram {
+    let b = match kind {
+        // `cc*c + cw*w + ce*e + cs*s + cn*n`; coeffs [cc, cn, cs, cw, ce].
+        StencilKind::Diffusion2D => StencilProgram::builder("diffusion2d", 2)
+            .tap(&[0, 0], 0)
+            .tap(&[0, -1], 3)
+            .tap(&[0, 1], 4)
+            .tap(&[1, 0], 2)
+            .tap(&[-1, 0], 1)
+            .default_coeffs(vec![0.2, 0.2, 0.2, 0.2, 0.2]),
+        // 7-point; coeffs [cc, cn, cs, cw, ce, ca, cb].
+        StencilKind::Diffusion3D => StencilProgram::builder("diffusion3d", 3)
+            .tap(&[0, 0, 0], 0)
+            .tap(&[0, 0, -1], 3)
+            .tap(&[0, 0, 1], 4)
+            .tap(&[0, 1, 0], 2)
+            .tap(&[0, -1, 0], 1)
+            .tap(&[1, 0, 0], 6)
+            .tap(&[-1, 0, 0], 5)
+            .default_coeffs(vec![1.0 / 7.0; 7]),
+        // `c + sdc*(p + (n+s-2c)*Ry1 + (e+w-2c)*Rx1 + (amb-c)*Rz1)`;
+        // coeffs [sdc, rx1, ry1, rz1, amb].
+        StencilKind::Hotspot2D => StencilProgram::builder("hotspot2d", 2)
+            .power()
+            .axis_pair(&[-1, 0], &[1, 0], 2)
+            .axis_pair(&[0, 1], &[0, -1], 1)
+            .ambient_drift(4, 3)
+            .scaled_residual(0)
+            .default_coeffs(vec![0.05, 0.3, 0.2, 0.1, 80.0]),
+        // `c*cc + n*cn + s*cs + e*ce + w*cw + a*ca + b*cb + sdc*p + ca*amb`;
+        // coeffs [cc, cn, cs, cw, ce, ca, cb, sdc, amb].
+        StencilKind::Hotspot3D => StencilProgram::builder("hotspot3d", 3)
+            .tap(&[0, 0, 0], 0)
+            .tap(&[0, -1, 0], 1)
+            .tap(&[0, 1, 0], 2)
+            .tap(&[0, 0, 1], 4)
+            .tap(&[0, 0, -1], 3)
+            .tap(&[-1, 0, 0], 5)
+            .tap(&[1, 0, 0], 6)
+            .power_scaled(7)
+            .coeff_product(5, 8)
+            .default_coeffs(vec![0.4, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.01, 80.0]),
+        // Radius-2 9-point star; coeffs
+        // [cc, cn1, cs1, cw1, ce1, cn2, cs2, cw2, ce2].
+        StencilKind::Diffusion2DR2 => StencilProgram::builder("diffusion2dr2", 2)
+            .tap(&[0, 0], 0)
+            .tap(&[-1, 0], 1)
+            .tap(&[1, 0], 2)
+            .tap(&[0, -1], 3)
+            .tap(&[0, 1], 4)
+            .tap(&[-2, 0], 5)
+            .tap(&[2, 0], 6)
+            .tap(&[0, -2], 7)
+            .tap(&[0, 2], 8)
+            .default_coeffs(vec![0.4, 0.12, 0.12, 0.12, 0.12, 0.03, 0.03, 0.03, 0.03]),
+    };
+    b.specialized(kind).build().expect("built-in stencil programs are valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_registered_under_their_names() {
+        for kind in StencilKind::ALL_EXT {
+            let id = StencilRegistry::lookup(kind.name()).expect("builtin registered");
+            assert_eq!(id, StencilId::from(kind));
+            assert!(id.is_builtin());
+            assert_eq!(id.program().specialized(), Some(kind));
+            assert_eq!(id.name(), kind.name());
+            assert_eq!(id.ndim(), kind.ndim());
+        }
+        assert!(StencilRegistry::lookup("no-such-stencil").is_none());
+    }
+
+    /// The acceptance gate: derived characteristics equal the previously
+    /// hand-coded Table 2 constants, per built-in, exactly.
+    #[test]
+    fn derived_characteristics_match_hand_constants() {
+        let cases: [(StencilKind, usize, usize, usize, usize, usize, OpMix); 5] = [
+            // (kind, radius, flop, bytes, num_read, coeff_len, ops)
+            (StencilKind::Diffusion2D, 1, 9, 8, 1, 5, OpMix { mults: 5, adds: 4, fusable: 4 }),
+            (StencilKind::Diffusion3D, 1, 13, 8, 1, 7, OpMix { mults: 7, adds: 6, fusable: 6 }),
+            (StencilKind::Hotspot2D, 1, 15, 12, 2, 5, OpMix { mults: 4, adds: 9, fusable: 3 }),
+            (StencilKind::Hotspot3D, 1, 17, 12, 2, 9, OpMix { mults: 9, adds: 8, fusable: 8 }),
+            (
+                StencilKind::Diffusion2DR2,
+                2,
+                17,
+                8,
+                1,
+                9,
+                OpMix { mults: 9, adds: 8, fusable: 8 },
+            ),
+        ];
+        for (kind, radius, flop, bytes, num_read, coeff_len, ops) in cases {
+            let p = kind.def();
+            assert_eq!(p.radius, radius, "{kind} radius");
+            assert_eq!(p.flop_pcu, flop, "{kind} flop_pcu");
+            assert_eq!(p.bytes_pcu, bytes, "{kind} bytes_pcu");
+            assert_eq!(p.num_read, num_read, "{kind} num_read");
+            assert_eq!(p.num_write, 1, "{kind} num_write");
+            assert_eq!(p.coeff_len, coeff_len, "{kind} coeff_len");
+            assert_eq!(p.ops, ops, "{kind} op mix");
+            assert_eq!(p.has_power, num_read == 2, "{kind} has_power");
+            assert_eq!(p.default_coeffs.len(), coeff_len, "{kind} default coeffs");
+        }
+    }
+
+    #[test]
+    fn register_is_idempotent_but_rejects_conflicts() {
+        let mk = |w: f32| {
+            StencilProgram::builder("prog-test-reg", 2)
+                .tap(&[0, 0], 0)
+                .tap(&[0, 1], 1)
+                .default_coeffs(vec![1.0 - w, w])
+                .build()
+                .unwrap()
+        };
+        let a = StencilRegistry::register(mk(0.25)).unwrap();
+        let b = StencilRegistry::register(mk(0.25)).unwrap();
+        assert_eq!(a, b);
+        assert!(!a.is_builtin());
+        let err = StencilRegistry::register(mk(0.5)).unwrap_err();
+        assert!(err.to_string().contains("already registered"), "{err}");
+        assert_eq!(StencilRegistry::lookup("prog-test-reg"), Some(a));
+    }
+
+    #[test]
+    fn builder_validates() {
+        // missing terms
+        assert!(StencilProgram::builder("x", 2).default_coeffs(vec![]).build().is_err());
+        // bad ndim
+        assert!(StencilProgram::builder("x", 4)
+            .tap(&[0, 0, 0, 0], 0)
+            .default_coeffs(vec![1.0])
+            .build()
+            .is_err());
+        // offset rank mismatch
+        assert!(StencilProgram::builder("x", 3)
+            .tap(&[0, 1], 0)
+            .default_coeffs(vec![1.0])
+            .build()
+            .is_err());
+        // a 2-D [dy, dx] offset moving in y is fine (it is not a z move)
+        assert!(StencilProgram::builder("x", 2)
+            .tap(&[1, 0], 0)
+            .default_coeffs(vec![1.0])
+            .build()
+            .is_ok_and(|p| p.radius == 1));
+        // coeff count mismatch
+        assert!(StencilProgram::builder("x", 2)
+            .tap(&[0, 1], 3)
+            .default_coeffs(vec![1.0])
+            .build()
+            .is_err());
+        // center-only program has radius 0
+        let err = StencilProgram::builder("x", 2)
+            .tap(&[0, 0], 0)
+            .default_coeffs(vec![1.0])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("non-center"), "{err}");
+    }
+
+    #[test]
+    fn json_round_trip_builtins() {
+        for kind in StencilKind::ALL_EXT {
+            let p = kind.def();
+            let j = p.to_json().to_string();
+            let q = StencilProgram::from_json(&Json::parse(&j).unwrap()).unwrap();
+            // The parsed twin carries no specialization hint; everything
+            // else — terms, post, coefficients, derived characteristics —
+            // must survive the round trip exactly.
+            assert_eq!(q, p.as_interpreted(p.name()), "{kind} JSON round trip");
+        }
+    }
+
+    #[test]
+    fn eval_cell_matches_builtin_expression() {
+        // Spot-check hotspot2d: eval_cell on a tiny synthetic neighborhood
+        // equals the hand expression with the same reads.
+        let p = StencilKind::Hotspot2D.def();
+        let k = p.default_coeffs;
+        let vals = |dz: isize, dy: isize, dx: isize| -> f32 {
+            1.0 + dz as f32 * 0.3 + dy as f32 * 0.7 + dx as f32 * 0.1
+        };
+        let power = 0.4f32;
+        let got = p.eval_cell(vals, power, k);
+        let (sdc, rx1, ry1, rz1, amb) = (k[0], k[1], k[2], k[3], k[4]);
+        let c = vals(0, 0, 0);
+        let want = c
+            + sdc
+                * (power
+                    + (vals(0, -1, 0) + vals(0, 1, 0) - 2.0 * c) * ry1
+                    + (vals(0, 0, 1) + vals(0, 0, -1) - 2.0 * c) * rx1
+                    + (amb - c) * rz1);
+        assert_eq!(got.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn as_interpreted_strips_specialization_only() {
+        let p = StencilKind::Diffusion2D.def();
+        let q = p.as_interpreted("diffusion2d@interp");
+        assert_eq!(q.specialized(), None);
+        assert_eq!(q.name(), "diffusion2d@interp");
+        assert_eq!(q.terms(), p.terms());
+        assert_eq!(q.ops, p.ops);
+    }
+
+    #[test]
+    fn load_file_accepts_object_and_array() {
+        let dir = std::env::temp_dir().join("fstencil_program_load");
+        std::fs::create_dir_all(&dir).unwrap();
+        let one = StencilProgram::builder("prog-test-file", 2)
+            .tap(&[0, 0], 0)
+            .tap(&[-1, 0], 1)
+            .default_coeffs(vec![0.5, 0.5])
+            .build()
+            .unwrap();
+        let path = dir.join("one.json");
+        std::fs::write(&path, one.to_json().to_string()).unwrap();
+        let ids = StencilRegistry::load_file(&path).unwrap();
+        assert_eq!(ids.len(), 1);
+        assert_eq!(ids[0].name(), "prog-test-file");
+        let arr = dir.join("arr.json");
+        std::fs::write(&arr, format!("[{}]", one.to_json())).unwrap();
+        assert_eq!(StencilRegistry::load_file(&arr).unwrap(), ids);
+        assert!(StencilRegistry::load_file(&dir.join("missing.json")).is_err());
+    }
+}

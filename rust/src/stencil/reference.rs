@@ -8,53 +8,64 @@
 //! clamped (branchy) path. `step_into` writes into a caller-provided
 //! buffer so iteration alternates two grids with zero allocation.
 
-use super::{Grid, StencilKind};
+use super::{interp, Grid, StencilId, StencilKind};
 
-/// One time-step of `kind` over the whole grid, clamp boundary, writing a
-/// fresh output grid (the paper's double-buffered iteration).
-pub fn step(kind: StencilKind, input: &Grid, power: Option<&Grid>, coeffs: &[f32]) -> Grid {
+/// One time-step of `stencil` over the whole grid, clamp boundary, writing
+/// a fresh output grid (the paper's double-buffered iteration). Accepts a
+/// [`StencilKind`] or any registered [`StencilId`]; programs without a
+/// specialized kernel run through the scalar generic interpreter (which is
+/// then *their* oracle).
+pub fn step(
+    stencil: impl Into<StencilId>,
+    input: &Grid,
+    power: Option<&Grid>,
+    coeffs: &[f32],
+) -> Grid {
     let mut out = input.clone();
-    step_into(kind, input, power, coeffs, &mut out);
+    step_into(stencil, input, power, coeffs, &mut out);
     out
 }
 
 /// One time-step into an existing output grid (same dims as `input`).
 pub fn step_into(
-    kind: StencilKind,
+    stencil: impl Into<StencilId>,
     input: &Grid,
     power: Option<&Grid>,
     coeffs: &[f32],
     out: &mut Grid,
 ) {
-    let def = kind.def();
-    assert_eq!(coeffs.len(), def.coeff_len, "coefficient count mismatch");
-    assert_eq!(input.ndim(), kind.ndim(), "grid dimensionality mismatch");
+    let prog = stencil.into().program();
+    assert_eq!(coeffs.len(), prog.coeff_len, "coefficient count mismatch");
+    assert_eq!(input.ndim(), prog.ndim(), "grid dimensionality mismatch");
     assert_eq!(out.dims(), input.dims(), "output grid dims mismatch");
-    if def.has_power {
-        let p = power.expect("hotspot stencils require a power grid");
+    if prog.has_power {
+        let p = power.expect("power-consuming stencils require a power grid");
         assert_eq!(p.dims(), input.dims(), "power grid dims mismatch");
     }
-    match kind {
-        StencilKind::Diffusion2D => diffusion2d(input, coeffs, out),
-        StencilKind::Diffusion3D => diffusion3d(input, coeffs, out),
-        StencilKind::Hotspot2D => hotspot2d(input, power.unwrap(), coeffs, out),
-        StencilKind::Hotspot3D => hotspot3d(input, power.unwrap(), coeffs, out),
-        StencilKind::Diffusion2DR2 => diffusion2d_r2(input, coeffs, out),
+    match prog.specialized() {
+        Some(StencilKind::Diffusion2D) => diffusion2d(input, coeffs, out),
+        Some(StencilKind::Diffusion3D) => diffusion3d(input, coeffs, out),
+        Some(StencilKind::Hotspot2D) => hotspot2d(input, power.unwrap(), coeffs, out),
+        Some(StencilKind::Hotspot3D) => hotspot3d(input, power.unwrap(), coeffs, out),
+        Some(StencilKind::Diffusion2DR2) => diffusion2d_r2(input, coeffs, out),
+        // Runtime-defined programs: the scalar (lane-1) tap interpreter.
+        None => interp::step_into_lanes::<1>(prog, input, power, coeffs, out),
     }
 }
 
 /// `iters` time-steps with buffer swapping (two grids total).
 pub fn run(
-    kind: StencilKind,
+    stencil: impl Into<StencilId>,
     input: &Grid,
     power: Option<&Grid>,
     coeffs: &[f32],
     iters: usize,
 ) -> Grid {
+    let stencil = stencil.into();
     let mut cur = input.clone();
     let mut next = input.clone();
     for _ in 0..iters {
-        step_into(kind, &cur, power, coeffs, &mut next);
+        step_into(stencil, &cur, power, coeffs, &mut next);
         std::mem::swap(&mut cur, &mut next);
     }
     cur
@@ -233,7 +244,7 @@ fn diffusion3d(g: &Grid, c: &[f32], out: &mut Grid) {
             }
         }
     }
-    boundary_shell_3d(nz, ny, nx, |z, y, x| {
+    boundary_shell_3d(nz, ny, nx, 1, |z, y, x| {
         out.set(z, y, x, clamped_cell_diffusion3d(g, c, z, y, x));
     });
 }
@@ -280,7 +291,7 @@ fn hotspot3d(g: &Grid, pw: &Grid, c: &[f32], out: &mut Grid) {
             }
         }
     }
-    boundary_shell_3d(nz, ny, nx, |z, y, x| {
+    boundary_shell_3d(nz, ny, nx, 1, |z, y, x| {
         out.set(z, y, x, clamped_cell_hotspot3d(g, pw, c, z, y, x));
     });
 }
@@ -310,10 +321,18 @@ pub(crate) fn clamped_cell_hotspot3d(
         + ca * amb
 }
 
-/// Visit every cell within 1 of a 3D grid face exactly once. Shared with
-/// the vectorized backend (`runtime::vec`).
-pub(crate) fn boundary_shell_3d(nz: usize, ny: usize, nx: usize, mut f: impl FnMut(usize, usize, usize)) {
-    if nz < 3 || ny < 3 || nx < 3 {
+/// Visit every cell within `rad` of a 3D grid face exactly once. Shared
+/// with the vectorized backend (`runtime::vec`) and the generic
+/// interpreter (`super::interp`).
+pub(crate) fn boundary_shell_3d(
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    rad: usize,
+    mut f: impl FnMut(usize, usize, usize),
+) {
+    if nz <= 2 * rad || ny <= 2 * rad || nx <= 2 * rad {
+        // grid too small for an interior: visit everything
         for z in 0..nz {
             for y in 0..ny {
                 for x in 0..nx {
@@ -324,24 +343,30 @@ pub(crate) fn boundary_shell_3d(nz: usize, ny: usize, nx: usize, mut f: impl FnM
         return;
     }
     // z faces
-    for y in 0..ny {
-        for x in 0..nx {
-            f(0, y, x);
-            f(nz - 1, y, x);
+    for z in 0..rad {
+        for y in 0..ny {
+            for x in 0..nx {
+                f(z, y, x);
+                f(nz - 1 - z, y, x);
+            }
         }
     }
     // y faces (excluding z faces)
-    for z in 1..nz - 1 {
-        for x in 0..nx {
-            f(z, 0, x);
-            f(z, ny - 1, x);
+    for z in rad..nz - rad {
+        for y in 0..rad {
+            for x in 0..nx {
+                f(z, y, x);
+                f(z, ny - 1 - y, x);
+            }
         }
     }
     // x faces (excluding z & y faces)
-    for z in 1..nz - 1 {
-        for y in 1..ny - 1 {
-            f(z, y, 0);
-            f(z, y, nx - 1);
+    for z in rad..nz - rad {
+        for y in rad..ny - rad {
+            for x in 0..rad {
+                f(z, y, x);
+                f(z, y, nx - 1 - x);
+            }
         }
     }
 }

@@ -379,8 +379,8 @@ impl fstencil::runtime::Executor for FlakyExecutor {
         self.inner.run_tile(spec, tile, power, coeffs)
     }
 
-    fn variants(&self, kind: StencilKind) -> Vec<fstencil::runtime::TileSpec> {
-        self.inner.variants(kind)
+    fn variants(&self, stencil: fstencil::stencil::StencilId) -> Vec<fstencil::runtime::TileSpec> {
+        self.inner.variants(stencil)
     }
 
     fn backend_name(&self) -> &'static str {

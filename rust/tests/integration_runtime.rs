@@ -96,7 +96,7 @@ fn pjrt_and_host_agree_tile_by_tile() {
         if !pjrt.supports(&spec) {
             continue;
         }
-        let def = spec.kind.def();
+        let def = spec.program();
         let n = spec.cells();
         let tile: Vec<f32> = (0..n).map(|i| (i % 97) as f32 / 97.0).collect();
         let power: Option<Vec<f32>> =
