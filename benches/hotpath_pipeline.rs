@@ -12,7 +12,7 @@
 use fstencil::bench_support::{smoke, BenchReport, Bencher};
 use fstencil::blocking::geometry::BlockGeometry;
 use fstencil::coordinator::{Coordinator, FusedPipeline, PlanBuilder};
-use fstencil::engine::{Backend, StencilEngine};
+use fstencil::engine::{Backend, StencilEngine, Workload};
 use fstencil::model::PerfModel;
 use fstencil::runtime::{
     extract_tile, writeback_tile, Executor, HostExecutor, PjrtExecutor, StreamExecutor,
@@ -405,6 +405,126 @@ fn main() {
     );
     rep.push(warm);
     rep.push(cold);
+
+    // --- multi-tenant server ablation: three mixed clients (different
+    //     stencils × backends) share ONE EngineServer pool, vs the same
+    //     workloads through dedicated single-tenant sessions at EQUAL
+    //     total worker count (run back-to-back). Acceptance: aggregate
+    //     multi-tenant throughput >= 0.9x the dedicated aggregate —
+    //     scheduling fairness may not cost more than ~10%. -----------
+    let mdim = if sm { 96usize } else { 256 };
+    let mjobs = if sm { 2usize } else { 6 };
+    let mworkers = 4usize;
+    let mk_mt_plans = || {
+        vec![
+            PlanBuilder::new(StencilKind::Diffusion2D)
+                .grid_dims(vec![mdim, mdim])
+                .iterations(8)
+                .backend(Backend::Vec { par_vec: 8 })
+                .build()
+                .unwrap(),
+            PlanBuilder::new(StencilKind::Hotspot2D)
+                .grid_dims(vec![mdim, mdim])
+                .iterations(8)
+                .backend(Backend::Stream { par_vec: 4 })
+                .build()
+                .unwrap(),
+            PlanBuilder::new(StencilKind::Diffusion2D)
+                .grid_dims(vec![mdim / 2, mdim / 2])
+                .iterations(8)
+                .backend(Backend::Vec { par_vec: 4 })
+                .build()
+                .unwrap(),
+        ]
+    };
+    let mt_plans = mk_mt_plans();
+    // Pre-build each client's inputs once; the closures clone per run.
+    let mt_inputs: Vec<Vec<(Grid, Option<Grid>)>> = mt_plans
+        .iter()
+        .enumerate()
+        .map(|(i, plan)| {
+            (0..mjobs)
+                .map(|j| {
+                    let mut g = Grid::new2d(plan.grid_dims[0], plan.grid_dims[1]);
+                    g.fill_random((i * 100 + j) as u64, 0.0, 1.0);
+                    let power = plan.stencil.def().has_power.then(|| {
+                        let mut p = g.clone();
+                        p.fill_random((i * 100 + j + 50) as u64, 0.0, 0.25);
+                        p
+                    });
+                    (g, power)
+                })
+                .collect()
+        })
+        .collect();
+    let mt_updates: f64 = mt_plans
+        .iter()
+        .map(|p| (p.grid_dims.iter().product::<usize>() * 8 * mjobs) as f64)
+        .sum();
+    let multi = b.bench_with_metric(
+        &format!("server_multitenant_3c_x{mjobs}jobs_w{mworkers}"),
+        "Mcell-updates/s",
+        mt_updates / 1e6,
+        || {
+            let server = engine.serve(mworkers);
+            let mut threads = Vec::new();
+            for (plan, inputs) in mk_mt_plans().into_iter().zip(&mt_inputs) {
+                let client = server.open(plan).expect("tenant opens");
+                let inputs = inputs.clone();
+                threads.push(std::thread::spawn(move || {
+                    let handles: Vec<_> = inputs
+                        .into_iter()
+                        .map(|(g, power)| {
+                            let mut w = Workload::new(g);
+                            if let Some(p) = power {
+                                w = w.power(p);
+                            }
+                            client.submit(w).expect("submission accepted")
+                        })
+                        .collect();
+                    for h in handles {
+                        std::hint::black_box(h.wait().expect("job succeeds"));
+                    }
+                }));
+            }
+            for t in threads {
+                t.join().expect("client thread");
+            }
+        },
+    );
+    let dedicated = b.bench_with_metric(
+        &format!("dedicated_sessions_3c_x{mjobs}jobs_w{mworkers}"),
+        "Mcell-updates/s",
+        mt_updates / 1e6,
+        || {
+            for (plan, inputs) in mk_mt_plans().into_iter().zip(&mt_inputs) {
+                let mut session = engine
+                    .session_with_workers(plan, mworkers)
+                    .expect("session opens");
+                for (g, power) in inputs.iter() {
+                    let mut w = Workload::new(g.clone());
+                    if let Some(p) = power {
+                        w = w.power(p.clone());
+                    }
+                    std::hint::black_box(session.submit(w).wait().expect("job succeeds"));
+                }
+            }
+        },
+    );
+    let mt_ratio = rep.ablation(
+        "server_multitenant_vs_dedicated",
+        dedicated.summary.mean,
+        multi.summary.mean,
+        "acceptance: >= 0.9x aggregate of dedicated single-session runs at \
+         equal worker count",
+    );
+    rep.payload(format!(
+        "server_multitenant ablation: shared-pool aggregate is {mt_ratio:.2}x the \
+         dedicated-session aggregate ({})",
+        if mt_ratio >= 0.9 { "PASS" } else { "FAIL: scheduler overhead too high" }
+    ));
+    rep.push(multi);
+    rep.push(dedicated);
 
     // Smoke runs are correctness checks, not measurements — never let
     // them overwrite the persisted perf trajectory.

@@ -29,6 +29,13 @@ pub enum EngineError {
     PowerMismatch { expected: bool, got: bool },
     /// A tile program failed while executing (executor-reported).
     Execution(String),
+    /// The job was cancelled via [`crate::engine::JobHandle::cancel`]
+    /// before it completed.
+    Cancelled,
+    /// The server is shutting down (or already shut down): the submission
+    /// was rejected, or an unfinished job was abandoned after its
+    /// in-flight tiles drained.
+    Shutdown,
     /// The session's worker pool disappeared mid-submission (a worker
     /// thread exited or a channel closed unexpectedly).
     WorkerLost,
@@ -55,6 +62,8 @@ impl fmt::Display for EngineError {
                 _ => f.write_str("power grid dims do not match the plan"),
             },
             EngineError::Execution(msg) => write!(f, "tile execution failed: {msg}"),
+            EngineError::Cancelled => f.write_str("job cancelled"),
+            EngineError::Shutdown => f.write_str("engine server is shut down"),
             EngineError::WorkerLost => f.write_str("session worker pool exited early"),
         }
     }

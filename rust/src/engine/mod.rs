@@ -4,17 +4,24 @@
 //! FPGA is configured with a (`par_vec`, `par_time`) design and then fed
 //! a stream of kernel invocations whose coefficients and grids are
 //! runtime arguments (§3.2). This module is the host-side reproduction
-//! of that contract:
+//! of that contract — and, since the multi-tenant server landed, of the
+//! ROADMAP's serving ambition (one shared device, many concurrent
+//! tenants):
 //!
 //! * [`Backend`] — the typed, single point of executor selection
-//!   (scalar oracle / vectorized lanes / streaming shift-register),
-//!   replacing the old implicit `stream: bool` + `par_vec > 1` pair.
+//!   (scalar oracle / vectorized lanes / streaming shift-register).
 //! * [`StencilEngine`] — the facade. [`StencilEngine::session`] turns a
-//!   [`Plan`] into a warm [`Session`]; [`StencilEngine::run`] is the
-//!   one-shot convenience.
-//! * [`Session`] — persistent worker threads, recirculating tile-buffer
-//!   pools and a role-alternating grid pair, reused by every
-//!   [`Session::submit`] so batched workloads amortize setup.
+//!   [`Plan`] into a warm single-tenant [`Session`];
+//!   [`StencilEngine::serve`] starts a multi-tenant [`EngineServer`];
+//!   [`StencilEngine::run`] is the one-shot convenience.
+//! * [`EngineServer`] — ONE shared worker pool multiplexing many
+//!   concurrent [`ClientSession`]s (any stencil × any backend mix) under
+//!   deficit-round-robin tile scheduling, with bounded per-client queues
+//!   (backpressure on submit), job cancellation and graceful shutdown.
+//! * [`Session`] — the single-tenant facade over a private one-tenant
+//!   server: same code path, warm worker threads, recirculating
+//!   tile-buffer pool and grid double-buffer reused by every
+//!   [`Session::submit`].
 //! * [`EngineError`] — typed errors at the public boundary.
 //!
 //! ```no_run
@@ -34,21 +41,59 @@
 //! }
 //! # Ok::<(), anyhow::Error>(())
 //! ```
+//!
+//! Multi-tenant serving (several plans, one pool):
+//!
+//! ```no_run
+//! use fstencil::prelude::*;
+//!
+//! let server = StencilEngine::new().serve(8); // 8 shared workers
+//! let diffusion = server.open(
+//!     PlanBuilder::new(StencilKind::Diffusion2D)
+//!         .grid_dims(vec![512, 512])
+//!         .iterations(16)
+//!         .backend(Backend::Vec { par_vec: 8 })
+//!         .build()?,
+//! )?;
+//! let hotspot = server.open(
+//!     PlanBuilder::new(StencilKind::Hotspot2D)
+//!         .grid_dims(vec![256, 256])
+//!         .iterations(8)
+//!         .build()?,
+//! )?;
+//! let mut g = Grid::new2d(512, 512);
+//! g.fill_random(1, 0.0, 1.0);
+//! let job = diffusion.submit(g)?; // async; DRR-fair against hotspot's jobs
+//! let mut h = Grid::new2d(256, 256);
+//! h.fill_random(2, 0.0, 1.0);
+//! let mut p = Grid::new2d(256, 256);
+//! p.fill_random(3, 0.0, 0.25);
+//! let job2 = hotspot.submit(Workload::new(h).power(p))?;
+//! let (a, b) = (job.wait()?, job2.wait()?);
+//! println!("{} + {} tiles through one pool", a.report.tiles_executed, b.report.tiles_executed);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 mod backend;
 mod error;
+mod scheduler;
+mod server;
 mod session;
 
 pub use backend::Backend;
 pub use error::EngineError;
-pub use session::{JobHandle, JobOutput, Session, Workload};
+pub use scheduler::DeficitRoundRobin;
+pub use server::{
+    ClientSession, ClientStats, EngineServer, JobHandle, JobOutput, Workload,
+    DEFAULT_QUEUE_DEPTH,
+};
+pub use session::Session;
 
 use crate::coordinator::{ExecReport, Plan};
 use crate::stencil::Grid;
 
-/// The engine facade. Stateless today (sessions own all warm state);
-/// exists so serving-layer concerns — session routing, admission
-/// control, sharding — have one place to land.
+/// The engine facade: one place where sessions, servers and one-shot runs
+/// are opened.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StencilEngine;
 
@@ -57,8 +102,8 @@ impl StencilEngine {
         StencilEngine
     }
 
-    /// Open a warm [`Session`] for `plan`: spawns the worker pool once;
-    /// every subsequent [`Session::submit`] reuses it.
+    /// Open a warm single-tenant [`Session`] for `plan`: spawns its
+    /// worker pool once; every subsequent [`Session::submit`] reuses it.
     pub fn session(&self, plan: Plan) -> Result<Session, EngineError> {
         Session::spawn(plan, None)
     }
@@ -71,6 +116,12 @@ impl StencilEngine {
         workers: usize,
     ) -> Result<Session, EngineError> {
         Session::spawn(plan, Some(workers.max(1)))
+    }
+
+    /// Start a multi-tenant [`EngineServer`] with `workers` shared
+    /// compute threads; open tenants with [`EngineServer::open`].
+    pub fn serve(&self, workers: usize) -> EngineServer {
+        EngineServer::start(workers)
     }
 
     /// One-shot convenience: open a session, run `grid` through it

@@ -1,0 +1,333 @@
+//! Deficit-round-robin tile scheduling for the multi-tenant server.
+//!
+//! The paper keeps one deeply pipelined PE chain busy by streaming an
+//! unbounded sequence of blocks through it (§3.2, Fig. 2); which block
+//! flows next is a pure scheduling decision. [`DeficitRoundRobin`] is that
+//! decision for the host [`super::EngineServer`]: clients take turns, each
+//! turn banks a `quantum` of *cell-update credit*, and a client may
+//! dispatch tiles only while its credit covers the tile's cost
+//! (`tile cells × fused steps`). Because credit accrues per rotation, a
+//! client with huge 3-D tiles and a client with tiny 2-D tiles are served
+//! the same cell-update rate — the big job bursts rarely, the small job
+//! often, and neither starves.
+//!
+//! The structure is deliberately free of threads and clocks so its
+//! fairness properties are unit-testable: the server calls
+//! [`DeficitRoundRobin::next`] with a `head_cost` probe and performs the
+//! actual dispatch itself.
+
+use std::collections::VecDeque;
+
+/// Per-client scheduling account.
+#[derive(Debug, Clone, Copy, Default)]
+struct Slot {
+    /// Banked credit, in cost units (cell updates).
+    deficit: u64,
+    /// Whether the client currently sits in the service ring.
+    queued: bool,
+    /// Total cost charged to this client (fairness counter).
+    served: u64,
+    /// Times the client's credit was replenished (full rotations seen
+    /// while it had work it could not yet afford).
+    rounds: u64,
+}
+
+/// Deficit round robin over a set of registered clients.
+///
+/// `quantum` is the credit granted per rotation. It self-raises to the
+/// largest tile cost ever observed (the classic DRR requirement
+/// `quantum >= max packet size`), which bounds service latency to at most
+/// two full rotations per tile regardless of cost mix.
+#[derive(Debug)]
+pub struct DeficitRoundRobin {
+    quantum: u64,
+    slots: Vec<Option<Slot>>,
+    ring: VecDeque<usize>,
+}
+
+impl DeficitRoundRobin {
+    pub fn new(quantum: u64) -> DeficitRoundRobin {
+        DeficitRoundRobin { quantum: quantum.max(1), slots: Vec::new(), ring: VecDeque::new() }
+    }
+
+    /// Register a client, returning its scheduler id. Freed ids are
+    /// reused, so long-lived servers don't grow without bound.
+    pub fn register(&mut self) -> usize {
+        if let Some(i) = self.slots.iter().position(Option::is_none) {
+            self.slots[i] = Some(Slot::default());
+            return i;
+        }
+        self.slots.push(Some(Slot::default()));
+        self.slots.len() - 1
+    }
+
+    /// Remove a client. Its ring entry (if any) is removed eagerly:
+    /// freed ids are reused by [`DeficitRoundRobin::register`], and a
+    /// stale ring entry would alias the new client — duplicating its
+    /// service turns and breaking the fairness bound.
+    pub fn deregister(&mut self, id: usize) {
+        if let Some(slot) = self.slots.get_mut(id) {
+            *slot = None;
+        }
+        self.ring.retain(|&x| x != id);
+    }
+
+    /// Number of currently registered clients.
+    pub fn clients(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Mark a client runnable (it has at least one dispatchable tile).
+    /// Idempotent; unknown ids are ignored.
+    pub fn enqueue(&mut self, id: usize) {
+        if let Some(Some(slot)) = self.slots.get_mut(id) {
+            if !slot.queued {
+                slot.queued = true;
+                self.ring.push_back(id);
+            }
+        }
+    }
+
+    /// Total cost charged to `id` so far (0 for unknown ids).
+    pub fn served(&self, id: usize) -> u64 {
+        self.slots.get(id).and_then(|s| s.as_ref()).map_or(0, |s| s.served)
+    }
+
+    /// Credit-replenishment count for `id` (0 for unknown ids).
+    pub fn rounds(&self, id: usize) -> u64 {
+        self.slots.get(id).and_then(|s| s.as_ref()).map_or(0, |s| s.rounds)
+    }
+
+    /// Pick the client whose head tile should be dispatched next and
+    /// charge it. `head_cost(id)` returns the cost of the client's next
+    /// dispatchable tile, or `None` when it has nothing to dispatch right
+    /// now (chunk barrier, empty queue, cancelled) — such clients leave
+    /// the ring and forfeit their banked credit (standard DRR: idle flows
+    /// don't hoard). Returns `None` when no client has dispatchable work.
+    pub fn next(&mut self, mut head_cost: impl FnMut(usize) -> Option<u64>) -> Option<usize> {
+        loop {
+            let id = *self.ring.front()?;
+            let Some(Some(slot)) = self.slots.get_mut(id) else {
+                // deregistered while queued: lazy removal
+                self.ring.pop_front();
+                continue;
+            };
+            match head_cost(id) {
+                None => {
+                    slot.queued = false;
+                    slot.deficit = 0;
+                    self.ring.pop_front();
+                }
+                Some(cost) => {
+                    // DRR soundness: quantum must cover the largest tile,
+                    // or a big-tile client could rotate forever.
+                    if cost > self.quantum {
+                        self.quantum = cost;
+                    }
+                    if slot.deficit >= cost {
+                        slot.deficit -= cost;
+                        slot.served += cost;
+                        return Some(id);
+                    }
+                    slot.deficit += self.quantum;
+                    slot.rounds += 1;
+                    self.ring.rotate_left(1);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the scheduler over fixed per-client work lists; returns the
+    /// dispatch order. `work[id]` is (tile_cost, tiles_remaining).
+    fn drain(drr: &mut DeficitRoundRobin, work: &mut [(u64, usize)]) -> Vec<usize> {
+        for id in 0..work.len() {
+            if work[id].1 > 0 {
+                drr.enqueue(id);
+            }
+        }
+        let mut order = Vec::new();
+        while let Some(id) =
+            drr.next(|id| if work[id].1 > 0 { Some(work[id].0) } else { None })
+        {
+            work[id].1 -= 1;
+            order.push(id);
+        }
+        order
+    }
+
+    #[test]
+    fn equal_cost_clients_interleave() {
+        let mut drr = DeficitRoundRobin::new(1);
+        let a = drr.register();
+        let b = drr.register();
+        let mut work = [(1u64, 10usize), (1, 10)];
+        let order = drain(&mut drr, &mut work);
+        assert_eq!(order.len(), 20);
+        // Neither client ever runs more than quantum/cost = 1 tile ahead:
+        // the order strictly alternates after the first service.
+        for w in order.windows(2) {
+            assert_ne!(w[0], w[1], "equal-cost clients must alternate: {order:?}");
+        }
+        assert_eq!(drr.served(a), 10);
+        assert_eq!(drr.served(b), 10);
+    }
+
+    #[test]
+    fn big_tiles_do_not_starve_small_ones() {
+        // Client 0 has tiles 16x the cost of client 1's. Served cost must
+        // stay within one quantum of each other while both are backlogged.
+        let mut drr = DeficitRoundRobin::new(1);
+        let big = drr.register();
+        let small = drr.register();
+        let mut work = [(16u64, 50usize), (1, 800)];
+        let mut max_gap = 0i64;
+        for id in 0..2 {
+            if work[id].1 > 0 {
+                drr.enqueue(id);
+            }
+        }
+        let mut dispatched = 0;
+        while let Some(id) =
+            drr.next(|id| if work[id].1 > 0 { Some(work[id].0) } else { None })
+        {
+            work[id].1 -= 1;
+            dispatched += 1;
+            if work[0].1 > 0 && work[1].1 > 0 {
+                let gap = drr.served(big) as i64 - drr.served(small) as i64;
+                max_gap = max_gap.max(gap.abs());
+            }
+        }
+        assert_eq!(dispatched, 850);
+        assert_eq!(drr.served(big), 16 * 50);
+        assert_eq!(drr.served(small), 800);
+        // quantum self-raises to 16 (the largest tile)
+        assert!(max_gap <= 16, "served-cost gap {max_gap} exceeds one quantum");
+        assert!(drr.rounds(small) > 0);
+    }
+
+    #[test]
+    fn three_way_fair_share_of_served_cost() {
+        let mut drr = DeficitRoundRobin::new(4);
+        for _ in 0..3 {
+            drr.register();
+        }
+        let mut work = [(3u64, 400usize), (7, 400), (5, 400)];
+        // stop while all are still backlogged, then compare service.
+        for id in 0..3 {
+            drr.enqueue(id);
+        }
+        for _ in 0..300 {
+            let id = drr
+                .next(|id| if work[id].1 > 0 { Some(work[id].0) } else { None })
+                .expect("all clients backlogged");
+            work[id].1 -= 1;
+        }
+        let served: Vec<u64> = (0..3).map(|id| drr.served(id)).collect();
+        let (lo, hi) = (served.iter().min().unwrap(), served.iter().max().unwrap());
+        // classic DRR bound: within quantum + max_cost (two quanta after
+        // the auto-raise to 7) of each other
+        assert!(hi - lo <= 7 + 7, "unfair service: {served:?}");
+    }
+
+    #[test]
+    fn idle_clients_leave_the_ring_and_forfeit_credit() {
+        let mut drr = DeficitRoundRobin::new(2);
+        let a = drr.register();
+        let b = drr.register();
+        drr.enqueue(a);
+        drr.enqueue(b);
+        // b never has work: the first pass removes it.
+        let mut a_left = 3usize;
+        while let Some(id) = drr.next(|id| {
+            if id == a && a_left > 0 {
+                Some(1)
+            } else {
+                None
+            }
+        }) {
+            assert_eq!(id, a);
+            a_left -= 1;
+        }
+        assert_eq!(a_left, 0);
+        assert_eq!(drr.served(b), 0);
+        // re-enqueue works after going idle (head_cost is a pure probe —
+        // it may be called several times per pick)
+        drr.enqueue(a);
+        let mut left = 1usize;
+        let got = drr.next(|id| if id == a && left > 0 { Some(1) } else { None });
+        assert_eq!(got, Some(a));
+        left -= 1;
+        assert_eq!(drr.next(|id| if id == a && left > 0 { Some(1) } else { None }), None);
+    }
+
+    /// Regression: deregistering a client that is still QUEUED in the
+    /// ring must not leave a stale entry behind — `register` reuses freed
+    /// ids, and an aliased entry would grant the new client duplicate
+    /// service turns (double fair share).
+    #[test]
+    fn deregister_while_queued_does_not_alias_reused_id() {
+        let mut drr = DeficitRoundRobin::new(1);
+        let a = drr.register();
+        let b = drr.register();
+        drr.enqueue(a);
+        drr.enqueue(b);
+        // a leaves while still queued; its id is immediately reused.
+        drr.deregister(a);
+        let c = drr.register();
+        assert_eq!(c, a, "freed id is reused");
+        drr.enqueue(c);
+        // Serve equal-cost work: b and c must alternate strictly — a
+        // duplicated ring entry for c would let it serve twice per round.
+        let mut work = [(1u64, 6usize), (1, 6)]; // [c, b] by id
+        let mut order = Vec::new();
+        while let Some(id) =
+            drr.next(|id| if work[id].1 > 0 { Some(work[id].0) } else { None })
+        {
+            work[id].1 -= 1;
+            order.push(id);
+        }
+        assert_eq!(order.len(), 12);
+        for w in order.windows(2) {
+            assert_ne!(w[0], w[1], "aliased ring entry broke alternation: {order:?}");
+        }
+        assert_eq!(drr.served(c), 6);
+        assert_eq!(drr.served(b), 6);
+    }
+
+    #[test]
+    fn deregistered_clients_are_skipped() {
+        let mut drr = DeficitRoundRobin::new(1);
+        let a = drr.register();
+        let b = drr.register();
+        drr.enqueue(a);
+        drr.enqueue(b);
+        drr.deregister(a);
+        assert_eq!(drr.clients(), 1);
+        let mut b_left = 2usize;
+        while let Some(id) =
+            drr.next(|id| if id == b && b_left > 0 { Some(1) } else { None })
+        {
+            assert_eq!(id, b);
+            b_left -= 1;
+        }
+        assert_eq!(b_left, 0);
+        // freed slot is reused
+        assert_eq!(drr.register(), a);
+    }
+
+    #[test]
+    fn empty_scheduler_returns_none() {
+        let mut drr = DeficitRoundRobin::new(8);
+        assert_eq!(drr.next(|_| Some(1)), None);
+        let id = drr.register();
+        // registered but never enqueued: still nothing to schedule
+        assert_eq!(drr.next(|_| Some(1)), None);
+        drr.enqueue(id);
+        assert_eq!(drr.next(|_| None), None);
+    }
+}

@@ -1,0 +1,1314 @@
+//! The multi-tenant engine server: many clients, one shared worker pool.
+//!
+//! The paper's accelerator keeps a single deeply pipelined PE chain busy
+//! by streaming an unbounded sequence of blocks through it (§3.2, Fig. 2);
+//! *whose* blocks flow next is purely a host-side scheduling decision. An
+//! [`EngineServer`] is that device shared between tenants: one pool of
+//! persistent compute workers and one recirculating tile-buffer pool serve
+//! any number of concurrent [`ClientSession`]s, each opened from its own
+//! [`Plan`] (any stencil × any backend). Clients enqueue [`Workload`]s
+//! into bounded per-client queues — [`ClientSession::submit`] blocks when
+//! the queue is full (backpressure) — and a deficit-round-robin scheduler
+//! ([`super::DeficitRoundRobin`]) drains them at *tile-chunk* granularity,
+//! so a huge 3-D job cannot starve small 2-D jobs.
+//!
+//! ## Structure
+//!
+//! * one **scheduler thread** owns all cross-client state behind a single
+//!   event loop (submissions, tile completions, cancellations, shutdown);
+//!   it stages jobs into each client's persistent grid double-buffer,
+//!   dispatches tiles picked by DRR, performs write-backs and advances
+//!   chunk barriers;
+//! * `workers` **compute threads** block on one shared task queue, extract
+//!   their tiles from the owning client's read buffer, run the client's
+//!   executor, and send results back as events;
+//! * tile buffers recirculate through one shared pool whose high-water
+//!   mark is bounded by the dispatch window ([`EngineServer::tile_pool_capacity`]),
+//!   so [`EngineServer::fresh_tile_allocs`] plateaus once the pool is
+//!   warm, however many clients and jobs run.
+//!
+//! Lock order is strictly `state → (specs | bufs | pool)`; workers never
+//! take the state lock, so the compute path cannot deadlock against the
+//! scheduler. Shutdown is graceful: dispatching stops, in-flight tiles
+//! drain, every unfinished job completes with [`EngineError::Shutdown`],
+//! and all threads are joined.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::blocking::geometry::{Block, BlockGeometry};
+use crate::coordinator::{ExecReport, Plan, StageTimes};
+use crate::runtime::{extract_tile, writeback_tile, Executor, TileSpec};
+use crate::stencil::Grid;
+
+use super::scheduler::DeficitRoundRobin;
+use super::{Backend, EngineError};
+
+/// Default bound on each client's submission queue; `submit` blocks
+/// (backpressure) once this many jobs are waiting.
+pub const DEFAULT_QUEUE_DEPTH: usize = 4;
+
+/// One unit of work for a session or server client: a grid, its optional
+/// power input, and an optional iteration-count override (the plan's
+/// count when `None`). `Grid` converts into a `Workload` directly, so
+/// `client.submit(grid)` works for the common case.
+#[derive(Debug)]
+pub struct Workload {
+    grid: Grid,
+    power: Option<Grid>,
+    iterations: Option<usize>,
+}
+
+impl Workload {
+    pub fn new(grid: Grid) -> Workload {
+        Workload { grid, power: None, iterations: None }
+    }
+
+    /// Attach a power grid (required for hotspot stencils).
+    pub fn power(mut self, power: Grid) -> Workload {
+        self.power = Some(power);
+        self
+    }
+
+    /// Override the plan's iteration count for this job only. The server
+    /// reschedules chunks with the plan's step-size set and reuses cached
+    /// tile geometry per distinct chunk depth.
+    pub fn iterations(mut self, iterations: usize) -> Workload {
+        self.iterations = Some(iterations);
+        self
+    }
+}
+
+impl From<Grid> for Workload {
+    fn from(grid: Grid) -> Workload {
+        Workload::new(grid)
+    }
+}
+
+/// A completed job: the updated grid and its execution report.
+#[derive(Debug)]
+pub struct JobOutput {
+    pub grid: Grid,
+    pub report: ExecReport,
+}
+
+/// Per-client service counters, snapshotted by [`ClientSession::stats`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClientStats {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_cancelled: u64,
+    pub jobs_failed: u64,
+    /// Tiles computed and written back for this client.
+    pub tiles_executed: u64,
+    /// Useful cell updates completed for this client.
+    pub cell_updates: u64,
+    /// Longest submit→first-tile-dispatch wait any of this client's jobs
+    /// experienced — the fairness observable the stress tests bound.
+    pub max_queue_wait: Duration,
+    /// Cell-update cost the scheduler charged this client (DRR account).
+    pub sched_served: u64,
+    /// DRR credit-replenishment rounds this client waited through.
+    pub sched_rounds: u64,
+}
+
+// ------------------------------------------------------------------ job
+
+/// Result slot + bookkeeping for one submitted job. Shared between the
+/// handle, the scheduler and the workers.
+struct JobInner {
+    id: u64,
+    client: usize,
+    iterations: usize,
+    /// Spec-cache index per chunk (chunk `ci` reads `bufs[ci % 2]`).
+    schedule: Vec<usize>,
+    submitted_at: Instant,
+    cancelled: AtomicBool,
+    /// Input grid; becomes the output container at completion.
+    grid: Mutex<Option<Grid>>,
+    /// Power grid staged into the client slot at activation.
+    power: Mutex<Option<Grid>>,
+    done: Mutex<Option<Result<JobOutput, EngineError>>>,
+    done_cv: Condvar,
+    extract_ns: AtomicU64,
+    compute_ns: AtomicU64,
+}
+
+impl JobInner {
+    fn complete(&self, result: Result<JobOutput, EngineError>) {
+        let mut done = self.done.lock().expect("job slot poisoned");
+        if done.is_none() {
+            *done = Some(result);
+        }
+        self.done_cv.notify_all();
+    }
+}
+
+/// Handle to a job submitted to an [`EngineServer`] (or, via the
+/// [`super::Session`] facade, to a warm session). `wait` blocks until the
+/// scheduler completes the job; `cancel` asks the server to abandon it —
+/// already-dispatched tiles drain, everything else is skipped, and `wait`
+/// returns [`EngineError::Cancelled`].
+pub struct JobHandle {
+    job: Arc<JobInner>,
+    events: Option<Sender<Event>>,
+}
+
+impl std::fmt::Debug for JobHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobHandle")
+            .field("id", &self.job.id)
+            .field("done", &self.is_done())
+            .finish()
+    }
+}
+
+impl JobHandle {
+    /// Server-wide monotonically increasing job id.
+    pub fn id(&self) -> u64 {
+        self.job.id
+    }
+
+    /// Ask the server to abandon this job. Idempotent; completion races
+    /// are benign (a job that finishes first simply stays finished).
+    pub fn cancel(&self) {
+        self.job.cancelled.store(true, Ordering::SeqCst);
+        if let Some(tx) = &self.events {
+            let _ = tx.send(Event::Cancel { client: self.job.client, job_id: self.job.id });
+        }
+    }
+
+    /// Whether the job has completed (successfully or not).
+    pub fn is_done(&self) -> bool {
+        self.job.done.lock().expect("job slot poisoned").is_some()
+    }
+
+    /// Whether the job has completed successfully. Non-blocking: an
+    /// in-flight job reports `false`. (Through the [`super::Session`]
+    /// facade submissions complete before the handle is returned, so this
+    /// is decisive there.)
+    pub fn is_ok(&self) -> bool {
+        matches!(&*self.job.done.lock().expect("job slot poisoned"), Some(Ok(_)))
+    }
+
+    /// The completed job's report, if it has finished successfully.
+    pub fn report(&self) -> Option<ExecReport> {
+        match &*self.job.done.lock().expect("job slot poisoned") {
+            Some(Ok(out)) => Some(out.report.clone()),
+            _ => None,
+        }
+    }
+
+    /// Block until the job completes; `true` when it did within `timeout`.
+    /// The bounded-wait primitive the stress tests use to turn a deadlock
+    /// into a failure instead of a hang.
+    pub fn wait_timeout(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut done = self.job.done.lock().expect("job slot poisoned");
+        while done.is_none() {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return false;
+            }
+            let (guard, _) = self
+                .job
+                .done_cv
+                .wait_timeout(done, left)
+                .expect("job slot poisoned");
+            done = guard;
+        }
+        true
+    }
+
+    /// Block until the job completes without consuming the handle.
+    pub(crate) fn wait_done(&self) {
+        let mut done = self.job.done.lock().expect("job slot poisoned");
+        while done.is_none() {
+            done = self.job.done_cv.wait(done).expect("job slot poisoned");
+        }
+    }
+
+    /// Consume the handle, yielding the output grid and report (blocks
+    /// until the job completes).
+    pub fn wait(self) -> Result<JobOutput, EngineError> {
+        self.wait_done();
+        self.job
+            .done
+            .lock()
+            .expect("job slot poisoned")
+            .take()
+            .expect("wait_done guarantees completion")
+    }
+
+    /// A handle that was born failed (validation error at submit time) —
+    /// used by the [`super::Session`] facade, which never returns errors
+    /// from `submit` itself.
+    pub(crate) fn failed(err: EngineError) -> JobHandle {
+        let job = Arc::new(JobInner {
+            id: u64::MAX,
+            client: usize::MAX,
+            iterations: 0,
+            schedule: Vec::new(),
+            submitted_at: Instant::now(),
+            cancelled: AtomicBool::new(false),
+            grid: Mutex::new(None),
+            power: Mutex::new(None),
+            done: Mutex::new(Some(Err(err))),
+            done_cv: Condvar::new(),
+            extract_ns: AtomicU64::new(0),
+            compute_ns: AtomicU64::new(0),
+        });
+        JobHandle { job, events: None }
+    }
+}
+
+// ------------------------------------------------------------ client state
+
+/// Warm per-client execution state, shared with the workers: the plan,
+/// its executor, the geometry cache and the persistent grid double
+/// buffer. This is exactly the state a single-tenant `Session` used to
+/// own — the server holds one per client.
+struct ClientShared {
+    plan: Plan,
+    exec: Box<dyn Executor + Send + Sync>,
+    /// One `(spec, blocks)` per distinct chunk depth seen so far; grows
+    /// when a submission's iteration override needs a new depth.
+    specs: RwLock<Vec<(TileSpec, Vec<Block>)>>,
+    /// The role-alternating grid pair: chunk `ci` reads `bufs[ci % 2]`
+    /// and writes `bufs[(ci + 1) % 2]`. Allocated once per client.
+    bufs: [RwLock<Grid>; 2],
+    /// Power grid staged per active job (moved in, not copied).
+    power: RwLock<Option<Grid>>,
+}
+
+impl ClientShared {
+    /// Index of the cached `(spec, blocks)` entry for a chunk of `steps`,
+    /// building (and support-checking) it on first use.
+    fn ensure_spec(&self, steps: usize) -> Result<usize, EngineError> {
+        if let Some(i) = self
+            .specs
+            .read()
+            .expect("spec cache poisoned")
+            .iter()
+            .position(|(sp, _)| sp.steps == steps)
+        {
+            return Ok(i);
+        }
+        let spec = self.plan.tile_spec(steps);
+        if !self.exec.supports(&spec) {
+            return Err(EngineError::InvalidPlan(format!(
+                "executor {} lacks tile program {}",
+                self.exec.backend_name(),
+                spec.artifact_name()
+            )));
+        }
+        let def = self.plan.stencil.def();
+        let geom =
+            BlockGeometry::tiled(&self.plan.grid_dims, &self.plan.tile, def.radius * steps);
+        let mut specs = self.specs.write().expect("spec cache poisoned");
+        // re-check under the write lock (another submitter may have won)
+        if let Some(i) = specs.iter().position(|(sp, _)| sp.steps == steps) {
+            return Ok(i);
+        }
+        specs.push((spec, geom.blocks().collect()));
+        Ok(specs.len() - 1)
+    }
+}
+
+/// The job the scheduler is currently running for one client.
+struct ActiveJob {
+    job: Arc<JobInner>,
+    chunk: usize,
+    /// Next block index to dispatch within the current chunk.
+    next_block: usize,
+    chunk_done: usize,
+    /// Block count and per-tile cell-update cost of the current chunk.
+    chunk_blocks: usize,
+    tile_cost: u64,
+    /// This job's dispatched-but-not-written tiles.
+    inflight: usize,
+    started: Option<Instant>,
+    activated: Instant,
+    tiles_executed: u64,
+    redundant: u64,
+    write_ns: u64,
+    failed: Option<EngineError>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct ClientCounters {
+    jobs_submitted: u64,
+    jobs_completed: u64,
+    jobs_cancelled: u64,
+    jobs_failed: u64,
+    tiles_executed: u64,
+    cell_updates: u64,
+    max_queue_wait: Duration,
+}
+
+struct ClientState {
+    shared: Arc<ClientShared>,
+    queue: VecDeque<Arc<JobInner>>,
+    active: Option<ActiveJob>,
+    queue_cap: usize,
+    closed: bool,
+    stats: ClientCounters,
+}
+
+// ------------------------------------------------------------- server core
+
+/// What a compute worker reports back for one tile.
+enum TileFailure {
+    /// The job was cancelled before this tile computed (nothing ran).
+    Cancelled,
+    /// The executor failed on this tile.
+    Exec(String),
+}
+
+/// Scheduler event-loop messages. Everything that mutates cross-client
+/// state flows through this one channel, so the scheduler never races.
+enum Event {
+    /// Something changed (submission, client close) — re-run the pump.
+    Wake,
+    /// A worker finished (or skipped) one tile.
+    TileDone {
+        client: usize,
+        job_id: u64,
+        block_i: usize,
+        out: Result<Vec<f32>, TileFailure>,
+        extract_ns: u64,
+        compute_ns: u64,
+    },
+    /// Abandon one job.
+    Cancel { client: usize, job_id: u64 },
+    /// Graceful shutdown: drain in-flight tiles, fail the rest.
+    Shutdown,
+}
+
+/// One dispatched tile: everything a worker needs, with no access to the
+/// scheduler's state.
+struct TileTask {
+    shared: Arc<ClientShared>,
+    job: Arc<JobInner>,
+    client: usize,
+    spec_i: usize,
+    /// Read-buffer role for this chunk.
+    src: usize,
+    block_i: usize,
+}
+
+struct TaskQueue {
+    queue: VecDeque<TileTask>,
+    closed: bool,
+}
+
+struct SchedState {
+    clients: Vec<Option<ClientState>>,
+    drr: DeficitRoundRobin,
+    /// Dispatched-but-not-written tiles across all clients — the window
+    /// that bounds both memory and scheduling latency.
+    inflight: usize,
+    shutting_down: bool,
+}
+
+struct ServerInner {
+    state: Mutex<SchedState>,
+    /// Signalled when queue space frees up or shutdown begins; submitters
+    /// block here for backpressure.
+    space_cv: Condvar,
+    tasks: Mutex<TaskQueue>,
+    task_cv: Condvar,
+    /// Recirculating tile-buffer pool shared by all clients.
+    pool: Mutex<Vec<Vec<f32>>>,
+    pool_misses: AtomicU64,
+    workers: usize,
+    inflight_cap: usize,
+    next_job_id: AtomicU64,
+}
+
+impl ServerInner {
+    fn take_buf(&self) -> Vec<f32> {
+        match self.pool.lock().expect("tile pool poisoned").pop() {
+            Some(buf) => buf,
+            None => {
+                self.pool_misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    fn release_buf(&self, buf: Vec<f32>) {
+        // Always recirculate: at most `inflight_cap` buffers exist, so the
+        // pool is naturally bounded and `fresh_tile_allocs` can never
+        // exceed `tile_pool_capacity`.
+        self.pool.lock().expect("tile pool poisoned").push(buf);
+    }
+}
+
+/// A process-wide server multiplexing many concurrent clients over ONE
+/// shared worker pool. Open tenants with [`EngineServer::open`]; stop with
+/// [`EngineServer::shutdown`] (also runs on drop).
+pub struct EngineServer {
+    inner: Arc<ServerInner>,
+    events: Sender<Event>,
+    scheduler: Option<JoinHandle<()>>,
+    worker_handles: Vec<JoinHandle<()>>,
+}
+
+impl EngineServer {
+    /// Start a server with `workers` compute threads (clamped to ≥ 1)
+    /// plus one scheduler thread. The pool is spawned once, here — every
+    /// client and every job reuses it.
+    pub fn start(workers: usize) -> EngineServer {
+        let workers = workers.max(1);
+        let inner = Arc::new(ServerInner {
+            state: Mutex::new(SchedState {
+                clients: Vec::new(),
+                drr: DeficitRoundRobin::new(1),
+                inflight: 0,
+                shutting_down: false,
+            }),
+            space_cv: Condvar::new(),
+            tasks: Mutex::new(TaskQueue { queue: VecDeque::new(), closed: false }),
+            task_cv: Condvar::new(),
+            pool: Mutex::new(Vec::new()),
+            pool_misses: AtomicU64::new(0),
+            workers,
+            // Dispatch window: enough tiles in flight to keep every worker
+            // busy plus a small margin, small enough that DRR preemption
+            // is prompt and buffer memory stays bounded.
+            inflight_cap: 2 * workers + 2,
+            next_job_id: AtomicU64::new(0),
+        });
+        let (tx, rx) = channel::<Event>();
+        let sched_inner = Arc::clone(&inner);
+        let scheduler = std::thread::spawn(move || scheduler_loop(&sched_inner, rx));
+        let worker_handles = (0..workers)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                let tx = tx.clone();
+                std::thread::spawn(move || worker_loop(&inner, &tx))
+            })
+            .collect();
+        EngineServer { inner, events: tx, scheduler: Some(scheduler), worker_handles }
+    }
+
+    /// [`EngineServer::start`] with one worker per available core.
+    pub fn start_default() -> EngineServer {
+        let workers =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        EngineServer::start(workers)
+    }
+
+    /// Open a client session for `plan` with the default queue depth.
+    pub fn open(&self, plan: Plan) -> Result<ClientSession, EngineError> {
+        self.open_with_queue(plan, DEFAULT_QUEUE_DEPTH)
+    }
+
+    /// Open a client session whose submission queue holds up to
+    /// `queue_depth` waiting jobs; `submit` blocks beyond that
+    /// (backpressure). Validates the plan against its backend and
+    /// pre-builds tile geometry for every chunk depth the plan schedules.
+    pub fn open_with_queue(
+        &self,
+        plan: Plan,
+        queue_depth: usize,
+    ) -> Result<ClientSession, EngineError> {
+        plan.backend.validate()?;
+        let exec = plan.backend.executor();
+        let cells: usize = plan.grid_dims.iter().product();
+        let zero = Grid::from_vec(&plan.grid_dims, vec![0.0; cells]);
+        let shared = Arc::new(ClientShared {
+            plan,
+            exec,
+            specs: RwLock::new(Vec::new()),
+            bufs: [RwLock::new(zero.clone()), RwLock::new(zero)],
+            power: RwLock::new(None),
+        });
+        for &steps in &shared.plan.chunks {
+            shared.ensure_spec(steps)?;
+        }
+        let mut st = self.inner.state.lock().expect("server state poisoned");
+        if st.shutting_down {
+            return Err(EngineError::Shutdown);
+        }
+        let id = st.drr.register();
+        if id >= st.clients.len() {
+            st.clients.resize_with(id + 1, || None);
+        }
+        debug_assert!(st.clients[id].is_none(), "client slot reuse out of sync");
+        st.clients[id] = Some(ClientState {
+            shared: Arc::clone(&shared),
+            queue: VecDeque::new(),
+            active: None,
+            queue_cap: queue_depth.max(1),
+            closed: false,
+            stats: ClientCounters::default(),
+        });
+        Ok(ClientSession {
+            inner: Arc::clone(&self.inner),
+            events: self.events.clone(),
+            shared,
+            id,
+        })
+    }
+
+    /// Size of the shared compute pool.
+    pub fn worker_threads(&self) -> usize {
+        self.inner.workers
+    }
+
+    /// Compute threads spawned over the server's lifetime — equals
+    /// [`EngineServer::worker_threads`] forever: ONE pool at construction,
+    /// shared by every client, never re-spawned. (The scheduler thread is
+    /// a coordinator, not a compute worker, and is not counted.)
+    pub fn threads_spawned(&self) -> u64 {
+        self.inner.workers as u64
+    }
+
+    /// Fresh tile-buffer allocations (pool misses) so far; plateaus at
+    /// [`EngineServer::tile_pool_capacity`] once the pool is warm.
+    pub fn fresh_tile_allocs(&self) -> u64 {
+        self.inner.pool_misses.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound on distinct tile buffers the server can ever create:
+    /// the dispatch window. Buffers always recirculate, so
+    /// [`EngineServer::fresh_tile_allocs`] can never exceed this.
+    pub fn tile_pool_capacity(&self) -> usize {
+        self.inner.inflight_cap
+    }
+
+    /// Currently registered clients.
+    pub fn clients(&self) -> usize {
+        let st = self.inner.state.lock().expect("server state poisoned");
+        st.clients.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// Graceful shutdown: stop dispatching, drain in-flight tiles,
+    /// complete every unfinished job with [`EngineError::Shutdown`], join
+    /// the scheduler and the worker pool. Idempotent; runs on drop.
+    pub fn shutdown(&mut self) {
+        {
+            let mut st = self.inner.state.lock().expect("server state poisoned");
+            st.shutting_down = true;
+        }
+        // Unblock submitters waiting for queue space.
+        self.inner.space_cv.notify_all();
+        let _ = self.events.send(Event::Shutdown);
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        {
+            let mut q = self.inner.tasks.lock().expect("task queue poisoned");
+            q.closed = true;
+        }
+        self.inner.task_cv.notify_all();
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EngineServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ------------------------------------------------------------- client API
+
+/// One tenant of an [`EngineServer`]: its own plan, backend, geometry
+/// cache and grid double-buffer, multiplexed over the server's shared
+/// worker pool. `Send`, so each client thread can own one.
+pub struct ClientSession {
+    inner: Arc<ServerInner>,
+    events: Sender<Event>,
+    shared: Arc<ClientShared>,
+    id: usize,
+}
+
+impl ClientSession {
+    pub fn plan(&self) -> &Plan {
+        &self.shared.plan
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.shared.plan.backend
+    }
+
+    /// Scheduler id of this client (diagnostic).
+    pub fn client_id(&self) -> usize {
+        self.id
+    }
+
+    /// Snapshot of this client's service counters.
+    pub fn stats(&self) -> ClientStats {
+        let st = self.inner.state.lock().expect("server state poisoned");
+        let c = st.clients[self.id].as_ref().expect("client registered");
+        ClientStats {
+            jobs_submitted: c.stats.jobs_submitted,
+            jobs_completed: c.stats.jobs_completed,
+            jobs_cancelled: c.stats.jobs_cancelled,
+            jobs_failed: c.stats.jobs_failed,
+            tiles_executed: c.stats.tiles_executed,
+            cell_updates: c.stats.cell_updates,
+            max_queue_wait: c.stats.max_queue_wait,
+            sched_served: st.drr.served(self.id),
+            sched_rounds: st.drr.rounds(self.id),
+        }
+    }
+
+    /// Submit one workload. Validation failures (shape, power, iteration
+    /// schedule) surface here as typed errors; accepted jobs return a
+    /// [`JobHandle`] and run asynchronously. Blocks while the client's
+    /// queue is full (backpressure); fails fast with
+    /// [`EngineError::Shutdown`] once the server is stopping.
+    pub fn submit<W: Into<Workload>>(&self, workload: W) -> Result<JobHandle, EngineError> {
+        let Workload { grid, power, iterations } = workload.into();
+        let plan = &self.shared.plan;
+        let def = plan.stencil.def();
+        if grid.dims() != plan.grid_dims {
+            return Err(EngineError::GridShape {
+                expected: plan.grid_dims.clone(),
+                got: grid.dims(),
+            });
+        }
+        if power.is_some() != def.has_power {
+            return Err(EngineError::PowerMismatch {
+                expected: def.has_power,
+                got: power.is_some(),
+            });
+        }
+        if let Some(p) = &power {
+            if p.dims() != plan.grid_dims {
+                return Err(EngineError::PowerMismatch { expected: true, got: true });
+            }
+        }
+        let iterations = iterations.unwrap_or(plan.iterations);
+        let chunks = if iterations == plan.iterations {
+            plan.chunks.clone()
+        } else {
+            plan.schedule_for(iterations)
+                .map_err(|e| EngineError::InvalidPlan(format!("{e:#}")))?
+        };
+        let schedule = chunks
+            .iter()
+            .map(|&s| self.shared.ensure_spec(s))
+            .collect::<Result<Vec<_>, _>>()?;
+
+        let job = Arc::new(JobInner {
+            id: self.inner.next_job_id.fetch_add(1, Ordering::Relaxed),
+            client: self.id,
+            iterations,
+            schedule,
+            submitted_at: Instant::now(),
+            cancelled: AtomicBool::new(false),
+            grid: Mutex::new(Some(grid)),
+            power: Mutex::new(power),
+            done: Mutex::new(None),
+            done_cv: Condvar::new(),
+            extract_ns: AtomicU64::new(0),
+            compute_ns: AtomicU64::new(0),
+        });
+        {
+            let mut st = self.inner.state.lock().expect("server state poisoned");
+            loop {
+                if st.shutting_down {
+                    return Err(EngineError::Shutdown);
+                }
+                let c = st.clients[self.id].as_mut().expect("client registered");
+                if c.closed {
+                    return Err(EngineError::Shutdown);
+                }
+                if c.queue.len() < c.queue_cap {
+                    break;
+                }
+                st = self.inner.space_cv.wait(st).expect("server state poisoned");
+            }
+            let c = st.clients[self.id].as_mut().expect("client registered");
+            c.queue.push_back(Arc::clone(&job));
+            c.stats.jobs_submitted += 1;
+        }
+        if self.events.send(Event::Wake).is_err() {
+            // Scheduler is gone: nothing will ever run this job. Complete
+            // it so no handle can hang, and report the loss.
+            job.complete(Err(EngineError::WorkerLost));
+            return Err(EngineError::WorkerLost);
+        }
+        Ok(JobHandle { job, events: Some(self.events.clone()) })
+    }
+
+    /// Submit several workloads back-to-back (queueing permitting).
+    pub fn submit_batch<I>(&self, workloads: I) -> Vec<Result<JobHandle, EngineError>>
+    where
+        I: IntoIterator,
+        I::Item: Into<Workload>,
+    {
+        workloads.into_iter().map(|w| self.submit(w)).collect()
+    }
+}
+
+impl Drop for ClientSession {
+    fn drop(&mut self) {
+        if let Ok(mut st) = self.inner.state.lock() {
+            if let Some(Some(c)) = st.clients.get_mut(self.id) {
+                c.closed = true;
+            }
+        }
+        // Queued jobs (their handles are still out there) finish normally;
+        // the scheduler reaps the slot once the client drains.
+        let _ = self.events.send(Event::Wake);
+    }
+}
+
+// -------------------------------------------------------------- scheduler
+
+fn scheduler_loop(inner: &Arc<ServerInner>, rx: Receiver<Event>) {
+    loop {
+        let Ok(ev) = rx.recv() else { break };
+        let mut st = inner.state.lock().expect("server state poisoned");
+        handle_event(&mut st, inner, ev);
+        while let Ok(ev) = rx.try_recv() {
+            handle_event(&mut st, inner, ev);
+        }
+        if pump(&mut st, inner) {
+            break;
+        }
+    }
+    // Backstop for the senders-dropped exit path: make sure workers die.
+    let mut q = inner.tasks.lock().expect("task queue poisoned");
+    q.closed = true;
+    drop(q);
+    inner.task_cv.notify_all();
+}
+
+fn handle_event(st: &mut SchedState, inner: &ServerInner, ev: Event) {
+    match ev {
+        Event::Wake => {}
+        Event::Shutdown => st.shutting_down = true,
+        Event::Cancel { client, job_id } => {
+            let Some(Some(c)) = st.clients.get_mut(client) else { return };
+            if let Some(i) = c.queue.iter().position(|j| j.id == job_id) {
+                let job = c.queue.remove(i).expect("index in range");
+                c.stats.jobs_cancelled += 1;
+                job.complete(Err(EngineError::Cancelled));
+                inner.space_cv.notify_all();
+            }
+            // An active job's cancelled flag is already set by the handle;
+            // the pump reaps it once its in-flight tiles drain.
+        }
+        Event::TileDone { client, job_id, block_i, out, extract_ns, compute_ns } => {
+            st.inflight -= 1;
+            let Some(Some(c)) = st.clients.get_mut(client) else { return };
+            let shared = Arc::clone(&c.shared);
+            let Some(a) = c.active.as_mut() else { return };
+            debug_assert_eq!(a.job.id, job_id, "tile for a non-active job");
+            a.inflight -= 1;
+            a.chunk_done += 1;
+            a.job.extract_ns.fetch_add(extract_ns, Ordering::Relaxed);
+            a.job.compute_ns.fetch_add(compute_ns, Ordering::Relaxed);
+            match out {
+                Ok(buf) => {
+                    let specs = shared.specs.read().expect("spec cache poisoned");
+                    let (spec, blocks) = &specs[a.job.schedule[a.chunk]];
+                    let block = &blocks[block_i];
+                    let dst = (a.chunk + 1) % 2;
+                    let t0 = Instant::now();
+                    writeback_tile(
+                        &mut shared.bufs[dst].write().expect("grid pair poisoned"),
+                        block,
+                        &shared.plan.tile,
+                        &buf,
+                    );
+                    a.write_ns += t0.elapsed().as_nanos() as u64;
+                    a.tiles_executed += 1;
+                    c.stats.tiles_executed += 1;
+                    let useful: usize =
+                        block.compute.iter().map(|(lo, hi)| hi - lo).product();
+                    a.redundant += (spec.cells() - useful) as u64 * spec.steps as u64;
+                    drop(specs);
+                    inner.release_buf(buf);
+                }
+                Err(TileFailure::Cancelled) => {}
+                Err(TileFailure::Exec(msg)) => {
+                    if a.failed.is_none() {
+                        a.failed = Some(EngineError::Execution(msg));
+                        // stop dispatching the rest of this chunk
+                        a.next_block = a.chunk_blocks;
+                    }
+                }
+            }
+            advance_chunk(st, inner, client);
+        }
+    }
+}
+
+/// Chunk barrier + job completion for one client, called after each tile
+/// lands. Failed or cancelled jobs complete once their in-flight tiles
+/// have drained; healthy jobs advance to the next chunk when every block
+/// of the current one is written back.
+fn advance_chunk(st: &mut SchedState, inner: &ServerInner, client: usize) {
+    let Some(Some(c)) = st.clients.get_mut(client) else { return };
+    let shared = Arc::clone(&c.shared);
+    let Some(a) = c.active.as_mut() else { return };
+    if a.failed.is_some() || a.job.cancelled.load(Ordering::SeqCst) {
+        if a.inflight == 0 {
+            let a = c.active.take().expect("checked above");
+            *shared.power.write().expect("power slot poisoned") = None;
+            let err = match a.failed {
+                Some(e) => {
+                    c.stats.jobs_failed += 1;
+                    e
+                }
+                None => {
+                    c.stats.jobs_cancelled += 1;
+                    EngineError::Cancelled
+                }
+            };
+            a.job.complete(Err(err));
+        }
+        return;
+    }
+    if a.chunk_done < a.chunk_blocks {
+        return;
+    }
+    a.chunk += 1;
+    if a.chunk < a.job.schedule.len() {
+        // next pass over the grid: roles swap, counters reset
+        let specs = shared.specs.read().expect("spec cache poisoned");
+        let (spec, blocks) = &specs[a.job.schedule[a.chunk]];
+        a.chunk_blocks = blocks.len();
+        a.tile_cost = (spec.cells() * spec.steps) as u64;
+        drop(specs);
+        a.next_block = 0;
+        a.chunk_done = 0;
+        st.drr.enqueue(client);
+        return;
+    }
+    // job complete: copy the final buffer out, build the report
+    let a = c.active.take().expect("checked above");
+    let passes = a.job.schedule.len();
+    let mut grid = a
+        .job
+        .grid
+        .lock()
+        .expect("job grid poisoned")
+        .take()
+        .expect("grid present until completion");
+    grid.data_mut().copy_from_slice(
+        shared.bufs[passes % 2]
+            .read()
+            .expect("grid pair poisoned")
+            .data(),
+    );
+    *shared.power.write().expect("power slot poisoned") = None;
+    let cell_updates =
+        shared.plan.grid_dims.iter().product::<usize>() as u64 * a.job.iterations as u64;
+    c.stats.jobs_completed += 1;
+    c.stats.cell_updates += cell_updates;
+    let ns = |v: u64| Duration::from_nanos(v);
+    let report = ExecReport {
+        iterations: a.job.iterations,
+        passes,
+        tiles_executed: a.tiles_executed,
+        cell_updates,
+        redundant_updates: a.redundant,
+        elapsed: a.activated.elapsed(),
+        backend: shared.plan.backend.session_label(),
+        stages: Some(StageTimes {
+            extract: ns(a.job.extract_ns.load(Ordering::Relaxed)),
+            compute: ns(a.job.compute_ns.load(Ordering::Relaxed)),
+            write: ns(a.write_ns),
+        }),
+    };
+    a.job.complete(Ok(JobOutput { grid, report }));
+}
+
+/// Activation + dispatch. Returns `true` when the scheduler should exit
+/// (shutdown finished draining).
+fn pump(st: &mut SchedState, inner: &ServerInner) -> bool {
+    if st.shutting_down {
+        if st.inflight > 0 {
+            return false; // keep draining TileDone events
+        }
+        finish_shutdown(st, inner);
+        return true;
+    }
+    for id in 0..st.clients.len() {
+        settle_client(st, inner, id);
+    }
+    dispatch(st, inner);
+    false
+}
+
+/// Reap finished/cancelled state and activate the next queued job for one
+/// client; mark it runnable in the DRR ring if it has dispatchable tiles.
+fn settle_client(st: &mut SchedState, inner: &ServerInner, id: usize) {
+    // Cancelled-before-dispatch active jobs have no tiles in flight and
+    // never receive a TileDone; reap them here.
+    advance_chunk(st, inner, id);
+    let Some(Some(c)) = st.clients.get_mut(id) else { return };
+    while c.active.is_none() {
+        let Some(job) = c.queue.pop_front() else { break };
+        inner.space_cv.notify_all();
+        if job.cancelled.load(Ordering::SeqCst) {
+            c.stats.jobs_cancelled += 1;
+            job.complete(Err(EngineError::Cancelled));
+            continue;
+        }
+        // Stage the job into the client's warm double buffer: input into
+        // the pass-0 read grid, power into the shared slot.
+        {
+            let g = job.grid.lock().expect("job grid poisoned");
+            let g = g.as_ref().expect("grid present until completion");
+            c.shared.bufs[0]
+                .write()
+                .expect("grid pair poisoned")
+                .data_mut()
+                .copy_from_slice(g.data());
+        }
+        *c.shared.power.write().expect("power slot poisoned") =
+            job.power.lock().expect("job power poisoned").take();
+        let specs = c.shared.specs.read().expect("spec cache poisoned");
+        let (spec, blocks) = &specs[job.schedule[0]];
+        let chunk_blocks = blocks.len();
+        let tile_cost = (spec.cells() * spec.steps) as u64;
+        drop(specs);
+        c.active = Some(ActiveJob {
+            job,
+            chunk: 0,
+            next_block: 0,
+            chunk_done: 0,
+            chunk_blocks,
+            tile_cost,
+            inflight: 0,
+            started: None,
+            activated: Instant::now(),
+            tiles_executed: 0,
+            redundant: 0,
+            write_ns: 0,
+            failed: None,
+        });
+    }
+    let runnable = c.active.as_ref().is_some_and(|a| {
+        a.failed.is_none()
+            && !a.job.cancelled.load(Ordering::SeqCst)
+            && a.next_block < a.chunk_blocks
+    });
+    if runnable {
+        st.drr.enqueue(id);
+    } else if c.closed && c.queue.is_empty() && c.active.is_none() {
+        st.clients[id] = None;
+        st.drr.deregister(id);
+    }
+}
+
+/// Fill the dispatch window with DRR-picked tiles.
+fn dispatch(st: &mut SchedState, inner: &ServerInner) {
+    let mut dispatched = 0usize;
+    while st.inflight < inner.inflight_cap {
+        let picked = {
+            let SchedState { clients, drr, .. } = st;
+            drr.next(|id| {
+                let a = clients.get(id)?.as_ref()?.active.as_ref()?;
+                if a.failed.is_some() || a.job.cancelled.load(Ordering::SeqCst) {
+                    return None;
+                }
+                (a.next_block < a.chunk_blocks).then_some(a.tile_cost)
+            })
+        };
+        let Some(id) = picked else { break };
+        let c = st.clients[id].as_mut().expect("picked client exists");
+        let a = c.active.as_mut().expect("picked client has an active job");
+        if a.started.is_none() {
+            let now = Instant::now();
+            a.started = Some(now);
+            let wait = now.duration_since(a.job.submitted_at);
+            if wait > c.stats.max_queue_wait {
+                c.stats.max_queue_wait = wait;
+            }
+        }
+        let task = TileTask {
+            shared: Arc::clone(&c.shared),
+            job: Arc::clone(&a.job),
+            client: id,
+            spec_i: a.job.schedule[a.chunk],
+            src: a.chunk % 2,
+            block_i: a.next_block,
+        };
+        a.next_block += 1;
+        a.inflight += 1;
+        st.inflight += 1;
+        let mut q = inner.tasks.lock().expect("task queue poisoned");
+        q.queue.push_back(task);
+        drop(q);
+        dispatched += 1;
+    }
+    match dispatched {
+        0 => {}
+        1 => inner.task_cv.notify_one(),
+        _ => inner.task_cv.notify_all(),
+    }
+}
+
+/// Complete every unfinished job with [`EngineError::Shutdown`]. Runs
+/// once all in-flight tiles have drained.
+fn finish_shutdown(st: &mut SchedState, inner: &ServerInner) {
+    for slot in &mut st.clients {
+        let Some(c) = slot else { continue };
+        if let Some(a) = c.active.take() {
+            debug_assert_eq!(a.inflight, 0, "shutdown before drain completed");
+            *c.shared.power.write().expect("power slot poisoned") = None;
+            c.stats.jobs_failed += 1;
+            a.job.complete(Err(EngineError::Shutdown));
+        }
+        while let Some(job) = c.queue.pop_front() {
+            c.stats.jobs_failed += 1;
+            job.complete(Err(EngineError::Shutdown));
+        }
+    }
+    inner.space_cv.notify_all();
+}
+
+// ---------------------------------------------------------------- workers
+
+/// Compute-worker body: pop a tile task, extract the tile from the owning
+/// client's read buffer, run the client's executor into a pooled buffer,
+/// report the result as an event. Workers never touch the scheduler's
+/// state lock, and they drop every grid/spec guard before sending, so the
+/// scheduler can safely take write locks when the event arrives.
+fn worker_loop(inner: &Arc<ServerInner>, events: &Sender<Event>) {
+    let mut tile = Vec::new();
+    let mut ptile = Vec::new();
+    loop {
+        let task = {
+            let mut q = inner.tasks.lock().expect("task queue poisoned");
+            loop {
+                if let Some(t) = q.queue.pop_front() {
+                    break t;
+                }
+                if q.closed {
+                    return;
+                }
+                q = inner.task_cv.wait(q).expect("task queue poisoned");
+            }
+        };
+        // A panicking tile (a pathological runtime-defined program, a
+        // poisoned lock) must not leak its inflight slot — that would
+        // hang the job's wait() and deadlock shutdown's drain. Contain
+        // the panic and report the tile as a typed execution failure; the
+        // worker itself stays alive. (A buffer popped before the panic
+        // may be lost, so the fresh-allocs <= pool-capacity invariant is
+        // guaranteed only for panic-free executors.)
+        let ev = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_task(inner, &task, &mut tile, &mut ptile)
+        }))
+        .unwrap_or_else(|_| Event::TileDone {
+            client: task.client,
+            job_id: task.job.id,
+            block_i: task.block_i,
+            out: Err(TileFailure::Exec("worker panicked while executing the tile".into())),
+            extract_ns: 0,
+            compute_ns: 0,
+        });
+        if events.send(ev).is_err() {
+            return; // scheduler is gone; server is tearing down
+        }
+    }
+}
+
+fn run_task(
+    inner: &ServerInner,
+    task: &TileTask,
+    tile: &mut Vec<f32>,
+    ptile: &mut Vec<f32>,
+) -> Event {
+    let (client, job_id, block_i) = (task.client, task.job.id, task.block_i);
+    if task.job.cancelled.load(Ordering::SeqCst) {
+        // Fast cancel: skip the compute, but still report the tile so the
+        // scheduler's drain accounting stays exact.
+        return Event::TileDone {
+            client,
+            job_id,
+            block_i,
+            out: Err(TileFailure::Cancelled),
+            extract_ns: 0,
+            compute_ns: 0,
+        };
+    }
+    let shared = &task.shared;
+    let specs = shared.specs.read().expect("spec cache poisoned");
+    let (spec, blocks) = &specs[task.spec_i];
+    let block = &blocks[block_i];
+    let cur = shared.bufs[task.src].read().expect("grid pair poisoned");
+    let power = shared.power.read().expect("power slot poisoned");
+    let t0 = Instant::now();
+    extract_tile(&cur, block, &shared.plan.tile, tile);
+    let pw = power.as_ref().map(|pg| {
+        extract_tile(pg, block, &shared.plan.tile, ptile);
+        ptile.as_slice()
+    });
+    let t1 = Instant::now();
+    let mut out = inner.take_buf();
+    let res = shared.exec.run_tile_into(spec, tile, pw, &shared.plan.coeffs, &mut out);
+    let compute_ns = t1.elapsed().as_nanos() as u64;
+    let extract_ns = (t1 - t0).as_nanos() as u64;
+    let out = match res {
+        Ok(()) => Ok(out),
+        Err(e) => {
+            // Recirculate the buffer of a failed tile so errors never
+            // shrink the pool.
+            inner.release_buf(out);
+            Err(TileFailure::Exec(format!("{e:#}")))
+        }
+    };
+    Event::TileDone { client, job_id, block_i, out, extract_ns, compute_ns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PlanBuilder;
+    use crate::stencil::{reference, StencilKind};
+
+    fn plan(dims: &[usize], iters: usize) -> Plan {
+        PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(dims.to_vec())
+            .iterations(iters)
+            .tile(vec![32, 32])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn one_client_matches_reference() {
+        let mut server = EngineServer::start(2);
+        let client = server.open(plan(&[64, 64], 5)).unwrap();
+        let mut grid = Grid::new2d(64, 64);
+        grid.fill_random(3, 0.0, 1.0);
+        let want = reference::run(
+            StencilKind::Diffusion2D,
+            &grid,
+            None,
+            StencilKind::Diffusion2D.def().default_coeffs,
+            5,
+        );
+        let out = client.submit(grid).unwrap().wait().unwrap();
+        assert!(out.grid.max_abs_diff(&want) < 1e-3);
+        assert_eq!(out.report.iterations, 5);
+        assert!(out.report.tiles_executed > 0);
+        let stats = client.stats();
+        assert_eq!(stats.jobs_completed, 1);
+        assert!(stats.sched_served > 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn two_clients_share_one_pool() {
+        let server = EngineServer::start(2);
+        let c1 = server.open(plan(&[64, 64], 4)).unwrap();
+        let c2 = server
+            .open(
+                PlanBuilder::new(StencilKind::Diffusion3D)
+                    .grid_dims(vec![16, 16, 16])
+                    .iterations(3)
+                    .tile(vec![8, 8, 8])
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        assert_eq!(server.clients(), 2);
+        assert_eq!(server.threads_spawned(), 2);
+        let mut g1 = Grid::new2d(64, 64);
+        g1.fill_random(7, 0.0, 1.0);
+        let mut g2 = Grid::new3d(16, 16, 16);
+        g2.fill_random(9, 0.0, 1.0);
+        let h1 = c1.submit(g1.clone()).unwrap();
+        let h2 = c2.submit(g2.clone()).unwrap();
+        let o1 = h1.wait().unwrap();
+        let o2 = h2.wait().unwrap();
+        let w1 = reference::run(
+            StencilKind::Diffusion2D,
+            &g1,
+            None,
+            StencilKind::Diffusion2D.def().default_coeffs,
+            4,
+        );
+        let w2 = reference::run(
+            StencilKind::Diffusion3D,
+            &g2,
+            None,
+            StencilKind::Diffusion3D.def().default_coeffs,
+            3,
+        );
+        assert!(o1.grid.max_abs_diff(&w1) < 1e-3);
+        assert!(o2.grid.max_abs_diff(&w2) < 1e-3);
+        // one pool, bounded buffer churn
+        assert_eq!(server.threads_spawned(), 2);
+        assert!(server.fresh_tile_allocs() <= server.tile_pool_capacity() as u64);
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_a_typed_error() {
+        let mut server = EngineServer::start(1);
+        let client = server.open(plan(&[64, 64], 2)).unwrap();
+        server.shutdown();
+        let err = client.submit(Grid::new2d(64, 64)).unwrap_err();
+        assert_eq!(err, EngineError::Shutdown);
+    }
+
+    #[test]
+    fn cancel_queued_job_reports_cancelled() {
+        let mut server = EngineServer::start(1);
+        let client = server.open_with_queue(plan(&[96, 96], 12), 8).unwrap();
+        // Pile up jobs so later ones are definitely queued, then cancel
+        // the tail one.
+        let mut handles = Vec::new();
+        for s in 0..4u64 {
+            let mut g = Grid::new2d(96, 96);
+            g.fill_random(s, 0.0, 1.0);
+            handles.push(client.submit(g).unwrap());
+        }
+        let last = handles.pop().unwrap();
+        last.cancel();
+        let err = last.wait().unwrap_err();
+        assert_eq!(err, EngineError::Cancelled);
+        for h in handles {
+            assert!(h.wait().is_ok());
+        }
+        let stats = client.stats();
+        assert_eq!(stats.jobs_cancelled, 1);
+        assert_eq!(stats.jobs_completed, 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_fails_unfinished_jobs_without_hanging() {
+        let mut server = EngineServer::start(1);
+        let client = server.open_with_queue(plan(&[128, 128], 16), 16).unwrap();
+        let handles: Vec<JobHandle> = (0..6u64)
+            .map(|s| {
+                let mut g = Grid::new2d(128, 128);
+                g.fill_random(s, 0.0, 1.0);
+                client.submit(g).unwrap()
+            })
+            .collect();
+        server.shutdown();
+        let mut finished = 0;
+        for h in handles {
+            assert!(h.wait_timeout(Duration::from_secs(30)), "job hung after shutdown");
+            match h.wait() {
+                Ok(_) => finished += 1,
+                Err(e) => assert_eq!(e, EngineError::Shutdown),
+            }
+        }
+        // some prefix may have completed before shutdown; the rest must
+        // have failed with the typed error, and nothing may hang
+        assert!(finished <= 6);
+    }
+}

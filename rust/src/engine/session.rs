@@ -1,163 +1,51 @@
-//! Warm, reusable execution sessions.
+//! Warm, reusable single-tenant sessions — a thin facade over a private
+//! one-tenant [`EngineServer`].
 //!
 //! The paper's accelerator is configured once and then fed a stream of
 //! kernel invocations with runtime arguments (§3.2: coefficient changes
 //! need no recompilation, remainder iterations ride on pass-through PEs).
-//! A [`Session`] is the host analogue of that programmed device: it owns
-//! the worker-thread pool, the recirculating tile buffers and the
-//! role-alternating grid pair, and every [`Session::submit`] reuses them —
-//! batched workloads pay the setup cost once instead of per run.
+//! A [`Session`] is the host analogue of that programmed device. Since the
+//! multi-tenant server landed there is exactly ONE execution path: a
+//! `Session` owns a private [`EngineServer`] with a single
+//! [`super::ClientSession`] tenant, so the worker pool, the recirculating
+//! tile-buffer pool and the role-alternating grid pair are the server's —
+//! batched workloads pay the setup cost once, and the single- and
+//! multi-tenant paths cannot drift apart.
 //!
-//! Reuse is observable, not aspirational: [`Session::worker_threads`]
-//! (spawned once, at construction) and [`Session::fresh_tile_allocs`]
-//! (pool misses — stops growing once the pool is warm) are test-visible
-//! counters asserted by `rust/tests/engine_api.rs`.
+//! Reuse is observable, not aspirational: [`Session::threads_spawned`]
+//! (one pool, at construction) and [`Session::fresh_tile_allocs`] (pool
+//! misses — stops growing once the pool is warm, bounded by
+//! [`Session::tile_pool_capacity`] forever) are test-visible counters
+//! asserted by `rust/tests/engine_api.rs`.
+//!
+//! Submission semantics match the original session: `submit` completes
+//! the job before the handle is returned (the scheduling happens on the
+//! server's threads, but the facade waits), so errors are already
+//! resolved on the handle. Callers that want true asynchrony and
+//! multi-client fairness should open an [`EngineServer`] directly.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, RwLock};
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
-
-use crate::blocking::geometry::{Block, BlockGeometry};
-use crate::coordinator::{ExecReport, Plan, StageTimes};
-use crate::runtime::{extract_tile, writeback_tile, Executor, TileSpec};
+use crate::coordinator::{ExecReport, Plan};
 use crate::stencil::Grid;
 
-use super::{Backend, EngineError};
+use super::{Backend, ClientSession, EngineError, EngineServer, JobHandle, Workload};
 
-/// Channel depth between the compute pool and the write kernel — the
-/// paper's inter-kernel channels are shallow; a small constant bounds
-/// memory while hiding stage jitter.
-const CHANNEL_DEPTH: usize = 4;
-
-/// One computed tile flowing from a worker to the write kernel: block
-/// index plus the result buffer (or the executor's error).
-type TileResult = (usize, Result<Vec<f32>, anyhow::Error>);
-
-/// One unit of work for a session: a grid, its optional power input, and
-/// an optional iteration-count override (the plan's count when `None`).
-/// `Grid` converts into a `Workload` directly, so `session.submit(grid)`
-/// works for the common case.
-#[derive(Debug)]
-pub struct Workload {
-    grid: Grid,
-    power: Option<Grid>,
-    iterations: Option<usize>,
-}
-
-impl Workload {
-    pub fn new(grid: Grid) -> Workload {
-        Workload { grid, power: None, iterations: None }
-    }
-
-    /// Attach a power grid (required for hotspot stencils).
-    pub fn power(mut self, power: Grid) -> Workload {
-        self.power = Some(power);
-        self
-    }
-
-    /// Override the plan's iteration count for this job only. The session
-    /// reschedules chunks with the plan's step-size set and reuses cached
-    /// tile geometry per distinct chunk depth.
-    pub fn iterations(mut self, iterations: usize) -> Workload {
-        self.iterations = Some(iterations);
-        self
-    }
-}
-
-impl From<Grid> for Workload {
-    fn from(grid: Grid) -> Workload {
-        Workload::new(grid)
-    }
-}
-
-/// A completed job: the updated grid and its execution report.
-#[derive(Debug)]
-pub struct JobOutput {
-    pub grid: Grid,
-    pub report: ExecReport,
-}
-
-/// Handle to a submitted job. Submission currently completes before the
-/// handle is returned (the write kernel runs on the submitting thread, as
-/// in the pipelines); the handle shape keeps the API stable for future
-/// async serving. Errors surface at [`JobHandle::wait`].
-#[derive(Debug)]
-pub struct JobHandle {
-    id: u64,
-    result: Result<JobOutput, EngineError>,
-}
-
-impl JobHandle {
-    /// Monotonically increasing per-session job id.
-    pub fn id(&self) -> u64 {
-        self.id
-    }
-
-    pub fn is_ok(&self) -> bool {
-        self.result.is_ok()
-    }
-
-    /// The job's report, if it succeeded.
-    pub fn report(&self) -> Option<&ExecReport> {
-        self.result.as_ref().ok().map(|o| &o.report)
-    }
-
-    /// Consume the handle, yielding the output grid and report.
-    pub fn wait(self) -> Result<JobOutput, EngineError> {
-        self.result
-    }
-}
-
-/// State shared between the submitting thread and the worker pool.
-struct Shared {
-    tile: Vec<usize>,
-    coeffs: Vec<f32>,
-    exec: Box<dyn Executor + Send + Sync>,
-    /// One `(spec, blocks)` per distinct chunk depth seen so far; grows
-    /// when a submission's iteration override needs a new depth.
-    specs: RwLock<Vec<(TileSpec, Vec<Block>)>>,
-    /// The role-alternating grid pair: chunk `ci` reads `bufs[ci % 2]`
-    /// and writes `bufs[(ci + 1) % 2]`. Allocated once per session.
-    bufs: [RwLock<Grid>; 2],
-    /// Power grid staged per submission (moved in, not copied).
-    power: RwLock<Option<Grid>>,
-    /// Per-submission stage-time accumulators (nanoseconds, summed
-    /// across workers; reset by each submit).
-    extract_ns: AtomicU64,
-    compute_ns: AtomicU64,
-    /// Fresh tile-buffer allocations: incremented when a worker's pool
-    /// channel is empty and a new buffer must be created. Warm sessions
-    /// stop incrementing this after the first submission.
-    pool_misses: AtomicU64,
-}
-
-/// A warm execution context for one [`Plan`]: persistent compute workers,
-/// recirculating tile-buffer pools and a persistent grid double buffer.
-/// Create via [`super::StencilEngine::session`]; submit jobs with
-/// [`Session::submit`] / [`Session::submit_batch`].
+/// A warm execution context for one [`Plan`]: a private one-tenant
+/// [`EngineServer`] whose persistent compute workers, recirculating
+/// tile-buffer pool and grid double-buffer are reused by every
+/// [`Session::submit`]. Create via [`super::StencilEngine::session`].
 pub struct Session {
-    plan: Plan,
-    workers: usize,
-    shared: Arc<Shared>,
-    job_txs: Vec<SyncSender<(usize, usize)>>,
-    pool_txs: Vec<SyncSender<Vec<f32>>>,
-    rx_out: Option<Receiver<TileResult>>,
-    handles: Vec<JoinHandle<()>>,
-    threads_spawned: u64,
+    server: EngineServer,
+    client: ClientSession,
     submissions: u64,
-    next_job_id: u64,
-    /// Set when the worker pool died mid-protocol; all later submissions
-    /// fail fast with [`EngineError::WorkerLost`].
-    poisoned: bool,
 }
 
 impl Session {
-    /// Build a session for `plan`, spawning its worker pool. `workers`
-    /// overrides the plan's worker cap (`None` = plan's, which itself
-    /// defaults to one worker per available core).
+    /// Build a session for `plan`, spawning its (private) server pool.
+    /// `workers` overrides the plan's worker cap (`None` = plan's, which
+    /// itself defaults to one worker per available core).
     pub(crate) fn spawn(plan: Plan, workers: Option<usize>) -> Result<Session, EngineError> {
+        // Fail before any thread exists: an invalid backend must not
+        // spawn (and immediately join) a whole worker pool.
         plan.backend.validate()?;
         let workers = workers
             .or(plan.workers)
@@ -165,103 +53,43 @@ impl Session {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
             })
             .max(1);
-        let exec = plan.backend.executor();
-
-        let cells: usize = plan.grid_dims.iter().product();
-        let zero = Grid::from_vec(&plan.grid_dims, vec![0.0; cells]);
-        let shared = Arc::new(Shared {
-            tile: plan.tile.clone(),
-            coeffs: plan.coeffs.clone(),
-            exec,
-            specs: RwLock::new(Vec::new()),
-            bufs: [RwLock::new(zero.clone()), RwLock::new(zero)],
-            power: RwLock::new(None),
-            extract_ns: AtomicU64::new(0),
-            compute_ns: AtomicU64::new(0),
-            pool_misses: AtomicU64::new(0),
-        });
-
-        // Per-worker job and buffer-pool channels, one shared result
-        // channel. Pool capacity covers the whole result channel so warm
-        // buffers are never dropped on return (the reuse counter relies
-        // on this).
-        let (job_txs, job_rxs): (Vec<_>, Vec<_>) =
-            (0..workers).map(|_| sync_channel::<(usize, usize)>(1)).unzip();
-        let (pool_txs, pool_rxs): (Vec<_>, Vec<_>) = (0..workers)
-            .map(|_| sync_channel::<Vec<f32>>(CHANNEL_DEPTH * workers + 2))
-            .unzip();
-        let (tx_out, rx_out) = sync_channel::<TileResult>(CHANNEL_DEPTH * workers);
-
-        let mut handles = Vec::with_capacity(workers);
-        for (w, (rx_job, pool_rx)) in job_rxs.into_iter().zip(pool_rxs).enumerate() {
-            let shared = Arc::clone(&shared);
-            let tx_out = tx_out.clone();
-            // Each worker holds a sender to its OWN pool so buffers of
-            // errored tiles recirculate instead of leaking — this keeps
-            // fresh_tile_allocs <= tile_pool_capacity even across
-            // executor failures.
-            let pool_tx = pool_txs[w].clone();
-            handles.push(std::thread::spawn(move || {
-                worker_loop(&shared, w, workers, rx_job, pool_rx, pool_tx, tx_out)
-            }));
-        }
-
-        let session = Session {
-            plan,
-            workers,
-            shared,
-            job_txs,
-            pool_txs,
-            rx_out: Some(rx_out),
-            handles,
-            threads_spawned: workers as u64,
-            submissions: 0,
-            next_job_id: 0,
-            poisoned: false,
-        };
-        // Pre-build (and support-check) geometry for every chunk depth the
-        // plan's schedule uses; iteration overrides grow the same cache
-        // through the same path. On error the half-built session drops,
-        // which joins the just-spawned pool cleanly.
-        for &steps in &session.plan.chunks {
-            session.ensure_spec(steps)?;
-        }
-        Ok(session)
+        let server = EngineServer::start(workers);
+        let client = server.open(plan)?;
+        Ok(Session { server, client, submissions: 0 })
     }
 
     pub fn plan(&self) -> &Plan {
-        &self.plan
+        self.client.plan()
     }
 
     pub fn backend(&self) -> Backend {
-        self.plan.backend
+        self.client.backend()
     }
 
     /// Size of the persistent compute pool.
     pub fn worker_threads(&self) -> usize {
-        self.workers
+        self.server.worker_threads()
     }
 
-    /// Worker threads spawned over the session's lifetime — equals
-    /// [`Session::worker_threads`] forever: threads are spawned once at
-    /// construction and reused by every submission.
+    /// Compute threads spawned over the session's lifetime — equals
+    /// [`Session::worker_threads`] forever: one pool, spawned at
+    /// construction, reused by every submission.
     pub fn threads_spawned(&self) -> u64 {
-        self.threads_spawned
+        self.server.threads_spawned()
     }
 
     /// Fresh tile-buffer allocations (pool misses) so far. Grows while
     /// the pool warms up, then plateaus: bounded by
     /// [`Session::tile_pool_capacity`] forever, however many jobs run.
     pub fn fresh_tile_allocs(&self) -> u64 {
-        self.shared.pool_misses.load(Ordering::Relaxed)
+        self.server.fresh_tile_allocs()
     }
 
-    /// Total tile buffers the recirculation pools can hold. Buffers are
-    /// never dropped on return (pool capacity covers the whole result
-    /// channel), so [`Session::fresh_tile_allocs`] can never exceed this
-    /// — the invariant the reuse tests assert.
+    /// Total tile buffers the recirculating pool can ever hold. Buffers
+    /// are never dropped on return, so [`Session::fresh_tile_allocs`] can
+    /// never exceed this — the invariant the reuse tests assert.
     pub fn tile_pool_capacity(&self) -> usize {
-        self.workers * (CHANNEL_DEPTH * self.workers + 2)
+        self.server.tile_pool_capacity()
     }
 
     /// Jobs submitted so far (including failed ones).
@@ -269,14 +97,18 @@ impl Session {
         self.submissions
     }
 
-    /// Submit one workload. Reuses the session's threads, buffers and
-    /// grid pair; errors surface on the returned handle.
+    /// Submit one workload on the warm pool and wait for it to finish.
+    /// Validation and execution errors both surface on the returned
+    /// handle's [`JobHandle::wait`].
     pub fn submit<W: Into<Workload>>(&mut self, workload: W) -> JobHandle {
-        let id = self.next_job_id;
-        self.next_job_id += 1;
         self.submissions += 1;
-        let result = self.run_workload(workload.into());
-        JobHandle { id, result }
+        match self.client.submit(workload) {
+            Ok(handle) => {
+                handle.wait_done();
+                handle
+            }
+            Err(e) => JobHandle::failed(e),
+        }
     }
 
     /// Submit several workloads back-to-back on the warm pool.
@@ -311,240 +143,6 @@ impl Session {
                 Ok(out.report)
             }
             Err(e) => Err(e),
-        }
-    }
-
-    /// Index of the cached `(spec, blocks)` entry for a chunk of `steps`,
-    /// building (and support-checking) it on first use.
-    fn ensure_spec(&self, steps: usize) -> Result<usize, EngineError> {
-        if let Some(i) = self
-            .shared
-            .specs
-            .read()
-            .expect("spec cache poisoned")
-            .iter()
-            .position(|(sp, _)| sp.steps == steps)
-        {
-            return Ok(i);
-        }
-        let spec = self.plan.tile_spec(steps);
-        if !self.shared.exec.supports(&spec) {
-            return Err(EngineError::InvalidPlan(format!(
-                "executor {} lacks tile program {}",
-                self.shared.exec.backend_name(),
-                spec.artifact_name()
-            )));
-        }
-        let def = self.plan.stencil.def();
-        let geom =
-            BlockGeometry::tiled(&self.plan.grid_dims, &self.plan.tile, def.radius * steps);
-        let mut specs = self.shared.specs.write().expect("spec cache poisoned");
-        specs.push((spec, geom.blocks().collect()));
-        Ok(specs.len() - 1)
-    }
-
-    fn run_workload(&mut self, workload: Workload) -> Result<JobOutput, EngineError> {
-        if self.poisoned {
-            return Err(EngineError::WorkerLost);
-        }
-        let Workload { mut grid, power, iterations } = workload;
-        let plan = &self.plan;
-        let def = plan.stencil.def();
-        if grid.dims() != plan.grid_dims {
-            return Err(EngineError::GridShape {
-                expected: plan.grid_dims.clone(),
-                got: grid.dims(),
-            });
-        }
-        if power.is_some() != def.has_power {
-            return Err(EngineError::PowerMismatch {
-                expected: def.has_power,
-                got: power.is_some(),
-            });
-        }
-        if let Some(p) = &power {
-            if p.dims() != plan.grid_dims {
-                return Err(EngineError::PowerMismatch { expected: true, got: true });
-            }
-        }
-        let iterations = iterations.unwrap_or(plan.iterations);
-        let chunks = if iterations == plan.iterations {
-            plan.chunks.clone()
-        } else {
-            plan.schedule_for(iterations)
-                .map_err(|e| EngineError::InvalidPlan(format!("{e:#}")))?
-        };
-        let schedule = chunks
-            .iter()
-            .map(|&s| self.ensure_spec(s))
-            .collect::<Result<Vec<_>, _>>()?;
-
-        // Stage the job: move the power grid into the shared slot, copy
-        // the input into the pass-0 read buffer (allocated once, reused).
-        *self.shared.power.write().expect("power slot poisoned") = power;
-        self.shared.bufs[0]
-            .write()
-            .expect("grid pair poisoned")
-            .data_mut()
-            .copy_from_slice(grid.data());
-        self.shared.extract_ns.store(0, Ordering::Relaxed);
-        self.shared.compute_ns.store(0, Ordering::Relaxed);
-
-        let start = Instant::now();
-        let mut tiles_executed = 0u64;
-        let mut redundant = 0u64;
-        let mut write_time = Duration::ZERO;
-        let mut run_err: Option<EngineError> = None;
-        let mut pool_lost = false;
-        let rx_out = self.rx_out.as_ref().expect("session result channel gone");
-
-        'chunks: for (ci, &spec_i) in schedule.iter().enumerate() {
-            let src = ci % 2;
-            let dst = (ci + 1) % 2;
-            for tx in &self.job_txs {
-                if tx.send((spec_i, src)).is_err() {
-                    run_err = Some(EngineError::WorkerLost);
-                    pool_lost = true;
-                    break 'chunks;
-                }
-            }
-            let specs = self.shared.specs.read().expect("spec cache poisoned");
-            let (spec, blocks) = &specs[spec_i];
-            let mut next = self.shared.bufs[dst].write().expect("grid pair poisoned");
-            // Drain every tile of the chunk even after an error so the
-            // channel protocol stays clean and the session survives.
-            for _ in 0..blocks.len() {
-                match rx_out.recv() {
-                    Ok((i, Ok(out))) => {
-                        let t0 = Instant::now();
-                        writeback_tile(&mut next, &blocks[i], &self.shared.tile, &out);
-                        write_time += t0.elapsed();
-                        tiles_executed += 1;
-                        let useful: usize =
-                            blocks[i].compute.iter().map(|(lo, hi)| hi - lo).product();
-                        redundant += (spec.cells() - useful) as u64 * spec.steps as u64;
-                        let _ = self.pool_txs[i % self.workers].try_send(out);
-                    }
-                    Ok((_, Err(e))) => {
-                        if run_err.is_none() {
-                            run_err = Some(EngineError::from(e));
-                        }
-                    }
-                    Err(_) => {
-                        run_err = Some(EngineError::WorkerLost);
-                        pool_lost = true;
-                        break 'chunks;
-                    }
-                }
-            }
-            if run_err.is_some() {
-                break;
-            }
-        }
-        if pool_lost {
-            self.poisoned = true;
-        }
-        if let Some(e) = run_err {
-            return Err(e);
-        }
-
-        grid.data_mut().copy_from_slice(
-            self.shared.bufs[schedule.len() % 2]
-                .read()
-                .expect("grid pair poisoned")
-                .data(),
-        );
-        let ns = |a: &AtomicU64| Duration::from_nanos(a.load(Ordering::Relaxed));
-        let cell_updates =
-            self.plan.grid_dims.iter().product::<usize>() as u64 * iterations as u64;
-        Ok(JobOutput {
-            grid,
-            report: ExecReport {
-                iterations,
-                passes: schedule.len(),
-                tiles_executed,
-                cell_updates,
-                redundant_updates: redundant,
-                elapsed: start.elapsed(),
-                backend: self.plan.backend.session_label(),
-                stages: Some(StageTimes {
-                    extract: ns(&self.shared.extract_ns),
-                    compute: ns(&self.shared.compute_ns),
-                    write: write_time,
-                }),
-            },
-        })
-    }
-}
-
-impl Drop for Session {
-    fn drop(&mut self) {
-        // Unblock workers stuck sending (aborted submission), then close
-        // the job channels so idle workers exit, then reap.
-        self.rx_out.take();
-        self.job_txs.clear();
-        self.pool_txs.clear();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-/// Compute-worker body: blocks are sharded statically (block `i` → worker
-/// `i % workers`); each worker extracts its own tiles, reuses pooled
-/// result buffers, and stays alive across submissions until the session
-/// drops its job channel. Executor errors are forwarded per-tile (the
-/// worker keeps serving its remaining blocks so the drain stays exact).
-fn worker_loop(
-    shared: &Shared,
-    w: usize,
-    workers: usize,
-    rx_job: Receiver<(usize, usize)>,
-    pool_rx: Receiver<Vec<f32>>,
-    pool_tx: SyncSender<Vec<f32>>,
-    tx_out: SyncSender<TileResult>,
-) {
-    let mut tile = Vec::new();
-    let mut ptile = Vec::new();
-    while let Ok((spec_i, src)) = rx_job.recv() {
-        let specs = shared.specs.read().expect("spec cache poisoned");
-        let (spec, blocks) = &specs[spec_i];
-        let cur = shared.bufs[src].read().expect("grid pair poisoned");
-        let power = shared.power.read().expect("power slot poisoned");
-        for (i, b) in blocks.iter().enumerate().skip(w).step_by(workers) {
-            let t0 = Instant::now();
-            extract_tile(&cur, b, &shared.tile, &mut tile);
-            let pw = power.as_ref().map(|pg| {
-                extract_tile(pg, b, &shared.tile, &mut ptile);
-                ptile.as_slice()
-            });
-            let t1 = Instant::now();
-            let mut out = match pool_rx.try_recv() {
-                Ok(buf) => buf,
-                Err(_) => {
-                    shared.pool_misses.fetch_add(1, Ordering::Relaxed);
-                    Vec::new()
-                }
-            };
-            let res = shared.exec.run_tile_into(spec, &tile, pw, &shared.coeffs, &mut out);
-            shared
-                .extract_ns
-                .fetch_add((t1 - t0).as_nanos() as u64, Ordering::Relaxed);
-            shared
-                .compute_ns
-                .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            let msg = match res {
-                Ok(()) => (i, Ok(out)),
-                Err(e) => {
-                    // Recirculate the buffer of a failed tile so errors
-                    // never shrink the pool.
-                    let _ = pool_tx.try_send(out);
-                    (i, Err(e))
-                }
-            };
-            if tx_out.send(msg).is_err() {
-                return; // session is tearing down
-            }
         }
     }
 }

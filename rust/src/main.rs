@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run       execute a stencil workload through the engine
 //!   batch     submit N workloads through one warm engine session
+//!   serve     multi-tenant stress driver: N clients over ONE shared pool
 //!   verify    run every execution path against the scalar oracle
 //!   stencil   list / show the registered stencil programs
 //!   dse       §5.3 design-space exploration on the board simulator
@@ -57,6 +58,7 @@ fn dispatch(sub: &str, args: &Args) -> anyhow::Result<ExitCode> {
     let result = match sub {
         "run" => cmd_run(args),
         "batch" => cmd_batch(args),
+        "serve" => cmd_serve(args),
         "verify" => cmd_verify(args),
         "stencil" => cmd_stencil(args),
         "dse" => cmd_dse(args),
@@ -110,6 +112,11 @@ USAGE: fstencil <subcommand> [options]
   batch     --stencil <name> --dims H,W[,D] --iters N --jobs J
             [--backend scalar|vec|stream] [--par-vec V] [--tile a,b]
             [--workers W] [--check]   N workloads through one warm session
+  serve     --clients N --jobs M [--workers W] [--queue D] [--iters I]
+            [--stencil <name>] [--backend <spec>] [--dims H,W[,D]] [--check]
+            closed-loop multi-tenant stress: N clients (mixed stencils x
+            backends unless pinned) share ONE worker pool; reports
+            aggregate throughput, per-client max queue wait and fairness
   verify    [--backend scalar|vec|stream|pjrt|auto] [--par-vec V]
   stencil   list                      registered programs + characteristics
             show <name>               one program's tap table
@@ -549,6 +556,190 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
     );
     if check {
         println!("  verification vs scalar oracle: all {jobs} jobs OK");
+    }
+    Ok(())
+}
+
+/// `serve`: the closed-loop multi-tenant stress driver. N clients — each
+/// with its own stencil × backend plan unless `--stencil`/`--backend` pin
+/// one — submit M jobs apiece through ONE [`fstencil::engine::EngineServer`]
+/// worker pool, as fast as their bounded queues admit. Reports aggregate
+/// throughput, per-client max queue wait (the fairness observable) and the
+/// shared pool's reuse counters.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use fstencil::engine::DEFAULT_QUEUE_DEPTH;
+
+    let clients = args.opt_usize("clients").unwrap_or(4).max(1);
+    let jobs = args.opt_usize("jobs").unwrap_or(8).max(1);
+    let workers = args.opt_usize("workers").unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
+    });
+    let queue = args.opt_usize("queue").unwrap_or(DEFAULT_QUEUE_DEPTH).max(1);
+    let iters = args.opt_usize("iters").unwrap_or(8);
+    let check = args.flag("check");
+
+    // Tenant mix: pinned stencil/backend when given, else cycle through
+    // the built-ins and the host backends so the pool serves a genuinely
+    // mixed load (the scheduler's whole point).
+    let stencil_cycle: Vec<StencilId> = match args.opt("stencil") {
+        Some(_) => vec![parse_stencil(args)?],
+        None => StencilKind::ALL_EXT.iter().map(|&k| StencilId::from(k)).collect(),
+    };
+    let backend_cycle: Vec<Backend> = match args.opt("backend") {
+        Some(spec) => vec![Backend::parse(spec)?],
+        None => vec![
+            Backend::Vec { par_vec: 4 },
+            Backend::Stream { par_vec: 4 },
+            Backend::Scalar,
+        ],
+    };
+    // With a pinned --stencil a mis-ranked --dims is unambiguous user
+    // error: fail loudly rather than silently running default grids. In
+    // the mixed-cycle case one --dims cannot fit both 2-D and 3-D
+    // tenants, so it applies only to matching-rank stencils.
+    if let (Some(d), Some(_)) = (args.opt_usize_list("dims"), args.opt("stencil")) {
+        let kind = stencil_cycle[0];
+        anyhow::ensure!(
+            d.len() == kind.ndim(),
+            "--dims has {} components but {} is {}-D",
+            d.len(),
+            kind,
+            kind.ndim()
+        );
+    }
+
+    let server = StencilEngine::new().serve(workers);
+    struct ClientOutcome {
+        label: String,
+        cells: u64,
+        max_wait: std::time::Duration,
+        sched_rounds: u64,
+        verified: bool,
+    }
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for i in 0..clients {
+        let kind = stencil_cycle[i % stencil_cycle.len()];
+        let backend = backend_cycle[i % backend_cycle.len()];
+        let dims = match args.opt_usize_list("dims") {
+            Some(d) if d.len() == kind.ndim() => d,
+            _ => {
+                if kind.ndim() == 2 {
+                    vec![128, 128]
+                } else {
+                    vec![24, 24, 24]
+                }
+            }
+        };
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(dims.clone())
+            .iterations(iters)
+            .backend(backend)
+            .build()?;
+        let coeffs = plan.coeffs.clone();
+        let client = server.open_with_queue(plan, queue)?;
+        let label = format!("{kind} {backend} {dims:?} x{iters}");
+        joins.push(std::thread::spawn(move || -> anyhow::Result<ClientOutcome> {
+            let mk_job = |j: u64| {
+                let mut g = match dims.as_slice() {
+                    [h, w] => Grid::new2d(*h, *w),
+                    [d, h, w] => Grid::new3d(*d, *h, *w),
+                    _ => unreachable!("plan validated dims"),
+                };
+                g.fill_random(i as u64 * 10_000 + j, 0.0, 1.0);
+                let power = kind.def().has_power.then(|| {
+                    let mut p = g.clone();
+                    p.fill_random(i as u64 * 10_000 + j + 5000, 0.0, 0.25);
+                    p
+                });
+                (g, power)
+            };
+            // Submit as fast as backpressure admits, then drain in order.
+            let mut handles = Vec::with_capacity(jobs);
+            for j in 0..jobs as u64 {
+                let (g, power) = mk_job(j);
+                let mut w = fstencil::engine::Workload::new(g);
+                if let Some(p) = power {
+                    w = w.power(p);
+                }
+                handles.push(client.submit(w)?);
+            }
+            let mut cells = 0u64;
+            let mut last = None;
+            for h in handles {
+                let out = h.wait()?;
+                cells += out.report.cell_updates;
+                last = Some(out.grid);
+            }
+            let verified = if check {
+                let (g, power) = mk_job(jobs as u64 - 1);
+                let want = reference::run(kind, &g, power.as_ref(), &coeffs, iters);
+                last.expect("jobs >= 1").max_abs_diff(&want) < 1e-3
+            } else {
+                true
+            };
+            let stats = client.stats();
+            Ok(ClientOutcome {
+                label,
+                cells,
+                max_wait: stats.max_queue_wait,
+                sched_rounds: stats.sched_rounds,
+                verified,
+            })
+        }));
+    }
+    let mut total_cells = 0u64;
+    let mut worst_wait = std::time::Duration::ZERO;
+    let mut failures = 0usize;
+    let mut outcomes = Vec::new();
+    for j in joins {
+        match j.join().expect("client thread panicked") {
+            Ok(o) => {
+                total_cells += o.cells;
+                worst_wait = worst_wait.max(o.max_wait);
+                if !o.verified {
+                    failures += 1;
+                }
+                outcomes.push(o);
+            }
+            Err(e) => {
+                eprintln!("client failed: {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "serve: {clients} clients x {jobs} jobs over {workers} shared workers \
+         (queue depth {queue})"
+    );
+    for o in &outcomes {
+        println!(
+            "  {:<44} {:>10.1} Mcell  max queue wait {:>8.2} ms  sched rounds {}",
+            o.label,
+            o.cells as f64 / 1e6,
+            o.max_wait.as_secs_f64() * 1e3,
+            o.sched_rounds,
+        );
+    }
+    println!(
+        "  aggregate: {:.1} Mcell/s over {:.3}s; max queue wait {:.2} ms",
+        total_cells as f64 / wall.as_secs_f64() / 1e6,
+        wall.as_secs_f64(),
+        worst_wait.as_secs_f64() * 1e3,
+    );
+    println!(
+        "  pool: {} threads spawned (one shared pool), {} fresh tile buffers \
+         (cap {})",
+        server.threads_spawned(),
+        server.fresh_tile_allocs(),
+        server.tile_pool_capacity(),
+    );
+    // A dead client is a failure with or without --check (scripts rely on
+    // the exit code); --check additionally verified results above.
+    anyhow::ensure!(failures == 0, "{failures} client(s) failed");
+    if check {
+        println!("  verification vs scalar oracle: all clients OK");
     }
     Ok(())
 }

@@ -45,6 +45,18 @@ impl Rng {
         self.next_u64() & 1 == 1
     }
 
+    /// Uniform in [lo, hi] inclusive, signed — offsets for generated
+    /// stencil taps.
+    pub fn isize_in(&mut self, lo: isize, hi: isize) -> isize {
+        assert!(lo <= hi);
+        lo + (self.next_u64() % (hi - lo + 1) as u64) as isize
+    }
+
+    /// True with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
     /// Pick one element of a slice.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         assert!(!xs.is_empty());
@@ -117,7 +129,12 @@ mod tests {
             assert!((0.0..1.0).contains(&f));
             let p = r.pow2_in(1, 6);
             assert!(p.is_power_of_two() && (2..=64).contains(&p));
+            let s = r.isize_in(-3, 3);
+            assert!((-3..=3).contains(&s));
         }
+        // chance(0) never, chance(1) always
+        assert!(!(0..100).any(|_| r.chance(0.0)));
+        assert!((0..100).all(|_| r.chance(1.0)));
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Integration: the engine layer — typed `Backend` selection and warm
-//! `Session` reuse. The acceptance properties of the API redesign:
+//! Integration: the engine layer — typed `Backend` selection, warm
+//! `Session` reuse, and the multi-tenant `EngineServer`. The acceptance
+//! properties:
 //!
 //! * `Backend::parse` / `Display` round-trip (property-tested).
 //! * All three host backends are bit-identical to the scalar oracle
@@ -8,9 +9,21 @@
 //! * A warm session reuses its worker threads and tile-buffer pools:
 //!   the spawn counter never grows after construction and the
 //!   fresh-allocation counter plateaus after the first submission.
+//! * Concurrency stress: 8 client threads × 32 mixed-stencil /
+//!   mixed-backend submissions through ONE server — no deadlock (every
+//!   wait is bounded), every result bit-equal to a serial oracle run,
+//!   exactly one shared pool, and every client's max queue wait inside
+//!   the fairness bound.
+//! * Every error path — shape mismatch, zero-iteration workloads,
+//!   submit-after-shutdown, cancelled jobs — returns a typed
+//!   `EngineError`, never a panic.
+
+use std::time::Duration;
 
 use fstencil::coordinator::PlanBuilder;
-use fstencil::engine::{Backend, EngineError, StencilEngine, Workload};
+use fstencil::engine::{
+    Backend, EngineError, EngineServer, StencilEngine, Workload,
+};
 use fstencil::stencil::{reference, Grid, StencilKind};
 use fstencil::util::prop::{forall, Rng};
 
@@ -247,6 +260,252 @@ fn session_survives_a_failed_submission() {
     );
     let out = session.submit(input).wait().unwrap();
     assert!(out.grid.max_abs_diff(&want) < 1e-3, "session unusable after error");
+}
+
+/// Wait bound for the stress test: long enough for the slowest CI
+/// machine, short enough that a deadlock fails the test instead of
+/// hanging it. The *fairness* assertion below is much tighter in
+/// practice — DRR serves every backlogged client each rotation.
+const STRESS_WAIT: Duration = Duration::from_secs(60);
+
+/// The multi-tenant acceptance test: 8 client threads × 32 mixed-stencil
+/// / mixed-backend submissions through ONE `EngineServer`.
+///
+/// * no deadlock: every wait is bounded (`wait_timeout`, panic on expiry);
+/// * every result is bit-equal to a serial oracle run (the same inputs
+///   through a dedicated single-tenant session, same plan);
+/// * exactly one shared pool: `threads_spawned` equals the worker count
+///   before, during and after;
+/// * fairness: every client completes all jobs and its max queue wait
+///   stays inside the bound.
+#[test]
+fn stress_eight_clients_bit_equal_to_serial_oracle() {
+    const CLIENTS: usize = 8;
+    const JOBS: usize = 32;
+    let mk_plan = |i: usize| {
+        let kinds = [
+            StencilKind::Diffusion2D,
+            StencilKind::Hotspot2D,
+            StencilKind::Diffusion3D,
+            StencilKind::Diffusion2DR2,
+            StencilKind::Hotspot3D,
+            StencilKind::Diffusion2D,
+            StencilKind::Hotspot2D,
+            StencilKind::Diffusion3D,
+        ];
+        let backends = [
+            Backend::Scalar,
+            Backend::Vec { par_vec: 4 },
+            Backend::Stream { par_vec: 2 },
+            Backend::Vec { par_vec: 2 },
+            Backend::Stream { par_vec: 4 },
+            Backend::Vec { par_vec: 4 },
+            Backend::Scalar,
+            Backend::Stream { par_vec: 2 },
+        ];
+        let kind = kinds[i];
+        let (dims, tile) = if kind.ndim() == 2 {
+            (vec![48usize, 40], vec![16usize, 16])
+        } else {
+            (vec![16usize, 16, 16], vec![8usize, 8, 8])
+        };
+        (
+            kind,
+            PlanBuilder::new(kind)
+                .grid_dims(dims)
+                .iterations(4)
+                .tile(tile)
+                .backend(backends[i])
+                .build()
+                .unwrap(),
+        )
+    };
+    let job_iters = |j: usize| [4usize, 2, 5][j % 3];
+    let mk_input = |kind: StencilKind, i: usize, j: usize| {
+        let dims: Vec<usize> =
+            if kind.ndim() == 2 { vec![48, 40] } else { vec![16, 16, 16] };
+        let grid = mk_grid(kind.ndim(), &dims, (i * 1000 + j) as u64);
+        let power = kind.def().has_power.then(|| {
+            mk_grid(kind.ndim(), &dims, (i * 1000 + j + 500) as u64)
+        });
+        (grid, power)
+    };
+
+    let server = EngineServer::start(4);
+    assert_eq!(server.threads_spawned(), 4);
+    let stress_t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for i in 0..CLIENTS {
+        let (kind, plan) = mk_plan(i);
+        let client = server.open(plan).unwrap();
+        joins.push(std::thread::spawn(move || {
+            let mut outs: Vec<Grid> = Vec::with_capacity(JOBS);
+            let mut handles = std::collections::VecDeque::new();
+            for j in 0..JOBS {
+                let (grid, power) = mk_input(kind, i, j);
+                let mut w = Workload::new(grid).iterations(job_iters(j));
+                if let Some(p) = power {
+                    w = w.power(p);
+                }
+                handles.push_back(client.submit(w).expect("submission accepted"));
+                // Drain opportunistically so the queue (and this test's
+                // memory) stays small while still overlapping submissions.
+                while handles.len() > 4 {
+                    let h = handles.pop_front().unwrap();
+                    assert!(h.wait_timeout(STRESS_WAIT), "client {i}: job hung");
+                    outs.push(h.wait().expect("job succeeds").grid);
+                }
+            }
+            while let Some(h) = handles.pop_front() {
+                assert!(h.wait_timeout(STRESS_WAIT), "client {i}: job hung");
+                outs.push(h.wait().expect("job succeeds").grid);
+            }
+            let stats = client.stats();
+            (i, outs, stats)
+        }));
+    }
+    let mut results = Vec::new();
+    for j in joins {
+        results.push(j.join().expect("client thread panicked"));
+    }
+    // The fairness bound: with DRR, a job's first tile dispatches within
+    // two credit rotations, so no submit→first-dispatch wait can approach
+    // the whole run's duration (which is what starvation looks like). A
+    // small floor absorbs scheduler-timing noise on slow CI machines.
+    let stress_wall = stress_t0.elapsed();
+    let fairness_bound = (stress_wall / 4).max(Duration::from_secs(2));
+    // One pool, before and after; reuse bounded by the pool capacity.
+    assert_eq!(server.threads_spawned(), 4, "pool must never re-spawn");
+    assert!(
+        server.fresh_tile_allocs() <= server.tile_pool_capacity() as u64,
+        "tile allocations exceeded the shared pool capacity"
+    );
+    // Serial oracle: the same inputs through a dedicated warm session per
+    // plan; multi-tenant results must be bit-equal.
+    for (i, outs, stats) in &results {
+        assert_eq!(stats.jobs_completed, JOBS as u64, "client {i} lost jobs");
+        assert_eq!(stats.jobs_failed, 0, "client {i} had failures");
+        assert!(
+            stats.max_queue_wait < fairness_bound,
+            "client {i}: queue wait {:?} exceeds the fairness bound {fairness_bound:?} \
+             (run took {stress_wall:?})",
+            stats.max_queue_wait
+        );
+        assert!(stats.sched_served > 0, "client {i} never scheduled");
+        let (kind, plan) = mk_plan(*i);
+        let mut oracle = StencilEngine::new().session_with_workers(plan, 2).unwrap();
+        for j in 0..JOBS {
+            let (grid, power) = mk_input(kind, *i, j);
+            let mut w = Workload::new(grid).iterations(job_iters(j));
+            if let Some(p) = power {
+                w = w.power(p);
+            }
+            let want = oracle.submit(w).wait().expect("oracle job succeeds").grid;
+            let got = &outs[j];
+            assert!(
+                got.data().iter().zip(want.data()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "client {i} job {j}: multi-tenant result not bit-equal to serial oracle"
+            );
+        }
+    }
+}
+
+#[test]
+fn zero_iteration_workload_is_a_typed_error() {
+    // Through the warm session facade...
+    let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+        .grid_dims(vec![64, 64])
+        .iterations(4)
+        .build()
+        .unwrap();
+    let mut session = StencilEngine::new().session_with_workers(plan.clone(), 1).unwrap();
+    let err = session
+        .submit(Workload::new(mk_grid(2, &[64, 64], 1)).iterations(0))
+        .wait()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::InvalidPlan(_)), "{err}");
+    // ...and synchronously at the server boundary.
+    let server = EngineServer::start(1);
+    let client = server.open(plan).unwrap();
+    let err = client
+        .submit(Workload::new(mk_grid(2, &[64, 64], 2)).iterations(0))
+        .unwrap_err();
+    assert!(matches!(err, EngineError::InvalidPlan(_)), "{err}");
+    // the session and the client both survive the rejected job
+    assert!(session.submit(mk_grid(2, &[64, 64], 3)).is_ok());
+    assert!(client.submit(mk_grid(2, &[64, 64], 4)).is_ok());
+}
+
+#[test]
+fn server_submit_after_shutdown_is_a_typed_error() {
+    let mut server = EngineServer::start(2);
+    let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+        .grid_dims(vec![64, 64])
+        .iterations(2)
+        .build()
+        .unwrap();
+    let client = server.open(plan).unwrap();
+    assert!(client.submit(mk_grid(2, &[64, 64], 1)).is_ok());
+    server.shutdown();
+    let err = client.submit(mk_grid(2, &[64, 64], 2)).unwrap_err();
+    assert_eq!(err, EngineError::Shutdown);
+}
+
+#[test]
+fn server_rejects_mismatched_grid_dims_synchronously() {
+    let server = EngineServer::start(1);
+    let plan = PlanBuilder::new(StencilKind::Diffusion3D)
+        .grid_dims(vec![16, 16, 16])
+        .iterations(2)
+        .tile(vec![8, 8, 8])
+        .build()
+        .unwrap();
+    let client = server.open(plan).unwrap();
+    let err = client.submit(Grid::new3d(8, 8, 8)).unwrap_err();
+    assert_eq!(
+        err,
+        EngineError::GridShape { expected: vec![16, 16, 16], got: vec![8, 8, 8] }
+    );
+    // power-shape errors are typed too
+    let err = client
+        .submit(Workload::new(mk_grid(3, &[16, 16, 16], 1)).power(Grid::new3d(8, 8, 8)))
+        .unwrap_err();
+    assert!(matches!(err, EngineError::PowerMismatch { .. }), "{err}");
+}
+
+#[test]
+fn cancelled_job_wait_returns_cancelled() {
+    // Cancel an ACTIVE job mid-flight on a single-worker server: the
+    // in-flight tiles drain, wait() returns the typed error (or Ok if the
+    // job won the race), and the client keeps working afterwards.
+    let mut server = EngineServer::start(1);
+    let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+        .grid_dims(vec![192, 192])
+        .iterations(16)
+        .tile(vec![32, 32])
+        .build()
+        .unwrap();
+    let client = server.open(plan).unwrap();
+    let big = client.submit(mk_grid(2, &[192, 192], 7)).unwrap();
+    big.cancel();
+    assert!(big.wait_timeout(STRESS_WAIT), "cancelled job hung");
+    match big.wait() {
+        Err(EngineError::Cancelled) => {}
+        Ok(_) => {} // completed before the cancel landed — legal race
+        Err(other) => panic!("expected Cancelled, got {other}"),
+    }
+    // the client is healthy after a cancellation
+    let input = mk_grid(2, &[192, 192], 8);
+    let want = reference::run(
+        StencilKind::Diffusion2D,
+        &input,
+        None,
+        StencilKind::Diffusion2D.def().default_coeffs,
+        16,
+    );
+    let out = client.submit(input).unwrap().wait().unwrap();
+    assert!(out.grid.max_abs_diff(&want) < 1e-3);
+    server.shutdown();
 }
 
 #[test]

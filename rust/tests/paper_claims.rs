@@ -3,7 +3,8 @@
 //! These are *shape* checks — who wins, by what factor, which resource
 //! binds, which accuracy band — not absolute-number matching (DESIGN.md §6).
 
-use fstencil::model::projection::project_stratix10;
+use fstencil::model::projection::{project_best, project_stratix10};
+use fstencil::model::{Params, PerfModel};
 use fstencil::report::{table4_params, table4_rows, TABLE4_CONFIGS, TABLE4_PAPER_MEASURED_GBPS};
 use fstencil::simulator::{BoardSim, DeviceKind, Resource};
 use fstencil::stencil::StencilKind;
@@ -216,6 +217,136 @@ fn diffusion2d_a10_40pct_over_hotspot() {
     };
     let ratio = best(StencilKind::Diffusion2D) / best(StencilKind::Hotspot2D);
     assert!((1.15..=1.7).contains(&ratio), "ratio {ratio} (paper: 1.4)");
+}
+
+/// Golden pinning: `PerfModel::estimate` (Eqs 3–9, the pure analytic
+/// model) on Arria-10 Table-4 configurations for ALL FIVE built-in
+/// stencils, frozen at a fixed `f_max` of 300 MHz so the expected values
+/// are exact arithmetic, independent of the fmax model. Four rows are the
+/// paper's own Table-4 Arria-10 best configs; `diffusion2dr2` is the
+/// repo-extension analogue (radius-2 halves the schedulable `par_time`).
+/// A model refactor that changes any Eq-3..9 term breaks these pins.
+#[test]
+fn golden_perfmodel_table4_arria10_all_five_stencils() {
+    // (stencil, par_vec, par_time, bsize, dim, expected GB/s, expected
+    // passes) at f_max = 300 MHz, th_max = 34.1 GB/s (Arria 10), 1000
+    // iterations. Expected values computed by independent mirror
+    // arithmetic of Eqs 3–9; tolerance 0.1% (f64 op-order slack).
+    let cases: [(StencilKind, usize, usize, usize, usize, f64, u64); 5] = [
+        (StencilKind::Diffusion2D, 8, 36, 4096, 16096, 681.144, 28),
+        (StencilKind::Hotspot2D, 4, 36, 4096, 16096, 509.726, 28),
+        (StencilKind::Diffusion2DR2, 8, 16, 4096, 16128, 302.959, 63),
+        (StencilKind::Diffusion3D, 16, 12, 256, 696, 378.919, 84),
+        (StencilKind::Hotspot3D, 8, 16, 128, 576, 321.522, 63),
+    ];
+    let model = PerfModel::new(34.1);
+    for (kind, pv, pt, bsize, dim, want_gbps, want_passes) in cases {
+        let dims = vec![dim; kind.ndim()];
+        let p = Params::new(kind, pv, pt, bsize, &dims, 1000, 300.0);
+        let m = model.estimate(&p);
+        assert_eq!(m.passes, want_passes, "{kind}: pass count drifted");
+        let rel = (m.throughput_gbps - want_gbps).abs() / want_gbps;
+        assert!(
+            rel < 1e-3,
+            "{kind}: modeled {:.3} GB/s, pinned {want_gbps} (drift {:.4}%)",
+            m.throughput_gbps,
+            rel * 100.0
+        );
+        // GFLOP/s must stay consistent through the stencil's bytes/FLOP.
+        let gflops = kind.def().gflops_from_gbps(m.throughput_gbps);
+        assert!(
+            (m.gflops - gflops).abs() / gflops < 1e-9,
+            "{kind}: GFLOP/s no longer derived from GB/s via bytes-per-FLOP"
+        );
+    }
+}
+
+/// Golden pinning: the model reproduces the paper's published *estimated*
+/// throughputs at the paper's published `f_max` values — the Arria-10
+/// headline row and all three Stratix-V Diffusion-2D rows. These are the
+/// paper-anchored twins of the frozen-fmax pins above.
+#[test]
+fn golden_perfmodel_reproduces_paper_estimates() {
+    // Arria 10, Diffusion 2D, 8×36 @ 343.76 MHz -> 780.5 GB/s (Table 4).
+    let a10 = PerfModel::new(34.1).estimate(&Params::new(
+        StencilKind::Diffusion2D,
+        8,
+        36,
+        4096,
+        &[16096, 16096],
+        1000,
+        343.76,
+    ));
+    assert!(
+        (a10.throughput_gbps - 780.5).abs() < 1.0,
+        "A10 anchor: {:.3} GB/s vs paper 780.5",
+        a10.throughput_gbps
+    );
+    // Stratix V rows @ published fmax -> published estimates (0.1%).
+    let sv = PerfModel::new(25.6);
+    for (pv, pt, dim, fmax, want) in [
+        (8usize, 6usize, 16336usize, 281.76, 107.861),
+        (4, 12, 16288, 294.20, 111.829),
+        (2, 24, 16192, 302.48, 114.720),
+    ] {
+        let m = sv.estimate(&Params::new(
+            StencilKind::Diffusion2D,
+            pv,
+            pt,
+            4096,
+            &[dim, dim],
+            1000,
+            fmax,
+        ));
+        let rel = (m.throughput_gbps - want).abs() / want;
+        assert!(
+            rel < 1e-3,
+            "S-V {pv}x{pt}: {:.3} GB/s vs paper {want}",
+            m.throughput_gbps
+        );
+    }
+}
+
+/// Golden pinning: Table 6 rows stay internally consistent (GB/s ↔
+/// GFLOP/s through each stencil's bytes-per-FLOP) and the projection
+/// extends to the fifth (repo-extension) stencil with the expected
+/// resource-driven shape: radius-2 doubles the DSP demand per cell, so
+/// `diffusion2dr2` projects strictly below `diffusion2d` in GB/s on the
+/// same device, within a sane band.
+#[test]
+fn golden_table6_consistency_and_r2_extension() {
+    let p = project_stratix10(5000);
+    assert_eq!(p.rows.len(), 8, "paper Table 6 has 2 devices x 4 stencils");
+    for r in &p.rows {
+        let bpf = r.stencil.def().bytes_per_flop();
+        let derived = r.perf_gbps / bpf;
+        assert!(
+            (derived - r.perf_gflops).abs() / r.perf_gflops < 1e-9,
+            "{:?}/{}: GFLOP/s decoupled from GB/s",
+            r.device,
+            r.stencil
+        );
+        assert!(r.dsp_frac <= 1.0 && r.mem_bits_frac <= 1.0, "over-mapped row");
+    }
+    for dev in [DeviceKind::Stratix10Gx2800, DeviceKind::Stratix10Mx2100] {
+        let r2 = project_best(dev, StencilKind::Diffusion2DR2, 5000)
+            .expect("radius-2 extension must project");
+        let d2d = p
+            .rows
+            .iter()
+            .find(|r| r.device == dev && r.stencil == StencilKind::Diffusion2D)
+            .unwrap();
+        let ratio = r2.perf_gbps / d2d.perf_gbps;
+        assert!(
+            (0.2..1.0).contains(&ratio),
+            "{dev:?}: r2 projects {:.1} GB/s vs d2d {:.1} (ratio {ratio:.2}; \
+             radius-2 must cost temporal parallelism, not win it)",
+            r2.perf_gbps,
+            d2d.perf_gbps
+        );
+        let bpf = StencilKind::Diffusion2DR2.def().bytes_per_flop();
+        assert!((r2.perf_gbps / bpf - r2.perf_gflops).abs() / r2.perf_gflops < 1e-9);
+    }
 }
 
 #[test]
