@@ -523,8 +523,97 @@ fn main() {
          dedicated-session aggregate ({})",
         if mt_ratio >= 0.9 { "PASS" } else { "FAIL: scheduler overhead too high" }
     ));
+    let inproc_mean = multi.summary.mean;
     rep.push(multi);
     rep.push(dedicated);
+
+    // --- wire front door ablation: the SAME three-tenant mixed load as
+    //     server_multitenant, but every client speaks the TCP job
+    //     protocol through a loopback WireFrontend (frame codec, base64
+    //     grid payloads, job ledger and reaper all on the hot path), vs
+    //     the in-process ClientSessions above at EQUAL worker count.
+    //     Acceptance: >= 0.85x — the wire may tax the serving path by at
+    //     most ~15%. Environments without loopback (some sandboxes)
+    //     skip with an explicit payload line. ------------------------
+    use fstencil::engine::wire::{
+        PlanSpec, WaitOutcome, WireClient, WireConfig, WireFrontend,
+    };
+    let probe =
+        WireFrontend::bind("127.0.0.1:0", engine.serve(1), WireConfig::default());
+    match probe {
+        Err(e) => {
+            rep.payload(format!(
+                "wire_vs_inproc ablation: SKIPPED (loopback unavailable: {e})"
+            ));
+        }
+        Ok(mut probe) => {
+            probe.shutdown();
+            drop(probe);
+            let wire = b.bench_with_metric(
+                &format!("wire_3c_x{mjobs}jobs_w{mworkers}"),
+                "Mcell-updates/s",
+                mt_updates / 1e6,
+                || {
+                    let mut front = WireFrontend::bind(
+                        "127.0.0.1:0",
+                        engine.serve(mworkers),
+                        WireConfig::default(),
+                    )
+                    .expect("loopback bind (probed above)");
+                    let addr = front.local_addr().to_string();
+                    let mut threads = Vec::new();
+                    for (plan, inputs) in mk_mt_plans().into_iter().zip(&mt_inputs) {
+                        let spec = PlanSpec::from_plan(&plan);
+                        let addr = addr.clone();
+                        let inputs = inputs.clone();
+                        threads.push(std::thread::spawn(move || {
+                            let mut client =
+                                WireClient::connect(&addr).expect("connect");
+                            let session = client.open(spec, vec![]).expect("open");
+                            let jobs: Vec<u64> = inputs
+                                .iter()
+                                .map(|(g, power)| {
+                                    client
+                                        .submit(session, g, power.as_ref(), None)
+                                        .expect("submission accepted")
+                                })
+                                .collect();
+                            for job in jobs {
+                                let deadline = std::time::Duration::from_secs(300);
+                                match client.wait_result(job, deadline).expect("wait") {
+                                    WaitOutcome::Done { grid, .. } => {
+                                        std::hint::black_box(grid);
+                                    }
+                                    other => panic!("wire job ended {other:?}"),
+                                }
+                            }
+                        }));
+                    }
+                    for t in threads {
+                        t.join().expect("wire client thread");
+                    }
+                    front.shutdown();
+                },
+            );
+            let wire_ratio = rep.ablation(
+                "wire_vs_inproc",
+                inproc_mean,
+                wire.summary.mean,
+                "acceptance: >= 0.85x in-process ClientSessions at equal worker \
+                 count",
+            );
+            rep.payload(format!(
+                "wire_vs_inproc ablation: TCP front door aggregate is \
+                 {wire_ratio:.2}x the in-process shared-pool aggregate ({})",
+                if wire_ratio >= 0.85 {
+                    "PASS"
+                } else {
+                    "FAIL: wire overhead too high"
+                }
+            ));
+            rep.push(wire);
+        }
+    }
 
     // Smoke runs are correctness checks, not measurements — never let
     // them overwrite the persisted perf trajectory.

@@ -1,0 +1,91 @@
+//! The wire front door, end to end in one process: bind a
+//! [`WireFrontend`] over a shared engine pool, speak the TCP job
+//! protocol to it with [`WireClient`], and show that wire tenants and
+//! in-process sessions multiplex onto the SAME worker pool under one
+//! fairness discipline.
+//!
+//! The paper's serving model (§3.2: configure once, invoke many times)
+//! stops at the host API boundary; the wire layer extends it across a
+//! socket — length-prefixed JSON frames, base64 grid payloads, a durable
+//! job ledger with retry — without touching the numerics: results are
+//! bit-identical to an in-process run of the same plan.
+//!
+//!     cargo run --release --example wire_client
+
+use fstencil::engine::wire::{PlanSpec, WaitOutcome, WireClient, WireConfig, WireFrontend};
+use fstencil::engine::{StencilEngine, Workload};
+use fstencil::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // One shared pool behind the front door. `127.0.0.1:0` picks an
+    // ephemeral port; sandboxes without loopback skip gracefully.
+    let server = StencilEngine::new().serve(4);
+    let mut front = match WireFrontend::bind("127.0.0.1:0", server, WireConfig::default()) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("SKIP: loopback unavailable in this environment ({e})");
+            return Ok(());
+        }
+    };
+    let addr = front.local_addr().to_string();
+    println!("front door listening on {addr}");
+
+    // A wire tenant: open a session by shipping the plan as JSON, submit
+    // a grid (LE-f32 bytes in base64), wait for the result.
+    let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+        .grid_dims(vec![192, 192])
+        .iterations(12)
+        .backend(Backend::Vec { par_vec: 8 })
+        .build()?;
+    let spec = PlanSpec::from_plan(&plan);
+    let mut client = WireClient::connect(&addr)?;
+    let session = client.open(spec, vec![])?;
+
+    let mut input = Grid::new2d(192, 192);
+    input.fill_random(7, 0.0, 1.0);
+    let job = client.submit(session, &input, None, None)?;
+    println!("submitted wire job {job}");
+
+    // Meanwhile an in-process tenant shares the same pool: the wire is a
+    // front door, not a separate engine.
+    let local = front.open_local(plan)?;
+    let mut local_in = input.clone();
+    local_in.fill_random(8, 0.0, 1.0);
+    let local_out = local.submit(Workload::new(local_in))?.wait()?;
+    println!(
+        "in-process tenant ran {} tiles on the same pool",
+        local_out.report.tiles_executed
+    );
+
+    let wire_grid = match client.wait_result(job, std::time::Duration::from_secs(120))? {
+        WaitOutcome::Done { grid, attempts, .. } => {
+            println!("wire job {job} done (attempt {attempts})");
+            grid
+        }
+        other => anyhow::bail!("wire job ended unexpectedly: {other:?}"),
+    };
+
+    // Bit-identity: the socket may not perturb the numerics.
+    let mut oracle = StencilEngine::new().session(
+        PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![192, 192])
+            .iterations(12)
+            .backend(Backend::Vec { par_vec: 8 })
+            .build()?,
+    )?;
+    let want = oracle.submit(input).wait()?.grid;
+    anyhow::ensure!(
+        wire_grid.data().iter().zip(want.data()).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "wire result is not bit-identical to the in-process run"
+    );
+    println!("wire result is bit-identical to the in-process run");
+
+    // Per-tenant wire accounting rides on the same stats surface.
+    let stats = client.stats(session)?;
+    println!("tenant stats: {stats}");
+
+    client.close_session(session)?;
+    front.shutdown();
+    println!("wire example OK");
+    Ok(())
+}

@@ -23,6 +23,10 @@
 //!   tile-buffer pool and grid double-buffer reused by every
 //!   [`Session::submit`].
 //! * [`EngineError`] — typed errors at the public boundary.
+//! * [`wire`] — the TCP front door: [`wire::WireFrontend`] multiplexes
+//!   network tenants onto an [`EngineServer`] (length-prefixed JSON
+//!   frames, durable job ledger, retry and quotas); [`wire::WireClient`]
+//!   is the typed blocking client.
 //!
 //! ```no_run
 //! use fstencil::prelude::*;
@@ -79,13 +83,14 @@ mod error;
 mod scheduler;
 mod server;
 mod session;
+pub mod wire;
 
 pub use backend::Backend;
 pub use error::EngineError;
 pub use scheduler::DeficitRoundRobin;
 pub use server::{
     ClientSession, ClientStats, EngineServer, JobHandle, JobOutput, Workload,
-    DEFAULT_QUEUE_DEPTH,
+    DEFAULT_QUEUE_DEPTH, QUEUE_WAIT_BUCKETS,
 };
 pub use session::Session;
 

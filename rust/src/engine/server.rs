@@ -96,6 +96,11 @@ pub struct JobOutput {
     pub report: ExecReport,
 }
 
+/// Buckets in [`ClientStats::queue_wait_hist`]: bucket `i` counts jobs
+/// whose submit→first-dispatch wait fell in `[2^i, 2^(i+1))` µs; the last
+/// bucket absorbs everything from ~33 s up.
+pub const QUEUE_WAIT_BUCKETS: usize = 16;
+
 /// Per-client service counters, snapshotted by [`ClientSession::stats`].
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ClientStats {
@@ -110,6 +115,9 @@ pub struct ClientStats {
     /// Longest submit→first-tile-dispatch wait any of this client's jobs
     /// experienced — the fairness observable the stress tests bound.
     pub max_queue_wait: Duration,
+    /// Power-of-two histogram of submit→first-dispatch waits in µs (the
+    /// wire front door surfaces this per tenant).
+    pub queue_wait_hist: [u64; QUEUE_WAIT_BUCKETS],
     /// Cell-update cost the scheduler charged this client (DRR account).
     pub sched_served: u64,
     /// DRR credit-replenishment rounds this client waited through.
@@ -348,6 +356,7 @@ struct ClientCounters {
     tiles_executed: u64,
     cell_updates: u64,
     max_queue_wait: Duration,
+    queue_wait_hist: [u64; QUEUE_WAIT_BUCKETS],
 }
 
 struct ClientState {
@@ -658,6 +667,7 @@ impl ClientSession {
             tiles_executed: c.stats.tiles_executed,
             cell_updates: c.stats.cell_updates,
             max_queue_wait: c.stats.max_queue_wait,
+            queue_wait_hist: c.stats.queue_wait_hist,
             sched_served: st.drr.served(self.id),
             sched_rounds: st.drr.rounds(self.id),
         }
@@ -1032,6 +1042,11 @@ fn dispatch(st: &mut SchedState, inner: &ServerInner) {
             if wait > c.stats.max_queue_wait {
                 c.stats.max_queue_wait = wait;
             }
+            // log2 bucket of the wait in µs; waits under 1 µs land in
+            // bucket 0, the last bucket catches the unbounded tail.
+            let us = (wait.as_micros() as u64).max(1);
+            let bucket = (63 - us.leading_zeros() as usize).min(QUEUE_WAIT_BUCKETS - 1);
+            c.stats.queue_wait_hist[bucket] += 1;
         }
         let task = TileTask {
             shared: Arc::clone(&c.shared),
@@ -1056,20 +1071,31 @@ fn dispatch(st: &mut SchedState, inner: &ServerInner) {
     }
 }
 
-/// Complete every unfinished job with [`EngineError::Shutdown`]. Runs
-/// once all in-flight tiles have drained.
+/// Complete every unfinished job. Runs once all in-flight tiles have
+/// drained. A job whose cancel flag is set completes as `Cancelled`, not
+/// `Shutdown` — the tenant asked for it to stop before the server did,
+/// and that precedence holds even when the Cancel *event* never reached
+/// the scheduler (racing cancel/shutdown threads, or events dropped at
+/// scheduler exit).
 fn finish_shutdown(st: &mut SchedState, inner: &ServerInner) {
+    let mut complete = |c: &mut ClientState, job: &JobInner| {
+        if job.cancelled.load(Ordering::SeqCst) {
+            c.stats.jobs_cancelled += 1;
+            job.complete(Err(EngineError::Cancelled));
+        } else {
+            c.stats.jobs_failed += 1;
+            job.complete(Err(EngineError::Shutdown));
+        }
+    };
     for slot in &mut st.clients {
         let Some(c) = slot else { continue };
         if let Some(a) = c.active.take() {
             debug_assert_eq!(a.inflight, 0, "shutdown before drain completed");
             *c.shared.power.write().expect("power slot poisoned") = None;
-            c.stats.jobs_failed += 1;
-            a.job.complete(Err(EngineError::Shutdown));
+            complete(c, &a.job);
         }
         while let Some(job) = c.queue.pop_front() {
-            c.stats.jobs_failed += 1;
-            job.complete(Err(EngineError::Shutdown));
+            complete(c, &job);
         }
     }
     inner.space_cv.notify_all();
@@ -1310,5 +1336,31 @@ mod tests {
         // some prefix may have completed before shutdown; the rest must
         // have failed with the typed error, and nothing may hang
         assert!(finished <= 6);
+    }
+
+    #[test]
+    fn shutdown_reports_cancelled_jobs_as_cancelled() {
+        // The lost-event race: a job's cancel *flag* is set but the
+        // Cancel *event* never reaches the scheduler before shutdown
+        // (concurrent cancel/shutdown threads). finish_shutdown must
+        // still honor the flag — Cancelled, not Shutdown.
+        let mut server = EngineServer::start(1);
+        let client = server.open_with_queue(plan(&[128, 128], 16), 8).unwrap();
+        let mut heavy = Grid::new2d(128, 128);
+        heavy.fill_random(1, 0.0, 1.0);
+        let _a = client.submit(heavy).unwrap();
+        let mut g = Grid::new2d(128, 128);
+        g.fill_random(2, 0.0, 1.0);
+        let b = client.submit(g).unwrap();
+        // Model the race directly: flag set, no Cancel event sent.
+        b.job.cancelled.store(true, Ordering::SeqCst);
+        server.shutdown();
+        assert!(b.wait_timeout(Duration::from_secs(30)), "job hung after shutdown");
+        match b.wait() {
+            // b may have finished before shutdown noticed the flag (the
+            // scheduler also resolves flagged jobs to Cancelled).
+            Err(EngineError::Cancelled) => {}
+            other => panic!("cancelled-then-shutdown job resolved to {other:?}"),
+        }
     }
 }

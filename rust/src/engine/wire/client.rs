@@ -1,0 +1,193 @@
+//! Typed client for the wire protocol: one blocking request/response
+//! RPC per call over a plain [`TcpStream`]. The CLI `client` subcommand,
+//! the wire stress/fault tests, and the `wire_vs_inproc` ablation all
+//! drive the server through this — so the client doubles as the
+//! closed-loop stress driver the ISSUE asks for.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::stencil::Grid;
+use crate::util::json::Json;
+
+use super::protocol::{
+    read_frame, write_frame, ErrorKind, GridPayload, PlanSpec, Request, Response,
+    WireError,
+};
+use super::queue::JobState;
+
+/// What a `wait` came back with.
+#[derive(Debug)]
+pub enum WaitOutcome {
+    /// The job finished and this wait carried the result home.
+    Done { grid: Grid, attempts: u32, report: Json },
+    /// Not terminal yet (the server-side wait timed out).
+    Pending { state: JobState, attempts: u32 },
+    /// Terminal without a result: failed, cancelled, or the result was
+    /// already fetched by an earlier wait.
+    Terminal { state: JobState, attempts: u32 },
+}
+
+/// A connection to a [`super::WireFrontend`]. Sessions are server-side
+/// state keyed by id, not connection state — a client may drop the
+/// socket, reconnect, and keep using its session and job ids (the
+/// kill-and-reconnect fault test does exactly that).
+pub struct WireClient {
+    stream: TcpStream,
+}
+
+impl WireClient {
+    pub fn connect(addr: &str) -> Result<WireClient, WireError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        // Generous bound: a server-side `wait` can legitimately hold the
+        // response for its full timeout, so this only catches a dead
+        // server, not a slow one.
+        stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+        Ok(WireClient { stream })
+    }
+
+    /// One request/response round trip. A server-reported error comes
+    /// back as [`WireError::Server`] so callers match on typed kinds.
+    pub fn rpc(&mut self, req: &Request) -> Result<Response, WireError> {
+        write_frame(&mut self.stream, &req.to_json())?;
+        let resp = Response::from_json(&read_frame(&mut self.stream)?)?;
+        match resp {
+            Response::Error { kind, message } => Err(WireError::Server { kind, message }),
+            other => Ok(other),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<(), WireError> {
+        match self.rpc(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(unexpected("pong", &other)),
+        }
+    }
+
+    /// Open a session; returns its stable id.
+    pub fn open(&mut self, plan: PlanSpec, programs: Vec<Json>) -> Result<u64, WireError> {
+        match self.rpc(&Request::Open { plan, programs })? {
+            Response::Opened { session } => Ok(session),
+            other => Err(unexpected("opened", &other)),
+        }
+    }
+
+    /// Submit a grid (optionally with power map / iteration override);
+    /// returns the stable job id.
+    pub fn submit(
+        &mut self,
+        session: u64,
+        grid: &Grid,
+        power: Option<&Grid>,
+        iterations: Option<usize>,
+    ) -> Result<u64, WireError> {
+        let req = Request::Submit {
+            session,
+            grid: GridPayload::from_grid(grid),
+            power: power.map(GridPayload::from_grid),
+            iterations,
+        };
+        match self.rpc(&req)? {
+            Response::Accepted { job } => Ok(job),
+            other => Err(unexpected("accepted", &other)),
+        }
+    }
+
+    pub fn poll(&mut self, job: u64) -> Result<(JobState, u32), WireError> {
+        match self.rpc(&Request::Poll { job })? {
+            Response::Status { state, attempts, .. } => Ok((state, attempts)),
+            other => Err(unexpected("status", &other)),
+        }
+    }
+
+    /// One server-side wait of up to `timeout`.
+    pub fn wait(&mut self, job: u64, timeout: Duration) -> Result<WaitOutcome, WireError> {
+        let req = Request::Wait { job, timeout_ms: timeout.as_millis() as u64 };
+        match self.rpc(&req)? {
+            Response::Result { grid, attempts, report, .. } => {
+                Ok(WaitOutcome::Done { grid: grid.to_grid()?, attempts, report })
+            }
+            Response::Status { state, attempts, .. } => {
+                if state.is_terminal() {
+                    Ok(WaitOutcome::Terminal { state, attempts })
+                } else {
+                    Ok(WaitOutcome::Pending { state, attempts })
+                }
+            }
+            other => Err(unexpected("result or status", &other)),
+        }
+    }
+
+    /// Wait until the job is terminal or `deadline` passes; never hangs.
+    pub fn wait_result(
+        &mut self,
+        job: u64,
+        deadline: Duration,
+    ) -> Result<WaitOutcome, WireError> {
+        let end = Instant::now() + deadline;
+        loop {
+            let left = end.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                let (state, attempts) = self.poll(job)?;
+                return Ok(WaitOutcome::Pending { state, attempts });
+            }
+            match self.wait(job, left.min(Duration::from_secs(5)))? {
+                WaitOutcome::Pending { .. } => continue,
+                terminal => return Ok(terminal),
+            }
+        }
+    }
+
+    /// Request cancellation; returns the job's status at ack time.
+    pub fn cancel(&mut self, job: u64) -> Result<(JobState, u32), WireError> {
+        match self.rpc(&Request::Cancel { job })? {
+            Response::Status { state, attempts, .. } => Ok((state, attempts)),
+            other => Err(unexpected("status", &other)),
+        }
+    }
+
+    /// Per-tenant stats: `{"engine": {...}, "wire": {...}}`.
+    pub fn stats(&mut self, session: u64) -> Result<Json, WireError> {
+        match self.rpc(&Request::Stats { session })? {
+            Response::Stats { stats, .. } => Ok(stats),
+            other => Err(unexpected("stats", &other)),
+        }
+    }
+
+    pub fn close_session(&mut self, session: u64) -> Result<(), WireError> {
+        match self.rpc(&Request::Close { session })? {
+            Response::Closed { .. } => Ok(()),
+            other => Err(unexpected("closed", &other)),
+        }
+    }
+
+    /// Quota-aware submit helper for closed-loop drivers: on a quota
+    /// error, wait for `drain` to reach a terminal state, then retry.
+    /// `drain` is the oldest outstanding job the caller tracks.
+    pub fn submit_or_drain(
+        &mut self,
+        session: u64,
+        grid: &Grid,
+        power: Option<&Grid>,
+        iterations: Option<usize>,
+        drain: Option<u64>,
+    ) -> Result<u64, WireError> {
+        match self.submit(session, grid, power, iterations) {
+            Err(WireError::Server {
+                kind: ErrorKind::QuotaJobs | ErrorKind::QuotaCells,
+                ..
+            }) => {
+                if let Some(old) = drain {
+                    let _ = self.wait_result(old, Duration::from_secs(60))?;
+                }
+                self.submit(session, grid, power, iterations)
+            }
+            other => other,
+        }
+    }
+}
+
+fn unexpected(wanted: &str, got: &Response) -> WireError {
+    WireError::BadMessage(format!("expected a {wanted} response, got {got:?}"))
+}

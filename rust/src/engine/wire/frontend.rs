@@ -1,0 +1,995 @@
+//! The TCP front door: accepts wire tenants and multiplexes their jobs
+//! onto an [`EngineServer`] so network clients and in-process
+//! [`ClientSession`]s share one worker pool and one fairness discipline.
+//!
+//! Threading model (all std):
+//!
+//! - one **accept** thread; one **connection** thread per client socket
+//!   (blocking reads with a short timeout so shutdown is prompt);
+//! - one **reaper** thread that watches outstanding [`JobHandle`]s,
+//!   records terminal transitions in the [`JobLedger`], runs the
+//!   retry-with-max-attempts policy, and releases per-tenant quota.
+//!
+//! All mutable front-door state lives under ONE mutex (`Shared::state`);
+//! the lock order is front-state → engine-state (via `ClientSession`
+//! calls) → job-done, which is acyclic against the engine scheduler's own
+//! engine-state → job-done order, so the combined system cannot deadlock.
+//!
+//! Sessions survive disconnects: a socket dying mid-job abandons nothing.
+//! The tenant's jobs keep draining, and any connection may later poll or
+//! fetch them by job id — that, plus journal replay in [`JobLedger`], is
+//! what the kill-and-reconnect fault tests exercise.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{ExecReport, Plan};
+use crate::stencil::{Grid, StencilProgram, StencilRegistry};
+use crate::util::json::Json;
+
+use super::super::server::QUEUE_WAIT_BUCKETS;
+use super::super::{ClientSession, EngineError, EngineServer, JobHandle, Workload};
+use super::protocol::{
+    encode_frame, ErrorKind, GridPayload, PlanSpec, Request, Response, WireError,
+    MAX_FRAME_BYTES,
+};
+use super::queue::{JobLedger, JobState, JobStatus};
+
+/// How long a connection may dribble one frame's bytes before the read is
+/// declared torn. Generous: a 64 MiB frame at 20 MB/s needs ~3.3 s.
+const FRAME_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Poll interval for the first byte of a frame (bounds shutdown latency).
+const IDLE_POLL: Duration = Duration::from_millis(100);
+
+/// Front-door policy knobs. Defaults are deliberately modest — quotas are
+/// the backpressure mechanism, so they should trip in tests long before
+/// memory does.
+#[derive(Debug, Clone)]
+pub struct WireConfig {
+    /// Per-tenant cap on jobs in flight (queued + active). Breaching it
+    /// returns [`ErrorKind::QuotaJobs`] — backpressure, not failure.
+    pub max_queued_jobs: usize,
+    /// Per-tenant cap on total cells across jobs in flight
+    /// ([`ErrorKind::QuotaCells`] beyond it).
+    pub max_queued_cells: u64,
+    /// Attempts (started) before a worker-side failure becomes terminal
+    /// `Failed{attempts}`.
+    pub max_attempts: u32,
+    /// Append-only JSONL journal; replayed on bind so job ids and
+    /// terminal statuses survive restarts. `None` = in-memory only.
+    pub journal: Option<PathBuf>,
+    /// Fault injection (tests): treat the first N completed attempts of
+    /// EVERY job as worker-side failures, exercising the real retry
+    /// machinery end-to-end. 0 = off.
+    pub fault_fail_attempts: u32,
+}
+
+impl Default for WireConfig {
+    fn default() -> WireConfig {
+        WireConfig {
+            max_queued_jobs: 8,
+            max_queued_cells: 1 << 26,
+            max_attempts: 3,
+            journal: None,
+            fault_fail_attempts: 0,
+        }
+    }
+}
+
+/// What we keep to resubmit a job on retry.
+struct RetryInput {
+    grid: Grid,
+    power: Option<Grid>,
+    iterations: Option<usize>,
+}
+
+/// One wire job's front-door state. The ledger mirrors `state`; the
+/// ledger is the durable record, this is the live machinery.
+struct WireJob {
+    tenant: u64,
+    state: JobState,
+    /// Attempts *started* (first submission counts as 1).
+    attempts: u32,
+    cells: u64,
+    cancel_requested: bool,
+    handle: Option<JobHandle>,
+    input: Option<RetryInput>,
+    /// Held for exactly one fetch by a `wait` — then the state stays
+    /// `Done` but later waits get a plain status.
+    output: Option<(Grid, Json)>,
+}
+
+/// One wire tenant: an engine session plus quota and traffic accounting.
+struct Tenant {
+    client: ClientSession,
+    outstanding_jobs: u64,
+    outstanding_cells: u64,
+    frames_in: u64,
+    frames_out: u64,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+struct FrontState {
+    ledger: JobLedger,
+    sessions: HashMap<u64, Tenant>,
+    jobs: HashMap<u64, WireJob>,
+    next_session: u64,
+}
+
+struct Shared {
+    cfg: WireConfig,
+    /// Taken (to `None`) at shutdown so the engine can be stopped by
+    /// value; handlers only ever borrow it briefly to open sessions.
+    engine: Mutex<Option<EngineServer>>,
+    state: Mutex<FrontState>,
+    /// Signals job transitions to server-side `wait`ers and the reaper.
+    jobs_cv: Condvar,
+    shutting: AtomicBool,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// The wire front door. Owns the [`EngineServer`] it fronts; dropping it
+/// (or calling [`WireFrontend::shutdown`]) drains in-flight work, records
+/// terminal ledger states, and joins every thread it spawned.
+pub struct WireFrontend {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    reaper: Option<JoinHandle<()>>,
+}
+
+impl WireFrontend {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) in front of
+    /// `server`. Replays the journal first when one is configured, so
+    /// jobs interrupted by the previous run answer polls truthfully.
+    pub fn bind(
+        addr: &str,
+        server: EngineServer,
+        cfg: WireConfig,
+    ) -> std::io::Result<WireFrontend> {
+        let ledger = match &cfg.journal {
+            Some(path) => JobLedger::open(path)?,
+            None => JobLedger::in_memory(),
+        };
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            cfg,
+            engine: Mutex::new(Some(server)),
+            state: Mutex::new(FrontState {
+                ledger,
+                sessions: HashMap::new(),
+                jobs: HashMap::new(),
+                next_session: 1,
+            }),
+            jobs_cv: Condvar::new(),
+            shutting: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept =
+            std::thread::spawn(move || accept_loop(&accept_shared, &listener));
+        let reaper_shared = Arc::clone(&shared);
+        let reaper = std::thread::spawn(move || reaper_loop(&reaper_shared));
+        Ok(WireFrontend {
+            shared,
+            addr: local,
+            accept: Some(accept),
+            reaper: Some(reaper),
+        })
+    }
+
+    /// The bound address (resolves `:0` to the ephemeral port picked).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Open an **in-process** session on the same engine the wire tenants
+    /// use: both populations share one worker pool and one DRR fairness
+    /// discipline — the multiplexing claim, as an API.
+    pub fn open_local(&self, plan: Plan) -> Result<ClientSession, EngineError> {
+        let guard = self.shared.engine.lock().expect("engine slot poisoned");
+        match guard.as_ref() {
+            Some(server) => server.open(plan),
+            None => Err(EngineError::Shutdown),
+        }
+    }
+
+    /// Job ids healed to `Failed` during journal replay (were mid-flight
+    /// when the previous process died).
+    pub fn healed_jobs(&self) -> Vec<u64> {
+        self.shared.state.lock().expect("front state poisoned").ledger.healed.clone()
+    }
+
+    /// Latest ledger status of a job (ops/test introspection; the wire
+    /// `poll` request is the protocol-level equivalent).
+    pub fn job_status(&self, job: u64) -> Option<JobStatus> {
+        self.shared
+            .state
+            .lock()
+            .expect("front state poisoned")
+            .ledger
+            .status(job)
+            .cloned()
+    }
+
+    /// Graceful shutdown: stop accepting, join connections, stop the
+    /// engine (which completes every outstanding handle), let the reaper
+    /// drain those completions into terminal ledger states, then join it.
+    /// Idempotent; runs on drop.
+    pub fn shutdown(&mut self) {
+        if self.shared.shutting.swap(true, Ordering::SeqCst) {
+            // Another call already ran the sequence; just reap handles.
+            if let Some(h) = self.accept.take() {
+                let _ = h.join();
+            }
+            if let Some(h) = self.reaper.take() {
+                let _ = h.join();
+            }
+            return;
+        }
+        // Wake the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let conns: Vec<JoinHandle<()>> = {
+            let mut guard = self.shared.conns.lock().expect("conns poisoned");
+            guard.drain(..).collect()
+        };
+        for c in conns {
+            let _ = c.join();
+        }
+        if let Some(mut server) =
+            self.shared.engine.lock().expect("engine slot poisoned").take()
+        {
+            server.shutdown();
+        }
+        self.shared.jobs_cv.notify_all();
+        if let Some(h) = self.reaper.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WireFrontend {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ----------------------------------------------------------- accept loop
+
+fn accept_loop(shared: &Arc<Shared>, listener: &TcpListener) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if shared.shutting.load(Ordering::SeqCst) {
+                    return;
+                }
+                let conn_shared = Arc::clone(shared);
+                let handle =
+                    std::thread::spawn(move || connection_loop(&conn_shared, stream));
+                let mut conns = shared.conns.lock().expect("conns poisoned");
+                conns.retain(|c| !c.is_finished());
+                conns.push(handle);
+            }
+            Err(_) => {
+                if shared.shutting.load(Ordering::SeqCst) {
+                    return;
+                }
+                // Transient accept failure (fd pressure); back off briefly.
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ connection loop
+
+/// Read one frame, shutdown-aware. The FIRST byte is polled with a short
+/// timeout (checking the shutting flag between polls); once a frame has
+/// started, the rest of the header and body are read under a deadline —
+/// so a slow-but-live client streaming a megabyte grid is never cut off,
+/// while a wedged peer cannot pin the thread past [`FRAME_DEADLINE`].
+/// Returns `Ok(None)` when the server is shutting down.
+fn read_frame_patient(
+    stream: &mut TcpStream,
+    shutting: &AtomicBool,
+) -> Result<Option<Json>, WireError> {
+    let mut first = [0u8; 1];
+    loop {
+        if shutting.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match stream.read(&mut first) {
+            Ok(0) => return Err(WireError::Closed),
+            Ok(_) => break,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let deadline = Instant::now() + FRAME_DEADLINE;
+    let mut header = [0u8; 4];
+    header[0] = first[0];
+    read_deadline(stream, &mut header[1..], deadline, 4, shutting)?;
+    let len = u32::from_be_bytes(header) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized { len, max: MAX_FRAME_BYTES });
+    }
+    let mut body = vec![0u8; len];
+    read_deadline(stream, &mut body, deadline, len, shutting)?;
+    let text = String::from_utf8(body)
+        .map_err(|e| WireError::BadJson(format!("invalid utf-8: {e}")))?;
+    Json::parse(&text)
+        .map(Some)
+        .map_err(|e| WireError::BadJson(e.to_string()))
+}
+
+/// Deadline-bounded `read_exact`. Also aborts mid-frame on shutdown —
+/// the server is going down and the submit would be rejected anyway, so
+/// bounded shutdown latency wins over finishing the transfer.
+fn read_deadline(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Instant,
+    want: usize,
+    shutting: &AtomicBool,
+) -> Result<(), WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        if Instant::now() >= deadline || shutting.load(Ordering::SeqCst) {
+            return Err(WireError::Torn { got, want });
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return Err(WireError::Torn { got, want }),
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+fn send_response(stream: &mut TcpStream, resp: &Response) -> bool {
+    let frame = encode_frame(&resp.to_json());
+    stream.write_all(&frame).and_then(|()| stream.flush()).is_ok()
+}
+
+fn connection_loop(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(IDLE_POLL));
+    loop {
+        match read_frame_patient(&mut stream, &shared.shutting) {
+            Ok(None) | Err(WireError::Closed) => return,
+            Ok(Some(msg)) => {
+                // Body length approximated by re-serialization (byte-
+                // identical for frames our own client sends), +4 header.
+                let in_bytes = msg.to_string().len() as u64 + 4;
+                let (resp, tenant) = handle_frame(shared, &msg);
+                let frame = encode_frame(&resp.to_json());
+                attribute_traffic(shared, tenant, in_bytes, frame.len() as u64);
+                if stream.write_all(&frame).and_then(|()| stream.flush()).is_err() {
+                    return;
+                }
+            }
+            Err(WireError::BadJson(m)) => {
+                // Frame length was honored, so the stream is still in
+                // sync — report the garbage and keep serving.
+                let ok = send_response(
+                    &mut stream,
+                    &Response::Error { kind: ErrorKind::BadFrame, message: m },
+                );
+                if !ok {
+                    return;
+                }
+            }
+            Err(e @ WireError::Oversized { .. }) => {
+                // Body unread → framing is lost; answer, then hang up.
+                let _ = send_response(
+                    &mut stream,
+                    &Response::Error { kind: ErrorKind::BadFrame, message: e.to_string() },
+                );
+                return;
+            }
+            // Torn frame or transport error: the byte stream can no
+            // longer be trusted. Drop the connection; the session and
+            // its jobs survive for the next connection to pick up.
+            Err(_) => return,
+        }
+    }
+}
+
+fn attribute_traffic(shared: &Arc<Shared>, tenant: Option<u64>, inb: u64, outb: u64) {
+    let Some(id) = tenant else { return };
+    let mut st = shared.state.lock().expect("front state poisoned");
+    if let Some(t) = st.sessions.get_mut(&id) {
+        t.frames_in += 1;
+        t.frames_out += 1;
+        t.bytes_in += inb;
+        t.bytes_out += outb;
+    }
+}
+
+// -------------------------------------------------------- frame handling
+
+/// Decode and dispatch one request. Returns the response plus the tenant
+/// the traffic should be attributed to (if the request named one).
+fn handle_frame(shared: &Arc<Shared>, msg: &Json) -> (Response, Option<u64>) {
+    let req = match Request::from_json(msg) {
+        Ok(r) => r,
+        Err(e) => {
+            return (
+                Response::Error { kind: ErrorKind::BadRequest, message: e.to_string() },
+                None,
+            )
+        }
+    };
+    match req {
+        Request::Ping => (Response::Pong, None),
+        Request::Open { plan, programs } => handle_open(shared, &plan, &programs),
+        Request::Submit { session, grid, power, iterations } => {
+            (handle_submit(shared, session, &grid, power.as_ref(), iterations), Some(session))
+        }
+        Request::Poll { job } => {
+            let st = shared.state.lock().expect("front state poisoned");
+            let tenant = st.ledger.status(job).map(|s| s.tenant);
+            (status_response(&st, job), tenant)
+        }
+        Request::Wait { job, timeout_ms } => handle_wait(shared, job, timeout_ms),
+        Request::Cancel { job } => handle_cancel(shared, job),
+        Request::Stats { session } => (handle_stats(shared, session), Some(session)),
+        Request::Close { session } => {
+            let mut st = shared.state.lock().expect("front state poisoned");
+            match st.sessions.remove(&session) {
+                // Dropping the Tenant drops its ClientSession: the engine
+                // marks the slot closed and reaps it once queued jobs
+                // drain. Outstanding wire jobs stay poll-able by id.
+                Some(_) => (Response::Closed { session }, None),
+                None => (
+                    Response::Error {
+                        kind: ErrorKind::UnknownSession,
+                        message: format!("no session {session}"),
+                    },
+                    None,
+                ),
+            }
+        }
+    }
+}
+
+fn handle_open(
+    shared: &Arc<Shared>,
+    spec: &PlanSpec,
+    programs: &[Json],
+) -> (Response, Option<u64>) {
+    if shared.shutting.load(Ordering::SeqCst) {
+        return (shutting_error(), None);
+    }
+    // Inline programs first (registration is idempotent-by-content), so
+    // the plan spec can reference stencils defined in the same request.
+    for p in programs {
+        let program = match StencilProgram::from_json(p) {
+            Ok(prog) => prog,
+            Err(e) => {
+                return (
+                    Response::Error {
+                        kind: ErrorKind::Plan,
+                        message: format!("bad inline stencil program: {e:#}"),
+                    },
+                    None,
+                )
+            }
+        };
+        if let Err(e) = StencilRegistry::register(program) {
+            return (
+                Response::Error {
+                    kind: ErrorKind::Plan,
+                    message: format!("stencil registration failed: {e:#}"),
+                },
+                None,
+            );
+        }
+    }
+    let plan = match spec.build() {
+        Ok(p) => p,
+        Err(e) => {
+            return (
+                Response::Error { kind: ErrorKind::Plan, message: e.to_string() },
+                None,
+            )
+        }
+    };
+    // Engine session queue depth exceeds the wire quota, so a quota-
+    // admitted submit can never block on engine backpressure while the
+    // front-state lock is held (quota is checked under that lock first).
+    let depth = shared.cfg.max_queued_jobs.max(1) + 1;
+    let client = {
+        let guard = shared.engine.lock().expect("engine slot poisoned");
+        match guard.as_ref() {
+            Some(server) => server.open_with_queue(plan, depth),
+            None => Err(EngineError::Shutdown),
+        }
+    };
+    let client = match client {
+        Ok(c) => c,
+        Err(e) => return (engine_error(&e), None),
+    };
+    let mut st = shared.state.lock().expect("front state poisoned");
+    let session = st.next_session;
+    st.next_session += 1;
+    st.sessions.insert(
+        session,
+        Tenant {
+            client,
+            outstanding_jobs: 0,
+            outstanding_cells: 0,
+            frames_in: 0,
+            frames_out: 0,
+            bytes_in: 0,
+            bytes_out: 0,
+        },
+    );
+    (Response::Opened { session }, Some(session))
+}
+
+fn handle_submit(
+    shared: &Arc<Shared>,
+    session: u64,
+    grid: &GridPayload,
+    power: Option<&GridPayload>,
+    iterations: Option<usize>,
+) -> Response {
+    if shared.shutting.load(Ordering::SeqCst) {
+        return shutting_error();
+    }
+    // Decode payloads before taking any lock — base64 of a big grid is
+    // real CPU work and needs no shared state.
+    let grid = match grid.to_grid() {
+        Ok(g) => g,
+        Err(e) => {
+            return Response::Error { kind: ErrorKind::BadRequest, message: e.to_string() }
+        }
+    };
+    let power = match power.map(GridPayload::to_grid).transpose() {
+        Ok(p) => p,
+        Err(e) => {
+            return Response::Error { kind: ErrorKind::BadRequest, message: e.to_string() }
+        }
+    };
+    let cells = grid.len() as u64;
+
+    let mut st = shared.state.lock().expect("front state poisoned");
+    let Some(tenant) = st.sessions.get(&session) else {
+        return Response::Error {
+            kind: ErrorKind::UnknownSession,
+            message: format!("no session {session}"),
+        };
+    };
+    // Quotas are the typed-backpressure surface: the client is told to
+    // drain, nothing is charged, and other tenants are untouched.
+    if tenant.outstanding_jobs >= shared.cfg.max_queued_jobs as u64 {
+        return Response::Error {
+            kind: ErrorKind::QuotaJobs,
+            message: format!(
+                "tenant has {} jobs in flight (quota {})",
+                tenant.outstanding_jobs, shared.cfg.max_queued_jobs
+            ),
+        };
+    }
+    if tenant.outstanding_cells + cells > shared.cfg.max_queued_cells {
+        return Response::Error {
+            kind: ErrorKind::QuotaCells,
+            message: format!(
+                "tenant has {} cells in flight; {} more exceeds the {}-cell quota",
+                tenant.outstanding_cells, cells, shared.cfg.max_queued_cells
+            ),
+        };
+    }
+    let mut workload = Workload::new(grid.clone());
+    if let Some(p) = &power {
+        workload = workload.power(p.clone());
+    }
+    if let Some(i) = iterations {
+        workload = workload.iterations(i);
+    }
+    // Never blocks: quota admitted < engine queue depth (see handle_open).
+    let handle = match tenant.client.submit(workload) {
+        Ok(h) => h,
+        // Validation failed — nothing was accepted, charge nothing.
+        Err(e) => return engine_error(&e),
+    };
+    let job = st.ledger.allocate();
+    st.ledger.record(JobStatus {
+        job,
+        tenant: session,
+        state: JobState::Queued,
+        attempts: 0,
+        cells,
+    });
+    st.ledger.record(JobStatus {
+        job,
+        tenant: session,
+        state: JobState::Active,
+        attempts: 1,
+        cells,
+    });
+    st.jobs.insert(
+        job,
+        WireJob {
+            tenant: session,
+            state: JobState::Active,
+            attempts: 1,
+            cells,
+            cancel_requested: false,
+            handle: Some(handle),
+            input: Some(RetryInput { grid, power, iterations }),
+            output: None,
+        },
+    );
+    let t = st.sessions.get_mut(&session).expect("tenant checked above");
+    t.outstanding_jobs += 1;
+    t.outstanding_cells += cells;
+    shared.jobs_cv.notify_all();
+    Response::Accepted { job }
+}
+
+/// Status snapshot from the ledger — answers for live jobs, finished
+/// jobs, and jobs replayed from a previous process alike.
+fn status_response(st: &FrontState, job: u64) -> Response {
+    match st.ledger.status(job) {
+        Some(s) => Response::Status { job, state: s.state.clone(), attempts: s.attempts },
+        None => Response::Error {
+            kind: ErrorKind::UnknownJob,
+            message: format!("no job {job}"),
+        },
+    }
+}
+
+fn handle_wait(shared: &Arc<Shared>, job: u64, timeout_ms: u64) -> (Response, Option<u64>) {
+    let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+    let mut st = shared.state.lock().expect("front state poisoned");
+    let tenant = st.ledger.status(job).map(|s| s.tenant);
+    loop {
+        let Some(status) = st.ledger.status(job) else {
+            return (
+                Response::Error {
+                    kind: ErrorKind::UnknownJob,
+                    message: format!("no job {job}"),
+                },
+                None,
+            );
+        };
+        if status.state.is_terminal() {
+            let attempts = status.attempts;
+            if status.state == JobState::Done {
+                // The result is fetched-once: the first wait carries the
+                // grid home and frees the buffer; later waits (and any
+                // poll) see a plain Done status.
+                if let Some((grid, report)) =
+                    st.jobs.get_mut(&job).and_then(|j| j.output.take())
+                {
+                    return (
+                        Response::Result {
+                            job,
+                            grid: GridPayload::from_grid(&grid),
+                            attempts,
+                            report,
+                        },
+                        tenant,
+                    );
+                }
+            }
+            return (status_response(&st, job), tenant);
+        }
+        let now = Instant::now();
+        if now >= deadline || shared.shutting.load(Ordering::SeqCst) {
+            return (status_response(&st, job), tenant);
+        }
+        // Short slices keep shutdown latency bounded even if a notify
+        // is lost to a race.
+        let slice = (deadline - now).min(Duration::from_millis(50));
+        st = shared
+            .jobs_cv
+            .wait_timeout(st, slice)
+            .expect("front state poisoned")
+            .0;
+    }
+}
+
+fn handle_cancel(shared: &Arc<Shared>, job: u64) -> (Response, Option<u64>) {
+    let mut st = shared.state.lock().expect("front state poisoned");
+    let tenant = st.ledger.status(job).map(|s| s.tenant);
+    if tenant.is_none() {
+        return (
+            Response::Error { kind: ErrorKind::UnknownJob, message: format!("no job {job}") },
+            None,
+        );
+    }
+    if let Some(j) = st.jobs.get_mut(&job) {
+        if !j.state.is_terminal() {
+            j.cancel_requested = true;
+            if let Some(h) = &j.handle {
+                h.cancel();
+            }
+            shared.jobs_cv.notify_all();
+        }
+    }
+    // Idempotent ack: current status (the reaper records Cancelled once
+    // the engine confirms; a completion that wins the race stands).
+    (status_response(&st, job), tenant)
+}
+
+fn handle_stats(shared: &Arc<Shared>, session: u64) -> Response {
+    let st = shared.state.lock().expect("front state poisoned");
+    let Some(t) = st.sessions.get(&session) else {
+        return Response::Error {
+            kind: ErrorKind::UnknownSession,
+            message: format!("no session {session}"),
+        };
+    };
+    let es = t.client.stats();
+    let hist: Vec<Json> =
+        (0..QUEUE_WAIT_BUCKETS).map(|i| Json::from(es.queue_wait_hist[i] as usize)).collect();
+    let engine = Json::obj(vec![
+        ("jobs_submitted", Json::from(es.jobs_submitted as usize)),
+        ("jobs_completed", Json::from(es.jobs_completed as usize)),
+        ("jobs_cancelled", Json::from(es.jobs_cancelled as usize)),
+        ("jobs_failed", Json::from(es.jobs_failed as usize)),
+        ("tiles_executed", Json::from(es.tiles_executed as usize)),
+        ("cell_updates", Json::from(es.cell_updates as usize)),
+        ("max_queue_wait_us", Json::from(es.max_queue_wait.as_micros() as usize)),
+        ("sched_served", Json::from(es.sched_served as usize)),
+        ("sched_rounds", Json::from(es.sched_rounds as usize)),
+        // Bucket i counts dispatches whose submit→dispatch wait fell in
+        // [2^i, 2^(i+1)) microseconds; the last bucket absorbs the tail.
+        ("queue_wait_hist_us_pow2", Json::Arr(hist)),
+    ]);
+    let wire = Json::obj(vec![
+        ("frames_in", Json::from(t.frames_in as usize)),
+        ("frames_out", Json::from(t.frames_out as usize)),
+        ("bytes_in", Json::from(t.bytes_in as usize)),
+        ("bytes_out", Json::from(t.bytes_out as usize)),
+        ("outstanding_jobs", Json::from(t.outstanding_jobs as usize)),
+        ("outstanding_cells", Json::from(t.outstanding_cells as usize)),
+    ]);
+    Response::Stats {
+        session,
+        stats: Json::obj(vec![("engine", engine), ("wire", wire)]),
+    }
+}
+
+fn shutting_error() -> Response {
+    Response::Error {
+        kind: ErrorKind::Shutdown,
+        message: "server is shutting down".to_string(),
+    }
+}
+
+fn engine_error(e: &EngineError) -> Response {
+    let kind = match e {
+        EngineError::Shutdown => ErrorKind::Shutdown,
+        _ => ErrorKind::Engine,
+    };
+    Response::Error { kind, message: e.to_string() }
+}
+
+// ---------------------------------------------------------------- reaper
+
+fn report_json(report: &ExecReport) -> Json {
+    Json::obj(vec![
+        ("iterations", Json::from(report.iterations)),
+        ("passes", Json::from(report.passes)),
+        ("tiles_executed", Json::from(report.tiles_executed as usize)),
+        ("cell_updates", Json::from(report.cell_updates as usize)),
+        ("redundant_updates", Json::from(report.redundant_updates as usize)),
+        ("elapsed_ms", Json::from(report.elapsed.as_secs_f64() * 1e3)),
+        ("backend", Json::from(report.backend)),
+    ])
+}
+
+/// Watches outstanding handles; on completion applies the
+/// retry/cancel/ledger policy. Single consumer of handle results, so
+/// every transition is serialized through the front-state lock.
+fn reaper_loop(shared: &Arc<Shared>) {
+    loop {
+        let mut st = shared.state.lock().expect("front state poisoned");
+        let finished: Vec<u64> = st
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.handle.as_ref().is_some_and(JobHandle::is_done))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in finished {
+            let Some(handle) = st.jobs.get_mut(&id).and_then(|j| j.handle.take())
+            else {
+                continue;
+            };
+            // is_done() was true, so this returns without blocking.
+            let result = handle.wait();
+            resolve(shared, &mut st, id, result);
+        }
+        if !st.jobs.values().any(|j| j.handle.is_some())
+            && shared.shutting.load(Ordering::SeqCst)
+        {
+            return;
+        }
+        let poll = if st.jobs.values().any(|j| j.handle.is_some()) {
+            Duration::from_millis(2)
+        } else {
+            Duration::from_millis(200)
+        };
+        let _ = shared
+            .jobs_cv
+            .wait_timeout(st, poll)
+            .expect("front state poisoned");
+    }
+}
+
+/// What one completed attempt amounted to, snapshotted so no job borrow
+/// survives into the state transitions below.
+enum Outcome {
+    Done(super::super::JobOutput),
+    Cancelled,
+    Shutdown,
+    Fail(String),
+}
+
+/// Apply one completed attempt's outcome. Precedence: a requested cancel
+/// beats both failure and shutdown (the tenant asked for the job to stop;
+/// how it stopped is incidental) — mirroring the engine-side
+/// cancelled-then-shutdown fix in `server.rs`.
+fn resolve(
+    shared: &Arc<Shared>,
+    st: &mut FrontState,
+    id: u64,
+    result: Result<super::super::JobOutput, EngineError>,
+) {
+    let cfg = &shared.cfg;
+    let (attempts, cancel_requested) = {
+        let job = st.jobs.get(&id).expect("resolving a known job");
+        (job.attempts, job.cancel_requested)
+    };
+    let injected = cfg.fault_fail_attempts >= attempts && !cancel_requested;
+    let outcome = match result {
+        Ok(_) if injected => Outcome::Fail(format!(
+            "injected fault (attempt {attempts} of the first {} fails)",
+            cfg.fault_fail_attempts
+        )),
+        Ok(out) => Outcome::Done(out),
+        Err(EngineError::Cancelled) => Outcome::Cancelled,
+        Err(EngineError::Shutdown) => Outcome::Shutdown,
+        Err(e) => Outcome::Fail(e.to_string()),
+    };
+    match outcome {
+        Outcome::Done(out) => {
+            let job = st.jobs.get_mut(&id).expect("resolving a known job");
+            job.output = Some((out.grid, report_json(&out.report)));
+            finish(shared, st, id, JobState::Done);
+        }
+        Outcome::Cancelled => finish(shared, st, id, JobState::Cancelled),
+        Outcome::Shutdown => {
+            let state = if cancel_requested {
+                JobState::Cancelled
+            } else {
+                JobState::Failed {
+                    attempts,
+                    error: "server shutdown before the job finished".to_string(),
+                }
+            };
+            finish(shared, st, id, state);
+        }
+        Outcome::Fail(_) if cancel_requested => {
+            finish(shared, st, id, JobState::Cancelled);
+        }
+        Outcome::Fail(error) if attempts < cfg.max_attempts => {
+            retry(shared, st, id, &error);
+        }
+        Outcome::Fail(error) => {
+            finish(shared, st, id, JobState::Failed { attempts, error });
+        }
+    }
+}
+
+/// Record a terminal state, release the tenant's quota, wake waiters.
+fn finish(shared: &Arc<Shared>, st: &mut FrontState, id: u64, state: JobState) {
+    let FrontState { ledger, sessions, jobs, .. } = st;
+    let job = jobs.get_mut(&id).expect("finishing a known job");
+    job.state = state.clone();
+    job.input = None;
+    if state != JobState::Done {
+        job.output = None;
+    }
+    ledger.record(JobStatus {
+        job: id,
+        tenant: job.tenant,
+        state,
+        attempts: job.attempts,
+        cells: job.cells,
+    });
+    // The tenant may have closed its session while the job drained.
+    if let Some(t) = sessions.get_mut(&job.tenant) {
+        t.outstanding_jobs = t.outstanding_jobs.saturating_sub(1);
+        t.outstanding_cells = t.outstanding_cells.saturating_sub(job.cells);
+    }
+    shared.jobs_cv.notify_all();
+}
+
+/// Re-submit a failed attempt through the tenant's engine session. The
+/// journal shows the full cycle: Queued(k) when the attempt fails,
+/// Active(k+1) when the next one starts.
+fn retry(shared: &Arc<Shared>, st: &mut FrontState, id: u64, error: &str) {
+    let FrontState { ledger, sessions, jobs, .. } = st;
+    let job = jobs.get_mut(&id).expect("retrying a known job");
+    let (tenant_alive, resubmitted) = match sessions.get(&job.tenant) {
+        None => (false, Err(EngineError::Shutdown)),
+        Some(t) => {
+            let input = job.input.as_ref().expect("retryable job keeps its input");
+            let mut w = Workload::new(input.grid.clone());
+            if let Some(p) = &input.power {
+                w = w.power(p.clone());
+            }
+            if let Some(i) = input.iterations {
+                w = w.iterations(i);
+            }
+            (true, t.client.submit(w))
+        }
+    };
+    match resubmitted {
+        Ok(handle) => {
+            ledger.record(JobStatus {
+                job: id,
+                tenant: job.tenant,
+                state: JobState::Queued,
+                attempts: job.attempts,
+                cells: job.cells,
+            });
+            job.attempts += 1;
+            job.state = JobState::Active;
+            job.handle = Some(handle);
+            ledger.record(JobStatus {
+                job: id,
+                tenant: job.tenant,
+                state: JobState::Active,
+                attempts: job.attempts,
+                cells: job.cells,
+            });
+            shared.jobs_cv.notify_all();
+        }
+        Err(e) => {
+            let attempts = job.attempts;
+            let reason = if tenant_alive {
+                format!("{error}; retry submission failed: {e}")
+            } else {
+                format!("{error}; tenant closed before retry")
+            };
+            finish(shared, st, id, JobState::Failed { attempts, error: reason });
+        }
+    }
+}

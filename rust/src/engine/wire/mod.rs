@@ -1,0 +1,26 @@
+//! Network front door for the [`super::EngineServer`]: a std-only TCP
+//! protocol speaking the full job lifecycle (open / submit / poll / wait
+//! / cancel / close), backed by a durable job queue with stable ids, an
+//! append-only JSONL status journal, retry-with-max-attempts, and
+//! per-tenant quotas.
+//!
+//! Layering, bottom-up:
+//!
+//! - [`protocol`] — frame codec (u32 length prefix + JSON), base64 grid
+//!   payloads, typed requests/responses/errors;
+//! - [`queue`] — job states, status ledger, journal replay;
+//! - [`frontend`] — the TCP server: accept/connection/reaper threads
+//!   multiplexing wire tenants onto one [`super::EngineServer`];
+//! - [`client`] — the typed blocking client (also the stress driver).
+//!
+//! See DESIGN.md §3.3 for the frame format and the ledger state machine.
+
+pub mod client;
+pub mod frontend;
+pub mod protocol;
+pub mod queue;
+
+pub use client::{WaitOutcome, WireClient};
+pub use frontend::{WireConfig, WireFrontend};
+pub use protocol::{ErrorKind, GridPayload, PlanSpec, Request, Response, WireError};
+pub use queue::{JobLedger, JobState, JobStatus};

@@ -1,0 +1,796 @@
+//! The wire protocol: length-prefixed JSON frames over any byte stream.
+//!
+//! One frame = a 4-byte big-endian length followed by that many bytes of
+//! UTF-8 JSON. The framing layer is deliberately dumb — everything
+//! interesting (the job lifecycle) lives in the [`Request`]/[`Response`]
+//! messages, which serialize through [`crate::util::json::Json`] so the
+//! whole protocol rides on the in-tree substrate (no external crates).
+//!
+//! Every decode path returns a typed [`WireError`]; torn, oversized and
+//! garbage frames are *rejections*, never panics or hangs (property-tested
+//! in `rust/tests/wire_protocol.rs`). Grid payloads travel as base64 of
+//! the little-endian f32 bytes, so results round-trip bit-exactly — the
+//! end-to-end wire tests assert bit-equality with the serial oracle.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+use crate::coordinator::{Plan, PlanBuilder};
+use crate::stencil::{Grid, StencilRegistry};
+use crate::util::json::Json;
+
+use super::super::{Backend, EngineError};
+use super::queue::JobState;
+
+/// Hard cap on one frame's body. Large enough for a 2048³ f32 grid in
+/// base64, small enough that a hostile length prefix cannot OOM the
+/// server: oversized frames are rejected before any body byte is read.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Everything the wire layer can fail with. `Closed` is the clean
+/// end-of-stream (EOF exactly at a frame boundary); everything else is a
+/// defect in the peer or the transport.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Transport error (with the `std::io::ErrorKind` for callers that
+    /// need to distinguish timeouts from hard failures).
+    Io(std::io::ErrorKind, String),
+    /// EOF exactly at a frame boundary — the peer hung up cleanly.
+    Closed,
+    /// EOF (or a dead deadline) mid-frame: `got` of `want` body bytes
+    /// arrived.
+    Torn { got: usize, want: usize },
+    /// The length prefix exceeds [`MAX_FRAME_BYTES`]; the body was never
+    /// read.
+    Oversized { len: usize, max: usize },
+    /// The body was not valid UTF-8 JSON.
+    BadJson(String),
+    /// The JSON was well-formed but not a valid protocol message.
+    BadMessage(String),
+    /// The server answered with a typed protocol error.
+    Server { kind: ErrorKind, message: String },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(kind, msg) => write!(f, "wire i/o error ({kind:?}): {msg}"),
+            WireError::Closed => f.write_str("connection closed"),
+            WireError::Torn { got, want } => {
+                write!(f, "torn frame: got {got} of {want} bytes")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} bytes exceeds the {max}-byte cap")
+            }
+            WireError::BadJson(msg) => write!(f, "frame body is not JSON: {msg}"),
+            WireError::BadMessage(msg) => write!(f, "bad protocol message: {msg}"),
+            WireError::Server { kind, message } => {
+                write!(f, "server error [{}]: {message}", kind.code())
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e.kind(), e.to_string())
+    }
+}
+
+/// Typed protocol error categories carried by [`Response::Error`]. The
+/// quota variants are the backpressure signal the fault battery exercises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Frame-level defect (torn/oversized/garbage) reported back before
+    /// the connection is dropped.
+    BadFrame,
+    /// Well-formed frame, invalid request (unknown type, missing field).
+    BadRequest,
+    /// The named session does not exist (never opened, or closed).
+    UnknownSession,
+    /// The named job id was never accepted by this server (or journal).
+    UnknownJob,
+    /// Per-tenant queued-job quota exceeded — retry after jobs drain.
+    QuotaJobs,
+    /// Per-tenant queued-cells quota exceeded — retry after jobs drain.
+    QuotaCells,
+    /// The plan (or an inline stencil program) failed validation.
+    Plan,
+    /// The engine rejected the submission (shape/power/schedule).
+    Engine,
+    /// The server is shutting down.
+    Shutdown,
+}
+
+impl ErrorKind {
+    pub fn code(self) -> &'static str {
+        match self {
+            ErrorKind::BadFrame => "bad-frame",
+            ErrorKind::BadRequest => "bad-request",
+            ErrorKind::UnknownSession => "unknown-session",
+            ErrorKind::UnknownJob => "unknown-job",
+            ErrorKind::QuotaJobs => "quota-jobs",
+            ErrorKind::QuotaCells => "quota-cells",
+            ErrorKind::Plan => "plan",
+            ErrorKind::Engine => "engine",
+            ErrorKind::Shutdown => "shutdown",
+        }
+    }
+
+    pub fn parse(code: &str) -> Option<ErrorKind> {
+        Some(match code {
+            "bad-frame" => ErrorKind::BadFrame,
+            "bad-request" => ErrorKind::BadRequest,
+            "unknown-session" => ErrorKind::UnknownSession,
+            "unknown-job" => ErrorKind::UnknownJob,
+            "quota-jobs" => ErrorKind::QuotaJobs,
+            "quota-cells" => ErrorKind::QuotaCells,
+            "plan" => ErrorKind::Plan,
+            "engine" => ErrorKind::Engine,
+            "shutdown" => ErrorKind::Shutdown,
+            _ => return None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------- framing
+
+/// Encode one frame (length prefix + serialized JSON) into a byte vector.
+pub fn encode_frame(msg: &Json) -> Vec<u8> {
+    let body = msg.to_string().into_bytes();
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Write one frame to `w` (a single `write_all`, so small frames are one
+/// syscall; callers wanting Nagle off set `TCP_NODELAY` on the stream).
+pub fn write_frame<W: Write>(w: &mut W, msg: &Json) -> Result<(), WireError> {
+    w.write_all(&encode_frame(msg))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes, mapping EOF to [`WireError::Torn`].
+fn read_body<R: Read>(r: &mut R, buf: &mut [u8], want: usize) -> Result<(), WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => return Err(WireError::Torn { got, want }),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame. A clean EOF before any header byte is
+/// [`WireError::Closed`]; EOF inside the header or body is
+/// [`WireError::Torn`]; a hostile length prefix is rejected as
+/// [`WireError::Oversized`] *before* the body is read.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Json, WireError> {
+    let mut header = [0u8; 4];
+    // First byte separately: 0 bytes here is a clean close, not a tear.
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Err(WireError::Closed),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    header[0] = first[0];
+    read_body(r, &mut header[1..], 4)?;
+    let len = u32::from_be_bytes(header) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized { len, max: MAX_FRAME_BYTES });
+    }
+    let mut body = vec![0u8; len];
+    read_body(r, &mut body, len)?;
+    let text = String::from_utf8(body)
+        .map_err(|e| WireError::BadJson(format!("invalid utf-8: {e}")))?;
+    Json::parse(&text).map_err(|e| WireError::BadJson(e.to_string()))
+}
+
+// ----------------------------------------------------------------- base64
+
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 with padding (in-tree substrate; no crates offline).
+pub fn b64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = (u32::from(b[0]) << 16) | (u32::from(b[1]) << 8) | u32::from(b[2]);
+        out.push(B64_ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { B64_ALPHABET[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64_ALPHABET[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+fn b64_val(c: u8) -> Option<u32> {
+    match c {
+        b'A'..=b'Z' => Some(u32::from(c - b'A')),
+        b'a'..=b'z' => Some(u32::from(c - b'a') + 26),
+        b'0'..=b'9' => Some(u32::from(c - b'0') + 52),
+        b'+' => Some(62),
+        b'/' => Some(63),
+        _ => None,
+    }
+}
+
+/// Decode standard base64 (padding required). Rejects bad lengths,
+/// foreign characters and misplaced padding with a typed error.
+pub fn b64_decode(text: &str) -> Result<Vec<u8>, WireError> {
+    let bytes = text.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(WireError::BadMessage(format!(
+            "base64 length {} is not a multiple of 4",
+            bytes.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (ci, chunk) in bytes.chunks(4).enumerate() {
+        let last = ci + 1 == bytes.len() / 4;
+        let pads = chunk.iter().rev().take_while(|&&c| c == b'=').count();
+        if pads > 2 || (pads > 0 && !last) {
+            return Err(WireError::BadMessage("misplaced base64 padding".into()));
+        }
+        let mut n = 0u32;
+        for &c in &chunk[..4 - pads] {
+            n = (n << 6)
+                | b64_val(c).ok_or_else(|| {
+                    WireError::BadMessage(format!("bad base64 character {:?}", c as char))
+                })?;
+        }
+        n <<= 6 * pads as u32;
+        out.push((n >> 16) as u8);
+        if pads < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pads < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+// ----------------------------------------------------------- grid payload
+
+/// A grid on the wire: dims plus base64 of the little-endian f32 bytes.
+/// Byte-level encoding means results round-trip *bit*-exactly (NaN
+/// payloads included) — JSON numbers would be lossy and 3× bigger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridPayload {
+    pub dims: Vec<usize>,
+    pub data_b64: String,
+}
+
+impl GridPayload {
+    pub fn from_grid(grid: &Grid) -> GridPayload {
+        let mut bytes = Vec::with_capacity(grid.len() * 4);
+        for v in grid.data() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        GridPayload { dims: grid.dims(), data_b64: b64_encode(&bytes) }
+    }
+
+    pub fn to_grid(&self) -> Result<Grid, WireError> {
+        let cells: usize = self.dims.iter().product();
+        if self.dims.is_empty() || cells == 0 {
+            return Err(WireError::BadMessage(format!("bad grid dims {:?}", self.dims)));
+        }
+        let bytes = b64_decode(&self.data_b64)?;
+        if bytes.len() != cells * 4 {
+            return Err(WireError::BadMessage(format!(
+                "grid payload holds {} bytes but dims {:?} need {}",
+                bytes.len(),
+                self.dims,
+                cells * 4
+            )));
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Grid::from_vec(&self.dims, data))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dims", usize_arr(&self.dims)),
+            ("data", Json::from(self.data_b64.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<GridPayload, WireError> {
+        Ok(GridPayload {
+            dims: req_usize_arr(v, "dims")?,
+            data_b64: req_str(v, "data")?.to_string(),
+        })
+    }
+}
+
+// -------------------------------------------------------------- plan spec
+
+/// The open-session plan description: everything [`PlanBuilder`] needs,
+/// expressed in names and numbers so any client language can speak it.
+/// The stencil is referenced by registry name; inline programs ride in
+/// the `programs` field of [`Request::Open`] (same JSON schema as
+/// `--stencil-file`) and are registered before the plan is built.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanSpec {
+    pub stencil: String,
+    pub grid_dims: Vec<usize>,
+    pub iterations: usize,
+    /// [`Backend::parse`] spec string (`scalar`, `vec:N`, `stream:N`).
+    pub backend: String,
+    pub tile: Option<Vec<usize>>,
+    pub coeffs: Option<Vec<f32>>,
+    pub step_sizes: Option<Vec<usize>>,
+    pub workers: Option<usize>,
+}
+
+impl PlanSpec {
+    /// Describe an existing in-process plan (client-side convenience; the
+    /// wire-vs-inproc ablation uses this to run identical plans).
+    pub fn from_plan(plan: &Plan) -> PlanSpec {
+        PlanSpec {
+            stencil: plan.stencil.name().to_string(),
+            grid_dims: plan.grid_dims.clone(),
+            iterations: plan.iterations,
+            backend: plan.backend.to_string(),
+            tile: Some(plan.tile.clone()),
+            coeffs: Some(plan.coeffs.clone()),
+            step_sizes: Some(plan.step_sizes.clone()),
+            workers: plan.workers,
+        }
+    }
+
+    /// Resolve the spec against the stencil registry and build the plan.
+    pub fn build(&self) -> Result<Plan, EngineError> {
+        let id = StencilRegistry::lookup(&self.stencil).ok_or_else(|| {
+            EngineError::InvalidPlan(format!(
+                "unknown stencil {:?} (register it inline via the open request's \
+                 `programs` field)",
+                self.stencil
+            ))
+        })?;
+        let backend = Backend::parse(&self.backend)?;
+        let mut b = PlanBuilder::new(id)
+            .grid_dims(self.grid_dims.clone())
+            .iterations(self.iterations)
+            .backend(backend);
+        if let Some(tile) = &self.tile {
+            b = b.tile(tile.clone());
+        }
+        if let Some(coeffs) = &self.coeffs {
+            b = b.coeffs(coeffs.clone());
+        }
+        if let Some(sizes) = &self.step_sizes {
+            b = b.step_sizes(sizes.clone());
+        }
+        if let Some(w) = self.workers {
+            b = b.workers(w);
+        }
+        b.build().map_err(|e| EngineError::InvalidPlan(format!("{e:#}")))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("stencil", Json::from(self.stencil.clone())),
+            ("grid_dims", usize_arr(&self.grid_dims)),
+            ("iterations", Json::from(self.iterations)),
+            ("backend", Json::from(self.backend.clone())),
+        ];
+        if let Some(tile) = &self.tile {
+            pairs.push(("tile", usize_arr(tile)));
+        }
+        if let Some(coeffs) = &self.coeffs {
+            pairs.push((
+                "coeffs",
+                Json::Arr(coeffs.iter().map(|&c| Json::from(c as f64)).collect()),
+            ));
+        }
+        if let Some(sizes) = &self.step_sizes {
+            pairs.push(("step_sizes", usize_arr(sizes)));
+        }
+        if let Some(w) = self.workers {
+            pairs.push(("workers", Json::from(w)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<PlanSpec, WireError> {
+        let coeffs = match v.get("coeffs") {
+            None => None,
+            Some(c) => Some(
+                c.as_arr()
+                    .ok_or_else(|| WireError::BadMessage("coeffs must be an array".into()))?
+                    .iter()
+                    .map(|x| x.as_f64().map(|f| f as f32))
+                    .collect::<Option<Vec<f32>>>()
+                    .ok_or_else(|| WireError::BadMessage("coeffs must be numbers".into()))?,
+            ),
+        };
+        Ok(PlanSpec {
+            stencil: req_str(v, "stencil")?.to_string(),
+            grid_dims: req_usize_arr(v, "grid_dims")?,
+            iterations: req_usize(v, "iterations")?,
+            backend: req_str(v, "backend")?.to_string(),
+            tile: opt_usize_arr(v, "tile")?,
+            coeffs,
+            step_sizes: opt_usize_arr(v, "step_sizes")?,
+            workers: opt_usize(v, "workers")?,
+        })
+    }
+}
+
+// --------------------------------------------------------------- messages
+
+/// Client → server messages: the full job lifecycle.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Open a tenant session: a plan spec plus optional inline stencil
+    /// programs (the JSON `--stencil-file` accepts), registered
+    /// idempotently-by-content before the plan is built.
+    Open { plan: PlanSpec, programs: Vec<Json> },
+    /// Submit one workload into an open session. The job id in the
+    /// response is stable across reconnects (and, via the journal,
+    /// across server restarts).
+    Submit {
+        session: u64,
+        grid: GridPayload,
+        power: Option<GridPayload>,
+        iterations: Option<usize>,
+    },
+    /// Non-blocking status probe by job id.
+    Poll { job: u64 },
+    /// Block server-side until the job is terminal or `timeout_ms`
+    /// elapses; a finished job's result rides back in the response.
+    Wait { job: u64, timeout_ms: u64 },
+    /// Ask the server to abandon a job (idempotent; completion races are
+    /// benign).
+    Cancel { job: u64 },
+    /// Per-tenant wire metrics + engine scheduler stats.
+    Stats { session: u64 },
+    /// Close a session. Outstanding jobs keep draining and stay
+    /// poll-able by id; new submits are rejected.
+    Close { session: u64 },
+    /// Liveness probe.
+    Ping,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Open { plan, programs } => {
+                let mut pairs =
+                    vec![("type", Json::from("open")), ("plan", plan.to_json())];
+                if !programs.is_empty() {
+                    pairs.push(("programs", Json::Arr(programs.clone())));
+                }
+                Json::obj(pairs)
+            }
+            Request::Submit { session, grid, power, iterations } => {
+                let mut pairs = vec![
+                    ("type", Json::from("submit")),
+                    ("session", u64_json(*session)),
+                    ("grid", grid.to_json()),
+                ];
+                if let Some(p) = power {
+                    pairs.push(("power", p.to_json()));
+                }
+                if let Some(i) = iterations {
+                    pairs.push(("iterations", Json::from(*i)));
+                }
+                Json::obj(pairs)
+            }
+            Request::Poll { job } => {
+                Json::obj(vec![("type", Json::from("poll")), ("job", u64_json(*job))])
+            }
+            Request::Wait { job, timeout_ms } => Json::obj(vec![
+                ("type", Json::from("wait")),
+                ("job", u64_json(*job)),
+                ("timeout_ms", u64_json(*timeout_ms)),
+            ]),
+            Request::Cancel { job } => {
+                Json::obj(vec![("type", Json::from("cancel")), ("job", u64_json(*job))])
+            }
+            Request::Stats { session } => Json::obj(vec![
+                ("type", Json::from("stats")),
+                ("session", u64_json(*session)),
+            ]),
+            Request::Close { session } => Json::obj(vec![
+                ("type", Json::from("close")),
+                ("session", u64_json(*session)),
+            ]),
+            Request::Ping => Json::obj(vec![("type", Json::from("ping"))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Request, WireError> {
+        match req_str(v, "type")? {
+            "open" => {
+                let plan = PlanSpec::from_json(
+                    v.get("plan")
+                        .ok_or_else(|| WireError::BadMessage("open needs a plan".into()))?,
+                )?;
+                let programs = match v.get("programs") {
+                    None => Vec::new(),
+                    Some(p) => p
+                        .as_arr()
+                        .ok_or_else(|| {
+                            WireError::BadMessage("programs must be an array".into())
+                        })?
+                        .to_vec(),
+                };
+                Ok(Request::Open { plan, programs })
+            }
+            "submit" => Ok(Request::Submit {
+                session: req_u64(v, "session")?,
+                grid: GridPayload::from_json(v.get("grid").ok_or_else(|| {
+                    WireError::BadMessage("submit needs a grid".into())
+                })?)?,
+                power: match v.get("power") {
+                    None => None,
+                    Some(p) => Some(GridPayload::from_json(p)?),
+                },
+                iterations: opt_usize(v, "iterations")?,
+            }),
+            "poll" => Ok(Request::Poll { job: req_u64(v, "job")? }),
+            "wait" => Ok(Request::Wait {
+                job: req_u64(v, "job")?,
+                timeout_ms: req_u64(v, "timeout_ms")?,
+            }),
+            "cancel" => Ok(Request::Cancel { job: req_u64(v, "job")? }),
+            "stats" => Ok(Request::Stats { session: req_u64(v, "session")? }),
+            "close" => Ok(Request::Close { session: req_u64(v, "session")? }),
+            "ping" => Ok(Request::Ping),
+            other => Err(WireError::BadMessage(format!("unknown request type {other:?}"))),
+        }
+    }
+}
+
+/// Server → client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Opened { session: u64 },
+    Accepted { job: u64 },
+    /// Job status snapshot (poll, cancel ack, or a wait that timed out).
+    Status { job: u64, state: JobState, attempts: u32 },
+    /// A finished job's output. Returned once per job (the result is
+    /// fetched-once); later waits see `Status{Done}`.
+    Result { job: u64, grid: GridPayload, attempts: u32, report: Json },
+    Stats { session: u64, stats: Json },
+    Closed { session: u64 },
+    Pong,
+    Error { kind: ErrorKind, message: String },
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Opened { session } => Json::obj(vec![
+                ("type", Json::from("opened")),
+                ("session", u64_json(*session)),
+            ]),
+            Response::Accepted { job } => Json::obj(vec![
+                ("type", Json::from("accepted")),
+                ("job", u64_json(*job)),
+            ]),
+            Response::Status { job, state, attempts } => Json::obj(vec![
+                ("type", Json::from("status")),
+                ("job", u64_json(*job)),
+                ("state", state.to_json()),
+                ("attempts", Json::from(*attempts as usize)),
+            ]),
+            Response::Result { job, grid, attempts, report } => Json::obj(vec![
+                ("type", Json::from("result")),
+                ("job", u64_json(*job)),
+                ("grid", grid.to_json()),
+                ("attempts", Json::from(*attempts as usize)),
+                ("report", report.clone()),
+            ]),
+            Response::Stats { session, stats } => Json::obj(vec![
+                ("type", Json::from("stats")),
+                ("session", u64_json(*session)),
+                ("stats", stats.clone()),
+            ]),
+            Response::Closed { session } => Json::obj(vec![
+                ("type", Json::from("closed")),
+                ("session", u64_json(*session)),
+            ]),
+            Response::Pong => Json::obj(vec![("type", Json::from("pong"))]),
+            Response::Error { kind, message } => Json::obj(vec![
+                ("type", Json::from("error")),
+                ("kind", Json::from(kind.code())),
+                ("message", Json::from(message.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Response, WireError> {
+        match req_str(v, "type")? {
+            "opened" => Ok(Response::Opened { session: req_u64(v, "session")? }),
+            "accepted" => Ok(Response::Accepted { job: req_u64(v, "job")? }),
+            "status" => Ok(Response::Status {
+                job: req_u64(v, "job")?,
+                state: JobState::from_json(v.get("state").ok_or_else(|| {
+                    WireError::BadMessage("status needs a state".into())
+                })?)
+                .map_err(WireError::BadMessage)?,
+                attempts: req_u64(v, "attempts")? as u32,
+            }),
+            "result" => Ok(Response::Result {
+                job: req_u64(v, "job")?,
+                grid: GridPayload::from_json(v.get("grid").ok_or_else(|| {
+                    WireError::BadMessage("result needs a grid".into())
+                })?)?,
+                attempts: req_u64(v, "attempts")? as u32,
+                report: v.get("report").cloned().unwrap_or(Json::Null),
+            }),
+            "stats" => Ok(Response::Stats {
+                session: req_u64(v, "session")?,
+                stats: v.get("stats").cloned().unwrap_or(Json::Null),
+            }),
+            "closed" => Ok(Response::Closed { session: req_u64(v, "session")? }),
+            "pong" => Ok(Response::Pong),
+            "error" => {
+                let code = req_str(v, "kind")?;
+                Ok(Response::Error {
+                    kind: ErrorKind::parse(code).ok_or_else(|| {
+                        WireError::BadMessage(format!("unknown error kind {code:?}"))
+                    })?,
+                    message: req_str(v, "message")?.to_string(),
+                })
+            }
+            other => {
+                Err(WireError::BadMessage(format!("unknown response type {other:?}")))
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ json access
+
+/// u64 ids ride as JSON numbers; f64 is exact for ids below 2^53, far
+/// beyond any journal's lifetime.
+fn u64_json(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::from(x)).collect())
+}
+
+fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, WireError> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| WireError::BadMessage(format!("missing string field {key:?}")))
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64, WireError> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+        .map(|n| n as u64)
+        .ok_or_else(|| WireError::BadMessage(format!("missing integer field {key:?}")))
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize, WireError> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| WireError::BadMessage(format!("missing integer field {key:?}")))
+}
+
+fn opt_usize(v: &Json, key: &str) -> Result<Option<usize>, WireError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| WireError::BadMessage(format!("field {key:?} must be an integer"))),
+    }
+}
+
+fn req_usize_arr(v: &Json, key: &str) -> Result<Vec<usize>, WireError> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .and_then(|a| a.iter().map(Json::as_usize).collect::<Option<Vec<_>>>())
+        .ok_or_else(|| WireError::BadMessage(format!("missing integer array {key:?}")))
+}
+
+fn opt_usize_arr(v: &Json, key: &str) -> Result<Option<Vec<usize>>, WireError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_arr()
+            .and_then(|a| a.iter().map(Json::as_usize).collect::<Option<Vec<_>>>())
+            .map(Some)
+            .ok_or_else(|| {
+                WireError::BadMessage(format!("field {key:?} must be an integer array"))
+            }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_round_trips() {
+        let msg = Json::obj(vec![("type", Json::from("ping")), ("n", Json::from(42usize))]);
+        let bytes = encode_frame(&msg);
+        let got = read_frame(&mut Cursor::new(bytes)).unwrap();
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn clean_eof_is_closed_not_torn() {
+        let empty: &[u8] = &[];
+        assert_eq!(read_frame(&mut Cursor::new(empty)), Err(WireError::Closed));
+    }
+
+    #[test]
+    fn oversized_prefix_rejected_before_body() {
+        let mut bytes = ((MAX_FRAME_BYTES + 1) as u32).to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"xx");
+        let err = read_frame(&mut Cursor::new(bytes)).unwrap_err();
+        assert!(matches!(err, WireError::Oversized { .. }));
+    }
+
+    #[test]
+    fn base64_vectors() {
+        assert_eq!(b64_encode(b""), "");
+        assert_eq!(b64_encode(b"f"), "Zg==");
+        assert_eq!(b64_encode(b"fo"), "Zm8=");
+        assert_eq!(b64_encode(b"foo"), "Zm9v");
+        assert_eq!(b64_decode("Zm9vYmFy").unwrap(), b"foobar");
+        assert!(b64_decode("Zm9").is_err());
+        assert!(b64_decode("Z=9v").is_err());
+        assert!(b64_decode("Zm9!").is_err());
+    }
+
+    #[test]
+    fn grid_payload_is_bit_exact() {
+        let mut g = Grid::new2d(5, 7);
+        g.fill_random(3, -10.0, 10.0);
+        g.data_mut()[0] = f32::NAN;
+        g.data_mut()[1] = f32::NEG_INFINITY;
+        g.data_mut()[2] = -0.0;
+        let p = GridPayload::from_grid(&g);
+        let back = p.to_grid().unwrap();
+        assert_eq!(back.dims(), g.dims());
+        for (a, b) in back.data().iter().zip(g.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn error_kind_codes_round_trip() {
+        for k in [
+            ErrorKind::BadFrame,
+            ErrorKind::BadRequest,
+            ErrorKind::UnknownSession,
+            ErrorKind::UnknownJob,
+            ErrorKind::QuotaJobs,
+            ErrorKind::QuotaCells,
+            ErrorKind::Plan,
+            ErrorKind::Engine,
+            ErrorKind::Shutdown,
+        ] {
+            assert_eq!(ErrorKind::parse(k.code()), Some(k));
+        }
+        assert_eq!(ErrorKind::parse("nope"), None);
+    }
+}

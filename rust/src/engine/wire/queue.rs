@@ -1,0 +1,328 @@
+//! Durable job queue: stable ids, a status ledger, and an append-only
+//! JSONL journal with replay-on-restart.
+//!
+//! Every transition a wire job makes is one line in the journal:
+//!
+//! ```text
+//! {"seq":12,"job":7,"tenant":2,"state":"active","attempts":1,"cells":16384}
+//! ```
+//!
+//! On restart the ledger replays the journal, keeps the *last* record per
+//! job, and heals jobs that were non-terminal when the process died to
+//! `Failed` (their worker state is gone; the healing record is appended so
+//! the journal stays a faithful history). Job-id allocation resumes past
+//! the highest replayed id, so ids stay stable across restarts — the
+//! kill-and-reconnect fault test leans on exactly this.
+//!
+//! `attempts` counts attempts *started*: a job accepted but never
+//! dispatched has 0; each engine submission bumps it.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Lifecycle states of a wire job. Terminal states never change again —
+/// the ledger enforces that, so journal replay is idempotent.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted and queued (initially, or between retry attempts).
+    Queued,
+    /// Submitted to the engine scheduler; a worker may be executing it.
+    Active,
+    /// Finished successfully; the result is held for one fetch.
+    Done,
+    /// Out of retry budget (or unrecoverable): the terminal failure.
+    Failed { attempts: u32, error: String },
+    /// Cancelled by the tenant (or cancel won the race with a failure).
+    Cancelled,
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed { .. } | JobState::Cancelled)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Active => "active",
+            JobState::Done => "done",
+            JobState::Failed { .. } => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            JobState::Failed { attempts, error } => Json::obj(vec![
+                ("label", Json::from("failed")),
+                ("attempts", Json::from(*attempts as usize)),
+                ("error", Json::from(error.clone())),
+            ]),
+            other => Json::from(other.label()),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<JobState, String> {
+        if let Some(label) = v.as_str() {
+            return Ok(match label {
+                "queued" => JobState::Queued,
+                "active" => JobState::Active,
+                "done" => JobState::Done,
+                "cancelled" => JobState::Cancelled,
+                other => return Err(format!("unknown job state {other:?}")),
+            });
+        }
+        if v.get("label").and_then(Json::as_str) == Some("failed") {
+            let attempts = v
+                .get("attempts")
+                .and_then(Json::as_usize)
+                .ok_or("failed state needs attempts")? as u32;
+            let error = v
+                .get("error")
+                .and_then(Json::as_str)
+                .ok_or("failed state needs an error")?
+                .to_string();
+            return Ok(JobState::Failed { attempts, error });
+        }
+        Err(format!("unparseable job state: {v}"))
+    }
+}
+
+/// One job's ledger row: who owns it, where it is, how many attempts have
+/// started, and how big it is (for quota accounting after replay).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobStatus {
+    pub job: u64,
+    pub tenant: u64,
+    pub state: JobState,
+    pub attempts: u32,
+    pub cells: u64,
+}
+
+impl JobStatus {
+    fn to_json(&self, seq: u64) -> Json {
+        Json::obj(vec![
+            ("seq", Json::Num(seq as f64)),
+            ("job", Json::Num(self.job as f64)),
+            ("tenant", Json::Num(self.tenant as f64)),
+            ("state", self.state.to_json()),
+            ("attempts", Json::from(self.attempts as usize)),
+            ("cells", Json::Num(self.cells as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<JobStatus, String> {
+        let num = |key: &str| -> Result<u64, String> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as u64)
+                .ok_or_else(|| format!("journal record missing {key:?}"))
+        };
+        Ok(JobStatus {
+            job: num("job")?,
+            tenant: num("tenant")?,
+            state: JobState::from_json(
+                v.get("state").ok_or("journal record missing state")?,
+            )?,
+            attempts: num("attempts")? as u32,
+            cells: num("cells")?,
+        })
+    }
+}
+
+/// The status ledger. In-memory map of latest status per job, optionally
+/// mirrored to an append-only JSONL journal (one `fsync`-free `flush` per
+/// record — durability against process death, not power loss, which is
+/// the failure mode the fault battery models).
+pub struct JobLedger {
+    jobs: BTreeMap<u64, JobStatus>,
+    next_job: u64,
+    seq: u64,
+    sink: Option<(PathBuf, File)>,
+    /// Jobs healed to Failed during replay (were non-terminal at crash).
+    pub healed: Vec<u64>,
+}
+
+impl JobLedger {
+    /// Ledger with no journal: statuses live and die with the process.
+    pub fn in_memory() -> JobLedger {
+        JobLedger { jobs: BTreeMap::new(), next_job: 1, seq: 0, sink: None, healed: Vec::new() }
+    }
+
+    /// Open (or create) a journal file, replaying any existing records.
+    /// A torn final line — the crash wrote half a record — is tolerated
+    /// and dropped; everything before it is kept. Jobs left non-terminal
+    /// by the crash are healed to `Failed` and the healing records
+    /// appended, so a reconnecting client polling a job id always gets a
+    /// truthful terminal answer.
+    pub fn open(path: &Path) -> std::io::Result<JobLedger> {
+        let mut ledger = JobLedger::in_memory();
+        if path.exists() {
+            let reader = BufReader::new(File::open(path)?);
+            for line in reader.lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                // Torn tail: a record the dying process never finished.
+                // Anything unparseable mid-file is also skipped — the
+                // journal is append-only, so later records supersede it.
+                let Ok(v) = Json::parse(&line) else { continue };
+                let Ok(status) = JobStatus::from_json(&v) else { continue };
+                if let Some(seq) =
+                    v.get("seq").and_then(Json::as_f64).map(|n| n as u64)
+                {
+                    ledger.seq = ledger.seq.max(seq);
+                }
+                ledger.next_job = ledger.next_job.max(status.job + 1);
+                ledger.jobs.insert(status.job, status);
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        ledger.sink = Some((path.to_path_buf(), file));
+        // Heal: any job that was mid-flight when the last process died
+        // can never complete — its worker state is gone.
+        let orphans: Vec<u64> = ledger
+            .jobs
+            .iter()
+            .filter(|(_, s)| !s.state.is_terminal())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in orphans {
+            let mut status = ledger.jobs[&id].clone();
+            status.state = JobState::Failed {
+                attempts: status.attempts,
+                error: "interrupted by server restart".to_string(),
+            };
+            ledger.append(&status)?;
+            ledger.jobs.insert(id, status);
+            ledger.healed.push(id);
+        }
+        Ok(ledger)
+    }
+
+    /// Path of the journal file, if this ledger is durable.
+    pub fn journal_path(&self) -> Option<&Path> {
+        self.sink.as_ref().map(|(p, _)| p.as_path())
+    }
+
+    /// Allocate the next stable job id.
+    pub fn allocate(&mut self) -> u64 {
+        let id = self.next_job;
+        self.next_job += 1;
+        id
+    }
+
+    fn append(&mut self, status: &JobStatus) -> std::io::Result<()> {
+        if let Some((_, file)) = &mut self.sink {
+            self.seq += 1;
+            writeln!(file, "{}", status.to_json(self.seq))?;
+            file.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Record a transition. Terminal states are sticky: a late transition
+    /// on an already-terminal job is ignored (completion/cancel races are
+    /// resolved by whoever records first). Journal write failures are
+    /// swallowed — a full disk must not take down job execution — but the
+    /// in-memory ledger always advances.
+    pub fn record(&mut self, status: JobStatus) {
+        if let Some(prev) = self.jobs.get(&status.job) {
+            if prev.state.is_terminal() {
+                return;
+            }
+        }
+        let _ = self.append(&status);
+        self.jobs.insert(status.job, status);
+    }
+
+    /// Latest status of a job, if this ledger has ever seen it.
+    pub fn status(&self, job: u64) -> Option<&JobStatus> {
+        self.jobs.get(&job)
+    }
+
+    /// All known jobs (tests and ops tooling).
+    pub fn jobs(&self) -> impl Iterator<Item = &JobStatus> {
+        self.jobs.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn status(job: u64, state: JobState, attempts: u32) -> JobStatus {
+        JobStatus { job, tenant: 1, state, attempts, cells: 64 }
+    }
+
+    #[test]
+    fn state_json_round_trips() {
+        for s in [
+            JobState::Queued,
+            JobState::Active,
+            JobState::Done,
+            JobState::Failed { attempts: 3, error: "boom".into() },
+            JobState::Cancelled,
+        ] {
+            assert_eq!(JobState::from_json(&s.to_json()).unwrap(), s);
+        }
+        assert!(JobState::from_json(&Json::from("nope")).is_err());
+    }
+
+    #[test]
+    fn terminal_states_are_sticky() {
+        let mut l = JobLedger::in_memory();
+        let id = l.allocate();
+        l.record(status(id, JobState::Queued, 0));
+        l.record(status(id, JobState::Cancelled, 1));
+        l.record(status(id, JobState::Done, 1));
+        assert_eq!(l.status(id).unwrap().state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn replay_restores_and_heals() {
+        let dir = std::env::temp_dir().join(format!(
+            "fstencil-ledger-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal.jsonl");
+        let _ = std::fs::remove_file(&path);
+
+        {
+            let mut l = JobLedger::open(&path).unwrap();
+            let a = l.allocate();
+            let b = l.allocate();
+            l.record(status(a, JobState::Queued, 0));
+            l.record(status(a, JobState::Active, 1));
+            l.record(status(a, JobState::Done, 1));
+            l.record(status(b, JobState::Active, 2));
+            // process "dies" here with b non-terminal
+        }
+        // Simulate a torn final line from the crash.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"seq\":99,\"job\":3,\"tena").unwrap();
+        }
+
+        let mut l = JobLedger::open(&path).unwrap();
+        assert_eq!(l.status(1).unwrap().state, JobState::Done);
+        assert_eq!(
+            l.status(2).unwrap().state,
+            JobState::Failed { attempts: 2, error: "interrupted by server restart".into() }
+        );
+        assert_eq!(l.healed, vec![2]);
+        // Ids resume past the replayed maximum.
+        assert_eq!(l.allocate(), 3);
+
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

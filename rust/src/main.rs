@@ -4,6 +4,8 @@
 //!   run       execute a stencil workload through the engine
 //!   batch     submit N workloads through one warm engine session
 //!   serve     multi-tenant stress driver: N clients over ONE shared pool
+//!             (--listen <addr> turns it into the TCP front door instead)
+//!   client    wire stress driver: N TCP clients against `serve --listen`
 //!   verify    run every execution path against the scalar oracle
 //!   stencil   list / show the registered stencil programs
 //!   dse       §5.3 design-space exploration on the board simulator
@@ -59,6 +61,7 @@ fn dispatch(sub: &str, args: &Args) -> anyhow::Result<ExitCode> {
         "run" => cmd_run(args),
         "batch" => cmd_batch(args),
         "serve" => cmd_serve(args),
+        "client" => cmd_client(args),
         "verify" => cmd_verify(args),
         "stencil" => cmd_stencil(args),
         "dse" => cmd_dse(args),
@@ -117,6 +120,15 @@ USAGE: fstencil <subcommand> [options]
             closed-loop multi-tenant stress: N clients (mixed stencils x
             backends unless pinned) share ONE worker pool; reports
             aggregate throughput, per-client max queue wait and fairness
+            --listen <host:port> instead binds the TCP front door:
+            [--duration SECS (0 = forever)] [--journal <path.jsonl>]
+            [--max-queued-jobs N] [--max-queued-cells N] [--max-attempts N]
+  client    --connect <host:port> [--clients N] [--jobs M] [--iters I]
+            [--stencil <name>] [--backend <spec>] [--dims H,W[,D]]
+            [--tile a,b] [--cancel-every K] [--stats] [--check]
+            wire stress driver against `serve --listen`: N TCP sessions,
+            M jobs each, quota-aware closed loop; --check verifies the
+            last completed job per session against the scalar oracle
   verify    [--backend scalar|vec|stream|pjrt|auto] [--par-vec V]
   stencil   list                      registered programs + characteristics
             show <name>               one program's tap table
@@ -569,6 +581,13 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use fstencil::engine::DEFAULT_QUEUE_DEPTH;
 
+    // `--listen <addr>` flips serve from the in-process stress driver to
+    // the TCP front door: the same shared pool, tenants arriving over
+    // sockets (see `client`).
+    if let Some(addr) = args.opt("listen") {
+        return serve_listen(args, addr);
+    }
+
     let clients = args.opt_usize("clients").unwrap_or(4).max(1);
     let jobs = args.opt_usize("jobs").unwrap_or(8).max(1);
     let workers = args.opt_usize("workers").unwrap_or_else(|| {
@@ -737,6 +756,267 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     );
     // A dead client is a failure with or without --check (scripts rely on
     // the exit code); --check additionally verified results above.
+    anyhow::ensure!(failures == 0, "{failures} client(s) failed");
+    if check {
+        println!("  verification vs scalar oracle: all clients OK");
+    }
+    Ok(())
+}
+
+/// `serve --listen`: bind the wire front door over one shared pool and
+/// accept TCP tenants until `--duration` expires (0 = run until killed).
+fn serve_listen(args: &Args, addr: &str) -> anyhow::Result<()> {
+    use fstencil::engine::wire::{WireConfig, WireFrontend};
+
+    let workers = args.opt_usize("workers").unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2)
+    });
+    let mut cfg = WireConfig::default();
+    if let Some(n) = args.opt_usize("max-queued-jobs") {
+        cfg.max_queued_jobs = n.max(1);
+    }
+    if let Some(n) = args.opt_usize("max-queued-cells") {
+        cfg.max_queued_cells = n.max(1) as u64;
+    }
+    if let Some(n) = args.opt_usize("max-attempts") {
+        cfg.max_attempts = n.max(1) as u32;
+    }
+    if let Some(path) = args.opt("journal") {
+        cfg.journal = Some(std::path::PathBuf::from(path));
+    }
+    let duration = args.opt_usize("duration").unwrap_or(0);
+
+    let server = StencilEngine::new().serve(workers);
+    let mut front = WireFrontend::bind(addr, server, cfg)
+        .map_err(|e| anyhow::anyhow!("cannot bind {addr}: {e}"))?;
+    let healed = front.healed_jobs();
+    if !healed.is_empty() {
+        eprintln!(
+            "journal replay healed {} job(s) interrupted by the previous run: {healed:?}",
+            healed.len()
+        );
+    }
+    // Scripts (CI included) wait for this exact line before connecting, so
+    // flush past the pipe's block buffering.
+    println!("fstencil serve: listening on {} ({workers} workers)", front.local_addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    if duration == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration as u64));
+    front.shutdown();
+    println!("fstencil serve: done after {duration}s");
+    Ok(())
+}
+
+/// `client`: the wire-side counterpart of `serve --listen` — a closed-loop
+/// stress driver speaking the TCP job protocol. N client threads each open
+/// one session (mixed stencil × backend unless pinned), push M jobs through
+/// it as fast as quotas admit, and with `--check` verify the last completed
+/// job against the scalar oracle.
+fn cmd_client(args: &Args) -> anyhow::Result<()> {
+    use fstencil::engine::wire::{
+        ErrorKind, JobState, PlanSpec, WaitOutcome, WireClient, WireError,
+    };
+    use fstencil::util::json::Json;
+
+    let addr = args
+        .opt("connect")
+        .ok_or_else(|| anyhow::anyhow!("client needs --connect <host:port>"))?
+        .to_string();
+    let clients = args.opt_usize("clients").unwrap_or(2).max(1);
+    let jobs = args.opt_usize("jobs").unwrap_or(4).max(1);
+    let iters = args.opt_usize("iters").unwrap_or(8);
+    let check = args.flag("check");
+    let cancel_every = args.opt_usize("cancel-every").unwrap_or(0);
+    let show_stats = args.flag("stats");
+
+    // Ship --stencil-file programs inline in Open: the protocol carries
+    // the definitions, so a stock server runs programs it has never seen.
+    let programs: Vec<Json> = match args.opt("stencil-file") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            match Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))? {
+                Json::Arr(a) => a,
+                obj => vec![obj],
+            }
+        }
+        None => Vec::new(),
+    };
+
+    let stencil_cycle: Vec<StencilId> = match args.opt("stencil") {
+        Some(_) => vec![parse_stencil(args)?],
+        None => StencilKind::ALL_EXT.iter().map(|&k| StencilId::from(k)).collect(),
+    };
+    let backend_cycle: Vec<String> = match args.opt("backend") {
+        Some(spec) => {
+            Backend::parse(spec)?; // fail fast locally on a typo
+            vec![spec.to_string()]
+        }
+        None => vec!["vec:4".to_string(), "stream:4".to_string(), "scalar".to_string()],
+    };
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for ci in 0..clients {
+        let kind = stencil_cycle[ci % stencil_cycle.len()];
+        let backend = backend_cycle[ci % backend_cycle.len()].clone();
+        let dims = match args.opt_usize_list("dims") {
+            Some(d) if d.len() == kind.ndim() => d,
+            _ => {
+                if kind.ndim() == 2 {
+                    vec![128, 128]
+                } else {
+                    vec![24, 24, 24]
+                }
+            }
+        };
+        let spec = PlanSpec {
+            stencil: kind.name().to_string(),
+            grid_dims: dims.clone(),
+            iterations: iters,
+            backend: backend.clone(),
+            tile: args.opt_usize_list("tile"),
+            coeffs: None,
+            step_sizes: None,
+            workers: None,
+        };
+        let label = format!("{kind} {backend} {dims:?} x{iters}");
+        let addr = addr.clone();
+        let programs = programs.clone();
+        type Outcome = (String, u64, Option<fstencil::util::json::Json>);
+        joins.push(std::thread::spawn(move || -> anyhow::Result<Outcome> {
+            let mut client = WireClient::connect(&addr)
+                .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+            let session = client
+                .open(spec.clone(), programs)
+                .map_err(|e| anyhow::anyhow!("open {label}: {e}"))?;
+            let mk_job = |j: u64| {
+                let mut g = match dims.as_slice() {
+                    [h, w] => Grid::new2d(*h, *w),
+                    [d, h, w] => Grid::new3d(*d, *h, *w),
+                    _ => unreachable!("plan validated dims"),
+                };
+                g.fill_random(ci as u64 * 10_000 + j, 0.0, 1.0);
+                let power = kind.def().has_power.then(|| {
+                    let mut p = g.clone();
+                    p.fill_random(ci as u64 * 10_000 + j + 5000, 0.0, 0.25);
+                    p
+                });
+                (g, power)
+            };
+            let cells_per_job = dims.iter().product::<usize>() as u64 * iters as u64;
+            let mut cells = 0u64;
+            let mut last_done: Option<(u64, Grid)> = None;
+            // Books one job's terminal outcome (cancelled is expected only
+            // under --cancel-every; anything else terminal is a failure).
+            let mut account = |j: u64, outcome: WaitOutcome| -> anyhow::Result<()> {
+                match outcome {
+                    WaitOutcome::Done { grid, .. } => {
+                        cells += cells_per_job;
+                        last_done = Some((j, grid));
+                    }
+                    WaitOutcome::Terminal { state: JobState::Cancelled, .. }
+                        if cancel_every > 0 => {}
+                    WaitOutcome::Terminal { state, .. } => {
+                        anyhow::bail!("{label}: job {j} ended {state:?}")
+                    }
+                    WaitOutcome::Pending { state, .. } => {
+                        anyhow::bail!("{label}: job {j} still {state:?} after 300s")
+                    }
+                }
+                Ok(())
+            };
+            // Quota-aware closed loop: on backpressure, drain the oldest
+            // not-yet-fetched job and retry. `drain_at` is the fetch
+            // cursor into `ids`.
+            let wait_budget = std::time::Duration::from_secs(300);
+            let mut ids: Vec<u64> = Vec::with_capacity(jobs);
+            let mut drain_at = 0usize;
+            for j in 0..jobs as u64 {
+                let (g, power) = mk_job(j);
+                let id = loop {
+                    match client.submit(session, &g, power.as_ref(), None) {
+                        Ok(id) => break id,
+                        Err(WireError::Server {
+                            kind: ErrorKind::QuotaJobs | ErrorKind::QuotaCells,
+                            ..
+                        }) => {
+                            anyhow::ensure!(
+                                drain_at < ids.len(),
+                                "{label}: quota breach with no job left to drain"
+                            );
+                            let old = ids[drain_at];
+                            let outcome = client
+                                .wait_result(old, wait_budget)
+                                .map_err(|e| anyhow::anyhow!("drain {label}: {e}"))?;
+                            account(drain_at as u64, outcome)?;
+                            drain_at += 1;
+                        }
+                        Err(e) => anyhow::bail!("submit {label}: {e}"),
+                    }
+                };
+                if cancel_every > 0 && (j as usize + 1) % cancel_every == 0 {
+                    client.cancel(id).map_err(|e| anyhow::anyhow!("cancel: {e}"))?;
+                }
+                ids.push(id);
+            }
+            for (j, id) in ids.iter().enumerate().skip(drain_at) {
+                let outcome = client
+                    .wait_result(*id, wait_budget)
+                    .map_err(|e| anyhow::anyhow!("wait {label} job {id}: {e}"))?;
+                account(j as u64, outcome)?;
+            }
+            if check {
+                let (j, got) = last_done.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("{label}: --check needs >= 1 undrained completed job")
+                })?;
+                let (g, power) = mk_job(*j);
+                let plan = spec.build().map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
+                let want = reference::run(kind, &g, power.as_ref(), &plan.coeffs, iters);
+                let diff = got.max_abs_diff(&want);
+                anyhow::ensure!(
+                    diff < 1e-3,
+                    "{label}: wire result diverges from the scalar oracle (max |d| = {diff:e})"
+                );
+            }
+            let stats = if show_stats { client.stats(session).ok() } else { None };
+            client.close_session(session).map_err(|e| anyhow::anyhow!("close: {e}"))?;
+            Ok((label, cells, stats))
+        }));
+    }
+
+    let mut failures = 0usize;
+    let mut total_cells = 0u64;
+    let mut outcomes = Vec::new();
+    for j in joins {
+        match j.join().expect("client thread panicked") {
+            Ok(o) => {
+                total_cells += o.1;
+                outcomes.push(o);
+            }
+            Err(e) => {
+                eprintln!("client failed: {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed();
+    println!("client: {clients} sessions x {jobs} jobs against {addr}");
+    for (label, cells, stats) in &outcomes {
+        println!("  {:<44} {:>10.1} Mcell", label, *cells as f64 / 1e6);
+        if let Some(s) = stats {
+            println!("    stats: {s}");
+        }
+    }
+    println!(
+        "  aggregate: {:.1} Mcell/s over {:.3}s",
+        total_cells as f64 / wall.as_secs_f64() / 1e6,
+        wall.as_secs_f64(),
+    );
     anyhow::ensure!(failures == 0, "{failures} client(s) failed");
     if check {
         println!("  verification vs scalar oracle: all clients OK");

@@ -522,3 +522,30 @@ fn cli_spellings_reach_the_expected_executors() {
         "host-stream"
     );
 }
+
+#[test]
+fn cancelled_then_shutdown_prefers_cancelled() {
+    // Regression: a job cancelled before the server shuts down must
+    // resolve to Cancelled, not Shutdown — the tenant's request came
+    // first, and the precedence must hold even when shutdown drains the
+    // queue before the scheduler processes the cancel.
+    let mut server = EngineServer::start(1);
+    let plan = PlanBuilder::new(StencilKind::Diffusion2D)
+        .grid_dims(vec![192, 192])
+        .iterations(16)
+        .tile(vec![32, 32])
+        .build()
+        .unwrap();
+    let client = server.open(plan).unwrap();
+    // A heavy job hogs the single worker so the second stays queued.
+    let _heavy = client.submit(mk_grid(2, &[192, 192], 41)).unwrap();
+    let victim = client.submit(mk_grid(2, &[192, 192], 42)).unwrap();
+    victim.cancel();
+    server.shutdown();
+    assert!(victim.wait_timeout(STRESS_WAIT), "cancelled job hung through shutdown");
+    match victim.wait() {
+        Err(EngineError::Cancelled) => {}
+        Ok(_) => {} // finished before the cancel landed — legal race
+        Err(other) => panic!("cancelled-then-shutdown returned {other}, want Cancelled"),
+    }
+}

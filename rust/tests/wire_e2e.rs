@@ -1,0 +1,138 @@
+//! End-to-end wire bit-identity: N concurrent wire clients × mixed
+//! stencils × mixed backends through one `WireFrontend`, every result
+//! compared BIT-for-bit against a serial single-tenant oracle running
+//! the identical plan in-process. This extends the `engine_api.rs`
+//! multi-tenant stress pattern across the socket: base64/LE-f32 payload
+//! encoding, the job ledger, the reaper, and DRR multiplexing must all
+//! be transparent to the numerics.
+
+use std::time::Duration;
+
+use fstencil::engine::wire::{PlanSpec, WaitOutcome, WireClient, WireConfig, WireFrontend};
+use fstencil::engine::{EngineServer, StencilEngine, Workload};
+use fstencil::stencil::Grid;
+
+const STRESS_WAIT: Duration = Duration::from_secs(60);
+const JOBS_PER_CLIENT: usize = 3;
+
+fn bind_or_skip(workers: usize) -> Option<WireFrontend> {
+    let server = EngineServer::start(workers);
+    match WireFrontend::bind("127.0.0.1:0", server, WireConfig::default()) {
+        Ok(f) => Some(f),
+        Err(e) => {
+            eprintln!("SKIP: loopback bind unavailable in this environment ({e})");
+            None
+        }
+    }
+}
+
+fn spec(stencil: &str, dims: &[usize], iterations: usize, backend: &str) -> PlanSpec {
+    PlanSpec {
+        stencil: stencil.to_string(),
+        grid_dims: dims.to_vec(),
+        iterations,
+        backend: backend.to_string(),
+        tile: None,
+        coeffs: None,
+        step_sizes: None,
+        workers: None,
+    }
+}
+
+fn mk_grid(dims: &[usize], seed: u64, lo: f32, hi: f32) -> Grid {
+    let mut g = if dims.len() == 2 {
+        Grid::new2d(dims[0], dims[1])
+    } else {
+        Grid::new3d(dims[0], dims[1], dims[2])
+    };
+    g.fill_random(seed, lo, hi);
+    g
+}
+
+/// (input, optional power, wire result) for one job.
+type JobRecord = (Grid, Option<Grid>, Grid);
+
+#[test]
+fn wire_clients_are_bit_identical_to_the_serial_oracle() {
+    let Some(front) = bind_or_skip(4) else { return };
+    let addr = front.local_addr().to_string();
+
+    // One session per client thread: every stencil family, every backend
+    // family, 2-D and 3-D, with and without a power map.
+    let mixes: Vec<PlanSpec> = vec![
+        spec("diffusion2d", &[96, 96], 8, "vec:8"),
+        spec("hotspot2d", &[96, 96], 6, "stream:4"),
+        spec("diffusion3d", &[20, 20, 20], 5, "vec:4"),
+        spec("diffusion2d", &[64, 64], 12, "scalar"),
+    ];
+
+    let handles: Vec<std::thread::JoinHandle<(PlanSpec, Vec<JobRecord>)>> = mixes
+        .into_iter()
+        .enumerate()
+        .map(|(ci, sp)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = WireClient::connect(&addr).expect("connect");
+                let session = client.open(sp.clone(), vec![]).expect("open");
+                let needs_power = sp.stencil.starts_with("hotspot");
+                // Closed-loop: submit all, then drain all — exactly the
+                // shape the CLI stress driver uses.
+                let mut inputs = Vec::new();
+                let mut jobs = Vec::new();
+                for j in 0..JOBS_PER_CLIENT {
+                    let seed = (ci * 100 + j) as u64;
+                    let grid = mk_grid(&sp.grid_dims, seed, 0.0, 1.0);
+                    let power = needs_power
+                        .then(|| mk_grid(&sp.grid_dims, seed + 50, 0.0, 0.25));
+                    let job = client
+                        .submit(session, &grid, power.as_ref(), None)
+                        .expect("submit");
+                    inputs.push((grid, power));
+                    jobs.push(job);
+                }
+                let mut records = Vec::new();
+                for (job, (grid, power)) in jobs.into_iter().zip(inputs) {
+                    match client.wait_result(job, STRESS_WAIT).expect("wait") {
+                        WaitOutcome::Done { grid: out, attempts, .. } => {
+                            assert_eq!(attempts, 1, "unexpected retries in e2e");
+                            records.push((grid, power, out));
+                        }
+                        other => panic!("wire job {job} resolved to {other:?}"),
+                    }
+                }
+                client.close_session(session).expect("close");
+                (sp, records)
+            })
+        })
+        .collect();
+
+    let results: Vec<(PlanSpec, Vec<JobRecord>)> =
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect();
+
+    // Serial single-tenant oracle: the SAME plan (built from the same
+    // spec), run in-process. Bit-identity, not tolerance.
+    let engine = StencilEngine::new();
+    for (sp, records) in results {
+        let plan = sp.build().expect("oracle plan builds");
+        let mut session = engine.session(plan).expect("oracle session");
+        for (i, (input, power, wire_out)) in records.into_iter().enumerate() {
+            let mut w = Workload::new(input);
+            if let Some(p) = power {
+                w = w.power(p);
+            }
+            let want = session.submit(w).wait().expect("oracle run").grid;
+            assert_eq!(want.dims(), wire_out.dims());
+            for (k, (a, b)) in
+                wire_out.data().iter().zip(want.data()).enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "bit mismatch: stencil {} backend {} job {i} cell {k}: {a} != {b}",
+                    sp.stencil,
+                    sp.backend,
+                );
+            }
+        }
+    }
+}

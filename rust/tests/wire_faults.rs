@@ -1,0 +1,424 @@
+//! Fault-injection battery for the wire front door. Every scenario the
+//! ISSUE names, with bounded waits throughout — zero hangs, zero panics:
+//!
+//! * client disconnect mid-job → the job drains anyway, the ledger marks
+//!   it, and a NEW connection fetches the result by job id;
+//! * kill-and-reconnect: a restarted frontend replays the JSONL journal,
+//!   restores terminal statuses exactly, heals mid-flight jobs to
+//!   `Failed`, and never re-issues a used job id;
+//! * retry exhaustion: with completion-time fault injection, a job burns
+//!   `max_attempts` real engine submissions and surfaces
+//!   `Failed{attempts}`; with fewer injected faults it recovers to
+//!   `Done` with the attempt count showing the journey;
+//! * quota breach returns typed backpressure without starving the other
+//!   tenant;
+//! * torn / garbage / oversized raw frames never take the server down.
+//!
+//! Tests that need a loopback socket skip gracefully (with a message)
+//! when the sandbox forbids binding — the battery must never turn an
+//! environment restriction into a red build.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use fstencil::engine::wire::protocol::{encode_frame, read_frame};
+use fstencil::engine::wire::{
+    ErrorKind, JobState, PlanSpec, Response, WaitOutcome, WireClient, WireConfig,
+    WireError, WireFrontend,
+};
+use fstencil::engine::EngineServer;
+use fstencil::stencil::{reference, Grid, StencilKind};
+
+const STRESS_WAIT: Duration = Duration::from_secs(60);
+
+/// Bind a frontend on an ephemeral loopback port, or skip the test if
+/// the environment forbids sockets entirely.
+fn bind_or_skip(workers: usize, cfg: WireConfig) -> Option<WireFrontend> {
+    let server = EngineServer::start(workers);
+    match WireFrontend::bind("127.0.0.1:0", server, cfg) {
+        Ok(f) => Some(f),
+        Err(e) => {
+            eprintln!("SKIP: loopback bind unavailable in this environment ({e})");
+            None
+        }
+    }
+}
+
+fn spec(dims: &[usize], iterations: usize, backend: &str) -> PlanSpec {
+    PlanSpec {
+        stencil: if dims.len() == 2 { "diffusion2d" } else { "diffusion3d" }.to_string(),
+        grid_dims: dims.to_vec(),
+        iterations,
+        backend: backend.to_string(),
+        tile: None,
+        coeffs: None,
+        step_sizes: None,
+        workers: None,
+    }
+}
+
+fn mk_grid(dims: &[usize], seed: u64) -> Grid {
+    let mut g = if dims.len() == 2 {
+        Grid::new2d(dims[0], dims[1])
+    } else {
+        Grid::new3d(dims[0], dims[1], dims[2])
+    };
+    g.fill_random(seed, 0.0, 1.0);
+    g
+}
+
+fn tmp_journal(tag: &str) -> PathBuf {
+    let path = std::env::temp_dir()
+        .join(format!("fstencil-wire-{tag}-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+#[test]
+fn disconnect_mid_job_drains_and_result_survives() {
+    let Some(front) = bind_or_skip(1, WireConfig::default()) else { return };
+    let addr = front.local_addr().to_string();
+    let dims = [192, 192];
+    let input = mk_grid(&dims, 11);
+
+    let job = {
+        let mut doomed = WireClient::connect(&addr).unwrap();
+        let session = doomed.open(spec(&dims, 24, "vec:4"), vec![]).unwrap();
+        let job = doomed.submit(session, &input, None, None).unwrap();
+        // Connection dies here with the job in flight. The SESSION is
+        // server-side state, so nothing is abandoned.
+        job
+    };
+
+    let mut survivor = WireClient::connect(&addr).unwrap();
+    match survivor.wait_result(job, STRESS_WAIT).unwrap() {
+        WaitOutcome::Done { grid, attempts, .. } => {
+            assert_eq!(attempts, 1);
+            let want = reference::run(
+                StencilKind::Diffusion2D,
+                &input,
+                None,
+                StencilKind::Diffusion2D.def().default_coeffs,
+                24,
+            );
+            assert!(grid.max_abs_diff(&want) < 1e-2, "drained result is wrong");
+        }
+        other => panic!("job abandoned after disconnect: {other:?}"),
+    }
+    assert_eq!(front.job_status(job).unwrap().state, JobState::Done);
+}
+
+#[test]
+fn journal_replay_restores_status_and_never_reuses_ids() {
+    let path = tmp_journal("replay");
+    let dims = [64, 64];
+    let cfg = WireConfig { journal: Some(path.clone()), ..WireConfig::default() };
+
+    // Phase 1: run two jobs to completion, cancel nothing, shut down.
+    let (done_job, cancelled_job) = {
+        let Some(front) = bind_or_skip(2, cfg.clone()) else { return };
+        let addr = front.local_addr().to_string();
+        let mut c = WireClient::connect(&addr).unwrap();
+        let session = c.open(spec(&dims, 4, "scalar"), vec![]).unwrap();
+        let done = c.submit(session, &mk_grid(&dims, 1), None, None).unwrap();
+        assert!(matches!(
+            c.wait_result(done, STRESS_WAIT).unwrap(),
+            WaitOutcome::Done { .. }
+        ));
+        // A second job, cancelled: its terminal state must also survive.
+        let heavy_dims = [192, 192];
+        let s2 = c.open(spec(&heavy_dims, 32, "scalar"), vec![]).unwrap();
+        let victim = c.submit(s2, &mk_grid(&heavy_dims, 2), None, None).unwrap();
+        let _ = c.cancel(victim).unwrap();
+        match c.wait_result(victim, STRESS_WAIT).unwrap() {
+            WaitOutcome::Terminal { state, .. } => {
+                assert!(
+                    matches!(state, JobState::Cancelled | JobState::Done),
+                    "cancel resolved to {state:?}"
+                );
+            }
+            WaitOutcome::Done { .. } => {} // cancel lost the race — legal
+            WaitOutcome::Pending { .. } => panic!("cancel left the job pending"),
+        }
+        (done, victim)
+    };
+
+    // Phase 2: a fresh frontend on the SAME journal. Terminal statuses
+    // replay exactly; new job ids never collide with replayed ones.
+    {
+        let Some(front) = bind_or_skip(1, cfg) else { return };
+        let addr = front.local_addr().to_string();
+        let status = front.job_status(done_job).expect("done job replayed");
+        assert_eq!(status.state, JobState::Done);
+        let status = front.job_status(cancelled_job).expect("victim replayed");
+        assert!(status.state.is_terminal(), "replayed state {:?}", status.state);
+
+        // Poll over the wire too — the reconnect path a real client uses.
+        let mut c = WireClient::connect(&addr).unwrap();
+        let (state, _) = c.poll(done_job).unwrap();
+        assert_eq!(state, JobState::Done);
+
+        // And a new submission gets a FRESH id.
+        let session = c.open(spec(&dims, 2, "scalar"), vec![]).unwrap();
+        let fresh = c.submit(session, &mk_grid(&dims, 3), None, None).unwrap();
+        assert!(
+            fresh > done_job.max(cancelled_job),
+            "job id {fresh} reuses a journaled id"
+        );
+        assert!(matches!(
+            c.wait_result(fresh, STRESS_WAIT).unwrap(),
+            WaitOutcome::Done { .. }
+        ));
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn journal_heals_jobs_killed_mid_flight() {
+    let path = tmp_journal("heal");
+    // Hand-write the journal a crashed server would leave behind: job 1
+    // finished, job 2 was ACTIVE when the process died, and the final
+    // line is torn mid-record.
+    let mut f = std::fs::File::create(&path).unwrap();
+    writeln!(f, r#"{{"seq":1,"job":1,"tenant":1,"state":"queued","attempts":0,"cells":4096}}"#).unwrap();
+    writeln!(f, r#"{{"seq":2,"job":1,"tenant":1,"state":"active","attempts":1,"cells":4096}}"#).unwrap();
+    writeln!(f, r#"{{"seq":3,"job":1,"tenant":1,"state":"done","attempts":1,"cells":4096}}"#).unwrap();
+    writeln!(f, r#"{{"seq":4,"job":2,"tenant":1,"state":"active","attempts":2,"cells":4096}}"#).unwrap();
+    write!(f, r#"{{"seq":5,"job":3,"tena"#).unwrap(); // torn by the crash
+    drop(f);
+
+    let cfg = WireConfig { journal: Some(path.clone()), ..WireConfig::default() };
+    let Some(front) = bind_or_skip(1, cfg) else {
+        let _ = std::fs::remove_file(&path);
+        return;
+    };
+    // Job 1 replays as-is; job 2 is healed to Failed{attempts:2}.
+    assert_eq!(front.job_status(1).unwrap().state, JobState::Done);
+    assert_eq!(front.healed_jobs(), vec![2]);
+    match &front.job_status(2).unwrap().state {
+        JobState::Failed { attempts, error } => {
+            assert_eq!(*attempts, 2);
+            assert!(error.contains("restart"), "healing reason: {error}");
+        }
+        other => panic!("mid-flight job healed to {other:?}"),
+    }
+    // The torn record for job 3 was dropped, and its id was never
+    // allocated — so the next fresh id is exactly 3.
+    let addr = front.local_addr().to_string();
+    let mut c = WireClient::connect(&addr).unwrap();
+    let session = c.open(spec(&[64, 64], 2, "scalar"), vec![]).unwrap();
+    let fresh = c.submit(session, &mk_grid(&[64, 64], 5), None, None).unwrap();
+    assert_eq!(fresh, 3);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn retry_exhaustion_surfaces_failed_with_attempts() {
+    let cfg = WireConfig {
+        fault_fail_attempts: 5, // more faults than budget → must exhaust
+        max_attempts: 3,
+        ..WireConfig::default()
+    };
+    let Some(front) = bind_or_skip(2, cfg) else { return };
+    let addr = front.local_addr().to_string();
+    let mut c = WireClient::connect(&addr).unwrap();
+    let session = c.open(spec(&[64, 64], 3, "scalar"), vec![]).unwrap();
+    let job = c.submit(session, &mk_grid(&[64, 64], 9), None, None).unwrap();
+    match c.wait_result(job, STRESS_WAIT).unwrap() {
+        WaitOutcome::Terminal { state: JobState::Failed { attempts, error }, attempts: a } => {
+            assert_eq!(attempts, 3, "failed after {attempts} attempts, want 3");
+            assert_eq!(a, 3);
+            assert!(error.contains("injected"), "failure cause: {error}");
+        }
+        other => panic!("exhausted job resolved to {other:?}"),
+    }
+    assert!(matches!(
+        front.job_status(job).unwrap().state,
+        JobState::Failed { attempts: 3, .. }
+    ));
+}
+
+#[test]
+fn retry_recovers_when_faults_stop_before_budget() {
+    let cfg = WireConfig {
+        fault_fail_attempts: 2, // attempts 1 and 2 fail, attempt 3 lands
+        max_attempts: 3,
+        ..WireConfig::default()
+    };
+    let Some(front) = bind_or_skip(2, cfg) else { return };
+    let addr = front.local_addr().to_string();
+    let dims = [64, 64];
+    let input = mk_grid(&dims, 13);
+    let mut c = WireClient::connect(&addr).unwrap();
+    let session = c.open(spec(&dims, 4, "vec:4"), vec![]).unwrap();
+    let job = c.submit(session, &input, None, None).unwrap();
+    match c.wait_result(job, STRESS_WAIT).unwrap() {
+        WaitOutcome::Done { grid, attempts, .. } => {
+            assert_eq!(attempts, 3, "recovered on attempt {attempts}, want 3");
+            let want = reference::run(
+                StencilKind::Diffusion2D,
+                &input,
+                None,
+                StencilKind::Diffusion2D.def().default_coeffs,
+                4,
+            );
+            assert!(grid.max_abs_diff(&want) < 1e-3, "retried result is wrong");
+        }
+        other => panic!("recoverable job resolved to {other:?}"),
+    }
+    assert_eq!(front.job_status(job).unwrap().state, JobState::Done);
+    assert_eq!(front.job_status(job).unwrap().attempts, 3);
+}
+
+#[test]
+fn quota_breach_is_backpressure_not_starvation() {
+    let cfg = WireConfig { max_queued_jobs: 2, ..WireConfig::default() };
+    let Some(front) = bind_or_skip(1, cfg) else { return };
+    let addr = front.local_addr().to_string();
+    let heavy_dims = [192, 192];
+
+    // Tenant A fills its quota with two heavy jobs on the 1-worker pool.
+    let mut a = WireClient::connect(&addr).unwrap();
+    let sess_a = a.open(spec(&heavy_dims, 24, "scalar"), vec![]).unwrap();
+    let a1 = a.submit(sess_a, &mk_grid(&heavy_dims, 1), None, None).unwrap();
+    let a2 = a.submit(sess_a, &mk_grid(&heavy_dims, 2), None, None).unwrap();
+    // Third submit: typed backpressure, not an abandoned connection.
+    match a.submit(sess_a, &mk_grid(&heavy_dims, 3), None, None) {
+        Err(WireError::Server { kind: ErrorKind::QuotaJobs, .. }) => {}
+        other => panic!("over-quota submit returned {other:?}"),
+    }
+
+    // Tenant B is unaffected: its quota is its own, and DRR still serves
+    // it through the shared single worker.
+    let mut b = WireClient::connect(&addr).unwrap();
+    let sess_b = b.open(spec(&[64, 64], 2, "scalar"), vec![]).unwrap();
+    let b1 = b.submit(sess_b, &mk_grid(&[64, 64], 4), None, None).unwrap();
+    assert!(matches!(
+        b.wait_result(b1, STRESS_WAIT).unwrap(),
+        WaitOutcome::Done { .. }
+    ));
+
+    // Once A's jobs drain, the quota releases and A submits again.
+    for job in [a1, a2] {
+        assert!(matches!(
+            a.wait_result(job, STRESS_WAIT).unwrap(),
+            WaitOutcome::Done { .. }
+        ));
+    }
+    let a3 = a.submit(sess_a, &mk_grid(&heavy_dims, 5), None, None).unwrap();
+    assert!(matches!(
+        a.wait_result(a3, STRESS_WAIT).unwrap(),
+        WaitOutcome::Done { .. }
+    ));
+}
+
+#[test]
+fn cells_quota_counts_volume_not_jobs() {
+    let dims = [64, 64]; // 4096 cells
+    let cfg = WireConfig {
+        max_queued_cells: 4096, // exactly one grid's worth
+        ..WireConfig::default()
+    };
+    let Some(front) = bind_or_skip(1, cfg) else { return };
+    let addr = front.local_addr().to_string();
+    let mut c = WireClient::connect(&addr).unwrap();
+    let session = c.open(spec(&dims, 64, "scalar"), vec![]).unwrap();
+    let first = c.submit(session, &mk_grid(&dims, 1), None, None).unwrap();
+    match c.submit(session, &mk_grid(&dims, 2), None, None) {
+        Err(WireError::Server { kind: ErrorKind::QuotaCells, .. }) => {}
+        other => panic!("over-cell-quota submit returned {other:?}"),
+    }
+    assert!(matches!(
+        c.wait_result(first, STRESS_WAIT).unwrap(),
+        WaitOutcome::Done { .. }
+    ));
+    // Quota released with the drain.
+    let second = c.submit(session, &mk_grid(&dims, 2), None, None).unwrap();
+    assert!(matches!(
+        c.wait_result(second, STRESS_WAIT).unwrap(),
+        WaitOutcome::Done { .. }
+    ));
+}
+
+#[test]
+fn torn_garbage_and_oversized_frames_never_kill_the_server() {
+    let Some(front) = bind_or_skip(1, WireConfig::default()) else { return };
+    let addr = front.local_addr().to_string();
+
+    // Garbage body inside valid framing: typed error, connection LIVES.
+    {
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.set_read_timeout(Some(STRESS_WAIT)).unwrap();
+        let body = b"\xff\xfenot json at all";
+        let mut frame = (body.len() as u32).to_be_bytes().to_vec();
+        frame.extend_from_slice(body);
+        raw.write_all(&frame).unwrap();
+        match Response::from_json(&read_frame(&mut raw).unwrap()).unwrap() {
+            Response::Error { kind: ErrorKind::BadFrame, .. } => {}
+            other => panic!("garbage frame answered with {other:?}"),
+        }
+        // Same socket still speaks the protocol.
+        let ping = encode_frame(&fstencil::engine::wire::Request::Ping.to_json());
+        raw.write_all(&ping).unwrap();
+        assert!(matches!(
+            Response::from_json(&read_frame(&mut raw).unwrap()).unwrap(),
+            Response::Pong
+        ));
+    }
+
+    // Torn frame then hangup: server drops the connection, nothing else.
+    {
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.write_all(&[0, 0, 1]).unwrap(); // half a length prefix
+        drop(raw);
+    }
+
+    // Oversized length prefix: typed error, then the server hangs up
+    // (framing is unrecoverable), but the SERVER survives.
+    {
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.set_read_timeout(Some(STRESS_WAIT)).unwrap();
+        raw.write_all(&u32::MAX.to_be_bytes()).unwrap();
+        match Response::from_json(&read_frame(&mut raw).unwrap()).unwrap() {
+            Response::Error { kind: ErrorKind::BadFrame, .. } => {}
+            other => panic!("oversized frame answered with {other:?}"),
+        }
+    }
+
+    // After all three abuses, a fresh well-behaved client works.
+    let mut c = WireClient::connect(&addr).unwrap();
+    c.ping().unwrap();
+    let session = c.open(spec(&[64, 64], 2, "scalar"), vec![]).unwrap();
+    let job = c.submit(session, &mk_grid(&[64, 64], 7), None, None).unwrap();
+    assert!(matches!(
+        c.wait_result(job, STRESS_WAIT).unwrap(),
+        WaitOutcome::Done { .. }
+    ));
+}
+
+#[test]
+fn cancel_over_the_wire_reaches_the_ledger() {
+    let Some(front) = bind_or_skip(1, WireConfig::default()) else { return };
+    let addr = front.local_addr().to_string();
+    let heavy_dims = [192, 192];
+    let mut c = WireClient::connect(&addr).unwrap();
+    let session = c.open(spec(&heavy_dims, 24, "scalar"), vec![]).unwrap();
+    // First job hogs the worker; the second is safely queued when the
+    // cancel arrives.
+    let shield = c.submit(session, &mk_grid(&heavy_dims, 1), None, None).unwrap();
+    let victim = c.submit(session, &mk_grid(&heavy_dims, 2), None, None).unwrap();
+    let _ = c.cancel(victim).unwrap();
+    match c.wait_result(victim, STRESS_WAIT).unwrap() {
+        WaitOutcome::Terminal { state: JobState::Cancelled, .. } => {}
+        WaitOutcome::Done { .. } => {} // completion won the race — legal
+        other => panic!("cancelled job resolved to {other:?}"),
+    }
+    assert!(matches!(
+        c.wait_result(shield, STRESS_WAIT).unwrap(),
+        WaitOutcome::Done { .. }
+    ));
+    let status = front.job_status(victim).unwrap();
+    assert!(status.state.is_terminal());
+}

@@ -1,0 +1,389 @@
+//! Property tests for the wire protocol layer — no sockets, no server:
+//! the codec is exercised through in-memory cursors so every case is
+//! deterministic and fast. The acceptance properties:
+//!
+//! * frame encode → decode is the identity on random nested JSON;
+//! * base64 and grid payloads round-trip BIT-exactly, including NaN
+//!   payloads and arbitrary f32 bit patterns;
+//! * torn, oversized, and garbage frames are rejected with typed
+//!   [`WireError`]s — never a panic, never a hang (every read is over a
+//!   finite cursor);
+//! * `Request`/`Response`/`PlanSpec` message round-trips, and
+//!   `PlanSpec::build` agrees with a directly-built `PlanBuilder` plan.
+
+use std::io::Cursor;
+
+use fstencil::engine::wire::protocol::{
+    b64_decode, b64_encode, encode_frame, read_frame, MAX_FRAME_BYTES,
+};
+use fstencil::engine::wire::{
+    ErrorKind, GridPayload, JobState, PlanSpec, Request, Response, WireError,
+};
+use fstencil::engine::Backend;
+use fstencil::stencil::Grid;
+use fstencil::util::json::Json;
+use fstencil::util::prop::{forall, Rng};
+
+/// Random JSON value with bounded depth (the frame codec is agnostic to
+/// message schema, so arbitrary trees are the right domain).
+fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+    let leaf = depth == 0 || rng.chance(0.4);
+    if leaf {
+        match rng.usize_in(0, 3) {
+            0 => Json::Null,
+            1 => Json::from(rng.bool()),
+            // Integral-valued f64s: the compact printer normalizes them,
+            // and fract()==0 survives the round trip exactly.
+            2 => Json::Num(rng.isize_in(-100_000, 100_000) as f64),
+            _ => Json::from(gen_string(rng)),
+        }
+    } else if rng.bool() {
+        let n = rng.usize_in(0, 4);
+        Json::Arr((0..n).map(|_| gen_json(rng, depth - 1)).collect())
+    } else {
+        let n = rng.usize_in(0, 4);
+        Json::obj(
+            (0..n)
+                .map(|i| {
+                    let key: &'static str =
+                        ["alpha", "beta", "gamma", "delta", "epsilon"][i % 5];
+                    (key, gen_json(rng, depth - 1))
+                })
+                .collect(),
+        )
+    }
+}
+
+fn gen_string(rng: &mut Rng) -> String {
+    let n = rng.usize_in(0, 12);
+    (0..n)
+        .map(|_| {
+            // Mix in escapes and multibyte chars to stress the printer.
+            *rng.pick(&['a', 'Z', '7', ' ', '"', '\\', '\n', 'µ', '→', '🝰'])
+        })
+        .collect()
+}
+
+#[test]
+fn frame_round_trips_on_random_json() {
+    forall(
+        "frame encode/decode identity",
+        200,
+        |rng| gen_json(rng, 3),
+        |msg| {
+            let bytes = encode_frame(msg);
+            let got = read_frame(&mut Cursor::new(&bytes))
+                .map_err(|e| format!("decode failed: {e}"))?;
+            if got == *msg {
+                Ok(())
+            } else {
+                Err(format!("round trip changed the value: {got} != {msg}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn truncated_frames_are_torn_or_closed_never_panics() {
+    forall(
+        "every strict prefix of a frame is rejected cleanly",
+        60,
+        |rng| gen_json(rng, 2),
+        |msg| {
+            let bytes = encode_frame(msg);
+            for cut in 0..bytes.len() {
+                match read_frame(&mut Cursor::new(&bytes[..cut])) {
+                    Err(WireError::Closed) if cut == 0 => {}
+                    Err(WireError::Torn { got, want }) => {
+                        if got >= want.max(4) {
+                            return Err(format!(
+                                "torn at cut {cut} reported got {got} >= want {want}"
+                            ));
+                        }
+                    }
+                    Err(WireError::Closed) => {
+                        return Err(format!("cut {cut} misreported as clean close"))
+                    }
+                    Ok(v) => {
+                        // A prefix can only decode if it IS the message
+                        // (cut==len is excluded, so never).
+                        return Err(format!("prefix of len {cut} decoded to {v}"));
+                    }
+                    Err(e) => return Err(format!("unexpected error at cut {cut}: {e}")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn oversized_and_garbage_frames_are_typed_errors() {
+    // Hostile length prefix: rejected before the body is touched.
+    let mut oversized = ((MAX_FRAME_BYTES + 1) as u32).to_be_bytes().to_vec();
+    oversized.extend_from_slice(&[0u8; 8]);
+    assert!(matches!(
+        read_frame(&mut Cursor::new(&oversized)),
+        Err(WireError::Oversized { .. })
+    ));
+
+    forall(
+        "garbage bodies are BadJson",
+        100,
+        |rng| {
+            let n = rng.usize_in(1, 40);
+            (0..n).map(|_| rng.next_u64() as u8).collect::<Vec<u8>>()
+        },
+        |body| {
+            // Valid framing around an arbitrary byte body.
+            let mut frame = (body.len() as u32).to_be_bytes().to_vec();
+            frame.extend_from_slice(body);
+            match read_frame(&mut Cursor::new(&frame)) {
+                Err(WireError::BadJson(_)) | Ok(_) => Ok(()), // random bytes CAN be JSON ("7")
+                Err(e) => Err(format!("expected BadJson or a parse, got {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn base64_round_trips_random_bytes() {
+    forall(
+        "b64 encode/decode identity",
+        300,
+        |rng| {
+            let n = rng.usize_in(0, 200);
+            (0..n).map(|_| rng.next_u64() as u8).collect::<Vec<u8>>()
+        },
+        |bytes| {
+            let enc = b64_encode(bytes);
+            if enc.len() % 4 != 0 {
+                return Err(format!("encoding length {} not padded", enc.len()));
+            }
+            let dec = b64_decode(&enc).map_err(|e| format!("decode failed: {e}"))?;
+            if dec == *bytes {
+                Ok(())
+            } else {
+                Err("decode != original".to_string())
+            }
+        },
+    );
+    // Rejections: bad length, foreign characters, misplaced padding.
+    assert!(b64_decode("abc").is_err());
+    assert!(b64_decode("ab~c").is_err());
+    assert!(b64_decode("a=bc").is_err());
+    assert!(b64_decode("====").is_err());
+    assert!(b64_decode("Zg==Zg==").is_err()); // padding mid-stream
+}
+
+#[test]
+fn grid_payload_round_trips_arbitrary_f32_bits() {
+    forall(
+        "grid payload is bit-exact",
+        80,
+        |rng| {
+            let (ny, nx) = (rng.usize_in(1, 9), rng.usize_in(1, 9));
+            // Arbitrary BIT PATTERNS, not just finite values: NaNs with
+            // payloads, infinities, denormals must all survive.
+            let data: Vec<f32> = (0..ny * nx)
+                .map(|_| f32::from_bits(rng.next_u64() as u32))
+                .collect();
+            Grid::from_vec(&[ny, nx], data)
+        },
+        |grid| {
+            let payload = GridPayload::from_grid(grid);
+            let back = payload.to_grid().map_err(|e| format!("to_grid failed: {e}"))?;
+            if back.dims() != grid.dims() {
+                return Err("dims changed".to_string());
+            }
+            for (i, (a, b)) in back.data().iter().zip(grid.data()).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "bit mismatch at {i}: {:08x} != {:08x}",
+                        a.to_bits(),
+                        b.to_bits()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+    // Payload/dims disagreement is a typed error.
+    let mut p = GridPayload::from_grid(&Grid::new2d(4, 4));
+    p.dims = vec![5, 5];
+    assert!(matches!(p.to_grid(), Err(WireError::BadMessage(_))));
+    p.dims = vec![];
+    assert!(matches!(p.to_grid(), Err(WireError::BadMessage(_))));
+}
+
+fn gen_plan_spec(rng: &mut Rng) -> PlanSpec {
+    let two_d = rng.bool();
+    let backend = match rng.usize_in(0, 2) {
+        0 => Backend::Scalar,
+        1 => Backend::Vec { par_vec: rng.pow2_in(1, 4) },
+        _ => Backend::Stream { par_vec: rng.pow2_in(1, 4) },
+    };
+    PlanSpec {
+        stencil: if two_d { "diffusion2d" } else { "diffusion3d" }.to_string(),
+        grid_dims: if two_d {
+            vec![rng.usize_in(48, 96), rng.usize_in(48, 96)]
+        } else {
+            vec![rng.usize_in(16, 32), rng.usize_in(16, 32), rng.usize_in(16, 32)]
+        },
+        iterations: rng.usize_in(1, 12),
+        backend: backend.to_string(),
+        tile: None,
+        coeffs: None,
+        step_sizes: None,
+        workers: rng.chance(0.3).then(|| rng.usize_in(1, 4)),
+    }
+}
+
+#[test]
+fn messages_round_trip_through_json() {
+    forall(
+        "request/response json identity",
+        150,
+        |rng| {
+            let spec = gen_plan_spec(rng);
+            let grid = GridPayload::from_grid(&Grid::new2d(3, 3));
+            let req: Request = match rng.usize_in(0, 7) {
+                0 => Request::Open { plan: spec, programs: vec![] },
+                1 => Request::Submit {
+                    session: rng.next_u64() >> 12,
+                    grid: grid.clone(),
+                    power: rng.bool().then(|| grid.clone()),
+                    iterations: rng.bool().then(|| rng.usize_in(1, 9)),
+                },
+                2 => Request::Poll { job: rng.next_u64() >> 12 },
+                3 => Request::Wait {
+                    job: rng.next_u64() >> 12,
+                    timeout_ms: rng.next_u64() >> 40,
+                },
+                4 => Request::Cancel { job: rng.next_u64() >> 12 },
+                5 => Request::Stats { session: rng.next_u64() >> 12 },
+                6 => Request::Close { session: rng.next_u64() >> 12 },
+                _ => Request::Ping,
+            };
+            let resp: Response = match rng.usize_in(0, 7) {
+                0 => Response::Opened { session: rng.next_u64() >> 12 },
+                1 => Response::Accepted { job: rng.next_u64() >> 12 },
+                2 => Response::Status {
+                    job: rng.next_u64() >> 12,
+                    state: match rng.usize_in(0, 4) {
+                        0 => JobState::Queued,
+                        1 => JobState::Active,
+                        2 => JobState::Done,
+                        3 => JobState::Failed {
+                            attempts: rng.usize_in(1, 5) as u32,
+                            error: "synthetic".to_string(),
+                        },
+                        _ => JobState::Cancelled,
+                    },
+                    attempts: rng.usize_in(0, 9) as u32,
+                },
+                3 => Response::Result {
+                    job: rng.next_u64() >> 12,
+                    grid: grid.clone(),
+                    attempts: rng.usize_in(1, 5) as u32,
+                    report: Json::obj(vec![("elapsed_ms", Json::Num(1.5))]),
+                },
+                4 => Response::Stats {
+                    session: rng.next_u64() >> 12,
+                    stats: Json::obj(vec![("frames_in", Json::from(3usize))]),
+                },
+                5 => Response::Closed { session: rng.next_u64() >> 12 },
+                6 => Response::Pong,
+                _ => Response::Error {
+                    kind: *rng.pick(&[
+                        ErrorKind::BadFrame,
+                        ErrorKind::QuotaJobs,
+                        ErrorKind::QuotaCells,
+                        ErrorKind::UnknownJob,
+                        ErrorKind::Shutdown,
+                    ]),
+                    message: gen_string(rng),
+                },
+            };
+            (req, resp)
+        },
+        |(req, resp)| {
+            let r2 = Request::from_json(&req.to_json())
+                .map_err(|e| format!("request decode failed: {e}"))?;
+            if r2 != *req {
+                return Err(format!("request changed: {r2:?} != {req:?}"));
+            }
+            let p2 = Response::from_json(&resp.to_json())
+                .map_err(|e| format!("response decode failed: {e}"))?;
+            if p2 != *resp {
+                return Err(format!("response changed: {p2:?} != {resp:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn plan_spec_builds_what_plan_builder_builds() {
+    forall(
+        "PlanSpec::build == PlanBuilder",
+        40,
+        gen_plan_spec,
+        |spec| {
+            let from_wire = spec.build().map_err(|e| format!("spec build failed: {e}"))?;
+            let mut b = fstencil::coordinator::PlanBuilder::new(
+                fstencil::stencil::StencilRegistry::lookup(&spec.stencil)
+                    .ok_or("stencil not registered")?,
+            )
+            .grid_dims(spec.grid_dims.clone())
+            .iterations(spec.iterations)
+            .backend(Backend::parse(&spec.backend).map_err(|e| e.to_string())?);
+            if let Some(w) = spec.workers {
+                b = b.workers(w);
+            }
+            let direct = b.build().map_err(|e| format!("direct build failed: {e:#}"))?;
+            if from_wire.grid_dims != direct.grid_dims
+                || from_wire.iterations != direct.iterations
+                || from_wire.tile != direct.tile
+                || from_wire.chunks != direct.chunks
+                || from_wire.step_sizes != direct.step_sizes
+                || from_wire.backend != direct.backend
+                || from_wire.coeffs != direct.coeffs
+                || from_wire.workers != direct.workers
+            {
+                return Err(format!("plans differ: {from_wire:?} vs {direct:?}"));
+            }
+            // And the spec itself survives its own JSON round trip.
+            let spec2 = PlanSpec::from_json(&spec.to_json())
+                .map_err(|e| format!("spec json round trip failed: {e}"))?;
+            if spec2 != *spec {
+                return Err(format!("spec changed: {spec2:?} != {spec:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bad_messages_are_typed_not_panics() {
+    for src in [
+        r#"{}"#,
+        r#"{"type":"launch"}"#,
+        r#"{"type":"submit"}"#,
+        r#"{"type":"submit","session":-3,"grid":{"dims":[2,2],"data":"AAAA"}}"#,
+        r#"{"type":"wait","job":1}"#,
+        r#"{"type":"open","plan":{"stencil":"diffusion2d"}}"#,
+        r#"[1,2,3]"#,
+        r#""ping""#,
+    ] {
+        let v = Json::parse(src).unwrap();
+        assert!(
+            matches!(Request::from_json(&v), Err(WireError::BadMessage(_))),
+            "{src} should be a BadMessage"
+        );
+    }
+    // Torn numbers in a grid payload: length not a multiple of 4 floats.
+    let v = Json::parse(r#"{"dims":[2,2],"data":"AAAAAA=="}"#).unwrap();
+    let p = GridPayload::from_json(&v).unwrap();
+    assert!(matches!(p.to_grid(), Err(WireError::BadMessage(_))));
+}
