@@ -615,6 +615,106 @@ fn main() {
         }
     }
 
+    // --- resume_vs_restart ablation: the crash-safety machinery must be
+    //     free when off and cheaper than a rerun when used. Two claims:
+    //     (a) a workload armed with a checkpoint sink at cadence 0 (off)
+    //     runs within 1.05x of an unarmed one; (b) resuming the tail of a
+    //     job from its last snapshot (greedy-schedule suffix property,
+    //     DESIGN §3.4) is bit-identical to the uninterrupted run and
+    //     saves >= 50% of the restart-from-zero wall time at the default
+    //     cadence (snapshots at 8 and 16 of 24 iterations → the resume
+    //     redoes only 8). -------------------------------------------
+    use fstencil::engine::CheckpointSink;
+    let rdim = if sm { 128usize } else { 512 };
+    let (rtotal, rdone) = (24usize, 16usize); // checkpoint_every = 8
+    let rplan = |iters: usize| {
+        PlanBuilder::new(kind)
+            .grid_dims(vec![rdim, rdim])
+            .iterations(iters)
+            .tile(vec![64, 64])
+            .backend(Backend::Vec { par_vec: 8 })
+            .workers(4)
+            .build()
+            .unwrap()
+    };
+    let mut rg = Grid::new2d(rdim, rdim);
+    rg.fill_random(4, 0.0, 1.0);
+    let r_updates = (rdim * rdim * rtotal) as f64;
+    let noop: CheckpointSink = std::sync::Arc::new(|_, _| {});
+    let mut rsession = engine.session(rplan(rtotal)).unwrap();
+    let r_base = b.bench_with_metric(
+        &format!("restart_full_{rdim}sq_x{rtotal}"),
+        "Mcell-updates/s",
+        r_updates / 1e6,
+        || {
+            std::hint::black_box(
+                rsession.submit(Workload::new(rg.clone())).wait().unwrap(),
+            );
+        },
+    );
+    let r_armed = b.bench_with_metric(
+        &format!("restart_full_{rdim}sq_x{rtotal}_ckpt_off"),
+        "Mcell-updates/s",
+        r_updates / 1e6,
+        || {
+            std::hint::black_box(
+                rsession
+                    .submit(Workload::new(rg.clone()).checkpoint(0, noop.clone()))
+                    .wait()
+                    .unwrap(),
+            );
+        },
+    );
+    let off_overhead = r_armed.summary.mean / r_base.summary.mean;
+    // The snapshot a checkpoint at iteration `rdone` carries, and the
+    // resumed tail run from it.
+    let snapshot = {
+        let mut s = engine.session(rplan(rdone)).unwrap();
+        s.submit(Workload::new(rg.clone())).wait().unwrap().grid
+    };
+    let mut tail_session = engine.session(rplan(rtotal - rdone)).unwrap();
+    let r_resume = b.bench_with_metric(
+        &format!("resume_tail_{rdim}sq_x{}of{rtotal}", rtotal - rdone),
+        "Mcell-updates/s",
+        (rdim * rdim * (rtotal - rdone)) as f64 / 1e6,
+        || {
+            std::hint::black_box(
+                tail_session.submit(Workload::new(snapshot.clone())).wait().unwrap(),
+            );
+        },
+    );
+    // Bit-identity of the suffix: 16 + 8 iterations == 24 straight.
+    let want = rsession.submit(Workload::new(rg.clone())).wait().unwrap().grid;
+    let got = tail_session.submit(Workload::new(snapshot.clone())).wait().unwrap().grid;
+    let bit_identical = want
+        .data()
+        .iter()
+        .zip(got.data())
+        .all(|(a, c)| a.to_bits() == c.to_bits());
+    let saved = 1.0 - r_resume.summary.mean / r_base.summary.mean;
+    rep.ablation(
+        "resume_vs_restart",
+        r_base.summary.mean,
+        r_resume.summary.mean,
+        "resuming the final 8 of 24 iterations vs restarting from zero; \
+         acceptance: >= 50% of the restart wall time saved, result bit-identical",
+    );
+    rep.payload(format!(
+        "resume_vs_restart ablation: disabled-checkpoint overhead {off_overhead:.2}x \
+         (acceptance: <= 1.05x at checkpoint_every=0), resume saves {:.0}% of a \
+         full restart (acceptance: >= 50%), suffix bit-identical: {} ({})",
+        saved * 100.0,
+        bit_identical,
+        if off_overhead <= 1.05 && saved >= 0.5 && bit_identical {
+            "PASS"
+        } else {
+            "FAIL: crash-safety machinery too expensive or not bit-exact"
+        }
+    ));
+    rep.push(r_base);
+    rep.push(r_armed);
+    rep.push(r_resume);
+
     // Smoke runs are correctness checks, not measurements — never let
     // them overwrite the persisted perf trajectory.
     if sm {

@@ -47,6 +47,11 @@ pub struct Plan {
     /// per available core). A plan parameter so the CLI can override it
     /// (`--workers`).
     pub workers: Option<usize>,
+    /// Opt-in numeric circuit breaker: when set, the engine scans every
+    /// tile result for NaN/Inf and fails the job with a typed
+    /// `NonFinite{tile, iter}` error instead of silently propagating
+    /// poison through the remaining fused time-steps.
+    pub guard_nonfinite: bool,
 }
 
 impl Plan {
@@ -132,6 +137,7 @@ pub struct PlanBuilder {
     step_sizes: Vec<usize>,
     backend: Backend,
     workers: Option<usize>,
+    guard_nonfinite: bool,
 }
 
 impl PlanBuilder {
@@ -148,6 +154,7 @@ impl PlanBuilder {
             // behaviour.
             backend: Backend::Scalar,
             workers: None,
+            guard_nonfinite: false,
         }
     }
 
@@ -162,6 +169,14 @@ impl PlanBuilder {
     /// worker per available core).
     pub fn workers(mut self, workers: usize) -> Self {
         self.workers = Some(workers);
+        self
+    }
+
+    /// Enable the numeric circuit breaker: fail jobs with a typed
+    /// `NonFinite` error as soon as any tile result contains NaN/Inf
+    /// (default off — poison propagates silently, matching hardware).
+    pub fn guard_nonfinite(mut self, on: bool) -> Self {
+        self.guard_nonfinite = on;
         self
     }
 
@@ -285,6 +300,7 @@ impl PlanBuilder {
             step_sizes: sizes,
             backend: self.backend,
             workers: self.workers,
+            guard_nonfinite: self.guard_nonfinite,
         })
     }
 }

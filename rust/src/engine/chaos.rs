@@ -1,0 +1,339 @@
+//! Seeded, deterministic fault injection for the fault-tolerance layer.
+//!
+//! A [`ChaosPlan`] is a reproducible schedule of typed fault events: each
+//! decision is a pure function of `(seed, fault kind, job, attempt, tile)`,
+//! hashed splitmix64-style and compared against the kind's configured rate.
+//! Re-running the same workload under the same plan injects *exactly* the
+//! same faults, so every recovery path — retry, journal replay, checkpoint
+//! resume, reconnect — is testable with bit-level assertions instead of
+//! sleeps and luck. This replaces the old `WireConfig::fault_fail_attempts`
+//! toy counter (PR 6), which could only fail the first N attempts of every
+//! job identically.
+//!
+//! The plan is threaded through three layers:
+//! - the **worker pool** ([`super::server`]): `exec` fails a tile, `slow`
+//!   delays it (exercises drain paths without changing results);
+//! - **[`super::wire::JobLedger`] IO**: `journal` drops an append, `short`
+//!   writes half a record with no newline (a torn tail for replay to skip);
+//! - the **wire frontend**: `ckpt` corrupts a checkpoint sidecar as it is
+//!   written, `drop` severs a connection after a response frame.
+//!
+//! CLI form: `serve --chaos '<seed>:<kind>=<rate>[@<max_attempt>],...'`,
+//! e.g. `--chaos '42:exec=0.05,slow=0.1,drop=0.01'`. The optional `@N`
+//! suffix stops injecting that kind once a job is past attempt `N`, which
+//! is how the retry-recovery tests express "fail attempts 1..=N, then let
+//! it land".
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One class of injectable fault. `code()` is the spelling used in the
+/// `--chaos` spec grammar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A tile execution fails with a retryable executor error.
+    ExecFail,
+    /// A tile is delayed a few milliseconds (reorders completions).
+    SlowTile,
+    /// A journal append is silently dropped (write failure).
+    JournalFail,
+    /// A journal append writes only half the record, no newline (torn tail).
+    JournalShortWrite,
+    /// A checkpoint sidecar is corrupted as it is written.
+    CheckpointCorrupt,
+    /// A wire connection is severed after answering a frame.
+    ConnDrop,
+}
+
+impl FaultKind {
+    /// Every kind, in spec-grammar order.
+    pub const ALL: [FaultKind; 6] = [
+        FaultKind::ExecFail,
+        FaultKind::SlowTile,
+        FaultKind::JournalFail,
+        FaultKind::JournalShortWrite,
+        FaultKind::CheckpointCorrupt,
+        FaultKind::ConnDrop,
+    ];
+
+    /// The spec-grammar spelling.
+    pub fn code(self) -> &'static str {
+        match self {
+            FaultKind::ExecFail => "exec",
+            FaultKind::SlowTile => "slow",
+            FaultKind::JournalFail => "journal",
+            FaultKind::JournalShortWrite => "short",
+            FaultKind::CheckpointCorrupt => "ckpt",
+            FaultKind::ConnDrop => "drop",
+        }
+    }
+
+    /// Inverse of [`FaultKind::code`].
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        FaultKind::ALL.iter().copied().find(|k| k.code() == s)
+    }
+
+    /// Per-kind salt so the same `(job, attempt, tile)` key draws an
+    /// independent decision for each fault class.
+    fn salt(self) -> u64 {
+        match self {
+            FaultKind::ExecFail => 0xE4EC_0001_9E37_79B9,
+            FaultKind::SlowTile => 0x510E_0002_9E37_79B9,
+            FaultKind::JournalFail => 0x10BA_0003_9E37_79B9,
+            FaultKind::JournalShortWrite => 0x5087_0004_9E37_79B9,
+            FaultKind::CheckpointCorrupt => 0xCC97_0005_9E37_79B9,
+            FaultKind::ConnDrop => 0xD809_0006_9E37_79B9,
+        }
+    }
+
+    fn index(self) -> usize {
+        FaultKind::ALL.iter().position(|k| *k == self).expect("kind in ALL")
+    }
+}
+
+/// One `<kind>=<rate>[@<max_attempt>]` clause.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Rule {
+    kind: FaultKind,
+    /// Injection probability in `[0, 1]`; `1` injects unconditionally.
+    rate: f64,
+    /// Only inject while `attempt <= max_attempt`; `0` = no cap.
+    max_attempt: u32,
+}
+
+/// A seeded, deterministic fault-injection schedule.
+///
+/// `should()` is the single decision point: pure in its arguments (plus
+/// the seed), so a schedule replays identically across process restarts —
+/// the crash-resume soak in `wire_faults.rs` depends on that.
+#[derive(Debug)]
+pub struct ChaosPlan {
+    seed: u64,
+    rules: Vec<Rule>,
+    /// Injection counters per kind (observability: health check, logs).
+    injected: [AtomicU64; 6],
+}
+
+/// splitmix64 finalizer: a cheap, well-mixed avalanche.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+impl ChaosPlan {
+    /// An empty (never-injecting) plan with the given seed.
+    pub fn new(seed: u64) -> ChaosPlan {
+        ChaosPlan { seed, rules: Vec::new(), injected: [(); 6].map(|()| AtomicU64::new(0)) }
+    }
+
+    /// Add or replace the rule for `kind`. `max_attempt == 0` means no
+    /// attempt cap. Builder-style, mostly for tests; the CLI goes through
+    /// [`ChaosPlan::parse`].
+    pub fn rule(mut self, kind: FaultKind, rate: f64, max_attempt: u32) -> ChaosPlan {
+        self.rules.retain(|r| r.kind != kind);
+        self.rules.push(Rule { kind, rate: rate.clamp(0.0, 1.0), max_attempt });
+        self
+    }
+
+    /// Parse `"<seed>:<kind>=<rate>[@<max_attempt>],..."`, e.g.
+    /// `"42:exec=0.05,slow=0.1"` or `"7:exec=1@2"` (fail every tile of
+    /// attempts 1 and 2, then stop).
+    pub fn parse(spec: &str) -> Result<ChaosPlan, String> {
+        let (seed_s, rest) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("chaos spec {spec:?}: expected '<seed>:<kind>=<rate>,...'"))?;
+        let seed: u64 = seed_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("chaos spec {spec:?}: bad seed {seed_s:?}"))?;
+        let mut plan = ChaosPlan::new(seed);
+        for clause in rest.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (kind_s, rate_s) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("chaos clause {clause:?}: expected '<kind>=<rate>'"))?;
+            let kind = FaultKind::parse(kind_s.trim()).ok_or_else(|| {
+                format!(
+                    "chaos clause {clause:?}: unknown kind {:?} (expected one of {})",
+                    kind_s.trim(),
+                    FaultKind::ALL.map(FaultKind::code).join("/")
+                )
+            })?;
+            let (rate_s, max_attempt) = match rate_s.split_once('@') {
+                Some((r, a)) => (
+                    r,
+                    a.trim()
+                        .parse::<u32>()
+                        .map_err(|_| format!("chaos clause {clause:?}: bad attempt cap {a:?}"))?,
+                ),
+                None => (rate_s, 0),
+            };
+            let rate: f64 = rate_s
+                .trim()
+                .parse()
+                .map_err(|_| format!("chaos clause {clause:?}: bad rate {rate_s:?}"))?;
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(format!("chaos clause {clause:?}: rate must be in [0, 1]"));
+            }
+            plan = plan.rule(kind, rate, max_attempt);
+        }
+        Ok(plan)
+    }
+
+    /// True if any rule can inject (drives the health check's chaos flag).
+    pub fn active(&self) -> bool {
+        self.rules.iter().any(|r| r.rate > 0.0)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The deterministic decision: should `kind` fire for this
+    /// `(job, attempt, tile)` key? Pure in its arguments — the same key
+    /// under the same plan always answers the same — except for the
+    /// injection counter bump on a hit.
+    pub fn should(&self, kind: FaultKind, job: u64, attempt: u32, tile: u64) -> bool {
+        let Some(rule) = self.rules.iter().find(|r| r.kind == kind) else {
+            return false;
+        };
+        if rule.rate <= 0.0 || (rule.max_attempt > 0 && attempt > rule.max_attempt) {
+            return false;
+        }
+        let hit = if rule.rate >= 1.0 {
+            true
+        } else {
+            let h = mix(
+                mix(self.seed ^ kind.salt())
+                    ^ mix(job.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                    ^ mix(((attempt as u64) << 40) ^ tile),
+            );
+            let unit = (h >> 11) as f64 / (1u64 << 53) as f64;
+            unit < rule.rate
+        };
+        if hit {
+            self.injected[kind.index()].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// How many times `kind` has fired so far.
+    pub fn injected(&self, kind: FaultKind) -> u64 {
+        self.injected[kind.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total injections across all kinds.
+    pub fn total_injected(&self) -> u64 {
+        FaultKind::ALL.iter().map(|k| self.injected(*k)).sum()
+    }
+}
+
+impl fmt::Display for ChaosPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:", self.seed)?;
+        for (i, r) in self.rules.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{}={}", r.kind.code(), r.rate)?;
+            if r.max_attempt > 0 {
+                write!(f, "@{}", r.max_attempt)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-job chaos context carried into the worker pool: the plan plus the
+/// `(job, attempt)` half of the decision key (the tile half is supplied by
+/// the worker at dispatch). Attached via
+/// [`super::server::Workload::chaos`].
+#[derive(Debug, Clone)]
+pub struct ChaosCtx {
+    pub plan: Arc<ChaosPlan>,
+    /// Stable job key — the wire layer uses the ledger job id.
+    pub job: u64,
+    /// 1-based attempt number.
+    pub attempt: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        let plan = ChaosPlan::parse("42:exec=0.05,slow=0.1,drop=1@3").unwrap();
+        assert_eq!(plan.seed(), 42);
+        assert!(plan.active());
+        let reparsed = ChaosPlan::parse(&plan.to_string()).unwrap();
+        assert_eq!(plan.to_string(), reparsed.to_string());
+        assert_eq!(plan.to_string(), "42:exec=0.05,slow=0.1,drop=1@3");
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        for bad in ["", "noseed", "x:exec=1", "1:bogus=1", "1:exec=2", "1:exec=0.5@x"] {
+            let err = ChaosPlan::parse(bad).unwrap_err();
+            assert!(err.contains("chaos"), "{bad:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_shaped() {
+        let a = ChaosPlan::new(7).rule(FaultKind::ExecFail, 0.5, 0);
+        let b = ChaosPlan::new(7).rule(FaultKind::ExecFail, 0.5, 0);
+        let mut hits = 0;
+        for job in 0..10u64 {
+            for tile in 0..100u64 {
+                let x = a.should(FaultKind::ExecFail, job, 1, tile);
+                assert_eq!(x, b.should(FaultKind::ExecFail, job, 1, tile));
+                hits += x as usize;
+            }
+        }
+        // 1000 Bernoulli(0.5) draws: far outside [350, 650] means the hash
+        // is broken, not unlucky.
+        assert!((350..=650).contains(&hits), "rate 0.5 produced {hits}/1000 hits");
+        // A different seed must disagree somewhere.
+        let c = ChaosPlan::new(8).rule(FaultKind::ExecFail, 0.5, 0);
+        let diverges = (0..100u64).any(|t| {
+            a.should(FaultKind::ExecFail, 0, 1, t) != c.should(FaultKind::ExecFail, 0, 1, t)
+        });
+        assert!(diverges, "seeds 7 and 8 produced identical schedules");
+    }
+
+    #[test]
+    fn rate_edges_and_attempt_caps() {
+        let always = ChaosPlan::new(1).rule(FaultKind::ExecFail, 1.0, 2);
+        for tile in 0..32 {
+            assert!(always.should(FaultKind::ExecFail, 9, 1, tile));
+            assert!(always.should(FaultKind::ExecFail, 9, 2, tile));
+            assert!(!always.should(FaultKind::ExecFail, 9, 3, tile), "capped at attempt 2");
+        }
+        let never = ChaosPlan::new(1).rule(FaultKind::SlowTile, 0.0, 0);
+        assert!((0..32).all(|t| !never.should(FaultKind::SlowTile, 9, 1, t)));
+        assert!(!never.active());
+        // Unconfigured kinds never fire.
+        assert!(!always.should(FaultKind::ConnDrop, 9, 1, 0));
+        assert_eq!(always.injected(FaultKind::ExecFail), 64);
+        assert_eq!(always.total_injected(), 64);
+    }
+
+    #[test]
+    fn kinds_draw_independent_decisions() {
+        let plan =
+            ChaosPlan::new(3).rule(FaultKind::ExecFail, 0.5, 0).rule(FaultKind::SlowTile, 0.5, 0);
+        let diverges = (0..200u64).any(|t| {
+            plan.should(FaultKind::ExecFail, 1, 1, t) != plan.should(FaultKind::SlowTile, 1, 1, t)
+        });
+        assert!(diverges, "exec and slow schedules are identical — salts broken");
+    }
+}

@@ -39,6 +39,15 @@ pub enum EngineError {
     /// The session's worker pool disappeared mid-submission (a worker
     /// thread exited or a channel closed unexpectedly).
     WorkerLost,
+    /// The job's deadline passed before it finished: queued jobs fail
+    /// fast at the next scheduler pass, active jobs stop dispatching and
+    /// drain their in-flight tiles first.
+    DeadlineExceeded,
+    /// The numeric circuit breaker ([`crate::coordinator::Plan`]'s
+    /// opt-in `guard_nonfinite`) found a NaN/Inf in a tile result.
+    /// `tile` is the block index within the chunk, `iter` the absolute
+    /// iteration count the poisoned tile would have completed.
+    NonFinite { tile: usize, iter: usize },
 }
 
 impl fmt::Display for EngineError {
@@ -65,6 +74,12 @@ impl fmt::Display for EngineError {
             EngineError::Cancelled => f.write_str("job cancelled"),
             EngineError::Shutdown => f.write_str("engine server is shut down"),
             EngineError::WorkerLost => f.write_str("session worker pool exited early"),
+            EngineError::DeadlineExceeded => f.write_str("job deadline exceeded"),
+            EngineError::NonFinite { tile, iter } => write!(
+                f,
+                "non-finite value (NaN/Inf) in tile {tile} at iteration {iter} \
+                 (numeric circuit breaker)"
+            ),
         }
     }
 }
@@ -90,6 +105,9 @@ mod tests {
         assert!(EngineError::GridShape { expected: vec![64, 64], got: vec![32, 32] }
             .to_string()
             .contains("[32, 32]"));
+        assert!(EngineError::DeadlineExceeded.to_string().contains("deadline"));
+        let nf = EngineError::NonFinite { tile: 3, iter: 8 }.to_string();
+        assert!(nf.contains("tile 3") && nf.contains("iteration 8"));
     }
 
     #[test]

@@ -27,6 +27,9 @@
 //!   network tenants onto an [`EngineServer`] (length-prefixed JSON
 //!   frames, durable job ledger, retry and quotas); [`wire::WireClient`]
 //!   is the typed blocking client.
+//! * [`chaos`] — seeded deterministic fault injection ([`ChaosPlan`])
+//!   threaded through the worker pool, the ledger's journal IO and the
+//!   frontend, so every recovery path replays identically under test.
 //!
 //! ```no_run
 //! use fstencil::prelude::*;
@@ -79,6 +82,7 @@
 //! ```
 
 mod backend;
+pub mod chaos;
 mod error;
 mod scheduler;
 mod server;
@@ -86,10 +90,11 @@ mod session;
 pub mod wire;
 
 pub use backend::Backend;
+pub use chaos::{ChaosCtx, ChaosPlan, FaultKind};
 pub use error::EngineError;
 pub use scheduler::DeficitRoundRobin;
 pub use server::{
-    ClientSession, ClientStats, EngineServer, JobHandle, JobOutput, Workload,
+    CheckpointSink, ClientSession, ClientStats, EngineServer, JobHandle, JobOutput, Workload,
     DEFAULT_QUEUE_DEPTH, QUEUE_WAIT_BUCKETS,
 };
 pub use session::Session;

@@ -45,6 +45,7 @@ use crate::coordinator::{ExecReport, Plan, StageTimes};
 use crate::runtime::{extract_tile, writeback_tile, Executor, TileSpec};
 use crate::stencil::Grid;
 
+use super::chaos::{ChaosCtx, FaultKind};
 use super::scheduler::DeficitRoundRobin;
 use super::{Backend, EngineError};
 
@@ -52,20 +53,53 @@ use super::{Backend, EngineError};
 /// (backpressure) once this many jobs are waiting.
 pub const DEFAULT_QUEUE_DEPTH: usize = 4;
 
+/// A checkpoint observer: called from the scheduler thread at chunk
+/// barriers with `(iterations_done, read-buffer grid)` — the exact state
+/// an uninterrupted run would have after that many iterations. The sink
+/// must be self-contained (no engine or frontend locks): it runs while
+/// the scheduler holds the client's state. The wire layer's sink writes a
+/// checksummed sidecar file next to the journal (see
+/// `engine::wire::checkpoint`).
+pub type CheckpointSink = Arc<dyn Fn(usize, &Grid) + Send + Sync>;
+
 /// One unit of work for a session or server client: a grid, its optional
-/// power input, and an optional iteration-count override (the plan's
-/// count when `None`). `Grid` converts into a `Workload` directly, so
-/// `client.submit(grid)` works for the common case.
-#[derive(Debug)]
+/// power input, and per-job options — iteration-count override, deadline,
+/// checkpoint sink, chaos context. `Grid` converts into a `Workload`
+/// directly, so `client.submit(grid)` works for the common case.
 pub struct Workload {
     grid: Grid,
     power: Option<Grid>,
     iterations: Option<usize>,
+    deadline: Option<Duration>,
+    checkpoint_every: usize,
+    checkpoint: Option<CheckpointSink>,
+    chaos: Option<ChaosCtx>,
+}
+
+impl std::fmt::Debug for Workload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Workload")
+            .field("grid_dims", &self.grid.dims())
+            .field("power", &self.power.is_some())
+            .field("iterations", &self.iterations)
+            .field("deadline", &self.deadline)
+            .field("checkpoint_every", &self.checkpoint_every)
+            .field("chaos", &self.chaos.is_some())
+            .finish()
+    }
 }
 
 impl Workload {
     pub fn new(grid: Grid) -> Workload {
-        Workload { grid, power: None, iterations: None }
+        Workload {
+            grid,
+            power: None,
+            iterations: None,
+            deadline: None,
+            checkpoint_every: 0,
+            checkpoint: None,
+            chaos: None,
+        }
     }
 
     /// Attach a power grid (required for hotspot stencils).
@@ -79,6 +113,35 @@ impl Workload {
     /// tile geometry per distinct chunk depth.
     pub fn iterations(mut self, iterations: usize) -> Workload {
         self.iterations = Some(iterations);
+        self
+    }
+
+    /// Fail the job with [`EngineError::DeadlineExceeded`] if it has not
+    /// completed within `deadline` of submission: expired queued jobs
+    /// fail fast at the next scheduler pass, an expired active job stops
+    /// dispatching and drains its in-flight tiles first.
+    pub fn deadline(mut self, deadline: Duration) -> Workload {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Snapshot progress every `every` completed iterations: at each
+    /// chunk barrier where at least `every` iterations have accumulated
+    /// since the last snapshot, `sink` is called with the iteration count
+    /// and the current read buffer. `every == 0` disables snapshots (the
+    /// sink is kept but never called — the disabled path the
+    /// `resume_vs_restart` ablation measures).
+    pub fn checkpoint(mut self, every: usize, sink: CheckpointSink) -> Workload {
+        self.checkpoint_every = every;
+        self.checkpoint = Some(sink);
+        self
+    }
+
+    /// Attach a deterministic fault-injection context (see
+    /// [`super::chaos::ChaosPlan`]); workers consult it per dispatched
+    /// tile.
+    pub fn chaos(mut self, ctx: ChaosCtx) -> Workload {
+        self.chaos = Some(ctx);
         self
     }
 }
@@ -122,6 +185,9 @@ pub struct ClientStats {
     pub sched_served: u64,
     /// DRR credit-replenishment rounds this client waited through.
     pub sched_rounds: u64,
+    /// Times the numeric circuit breaker (`Plan::guard_nonfinite`)
+    /// tripped on a NaN/Inf tile result for this client.
+    pub nonfinite_trips: u64,
 }
 
 // ------------------------------------------------------------------ job
@@ -134,7 +200,15 @@ struct JobInner {
     iterations: usize,
     /// Spec-cache index per chunk (chunk `ci` reads `bufs[ci % 2]`).
     schedule: Vec<usize>,
+    /// Fused time-steps per chunk (parallel to `schedule`) — the
+    /// scheduler's iteration odometer for checkpoints and reports.
+    chunk_steps: Vec<usize>,
     submitted_at: Instant,
+    /// Absolute wall-clock deadline, if the workload set one.
+    deadline: Option<Instant>,
+    checkpoint_every: usize,
+    checkpoint: Option<CheckpointSink>,
+    chaos: Option<ChaosCtx>,
     cancelled: AtomicBool,
     /// Input grid; becomes the output container at completion.
     grid: Mutex<Option<Grid>>,
@@ -261,7 +335,12 @@ impl JobHandle {
             client: usize::MAX,
             iterations: 0,
             schedule: Vec::new(),
+            chunk_steps: Vec::new(),
             submitted_at: Instant::now(),
+            deadline: None,
+            checkpoint_every: 0,
+            checkpoint: None,
+            chaos: None,
             cancelled: AtomicBool::new(false),
             grid: Mutex::new(None),
             power: Mutex::new(None),
@@ -345,6 +424,11 @@ struct ActiveJob {
     redundant: u64,
     write_ns: u64,
     failed: Option<EngineError>,
+    /// Iterations completed at the last chunk barrier (the checkpoint
+    /// odometer).
+    iters_done: usize,
+    /// Iteration count of the last snapshot taken.
+    last_ckpt: usize,
 }
 
 #[derive(Debug, Clone, Copy, Default)]
@@ -357,6 +441,7 @@ struct ClientCounters {
     cell_updates: u64,
     max_queue_wait: Duration,
     queue_wait_hist: [u64; QUEUE_WAIT_BUCKETS],
+    nonfinite_trips: u64,
 }
 
 struct ClientState {
@@ -376,6 +461,8 @@ enum TileFailure {
     Cancelled,
     /// The executor failed on this tile.
     Exec(String),
+    /// The numeric circuit breaker found NaN/Inf in the tile result.
+    NonFinite { tile: usize, iter: usize },
 }
 
 /// Scheduler event-loop messages. Everything that mutates cross-client
@@ -408,6 +495,11 @@ struct TileTask {
     /// Read-buffer role for this chunk.
     src: usize,
     block_i: usize,
+    /// Iterations complete before this tile's chunk (for `NonFinite`
+    /// reporting).
+    base_iter: usize,
+    /// Stable `(chunk, block)` key for chaos decisions.
+    tile_key: u64,
 }
 
 struct TaskQueue {
@@ -511,6 +603,11 @@ impl EngineServer {
         let workers =
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
         EngineServer::start(workers)
+    }
+
+    /// Size of the shared worker pool (health/ops introspection).
+    pub fn workers(&self) -> usize {
+        self.inner.workers
     }
 
     /// Open a client session for `plan` with the default queue depth.
@@ -670,6 +767,7 @@ impl ClientSession {
             queue_wait_hist: c.stats.queue_wait_hist,
             sched_served: st.drr.served(self.id),
             sched_rounds: st.drr.rounds(self.id),
+            nonfinite_trips: c.stats.nonfinite_trips,
         }
     }
 
@@ -679,7 +777,8 @@ impl ClientSession {
     /// queue is full (backpressure); fails fast with
     /// [`EngineError::Shutdown`] once the server is stopping.
     pub fn submit<W: Into<Workload>>(&self, workload: W) -> Result<JobHandle, EngineError> {
-        let Workload { grid, power, iterations } = workload.into();
+        let Workload { grid, power, iterations, deadline, checkpoint_every, checkpoint, chaos } =
+            workload.into();
         let plan = &self.shared.plan;
         let def = plan.stencil.def();
         if grid.dims() != plan.grid_dims {
@@ -716,7 +815,12 @@ impl ClientSession {
             client: self.id,
             iterations,
             schedule,
+            chunk_steps: chunks,
             submitted_at: Instant::now(),
+            deadline: deadline.map(|d| Instant::now() + d),
+            checkpoint_every,
+            checkpoint,
+            chaos,
             cancelled: AtomicBool::new(false),
             grid: Mutex::new(Some(grid)),
             power: Mutex::new(power),
@@ -779,22 +883,66 @@ impl Drop for ClientSession {
 // -------------------------------------------------------------- scheduler
 
 fn scheduler_loop(inner: &Arc<ServerInner>, rx: Receiver<Event>) {
+    use std::sync::mpsc::RecvTimeoutError;
+    // With no deadlines pending the loop blocks indefinitely on the event
+    // channel (the steady state); with one pending it sleeps only until
+    // the earliest deadline so expiry is noticed without an event.
+    let mut wake_at: Option<Instant> = None;
     loop {
-        let Ok(ev) = rx.recv() else { break };
+        let ev = match wake_at {
+            None => match rx.recv() {
+                Ok(ev) => Some(ev),
+                Err(_) => break,
+            },
+            Some(at) => {
+                let wait = at
+                    .saturating_duration_since(Instant::now())
+                    .max(Duration::from_millis(1));
+                match rx.recv_timeout(wait) {
+                    Ok(ev) => Some(ev),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        };
         let mut st = inner.state.lock().expect("server state poisoned");
-        handle_event(&mut st, inner, ev);
+        if let Some(ev) = ev {
+            handle_event(&mut st, inner, ev);
+        }
         while let Ok(ev) = rx.try_recv() {
             handle_event(&mut st, inner, ev);
         }
         if pump(&mut st, inner) {
             break;
         }
+        wake_at = earliest_deadline(&st);
     }
     // Backstop for the senders-dropped exit path: make sure workers die.
     let mut q = inner.tasks.lock().expect("task queue poisoned");
     q.closed = true;
     drop(q);
     inner.task_cv.notify_all();
+}
+
+/// Earliest live deadline across all queued and active jobs, so the
+/// scheduler can sleep exactly until the next one can expire.
+fn earliest_deadline(st: &SchedState) -> Option<Instant> {
+    let mut min: Option<Instant> = None;
+    for c in st.clients.iter().flatten() {
+        let queued = c.queue.iter().filter_map(|j| j.deadline);
+        let active = c
+            .active
+            .as_ref()
+            .filter(|a| a.failed.is_none())
+            .and_then(|a| a.job.deadline);
+        for d in queued.chain(active) {
+            min = Some(match min {
+                Some(m) => m.min(d),
+                None => d,
+            });
+        }
+    }
+    min
 }
 
 fn handle_event(st: &mut SchedState, inner: &ServerInner, ev: Event) {
@@ -852,6 +1000,13 @@ fn handle_event(st: &mut SchedState, inner: &ServerInner, ev: Event) {
                         a.next_block = a.chunk_blocks;
                     }
                 }
+                Err(TileFailure::NonFinite { tile, iter }) => {
+                    c.stats.nonfinite_trips += 1;
+                    if a.failed.is_none() {
+                        a.failed = Some(EngineError::NonFinite { tile, iter });
+                        a.next_block = a.chunk_blocks;
+                    }
+                }
             }
             advance_chunk(st, inner, client);
         }
@@ -866,6 +1021,15 @@ fn advance_chunk(st: &mut SchedState, inner: &ServerInner, client: usize) {
     let Some(Some(c)) = st.clients.get_mut(client) else { return };
     let shared = Arc::clone(&c.shared);
     let Some(a) = c.active.as_mut() else { return };
+    // Deadline check for the active job: stop dispatching, drain what is
+    // already in flight, fail with the typed error below.
+    if a.failed.is_none()
+        && !a.job.cancelled.load(Ordering::SeqCst)
+        && a.job.deadline.is_some_and(|d| Instant::now() >= d)
+    {
+        a.failed = Some(EngineError::DeadlineExceeded);
+        a.next_block = a.chunk_blocks;
+    }
     if a.failed.is_some() || a.job.cancelled.load(Ordering::SeqCst) {
         if a.inflight == 0 {
             let a = c.active.take().expect("checked above");
@@ -888,7 +1052,22 @@ fn advance_chunk(st: &mut SchedState, inner: &ServerInner, client: usize) {
         return;
     }
     a.chunk += 1;
+    a.iters_done += a.job.chunk_steps[a.chunk - 1];
     if a.chunk < a.job.schedule.len() {
+        // Chunk barrier: the freshly written buffer (`bufs[a.chunk % 2]`,
+        // the next chunk's read role) IS the grid state after
+        // `iters_done` iterations — snapshot it if one is due. Final
+        // results never checkpoint; completion supersedes.
+        let due = a.job.checkpoint_every > 0
+            && a.iters_done - a.last_ckpt >= a.job.checkpoint_every;
+        if due {
+            if let Some(sink) = &a.job.checkpoint {
+                let g = shared.bufs[a.chunk % 2].read().expect("grid pair poisoned");
+                sink(a.iters_done, &g);
+                drop(g);
+                a.last_ckpt = a.iters_done;
+            }
+        }
         // next pass over the grid: roles swap, counters reset
         let specs = shared.specs.read().expect("spec cache poisoned");
         let (spec, blocks) = &specs[a.job.schedule[a.chunk]];
@@ -963,6 +1142,23 @@ fn settle_client(st: &mut SchedState, inner: &ServerInner, id: usize) {
     // never receive a TileDone; reap them here.
     advance_chunk(st, inner, id);
     let Some(Some(c)) = st.clients.get_mut(id) else { return };
+    // Expired queued jobs fail fast — no activation, no staging. A job
+    // that is both cancelled and expired resolves as Cancelled (the
+    // tenant's explicit request wins) via the activation loop below.
+    let now = Instant::now();
+    let mut qi = 0;
+    while qi < c.queue.len() {
+        let expired = c.queue[qi].deadline.is_some_and(|d| now >= d)
+            && !c.queue[qi].cancelled.load(Ordering::SeqCst);
+        if expired {
+            let job = c.queue.remove(qi).expect("index in range");
+            c.stats.jobs_failed += 1;
+            job.complete(Err(EngineError::DeadlineExceeded));
+            inner.space_cv.notify_all();
+        } else {
+            qi += 1;
+        }
+    }
     while c.active.is_none() {
         let Some(job) = c.queue.pop_front() else { break };
         inner.space_cv.notify_all();
@@ -1003,6 +1199,8 @@ fn settle_client(st: &mut SchedState, inner: &ServerInner, id: usize) {
             redundant: 0,
             write_ns: 0,
             failed: None,
+            iters_done: 0,
+            last_ckpt: 0,
         });
     }
     let runnable = c.active.as_ref().is_some_and(|a| {
@@ -1055,6 +1253,8 @@ fn dispatch(st: &mut SchedState, inner: &ServerInner) {
             spec_i: a.job.schedule[a.chunk],
             src: a.chunk % 2,
             block_i: a.next_block,
+            base_iter: a.iters_done,
+            tile_key: ((a.chunk as u64) << 32) | a.next_block as u64,
         };
         a.next_block += 1;
         a.inflight += 1;
@@ -1167,6 +1367,25 @@ fn run_task(
             compute_ns: 0,
         };
     }
+    // Deterministic chaos: the same (job, attempt, tile) key always draws
+    // the same fault, so injected failures replay bit-identically.
+    if let Some(ch) = &task.job.chaos {
+        if ch.plan.should(FaultKind::SlowTile, ch.job, ch.attempt, task.tile_key) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        if ch.plan.should(FaultKind::ExecFail, ch.job, ch.attempt, task.tile_key) {
+            return Event::TileDone {
+                client,
+                job_id,
+                block_i,
+                out: Err(TileFailure::Exec(
+                    "chaos: injected tile execution failure".into(),
+                )),
+                extract_ns: 0,
+                compute_ns: 0,
+            };
+        }
+    }
     let shared = &task.shared;
     let specs = shared.specs.read().expect("spec cache poisoned");
     let (spec, blocks) = &specs[task.spec_i];
@@ -1185,6 +1404,16 @@ fn run_task(
     let compute_ns = t1.elapsed().as_nanos() as u64;
     let extract_ns = (t1 - t0).as_nanos() as u64;
     let out = match res {
+        // The numeric circuit breaker: an opt-in scan over the tile
+        // result, so silent NaN/Inf poison becomes a typed, retryable
+        // failure at the tile where it first appeared.
+        Ok(()) if shared.plan.guard_nonfinite && out.iter().any(|v| !v.is_finite()) => {
+            inner.release_buf(out);
+            Err(TileFailure::NonFinite {
+                tile: block_i,
+                iter: task.base_iter + spec.steps,
+            })
+        }
         Ok(()) => Ok(out),
         Err(e) => {
             // Recirculate the buffer of a failed tile so errors never
@@ -1362,5 +1591,151 @@ mod tests {
             Err(EngineError::Cancelled) => {}
             other => panic!("cancelled-then-shutdown job resolved to {other:?}"),
         }
+    }
+
+    #[test]
+    fn expired_queued_job_fails_fast_with_typed_error() {
+        let mut server = EngineServer::start(1);
+        let client = server.open_with_queue(plan(&[128, 128], 16), 8).unwrap();
+        let mut heavy = Grid::new2d(128, 128);
+        heavy.fill_random(1, 0.0, 1.0);
+        let shield = client.submit(heavy).unwrap();
+        let mut g = Grid::new2d(128, 128);
+        g.fill_random(2, 0.0, 1.0);
+        // Already-expired deadline: the scheduler's queue sweep must fail
+        // it before activation, whatever the shield job's timing.
+        let victim = client.submit(Workload::new(g).deadline(Duration::ZERO)).unwrap();
+        assert!(victim.wait_timeout(Duration::from_secs(30)), "expired job hung");
+        assert_eq!(victim.wait().unwrap_err(), EngineError::DeadlineExceeded);
+        assert!(shield.wait().is_ok());
+        assert_eq!(client.stats().jobs_failed, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_active_job_cancel_drains_with_typed_error() {
+        use crate::engine::ChaosPlan;
+        let mut server = EngineServer::start(1);
+        let client = server.open(plan(&[160, 160], 16)).unwrap();
+        let mut g = Grid::new2d(160, 160);
+        g.fill_random(3, 0.0, 1.0);
+        // slow=1 delays every tile ~2ms: 25 tiles/chunk on one worker
+        // guarantees the job is still mid-chunk when the deadline hits.
+        let chaos = ChaosCtx {
+            plan: Arc::new(ChaosPlan::new(1).rule(FaultKind::SlowTile, 1.0, 0)),
+            job: 1,
+            attempt: 1,
+        };
+        let h = client
+            .submit(
+                Workload::new(g)
+                    .deadline(Duration::from_millis(40))
+                    .chaos(chaos),
+            )
+            .unwrap();
+        assert!(h.wait_timeout(Duration::from_secs(30)), "expired active job hung");
+        assert_eq!(h.wait().unwrap_err(), EngineError::DeadlineExceeded);
+        server.shutdown();
+    }
+
+    #[test]
+    fn nonfinite_guard_trips_typed_error_and_counts() {
+        let guarded = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .iterations(8)
+            .tile(vec![32, 32])
+            .guard_nonfinite(true)
+            .build()
+            .unwrap();
+        let mut server = EngineServer::start(2);
+        let client = server.open(guarded).unwrap();
+        let mut g = Grid::new2d(64, 64);
+        g.fill_random(4, 0.0, 1.0);
+        g.data_mut()[64 * 32 + 32] = f32::NAN;
+        match client.submit(g.clone()).unwrap().wait() {
+            // First chunk fuses 4 steps, so the breaker reports iteration 4.
+            Err(EngineError::NonFinite { iter, .. }) => assert_eq!(iter, 4),
+            other => panic!("guarded NaN run resolved to {other:?}"),
+        }
+        assert!(client.stats().nonfinite_trips >= 1);
+        assert_eq!(client.stats().jobs_failed, 1);
+        server.shutdown();
+
+        // Guard off (default): the same poison propagates silently.
+        let mut server = EngineServer::start(2);
+        let client = server.open(plan(&[64, 64], 8)).unwrap();
+        let out = client.submit(g).unwrap().wait().unwrap();
+        assert!(out.grid.data().iter().any(|v| v.is_nan()), "poison vanished");
+        assert_eq!(client.stats().nonfinite_trips, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn chaos_exec_faults_fail_jobs_deterministically() {
+        use crate::engine::ChaosPlan;
+        let cplan = Arc::new(ChaosPlan::new(9).rule(FaultKind::ExecFail, 1.0, 0));
+        let mut server = EngineServer::start(2);
+        let client = server.open(plan(&[64, 64], 4)).unwrap();
+        let mut g = Grid::new2d(64, 64);
+        g.fill_random(5, 0.0, 1.0);
+        let ctx = ChaosCtx { plan: Arc::clone(&cplan), job: 7, attempt: 1 };
+        let err = client.submit(Workload::new(g).chaos(ctx)).unwrap().wait().unwrap_err();
+        match err {
+            EngineError::Execution(msg) => assert!(msg.contains("chaos")),
+            other => panic!("chaos exec fault resolved to {other:?}"),
+        }
+        assert!(cplan.injected(FaultKind::ExecFail) >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn checkpoints_fire_at_chunk_barriers_and_resume_is_bit_identical() {
+        // 12 iterations over step sizes [4,2,1] → chunks [4,4,4]; with
+        // checkpoint_every=4 the sink must fire at 4 and 8 (never at 12 —
+        // completion supersedes the final barrier).
+        let mut server = EngineServer::start(2);
+        let client = server.open(plan(&[64, 64], 12)).unwrap();
+        let mut g = Grid::new2d(64, 64);
+        g.fill_random(6, 0.0, 1.0);
+        let snaps: Arc<Mutex<Vec<(usize, Grid)>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink: CheckpointSink = {
+            let snaps = Arc::clone(&snaps);
+            Arc::new(move |iters, grid| {
+                snaps.lock().expect("snaps").push((iters, grid.clone()));
+            })
+        };
+        let full = client
+            .submit(Workload::new(g.clone()).checkpoint(4, Arc::clone(&sink)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let taken: Vec<usize> =
+            snaps.lock().expect("snaps").iter().map(|(i, _)| *i).collect();
+        assert_eq!(taken, vec![4, 8]);
+
+        // Resume from the last snapshot: 4 remaining iterations over the
+        // snapshot grid must be bit-identical to the uninterrupted run
+        // (the greedy schedule's suffix property).
+        let (done, snap) = snaps.lock().expect("snaps").last().cloned().unwrap();
+        let resumed = client
+            .submit(Workload::new(snap).iterations(12 - done))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let same = resumed
+            .grid
+            .data()
+            .iter()
+            .zip(full.grid.data())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "resumed result diverged from the uninterrupted run");
+
+        // every == 0 disables snapshots entirely (the ablation's path).
+        snaps.lock().expect("snaps").clear();
+        let mut g2 = Grid::new2d(64, 64);
+        g2.fill_random(7, 0.0, 1.0);
+        client.submit(Workload::new(g2).checkpoint(0, sink)).unwrap().wait().unwrap();
+        assert!(snaps.lock().expect("snaps").is_empty());
+        server.shutdown();
     }
 }

@@ -1,0 +1,284 @@
+//! Crash-safe mid-job checkpoints: one sidecar file per in-flight job,
+//! written next to the journal at grid double-buffer barriers.
+//!
+//! The engine's greedy temporal schedule has a suffix property (DESIGN
+//! §3.4): after `done` of `total` iterations, the remaining schedule is
+//! exactly `schedule_for(total - done)`. A checkpoint therefore only
+//! needs the iteration counter and the grid bytes at a chunk barrier —
+//! resubmitting `total - done` iterations from the snapshot replays the
+//! identical tile stream, so a resumed job is *bit-identical* to an
+//! uninterrupted run.
+//!
+//! Snapshots are written atomically (tmp + rename) and carry an FNV-1a
+//! checksum over the canonical JSON body, so a torn or corrupted sidecar
+//! is detected on load and the frontend falls back to the heal path
+//! instead of resuming from poison. Grid bytes ride as base64 of the
+//! little-endian f32 encoding ([`GridPayload`]) — the same bit-exact
+//! representation the wire uses.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+use super::protocol::{GridPayload, PlanSpec};
+
+/// One job's resumable state at a chunk barrier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// The ledger job id this snapshot belongs to.
+    pub job: u64,
+    /// The wire tenant (session) that owns the job.
+    pub tenant: u64,
+    /// The attempt the snapshot was taken on; a resume submits attempt
+    /// `attempt + 1`.
+    pub attempt: u32,
+    /// Total iterations the job was submitted with.
+    pub total: usize,
+    /// Iterations completed at snapshot time (`0 < done < total` for a
+    /// resumable checkpoint).
+    pub done: usize,
+    /// The plan the job runs under, so a rebound frontend can rebuild
+    /// the tenant session without the original open request.
+    pub plan: PlanSpec,
+    /// The grid at the barrier (bit-exact LE-f32 base64).
+    pub grid: GridPayload,
+    /// The power grid, for stencils that take one (constant across
+    /// iterations, but kept here so resume needs no other source).
+    pub power: Option<GridPayload>,
+}
+
+/// FNV-1a 64-bit over `bytes` — the in-tree checksum for sidecar files
+/// (no crates; collision resistance is irrelevant, torn-write detection
+/// is the job).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn get_u64(v: &Json, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+        .map(|n| n as u64)
+        .ok_or_else(|| format!("checkpoint missing integer field {key:?}"))
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize, String> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("checkpoint missing integer field {key:?}"))
+}
+
+impl Checkpoint {
+    /// Sidecar path for `job` next to `journal`:
+    /// `<journal>.ckpt.<job>`. One file per job; overwritten in place at
+    /// each barrier, deleted when the job goes terminal.
+    pub fn path_for(journal: &Path, job: u64) -> PathBuf {
+        PathBuf::from(format!("{}.ckpt.{job}", journal.display()))
+    }
+
+    /// The canonical body (everything but the checksum). Serialized
+    /// deterministically — `Json` objects are ordered maps — so the crc
+    /// computed at save time matches the one recomputed at load time.
+    fn body_json(&self) -> Json {
+        let mut pairs = vec![
+            ("job", Json::Num(self.job as f64)),
+            ("tenant", Json::Num(self.tenant as f64)),
+            ("attempt", Json::from(self.attempt as usize)),
+            ("total", Json::from(self.total)),
+            ("done", Json::from(self.done)),
+            ("plan", self.plan.to_json()),
+            ("grid", self.grid.to_json()),
+        ];
+        if let Some(p) = &self.power {
+            pairs.push(("power", p.to_json()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let body = self.body_json();
+        let crc = fnv1a64(body.to_string().as_bytes());
+        let mut pairs = vec![
+            ("job", Json::Num(self.job as f64)),
+            ("tenant", Json::Num(self.tenant as f64)),
+            ("attempt", Json::from(self.attempt as usize)),
+            ("total", Json::from(self.total)),
+            ("done", Json::from(self.done)),
+            ("plan", self.plan.to_json()),
+            ("grid", self.grid.to_json()),
+        ];
+        if let Some(p) = &self.power {
+            pairs.push(("power", p.to_json()));
+        }
+        pairs.push(("crc", Json::from(format!("{crc:016x}"))));
+        Json::obj(pairs)
+    }
+
+    /// Parse and *verify*: a crc mismatch (tampered or torn body) is an
+    /// error, never a silently-wrong resume point.
+    pub fn from_json(v: &Json) -> Result<Checkpoint, String> {
+        let crc_hex = v
+            .get("crc")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "checkpoint missing crc".to_string())?;
+        let recorded = u64::from_str_radix(crc_hex, 16)
+            .map_err(|e| format!("checkpoint crc is not hex: {e}"))?;
+        let ck = Checkpoint {
+            job: get_u64(v, "job")?,
+            tenant: get_u64(v, "tenant")?,
+            attempt: get_u64(v, "attempt")? as u32,
+            total: get_usize(v, "total")?,
+            done: get_usize(v, "done")?,
+            plan: PlanSpec::from_json(
+                v.get("plan").ok_or_else(|| "checkpoint missing plan".to_string())?,
+            )
+            .map_err(|e| format!("checkpoint plan: {e}"))?,
+            grid: GridPayload::from_json(
+                v.get("grid").ok_or_else(|| "checkpoint missing grid".to_string())?,
+            )
+            .map_err(|e| format!("checkpoint grid: {e}"))?,
+            power: match v.get("power") {
+                None | Some(Json::Null) => None,
+                Some(p) => Some(
+                    GridPayload::from_json(p).map_err(|e| format!("checkpoint power: {e}"))?,
+                ),
+            },
+        };
+        let computed = fnv1a64(ck.body_json().to_string().as_bytes());
+        if computed != recorded {
+            return Err(format!(
+                "checkpoint crc mismatch: recorded {crc_hex}, computed {computed:016x}"
+            ));
+        }
+        Ok(ck)
+    }
+
+    /// Write the sidecar atomically: serialize to `<path>.tmp`, then
+    /// rename over `path`, so a crash mid-write never leaves a
+    /// half-written file at the load path. With `corrupt` (chaos
+    /// injection only) the tail of the JSON is truncated before the
+    /// rename — the "disk lied" case the loader must reject.
+    pub fn save(&self, path: &Path, corrupt: bool) -> std::io::Result<()> {
+        let mut line = self.to_json().to_string();
+        if corrupt {
+            line.truncate(line.len().saturating_sub(20).max(1));
+        }
+        let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+        fs::write(&tmp, line.as_bytes())?;
+        fs::rename(&tmp, path)
+    }
+
+    /// Read and verify a sidecar. Any failure — missing file, bad JSON,
+    /// missing field, crc mismatch — is a typed `Err`, and the caller
+    /// falls back to healing the job instead of resuming it.
+    pub fn load(path: &Path) -> Result<Checkpoint, String> {
+        let text = fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let v = Json::parse(text.trim())
+            .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        Checkpoint::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::Grid;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let n = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        std::env::temp_dir().join(format!(
+            "fstencil-ckpt-{tag}-{}-{n}",
+            std::process::id()
+        ))
+    }
+
+    fn sample() -> Checkpoint {
+        let mut g = Grid::new2d(6, 5);
+        g.fill_random(11, -2.0, 2.0);
+        g.data_mut()[3] = -0.0; // sign bit must survive the round trip
+        Checkpoint {
+            job: 42,
+            tenant: 7,
+            attempt: 2,
+            total: 24,
+            done: 8,
+            plan: PlanSpec {
+                stencil: "diffusion2d".into(),
+                grid_dims: vec![6, 5],
+                iterations: 24,
+                backend: "scalar".into(),
+                tile: Some(vec![6, 5]),
+                coeffs: None,
+                step_sizes: None,
+                workers: None,
+                guard_nonfinite: Some(true),
+            },
+            grid: GridPayload::from_grid(&g),
+            power: None,
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips_bit_exactly() {
+        let path = tmp_path("roundtrip");
+        let ck = sample();
+        ck.save(&path, false).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        let (a, b) = (back.grid.to_grid().unwrap(), ck.grid.to_grid().unwrap());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_sidecar_is_rejected() {
+        let path = tmp_path("torn");
+        sample().save(&path, true).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tampered_body_fails_the_crc() {
+        let path = tmp_path("tamper");
+        let ck = sample();
+        ck.save(&path, false).unwrap();
+        // Flip the iteration counter in place: still valid JSON, but the
+        // recorded crc no longer matches the recomputed one.
+        let text = fs::read_to_string(&path).unwrap();
+        let bent = text.replace("\"done\":8", "\"done\":12");
+        assert_ne!(bent, text, "fixture must actually change the body");
+        fs::write(&path, bent).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.contains("crc"), "unexpected error: {err}");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_sidecar_is_an_error_not_a_panic() {
+        let err = Checkpoint::load(&tmp_path("missing")).unwrap_err();
+        assert!(err.contains("read"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn sidecar_paths_are_per_job_next_to_the_journal() {
+        let j = PathBuf::from("/var/lib/fstencil/jobs.jsonl");
+        assert_eq!(
+            Checkpoint::path_for(&j, 9),
+            PathBuf::from("/var/lib/fstencil/jobs.jsonl.ckpt.9")
+        );
+        assert_ne!(Checkpoint::path_for(&j, 1), Checkpoint::path_for(&j, 2));
+    }
+}

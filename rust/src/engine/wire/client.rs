@@ -28,6 +28,20 @@ pub enum WaitOutcome {
     Terminal { state: JobState, attempts: u32 },
 }
 
+/// The server's health snapshot, from an extended `ping`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Health {
+    pub uptime_ms: u64,
+    /// Shared worker-pool size.
+    pub workers: u64,
+    /// Wire jobs currently queued (between retry attempts).
+    pub jobs_queued: u64,
+    /// Wire jobs currently running (active or resumed).
+    pub jobs_active: u64,
+    /// Whether seeded chaos injection is armed on the server.
+    pub chaos: bool,
+}
+
 /// A connection to a [`super::WireFrontend`]. Sessions are server-side
 /// state keyed by id, not connection state — a client may drop the
 /// socket, reconnect, and keep using its session and job ids (the
@@ -37,13 +51,22 @@ pub struct WireClient {
 }
 
 impl WireClient {
+    /// Connect with the default 300 s read timeout — generous because a
+    /// server-side `wait` can legitimately hold the response for its
+    /// full timeout, so this only catches a dead server, not a slow one.
     pub fn connect(addr: &str) -> Result<WireClient, WireError> {
+        WireClient::connect_with_timeout(addr, Duration::from_secs(300))
+    }
+
+    /// Connect with an explicit per-read timeout (impatient callers:
+    /// health probes, soak harnesses racing a kill).
+    pub fn connect_with_timeout(
+        addr: &str,
+        read_timeout: Duration,
+    ) -> Result<WireClient, WireError> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
-        // Generous bound: a server-side `wait` can legitimately hold the
-        // response for its full timeout, so this only catches a dead
-        // server, not a slow one.
-        stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+        stream.set_read_timeout(Some(read_timeout))?;
         Ok(WireClient { stream })
     }
 
@@ -60,7 +83,17 @@ impl WireClient {
 
     pub fn ping(&mut self) -> Result<(), WireError> {
         match self.rpc(&Request::Ping)? {
-            Response::Pong => Ok(()),
+            Response::Pong { .. } => Ok(()),
+            other => Err(unexpected("pong", &other)),
+        }
+    }
+
+    /// Liveness plus the server's health snapshot.
+    pub fn health(&mut self) -> Result<Health, WireError> {
+        match self.rpc(&Request::Ping)? {
+            Response::Pong { uptime_ms, workers, jobs_queued, jobs_active, chaos } => {
+                Ok(Health { uptime_ms, workers, jobs_queued, jobs_active, chaos })
+            }
             other => Err(unexpected("pong", &other)),
         }
     }
@@ -82,11 +115,27 @@ impl WireClient {
         power: Option<&Grid>,
         iterations: Option<usize>,
     ) -> Result<u64, WireError> {
+        self.submit_with_deadline(session, grid, power, iterations, None)
+    }
+
+    /// [`WireClient::submit`] with a wall-clock budget: the job must be
+    /// terminal within `deadline_ms` of acceptance or it fails with
+    /// [`ErrorKind::DeadlineExceeded`] semantics (queued → fail fast,
+    /// active → cancel-drain).
+    pub fn submit_with_deadline(
+        &mut self,
+        session: u64,
+        grid: &Grid,
+        power: Option<&Grid>,
+        iterations: Option<usize>,
+        deadline_ms: Option<u64>,
+    ) -> Result<u64, WireError> {
         let req = Request::Submit {
             session,
             grid: GridPayload::from_grid(grid),
             power: power.map(GridPayload::from_grid),
             iterations,
+            deadline_ms,
         };
         match self.rpc(&req)? {
             Response::Accepted { job } => Ok(job),

@@ -18,13 +18,17 @@
 //! Sessions survive disconnects: a socket dying mid-job abandons nothing.
 //! The tenant's jobs keep draining, and any connection may later poll or
 //! fetch them by job id — that, plus journal replay in [`JobLedger`], is
-//! what the kill-and-reconnect fault tests exercise.
+//! what the kill-and-reconnect fault tests exercise. With checkpointing
+//! on ([`WireConfig::checkpoint_every`]), jobs even survive process
+//! death: `bind` replays the journal, finds each mid-flight job's
+//! [`Checkpoint`] sidecar, and *resumes* it from the last grid barrier —
+//! bit-identical to an uninterrupted run (DESIGN §3.4).
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -33,8 +37,10 @@ use crate::coordinator::{ExecReport, Plan};
 use crate::stencil::{Grid, StencilProgram, StencilRegistry};
 use crate::util::json::Json;
 
-use super::super::server::QUEUE_WAIT_BUCKETS;
+use super::super::chaos::{ChaosCtx, ChaosPlan, FaultKind};
+use super::super::server::{CheckpointSink, QUEUE_WAIT_BUCKETS};
 use super::super::{ClientSession, EngineError, EngineServer, JobHandle, Workload};
+use super::checkpoint::Checkpoint;
 use super::protocol::{
     encode_frame, ErrorKind, GridPayload, PlanSpec, Request, Response, WireError,
     MAX_FRAME_BYTES,
@@ -65,10 +71,17 @@ pub struct WireConfig {
     /// Append-only JSONL journal; replayed on bind so job ids and
     /// terminal statuses survive restarts. `None` = in-memory only.
     pub journal: Option<PathBuf>,
-    /// Fault injection (tests): treat the first N completed attempts of
-    /// EVERY job as worker-side failures, exercising the real retry
-    /// machinery end-to-end. 0 = off.
-    pub fault_fail_attempts: u32,
+    /// Snapshot every job's grid to a [`Checkpoint`] sidecar each time
+    /// this many iterations complete (at the next chunk barrier).
+    /// Requires a journal; 0 = off.
+    pub checkpoint_every: usize,
+    /// Compact the journal on bind once it exceeds this many bytes
+    /// (rewrite as one latest-state record per job). 0 = never.
+    pub journal_rotate_bytes: u64,
+    /// Seeded deterministic fault injection ([`ChaosPlan`]), threaded
+    /// through tile execution, journal IO, checkpoint writes and
+    /// connection handling. `None` = no faults.
+    pub chaos: Option<Arc<ChaosPlan>>,
 }
 
 impl Default for WireConfig {
@@ -78,7 +91,9 @@ impl Default for WireConfig {
             max_queued_cells: 1 << 26,
             max_attempts: 3,
             journal: None,
-            fault_fail_attempts: 0,
+            checkpoint_every: 0,
+            journal_rotate_bytes: 1 << 20,
+            chaos: None,
         }
     }
 }
@@ -88,6 +103,12 @@ struct RetryInput {
     grid: Grid,
     power: Option<Grid>,
     iterations: Option<usize>,
+    /// Iterations already baked into `grid` (non-zero for a job resumed
+    /// from a checkpoint: the snapshot grid carries `base_iter` of the
+    /// job's `total`).
+    base_iter: usize,
+    /// The job's total iteration count, checkpoint bookkeeping included.
+    total: usize,
 }
 
 /// One wire job's front-door state. The ledger mirrors `state`; the
@@ -99,6 +120,8 @@ struct WireJob {
     attempts: u32,
     cells: u64,
     cancel_requested: bool,
+    /// Absolute wall-clock deadline; retries get the remaining budget.
+    deadline: Option<Instant>,
     handle: Option<JobHandle>,
     input: Option<RetryInput>,
     /// Held for exactly one fetch by a `wait` — then the state stays
@@ -109,6 +132,10 @@ struct WireJob {
 /// One wire tenant: an engine session plus quota and traffic accounting.
 struct Tenant {
     client: ClientSession,
+    /// The fully-resolved plan spec, embedded in checkpoints so a
+    /// rebound frontend can rebuild this session without the original
+    /// open request.
+    spec: PlanSpec,
     outstanding_jobs: u64,
     outstanding_cells: u64,
     frames_in: u64,
@@ -134,6 +161,15 @@ struct Shared {
     jobs_cv: Condvar,
     shutting: AtomicBool,
     conns: Mutex<Vec<JoinHandle<()>>>,
+    /// Bind time, for the health check's uptime.
+    started: Instant,
+    /// Set by [`WireFrontend::kill`]: checkpoint sinks stop writing and
+    /// terminal cleanup stops deleting sidecars, freezing the on-disk
+    /// state at the "crash" instant. Shared with sink closures by `Arc`
+    /// (not via `Arc<Shared>`, which would cycle through the engine).
+    ckpt_frozen: Arc<AtomicBool>,
+    /// Connection ids for the ConnDrop chaos key.
+    conn_seq: AtomicU64,
 }
 
 /// The wire front door. Owns the [`EngineServer`] it fronts; dropping it
@@ -149,14 +185,24 @@ pub struct WireFrontend {
 impl WireFrontend {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) in front of
     /// `server`. Replays the journal first when one is configured, so
-    /// jobs interrupted by the previous run answer polls truthfully.
+    /// jobs interrupted by the previous run answer polls truthfully:
+    /// each orphan with a valid [`Checkpoint`] sidecar is *resumed* from
+    /// its last grid barrier (ledger records `Resumed{from_iter}`); the
+    /// rest are healed to `Failed`. Oversized journals are compacted
+    /// before serving.
     pub fn bind(
         addr: &str,
         server: EngineServer,
         cfg: WireConfig,
     ) -> std::io::Result<WireFrontend> {
         let ledger = match &cfg.journal {
-            Some(path) => JobLedger::open(path)?,
+            Some(path) => {
+                let mut l = JobLedger::open_deferred(path)?;
+                if let Some(ch) = &cfg.chaos {
+                    l.set_chaos(Arc::clone(ch));
+                }
+                l
+            }
             None => JobLedger::in_memory(),
         };
         let listener = TcpListener::bind(addr)?;
@@ -173,7 +219,32 @@ impl WireFrontend {
             jobs_cv: Condvar::new(),
             shutting: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
+            started: Instant::now(),
+            ckpt_frozen: Arc::new(AtomicBool::new(false)),
+            conn_seq: AtomicU64::new(0),
         });
+        // Orphan triage + housekeeping, all before any thread serves a
+        // request, so clients only ever observe the settled ledger.
+        {
+            let mut st = shared.state.lock().expect("front state poisoned");
+            if let Some(journal) = shared.cfg.journal.clone() {
+                for id in st.ledger.orphans() {
+                    if resume_orphan(&shared, &mut st, &journal, id).is_err() {
+                        st.ledger.heal(id);
+                        let _ =
+                            std::fs::remove_file(Checkpoint::path_for(&journal, id));
+                    }
+                }
+            }
+            // Session ids must not collide with tenants replayed (and
+            // possibly re-created, above) from the journal.
+            let max_tenant = st.ledger.jobs().map(|s| s.tenant).max().unwrap_or(0);
+            st.next_session = st.next_session.max(max_tenant + 1);
+            let rotate = shared.cfg.journal_rotate_bytes;
+            if rotate > 0 && st.ledger.journal_bytes() > rotate {
+                let _ = st.ledger.compact();
+            }
+        }
         let accept_shared = Arc::clone(&shared);
         let accept =
             std::thread::spawn(move || accept_loop(&accept_shared, &listener));
@@ -204,9 +275,28 @@ impl WireFrontend {
     }
 
     /// Job ids healed to `Failed` during journal replay (were mid-flight
-    /// when the previous process died).
+    /// when the previous process died, with no usable checkpoint).
     pub fn healed_jobs(&self) -> Vec<u64> {
         self.shared.state.lock().expect("front state poisoned").ledger.healed.clone()
+    }
+
+    /// Jobs resumed from a checkpoint during journal replay:
+    /// `(job, from_iter)` — the job restarted with `from_iter` of its
+    /// iterations already done.
+    pub fn resumed_jobs(&self) -> Vec<(u64, usize)> {
+        self.shared.state.lock().expect("front state poisoned").ledger.resumed.clone()
+    }
+
+    /// Crash simulation (tests): freeze the journal and every checkpoint
+    /// sidecar at this instant — no further journal appends, checkpoint
+    /// writes or sidecar deletions — then tear down threads. The on-disk
+    /// state is exactly what a SIGKILL at this point would have left, so
+    /// a subsequent [`WireFrontend::bind`] exercises the real
+    /// resume-or-heal path.
+    pub fn kill(&mut self) {
+        self.shared.ckpt_frozen.store(true, Ordering::SeqCst);
+        self.shared.state.lock().expect("front state poisoned").ledger.freeze();
+        self.shutdown();
     }
 
     /// Latest ledger status of a job (ops/test introspection; the wire
@@ -385,10 +475,13 @@ fn send_response(stream: &mut TcpStream, resp: &Response) -> bool {
 fn connection_loop(shared: &Arc<Shared>, mut stream: TcpStream) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(IDLE_POLL));
+    let conn = shared.conn_seq.fetch_add(1, Ordering::SeqCst);
+    let mut frame_i: u64 = 0;
     loop {
         match read_frame_patient(&mut stream, &shared.shutting) {
             Ok(None) | Err(WireError::Closed) => return,
             Ok(Some(msg)) => {
+                frame_i += 1;
                 // Body length approximated by re-serialization (byte-
                 // identical for frames our own client sends), +4 header.
                 let in_bytes = msg.to_string().len() as u64 + 4;
@@ -397,6 +490,14 @@ fn connection_loop(shared: &Arc<Shared>, mut stream: TcpStream) {
                 attribute_traffic(shared, tenant, in_bytes, frame.len() as u64);
                 if stream.write_all(&frame).and_then(|()| stream.flush()).is_err() {
                     return;
+                }
+                // Chaos: sever the connection after the response. The
+                // session and its jobs survive — exactly the disconnect
+                // resilience the reconnect tests assert.
+                if let Some(ch) = &shared.cfg.chaos {
+                    if ch.should(FaultKind::ConnDrop, conn, 0, frame_i) {
+                        return;
+                    }
                 }
             }
             Err(WireError::BadJson(m)) => {
@@ -452,11 +553,12 @@ fn handle_frame(shared: &Arc<Shared>, msg: &Json) -> (Response, Option<u64>) {
         }
     };
     match req {
-        Request::Ping => (Response::Pong, None),
+        Request::Ping => (handle_ping(shared), None),
         Request::Open { plan, programs } => handle_open(shared, &plan, &programs),
-        Request::Submit { session, grid, power, iterations } => {
-            (handle_submit(shared, session, &grid, power.as_ref(), iterations), Some(session))
-        }
+        Request::Submit { session, grid, power, iterations, deadline_ms } => (
+            handle_submit(shared, session, &grid, power.as_ref(), iterations, deadline_ms),
+            Some(session),
+        ),
         Request::Poll { job } => {
             let st = shared.state.lock().expect("front state poisoned");
             let tenant = st.ledger.status(job).map(|s| s.tenant);
@@ -481,6 +583,36 @@ fn handle_frame(shared: &Arc<Shared>, msg: &Json) -> (Response, Option<u64>) {
                 ),
             }
         }
+    }
+}
+
+/// Liveness probe, now a health check: uptime, pool size, live job
+/// counts and whether chaos injection is armed. Lock order: front-state
+/// is taken and released before the engine slot — never nested.
+fn handle_ping(shared: &Arc<Shared>) -> Response {
+    let (jobs_queued, jobs_active) = {
+        let st = shared.state.lock().expect("front state poisoned");
+        let mut queued = 0u64;
+        let mut active = 0u64;
+        for j in st.jobs.values() {
+            match j.state {
+                JobState::Queued => queued += 1,
+                JobState::Active | JobState::Resumed { .. } => active += 1,
+                _ => {}
+            }
+        }
+        (queued, active)
+    };
+    let workers = {
+        let guard = shared.engine.lock().expect("engine slot poisoned");
+        guard.as_ref().map(EngineServer::workers).unwrap_or(0)
+    };
+    Response::Pong {
+        uptime_ms: shared.started.elapsed().as_millis() as u64,
+        workers: workers as u64,
+        jobs_queued,
+        jobs_active,
+        chaos: shared.cfg.chaos.is_some(),
     }
 }
 
@@ -526,6 +658,9 @@ fn handle_open(
             )
         }
     };
+    // The fully-resolved spec (defaults filled in by the builder) is what
+    // checkpoints embed — it must rebuild this exact plan after restart.
+    let full_spec = PlanSpec::from_plan(&plan);
     // Engine session queue depth exceeds the wire quota, so a quota-
     // admitted submit can never block on engine backpressure while the
     // front-state lock is held (quota is checked under that lock first).
@@ -548,6 +683,7 @@ fn handle_open(
         session,
         Tenant {
             client,
+            spec: full_spec,
             outstanding_jobs: 0,
             outstanding_cells: 0,
             frames_in: 0,
@@ -565,6 +701,7 @@ fn handle_submit(
     grid: &GridPayload,
     power: Option<&GridPayload>,
     iterations: Option<usize>,
+    deadline_ms: Option<u64>,
 ) -> Response {
     if shared.shutting.load(Ordering::SeqCst) {
         return shutting_error();
@@ -612,6 +749,10 @@ fn handle_submit(
             ),
         };
     }
+    // The job's total iteration count: the per-submit override, else the
+    // tenant plan's default. Checkpoints track progress against this.
+    let total = iterations.unwrap_or(tenant.spec.iterations);
+    let spec = tenant.spec.clone();
     let mut workload = Workload::new(grid.clone());
     if let Some(p) = &power {
         workload = workload.power(p.clone());
@@ -619,13 +760,23 @@ fn handle_submit(
     if let Some(i) = iterations {
         workload = workload.iterations(i);
     }
+    let deadline = deadline_ms.map(Duration::from_millis);
+    if let Some(d) = deadline {
+        workload = workload.deadline(d);
+    }
+    // Allocate the id before the engine sees the job so the checkpoint
+    // sink can be keyed on it. A submit the engine then rejects burns the
+    // id — harmless, nothing was recorded under it.
+    let job = st.ledger.allocate();
+    let workload =
+        arm_workload(shared, workload, job, session, 1, &spec, power.as_ref(), total, 0);
     // Never blocks: quota admitted < engine queue depth (see handle_open).
+    let tenant = st.sessions.get(&session).expect("tenant checked above");
     let handle = match tenant.client.submit(workload) {
         Ok(h) => h,
         // Validation failed — nothing was accepted, charge nothing.
         Err(e) => return engine_error(&e),
     };
-    let job = st.ledger.allocate();
     st.ledger.record(JobStatus {
         job,
         tenant: session,
@@ -648,8 +799,9 @@ fn handle_submit(
             attempts: 1,
             cells,
             cancel_requested: false,
+            deadline: deadline.map(|d| Instant::now() + d),
             handle: Some(handle),
-            input: Some(RetryInput { grid, power, iterations }),
+            input: Some(RetryInput { grid, power, iterations, base_iter: 0, total }),
             output: None,
         },
     );
@@ -763,6 +915,7 @@ fn handle_stats(shared: &Arc<Shared>, session: u64) -> Response {
         ("jobs_cancelled", Json::from(es.jobs_cancelled as usize)),
         ("jobs_failed", Json::from(es.jobs_failed as usize)),
         ("tiles_executed", Json::from(es.tiles_executed as usize)),
+        ("nonfinite_trips", Json::from(es.nonfinite_trips as usize)),
         ("cell_updates", Json::from(es.cell_updates as usize)),
         ("max_queue_wait_us", Json::from(es.max_queue_wait.as_micros() as usize)),
         ("sched_served", Json::from(es.sched_served as usize)),
@@ -795,9 +948,179 @@ fn shutting_error() -> Response {
 fn engine_error(e: &EngineError) -> Response {
     let kind = match e {
         EngineError::Shutdown => ErrorKind::Shutdown,
+        EngineError::DeadlineExceeded => ErrorKind::DeadlineExceeded,
         _ => ErrorKind::Engine,
     };
     Response::Error { kind, message: e.to_string() }
+}
+
+// ------------------------------------------------- crash safety plumbing
+
+/// Attach the crash-safety machinery to one engine submission: the chaos
+/// context (so tile faults key on the *wire* job id and attempt) and,
+/// when checkpointing is on, a self-contained snapshot sink.
+///
+/// The sink runs on the engine scheduler thread, so it must not touch
+/// `Shared::state` (lock order: front-state → engine-state; the scheduler
+/// holds engine-state). Everything it needs is captured by value, plus
+/// the frozen flag by `Arc`.
+#[allow(clippy::too_many_arguments)]
+fn arm_workload(
+    shared: &Arc<Shared>,
+    mut w: Workload,
+    job: u64,
+    tenant: u64,
+    attempt: u32,
+    spec: &PlanSpec,
+    power: Option<&Grid>,
+    total: usize,
+    base: usize,
+) -> Workload {
+    if let Some(ch) = &shared.cfg.chaos {
+        w = w.chaos(ChaosCtx { plan: Arc::clone(ch), job, attempt });
+    }
+    let every = shared.cfg.checkpoint_every;
+    if every == 0 {
+        return w;
+    }
+    let Some(journal) = shared.cfg.journal.clone() else { return w };
+    let path = Checkpoint::path_for(&journal, job);
+    let plan_spec = spec.clone();
+    let power_payload = power.map(GridPayload::from_grid);
+    let chaos = shared.cfg.chaos.clone();
+    let frozen = Arc::clone(&shared.ckpt_frozen);
+    let sink: CheckpointSink = Arc::new(move |iters_done: usize, grid: &Grid| {
+        if frozen.load(Ordering::SeqCst) {
+            return;
+        }
+        let done = base + iters_done;
+        let ck = Checkpoint {
+            job,
+            tenant,
+            attempt,
+            total,
+            done,
+            plan: plan_spec.clone(),
+            grid: GridPayload::from_grid(grid),
+            power: power_payload.clone(),
+        };
+        let corrupt = chaos
+            .as_ref()
+            .is_some_and(|c| c.should(FaultKind::CheckpointCorrupt, job, attempt, done as u64));
+        // Best-effort: a failed snapshot only costs resume granularity.
+        let _ = ck.save(&path, corrupt);
+    });
+    w.checkpoint(every, sink)
+}
+
+/// Try to resume one journal orphan from its checkpoint sidecar. Any
+/// `Err` sends the caller down the heal path — a torn/corrupt/stale
+/// sidecar must degrade to the pre-checkpoint behavior, never resume
+/// from poison. On success the job is live again: ledger shows
+/// `Resumed{from_iter}`, the engine is running `total - done` iterations
+/// from the snapshot grid, and the result is bit-identical to an
+/// uninterrupted run (greedy-schedule suffix property, DESIGN §3.4).
+fn resume_orphan(
+    shared: &Arc<Shared>,
+    st: &mut FrontState,
+    journal: &Path,
+    id: u64,
+) -> Result<(), String> {
+    let ck = Checkpoint::load(&Checkpoint::path_for(journal, id))?;
+    if ck.job != id {
+        return Err(format!("sidecar names job {}, expected {id}", ck.job));
+    }
+    if ck.done == 0 || ck.done >= ck.total {
+        return Err(format!(
+            "checkpoint at {}/{} iterations is not resumable",
+            ck.done, ck.total
+        ));
+    }
+    let prev =
+        st.ledger.status(id).cloned().ok_or_else(|| "job not in ledger".to_string())?;
+    if prev.tenant != ck.tenant {
+        return Err(format!(
+            "sidecar names tenant {}, journal says {}",
+            ck.tenant, prev.tenant
+        ));
+    }
+    let grid = ck.grid.to_grid().map_err(|e| e.to_string())?;
+    let power =
+        ck.power.as_ref().map(GridPayload::to_grid).transpose().map_err(|e| e.to_string())?;
+    // Recreate the owning tenant session if the restart lost it. Inline
+    // stencil programs die with the process registry, so a plan built on
+    // one fails here and the job heals — the documented degradation.
+    if !st.sessions.contains_key(&ck.tenant) {
+        let plan = ck.plan.build().map_err(|e| e.to_string())?;
+        let depth = shared.cfg.max_queued_jobs.max(1) + 1;
+        let client = {
+            let guard = shared.engine.lock().expect("engine slot poisoned");
+            match guard.as_ref() {
+                Some(server) => {
+                    server.open_with_queue(plan, depth).map_err(|e| e.to_string())?
+                }
+                None => return Err("engine is shut down".to_string()),
+            }
+        };
+        st.sessions.insert(
+            ck.tenant,
+            Tenant {
+                client,
+                spec: ck.plan.clone(),
+                outstanding_jobs: 0,
+                outstanding_cells: 0,
+                frames_in: 0,
+                frames_out: 0,
+                bytes_in: 0,
+                bytes_out: 0,
+            },
+        );
+    }
+    let attempts = prev.attempts + 1;
+    let cells = grid.len() as u64;
+    let remaining = ck.total - ck.done;
+    let mut w = Workload::new(grid.clone()).iterations(remaining);
+    if let Some(p) = &power {
+        w = w.power(p.clone());
+    }
+    w = arm_workload(
+        shared,
+        w,
+        id,
+        ck.tenant,
+        attempts,
+        &ck.plan,
+        power.as_ref(),
+        ck.total,
+        ck.done,
+    );
+    let tenant = st.sessions.get(&ck.tenant).expect("tenant ensured above");
+    let handle = tenant.client.submit(w).map_err(|e| e.to_string())?;
+    st.ledger.mark_resumed(id, ck.done, attempts);
+    st.jobs.insert(
+        id,
+        WireJob {
+            tenant: ck.tenant,
+            state: JobState::Resumed { from_iter: ck.done },
+            attempts,
+            cells,
+            cancel_requested: false,
+            deadline: None,
+            handle: Some(handle),
+            input: Some(RetryInput {
+                grid,
+                power,
+                iterations: Some(remaining),
+                base_iter: ck.done,
+                total: ck.total,
+            }),
+            output: None,
+        },
+    );
+    let t = st.sessions.get_mut(&ck.tenant).expect("tenant ensured above");
+    t.outstanding_jobs += 1;
+    t.outstanding_cells += cells;
+    Ok(())
 }
 
 // ---------------------------------------------------------------- reaper
@@ -858,6 +1181,9 @@ enum Outcome {
     Done(super::super::JobOutput),
     Cancelled,
     Shutdown,
+    /// The deadline passed — terminal immediately, never retried (a
+    /// retry could not finish any sooner than the attempt that expired).
+    Deadline,
     Fail(String),
 }
 
@@ -876,15 +1202,11 @@ fn resolve(
         let job = st.jobs.get(&id).expect("resolving a known job");
         (job.attempts, job.cancel_requested)
     };
-    let injected = cfg.fault_fail_attempts >= attempts && !cancel_requested;
     let outcome = match result {
-        Ok(_) if injected => Outcome::Fail(format!(
-            "injected fault (attempt {attempts} of the first {} fails)",
-            cfg.fault_fail_attempts
-        )),
         Ok(out) => Outcome::Done(out),
         Err(EngineError::Cancelled) => Outcome::Cancelled,
         Err(EngineError::Shutdown) => Outcome::Shutdown,
+        Err(EngineError::DeadlineExceeded) => Outcome::Deadline,
         Err(e) => Outcome::Fail(e.to_string()),
     };
     match outcome {
@@ -905,6 +1227,19 @@ fn resolve(
             };
             finish(shared, st, id, state);
         }
+        Outcome::Deadline => {
+            let state = if cancel_requested {
+                JobState::Cancelled
+            } else {
+                JobState::Failed {
+                    attempts,
+                    error: "deadline-exceeded: the job's deadline passed before it \
+                            finished"
+                        .to_string(),
+                }
+            };
+            finish(shared, st, id, state);
+        }
         Outcome::Fail(_) if cancel_requested => {
             finish(shared, st, id, JobState::Cancelled);
         }
@@ -918,6 +1253,8 @@ fn resolve(
 }
 
 /// Record a terminal state, release the tenant's quota, wake waiters.
+/// The checkpoint sidecar is deleted — unless [`WireFrontend::kill`]
+/// froze the on-disk state, in which case the crash snapshot stands.
 fn finish(shared: &Arc<Shared>, st: &mut FrontState, id: u64, state: JobState) {
     let FrontState { ledger, sessions, jobs, .. } = st;
     let job = jobs.get_mut(&id).expect("finishing a known job");
@@ -937,6 +1274,11 @@ fn finish(shared: &Arc<Shared>, st: &mut FrontState, id: u64, state: JobState) {
     if let Some(t) = sessions.get_mut(&job.tenant) {
         t.outstanding_jobs = t.outstanding_jobs.saturating_sub(1);
         t.outstanding_cells = t.outstanding_cells.saturating_sub(job.cells);
+    }
+    if let Some(journal) = &shared.cfg.journal {
+        if !shared.ckpt_frozen.load(Ordering::SeqCst) {
+            let _ = std::fs::remove_file(Checkpoint::path_for(journal, id));
+        }
     }
     shared.jobs_cv.notify_all();
 }
@@ -958,6 +1300,23 @@ fn retry(shared: &Arc<Shared>, st: &mut FrontState, id: u64, error: &str) {
             if let Some(i) = input.iterations {
                 w = w.iterations(i);
             }
+            if let Some(d) = job.deadline {
+                // The remaining budget only; an already-expired deadline
+                // becomes a zero budget and fails fast in the engine's
+                // queued-deadline sweep.
+                w = w.deadline(d.saturating_duration_since(Instant::now()));
+            }
+            let w = arm_workload(
+                shared,
+                w,
+                id,
+                job.tenant,
+                job.attempts + 1,
+                &t.spec,
+                input.power.as_ref(),
+                input.total,
+                input.base_iter,
+            );
             (true, t.client.submit(w))
         }
     };

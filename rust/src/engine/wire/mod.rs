@@ -8,19 +8,25 @@
 //!
 //! - [`protocol`] — frame codec (u32 length prefix + JSON), base64 grid
 //!   payloads, typed requests/responses/errors;
-//! - [`queue`] — job states, status ledger, journal replay;
+//! - [`queue`] — job states, status ledger, journal replay + compaction;
+//! - [`checkpoint`] — crash-safe mid-job grid snapshots (sidecar files
+//!   next to the journal) that let a rebound frontend *resume* a job from
+//!   its last barrier instead of restarting it;
 //! - [`frontend`] — the TCP server: accept/connection/reaper threads
 //!   multiplexing wire tenants onto one [`super::EngineServer`];
 //! - [`client`] — the typed blocking client (also the stress driver).
 //!
-//! See DESIGN.md §3.3 for the frame format and the ledger state machine.
+//! See DESIGN.md §3.3 for the frame format and the ledger state machine,
+//! and §3.4 for the fault model and recovery matrix.
 
+pub mod checkpoint;
 pub mod client;
 pub mod frontend;
 pub mod protocol;
 pub mod queue;
 
-pub use client::{WaitOutcome, WireClient};
+pub use checkpoint::Checkpoint;
+pub use client::{Health, WaitOutcome, WireClient};
 pub use frontend::{WireConfig, WireFrontend};
 pub use protocol::{ErrorKind, GridPayload, PlanSpec, Request, Response, WireError};
 pub use queue::{JobLedger, JobState, JobStatus};

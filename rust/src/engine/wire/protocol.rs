@@ -100,6 +100,9 @@ pub enum ErrorKind {
     Plan,
     /// The engine rejected the submission (shape/power/schedule).
     Engine,
+    /// The job's deadline passed before it finished (queued jobs fail
+    /// fast; active jobs cancel-drain).
+    DeadlineExceeded,
     /// The server is shutting down.
     Shutdown,
 }
@@ -115,6 +118,7 @@ impl ErrorKind {
             ErrorKind::QuotaCells => "quota-cells",
             ErrorKind::Plan => "plan",
             ErrorKind::Engine => "engine",
+            ErrorKind::DeadlineExceeded => "deadline-exceeded",
             ErrorKind::Shutdown => "shutdown",
         }
     }
@@ -129,6 +133,7 @@ impl ErrorKind {
             "quota-cells" => ErrorKind::QuotaCells,
             "plan" => ErrorKind::Plan,
             "engine" => ErrorKind::Engine,
+            "deadline-exceeded" => ErrorKind::DeadlineExceeded,
             "shutdown" => ErrorKind::Shutdown,
             _ => return None,
         })
@@ -337,6 +342,9 @@ pub struct PlanSpec {
     pub coeffs: Option<Vec<f32>>,
     pub step_sizes: Option<Vec<usize>>,
     pub workers: Option<usize>,
+    /// Opt-in numeric circuit breaker: trip a typed `NonFinite` failure
+    /// when a tile result contains NaN/Inf instead of propagating poison.
+    pub guard_nonfinite: Option<bool>,
 }
 
 impl PlanSpec {
@@ -352,6 +360,7 @@ impl PlanSpec {
             coeffs: Some(plan.coeffs.clone()),
             step_sizes: Some(plan.step_sizes.clone()),
             workers: plan.workers,
+            guard_nonfinite: plan.guard_nonfinite.then_some(true),
         }
     }
 
@@ -381,6 +390,9 @@ impl PlanSpec {
         if let Some(w) = self.workers {
             b = b.workers(w);
         }
+        if self.guard_nonfinite == Some(true) {
+            b = b.guard_nonfinite(true);
+        }
         b.build().map_err(|e| EngineError::InvalidPlan(format!("{e:#}")))
     }
 
@@ -406,6 +418,9 @@ impl PlanSpec {
         if let Some(w) = self.workers {
             pairs.push(("workers", Json::from(w)));
         }
+        if let Some(g) = self.guard_nonfinite {
+            pairs.push(("guard_nonfinite", Json::from(g)));
+        }
         Json::obj(pairs)
     }
 
@@ -430,6 +445,7 @@ impl PlanSpec {
             coeffs,
             step_sizes: opt_usize_arr(v, "step_sizes")?,
             workers: opt_usize(v, "workers")?,
+            guard_nonfinite: v.get("guard_nonfinite").and_then(Json::as_bool),
         })
     }
 }
@@ -451,6 +467,11 @@ pub enum Request {
         grid: GridPayload,
         power: Option<GridPayload>,
         iterations: Option<usize>,
+        /// Optional wall-clock budget: the job must be terminal within
+        /// this many milliseconds of acceptance or it fails with
+        /// [`ErrorKind::DeadlineExceeded`] (queued → fail fast, active →
+        /// cancel-drain).
+        deadline_ms: Option<u64>,
     },
     /// Non-blocking status probe by job id.
     Poll { job: u64 },
@@ -480,7 +501,7 @@ impl Request {
                 }
                 Json::obj(pairs)
             }
-            Request::Submit { session, grid, power, iterations } => {
+            Request::Submit { session, grid, power, iterations, deadline_ms } => {
                 let mut pairs = vec![
                     ("type", Json::from("submit")),
                     ("session", u64_json(*session)),
@@ -491,6 +512,9 @@ impl Request {
                 }
                 if let Some(i) = iterations {
                     pairs.push(("iterations", Json::from(*i)));
+                }
+                if let Some(d) = deadline_ms {
+                    pairs.push(("deadline_ms", u64_json(*d)));
                 }
                 Json::obj(pairs)
             }
@@ -545,6 +569,7 @@ impl Request {
                     Some(p) => Some(GridPayload::from_json(p)?),
                 },
                 iterations: opt_usize(v, "iterations")?,
+                deadline_ms: opt_u64(v, "deadline_ms")?,
             }),
             "poll" => Ok(Request::Poll { job: req_u64(v, "job")? }),
             "wait" => Ok(Request::Wait {
@@ -572,7 +597,9 @@ pub enum Response {
     Result { job: u64, grid: GridPayload, attempts: u32, report: Json },
     Stats { session: u64, stats: Json },
     Closed { session: u64 },
-    Pong,
+    /// Liveness + health snapshot: server uptime, pool size, journal-level
+    /// job counts and whether chaos injection is armed.
+    Pong { uptime_ms: u64, workers: u64, jobs_queued: u64, jobs_active: u64, chaos: bool },
     Error { kind: ErrorKind, message: String },
 }
 
@@ -609,7 +636,16 @@ impl Response {
                 ("type", Json::from("closed")),
                 ("session", u64_json(*session)),
             ]),
-            Response::Pong => Json::obj(vec![("type", Json::from("pong"))]),
+            Response::Pong { uptime_ms, workers, jobs_queued, jobs_active, chaos } => {
+                Json::obj(vec![
+                    ("type", Json::from("pong")),
+                    ("uptime_ms", u64_json(*uptime_ms)),
+                    ("workers", u64_json(*workers)),
+                    ("jobs_queued", u64_json(*jobs_queued)),
+                    ("jobs_active", u64_json(*jobs_active)),
+                    ("chaos", Json::from(*chaos)),
+                ])
+            }
             Response::Error { kind, message } => Json::obj(vec![
                 ("type", Json::from("error")),
                 ("kind", Json::from(kind.code())),
@@ -643,7 +679,15 @@ impl Response {
                 stats: v.get("stats").cloned().unwrap_or(Json::Null),
             }),
             "closed" => Ok(Response::Closed { session: req_u64(v, "session")? }),
-            "pong" => Ok(Response::Pong),
+            // Tolerant decode: health fields default to zero/false so a
+            // newer client still parses an older server's bare pong.
+            "pong" => Ok(Response::Pong {
+                uptime_ms: opt_u64(v, "uptime_ms")?.unwrap_or(0),
+                workers: opt_u64(v, "workers")?.unwrap_or(0),
+                jobs_queued: opt_u64(v, "jobs_queued")?.unwrap_or(0),
+                jobs_active: opt_u64(v, "jobs_active")?.unwrap_or(0),
+                chaos: v.get("chaos").and_then(Json::as_bool).unwrap_or(false),
+            }),
             "error" => {
                 let code = req_str(v, "kind")?;
                 Ok(Response::Error {
@@ -690,6 +734,17 @@ fn req_usize(v: &Json, key: &str) -> Result<usize, WireError> {
     v.get(key)
         .and_then(Json::as_usize)
         .ok_or_else(|| WireError::BadMessage(format!("missing integer field {key:?}")))
+}
+
+fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>, WireError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| Some(n as u64))
+            .ok_or_else(|| WireError::BadMessage(format!("field {key:?} must be an integer"))),
+    }
 }
 
 fn opt_usize(v: &Json, key: &str) -> Result<Option<usize>, WireError> {
@@ -777,6 +832,30 @@ mod tests {
     }
 
     #[test]
+    fn pong_health_round_trips_and_tolerates_bare_pong() {
+        let p = Response::Pong {
+            uptime_ms: 1234,
+            workers: 8,
+            jobs_queued: 2,
+            jobs_active: 1,
+            chaos: true,
+        };
+        assert_eq!(Response::from_json(&p.to_json()).unwrap(), p);
+        // An old-style bare pong still parses, with health zeroed out.
+        let bare = Json::obj(vec![("type", Json::from("pong"))]);
+        assert_eq!(
+            Response::from_json(&bare).unwrap(),
+            Response::Pong {
+                uptime_ms: 0,
+                workers: 0,
+                jobs_queued: 0,
+                jobs_active: 0,
+                chaos: false
+            }
+        );
+    }
+
+    #[test]
     fn error_kind_codes_round_trip() {
         for k in [
             ErrorKind::BadFrame,
@@ -787,6 +866,7 @@ mod tests {
             ErrorKind::QuotaCells,
             ErrorKind::Plan,
             ErrorKind::Engine,
+            ErrorKind::DeadlineExceeded,
             ErrorKind::Shutdown,
         ] {
             assert_eq!(ErrorKind::parse(k.code()), Some(k));

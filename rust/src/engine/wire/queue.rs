@@ -7,12 +7,19 @@
 //! {"seq":12,"job":7,"tenant":2,"state":"active","attempts":1,"cells":16384}
 //! ```
 //!
-//! On restart the ledger replays the journal, keeps the *last* record per
-//! job, and heals jobs that were non-terminal when the process died to
-//! `Failed` (their worker state is gone; the healing record is appended so
-//! the journal stays a faithful history). Job-id allocation resumes past
-//! the highest replayed id, so ids stay stable across restarts — the
-//! kill-and-reconnect fault test leans on exactly this.
+//! On restart the ledger replays the journal and keeps the *last* record
+//! per job. Jobs that were non-terminal when the process died are either
+//! *resumed* from a valid checkpoint sidecar (the frontend decides; the
+//! ledger records a `Resumed` transition) or healed to `Failed` (their
+//! worker state is gone; the healing record is appended so the journal
+//! stays a faithful history). Job-id allocation resumes past the highest
+//! replayed id, so ids stay stable across restarts — the
+//! kill-and-reconnect fault tests lean on exactly this.
+//!
+//! The journal is compacted on bind once it outgrows a size threshold:
+//! the full history is rewritten as one terminal-state snapshot per job
+//! (atomic tmp + rename), so a long-lived server's journal stays O(jobs)
+//! instead of O(transitions).
 //!
 //! `attempts` counts attempts *started*: a job accepted but never
 //! dispatched has 0; each engine submission bumps it.
@@ -21,7 +28,9 @@ use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::io::{BufRead, BufReader, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
+use super::super::chaos::{ChaosPlan, FaultKind};
 use crate::util::json::Json;
 
 /// Lifecycle states of a wire job. Terminal states never change again —
@@ -32,6 +41,9 @@ pub enum JobState {
     Queued,
     /// Submitted to the engine scheduler; a worker may be executing it.
     Active,
+    /// Resumed from a checkpoint after a restart: running again, with the
+    /// first `from_iter` iterations carried over from the snapshot.
+    Resumed { from_iter: usize },
     /// Finished successfully; the result is held for one fetch.
     Done,
     /// Out of retry budget (or unrecoverable): the terminal failure.
@@ -49,6 +61,7 @@ impl JobState {
         match self {
             JobState::Queued => "queued",
             JobState::Active => "active",
+            JobState::Resumed { .. } => "resumed",
             JobState::Done => "done",
             JobState::Failed { .. } => "failed",
             JobState::Cancelled => "cancelled",
@@ -61,6 +74,10 @@ impl JobState {
                 ("label", Json::from("failed")),
                 ("attempts", Json::from(*attempts as usize)),
                 ("error", Json::from(error.clone())),
+            ]),
+            JobState::Resumed { from_iter } => Json::obj(vec![
+                ("label", Json::from("resumed")),
+                ("from_iter", Json::from(*from_iter)),
             ]),
             other => Json::from(other.label()),
         }
@@ -75,6 +92,13 @@ impl JobState {
                 "cancelled" => JobState::Cancelled,
                 other => return Err(format!("unknown job state {other:?}")),
             });
+        }
+        if v.get("label").and_then(Json::as_str) == Some("resumed") {
+            let from_iter = v
+                .get("from_iter")
+                .and_then(Json::as_usize)
+                .ok_or("resumed state needs from_iter")?;
+            return Ok(JobState::Resumed { from_iter });
         }
         if v.get("label").and_then(Json::as_str) == Some("failed") {
             let attempts = v
@@ -144,23 +168,36 @@ pub struct JobLedger {
     next_job: u64,
     seq: u64,
     sink: Option<(PathBuf, File)>,
+    /// Seeded fault injection for journal IO (JournalFail swallows a
+    /// write, JournalShortWrite tears one) — see [`ChaosPlan`].
+    chaos: Option<Arc<ChaosPlan>>,
     /// Jobs healed to Failed during replay (were non-terminal at crash).
     pub healed: Vec<u64>,
+    /// Jobs resumed from a checkpoint during replay: `(job, from_iter)`.
+    pub resumed: Vec<(u64, usize)>,
 }
 
 impl JobLedger {
     /// Ledger with no journal: statuses live and die with the process.
     pub fn in_memory() -> JobLedger {
-        JobLedger { jobs: BTreeMap::new(), next_job: 1, seq: 0, sink: None, healed: Vec::new() }
+        JobLedger {
+            jobs: BTreeMap::new(),
+            next_job: 1,
+            seq: 0,
+            sink: None,
+            chaos: None,
+            healed: Vec::new(),
+            resumed: Vec::new(),
+        }
     }
 
-    /// Open (or create) a journal file, replaying any existing records.
-    /// A torn final line — the crash wrote half a record — is tolerated
-    /// and dropped; everything before it is kept. Jobs left non-terminal
-    /// by the crash are healed to `Failed` and the healing records
-    /// appended, so a reconnecting client polling a job id always gets a
-    /// truthful terminal answer.
-    pub fn open(path: &Path) -> std::io::Result<JobLedger> {
+    /// Open (or create) a journal file, replaying any existing records,
+    /// *without* healing orphans. A torn final line — the crash wrote
+    /// half a record — is tolerated and dropped; everything before it is
+    /// kept. The caller inspects [`JobLedger::orphans`] and either
+    /// resumes each from its checkpoint ([`JobLedger::mark_resumed`]) or
+    /// heals it ([`JobLedger::heal`]).
+    pub fn open_deferred(path: &Path) -> std::io::Result<JobLedger> {
         let mut ledger = JobLedger::in_memory();
         if path.exists() {
             let reader = BufReader::new(File::open(path)?);
@@ -185,25 +222,109 @@ impl JobLedger {
         }
         let file = OpenOptions::new().create(true).append(true).open(path)?;
         ledger.sink = Some((path.to_path_buf(), file));
-        // Heal: any job that was mid-flight when the last process died
-        // can never complete — its worker state is gone.
-        let orphans: Vec<u64> = ledger
-            .jobs
+        Ok(ledger)
+    }
+
+    /// Open (or create) a journal file, replaying any existing records
+    /// and healing every orphan to `Failed`, so a reconnecting client
+    /// polling a job id always gets a truthful terminal answer. Callers
+    /// that can resume from checkpoints use [`JobLedger::open_deferred`]
+    /// and triage orphans themselves.
+    pub fn open(path: &Path) -> std::io::Result<JobLedger> {
+        let mut ledger = JobLedger::open_deferred(path)?;
+        for id in ledger.orphans() {
+            ledger.heal(id);
+        }
+        Ok(ledger)
+    }
+
+    /// Jobs that were non-terminal when the last process died. Their
+    /// worker state is gone; each must be resumed or healed before the
+    /// ledger is served to clients.
+    pub fn orphans(&self) -> Vec<u64> {
+        self.jobs
             .iter()
             .filter(|(_, s)| !s.state.is_terminal())
             .map(|(&id, _)| id)
-            .collect();
-        for id in orphans {
-            let mut status = ledger.jobs[&id].clone();
-            status.state = JobState::Failed {
-                attempts: status.attempts,
-                error: "interrupted by server restart".to_string(),
-            };
-            ledger.append(&status)?;
-            ledger.jobs.insert(id, status);
-            ledger.healed.push(id);
+            .collect()
+    }
+
+    /// Heal one orphan to `Failed` (no usable checkpoint — the attempt's
+    /// progress is lost). Idempotent; terminal jobs are left alone.
+    pub fn heal(&mut self, id: u64) {
+        let Some(status) = self.jobs.get(&id) else { return };
+        if status.state.is_terminal() {
+            return;
         }
-        Ok(ledger)
+        let mut status = status.clone();
+        status.state = JobState::Failed {
+            attempts: status.attempts,
+            error: "interrupted by server restart".to_string(),
+        };
+        let _ = self.append(&status);
+        self.jobs.insert(id, status);
+        self.healed.push(id);
+    }
+
+    /// Record that an orphan was resumed from a checkpoint at `from_iter`
+    /// completed iterations, running as attempt `attempts`. Terminal jobs
+    /// are left alone (a late checkpoint file cannot resurrect a job).
+    pub fn mark_resumed(&mut self, id: u64, from_iter: usize, attempts: u32) {
+        let Some(prev) = self.jobs.get(&id) else { return };
+        if prev.state.is_terminal() {
+            return;
+        }
+        let mut status = prev.clone();
+        status.state = JobState::Resumed { from_iter };
+        status.attempts = attempts;
+        let _ = self.append(&status);
+        self.jobs.insert(id, status);
+        self.resumed.push((id, from_iter));
+    }
+
+    /// Rewrite the journal as one latest-state record per job (atomic
+    /// tmp + rename), dropping the transition history. Called on bind
+    /// when the journal outgrows the rotation threshold; replaying the
+    /// compacted journal yields the identical ledger.
+    pub fn compact(&mut self) -> std::io::Result<()> {
+        let Some((path, _)) = &self.sink else { return Ok(()) };
+        let path = path.clone();
+        let tmp = PathBuf::from(format!("{}.compact", path.display()));
+        {
+            let mut f = File::create(&tmp)?;
+            let rows: Vec<JobStatus> = self.jobs.values().cloned().collect();
+            for row in rows {
+                self.seq += 1;
+                writeln!(f, "{}", row.to_json(self.seq))?;
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        self.sink = Some((path, file));
+        Ok(())
+    }
+
+    /// Current journal size in bytes (0 for in-memory ledgers) — the
+    /// rotation trigger.
+    pub fn journal_bytes(&self) -> u64 {
+        self.sink
+            .as_ref()
+            .and_then(|(p, _)| std::fs::metadata(p).ok())
+            .map(|m| m.len())
+            .unwrap_or(0)
+    }
+
+    /// Stop journaling: later transitions advance in memory only. The
+    /// kill-and-rebind tests use this to freeze the on-disk state at the
+    /// "crash" instant while the in-process teardown drains normally.
+    pub fn freeze(&mut self) {
+        self.sink = None;
+    }
+
+    /// Arm seeded journal-IO fault injection for every later append.
+    pub fn set_chaos(&mut self, plan: Arc<ChaosPlan>) {
+        self.chaos = Some(plan);
     }
 
     /// Path of the journal file, if this ledger is durable.
@@ -221,7 +342,28 @@ impl JobLedger {
     fn append(&mut self, status: &JobStatus) -> std::io::Result<()> {
         if let Some((_, file)) = &mut self.sink {
             self.seq += 1;
-            writeln!(file, "{}", status.to_json(self.seq))?;
+            let line = format!("{}\n", status.to_json(self.seq));
+            if let Some(ch) = &self.chaos {
+                // The write "fails" silently: nothing reaches disk, but
+                // the in-memory ledger still advances — the journal is
+                // best-effort durability, never a gate on execution.
+                if ch.should(FaultKind::JournalFail, status.job, status.attempts, self.seq) {
+                    return Ok(());
+                }
+                // Torn write: half the record, no newline. It merges
+                // with the next appended line, and replay drops both.
+                if ch.should(
+                    FaultKind::JournalShortWrite,
+                    status.job,
+                    status.attempts,
+                    self.seq,
+                ) {
+                    file.write_all(&line.as_bytes()[..line.len() / 2])?;
+                    file.flush()?;
+                    return Ok(());
+                }
+            }
+            file.write_all(line.as_bytes())?;
             file.flush()?;
         }
         Ok(())
@@ -266,6 +408,7 @@ mod tests {
         for s in [
             JobState::Queued,
             JobState::Active,
+            JobState::Resumed { from_iter: 8 },
             JobState::Done,
             JobState::Failed { attempts: 3, error: "boom".into() },
             JobState::Cancelled,
@@ -324,5 +467,106 @@ mod tests {
 
         let _ = std::fs::remove_file(&path);
         let _ = std::fs::remove_dir(&dir);
+    }
+
+    fn tmp_journal(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fstencil-ledger-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal.jsonl");
+        let _ = std::fs::remove_file(&path);
+        path
+    }
+
+    #[test]
+    fn deferred_open_leaves_orphans_for_the_caller() {
+        let path = tmp_journal("deferred");
+        {
+            let mut l = JobLedger::open(&path).unwrap();
+            let a = l.allocate();
+            l.record(status(a, JobState::Active, 1));
+        }
+        let mut l = JobLedger::open_deferred(&path).unwrap();
+        assert_eq!(l.orphans(), vec![1]);
+        assert_eq!(l.status(1).unwrap().state, JobState::Active);
+        // Resume instead of heal; the record replays on the next open.
+        l.mark_resumed(1, 8, 2);
+        assert_eq!(l.status(1).unwrap().state, JobState::Resumed { from_iter: 8 });
+        assert_eq!(l.status(1).unwrap().attempts, 2);
+        assert_eq!(l.resumed, vec![(1, 8)]);
+        drop(l);
+        // A plain open() heals the (still non-terminal) resumed job.
+        let l = JobLedger::open(&path).unwrap();
+        assert_eq!(l.healed, vec![1]);
+        assert!(matches!(l.status(1).unwrap().state, JobState::Failed { attempts: 2, .. }));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_shrinks_the_journal_and_replays_identically() {
+        let path = tmp_journal("compact");
+        let mut l = JobLedger::open(&path).unwrap();
+        for _ in 0..8 {
+            let id = l.allocate();
+            l.record(status(id, JobState::Queued, 0));
+            l.record(status(id, JobState::Active, 1));
+            l.record(status(id, JobState::Done, 1));
+        }
+        let before = l.journal_bytes();
+        let states: Vec<JobStatus> = l.jobs().cloned().collect();
+        l.compact().unwrap();
+        let after = l.journal_bytes();
+        assert!(after < before, "compaction must shrink: {before} -> {after}");
+        // One line per job, and the compacted journal replays to the
+        // identical ledger (ids keep allocating past the max).
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 8);
+        drop(l);
+        let mut l2 = JobLedger::open(&path).unwrap();
+        assert_eq!(l2.jobs().cloned().collect::<Vec<_>>(), states);
+        assert_eq!(l2.allocate(), 9);
+        // The reopened append handle still works post-rename.
+        let id = l2.allocate();
+        l2.record(status(id, JobState::Queued, 0));
+        drop(l2);
+        let l3 = JobLedger::open(&path).unwrap();
+        assert!(matches!(l3.status(10).unwrap().state, JobState::Failed { .. }));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn chaos_journal_faults_tear_the_disk_not_the_ledger() {
+        let path = tmp_journal("chaos");
+        // Phase 1: clean writes for job 1.
+        let mut l = JobLedger::open(&path).unwrap();
+        let a = l.allocate();
+        l.record(status(a, JobState::Queued, 0));
+        l.record(status(a, JobState::Done, 1));
+        // Phase 2: every append short-writes. Job 2's records merge into
+        // one unparseable tail; the in-memory ledger still advances.
+        l.set_chaos(Arc::new(ChaosPlan::parse("3:short=1").unwrap()));
+        let b = l.allocate();
+        l.record(status(b, JobState::Queued, 0));
+        l.record(status(b, JobState::Done, 1));
+        assert_eq!(l.status(b).unwrap().state, JobState::Done);
+        drop(l);
+        let l2 = JobLedger::open(&path).unwrap();
+        assert_eq!(l2.status(a).unwrap().state, JobState::Done);
+        assert!(l2.status(b).is_none(), "torn records must not replay");
+        let _ = std::fs::remove_file(&path);
+
+        // JournalFail: nothing reaches disk at all.
+        let path = tmp_journal("chaos-fail");
+        let mut l = JobLedger::open(&path).unwrap();
+        l.set_chaos(Arc::new(ChaosPlan::parse("3:journal=1").unwrap()));
+        let a = l.allocate();
+        l.record(status(a, JobState::Queued, 0));
+        l.record(status(a, JobState::Done, 1));
+        assert_eq!(l.status(a).unwrap().state, JobState::Done);
+        assert_eq!(l.journal_bytes(), 0);
+        let _ = std::fs::remove_file(&path);
     }
 }

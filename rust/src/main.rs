@@ -123,9 +123,17 @@ USAGE: fstencil <subcommand> [options]
             --listen <host:port> instead binds the TCP front door:
             [--duration SECS (0 = forever)] [--journal <path.jsonl>]
             [--max-queued-jobs N] [--max-queued-cells N] [--max-attempts N]
+            [--checkpoint-every N  crash-safe grid snapshots every N
+             iterations; 0 = off; needs --journal (resume on restart)]
+            [--journal-rotate-bytes B  compact the journal on bind past
+             B bytes; 0 = never]
+            [--chaos <seed>:<kind>=<rate>[@attempts],...  deterministic
+             fault injection; kinds exec slow journal short ckpt drop,
+             e.g. --chaos 7:exec=0.2@2,drop=0.05]
   client    --connect <host:port> [--clients N] [--jobs M] [--iters I]
             [--stencil <name>] [--backend <spec>] [--dims H,W[,D]]
-            [--tile a,b] [--cancel-every K] [--stats] [--check]
+            [--tile a,b] [--cancel-every K] [--deadline-ms MS]
+            [--guard-nonfinite] [--stats] [--check]
             wire stress driver against `serve --listen`: N TCP sessions,
             M jobs each, quota-aware closed loop; --check verifies the
             last completed job per session against the scalar oracle
@@ -784,6 +792,22 @@ fn serve_listen(args: &Args, addr: &str) -> anyhow::Result<()> {
     if let Some(path) = args.opt("journal") {
         cfg.journal = Some(std::path::PathBuf::from(path));
     }
+    if let Some(n) = args.opt_usize("checkpoint-every") {
+        cfg.checkpoint_every = n;
+    }
+    anyhow::ensure!(
+        cfg.checkpoint_every == 0 || cfg.journal.is_some(),
+        "--checkpoint-every needs --journal (sidecars live next to it)"
+    );
+    if let Some(n) = args.opt_usize("journal-rotate-bytes") {
+        cfg.journal_rotate_bytes = n as u64;
+    }
+    if let Some(spec) = args.opt("chaos") {
+        let plan = fstencil::engine::ChaosPlan::parse(spec)
+            .map_err(|e| anyhow::anyhow!("--chaos {spec}: {e}"))?;
+        eprintln!("chaos armed: {plan}");
+        cfg.chaos = Some(std::sync::Arc::new(plan));
+    }
     let duration = args.opt_usize("duration").unwrap_or(0);
 
     let server = StencilEngine::new().serve(workers);
@@ -794,6 +818,14 @@ fn serve_listen(args: &Args, addr: &str) -> anyhow::Result<()> {
         eprintln!(
             "journal replay healed {} job(s) interrupted by the previous run: {healed:?}",
             healed.len()
+        );
+    }
+    let resumed = front.resumed_jobs();
+    if !resumed.is_empty() {
+        eprintln!(
+            "journal replay resumed {} job(s) from checkpoints (job, from_iter): \
+             {resumed:?}",
+            resumed.len()
         );
     }
     // Scripts (CI included) wait for this exact line before connecting, so
@@ -832,6 +864,8 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
     let iters = args.opt_usize("iters").unwrap_or(8);
     let check = args.flag("check");
     let cancel_every = args.opt_usize("cancel-every").unwrap_or(0);
+    let deadline_ms = args.opt_usize("deadline-ms").map(|n| n as u64);
+    let guard_nonfinite = args.flag("guard-nonfinite");
     let show_stats = args.flag("stats");
 
     // Ship --stencil-file programs inline in Open: the protocol carries
@@ -883,6 +917,7 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
             coeffs: None,
             step_sizes: None,
             workers: None,
+            guard_nonfinite: guard_nonfinite.then_some(true),
         };
         let label = format!("{kind} {backend} {dims:?} x{iters}");
         let addr = addr.clone();
@@ -921,6 +956,10 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
                     }
                     WaitOutcome::Terminal { state: JobState::Cancelled, .. }
                         if cancel_every > 0 => {}
+                    WaitOutcome::Terminal {
+                        state: JobState::Failed { ref error, .. }, ..
+                    } if deadline_ms.is_some()
+                        && error.contains("deadline-exceeded") => {}
                     WaitOutcome::Terminal { state, .. } => {
                         anyhow::bail!("{label}: job {j} ended {state:?}")
                     }
@@ -939,7 +978,13 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
             for j in 0..jobs as u64 {
                 let (g, power) = mk_job(j);
                 let id = loop {
-                    match client.submit(session, &g, power.as_ref(), None) {
+                    match client.submit_with_deadline(
+                        session,
+                        &g,
+                        power.as_ref(),
+                        None,
+                        deadline_ms,
+                    ) {
                         Ok(id) => break id,
                         Err(WireError::Server {
                             kind: ErrorKind::QuotaJobs | ErrorKind::QuotaCells,

@@ -36,6 +36,7 @@ fn spec(stencil: &str, dims: &[usize], iterations: usize, backend: &str) -> Plan
         coeffs: None,
         step_sizes: None,
         workers: None,
+        guard_nonfinite: None,
     }
 }
 

@@ -236,6 +236,7 @@ fn gen_plan_spec(rng: &mut Rng) -> PlanSpec {
         coeffs: None,
         step_sizes: None,
         workers: rng.chance(0.3).then(|| rng.usize_in(1, 4)),
+        guard_nonfinite: rng.chance(0.3).then(|| rng.bool()),
     }
 }
 
@@ -254,6 +255,7 @@ fn messages_round_trip_through_json() {
                     grid: grid.clone(),
                     power: rng.bool().then(|| grid.clone()),
                     iterations: rng.bool().then(|| rng.usize_in(1, 9)),
+                    deadline_ms: rng.bool().then(|| rng.next_u64() >> 40),
                 },
                 2 => Request::Poll { job: rng.next_u64() >> 12 },
                 3 => Request::Wait {
@@ -293,7 +295,13 @@ fn messages_round_trip_through_json() {
                     stats: Json::obj(vec![("frames_in", Json::from(3usize))]),
                 },
                 5 => Response::Closed { session: rng.next_u64() >> 12 },
-                6 => Response::Pong,
+                6 => Response::Pong {
+                    uptime_ms: rng.next_u64() >> 30,
+                    workers: rng.usize_in(0, 16) as u64,
+                    jobs_queued: rng.usize_in(0, 9) as u64,
+                    jobs_active: rng.usize_in(0, 9) as u64,
+                    chaos: rng.bool(),
+                },
                 _ => Response::Error {
                     kind: *rng.pick(&[
                         ErrorKind::BadFrame,
@@ -341,6 +349,9 @@ fn plan_spec_builds_what_plan_builder_builds() {
             if let Some(w) = spec.workers {
                 b = b.workers(w);
             }
+            if spec.guard_nonfinite == Some(true) {
+                b = b.guard_nonfinite(true);
+            }
             let direct = b.build().map_err(|e| format!("direct build failed: {e:#}"))?;
             if from_wire.grid_dims != direct.grid_dims
                 || from_wire.iterations != direct.iterations
@@ -350,6 +361,7 @@ fn plan_spec_builds_what_plan_builder_builds() {
                 || from_wire.backend != direct.backend
                 || from_wire.coeffs != direct.coeffs
                 || from_wire.workers != direct.workers
+                || from_wire.guard_nonfinite != direct.guard_nonfinite
             {
                 return Err(format!("plans differ: {from_wire:?} vs {direct:?}"));
             }
