@@ -715,6 +715,39 @@ fn main() {
     rep.push(r_armed);
     rep.push(r_resume);
 
+    // --- audit_overhead ablation: every session open runs the static
+    //     plan auditor (dataflow, feasibility, stability, resource
+    //     passes). It must be invisible next to the open itself:
+    //     audited open <= 1.02x of the trusted (unaudited) open on the
+    //     same server and plan, i.e. speedup >= 0.98x. -------------
+    let aserver = engine.serve(2);
+    let aplan = rplan(rtotal);
+    let a_trusted = b.bench("session_open_trusted", || {
+        std::hint::black_box(aserver.open_trusted(aplan.clone()).unwrap());
+    });
+    let a_audited = b.bench("session_open_audited", || {
+        std::hint::black_box(aserver.open(aplan.clone()).unwrap());
+    });
+    rep.ablation(
+        "audit_overhead",
+        a_trusted.summary.mean,
+        a_audited.summary.mean,
+        "audited session open vs open_trusted; acceptance: >= 0.98x \
+         (audit costs <= 1.02x of the bare open)",
+    );
+    let audit_ratio = a_audited.summary.mean / a_trusted.summary.mean;
+    rep.payload(format!(
+        "audit_overhead ablation: audited open is {audit_ratio:.3}x the trusted \
+         open (acceptance: <= 1.02x) ({})",
+        if audit_ratio <= 1.02 {
+            "PASS"
+        } else {
+            "FAIL: static audit too expensive on the open path"
+        }
+    ));
+    rep.push(a_trusted);
+    rep.push(a_audited);
+
     // Smoke runs are correctness checks, not measurements — never let
     // them overwrite the persisted perf trajectory.
     if sm {

@@ -1,0 +1,1004 @@
+//! Static plan auditor: feasibility, dataflow and numeric-stability
+//! analysis before any cell is computed.
+//!
+//! The paper's flow only works because parameter choice is *checked
+//! before synthesis* — §4's model rejects (block, `par_time`, `par_vec`)
+//! combinations whose halo overhead or block-RAM footprint is infeasible.
+//! This module is the host analogue of that gatekeeper: it runs over any
+//! [`StencilProgram`] + [`Plan`] pair and returns an [`AuditReport`] of
+//! typed [`Diagnostic`]s instead of letting a bad configuration surface
+//! as a mid-job panic, a silent wrong-halo answer, or a `NonFinite`
+//! circuit-breaker trip minutes into a run.
+//!
+//! Four passes:
+//!
+//! * **Dataflow cone** — re-derives the dependency footprint from the
+//!   term list, cross-checks the derived `radius`, and reports dead
+//!   (zero-coefficient) taps and the duplicate-tap merges performed by
+//!   [`crate::stencil::ProgramBuilder::build`]'s canonicalization.
+//! * **Blocking feasibility** — the paper's §3.2/§4 constraints as
+//!   checkable predicates: tile extents vs the `radius·T` halo, the
+//!   chunk schedule's granularity, worker occupancy, lane width vs tile
+//!   width, and halo read amplification.
+//! * **Numeric stability** — sup-norm amplification analysis over the
+//!   coefficient set: a per-step gain > 1 is flagged *divergent under
+//!   iteration*; a pure-linear program with gain ≤ 1 provably keeps
+//!   finite inputs finite, so the engine can skip the per-tile
+//!   `guard_nonfinite` scan entirely (see [`Stability::guard_skippable`]
+//!   and the engine's staging-time input scan).
+//! * **Resource / model sanity** — the derived [`Params`] stay inside
+//!   the analytic model's domain (so [`PerfModel::estimate`] cannot
+//!   panic) and the BRAM/DSP estimates are reported against the device
+//!   table, warning when the configuration would fit no FPGA the paper
+//!   evaluates.
+//!
+//! Every severity-`Error` diagnostic blocks [`crate::engine`] session
+//! opens (typed `EngineError::Rejected`), wire `open`s (serialized
+//! diagnostics in the response) and `StencilRegistry::register`; `Warn`
+//! and `Info` never block. The CLI `analyze` subcommand is the offline
+//! linter over the same report.
+
+use std::fmt;
+
+use crate::coordinator::Plan;
+use crate::engine::Backend;
+use crate::model::{Params, PerfModel};
+use crate::simulator::{bram, dsp, Device, DeviceKind};
+use crate::stencil::{PostOp, StencilId, StencilProgram, Term};
+use crate::util::json::Json;
+
+/// Tolerance on the per-step amplification gain: coefficient sets
+/// designed to sum to exactly 1 (e.g. `7 × 1/7`) land within f32
+/// representation noise of 1.0; gains are accumulated in f64 and this
+/// margin absorbs that noise. It is sound for the guard-skip proof:
+/// `(1 + 1e-6)^T` stays below 3 for any `T ≤ 2^20`, dwarfed by the
+/// [`GUARD_HEADROOM`] factor the staging input scan enforces.
+pub const GAIN_EPS: f64 = 1e-6;
+
+/// Input magnitude ceiling under which a gain-bounded program provably
+/// cannot overflow f32: `f32::MAX / 2^20`.
+pub const GUARD_HEADROOM: f32 = f32::MAX / 1_048_576.0;
+
+/// Nominal kernel frequency used for the advisory model/resource pass
+/// (the frozen value the paper-claims tests pin).
+const NOMINAL_FMAX_MHZ: f64 = 300.0;
+
+// ---------------------------------------------------------------- report
+
+/// Diagnostic severity. Only `Error` blocks registration/opens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// What a diagnostic points at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Span {
+    /// The program as a whole.
+    Program,
+    /// Term `i` of the program's term list.
+    Term(usize),
+    /// The program's post-op.
+    Post,
+    /// The coefficient vector.
+    Coeffs,
+    /// A named plan field (`"tile"`, `"grid_dims"`, ...).
+    PlanField(&'static str),
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Span::Program => f.write_str("program"),
+            Span::Term(i) => write!(f, "term[{i}]"),
+            Span::Post => f.write_str("post"),
+            Span::Coeffs => f.write_str("coeffs"),
+            Span::PlanField(name) => write!(f, "plan.{name}"),
+        }
+    }
+}
+
+/// One finding: a stable code (`E001`, `W201`, ...), its kebab-case name,
+/// a severity, a span pointing at the offending term/field, and a
+/// human-readable message with the concrete numbers.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub name: &'static str,
+    pub severity: Severity,
+    pub span: Span,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} {} {} [{}]: {}",
+            self.severity.as_str(),
+            self.code,
+            self.name,
+            self.span,
+            self.message
+        )
+    }
+}
+
+/// The auditor's result: every diagnostic the four passes produced for
+/// one program/plan subject, in pass order.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct AuditReport {
+    /// What was audited, e.g. `"diffusion2d"` or `"diffusion2d @ 256x256"`.
+    pub subject: String,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl AuditReport {
+    pub fn new(subject: impl Into<String>) -> AuditReport {
+        AuditReport { subject: subject.into(), diagnostics: Vec::new() }
+    }
+
+    fn push(
+        &mut self,
+        code: (&'static str, &'static str),
+        severity: Severity,
+        span: Span,
+        message: String,
+    ) {
+        self.diagnostics.push(Diagnostic { code: code.0, name: code.1, severity, span, message });
+    }
+
+    pub fn count(&self, severity: Severity) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == severity).count()
+    }
+
+    /// Whether any diagnostic is severity `Error` — the single predicate
+    /// the engine, the wire frontend and the CI gate all key on.
+    pub fn has_errors(&self) -> bool {
+        self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    /// The error-level diagnostics, for compact rejection messages.
+    pub fn errors(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    /// Serialize for the wire `open` response and `analyze --json`.
+    pub fn to_json(&self) -> Json {
+        let diags: Vec<Json> = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("code", d.code.into()),
+                    ("name", d.name.into()),
+                    ("severity", d.severity.as_str().into()),
+                    ("span", d.span.to_string().into()),
+                    ("message", d.message.clone().into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("subject", self.subject.clone().into()),
+            ("errors", self.count(Severity::Error).into()),
+            ("warnings", self.count(Severity::Warn).into()),
+            ("infos", self.count(Severity::Info).into()),
+            ("diagnostics", Json::Arr(diags)),
+        ])
+    }
+}
+
+impl fmt::Display for AuditReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "audit {}: {} error(s), {} warning(s), {} info(s)",
+            self.subject,
+            self.count(Severity::Error),
+            self.count(Severity::Warn),
+            self.count(Severity::Info)
+        )?;
+        for d in &self.diagnostics {
+            writeln!(f, "  {d}")?;
+        }
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------- codes
+
+/// Stable diagnostic codes: `(code, kebab-case name)`. `E` blocks, `W`
+/// warns, `I` informs. The table is documented in DESIGN.md §4.1; codes
+/// are append-only (never renumbered) so scripts can grep them.
+pub mod codes {
+    pub const E001_HALO_EXCEEDS_TILE: (&str, &str) = ("E001", "halo-exceeds-tile");
+    pub const E002_TILE_EXCEEDS_GRID: (&str, &str) = ("E002", "tile-exceeds-grid");
+    pub const E003_UNSCHEDULABLE: (&str, &str) = ("E003", "unschedulable-iterations");
+    pub const E004_COEFF_COUNT: (&str, &str) = ("E004", "coeff-count-mismatch");
+    pub const E005_NONFINITE_COEFFS: (&str, &str) = ("E005", "nonfinite-coefficients");
+    pub const E006_BAD_GRID_DIMS: (&str, &str) = ("E006", "bad-grid-dims");
+    pub const E007_MODEL_DOMAIN: (&str, &str) = ("E007", "model-domain");
+    pub const E008_RADIUS_MISMATCH: (&str, &str) = ("E008", "radius-mismatch");
+    pub const E009_BAD_WORKERS: (&str, &str) = ("E009", "bad-workers");
+    pub const W101_STEP_GRANULARITY: (&str, &str) = ("W101", "step-granularity-gap");
+    pub const W102_IDLE_WORKERS: (&str, &str) = ("W102", "idle-workers");
+    pub const W103_HALO_OVERHEAD: (&str, &str) = ("W103", "halo-overhead-high");
+    pub const W104_LANES_EXCEED_TILE: (&str, &str) = ("W104", "lanes-exceed-tile-width");
+    pub const W201_DIVERGENT: (&str, &str) = ("W201", "divergent-under-iteration");
+    pub const W202_DEAD_TAP: (&str, &str) = ("W202", "dead-tap");
+    pub const W203_BRAM_OVER_CAPACITY: (&str, &str) = ("W203", "bram-over-capacity");
+    pub const I301_GUARD_SKIPPABLE: (&str, &str) = ("I301", "guard-skippable");
+    pub const I302_MERGED_TAPS: (&str, &str) = ("I302", "merged-duplicate-taps");
+    pub const I303_RESOURCE_ESTIMATE: (&str, &str) = ("I303", "resource-estimate");
+}
+
+use codes::*;
+
+// ------------------------------------------------------------- stability
+
+/// The numeric-stability pass's summary for one (program, coefficient)
+/// pair — what the engine consults to decide whether the per-tile
+/// `guard_nonfinite` scan can be skipped.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stability {
+    /// Every term is a pure state-linear shape (`Tap`/`TapSum`/
+    /// `AxisPair`) and the post-op is `Identity`: the update is
+    /// `out = L(in)` with no constant injection, so `gain ≤ 1` bounds
+    /// the state for *all* iteration counts.
+    pub pure_linear: bool,
+    /// Conservative sup-norm amplification per step, accumulated in f64:
+    /// `max|out| ≤ gain · max|in| (+ constants)`.
+    pub gain: f64,
+}
+
+impl Stability {
+    /// Provably non-divergent: a finite input with [`GUARD_HEADROOM`]
+    /// magnitude slack can never produce NaN/Inf, so the per-tile
+    /// circuit-breaker scan is redundant.
+    pub fn guard_skippable(&self) -> bool {
+        self.pure_linear && self.gain <= 1.0 + GAIN_EPS
+    }
+
+    /// Amplification exceeds 1: iterating the program magnifies the
+    /// state and can eventually overflow to Inf.
+    pub fn divergent(&self) -> bool {
+        self.gain > 1.0 + GAIN_EPS
+    }
+}
+
+/// Sup-norm amplification analysis of `prog` at coefficient set `k`
+/// (which must have `prog.coeff_len` entries; a NaN coefficient makes
+/// the gain NaN, which is conservatively neither skippable nor flagged
+/// divergent — the E005 coefficient check fires instead).
+pub fn stability(prog: &StencilProgram, k: &[f32]) -> Stability {
+    let mut gain = 0.0f64;
+    let mut pure_linear = matches!(prog.post(), PostOp::Identity);
+    for t in prog.terms() {
+        match *t {
+            Term::Tap(tap) => gain += (k[tap.coeff_idx] as f64).abs(),
+            Term::TapSum { group, .. } => {
+                // |Σ k_g| ≤ Σ |k_g|: conservative per-member bound.
+                for &ci in prog.tap_group(group) {
+                    gain += (k[ci] as f64).abs();
+                }
+            }
+            // |in[a] + in[b] - 2c| ≤ 4·max|in|
+            Term::AxisPair { coeff_idx, .. } => gain += 4.0 * (k[coeff_idx] as f64).abs(),
+            // (k[amb] - c)·k: state part is |c|·|k|; the constant part
+            // breaks pure linearity.
+            Term::AmbientDrift { coeff_idx, .. } => {
+                gain += (k[coeff_idx] as f64).abs();
+                pure_linear = false;
+            }
+            // Constant injections: no state gain, not pure-linear.
+            Term::Power | Term::PowerScaled { .. } | Term::CoeffProduct { .. } => {
+                pure_linear = false;
+            }
+        }
+    }
+    if let PostOp::ScaledResidual { scale_idx } = prog.post() {
+        // out = c + k_s·acc  ⇒  gain = 1 + |k_s|·gain_acc
+        gain = 1.0 + (k[scale_idx] as f64).abs() * gain;
+    }
+    Stability { pure_linear, gain }
+}
+
+// ------------------------------------------------------------ plan shape
+
+/// The plan fields the feasibility/resource passes consume, decoupled
+/// from [`Plan`] so the CLI can audit raw arguments even when
+/// `PlanBuilder::build` itself refuses them (the auditor then *explains*
+/// the refusal as diagnostics instead of one bail message).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanShape {
+    pub stencil: StencilId,
+    pub grid_dims: Vec<usize>,
+    pub iterations: usize,
+    pub coeffs: Vec<f32>,
+    pub tile: Vec<usize>,
+    pub step_sizes: Vec<usize>,
+    pub backend: Backend,
+    pub workers: Option<usize>,
+    pub guard_nonfinite: bool,
+}
+
+impl From<&Plan> for PlanShape {
+    fn from(plan: &Plan) -> PlanShape {
+        PlanShape {
+            stencil: plan.stencil,
+            grid_dims: plan.grid_dims.clone(),
+            iterations: plan.iterations,
+            coeffs: plan.coeffs.clone(),
+            tile: plan.tile.clone(),
+            step_sizes: plan.step_sizes.clone(),
+            backend: plan.backend,
+            workers: plan.workers,
+            guard_nonfinite: plan.guard_nonfinite,
+        }
+    }
+}
+
+impl PlanShape {
+    /// A shape with `PlanBuilder`'s defaults for everything optional
+    /// (clamped default tile, default coefficients, artifact step sizes,
+    /// scalar backend) — the CLI's starting point before applying
+    /// explicit flags.
+    pub fn with_defaults(
+        stencil: StencilId,
+        grid_dims: Vec<usize>,
+        iterations: usize,
+    ) -> PlanShape {
+        let def = stencil.def();
+        let default: &[usize] = if stencil.ndim() == 2 { &[64, 64] } else { &[16, 16, 16] };
+        let tile = default
+            .iter()
+            .zip(&grid_dims)
+            .map(|(&t, &d)| t.min(d.max(1)))
+            .collect();
+        PlanShape {
+            stencil,
+            grid_dims,
+            iterations,
+            coeffs: def.default_coeffs.to_vec(),
+            tile,
+            step_sizes: vec![4, 2, 1],
+            backend: Backend::Scalar,
+            workers: None,
+            guard_nonfinite: false,
+        }
+    }
+}
+
+// ------------------------------------------------------------ entry points
+
+/// Audit a program alone (at its default coefficients): the dataflow-cone
+/// and numeric-stability passes. [`crate::stencil::StencilRegistry::register`]
+/// rejects programs whose report has errors.
+pub fn audit_program(prog: &StencilProgram) -> AuditReport {
+    let mut report = AuditReport::new(prog.name());
+    program_passes(prog, prog.default_coeffs, false, &mut report);
+    report
+}
+
+/// Audit a built plan: program passes at the *plan's* coefficients plus
+/// the blocking-feasibility and resource/model passes. This is the one
+/// report session opens, wire opens and the CLI all route through.
+pub fn audit_plan(plan: &Plan) -> AuditReport {
+    audit_shape(&PlanShape::from(plan))
+}
+
+/// Audit a plan shape (see [`PlanShape`] for why this exists separately
+/// from [`audit_plan`]).
+pub fn audit_shape(shape: &PlanShape) -> AuditReport {
+    let prog = shape.stencil.def();
+    let dims: Vec<String> = shape.grid_dims.iter().map(|d| d.to_string()).collect();
+    let mut report = AuditReport::new(format!("{} @ {}", prog.name(), dims.join("x")));
+    program_passes(prog, &shape.coeffs, shape.guard_nonfinite, &mut report);
+    feasibility_pass(shape, prog, &mut report);
+    // Model/resource sanity is meaningless on a shape that is already
+    // structurally broken; skip it so its numbers can't mislead.
+    if !report.has_errors() {
+        resource_pass(shape, prog, &mut report);
+    }
+    report
+}
+
+// ---------------------------------------------------- pass 1+3: program
+
+/// Dataflow-cone + numeric-stability passes over one (program, coeffs)
+/// pair. `guarded` is whether the consuming plan set `guard_nonfinite`
+/// (controls the I301 skip-proof info line).
+fn program_passes(
+    prog: &StencilProgram,
+    coeffs: &[f32],
+    guarded: bool,
+    report: &mut AuditReport,
+) {
+    // -- dataflow cone: recompute the dependency footprint from the term
+    // list and cross-check the derived radius.
+    let mut derived_radius = 0usize;
+    for t in prog.terms() {
+        for o in term_offsets(t) {
+            for d in o {
+                derived_radius = derived_radius.max(d.unsigned_abs());
+            }
+        }
+    }
+    if derived_radius != prog.radius {
+        report.push(
+            E008_RADIUS_MISMATCH,
+            Severity::Error,
+            Span::Program,
+            format!(
+                "term list spans radius {derived_radius} but the program declares \
+                 radius {} — halo sizing would be wrong",
+                prog.radius
+            ),
+        );
+    }
+    for (i, t) in prog.terms().iter().enumerate() {
+        if let Term::TapSum { offset, group } = t {
+            let idxs = prog.tap_group(*group);
+            report.push(
+                I302_MERGED_TAPS,
+                Severity::Info,
+                Span::Term(i),
+                format!(
+                    "{} duplicate taps at offset {:?} were canonicalized into one \
+                     merged-coefficient tap (coefficient indices {idxs:?})",
+                    idxs.len(),
+                    trimmed_offset(offset, prog.ndim()),
+                ),
+            );
+        }
+    }
+
+    // -- coefficient-dependent checks need a well-formed coefficient set.
+    if coeffs.len() != prog.coeff_len {
+        report.push(
+            E004_COEFF_COUNT,
+            Severity::Error,
+            Span::Coeffs,
+            format!("program needs {} coefficients, got {}", prog.coeff_len, coeffs.len()),
+        );
+        return;
+    }
+    if let Some(i) = coeffs.iter().position(|c| !c.is_finite()) {
+        report.push(
+            E005_NONFINITE_COEFFS,
+            Severity::Error,
+            Span::Coeffs,
+            format!(
+                "coefficient {i} is {} — every cell update would be poisoned \
+                 before the first iteration completes",
+                coeffs[i]
+            ),
+        );
+        return;
+    }
+
+    // -- dead taps: terms that provably contribute nothing at this
+    // coefficient set.
+    for (i, t) in prog.terms().iter().enumerate() {
+        let dead = match *t {
+            Term::Tap(tap) => coeffs[tap.coeff_idx] == 0.0,
+            Term::TapSum { group, .. } => prog.summed_coeff(group, coeffs) == 0.0,
+            Term::AxisPair { coeff_idx, .. }
+            | Term::PowerScaled { coeff_idx }
+            | Term::AmbientDrift { coeff_idx, .. } => coeffs[coeff_idx] == 0.0,
+            Term::CoeffProduct { a_idx, b_idx } => {
+                coeffs[a_idx] == 0.0 || coeffs[b_idx] == 0.0
+            }
+            Term::Power => false,
+        };
+        if dead {
+            report.push(
+                W202_DEAD_TAP,
+                Severity::Warn,
+                Span::Term(i),
+                "term multiplies by a zero coefficient and contributes nothing; \
+                 drop it (or its coefficient is misconfigured)"
+                    .to_string(),
+            );
+        }
+    }
+
+    // -- numeric stability: sup-norm amplification per step.
+    let st = stability(prog, coeffs);
+    if st.divergent() {
+        report.push(
+            W201_DIVERGENT,
+            Severity::Warn,
+            Span::Coeffs,
+            format!(
+                "per-step amplification factor {:.4} > 1: iterating this program \
+                 magnifies the state and can overflow to Inf; enable \
+                 guard_nonfinite or renormalize the coefficients",
+                st.gain
+            ),
+        );
+    } else if st.guard_skippable() && guarded {
+        report.push(
+            I301_GUARD_SKIPPABLE,
+            Severity::Info,
+            Span::Program,
+            format!(
+                "pure-linear program with amplification {:.4} ≤ 1: finite inputs \
+                 provably stay finite, so the per-tile guard_nonfinite scan is \
+                 skipped after a one-time input scan",
+                st.gain
+            ),
+        );
+    }
+}
+
+// ------------------------------------------------- pass 2: feasibility
+
+fn feasibility_pass(shape: &PlanShape, prog: &StencilProgram, report: &mut AuditReport) {
+    let ndim = prog.ndim();
+    let rad = prog.radius;
+
+    // -- grid shape.
+    if shape.grid_dims.len() != ndim || shape.grid_dims.iter().any(|&d| d == 0) {
+        report.push(
+            E006_BAD_GRID_DIMS,
+            Severity::Error,
+            Span::PlanField("grid_dims"),
+            format!("{} needs {ndim} positive grid dims, got {:?}", prog.name(), shape.grid_dims),
+        );
+    }
+    if shape.iterations == 0 {
+        report.push(
+            E006_BAD_GRID_DIMS,
+            Severity::Error,
+            Span::PlanField("iterations"),
+            "iterations must be positive".to_string(),
+        );
+    }
+
+    // -- tile vs grid.
+    if shape.tile.len() != ndim || shape.tile.iter().any(|&t| t == 0) {
+        report.push(
+            E002_TILE_EXCEEDS_GRID,
+            Severity::Error,
+            Span::PlanField("tile"),
+            format!("tile must be {ndim} positive extents, got {:?}", shape.tile),
+        );
+        return; // every later predicate needs a usable tile
+    }
+    for (d, (&t, &g)) in shape.tile.iter().zip(&shape.grid_dims).enumerate() {
+        if t > g && g > 0 {
+            report.push(
+                E002_TILE_EXCEEDS_GRID,
+                Severity::Error,
+                Span::PlanField("tile"),
+                format!(
+                    "tile extent {t} exceeds grid extent {g} along dim {d}: edge \
+                     tiles must pin to the grid border; use a smaller tile"
+                ),
+            );
+        }
+    }
+
+    // -- chunk schedule: the §3.2 halo constraint per candidate step.
+    if shape.step_sizes.is_empty() || shape.step_sizes.contains(&0) {
+        report.push(
+            E003_UNSCHEDULABLE,
+            Severity::Error,
+            Span::PlanField("step_sizes"),
+            format!("step sizes must be non-empty and positive, got {:?}", shape.step_sizes),
+        );
+        return;
+    }
+    let mut sizes = shape.step_sizes.clone();
+    sizes.sort_unstable();
+    sizes.dedup();
+    sizes.reverse(); // descending, like the planner
+    let min_tile = *shape.tile.iter().min().expect("tile checked non-empty");
+    let s_min = *sizes.last().expect("sizes checked non-empty");
+    if min_tile <= 2 * s_min * rad {
+        // Even the finest granularity's halo swallows the tile: no
+        // schedule exists for any iteration count.
+        report.push(
+            E001_HALO_EXCEEDS_TILE,
+            Severity::Error,
+            Span::PlanField("tile"),
+            format!(
+                "smallest chunk of {s_min} fused step(s) needs a halo of \
+                 {}·2 cells but the smallest tile extent is {min_tile}: the \
+                 halo swallows the tile (radius {rad}); grow the tile or \
+                 reduce the temporal block",
+                s_min * rad
+            ),
+        );
+        return;
+    }
+    // Greedy walk (the planner's exact rule) for this iteration count.
+    if shape.iterations > 0 {
+        let mut left = shape.iterations;
+        let mut max_step = 0usize;
+        while left > 0 {
+            match sizes.iter().copied().find(|&s| s <= left && min_tile > 2 * s * rad) {
+                Some(s) => {
+                    max_step = max_step.max(s);
+                    left -= s;
+                }
+                None => {
+                    report.push(
+                        E003_UNSCHEDULABLE,
+                        Severity::Error,
+                        Span::PlanField("step_sizes"),
+                        format!(
+                            "{left} remaining iteration(s) cannot be expressed with \
+                             step sizes {sizes:?} under tile {:?} (radius {rad}); \
+                             add a finer step granularity",
+                            shape.tile
+                        ),
+                    );
+                    return;
+                }
+            }
+        }
+
+        // -- advisory temporal-blocking quality checks.
+        if !sizes.contains(&1) {
+            report.push(
+                W101_STEP_GRANULARITY,
+                Severity::Warn,
+                Span::PlanField("step_sizes"),
+                format!(
+                    "step sizes {sizes:?} lack a 1-step variant: per-job iteration \
+                     overrides on a warm session can hit unschedulable counts"
+                ),
+            );
+        }
+        // Halo read amplification of the deepest chunk actually used
+        // (§4's overhead term): streamed cells ÷ useful cells.
+        let h = max_step * rad;
+        let mut amp = 1.0f64;
+        for (&t, &g) in shape.tile.iter().zip(&shape.grid_dims) {
+            if t < g {
+                amp *= (t + 2 * h) as f64 / t as f64;
+            }
+        }
+        if amp > 2.0 {
+            report.push(
+                W103_HALO_OVERHEAD,
+                Severity::Warn,
+                Span::PlanField("tile"),
+                format!(
+                    "overlapped blocking reads {amp:.2}× the useful cells at \
+                     temporal depth {max_step} (halo {h} per side): more than \
+                     half the streamed traffic is halo; grow the tile or lower \
+                     the temporal block"
+                ),
+            );
+        }
+    }
+
+    // -- workers vs available tiles.
+    if let Some(w) = shape.workers {
+        if w == 0 {
+            report.push(
+                E009_BAD_WORKERS,
+                Severity::Error,
+                Span::PlanField("workers"),
+                "workers must be positive".to_string(),
+            );
+        } else {
+            let tiles: usize = shape
+                .tile
+                .iter()
+                .zip(&shape.grid_dims)
+                .map(|(&t, &g)| g.div_ceil(t.max(1)).max(1))
+                .product();
+            if w > tiles {
+                report.push(
+                    W102_IDLE_WORKERS,
+                    Severity::Warn,
+                    Span::PlanField("workers"),
+                    format!(
+                        "{w} workers but only {tiles} tile(s) per pass: \
+                         {} worker(s) can never be busy",
+                        w - tiles
+                    ),
+                );
+            }
+        }
+    }
+
+    // -- lane width vs tile width (the par_vec analogue of §3.2's
+    // vectorized datapath needing a full row segment).
+    let par_vec = shape.backend.par_vec();
+    let tile_x = *shape.tile.last().expect("tile checked non-empty");
+    if par_vec > tile_x {
+        report.push(
+            W104_LANES_EXCEED_TILE,
+            Severity::Warn,
+            Span::PlanField("backend"),
+            format!(
+                "par_vec {par_vec} exceeds the tile's x extent {tile_x}: whole \
+                 rows fall back to the scalar remainder loop"
+            ),
+        );
+    }
+}
+
+// --------------------------------------------- pass 4: resource / model
+
+fn resource_pass(shape: &PlanShape, prog: &StencilProgram, report: &mut AuditReport) {
+    // Map the host plan onto the model's design-point vocabulary: the
+    // temporal block is the deepest schedulable chunk, the spatial block
+    // is the tile.
+    let par_time = shape
+        .step_sizes
+        .iter()
+        .copied()
+        .filter(|&s| *shape.tile.iter().min().unwrap_or(&0) > 2 * s * prog.radius)
+        .max()
+        .unwrap_or(1);
+    let ndim = prog.ndim();
+    let params = Params {
+        stencil: shape.stencil,
+        par_vec: shape.backend.par_vec().max(1),
+        par_time,
+        bsize_x: *shape.tile.last().unwrap_or(&1),
+        bsize_y: if ndim == 3 { shape.tile[1] } else { *shape.tile.last().unwrap_or(&1) },
+        dims: shape.grid_dims.clone(),
+        iters: shape.iterations,
+        fmax_mhz: NOMINAL_FMAX_MHZ,
+    };
+    // PerfModel::estimate asserts feasibility; auditing must never panic.
+    if !params.is_feasible() {
+        report.push(
+            E007_MODEL_DOMAIN,
+            Severity::Error,
+            Span::PlanField("tile"),
+            format!(
+                "model domain: halo {} swallows the spatial block {}x{} — \
+                 PerfModel::estimate is undefined here",
+                params.halo(),
+                params.bsize_x,
+                params.bsize_y
+            ),
+        );
+        return;
+    }
+
+    // Advisory FPGA resource estimate (the host runs regardless): does
+    // the equivalent design point fit the paper's device table?
+    let reference = Device::get(DeviceKind::Arria10);
+    let bu = bram::bram_usage(
+        prog,
+        reference,
+        ndim,
+        params.bsize_x,
+        params.bsize_y,
+        params.par_vec,
+        params.par_time,
+    );
+    let du = dsp::dsp_usage(prog, reference, params.par_vec, params.par_time);
+    let fits_any = DeviceKind::FPGAS
+        .iter()
+        .chain(DeviceKind::STRATIX10.iter())
+        .any(|&kind| {
+            let dev = Device::get(kind);
+            bram::bram_usage(
+                prog,
+                dev,
+                ndim,
+                params.bsize_x,
+                params.bsize_y,
+                params.par_vec,
+                params.par_time,
+            )
+            .fits(dev)
+        });
+    if !fits_any {
+        report.push(
+            W203_BRAM_OVER_CAPACITY,
+            Severity::Warn,
+            Span::PlanField("tile"),
+            format!(
+                "the equivalent FPGA design point ({} Mbit of block RAM at \
+                 par_time {par_time}) exceeds every device in the table — this \
+                 configuration is host-only",
+                bu.bits / (1024 * 1024)
+            ),
+        );
+    }
+    let model = PerfModel::new(reference.peak_bw_gbps);
+    let est = model.estimate(&params);
+    report.push(
+        I303_RESOURCE_ESTIMATE,
+        Severity::Info,
+        Span::Program,
+        format!(
+            "as an FPGA design point on {}: {} M20K blocks ({} Mbit), \
+             {} DSPs, model-estimated {:.1} GB/s at {:.0} MHz",
+            reference.name,
+            bu.blocks,
+            bu.bits / (1024 * 1024),
+            du.demand,
+            est.throughput_gbps,
+            NOMINAL_FMAX_MHZ
+        ),
+    );
+}
+
+// ----------------------------------------------------------------- misc
+
+fn term_offsets(t: &Term) -> Vec<[isize; 3]> {
+    match t {
+        Term::Tap(tap) => vec![tap.offset],
+        Term::TapSum { offset, .. } => vec![*offset],
+        Term::AxisPair { a, b, .. } => vec![*a, *b],
+        _ => Vec::new(),
+    }
+}
+
+fn trimmed_offset(o: &[isize; 3], ndim: usize) -> Vec<isize> {
+    o[3 - ndim..].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PlanBuilder;
+    use crate::stencil::StencilKind;
+
+    fn plan(kind: StencilKind, dims: Vec<usize>, iters: usize) -> Plan {
+        PlanBuilder::new(kind).grid_dims(dims).iterations(iters).build().unwrap()
+    }
+
+    #[test]
+    fn builtin_plans_have_no_errors() {
+        for kind in StencilKind::ALL_EXT {
+            let dims = if kind.ndim() == 2 { vec![128, 128] } else { vec![32, 32, 32] };
+            let report = audit_plan(&plan(kind, dims, 8));
+            assert!(!report.has_errors(), "{kind}: {report}");
+        }
+    }
+
+    #[test]
+    fn diffusion_is_guard_skippable_hotspot_is_not() {
+        let d2 = StencilKind::Diffusion2D.def();
+        let st = stability(d2, d2.default_coeffs);
+        assert!(st.pure_linear && st.guard_skippable(), "{st:?}");
+        let d3 = StencilKind::Diffusion3D.def();
+        assert!(stability(d3, d3.default_coeffs).guard_skippable());
+        // Hotspot2D's update has gain 1 + 0.05·(0.8 + 1.2 + 0.1) > 1 and
+        // injects constants (power, ambient): conservatively divergent.
+        let h2 = StencilKind::Hotspot2D.def();
+        let st = stability(h2, h2.default_coeffs);
+        assert!(!st.pure_linear && st.divergent(), "{st:?}");
+    }
+
+    #[test]
+    fn amplifying_coefficients_warn_divergent() {
+        let p = plan(StencilKind::Diffusion2D, vec![64, 64], 4);
+        let mut amplified = p.clone();
+        amplified.coeffs = vec![0.5, 0.5, 0.5, 0.5, 0.5]; // gain 2.5
+        let report = audit_plan(&amplified);
+        assert!(report.diagnostics.iter().any(|d| d.code == "W201"), "{report}");
+        assert!(!report.has_errors(), "warnings must not block: {report}");
+    }
+
+    #[test]
+    fn nonfinite_coefficients_are_an_error() {
+        let mut p = plan(StencilKind::Diffusion2D, vec![64, 64], 4);
+        p.coeffs[2] = f32::NAN;
+        let report = audit_plan(&p);
+        assert!(report.has_errors());
+        assert!(report.errors().any(|d| d.code == "E005"), "{report}");
+    }
+
+    #[test]
+    fn halo_swallowing_tile_is_e001() {
+        let shape = PlanShape {
+            tile: vec![8, 8],
+            step_sizes: vec![8],
+            ..PlanShape::with_defaults(StencilKind::Diffusion2D.into(), vec![64, 64], 8)
+        };
+        let report = audit_shape(&shape);
+        assert!(report.errors().any(|d| d.code == "E001"), "{report}");
+    }
+
+    #[test]
+    fn granularity_gap_is_e003_zero_steps_too() {
+        let shape = PlanShape {
+            step_sizes: vec![4], // 64-tile is fine for s=4, but 3 iters can't be expressed
+            ..PlanShape::with_defaults(StencilKind::Diffusion2D.into(), vec![64, 64], 3)
+        };
+        let report = audit_shape(&shape);
+        assert!(report.errors().any(|d| d.code == "E003"), "{report}");
+        let zero = PlanShape {
+            step_sizes: vec![1, 0],
+            ..PlanShape::with_defaults(StencilKind::Diffusion2D.into(), vec![64, 64], 3)
+        };
+        assert!(audit_shape(&zero).errors().any(|d| d.code == "E003"));
+    }
+
+    #[test]
+    fn oversized_tile_and_bad_dims_are_errors() {
+        let shape = PlanShape {
+            tile: vec![128, 128],
+            ..PlanShape::with_defaults(StencilKind::Diffusion2D.into(), vec![64, 64], 4)
+        };
+        assert!(audit_shape(&shape).errors().any(|d| d.code == "E002"));
+        let bad = PlanShape::with_defaults(StencilKind::Diffusion3D.into(), vec![32, 32], 4);
+        assert!(audit_shape(&bad).errors().any(|d| d.code == "E006"));
+        let zero_iters = PlanShape::with_defaults(StencilKind::Diffusion2D.into(), vec![64, 64], 0);
+        assert!(audit_shape(&zero_iters).errors().any(|d| d.code == "E006"));
+    }
+
+    #[test]
+    fn dead_tap_and_zero_workers_flagged() {
+        let mut p = plan(StencilKind::Diffusion2D, vec![64, 64], 4);
+        p.coeffs[1] = 0.0;
+        let report = audit_plan(&p);
+        assert!(report.diagnostics.iter().any(|d| d.code == "W202"), "{report}");
+        let shape = PlanShape {
+            workers: Some(0),
+            ..PlanShape::with_defaults(StencilKind::Diffusion2D.into(), vec![64, 64], 4)
+        };
+        assert!(audit_shape(&shape).errors().any(|d| d.code == "E009"));
+        let idle = PlanShape {
+            workers: Some(64),
+            ..PlanShape::with_defaults(StencilKind::Diffusion2D.into(), vec![64, 64], 4)
+        };
+        let report = audit_shape(&idle);
+        assert!(report.diagnostics.iter().any(|d| d.code == "W102"), "{report}");
+    }
+
+    #[test]
+    fn guarded_skippable_plan_gets_i301() {
+        let p = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .iterations(4)
+            .guard_nonfinite(true)
+            .build()
+            .unwrap();
+        let report = audit_plan(&p);
+        assert!(report.diagnostics.iter().any(|d| d.code == "I301"), "{report}");
+    }
+
+    #[test]
+    fn report_serializes_and_displays() {
+        let mut p = plan(StencilKind::Diffusion2D, vec![64, 64], 4);
+        p.coeffs[0] = f32::INFINITY;
+        let report = audit_plan(&p);
+        let json = report.to_json().to_string();
+        assert!(json.contains("\"severity\":\"error\""), "{json}");
+        assert!(json.contains("E005"), "{json}");
+        let text = report.to_string();
+        assert!(text.contains("error") && text.contains("E005"), "{text}");
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("errors").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn programs_audit_clean_and_radius_mismatch_detected() {
+        for kind in StencilKind::ALL_EXT {
+            let report = audit_program(kind.def());
+            assert!(!report.has_errors(), "{kind}: {report}");
+        }
+        // A mutated radius (the pub field) is exactly what E008 exists for.
+        let mut broken = StencilKind::Diffusion2D.def().clone();
+        broken.radius = 3;
+        let report = audit_program(&broken);
+        assert!(report.errors().any(|d| d.code == "E008"), "{report}");
+    }
+}

@@ -286,6 +286,13 @@ impl PlanBuilder {
             ensure!(w > 0, "workers must be positive");
         }
         ensure!(!self.step_sizes.is_empty(), "step_sizes must not be empty");
+        // A zero step would satisfy the greedy scheduler's predicate
+        // without consuming iterations — an infinite loop, not an error.
+        ensure!(
+            self.step_sizes.iter().all(|&s| s > 0),
+            "step sizes must be positive, got {:?}",
+            self.step_sizes
+        );
         let mut sizes = self.step_sizes.clone();
         sizes.sort_unstable();
         sizes.reverse();
@@ -402,6 +409,19 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("cannot schedule"), "{err}");
+    }
+
+    #[test]
+    fn zero_step_size_rejected_at_build() {
+        // Regression: a zero step satisfies the greedy predicate without
+        // consuming iterations — build() must reject it, not loop forever.
+        let err = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .iterations(8)
+            .step_sizes(vec![1, 0])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("positive"), "{err}");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use std::fmt;
 
+use crate::analysis::AuditReport;
 use crate::runtime::vec::MAX_PAR_VEC;
 
 /// Everything the engine API can fail with.
@@ -48,6 +49,11 @@ pub enum EngineError {
     /// `tile` is the block index within the chunk, `iter` the absolute
     /// iteration count the poisoned tile would have completed.
     NonFinite { tile: usize, iter: usize },
+    /// The static auditor ([`crate::analysis`]) found `Error`-level
+    /// diagnostics at session open or program registration: the full
+    /// report is attached so callers can show every finding (code,
+    /// span, message) instead of one opaque string.
+    Rejected(AuditReport),
 }
 
 impl fmt::Display for EngineError {
@@ -80,6 +86,16 @@ impl fmt::Display for EngineError {
                 "non-finite value (NaN/Inf) in tile {tile} at iteration {iter} \
                  (numeric circuit breaker)"
             ),
+            EngineError::Rejected(report) => {
+                let codes: Vec<&str> = report.errors().map(|d| d.code).collect();
+                write!(
+                    f,
+                    "plan rejected by static audit of {}: {} error(s) [{}]",
+                    report.subject,
+                    codes.len(),
+                    codes.join(", ")
+                )
+            }
         }
     }
 }

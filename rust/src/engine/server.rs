@@ -370,6 +370,16 @@ struct ClientShared {
     bufs: [RwLock<Grid>; 2],
     /// Power grid staged per active job (moved in, not copied).
     power: RwLock<Option<Grid>>,
+    /// Whether the plan's (program, coefficients) pair is provably
+    /// non-divergent ([`crate::analysis::Stability::guard_skippable`]),
+    /// computed once at open. Only meaningful when `plan.guard_nonfinite`
+    /// is set.
+    guard_skippable: bool,
+    /// Set per job at staging time when `guard_skippable` holds and the
+    /// staged input is all-finite with magnitude headroom: the per-tile
+    /// circuit-breaker scan is then provably redundant and skipped.
+    /// One job is active per client at a time, so a plain flag suffices.
+    guard_skip: AtomicBool,
 }
 
 impl ClientShared {
@@ -617,9 +627,32 @@ impl EngineServer {
 
     /// Open a client session whose submission queue holds up to
     /// `queue_depth` waiting jobs; `submit` blocks beyond that
-    /// (backpressure). Validates the plan against its backend and
-    /// pre-builds tile geometry for every chunk depth the plan schedules.
+    /// (backpressure). Runs the static auditor over the plan first —
+    /// `Error`-level diagnostics reject the open with
+    /// [`EngineError::Rejected`] carrying the full report — then
+    /// validates the backend and pre-builds tile geometry for every
+    /// chunk depth the plan schedules.
     pub fn open_with_queue(
+        &self,
+        plan: Plan,
+        queue_depth: usize,
+    ) -> Result<ClientSession, EngineError> {
+        let report = crate::analysis::audit_plan(&plan);
+        if report.has_errors() {
+            return Err(EngineError::Rejected(report));
+        }
+        self.open_unaudited(plan, queue_depth)
+    }
+
+    /// [`EngineServer::open`] minus the static audit — for benchmarks
+    /// measuring the auditor's overhead and for callers re-opening a
+    /// plan that already passed (e.g. a clone of a live session's plan).
+    /// The structural backend/geometry validation still runs.
+    pub fn open_trusted(&self, plan: Plan) -> Result<ClientSession, EngineError> {
+        self.open_unaudited(plan, DEFAULT_QUEUE_DEPTH)
+    }
+
+    fn open_unaudited(
         &self,
         plan: Plan,
         queue_depth: usize,
@@ -628,12 +661,16 @@ impl EngineServer {
         let exec = plan.backend.executor();
         let cells: usize = plan.grid_dims.iter().product();
         let zero = Grid::from_vec(&plan.grid_dims, vec![0.0; cells]);
+        let guard_skippable = plan.guard_nonfinite
+            && crate::analysis::stability(plan.stencil.def(), &plan.coeffs).guard_skippable();
         let shared = Arc::new(ClientShared {
             plan,
             exec,
             specs: RwLock::new(Vec::new()),
             bufs: [RwLock::new(zero.clone()), RwLock::new(zero)],
             power: RwLock::new(None),
+            guard_skippable,
+            guard_skip: AtomicBool::new(false),
         });
         for &steps in &shared.plan.chunks {
             shared.ensure_spec(steps)?;
@@ -1177,6 +1214,14 @@ fn settle_client(st: &mut SchedState, inner: &ServerInner, id: usize) {
                 .expect("grid pair poisoned")
                 .data_mut()
                 .copy_from_slice(g.data());
+            // For a statically non-divergent plan, one input scan here
+            // makes the per-tile circuit-breaker scan provably redundant:
+            // finite inputs with headroom stay finite under gain ≤ 1.
+            let skip = c.shared.guard_skippable
+                && g.data()
+                    .iter()
+                    .all(|v| v.is_finite() && v.abs() <= crate::analysis::GUARD_HEADROOM);
+            c.shared.guard_skip.store(skip, Ordering::Relaxed);
         }
         *c.shared.power.write().expect("power slot poisoned") =
             job.power.lock().expect("job power poisoned").take();
@@ -1407,7 +1452,11 @@ fn run_task(
         // The numeric circuit breaker: an opt-in scan over the tile
         // result, so silent NaN/Inf poison becomes a typed, retryable
         // failure at the tile where it first appeared.
-        Ok(()) if shared.plan.guard_nonfinite && out.iter().any(|v| !v.is_finite()) => {
+        Ok(())
+            if shared.plan.guard_nonfinite
+                && !shared.guard_skip.load(Ordering::Relaxed)
+                && out.iter().any(|v| !v.is_finite()) =>
+        {
             inner.release_buf(out);
             Err(TileFailure::NonFinite {
                 tile: block_i,
@@ -1667,6 +1716,53 @@ mod tests {
         let out = client.submit(g).unwrap().wait().unwrap();
         assert!(out.grid.data().iter().any(|v| v.is_nan()), "poison vanished");
         assert_eq!(client.stats().nonfinite_trips, 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn open_rejects_error_level_audit_findings() {
+        let mut bad = plan(&[64, 64], 4);
+        bad.coeffs[0] = f32::NAN;
+        let mut server = EngineServer::start(1);
+        match server.open(bad) {
+            Err(EngineError::Rejected(report)) => {
+                assert!(report.has_errors());
+                assert!(report.errors().any(|d| d.code == "E005"), "{report}");
+            }
+            other => panic!("NaN-coefficient open resolved to {other:?}"),
+        }
+        // The same shape passes through open_trusted (structural checks
+        // only) — the bench hook must not re-audit.
+        let trusted = server.open_trusted(plan(&[64, 64], 4)).unwrap();
+        drop(trusted);
+        server.shutdown();
+    }
+
+    #[test]
+    fn provably_stable_guarded_plan_skips_scan_but_stays_correct() {
+        // Diffusion2D's default coefficients sum to 1: the auditor proves
+        // the guard can never trip, the staging scan arms the skip, and
+        // the result is bit-identical to the unguarded run.
+        let guarded = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![64, 64])
+            .iterations(8)
+            .guard_nonfinite(true)
+            .build()
+            .unwrap();
+        let mut server = EngineServer::start(2);
+        let client = server.open(guarded).unwrap();
+        assert!(client.shared.guard_skippable);
+        let mut g = Grid::new2d(64, 64);
+        g.fill_random(11, 0.0, 1.0);
+        let out = client.submit(g.clone()).unwrap().wait().unwrap();
+        assert!(client.shared.guard_skip.load(Ordering::Relaxed));
+        assert_eq!(client.stats().nonfinite_trips, 0);
+        server.shutdown();
+
+        let mut server = EngineServer::start(2);
+        let client = server.open(plan(&[64, 64], 8)).unwrap();
+        let base = client.submit(g).unwrap().wait().unwrap();
+        assert_eq!(out.grid.data(), base.grid.data(), "skip changed numerics");
         server.shutdown();
     }
 

@@ -77,6 +77,10 @@ impl WireClient {
         let resp = Response::from_json(&read_frame(&mut self.stream)?)?;
         match resp {
             Response::Error { kind, message } => Err(WireError::Server { kind, message }),
+            Response::Rejected { message, diagnostics } => Err(WireError::Rejected {
+                message,
+                report: diagnostics.to_string(),
+            }),
             other => Ok(other),
         }
     }

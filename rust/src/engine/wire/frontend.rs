@@ -39,7 +39,7 @@ use crate::util::json::Json;
 
 use super::super::chaos::{ChaosCtx, ChaosPlan, FaultKind};
 use super::super::server::{CheckpointSink, QUEUE_WAIT_BUCKETS};
-use super::super::{ClientSession, EngineError, EngineServer, JobHandle, Workload};
+use super::super::{Backend, ClientSession, EngineError, EngineServer, JobHandle, Workload};
 use super::checkpoint::Checkpoint;
 use super::protocol::{
     encode_frame, ErrorKind, GridPayload, PlanSpec, Request, Response, WireError,
@@ -652,10 +652,23 @@ fn handle_open(
     let plan = match spec.build() {
         Ok(p) => p,
         Err(e) => {
+            // Prefer the auditor's structured diagnostics over the
+            // builder's single message: a spec the builder refuses
+            // (halo-swallowed tile, unschedulable iterations, ...) comes
+            // back as a typed report the client can render field by field.
+            if let Some(report) = audit_spec(spec) {
+                return (
+                    Response::Rejected {
+                        message: EngineError::Rejected(report.clone()).to_string(),
+                        diagnostics: report.to_json(),
+                    },
+                    None,
+                );
+            }
             return (
                 Response::Error { kind: ErrorKind::Plan, message: e.to_string() },
                 None,
-            )
+            );
         }
     };
     // The fully-resolved spec (defaults filled in by the builder) is what
@@ -945,8 +958,41 @@ fn shutting_error() -> Response {
     }
 }
 
+/// Best-effort audit of a spec the builder refused: resolve the stencil
+/// and backend if possible (otherwise there is nothing to audit), fill
+/// the builder's defaults, and return the report iff it carries the
+/// Error-level findings that explain the refusal.
+fn audit_spec(spec: &PlanSpec) -> Option<crate::analysis::AuditReport> {
+    let id = StencilRegistry::lookup(&spec.stencil)?;
+    let backend = Backend::parse(&spec.backend).ok()?;
+    let mut shape =
+        crate::analysis::PlanShape::with_defaults(id, spec.grid_dims.clone(), spec.iterations);
+    shape.backend = backend;
+    if let Some(t) = &spec.tile {
+        shape.tile = t.clone();
+    }
+    if let Some(c) = &spec.coeffs {
+        shape.coeffs = c.clone();
+    }
+    if let Some(s) = &spec.step_sizes {
+        shape.step_sizes = s.clone();
+    }
+    shape.workers = spec.workers;
+    shape.guard_nonfinite = spec.guard_nonfinite.unwrap_or(false);
+    let report = crate::analysis::audit_shape(&shape);
+    report.has_errors().then_some(report)
+}
+
 fn engine_error(e: &EngineError) -> Response {
     let kind = match e {
+        // A static-audit rejection carries its full report so the client
+        // sees every diagnostic, not one flattened string.
+        EngineError::Rejected(report) => {
+            return Response::Rejected {
+                message: e.to_string(),
+                diagnostics: report.to_json(),
+            };
+        }
         EngineError::Shutdown => ErrorKind::Shutdown,
         EngineError::DeadlineExceeded => ErrorKind::DeadlineExceeded,
         _ => ErrorKind::Engine,

@@ -49,6 +49,10 @@ pub enum WireError {
     BadMessage(String),
     /// The server answered with a typed protocol error.
     Server { kind: ErrorKind, message: String },
+    /// An `open` was rejected by the server-side static auditor.
+    /// `report` is the serialized [`crate::analysis::AuditReport`] JSON
+    /// so clients can render every diagnostic (code, span, message).
+    Rejected { message: String, report: String },
 }
 
 impl fmt::Display for WireError {
@@ -66,6 +70,9 @@ impl fmt::Display for WireError {
             WireError::BadMessage(msg) => write!(f, "bad protocol message: {msg}"),
             WireError::Server { kind, message } => {
                 write!(f, "server error [{}]: {message}", kind.code())
+            }
+            WireError::Rejected { message, .. } => {
+                write!(f, "open rejected by static audit: {message}")
             }
         }
     }
@@ -600,6 +607,11 @@ pub enum Response {
     /// Liveness + health snapshot: server uptime, pool size, journal-level
     /// job counts and whether chaos injection is armed.
     Pong { uptime_ms: u64, workers: u64, jobs_queued: u64, jobs_active: u64, chaos: bool },
+    /// An `open` whose plan failed the server-side static audit: the
+    /// message summarizes, `diagnostics` is the full serialized
+    /// [`crate::analysis::AuditReport`] (subject, counts, per-diagnostic
+    /// code/name/severity/span/message).
+    Rejected { message: String, diagnostics: Json },
     Error { kind: ErrorKind, message: String },
 }
 
@@ -646,6 +658,11 @@ impl Response {
                     ("chaos", Json::from(*chaos)),
                 ])
             }
+            Response::Rejected { message, diagnostics } => Json::obj(vec![
+                ("type", Json::from("rejected")),
+                ("message", Json::from(message.clone())),
+                ("diagnostics", diagnostics.clone()),
+            ]),
             Response::Error { kind, message } => Json::obj(vec![
                 ("type", Json::from("error")),
                 ("kind", Json::from(kind.code())),
@@ -687,6 +704,12 @@ impl Response {
                 jobs_queued: opt_u64(v, "jobs_queued")?.unwrap_or(0),
                 jobs_active: opt_u64(v, "jobs_active")?.unwrap_or(0),
                 chaos: v.get("chaos").and_then(Json::as_bool).unwrap_or(false),
+            }),
+            // Tolerant decode: the diagnostics payload defaults to Null
+            // so a summary-only rejection still parses.
+            "rejected" => Ok(Response::Rejected {
+                message: req_str(v, "message")?.to_string(),
+                diagnostics: v.get("diagnostics").cloned().unwrap_or(Json::Null),
             }),
             "error" => {
                 let code = req_str(v, "kind")?;

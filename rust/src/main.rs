@@ -18,6 +18,8 @@
 //! runtime-defined stencil programs before anything else runs, so
 //! `--stencil <name>` resolves user programs exactly like built-ins.
 
+#![forbid(unsafe_code)]
+
 use std::path::Path;
 use std::process::ExitCode;
 use std::time::Instant;
@@ -63,6 +65,7 @@ fn dispatch(sub: &str, args: &Args) -> anyhow::Result<ExitCode> {
         "serve" => cmd_serve(args),
         "client" => cmd_client(args),
         "verify" => cmd_verify(args),
+        "analyze" => cmd_analyze(args),
         "stencil" => cmd_stencil(args),
         "dse" => cmd_dse(args),
         "simulate" => cmd_simulate(args),
@@ -138,6 +141,13 @@ USAGE: fstencil <subcommand> [options]
             M jobs each, quota-aware closed loop; --check verifies the
             last completed job per session against the scalar oracle
   verify    [--backend scalar|vec|stream|pjrt|auto] [--par-vec V]
+  analyze   [--stencil <name> | --all] [--dims H,W[,D]] [--iters N]
+            [--tile a,b] [--step-sizes s1,s2,..] [--backend scalar|vec|stream]
+            [--par-vec V] [--workers W] [--coeffs c1,c2,..]
+            [--guard-nonfinite] [--json]
+            static plan auditor (offline linter): dataflow cone, blocking
+            feasibility, numeric stability, FPGA resource sanity; prints
+            every diagnostic and exits nonzero on any Error-level finding
   stencil   list                      registered programs + characteristics
             show <name>               one program's tap table
   dse       --stencil <name> --device <sv|arria10> [--iters N]
@@ -169,6 +179,78 @@ fn parse_stencil(args: &Args) -> anyhow::Result<StencilId> {
              with --stencil-file)"
         )
     })
+}
+
+/// `analyze`: the static auditor as an offline linter. Audits the named
+/// stencil (or, with --all, every registered program — including anything
+/// --stencil-file just loaded) under the same plan flags `run` takes,
+/// prints every diagnostic and exits nonzero when any is Error-level.
+/// The CI analysis gate runs `analyze --all --json` over stencils/*.json.
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    use fstencil::analysis::{audit_shape, PlanShape};
+    use fstencil::util::json::Json;
+
+    let ids: Vec<StencilId> =
+        if args.flag("all") { StencilRegistry::all() } else { vec![parse_stencil(args)?] };
+    let iters = args.opt_usize("iters").unwrap_or(16);
+    let backend = {
+        let mut b = Backend::parse(args.opt_or("backend", "scalar"))?;
+        if let Some(pv) = args.opt_usize("par-vec") {
+            b = b.with_par_vec(pv);
+            b.validate()?;
+        }
+        b
+    };
+    let mut reports = Vec::new();
+    for id in ids {
+        // PlanShape, not PlanBuilder: the auditor must still produce its
+        // diagnostics for shapes the builder would refuse outright.
+        let mut shape = PlanShape::with_defaults(id, default_dims(args, id), iters);
+        shape.backend = backend;
+        if let Some(tile) = args.opt_usize_list("tile") {
+            shape.tile = tile;
+        }
+        if let Some(steps) = args.opt_usize_list("step-sizes") {
+            shape.step_sizes = steps;
+        }
+        if let Some(w) = args.opt_usize("workers") {
+            shape.workers = Some(w);
+        }
+        if let Some(cs) = args.opt("coeffs") {
+            shape.coeffs = cs
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<f32>()
+                        .map_err(|e| anyhow::anyhow!("bad coefficient {t:?}: {e}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+        if args.flag("guard-nonfinite") {
+            shape.guard_nonfinite = true;
+        }
+        reports.push(audit_shape(&shape));
+    }
+    let failed = reports.iter().filter(|r| r.has_errors()).count();
+    if args.flag("json") {
+        println!("{}", Json::Arr(reports.iter().map(|r| r.to_json()).collect()));
+    } else {
+        for r in &reports {
+            print!("{r}");
+        }
+        println!(
+            "{} audit(s): {} with errors, {} clean",
+            reports.len(),
+            failed,
+            reports.len() - failed
+        );
+    }
+    anyhow::ensure!(
+        failed == 0,
+        "{failed} of {} audit(s) found Error-level diagnostics",
+        reports.len()
+    );
+    Ok(())
 }
 
 /// `stencil list` / `stencil show <name>`: the registry as a CLI surface.
@@ -243,6 +325,11 @@ fn cmd_stencil(args: &Args) -> anyhow::Result<()> {
                     Term::CoeffProduct { a_idx, b_idx } => {
                         ("coeff_product", format!("k[{a_idx}]*k[{b_idx}]"), "-".to_string())
                     }
+                    Term::TapSum { offset, group } => (
+                        "tap_sum",
+                        format!("{offset:?}"),
+                        format!("{:?}", p.tap_group(*group)),
+                    ),
                 };
                 t.row(vec![i.to_string(), kind.to_string(), off, coeff]);
             }

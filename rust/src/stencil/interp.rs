@@ -90,6 +90,13 @@ where
                 k: k[tap.coeff_idx],
                 s: row(tap.offset[0], tap.offset[1], tap.offset[2]),
             },
+            // The group's coefficient sum is resolved once per row (same
+            // accumulation order as eval_cell), so the per-cell body is a
+            // plain tap — bit-identical to the hand-deduplicated form.
+            Term::TapSum { offset, group } => RowTap::Tap {
+                k: prog.summed_coeff(group, k),
+                s: row(offset[0], offset[1], offset[2]),
+            },
             Term::AxisPair { a, b, coeff_idx } => RowTap::Pair {
                 k: k[coeff_idx],
                 a: row(a[0], a[1], a[2]),

@@ -80,6 +80,14 @@ pub enum Term {
     /// `k[a_idx] * k[b_idx]` — a pure-coefficient constant term
     /// (Hotspot 3D's `ca*amb`).
     CoeffProduct { a_idx: usize, b_idx: usize },
+    /// `(k[g_0] + k[g_1] + ...) * in[offset]` — the canonical merged form
+    /// of duplicate [`Term::Tap`]s at one offset. Produced only by
+    /// [`ProgramBuilder::build`] (there is no builder method or JSON term
+    /// op for it); the coefficient-index list lives in the owning
+    /// program's group table ([`StencilProgram::tap_group`]). The
+    /// coefficient sum is loop-invariant, so the per-cell cost is one
+    /// multiply — identical to the hand-deduplicated single tap.
+    TapSum { offset: [isize; 3], group: u32 },
 }
 
 impl Term {
@@ -89,7 +97,7 @@ impl Term {
     /// includes but the DSP mapper excludes.
     fn op_counts(&self) -> (usize, usize, usize, bool) {
         match self {
-            Term::Tap(_) => (1, 0, 0, true),
+            Term::Tap(_) | Term::TapSum { .. } => (1, 0, 0, true),
             Term::AxisPair { .. } => (1, 2, 1, true),
             Term::Power => (0, 0, 0, false),
             Term::PowerScaled { .. } => (1, 0, 0, true),
@@ -106,6 +114,7 @@ impl Term {
     fn offsets(&self) -> Vec<[isize; 3]> {
         match self {
             Term::Tap(t) => vec![t.offset],
+            Term::TapSum { offset, .. } => vec![*offset],
             Term::AxisPair { a, b, .. } => vec![*a, *b],
             _ => Vec::new(),
         }
@@ -118,7 +127,9 @@ impl Term {
             Term::AxisPair { coeff_idx, .. } | Term::PowerScaled { coeff_idx } => Some(*coeff_idx),
             Term::AmbientDrift { amb_idx, coeff_idx } => Some(*amb_idx.max(coeff_idx)),
             Term::CoeffProduct { a_idx, b_idx } => Some(*a_idx.max(b_idx)),
-            Term::Power => None,
+            // group members are resolved through the owning program's
+            // group table (see ProgramBuilder::build)
+            Term::Power | Term::TapSum { .. } => None,
         }
     }
 }
@@ -143,6 +154,9 @@ pub struct StencilProgram {
     name: &'static str,
     ndim: usize,
     terms: Vec<Term>,
+    /// Coefficient-index lists backing [`Term::TapSum`] terms, indexed by
+    /// the term's `group`. Empty for programs without duplicate taps.
+    tap_groups: Vec<Vec<usize>>,
     post: PostOp,
     /// `Some(kind)` when the executors have a hand-written fast-path
     /// kernel for this program (the five built-ins); `None` runs the
@@ -198,6 +212,25 @@ impl StencilProgram {
 
     pub fn terms(&self) -> &[Term] {
         &self.terms
+    }
+
+    /// Coefficient indices merged into tap-sum group `group`, in original
+    /// term order (see [`Term::TapSum`]).
+    pub fn tap_group(&self, group: u32) -> &[usize] {
+        &self.tap_groups[group as usize]
+    }
+
+    /// Sum of a tap-sum group's coefficients, accumulated left-to-right in
+    /// original term order (the accumulation order is part of the
+    /// numerics). All backends resolve a [`Term::TapSum`] through this.
+    #[inline]
+    pub fn summed_coeff(&self, group: u32, k: &[f32]) -> f32 {
+        let g = &self.tap_groups[group as usize];
+        let mut ks = k[g[0]];
+        for &i in &g[1..] {
+            ks += k[i];
+        }
+        ks
     }
 
     pub fn post(&self) -> PostOp {
@@ -260,6 +293,9 @@ impl StencilProgram {
                 Term::Tap(tap) => {
                     k[tap.coeff_idx] * read(tap.offset[0], tap.offset[1], tap.offset[2])
                 }
+                Term::TapSum { offset, group } => {
+                    self.summed_coeff(group, k) * read(offset[0], offset[1], offset[2])
+                }
                 Term::AxisPair { a, b, coeff_idx } => {
                     (read(a[0], a[1], a[2]) + read(b[0], b[1], b[2]) - 2.0 * c) * k[coeff_idx]
                 }
@@ -285,38 +321,49 @@ impl StencilProgram {
             let ds: Vec<Json> = o[3 - self.ndim..].iter().map(|&d| Json::Num(d as f64)).collect();
             Json::Arr(ds)
         };
-        let terms: Vec<Json> = self
-            .terms
-            .iter()
-            .map(|t| match t {
-                Term::Tap(tap) => Json::obj(vec![
+        let mut terms: Vec<Json> = Vec::with_capacity(self.terms.len());
+        for t in &self.terms {
+            match t {
+                Term::Tap(tap) => terms.push(Json::obj(vec![
                     ("op", "tap".into()),
                     ("offset", off(&tap.offset)),
                     ("coeff", tap.coeff_idx.into()),
-                ]),
-                Term::AxisPair { a, b, coeff_idx } => Json::obj(vec![
+                ])),
+                // The JSON schema stays frozen: a TapSum serializes as the
+                // consecutive plain taps the builder merged, and from_json
+                // re-canonicalizes them into the identical program.
+                Term::TapSum { offset, group } => {
+                    for &ci in self.tap_group(*group) {
+                        terms.push(Json::obj(vec![
+                            ("op", "tap".into()),
+                            ("offset", off(offset)),
+                            ("coeff", ci.into()),
+                        ]));
+                    }
+                }
+                Term::AxisPair { a, b, coeff_idx } => terms.push(Json::obj(vec![
                     ("op", "axis_pair".into()),
                     ("a", off(a)),
                     ("b", off(b)),
                     ("coeff", (*coeff_idx).into()),
-                ]),
-                Term::Power => Json::obj(vec![("op", "power".into())]),
-                Term::PowerScaled { coeff_idx } => Json::obj(vec![
+                ])),
+                Term::Power => terms.push(Json::obj(vec![("op", "power".into())])),
+                Term::PowerScaled { coeff_idx } => terms.push(Json::obj(vec![
                     ("op", "power_scaled".into()),
                     ("coeff", (*coeff_idx).into()),
-                ]),
-                Term::AmbientDrift { amb_idx, coeff_idx } => Json::obj(vec![
+                ])),
+                Term::AmbientDrift { amb_idx, coeff_idx } => terms.push(Json::obj(vec![
                     ("op", "ambient_drift".into()),
                     ("amb", (*amb_idx).into()),
                     ("coeff", (*coeff_idx).into()),
-                ]),
-                Term::CoeffProduct { a_idx, b_idx } => Json::obj(vec![
+                ])),
+                Term::CoeffProduct { a_idx, b_idx } => terms.push(Json::obj(vec![
                     ("op", "coeff_product".into()),
                     ("a", (*a_idx).into()),
                     ("b", (*b_idx).into()),
-                ]),
-            })
-            .collect();
+                ])),
+            }
+        }
         let post = match self.post {
             PostOp::Identity => Json::obj(vec![("op", "identity".into())]),
             PostOp::ScaledResidual { scale_idx } => Json::obj(vec![
@@ -549,10 +596,47 @@ impl ProgramBuilder {
         ensure!(radius >= 1, "stencil program {name}: needs at least one non-center tap");
         ensure!(radius <= 8, "stencil program {name}: radius {radius} > 8 unsupported");
 
-        // Derive coefficient count.
+        // Canonicalize duplicate plain taps at one offset into a single
+        // merged-coefficient TapSum: the first occurrence keeps its
+        // position (and therefore its accumulation slot), later duplicates
+        // are removed, and group numbering follows scan order — the
+        // canonical form is deterministic, so re-building the same term
+        // list (e.g. after a JSON round trip) reproduces it exactly.
+        let mut terms = self.terms;
+        let mut tap_groups: Vec<Vec<usize>> = Vec::new();
+        let mut i = 0;
+        while i < terms.len() {
+            if let Term::Tap(tap) = terms[i] {
+                let mut group = vec![tap.coeff_idx];
+                let mut j = i + 1;
+                while j < terms.len() {
+                    match terms[j] {
+                        Term::Tap(t2) if t2.offset == tap.offset => {
+                            group.push(t2.coeff_idx);
+                            terms.remove(j);
+                        }
+                        _ => j += 1,
+                    }
+                }
+                if group.len() > 1 {
+                    terms[i] =
+                        Term::TapSum { offset: tap.offset, group: tap_groups.len() as u32 };
+                    tap_groups.push(group);
+                }
+            }
+            i += 1;
+        }
+
+        // Derive coefficient count (tap-sum group members resolve through
+        // the group table, not Term::max_coeff_idx).
         let mut max_idx: Option<usize> = None;
-        for t in &self.terms {
+        for t in &terms {
             max_idx = max_idx.max(t.max_coeff_idx());
+            if let Term::TapSum { group, .. } = t {
+                for &ci in &tap_groups[*group as usize] {
+                    max_idx = max_idx.max(Some(ci));
+                }
+            }
         }
         if let PostOp::ScaledResidual { scale_idx } = self.post {
             max_idx = max_idx.max(Some(scale_idx));
@@ -566,7 +650,7 @@ impl ProgramBuilder {
             self.default_coeffs.len()
         );
 
-        let has_power = self.terms.iter().any(Term::reads_power);
+        let has_power = terms.iter().any(Term::reads_power);
 
         // Derive the op mix exactly as the hand-maintained Table-2
         // constants counted it: per-term mults/adds/strength-reduced ops,
@@ -576,7 +660,7 @@ impl ProgramBuilder {
         // accumulator chain, which the toolchain keeps in logic — not
         // fusable).
         let (mut mults, mut adds, mut reduced, mut fusable) = (0usize, 0usize, 0usize, 0usize);
-        for (i, t) in self.terms.iter().enumerate() {
+        for (i, t) in terms.iter().enumerate() {
             let (m, a, r, is_mult) = t.op_counts();
             mults += m;
             adds += a;
@@ -602,7 +686,8 @@ impl ProgramBuilder {
         Ok(StencilProgram {
             name: leak_str(name),
             ndim: self.ndim,
-            terms: self.terms,
+            terms,
+            tap_groups,
             post: self.post,
             specialized: self.specialized,
             radius,
@@ -694,6 +779,15 @@ impl StencilRegistry {
     /// program under the same name is idempotent (returns the existing
     /// id); a *different* program under an existing name is an error.
     pub fn register(program: StencilProgram) -> Result<StencilId> {
+        // Gatekeep: a program with Error-level audit findings (radius
+        // mismatch, non-finite default coefficients, ...) never enters
+        // the registry, so every later consumer can trust what it gets.
+        let report = crate::analysis::audit_program(&program);
+        ensure!(
+            !report.has_errors(),
+            "stencil program {:?} rejected by static audit:\n{report}",
+            program.name()
+        );
         let reg = registry();
         {
             let progs = reg.read().expect("stencil registry poisoned");
@@ -949,6 +1043,56 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("non-center"), "{err}");
+    }
+
+    /// Satellite fix: duplicate taps at one offset canonicalize to the
+    /// merged-coefficient form, so derived characteristics and the
+    /// interpreter agree with the hand-deduplicated program.
+    #[test]
+    fn duplicate_taps_canonicalize_to_merged_form() {
+        let dup = StencilProgram::builder("prog-test-dup", 2)
+            .tap(&[0, 0], 0)
+            .tap(&[0, 1], 1)
+            .tap(&[1, 0], 3)
+            .tap(&[0, 1], 2) // duplicate offset: merges into term 1
+            .default_coeffs(vec![0.4, 0.2, 0.1, 0.3])
+            .build()
+            .unwrap();
+        assert_eq!(dup.terms().len(), 3, "duplicate tap must be merged away");
+        match dup.terms()[1] {
+            Term::TapSum { offset, group } => {
+                assert_eq!(offset, [0, 0, 1]);
+                assert_eq!(dup.tap_group(group), &[1, 2]);
+            }
+            ref t => panic!("expected TapSum at term 1, got {t:?}"),
+        }
+        // Characteristics equal a hand-deduplicated twin's (one mult for
+        // the merged tap; the coefficient sum is loop-invariant).
+        let dedup = StencilProgram::builder("prog-test-dedup", 2)
+            .tap(&[0, 0], 0)
+            .tap(&[0, 1], 1)
+            .tap(&[1, 0], 2)
+            .default_coeffs(vec![0.4, 0.3, 0.3])
+            .build()
+            .unwrap();
+        assert_eq!(dup.flop_pcu, dedup.flop_pcu, "flop_pcu must match deduped form");
+        assert_eq!(dup.ops, dedup.ops, "OpMix must match deduped form");
+        assert_eq!(dup.coeff_len, 4, "all referenced coefficients stay live");
+        // The interpreter agrees with the deduped form evaluated at the
+        // summed coefficient (same accumulation order: k[1] + k[2]).
+        let read = |_dz: isize, dy: isize, dx: isize| 1.0 + dy as f32 * 0.5 + dx as f32 * 0.25;
+        let got = dup.eval_cell(read, 0.0, dup.default_coeffs);
+        let want = dedup.eval_cell(read, 0.0, &[0.4, 0.2f32 + 0.1f32, 0.3]);
+        assert_eq!(got.to_bits(), want.to_bits());
+        // JSON round trip re-canonicalizes to the identical program.
+        let j = dup.to_json().to_string();
+        let q = StencilProgram::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(q, dup, "TapSum JSON expansion must round-trip");
+        // Re-registration of the same (canonicalized) content stays
+        // idempotent.
+        let a = StencilRegistry::register(dup.clone()).unwrap();
+        let b = StencilRegistry::register(dup).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,0 +1,497 @@
+//! Property harness for the static plan auditor (`fstencil::analysis`).
+//!
+//! Three acceptance properties, each over seeded random programs/plans
+//! drawn with `util::prop` (pinned seed, `FSTENCIL_PROP_SEED` replays):
+//!
+//! 1. **Accepted ⇒ runs clean.** Valid-by-construction random plans the
+//!    auditor passes run to completion on all three host backends with
+//!    bit-identical results — the auditor never rejects a working plan,
+//!    and never waves through one the runtime chokes on.
+//! 2. **Error-rejected ⇒ provably bad.** Every shape the auditor flags
+//!    with an `E`-level diagnostic demonstrably fails downstream: the
+//!    plan builder bails, or (for non-finite coefficients, which the
+//!    builder accepts) the engine's audited open rejects it while an
+//!    unaudited run poisons the output grid with non-finite values.
+//! 3. **Stability audit matches guard behavior.** Pure-linear programs
+//!    with coefficient gain > 1 get `W201 divergent-under-iteration` and
+//!    actually trip `guard_nonfinite` under iteration on large inputs;
+//!    gain ≤ 1 programs get `I301 guard-skippable` and never trip — on
+//!    unit-scale inputs (the staging scan arms the skip) and on
+//!    near-headroom inputs (the scan stays live and finds nothing).
+
+use fstencil::analysis::{audit_plan, audit_shape, stability, PlanShape};
+use fstencil::coordinator::{Plan, PlanBuilder};
+use fstencil::engine::{Backend, EngineError, EngineServer, StencilEngine, Workload};
+use fstencil::stencil::{Grid, StencilId, StencilKind, StencilProgram, StencilRegistry};
+use fstencil::util::prop::{forall, Rng};
+
+fn mk_grid(dims: &[usize], seed: u64, lo: f32, hi: f32) -> Grid {
+    let mut g = match dims {
+        [h, w] => Grid::new2d(*h, *w),
+        [d, h, w] => Grid::new3d(*d, *h, *w),
+        _ => unreachable!("generator draws 2-D or 3-D"),
+    };
+    g.fill_random(seed, lo, hi);
+    g
+}
+
+fn bitwise_equal(a: &Grid, b: &Grid) -> bool {
+    a.data().len() == b.data().len()
+        && a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn has_code(plan: &Plan, code: &str) -> bool {
+    audit_plan(plan).diagnostics.iter().any(|d| d.code == code)
+}
+
+// ------------------------------------------------------------------
+// Property 1: auditor-accepted plans run clean on every backend.
+// ------------------------------------------------------------------
+
+/// Random valid program: taps (including deliberate duplicates, so the
+/// TapSum canonicalization rides the full path), axis pairs, optional
+/// power / ambient-drift / coefficient-product terms.
+fn gen_program(r: &mut Rng, name: &str) -> StencilProgram {
+    let ndim = if r.bool() { 2 } else { 3 };
+    let radius = r.usize_in(1, 2) as isize;
+    let mut max_coeff: Option<usize> = None;
+    let coeff = |r: &mut Rng, max_coeff: &mut Option<usize>| -> usize {
+        let idx = r.usize_in(0, 5);
+        *max_coeff = Some(max_coeff.map_or(idx, |m: usize| m.max(idx)));
+        idx
+    };
+    let offset = |r: &mut Rng| -> Vec<isize> {
+        (0..ndim).map(|_| r.isize_in(-radius, radius)).collect()
+    };
+    let mut b = StencilProgram::builder(name, ndim);
+    // Guaranteed off-center tap so the derived radius is >= 1.
+    let axis = r.usize_in(0, ndim - 1);
+    let sign: isize = if r.bool() { 1 } else { -1 };
+    let mut first = vec![0isize; ndim];
+    first[axis] = sign * radius;
+    b = b.tap(&first, coeff(r, &mut max_coeff));
+    // Sometimes a duplicate of that same tap under a different
+    // coefficient: build() must merge the pair into a TapSum group and
+    // the merged program must still run everywhere.
+    if r.chance(0.3) {
+        b = b.tap(&first, coeff(r, &mut max_coeff));
+    }
+    for _ in 0..r.usize_in(0, 4) {
+        b = match r.usize_in(0, 7) {
+            0..=3 => b.tap(&offset(r), coeff(r, &mut max_coeff)),
+            4..=5 => b.axis_pair(&offset(r), &offset(r), coeff(r, &mut max_coeff)),
+            6 => b.power_scaled(coeff(r, &mut max_coeff)),
+            _ => {
+                let a = coeff(r, &mut max_coeff);
+                let c = coeff(r, &mut max_coeff);
+                if r.bool() {
+                    b.ambient_drift(a, c)
+                } else {
+                    b.coeff_product(a, c)
+                }
+            }
+        };
+    }
+    if r.chance(0.2) {
+        b = b.scaled_residual(coeff(r, &mut max_coeff));
+    }
+    let coeff_len = max_coeff.expect("at least one tap references a coefficient") + 1;
+    let coeffs = r.f32_vec(coeff_len, -0.45, 0.45);
+    b.default_coeffs(coeffs).build().expect("generated program is valid")
+}
+
+#[derive(Debug)]
+struct AcceptedCase {
+    stencil: StencilId,
+    dims: Vec<usize>,
+    tile: Option<Vec<usize>>,
+    iters: usize,
+    max_step: usize,
+    par_vec: usize,
+    guard: bool,
+    seed: u64,
+}
+
+#[test]
+fn prop_accepted_plans_run_clean_on_all_backends() {
+    let mut case_no = 0u64;
+    forall(
+        "auditor-accepted plans complete on scalar/vec/stream, bitwise equal",
+        200,
+        |r: &mut Rng| {
+            case_no += 1;
+            let tag = r.next_u64();
+            let prog = gen_program(r, &format!("audit-ok-{case_no}-{tag:016x}"));
+            let radius = prog.radius;
+            let ndim = prog.ndim();
+            let stencil = StencilRegistry::register(prog).expect("fresh name");
+            let max_step = if radius == 1 { *r.pick(&[1usize, 2, 4]) } else { *r.pick(&[1usize, 2]) };
+            // Scheduler rule: min dim (hence min tile dim) > 2 * step * radius.
+            let mind = 2 * max_step * radius + 1;
+            let dims: Vec<usize> = if ndim == 2 {
+                (0..2).map(|_| r.usize_in(mind, mind + 20)).collect()
+            } else {
+                (0..3).map(|_| r.usize_in(mind, mind + 6)).collect()
+            };
+            let tile = r.chance(0.5).then(|| {
+                dims.iter().map(|&d| r.usize_in(mind.min(d), d)).collect::<Vec<_>>()
+            });
+            AcceptedCase {
+                stencil,
+                dims,
+                tile,
+                iters: r.usize_in(1, 4),
+                max_step,
+                par_vec: r.pow2_in(0, 3),
+                guard: r.bool(),
+                seed: r.next_u64(),
+            }
+        },
+        |case| {
+            let mk_plan = |backend: Backend| {
+                let mut b = PlanBuilder::new(case.stencil)
+                    .grid_dims(case.dims.clone())
+                    .iterations(case.iters)
+                    .step_sizes(vec![case.max_step, 1])
+                    .guard_nonfinite(case.guard)
+                    .backend(backend);
+                if let Some(t) = &case.tile {
+                    b = b.tile(t.clone());
+                }
+                b.build().map_err(|e| format!("plan: {e:#}"))
+            };
+            // The auditor must accept what the runtime accepts: no
+            // Error-level diagnostics on a buildable, runnable plan.
+            let scalar_plan = mk_plan(Backend::Scalar)?;
+            let report = audit_plan(&scalar_plan);
+            if report.has_errors() {
+                return Err(format!("auditor rejected a valid plan:\n{report}"));
+            }
+            let prog = case.stencil.program();
+            let power = prog
+                .has_power
+                .then(|| mk_grid(&case.dims, case.seed ^ 0x5A5A_A5A5, 0.0, 0.5));
+            let input = mk_grid(&case.dims, case.seed, -1.0, 1.0);
+            let mut outs = Vec::new();
+            for backend in [
+                Backend::Scalar,
+                Backend::Vec { par_vec: case.par_vec },
+                Backend::Stream { par_vec: case.par_vec },
+            ] {
+                // Session::spawn routes through the audited open: a
+                // spurious rejection would surface here as an error.
+                let mut session = StencilEngine::new()
+                    .session_with_workers(mk_plan(backend)?, 2)
+                    .map_err(|e| format!("{backend:?}: open refused an accepted plan: {e}"))?;
+                let mut w = Workload::new(input.clone());
+                if let Some(p) = &power {
+                    w = w.power(p.clone());
+                }
+                let out = session
+                    .submit(w)
+                    .wait()
+                    .map_err(|e| format!("{backend:?}: accepted plan failed to run: {e}"))?;
+                outs.push(out.grid);
+            }
+            if !bitwise_equal(&outs[0], &outs[1]) {
+                return Err("vec diverges from scalar (bitwise)".into());
+            }
+            if !bitwise_equal(&outs[0], &outs[2]) {
+                return Err("stream diverges from scalar (bitwise)".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------------
+// Property 2: Error-rejected shapes provably fail downstream.
+// ------------------------------------------------------------------
+
+#[derive(Debug)]
+struct RejectedCase {
+    kind: StencilKind,
+    dims: Vec<usize>,
+    defect: usize,
+    step: usize,
+    iters: usize,
+    seed: u64,
+}
+
+#[test]
+fn prop_error_rejected_shapes_provably_fail() {
+    let server = EngineServer::start(1);
+    forall(
+        "every E-level rejection corresponds to a real downstream failure",
+        200,
+        |r: &mut Rng| {
+            let kind = *r.pick(&StencilKind::ALL_EXT);
+            let dims = if kind.ndim() == 2 { vec![64, 64] } else { vec![24, 24, 24] };
+            RejectedCase {
+                kind,
+                dims,
+                defect: r.usize_in(0, 5),
+                step: r.usize_in(1, 4),
+                iters: r.usize_in(1, 3),
+                seed: r.next_u64(),
+            }
+        },
+        |case| {
+            let def = case.kind.def();
+            let rad = def.radius;
+            let mut shape =
+                PlanShape::with_defaults(case.kind.into(), case.dims.clone(), 8);
+            // Inject one defect; record the diagnostic it must draw.
+            let expect = match case.defect {
+                0 => {
+                    // Halo of the only step swallows the tile.
+                    shape.tile = vec![2 * rad * case.step; case.dims.len()];
+                    shape.step_sizes = vec![case.step];
+                    "E001"
+                }
+                1 => {
+                    // Step granularity gap: a lone 4-step cannot tile
+                    // 1..=3 iterations.
+                    shape.step_sizes = vec![4];
+                    shape.iterations = case.iters;
+                    "E003"
+                }
+                2 => {
+                    // A zero step would never consume iterations.
+                    shape.step_sizes = vec![1, 0];
+                    "E003"
+                }
+                3 => {
+                    // Coefficient count mismatch.
+                    shape.coeffs.push(0.1);
+                    "E004"
+                }
+                4 => {
+                    // Non-finite coefficient: builds fine, runs poison.
+                    shape.coeffs[0] = f32::NAN;
+                    "E005"
+                }
+                _ => {
+                    // Degenerate grid.
+                    shape.grid_dims[case.dims.len() - 1] = 0;
+                    "E006"
+                }
+            };
+            let report = audit_shape(&shape);
+            if !report.errors().any(|d| d.code == expect) {
+                return Err(format!("defect {} missing {expect}:\n{report}", case.defect));
+            }
+            // Now the proof obligation: the same shape must fail for
+            // real, not just in the auditor's opinion.
+            let built = PlanBuilder::new(shape.stencil)
+                .grid_dims(shape.grid_dims.clone())
+                .iterations(shape.iterations)
+                .coeffs(shape.coeffs.clone())
+                .tile(shape.tile.clone())
+                .step_sizes(shape.step_sizes.clone())
+                .build();
+            match built {
+                Err(_) => Ok(()), // the builder independently bails
+                Ok(plan) if expect == "E005" => {
+                    // The builder accepts non-finite coefficients; the
+                    // audited open must reject, and an unaudited run
+                    // must demonstrably poison the grid.
+                    match server.open(plan.clone()) {
+                        Err(EngineError::Rejected(rep))
+                            if rep.errors().any(|d| d.code == "E005") => {}
+                        other => {
+                            return Err(format!("open should reject with E005, got {other:?}"))
+                        }
+                    }
+                    let client = server
+                        .open_trusted(plan)
+                        .map_err(|e| format!("trusted open: {e}"))?;
+                    let mut w = Workload::new(mk_grid(&case.dims, case.seed, 0.0, 1.0));
+                    if def.has_power {
+                        w = w.power(mk_grid(&case.dims, case.seed ^ 7, 0.0, 0.5));
+                    }
+                    let out = client
+                        .submit(w)
+                        .map_err(|e| format!("submit: {e}"))?
+                        .wait()
+                        .map_err(|e| format!("unguarded NaN run should finish: {e}"))?;
+                    if out.grid.data().iter().all(|v| v.is_finite()) {
+                        return Err("NaN coefficients left the grid finite?".into());
+                    }
+                    Ok(())
+                }
+                Ok(_) => Err(format!(
+                    "defect {} ({expect}): builder accepted a shape the auditor \
+                     rejects, and no runtime proof applies",
+                    case.defect
+                )),
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------------------
+// Property 3: the stability audit predicts guard_nonfinite behavior.
+// ------------------------------------------------------------------
+
+#[derive(Debug)]
+struct GainCase {
+    stencil: StencilId,
+    dims: Vec<usize>,
+    divergent: bool,
+    target_gain: f32,
+    seed: u64,
+}
+
+/// Pure-linear star stencil (center + one tap per face, all-positive
+/// coefficients) scaled so the coefficient sum hits `target`.
+fn gen_gain_program(r: &mut Rng, name: &str, ndim: usize, target: f32) -> StencilProgram {
+    let ntaps = 1 + 2 * ndim;
+    let weights = r.f32_vec(ntaps, 0.1, 1.0);
+    let scale = target / weights.iter().sum::<f32>();
+    let coeffs: Vec<f32> = weights.iter().map(|w| w * scale).collect();
+    let mut b = StencilProgram::builder(name, ndim).tap(&vec![0isize; ndim], 0);
+    let mut idx = 1;
+    for axis in 0..ndim {
+        for sign in [-1isize, 1] {
+            let mut o = vec![0isize; ndim];
+            o[axis] = sign;
+            b = b.tap(&o, idx);
+            idx += 1;
+        }
+    }
+    b.default_coeffs(coeffs).build().expect("star program is valid")
+}
+
+#[test]
+fn prop_stability_audit_predicts_guard_trips() {
+    let mut case_no = 0u64;
+    forall(
+        "gain > 1 trips guard_nonfinite under iteration; gain <= 1 never does",
+        48,
+        |r: &mut Rng| {
+            case_no += 1;
+            let tag = r.next_u64();
+            let ndim = if r.bool() { 2 } else { 3 };
+            let divergent = r.bool();
+            // Clean targets sit safely below 1; divergent ones far above
+            // (so overflow lands well inside the iteration budget).
+            let target_gain =
+                if divergent { r.f32_in(1.6, 2.4) } else { r.f32_in(0.80, 0.99) };
+            let prog = gen_gain_program(
+                r,
+                &format!("audit-gain-{case_no}-{tag:016x}"),
+                ndim,
+                target_gain,
+            );
+            let stencil = StencilRegistry::register(prog).expect("fresh name");
+            let dims = if ndim == 2 { vec![20, 20] } else { vec![10, 10, 10] };
+            GainCase { stencil, dims, divergent, target_gain, seed: r.next_u64() }
+        },
+        |case| {
+            let prog = case.stencil.program();
+            let st = stability(prog, prog.default_coeffs);
+            if !st.pure_linear {
+                return Err("star stencil should be pure-linear".into());
+            }
+            if st.divergent() != case.divergent {
+                return Err(format!(
+                    "stability gain {} disagrees with target {} (divergent={})",
+                    st.gain, case.target_gain, case.divergent
+                ));
+            }
+            let mk_plan = |guard: bool| {
+                PlanBuilder::new(case.stencil)
+                    .grid_dims(case.dims.clone())
+                    .iterations(26)
+                    .guard_nonfinite(guard)
+                    .build()
+                    .map_err(|e| format!("plan: {e:#}"))
+            };
+            let guarded = mk_plan(true)?;
+            let report = audit_plan(&guarded);
+            if report.has_errors() {
+                return Err(format!("gain plan should audit clean:\n{report}"));
+            }
+            let w201 = report.diagnostics.iter().any(|d| d.code == "W201");
+            let i301 = report.diagnostics.iter().any(|d| d.code == "I301");
+            if w201 != case.divergent || i301 == case.divergent {
+                return Err(format!(
+                    "audit codes disagree (W201={w201}, I301={i301}, divergent={})",
+                    case.divergent
+                ));
+            }
+            let mut session = StencilEngine::new()
+                .session_with_workers(guarded, 2)
+                .map_err(|e| format!("session: {e}"))?;
+            if case.divergent {
+                // Near-max inputs + gain > 1: the values overflow within
+                // the 26-iteration budget and the guard must trip.
+                let input = mk_grid(&case.dims, case.seed, 4.0e35, 8.0e35);
+                match session.submit(Workload::new(input)).wait() {
+                    Err(EngineError::NonFinite { .. }) => Ok(()),
+                    Ok(_) => Err(format!(
+                        "gain {} run stayed finite — W201 was a false alarm?",
+                        case.target_gain
+                    )),
+                    Err(e) => Err(format!("expected NonFinite, got {e}")),
+                }
+            } else {
+                // Unit-scale input: the staging scan proves the input
+                // finite with headroom, arming the skip. The result must
+                // match an unguarded twin bit-for-bit.
+                let input = mk_grid(&case.dims, case.seed, 0.0, 1.0);
+                let out = session
+                    .submit(Workload::new(input.clone()))
+                    .wait()
+                    .map_err(|e| format!("clean guarded run failed: {e}"))?;
+                if out.grid.data().iter().any(|v| !v.is_finite()) {
+                    return Err("gain <= 1 produced non-finite values".into());
+                }
+                let mut unguarded = StencilEngine::new()
+                    .session_with_workers(mk_plan(false)?, 2)
+                    .map_err(|e| format!("session: {e}"))?;
+                let twin = unguarded
+                    .submit(Workload::new(input))
+                    .wait()
+                    .map_err(|e| format!("unguarded twin failed: {e}"))?;
+                if !bitwise_equal(&out.grid, &twin.grid) {
+                    return Err("guard-skip changed the numerics".into());
+                }
+                // Near-headroom input: |x| exceeds the skip's headroom
+                // bound, so the scan stays live — and must find nothing,
+                // because contraction keeps every value below the input
+                // maximum forever.
+                let big = mk_grid(&case.dims, case.seed ^ 1, 1.0e35, 2.0e35);
+                let out = session
+                    .submit(Workload::new(big))
+                    .wait()
+                    .map_err(|e| format!("large-but-finite clean run failed: {e}"))?;
+                if out.grid.data().iter().any(|v| !v.is_finite()) {
+                    return Err("contractive program overflowed?".into());
+                }
+                Ok(())
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------------------
+// Spot checks: shipped stencil files and builtin defaults audit clean.
+// ------------------------------------------------------------------
+
+#[test]
+fn builtin_default_plans_audit_clean_end_to_end() {
+    for kind in StencilKind::ALL_EXT {
+        let dims = if kind.ndim() == 2 { vec![96, 96] } else { vec![32, 32, 32] };
+        let plan = PlanBuilder::new(kind)
+            .grid_dims(dims)
+            .iterations(8)
+            .build()
+            .unwrap();
+        assert!(
+            !has_code(&plan, "E001") && !audit_plan(&plan).has_errors(),
+            "builtin {kind} default plan must audit clean"
+        );
+    }
+}

@@ -756,3 +756,47 @@ fn cancel_over_the_wire_reaches_the_ledger() {
     let status = front.job_status(victim).unwrap();
     assert!(status.state.is_terminal());
 }
+
+#[test]
+fn open_rejects_infeasible_plan_with_audit_diagnostics() {
+    let Some(front) = bind_or_skip(1, WireConfig::default()) else { return };
+    let addr = front.local_addr().to_string();
+    let mut client = WireClient::connect(&addr).unwrap();
+
+    // Regression: this shape used to come back as one flattened planner
+    // string (and pre-auditor shapes like it could only fail at first
+    // submit). Now open answers with the static auditor's typed report:
+    // an 8-wide tile cannot hold the 8-step chunk's radius-1 halo.
+    let mut bad = spec(&[64, 64], 8, "scalar");
+    bad.tile = Some(vec![8, 8]);
+    bad.step_sizes = Some(vec![8]);
+    match client.open(bad, vec![]) {
+        Err(WireError::Rejected { message, report }) => {
+            assert!(message.contains("E001"), "summary lacks the code: {message}");
+            assert!(report.contains("halo-exceeds-tile"), "{report}");
+            assert!(report.contains("\"severity\":\"error\""), "{report}");
+        }
+        other => panic!("infeasible open resolved to {other:?}"),
+    }
+
+    // A zero step size is rejected the same way (it would loop the
+    // greedy scheduler forever), pointing at the plan field.
+    let mut zero = spec(&[64, 64], 8, "scalar");
+    zero.step_sizes = Some(vec![1, 0]);
+    match client.open(zero, vec![]) {
+        Err(WireError::Rejected { report, .. }) => {
+            assert!(report.contains("E003"), "{report}");
+            assert!(report.contains("plan.step_sizes"), "{report}");
+        }
+        other => panic!("zero-step open resolved to {other:?}"),
+    }
+
+    // The connection survives both rejections: a clean open + job works.
+    let session = client.open(spec(&[64, 64], 4, "scalar"), vec![]).unwrap();
+    let job = client.submit(session, &mk_grid(&[64, 64], 3), None, None).unwrap();
+    assert!(matches!(
+        client.wait_result(job, STRESS_WAIT).unwrap(),
+        WaitOutcome::Done { .. }
+    ));
+    drop(front);
+}

@@ -267,7 +267,7 @@ fn messages_round_trip_through_json() {
                 6 => Request::Close { session: rng.next_u64() >> 12 },
                 _ => Request::Ping,
             };
-            let resp: Response = match rng.usize_in(0, 7) {
+            let resp: Response = match rng.usize_in(0, 8) {
                 0 => Response::Opened { session: rng.next_u64() >> 12 },
                 1 => Response::Accepted { job: rng.next_u64() >> 12 },
                 2 => Response::Status {
@@ -295,6 +295,20 @@ fn messages_round_trip_through_json() {
                     stats: Json::obj(vec![("frames_in", Json::from(3usize))]),
                 },
                 5 => Response::Closed { session: rng.next_u64() >> 12 },
+                7 => Response::Rejected {
+                    message: format!("plan rejected: {} error(s)", rng.usize_in(1, 4)),
+                    diagnostics: Json::obj(vec![
+                        ("subject", Json::from("diffusion2d @ 64x64")),
+                        ("errors", Json::from(1usize)),
+                        (
+                            "diagnostics",
+                            Json::Arr(vec![Json::obj(vec![
+                                ("code", Json::from("E001")),
+                                ("severity", Json::from("error")),
+                            ])]),
+                        ),
+                    ]),
+                },
                 6 => Response::Pong {
                     uptime_ms: rng.next_u64() >> 30,
                     workers: rng.usize_in(0, 16) as u64,
