@@ -748,6 +748,90 @@ fn main() {
     rep.push(a_trusted);
     rep.push(a_audited);
 
+    // --- halo_overlap ablation: the cluster coordinator's overlapped
+    //     radius·T exchange vs the blocking drain-then-compute baseline —
+    //     same plan, same thread-hosted workers, same wire frames over
+    //     real loopback TCP; only the worker-side schedule differs.
+    //     Communication-heavy shape on purpose: fat rows make each
+    //     chunk's halo payload (encode + 2 frames + decode per seam
+    //     direction) expensive, which is exactly the latency the
+    //     overlapped schedule hides behind interior compute. ----------
+    use fstencil::cluster::{ClusterCoordinator, ExchangeMode};
+    match std::net::TcpListener::bind("127.0.0.1:0") {
+        Err(e) => {
+            // No loopback in this sandbox — record the skip so the CI
+            // grep gate still finds a halo_overlap line.
+            rep.payload(format!("halo_overlap ablation: SKIPPED (loopback bind: {e})"));
+        }
+        Ok(probe) => {
+            drop(probe);
+            let (crows, ccols) = if sm { (64usize, 1024usize) } else { (128, 8192) };
+            let citers = 8usize;
+            let cshards = 2usize;
+            let cplan = PlanBuilder::new(kind)
+                .grid_dims(vec![crows, ccols])
+                .iterations(citers)
+                .tile(vec![16, ccols.min(512)])
+                .backend(Backend::Vec { par_vec: 8 })
+                .build()
+                .unwrap();
+            let mut cg = Grid::new2d(crows, ccols);
+            cg.fill_random(6, 0.0, 1.0);
+            let c_updates = (crows * ccols * citers) as f64;
+            let mut cluster_runs = Vec::new();
+            for (mode, label) in
+                [(ExchangeMode::Overlapped, "overlapped"), (ExchangeMode::Blocking, "blocking")]
+            {
+                cluster_runs.push(b.bench_with_metric(
+                    &format!("halo_overlap_{label}_{crows}x{ccols}_x{citers}_s{cshards}"),
+                    "Mcell-updates/s",
+                    c_updates / 1e6,
+                    || {
+                        let mut work = cg.clone();
+                        let r = ClusterCoordinator::new(cplan.clone(), cshards)
+                            .mode(mode)
+                            .run(&mut work, None)
+                            .expect("cluster run");
+                        std::hint::black_box((work, r));
+                    },
+                ));
+            }
+            let over_mcells = cluster_runs[0].metric.unwrap().0;
+            let block_mcells = cluster_runs[1].metric.unwrap().0;
+            let c_ratio = rep.ablation(
+                "halo_overlap",
+                cluster_runs[1].summary.mean,
+                cluster_runs[0].summary.mean,
+                "overlapped radius*T halo exchange vs blocking drain-then-compute \
+                 at 2 shards over loopback; acceptance: >= 1.15x",
+            );
+            // The Eq-3 inter-node model twin (PerfModel::cluster_mcells)
+            // printed next to the measurement, like the stream model in the
+            // T-sweep. The link rate is a notional loopback figure; the model
+            // line's point is the max-vs-sum shape, not the absolute roof.
+            const LINK_GBPS: f64 = 2.0;
+            let node_mcells = model.host_par_vec_mcells(def, scalar_mcells, 8);
+            let t_deep = cplan.chunks.iter().copied().max().unwrap_or(1);
+            let m_over = model.cluster_mcells(
+                def, node_mcells, cshards, &cplan.grid_dims, t_deep, LINK_GBPS, true,
+            );
+            let m_block = model.cluster_mcells(
+                def, node_mcells, cshards, &cplan.grid_dims, t_deep, LINK_GBPS, false,
+            );
+            rep.payload(format!(
+                "halo_overlap ablation: overlapped {over_mcells:.1} vs blocking \
+                 {block_mcells:.1} Mcell/s = {c_ratio:.2}x (acceptance: >= 1.15x, {}); \
+                 Eq-3 cluster model at {LINK_GBPS} Gbps link: {m_over:.0} vs \
+                 {m_block:.0} Mcell/s ({:.2}x overlap win)",
+                if c_ratio >= 1.15 { "PASS" } else { "FAIL: overlap not hiding the exchange" },
+                m_over / m_block,
+            ));
+            for r in cluster_runs {
+                rep.push(r);
+            }
+        }
+    }
+
     // Smoke runs are correctness checks, not measurements — never let
     // them overwrite the persisted perf trajectory.
     if sm {

@@ -232,6 +232,7 @@ pub mod codes {
     pub const E007_MODEL_DOMAIN: (&str, &str) = ("E007", "model-domain");
     pub const E008_RADIUS_MISMATCH: (&str, &str) = ("E008", "radius-mismatch");
     pub const E009_BAD_WORKERS: (&str, &str) = ("E009", "bad-workers");
+    pub const E010_UNSHARDABLE: (&str, &str) = ("E010", "unshardable-partition");
     pub const W101_STEP_GRANULARITY: (&str, &str) = ("W101", "step-granularity-gap");
     pub const W102_IDLE_WORKERS: (&str, &str) = ("W102", "idle-workers");
     pub const W103_HALO_OVERHEAD: (&str, &str) = ("W103", "halo-overhead-high");
@@ -716,6 +717,40 @@ fn feasibility_pass(shape: &PlanShape, prog: &StencilProgram, report: &mut Audit
                     ),
                 );
             }
+            // -- shardability of the slab partition (the cluster /
+            //    distributed execution predicate): every shard must own
+            //    at least the radius·T halo depth of the deepest
+            //    schedulable chunk, or it cannot donate boundary slabs
+            //    from rows it owns and the per-pass exchange protocol
+            //    breaks down (see `crate::cluster::ShardMap::shardable`).
+            if w >= 2 {
+                if let Some(&dim0) = shape.grid_dims.first() {
+                    let halo = sizes
+                        .iter()
+                        .copied()
+                        .filter(|&s| min_tile > 2 * s * rad)
+                        .max()
+                        .unwrap_or(0)
+                        * rad;
+                    let map = crate::cluster::ShardMap::new(dim0, w);
+                    if !map.shardable(halo) {
+                        report.push(
+                            E010_UNSHARDABLE,
+                            Severity::Error,
+                            Span::PlanField("workers"),
+                            format!(
+                                "slab partition over {w} workers gives the \
+                                 smallest shard {} row(s), fewer than the \
+                                 {halo}-row halo (radius {rad} × deepest \
+                                 schedulable chunk): a shard cannot donate \
+                                 boundary rows it does not own; use fewer \
+                                 workers or shallower temporal blocking",
+                                map.min_interior()
+                            ),
+                        );
+                    }
+                }
+            }
         }
     }
 
@@ -961,6 +996,24 @@ mod tests {
         };
         let report = audit_shape(&idle);
         assert!(report.diagnostics.iter().any(|d| d.code == "W102"), "{report}");
+    }
+
+    #[test]
+    fn unshardable_partition_gets_e010() {
+        // 16 workers over 64 rows: 4-row shards, exactly the deepest
+        // chunk's 4-row halo (radius 1 × step 4) — still shardable.
+        let ok = PlanShape {
+            workers: Some(16),
+            ..PlanShape::with_defaults(StencilKind::Diffusion2D.into(), vec![64, 64], 4)
+        };
+        assert!(!audit_shape(&ok).errors().any(|d| d.code == "E010"));
+        // 32 workers: 2-row shards cannot donate a 4-row boundary slab.
+        let thin = PlanShape {
+            workers: Some(32),
+            ..PlanShape::with_defaults(StencilKind::Diffusion2D.into(), vec![64, 64], 4)
+        };
+        let report = audit_shape(&thin);
+        assert!(report.errors().any(|d| d.code == "E010"), "{report}");
     }
 
     #[test]

@@ -1,0 +1,585 @@
+//! The cluster coordinator: real worker processes over loopback TCP.
+//!
+//! [`ClusterCoordinator`] is the multi-process sibling of the in-process
+//! [`crate::coordinator::DistributedCoordinator`]: the same slab
+//! partition ([`ShardMap`]), the same `radius·T` halo arithmetic, but the
+//! shards are separate OS processes (or threads, for benches) connected
+//! by the wire frame codec. Topology is a star — every worker talks only
+//! to the coordinator, which relays each shard's `Boundary` slabs to its
+//! neighbours as `Halo` frames. The relay is a per-chunk barrier on the
+//! *coordinator*; the *workers* still overlap, because each one sends
+//! its boundary before computing its interior (see
+//! [`super::worker`]).
+//!
+//! Failure model: any transport error, protocol violation, or worker
+//! `Fail` message aborts the whole run with a typed
+//! [`EngineError::ShardLost`]. The caller's grid is written only after
+//! *every* shard's interior has been received and validated, so a
+//! failed run never leaves a torn (partially updated) grid. Read
+//! timeouts on every socket are the backstop against silent hangs: a
+//! worker that stops talking becomes a `ShardLost`, not a wedge.
+
+use std::io::ErrorKind;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Plan;
+use crate::engine::wire::frame::{read_frame, write_frame, GridPayload};
+use crate::engine::wire::protocol::{PlanSpec, WireError};
+use crate::engine::EngineError;
+use crate::stencil::Grid;
+use crate::util::json::Json;
+
+use super::geometry::{copy_rows, ShardMap};
+use super::protocol::{ExchangeMode, HaloSide, ShardMsg};
+use super::worker::run_worker;
+
+/// How long the coordinator waits for all workers to connect.
+const ACCEPT_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Per-socket read timeout — the anti-hang backstop. A worker that
+/// neither answers nor dies within this window is declared lost.
+const LINK_READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// How workers are brought up.
+#[derive(Debug, Clone)]
+pub enum WorkerLauncher {
+    /// Spawn real OS processes: `<program> worker --connect <addr>`.
+    /// `program` is normally `std::env::current_exe()` (the CLI) or
+    /// `env!("CARGO_BIN_EXE_fstencil")` (integration tests).
+    Process { program: PathBuf },
+    /// Host each worker on a thread in this process, still over real
+    /// loopback TCP — same wire traffic, no process spawn cost. Used by
+    /// benches and library tests.
+    Threads,
+}
+
+/// What a sharded run did, mirroring
+/// [`crate::coordinator::DistReport`] one level up.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub iterations: usize,
+    /// Sweep passes (chunks of fused steps).
+    pub passes: usize,
+    pub shards: usize,
+    pub mode: ExchangeMode,
+    pub cell_updates: u64,
+    /// Total cells shipped through `Halo` frames, both directions.
+    pub halo_cells_exchanged: u64,
+    pub elapsed: Duration,
+}
+
+impl ClusterReport {
+    /// Aggregate throughput in Mcell/s.
+    pub fn mcells_per_s(&self) -> f64 {
+        self.cell_updates as f64 / self.elapsed.as_secs_f64().max(1e-9) / 1e6
+    }
+}
+
+/// Coordinates `shards` workers through one sharded run of `plan`.
+pub struct ClusterCoordinator {
+    plan: Plan,
+    shards: usize,
+    mode: ExchangeMode,
+    launcher: WorkerLauncher,
+    chaos: Option<String>,
+    programs: Vec<Json>,
+}
+
+impl ClusterCoordinator {
+    pub fn new(plan: Plan, shards: usize) -> ClusterCoordinator {
+        ClusterCoordinator {
+            plan,
+            shards: shards.max(1),
+            mode: ExchangeMode::Overlapped,
+            launcher: WorkerLauncher::Threads,
+            chaos: None,
+            programs: Vec::new(),
+        }
+    }
+
+    pub fn mode(mut self, mode: ExchangeMode) -> ClusterCoordinator {
+        self.mode = mode;
+        self
+    }
+
+    pub fn launcher(mut self, launcher: WorkerLauncher) -> ClusterCoordinator {
+        self.launcher = launcher;
+        self
+    }
+
+    /// Chaos spec string (see [`crate::engine::ChaosPlan`]) forwarded to
+    /// every worker — `kill=1@R` makes shards `0..R` die mid-sweep.
+    pub fn chaos(mut self, spec: impl Into<String>) -> ClusterCoordinator {
+        self.chaos = Some(spec.into());
+        self
+    }
+
+    /// Extra stencil-program JSON to register on each worker before plan
+    /// build. The plan's own program is shipped automatically when it is
+    /// a custom (non-builtin) program.
+    pub fn program(mut self, json: Json) -> ClusterCoordinator {
+        self.programs.push(json);
+        self
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Run one sharded sweep: launch workers, shard the grid, drive the
+    /// per-chunk halo relay, and assemble the result back into `grid`.
+    pub fn run(
+        &self,
+        grid: &mut Grid,
+        power: Option<&Grid>,
+    ) -> Result<ClusterReport, EngineError> {
+        let started = Instant::now();
+        let plan = &self.plan;
+        let def = plan.stencil.def();
+        if grid.dims() != plan.grid_dims {
+            return Err(EngineError::GridShape {
+                expected: plan.grid_dims.clone(),
+                got: grid.dims(),
+            });
+        }
+        if power.is_some() != def.has_power {
+            return Err(EngineError::PowerMismatch {
+                expected: def.has_power,
+                got: power.is_some(),
+            });
+        }
+        let map = ShardMap::new(plan.grid_dims[0], self.shards);
+        if map.has_empty_shard() {
+            return Err(EngineError::InvalidPlan(format!(
+                "{} shards over {} rows leave a shard with zero interior rows",
+                map.shards, map.dim0
+            )));
+        }
+        if !map.shardable(plan.max_halo()) {
+            return Err(EngineError::InvalidPlan(format!(
+                "grid rows / shards = {} is thinner than the {}-row halo \
+                 (radius x max chunk steps); use fewer shards or shorter chunks",
+                map.min_interior(),
+                plan.max_halo()
+            )));
+        }
+        if map.min_interior() < plan.tile[0] {
+            return Err(EngineError::InvalidPlan(format!(
+                "grid rows / shards = {} is thinner than the plan's tile ({} rows); \
+                 use fewer shards or a shorter tile",
+                map.min_interior(),
+                plan.tile[0]
+            )));
+        }
+        let mut links = self.launch(&map)?;
+        let r = self.drive(&mut links, &map, grid, power);
+        reap(links, r.is_err());
+        let halo_cells = r?;
+        Ok(ClusterReport {
+            iterations: plan.iterations,
+            passes: plan.chunks.len(),
+            shards: map.shards,
+            mode: self.mode,
+            cell_updates: plan.cell_updates(),
+            halo_cells_exchanged: halo_cells,
+            elapsed: started.elapsed(),
+        })
+    }
+
+    /// Bind the rendezvous listener, start every worker, and accept
+    /// their connections (rank = accept order; workers learn theirs
+    /// from `Init`).
+    fn launch(&self, map: &ShardMap) -> Result<Vec<Link>, EngineError> {
+        let fail = |stage: &str, e: std::io::Error| {
+            EngineError::Execution(format!("cluster {stage}: {e}"))
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| fail("bind", e))?;
+        let addr = listener.local_addr().map_err(|e| fail("bind", e))?.to_string();
+        listener.set_nonblocking(true).map_err(|e| fail("bind", e))?;
+
+        let mut bodies = Vec::with_capacity(map.shards);
+        for s in 0..map.shards {
+            match &self.launcher {
+                WorkerLauncher::Process { program } => {
+                    let child = Command::new(program)
+                        .arg("worker")
+                        .arg("--connect")
+                        .arg(&addr)
+                        .stdin(Stdio::null())
+                        .stdout(Stdio::null())
+                        .spawn()
+                        .map_err(|e| {
+                            EngineError::Execution(format!(
+                                "cluster spawn worker {s}: {e}"
+                            ))
+                        })?;
+                    bodies.push(WorkerBody::Process(child));
+                }
+                WorkerLauncher::Threads => {
+                    let addr = addr.clone();
+                    bodies.push(WorkerBody::Thread(thread::spawn(move || {
+                        let _ = run_worker(&addr, false);
+                    })));
+                }
+            }
+        }
+
+        let deadline = Instant::now() + ACCEPT_DEADLINE;
+        let mut links = Vec::with_capacity(map.shards);
+        let mut bodies = bodies.into_iter();
+        while links.len() < map.shards {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).map_err(|e| fail("accept", e))?;
+                    stream.set_nodelay(true).ok();
+                    stream.set_read_timeout(Some(LINK_READ_TIMEOUT)).ok();
+                    stream.set_write_timeout(Some(LINK_READ_TIMEOUT)).ok();
+                    links.push(Link { stream, body: bodies.next() });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        reap(links, true);
+                        return Err(EngineError::Execution(format!(
+                            "cluster accept: workers failed to connect within {}s",
+                            ACCEPT_DEADLINE.as_secs()
+                        )));
+                    }
+                    thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    reap(links, true);
+                    return Err(fail("accept", e));
+                }
+            }
+        }
+        Ok(links)
+    }
+
+    /// The protocol driver: Init/Ready, Load, per-chunk Boundary→Halo
+    /// relay, Collect/Interior assembly, Shutdown. Returns the halo cell
+    /// count on success; *any* error leaves `grid` untouched (interiors
+    /// are staged and committed only once all have arrived).
+    fn drive(
+        &self,
+        links: &mut [Link],
+        map: &ShardMap,
+        grid: &mut Grid,
+        power: Option<&Grid>,
+    ) -> Result<u64, EngineError> {
+        let plan = &self.plan;
+        let def = plan.stencil.def();
+        let shards = map.shards;
+        let row_cells: usize = plan.grid_dims[1..].iter().product();
+
+        // Ship the plan's program alongside any caller-supplied extras
+        // when it is custom: builtins exist in every process, and a
+        // round-tripped builtin would collide with its specialized
+        // registry entry.
+        let mut programs = self.programs.clone();
+        let prog = plan.stencil.program();
+        if prog.specialized().is_none() {
+            programs.insert(0, prog.to_json());
+        }
+
+        for (s, link) in links.iter_mut().enumerate() {
+            link.send(
+                s,
+                &ShardMsg::Init {
+                    shard: s,
+                    shards,
+                    mode: self.mode,
+                    plan: PlanSpec::from_plan(plan),
+                    programs: programs.clone(),
+                    chaos: self.chaos.clone(),
+                },
+            )?;
+        }
+        for (s, link) in links.iter_mut().enumerate() {
+            match link.recv(s)? {
+                ShardMsg::Ready { shard } if shard == s => {}
+                other => return Err(protocol(s, "ready", &other)),
+            }
+        }
+
+        let halo = plan.max_halo();
+        for (s, link) in links.iter_mut().enumerate() {
+            let (lo, hi) = map.slab(s);
+            let slab = copy_rows(grid, lo, hi);
+            let pslab = power.map(|p| {
+                let (plo, phi) = map.extended(s, halo);
+                GridPayload::from_grid(&copy_rows(p, plo, phi))
+            });
+            link.send(s, &ShardMsg::Load { slab: GridPayload::from_grid(&slab), power: pslab })?;
+        }
+
+        // The halo relay. Lockstep per chunk: collect every shard's
+        // Boundary, then fan the slabs out as Halo frames. Workers are
+        // already computing their interiors while this happens.
+        let mut halo_cells: u64 = 0;
+        if shards > 1 {
+            for (k, &steps) in plan.chunks.iter().enumerate() {
+                let h = def.radius * steps;
+                let mut tops: Vec<Option<String>> = vec![None; shards];
+                let mut bots: Vec<Option<String>> = vec![None; shards];
+                for (s, link) in links.iter_mut().enumerate() {
+                    match link.recv(s)? {
+                        ShardMsg::Boundary { shard, chunk, top, bottom }
+                            if shard == s && chunk == k =>
+                        {
+                            tops[s] = top;
+                            bots[s] = bottom;
+                        }
+                        other => return Err(protocol(s, "boundary", &other)),
+                    }
+                }
+                for s in 0..shards {
+                    if s > 0 {
+                        let cells = tops[s].take().ok_or_else(|| miss(s, "top"))?;
+                        halo_cells += (h * row_cells) as u64;
+                        links[s - 1].send(
+                            s - 1,
+                            &ShardMsg::Halo { chunk: k, side: HaloSide::Bottom, cells },
+                        )?;
+                    }
+                    if s + 1 < shards {
+                        let cells = bots[s].take().ok_or_else(|| miss(s, "bottom"))?;
+                        halo_cells += (h * row_cells) as u64;
+                        links[s + 1].send(
+                            s + 1,
+                            &ShardMsg::Halo { chunk: k, side: HaloSide::Top, cells },
+                        )?;
+                    }
+                }
+            }
+        }
+
+        // Collect. Stage every interior before touching the caller's
+        // grid: a shard lost here fails the run with the input intact.
+        for (s, link) in links.iter_mut().enumerate() {
+            link.send(s, &ShardMsg::Collect)?;
+        }
+        let mut slabs: Vec<Option<Grid>> = (0..shards).map(|_| None).collect();
+        for (s, link) in links.iter_mut().enumerate() {
+            match link.recv(s)? {
+                ShardMsg::Interior { shard, grid: payload } if shard == s => {
+                    let g = payload.to_grid().map_err(|e| lost(s, &e))?;
+                    let want = map.interior(s);
+                    if g.dims()[0] != want || g.dims()[1..] != plan.grid_dims[1..] {
+                        return Err(EngineError::ShardLost {
+                            shard: s,
+                            message: format!(
+                                "interior dims {:?} do not match the shard's {want} rows",
+                                g.dims()
+                            ),
+                        });
+                    }
+                    slabs[s] = Some(g);
+                }
+                other => return Err(protocol(s, "interior", &other)),
+            }
+        }
+        for (s, slab) in slabs.into_iter().enumerate() {
+            let (lo, _) = map.slab(s);
+            let g = slab.expect("every shard collected above");
+            let at = lo * row_cells;
+            grid.data_mut()[at..at + g.data().len()].copy_from_slice(g.data());
+        }
+        for (s, link) in links.iter_mut().enumerate() {
+            let _ = link.send(s, &ShardMsg::Shutdown);
+        }
+        Ok(halo_cells)
+    }
+}
+
+/// One live worker: its socket plus whatever hosts it.
+struct Link {
+    stream: TcpStream,
+    body: Option<WorkerBody>,
+}
+
+enum WorkerBody {
+    Process(Child),
+    Thread(thread::JoinHandle<()>),
+}
+
+impl Link {
+    fn send(&mut self, shard: usize, msg: &ShardMsg) -> Result<(), EngineError> {
+        write_frame(&mut self.stream, &msg.to_json()).map_err(|e| lost(shard, &e))
+    }
+
+    fn recv(&mut self, shard: usize) -> Result<ShardMsg, EngineError> {
+        let v = read_frame(&mut self.stream).map_err(|e| lost(shard, &e))?;
+        match ShardMsg::from_json(&v).map_err(|e| lost(shard, &e))? {
+            ShardMsg::Fail { shard: s, message } => {
+                Err(EngineError::ShardLost { shard: s, message })
+            }
+            msg => Ok(msg),
+        }
+    }
+}
+
+fn lost(shard: usize, e: &WireError) -> EngineError {
+    EngineError::ShardLost { shard, message: e.to_string() }
+}
+
+fn protocol(shard: usize, want: &str, got: &ShardMsg) -> EngineError {
+    EngineError::ShardLost {
+        shard,
+        message: format!("protocol violation: expected {want}, got {got:?}"),
+    }
+}
+
+fn miss(shard: usize, side: &str) -> EngineError {
+    EngineError::ShardLost {
+        shard,
+        message: format!("boundary message carried no {side} slab"),
+    }
+}
+
+/// Tear the fleet down. On the success path workers have been told to
+/// shut down and exit on their own; on failure (`force`) sockets are
+/// slammed shut and processes killed so nothing lingers.
+fn reap(links: Vec<Link>, force: bool) {
+    for mut link in links {
+        link.stream.shutdown(Shutdown::Both).ok();
+        match link.body.take() {
+            Some(WorkerBody::Process(mut child)) => {
+                if force {
+                    child.kill().ok();
+                }
+                let deadline = Instant::now() + Duration::from_secs(5);
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            thread::sleep(Duration::from_millis(20));
+                        }
+                        _ => {
+                            child.kill().ok();
+                            child.wait().ok();
+                            break;
+                        }
+                    }
+                }
+            }
+            Some(WorkerBody::Thread(handle)) => {
+                // The closed socket unblocks any pending read; a forced
+                // teardown detaches instead of risking a join hang.
+                if !force {
+                    handle.join().ok();
+                }
+            }
+            None => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, PlanBuilder};
+    use crate::stencil::StencilRegistry;
+
+    fn plan_for(name: &str, dims: &[usize], iters: usize, tile: &[usize]) -> Plan {
+        let id = StencilRegistry::lookup(name).expect("builtin");
+        PlanBuilder::new(id)
+            .grid_dims(dims.to_vec())
+            .iterations(iters)
+            .tile(tile.to_vec())
+            .build()
+            .expect("plan builds")
+    }
+
+    fn oracle(plan: &Plan, grid: &Grid, power: Option<&Grid>) -> Grid {
+        let mut g = grid.clone();
+        Coordinator::new(plan.clone())
+            .run_planned(&mut g, power)
+            .expect("oracle runs");
+        g
+    }
+
+    #[test]
+    fn two_shards_match_the_oracle_bit_for_bit() {
+        let plan = plan_for("diffusion2d", &[96, 48], 6, &[24, 48]);
+        let mut grid = Grid::new2d(96, 48);
+        grid.fill_random(7, -1.0, 1.0);
+        let want = oracle(&plan, &grid, None);
+        let report = ClusterCoordinator::new(plan, 2)
+            .run(&mut grid, None)
+            .expect("cluster runs");
+        assert_eq!(report.shards, 2);
+        assert_eq!(grid.data(), want.data(), "sharded result must be bit-identical");
+        assert!(report.halo_cells_exchanged > 0);
+    }
+
+    #[test]
+    fn blocking_mode_is_bit_identical_too() {
+        let plan = plan_for("diffusion2d", &[96, 48], 6, &[24, 48]);
+        let mut grid = Grid::new2d(96, 48);
+        grid.fill_random(11, -1.0, 1.0);
+        let want = oracle(&plan, &grid, None);
+        ClusterCoordinator::new(plan, 2)
+            .mode(ExchangeMode::Blocking)
+            .run(&mut grid, None)
+            .expect("cluster runs");
+        assert_eq!(grid.data(), want.data());
+    }
+
+    #[test]
+    fn power_grids_ride_along() {
+        let plan = plan_for("hotspot3d", &[48, 16, 16], 4, &[16, 16, 16]);
+        let mut grid = Grid::from_vec(&[48, 16, 16], vec![0.5; 48 * 16 * 16]);
+        grid.fill_random(3, 0.0, 1.0);
+        let mut power = Grid::from_vec(&[48, 16, 16], vec![0.0; 48 * 16 * 16]);
+        power.fill_random(4, 0.0, 0.1);
+        let want = oracle(&plan, &grid, Some(&power));
+        ClusterCoordinator::new(plan, 2)
+            .run(&mut grid, Some(&power))
+            .expect("cluster runs");
+        assert_eq!(grid.data(), want.data());
+    }
+
+    #[test]
+    fn halo_accounting_matches_geometry() {
+        let plan = plan_for("diffusion2d", &[96, 32], 6, &[24, 32]);
+        let radius = plan.stencil.def().radius;
+        let expected: u64 = plan
+            .chunks
+            .iter()
+            .map(|&steps| (2 * (radius * steps) * 32) as u64)
+            .sum();
+        let mut grid = Grid::new2d(96, 32);
+        grid.fill_random(5, -1.0, 1.0);
+        let report = ClusterCoordinator::new(plan, 2).run(&mut grid, None).expect("runs");
+        // 2 shards -> one internal seam, two directions per chunk.
+        assert_eq!(report.halo_cells_exchanged, expected);
+    }
+
+    #[test]
+    fn too_many_shards_is_a_typed_invalid_plan() {
+        let plan = plan_for("diffusion2d", &[64, 32], 4, &[16, 32]);
+        let mut grid = Grid::new2d(64, 32);
+        let err = ClusterCoordinator::new(plan, 32).run(&mut grid, None).unwrap_err();
+        match err {
+            EngineError::InvalidPlan(msg) => {
+                assert!(msg.contains("thinner"), "got: {msg}")
+            }
+            other => panic!("expected InvalidPlan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_the_oracle() {
+        let plan = plan_for("diffusion2d", &[64, 32], 5, &[32, 32]);
+        let mut grid = Grid::new2d(64, 32);
+        grid.fill_random(9, -1.0, 1.0);
+        let want = oracle(&plan, &grid, None);
+        let report = ClusterCoordinator::new(plan, 1).run(&mut grid, None).expect("runs");
+        assert_eq!(report.halo_cells_exchanged, 0);
+        assert_eq!(grid.data(), want.data());
+    }
+}

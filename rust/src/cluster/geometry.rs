@@ -1,0 +1,139 @@
+//! Shard partition geometry along the outermost axis.
+//!
+//! One source of truth for how a grid splits into contiguous slabs: the
+//! in-process [`crate::coordinator::DistributedCoordinator`], the
+//! multi-process [`super::ClusterCoordinator`], its workers, and the
+//! static auditor's shardability predicate all consult [`ShardMap`], so
+//! the partition arithmetic cannot drift between layers. The invariants
+//! (shards tile the grid exactly, halo slabs are exactly `radius·T` rows,
+//! boundary shards clamp at the physical edges) are property-tested in
+//! `rust/tests/geometry_props.rs`.
+
+use crate::stencil::Grid;
+
+/// The balanced slab partition of `dim0` rows over `shards` workers:
+/// every shard gets `floor(dim0/shards)` rows and the first
+/// `dim0 % shards` shards one extra. Balancing (instead of the naive
+/// `ceil` strides that strand trailing workers — 24 ceil-slabs of 3
+/// over 64 rows leave two workers empty) means a shard can only be
+/// empty when `shards > dim0`, which is what the zero-interior checks
+/// in [`crate::coordinator::PlanBuilder`] and the cluster coordinator
+/// key on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMap {
+    pub dim0: usize,
+    pub shards: usize,
+}
+
+impl ShardMap {
+    pub fn new(dim0: usize, shards: usize) -> ShardMap {
+        ShardMap { dim0, shards: shards.max(1) }
+    }
+
+    /// Interior row-range `[lo, hi)` of shard `s` along axis 0.
+    pub fn slab(&self, s: usize) -> (usize, usize) {
+        let base = self.dim0 / self.shards;
+        let rem = self.dim0 % self.shards;
+        let lo = s * base + s.min(rem);
+        let hi = lo + base + usize::from(s < rem);
+        (lo.min(self.dim0), hi.min(self.dim0))
+    }
+
+    /// Interior row count of shard `s`.
+    pub fn interior(&self, s: usize) -> usize {
+        let (lo, hi) = self.slab(s);
+        hi - lo
+    }
+
+    /// The slab extended by `halo` rows on each internal side, clamped at
+    /// the physical grid edges — the input window one `T`-step sweep of
+    /// the slab needs.
+    pub fn extended(&self, s: usize, halo: usize) -> (usize, usize) {
+        let (lo, hi) = self.slab(s);
+        (lo.saturating_sub(halo), (hi + halo).min(self.dim0))
+    }
+
+    /// The smallest shard interior: `floor(dim0/shards)` under the
+    /// balanced split — zero exactly when `shards > dim0`.
+    pub fn min_interior(&self) -> usize {
+        self.dim0 / self.shards
+    }
+
+    /// True if some shard owns zero rows — a degenerate partition that
+    /// [`crate::coordinator::PlanBuilder`] rejects at build time.
+    pub fn has_empty_shard(&self) -> bool {
+        self.min_interior() == 0
+    }
+
+    /// The shardability predicate (auditor code E010): every shard's
+    /// interior must hold at least `halo = radius·T` rows, so a shard can
+    /// donate its boundary slab to each neighbour from rows it *owns* —
+    /// otherwise a halo would have to cross a whole shard in one pass and
+    /// the per-pass exchange protocol breaks down.
+    pub fn shardable(&self, halo: usize) -> bool {
+        self.min_interior() >= halo.max(1)
+    }
+}
+
+/// Copy rows `[lo, hi)` (clamped coordinates are the caller's job) of
+/// `src` into a fresh grid with the same trailing dims.
+pub fn copy_rows(src: &Grid, lo: usize, hi: usize) -> Grid {
+    let dims = src.dims();
+    let row_cells: usize = dims[1..].iter().product();
+    let mut out_dims = dims.clone();
+    out_dims[0] = hi - lo;
+    let data = src.data()[lo * row_cells..hi * row_cells].to_vec();
+    Grid::from_vec(&out_dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_tile_the_grid_exactly() {
+        for (dim0, shards) in [(128, 4), (130, 4), (7, 3), (64, 1), (10, 10)] {
+            let map = ShardMap::new(dim0, shards);
+            let mut next = 0;
+            for s in 0..shards {
+                let (lo, hi) = map.slab(s);
+                assert_eq!(lo, next, "gap/overlap at shard {s} of {dim0}/{shards}");
+                next = hi;
+            }
+            assert_eq!(next, dim0, "{dim0}/{shards} does not cover the grid");
+        }
+    }
+
+    #[test]
+    fn extended_clamps_at_physical_edges() {
+        let map = ShardMap::new(96, 3);
+        assert_eq!(map.extended(0, 8), (0, 40));
+        assert_eq!(map.extended(1, 8), (24, 72));
+        assert_eq!(map.extended(2, 8), (56, 96));
+        // Oversized halo clamps, never underflows.
+        assert_eq!(map.extended(0, 1000), (0, 96));
+    }
+
+    #[test]
+    fn degenerate_partitions_are_detected() {
+        // Balanced splits only run dry when shards outnumber rows: 9 rows
+        // over 8 shards is 2+1·7 (fine), over 10 shards someone gets 0.
+        assert!(!ShardMap::new(9, 8).has_empty_shard());
+        assert!(ShardMap::new(9, 10).has_empty_shard());
+        assert!(!ShardMap::new(10, 4).has_empty_shard());
+        assert!(!ShardMap::new(64, 1).has_empty_shard());
+        // Shardability: min interior vs halo depth.
+        let map = ShardMap::new(64, 4); // 16 rows each
+        assert!(map.shardable(16));
+        assert!(!map.shardable(17));
+    }
+
+    #[test]
+    fn copy_rows_preserves_trailing_dims() {
+        let mut g = Grid::new2d(8, 5);
+        g.fill_random(1, 0.0, 1.0);
+        let cut = copy_rows(&g, 2, 6);
+        assert_eq!(cut.dims(), vec![4, 5]);
+        assert_eq!(cut.data(), &g.data()[2 * 5..6 * 5]);
+    }
+}

@@ -1,0 +1,41 @@
+//! Multi-process sharded execution with overlapped `radius·T` halo
+//! exchange.
+//!
+//! This is the paper's temporal-blocking story (§3.2: one sweep advances
+//! `T` fused time-steps, so a block needs a `radius·T`-deep halo) lifted
+//! from on-chip tiles to *processes*: the grid is sharded along the
+//! outermost axis across real worker processes, and each sweep pass
+//! exchanges `radius·T`-wide boundary slabs between neighbours while the
+//! workers compute their shard interiors — communication hidden behind
+//! compute, exactly like the FPGA pipeline hides halo reads behind the
+//! shift-register stream.
+//!
+//! Layering (mirrors [`crate::engine::wire`]):
+//!
+//! * [`geometry`] — the slab partition ([`ShardMap`]) and its
+//!   invariants; shared with the in-process
+//!   [`crate::coordinator::DistributedCoordinator`] and the static
+//!   auditor's shardability predicate (code `E010`).
+//! * [`protocol`] — the halo-exchange message set ([`ShardMsg`]) on top
+//!   of the wire frame codec ([`crate::engine::wire::frame`]).
+//! * [`worker`] — one shard's process: boundary-first sends, interior
+//!   compute overlapping the exchange, parity-ring halo drain.
+//! * [`coordinator`] — [`ClusterCoordinator`]: spawns the fleet
+//!   (processes via the hidden `fstencil worker` subcommand, or threads
+//!   for benches), relays halos, assembles the result, and turns every
+//!   fault into a typed [`crate::engine::EngineError::ShardLost`].
+//!
+//! The headline invariant, tested here, in `rust/tests/cluster_faults.rs`
+//! and property-tested in `rust/tests/geometry_props.rs`: a sharded run
+//! is **bit-identical** to the single-process oracle for every program
+//! and any shard count the auditor's shardability predicate admits.
+
+pub mod coordinator;
+pub mod geometry;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{ClusterCoordinator, ClusterReport, WorkerLauncher};
+pub use geometry::ShardMap;
+pub use protocol::{ExchangeMode, ShardMsg};
+pub use worker::run_worker;

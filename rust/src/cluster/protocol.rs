@@ -1,0 +1,354 @@
+//! Shard-control and halo messages between the cluster coordinator and
+//! its worker processes.
+//!
+//! Everything rides the shared frame codec ([`crate::engine::wire::frame`])
+//! — the same 4-byte big-endian length prefix + JSON frames and the same
+//! base64 f32 encoding as the job protocol, so halo slabs round-trip
+//! bit-exactly (NaN payloads included) and hostile frames get the same
+//! typed rejections. See DESIGN.md §3.5 for the message table and the
+//! overlap timeline.
+//!
+//! Lifecycle, coordinator-side:
+//!
+//! ```text
+//! Init →        (rank, mode, plan spec, inline programs, chaos spec)
+//!      ← Ready
+//! Load →        (interior slab + extended power slab)
+//! per chunk k:
+//!      ← Boundary(k)   worker's first/last halo rows of its chunk-k input
+//! Halo(k) →            neighbours' boundary rows, relayed by the coordinator
+//! Collect →
+//!      ← Interior      final interior rows, bit-exact payload
+//! Shutdown →
+//! ```
+//!
+//! A worker that cannot proceed answers `Fail` with a message; a worker
+//! that *dies* answers nothing — the coordinator sees the torn/closed
+//! stream and surfaces [`crate::engine::EngineError::ShardLost`].
+
+use crate::engine::wire::frame::{
+    b64_decode_f32, b64_encode_f32, req_str, req_usize, GridPayload,
+};
+use crate::engine::wire::protocol::{PlanSpec, WireError};
+use crate::util::json::Json;
+
+/// Which side of a shard a halo slab attaches to, from the *receiving*
+/// worker's point of view: `Top` rows sit just above `lo` (they came from
+/// neighbour `s-1`'s bottom boundary), `Bottom` rows just below `hi`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HaloSide {
+    Top,
+    Bottom,
+}
+
+impl HaloSide {
+    pub fn code(self) -> &'static str {
+        match self {
+            HaloSide::Top => "top",
+            HaloSide::Bottom => "bottom",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<HaloSide> {
+        match s {
+            "top" => Some(HaloSide::Top),
+            "bottom" => Some(HaloSide::Bottom),
+            _ => None,
+        }
+    }
+}
+
+/// How boundary exchange and compute interleave. `Overlapped` is the
+/// paper-faithful discipline (compute the bulk interior while the
+/// `radius·T` slabs are in flight); `Blocking` finishes the exchange
+/// before touching any tile — kept as the ablation baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExchangeMode {
+    #[default]
+    Overlapped,
+    Blocking,
+}
+
+impl ExchangeMode {
+    pub fn code(self) -> &'static str {
+        match self {
+            ExchangeMode::Overlapped => "overlapped",
+            ExchangeMode::Blocking => "blocking",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ExchangeMode> {
+        match s {
+            "overlapped" => Some(ExchangeMode::Overlapped),
+            "blocking" => Some(ExchangeMode::Blocking),
+            _ => None,
+        }
+    }
+}
+
+/// One coordinator↔worker message. Cell slabs travel as base64 of the
+/// little-endian f32 bytes (no dims header — both ends derive the
+/// expected row counts from the shared [`super::geometry::ShardMap`] and
+/// reject mismatches).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardMsg {
+    /// Coordinator → worker: rank assignment plus everything needed to
+    /// rebuild the global plan (spec, inline programs, exchange mode,
+    /// optional chaos spec).
+    Init {
+        shard: usize,
+        shards: usize,
+        mode: ExchangeMode,
+        plan: PlanSpec,
+        programs: Vec<Json>,
+        chaos: Option<String>,
+    },
+    /// Worker → coordinator: plan built, ready for the slab.
+    Ready { shard: usize },
+    /// Coordinator → worker: the shard's interior rows plus (when the
+    /// stencil takes one) the power slab pre-extended by the maximum
+    /// halo, so power never needs re-sending.
+    Load { slab: GridPayload, power: Option<GridPayload> },
+    /// Worker → coordinator, once per chunk *before* computing it: the
+    /// first/last `radius·T` rows of the chunk's input, destined for the
+    /// upper/lower neighbour. Edge shards omit the side with no
+    /// neighbour.
+    Boundary { shard: usize, chunk: usize, top: Option<String>, bottom: Option<String> },
+    /// Coordinator → worker: a neighbour's boundary slab, relayed.
+    Halo { chunk: usize, side: HaloSide, cells: String },
+    /// Coordinator → worker: sweeps done, send the interior back.
+    Collect,
+    /// Worker → coordinator: the final interior rows, bit-exact.
+    Interior { shard: usize, grid: GridPayload },
+    /// Worker → coordinator: typed give-up (plan build failed, slab
+    /// mismatch, ...). Transport death is *not* reported this way — a
+    /// dead worker is detected by its torn/closed stream.
+    Fail { shard: usize, message: String },
+    /// Coordinator → worker: clean goodbye.
+    Shutdown,
+}
+
+impl ShardMsg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ShardMsg::Init { shard, shards, mode, plan, programs, chaos } => {
+                let mut pairs = vec![
+                    ("type", Json::from("init")),
+                    ("shard", Json::from(*shard)),
+                    ("shards", Json::from(*shards)),
+                    ("mode", Json::from(mode.code())),
+                    ("plan", plan.to_json()),
+                ];
+                if !programs.is_empty() {
+                    pairs.push(("programs", Json::Arr(programs.clone())));
+                }
+                if let Some(c) = chaos {
+                    pairs.push(("chaos", Json::from(c.clone())));
+                }
+                Json::obj(pairs)
+            }
+            ShardMsg::Ready { shard } => {
+                Json::obj(vec![("type", Json::from("ready")), ("shard", Json::from(*shard))])
+            }
+            ShardMsg::Load { slab, power } => {
+                let mut pairs =
+                    vec![("type", Json::from("load")), ("slab", slab.to_json())];
+                if let Some(p) = power {
+                    pairs.push(("power", p.to_json()));
+                }
+                Json::obj(pairs)
+            }
+            ShardMsg::Boundary { shard, chunk, top, bottom } => {
+                let mut pairs = vec![
+                    ("type", Json::from("boundary")),
+                    ("shard", Json::from(*shard)),
+                    ("chunk", Json::from(*chunk)),
+                ];
+                if let Some(t) = top {
+                    pairs.push(("top", Json::from(t.clone())));
+                }
+                if let Some(b) = bottom {
+                    pairs.push(("bottom", Json::from(b.clone())));
+                }
+                Json::obj(pairs)
+            }
+            ShardMsg::Halo { chunk, side, cells } => Json::obj(vec![
+                ("type", Json::from("halo")),
+                ("chunk", Json::from(*chunk)),
+                ("side", Json::from(side.code())),
+                ("cells", Json::from(cells.clone())),
+            ]),
+            ShardMsg::Collect => Json::obj(vec![("type", Json::from("collect"))]),
+            ShardMsg::Interior { shard, grid } => Json::obj(vec![
+                ("type", Json::from("interior")),
+                ("shard", Json::from(*shard)),
+                ("grid", grid.to_json()),
+            ]),
+            ShardMsg::Fail { shard, message } => Json::obj(vec![
+                ("type", Json::from("fail")),
+                ("shard", Json::from(*shard)),
+                ("message", Json::from(message.clone())),
+            ]),
+            ShardMsg::Shutdown => Json::obj(vec![("type", Json::from("shutdown"))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<ShardMsg, WireError> {
+        match req_str(v, "type")? {
+            "init" => {
+                let mode_s = req_str(v, "mode")?;
+                let mode = ExchangeMode::parse(mode_s).ok_or_else(|| {
+                    WireError::BadMessage(format!("unknown exchange mode {mode_s:?}"))
+                })?;
+                let plan = PlanSpec::from_json(v.get("plan").ok_or_else(|| {
+                    WireError::BadMessage("init needs a plan".into())
+                })?)?;
+                let programs = match v.get("programs") {
+                    None => Vec::new(),
+                    Some(p) => p
+                        .as_arr()
+                        .ok_or_else(|| {
+                            WireError::BadMessage("programs must be an array".into())
+                        })?
+                        .to_vec(),
+                };
+                Ok(ShardMsg::Init {
+                    shard: req_usize(v, "shard")?,
+                    shards: req_usize(v, "shards")?,
+                    mode,
+                    plan,
+                    programs,
+                    chaos: v.get("chaos").and_then(Json::as_str).map(str::to_string),
+                })
+            }
+            "ready" => Ok(ShardMsg::Ready { shard: req_usize(v, "shard")? }),
+            "load" => Ok(ShardMsg::Load {
+                slab: GridPayload::from_json(v.get("slab").ok_or_else(|| {
+                    WireError::BadMessage("load needs a slab".into())
+                })?)?,
+                power: match v.get("power") {
+                    None => None,
+                    Some(p) => Some(GridPayload::from_json(p)?),
+                },
+            }),
+            "boundary" => Ok(ShardMsg::Boundary {
+                shard: req_usize(v, "shard")?,
+                chunk: req_usize(v, "chunk")?,
+                top: v.get("top").and_then(Json::as_str).map(str::to_string),
+                bottom: v.get("bottom").and_then(Json::as_str).map(str::to_string),
+            }),
+            "halo" => {
+                let side_s = req_str(v, "side")?;
+                Ok(ShardMsg::Halo {
+                    chunk: req_usize(v, "chunk")?,
+                    side: HaloSide::parse(side_s).ok_or_else(|| {
+                        WireError::BadMessage(format!("unknown halo side {side_s:?}"))
+                    })?,
+                    cells: req_str(v, "cells")?.to_string(),
+                })
+            }
+            "collect" => Ok(ShardMsg::Collect),
+            "interior" => Ok(ShardMsg::Interior {
+                shard: req_usize(v, "shard")?,
+                grid: GridPayload::from_json(v.get("grid").ok_or_else(|| {
+                    WireError::BadMessage("interior needs a grid".into())
+                })?)?,
+            }),
+            "fail" => Ok(ShardMsg::Fail {
+                shard: req_usize(v, "shard")?,
+                message: req_str(v, "message")?.to_string(),
+            }),
+            "shutdown" => Ok(ShardMsg::Shutdown),
+            other => {
+                Err(WireError::BadMessage(format!("unknown shard message type {other:?}")))
+            }
+        }
+    }
+}
+
+/// Encode a halo/boundary slab (a contiguous run of rows) bit-exactly.
+pub fn encode_cells(cells: &[f32]) -> String {
+    b64_encode_f32(cells)
+}
+
+/// Decode a slab and enforce the row geometry the receiver expects.
+pub fn decode_cells(text: &str, want_cells: usize) -> Result<Vec<f32>, WireError> {
+    let cells = b64_decode_f32(text)?;
+    if cells.len() != want_cells {
+        return Err(WireError::BadMessage(format!(
+            "halo slab holds {} cells, expected {want_cells}",
+            cells.len()
+        )));
+    }
+    Ok(cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_messages_round_trip() {
+        let spec = PlanSpec {
+            stencil: "diffusion2d".into(),
+            grid_dims: vec![64, 64],
+            iterations: 4,
+            backend: "scalar".into(),
+            tile: None,
+            coeffs: None,
+            step_sizes: None,
+            workers: None,
+            guard_nonfinite: None,
+        };
+        let msgs = vec![
+            ShardMsg::Init {
+                shard: 1,
+                shards: 4,
+                mode: ExchangeMode::Overlapped,
+                plan: spec.clone(),
+                programs: Vec::new(),
+                chaos: Some("7:kill=1@1".into()),
+            },
+            ShardMsg::Ready { shard: 1 },
+            ShardMsg::Boundary {
+                shard: 1,
+                chunk: 3,
+                top: Some(encode_cells(&[1.0, 2.0])),
+                bottom: None,
+            },
+            ShardMsg::Halo {
+                chunk: 3,
+                side: HaloSide::Bottom,
+                cells: encode_cells(&[f32::NAN, -0.0]),
+            },
+            ShardMsg::Collect,
+            ShardMsg::Fail { shard: 2, message: "plan build failed".into() },
+            ShardMsg::Shutdown,
+        ];
+        for m in msgs {
+            assert_eq!(ShardMsg::from_json(&m.to_json()).unwrap(), m, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn cell_slabs_validate_geometry() {
+        let cells = [1.0f32, f32::INFINITY, 3.0];
+        let text = encode_cells(&cells);
+        let back = decode_cells(&text, 3).unwrap();
+        for (a, b) in back.iter().zip(&cells) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(decode_cells(&text, 4).is_err(), "cell-count mismatch must be typed");
+    }
+
+    #[test]
+    fn modes_and_sides_parse() {
+        for m in [ExchangeMode::Overlapped, ExchangeMode::Blocking] {
+            assert_eq!(ExchangeMode::parse(m.code()), Some(m));
+        }
+        assert_eq!(ExchangeMode::parse("nope"), None);
+        for s in [HaloSide::Top, HaloSide::Bottom] {
+            assert_eq!(HaloSide::parse(s.code()), Some(s));
+        }
+    }
+}

@@ -1,0 +1,372 @@
+//! The shard worker: one process (or thread) owning one slab of the grid.
+//!
+//! A worker connects to the coordinator, rebuilds the *global* plan from
+//! the wire spec (so its partition arithmetic is the coordinator's,
+//! via [`ShardMap`]), loads its interior rows once, and then runs the
+//! T-fused sweep loop. Per chunk of `T` steps with `h = radius·T`:
+//!
+//! 1. **send** its first/last `h` input rows to the neighbours (one
+//!    `Boundary` frame — the write returns as soon as the kernel buffers
+//!    it, so the exchange is in flight immediately);
+//! 2. **compute the bulk interior** — output rows `[lo+h, hi−h)` depend
+//!    only on input rows `[lo, hi)` the worker already owns, so this
+//!    overlaps the exchange (the whole point: compute hides `radius·T`
+//!    communication, mirroring the paper's on-chip halo forwarding one
+//!    level up);
+//! 3. **drain** the neighbours' `Halo` frames (usually already queued in
+//!    the socket buffer by now) into a two-slot parity ring — a fast
+//!    neighbour may run one chunk ahead, so slot `chunk % 2` absorbs the
+//!    skew without blocking it;
+//! 4. **compute the boundary strips** `[lo, lo+h)` and `[hi−h, hi)` from
+//!    windows that straddle the received halos.
+//!
+//! In `Blocking` mode (the ablation baseline) steps 2–4 collapse into
+//! drain-then-compute-everything: identical messages, no overlap.
+//!
+//! Every strip is computed by the normal blocked [`Coordinator`] on a
+//! window extended `h` rows past the kept region (clamped at physical
+//! edges), so each cell's value is a pure function of its input cone —
+//! the same validity argument as single-device tile halos, which is why
+//! the sharded result is *bit-identical* to the single-process oracle.
+//! Windows are widened to at least `tile[0]` rows so the sub-plans
+//! schedule with the plan's own tile (tile partitioning does not affect
+//! per-cell values).
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::{Coordinator, Plan, PlanBuilder};
+use crate::engine::chaos::{ChaosPlan, FaultKind};
+use crate::engine::wire::frame::{read_frame, write_frame, GridPayload};
+use crate::runtime::Executor;
+use crate::stencil::{Grid, StencilProgram, StencilRegistry};
+
+use super::geometry::{copy_rows, ShardMap};
+use super::protocol::{decode_cells, encode_cells, ExchangeMode, HaloSide, ShardMsg};
+
+/// How long a worker waits on a silent coordinator before giving up —
+/// a backstop against orphaned workers, not a protocol timing.
+const WORKER_READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Connect to the coordinator at `addr` and serve one sharded run.
+///
+/// `hard_exit` selects how a chaos `kill` fault dies: worker *processes*
+/// (the hidden `fstencil worker` subcommand) call `std::process::exit`,
+/// thread-hosted workers (bench/test launcher) tear the socket down and
+/// return — either way the coordinator sees an abrupt transport death.
+pub fn run_worker(addr: &str, hard_exit: bool) -> Result<()> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("worker connecting to coordinator at {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(WORKER_READ_TIMEOUT)).ok();
+    serve(stream, hard_exit)
+}
+
+fn send(stream: &mut TcpStream, msg: &ShardMsg) -> Result<()> {
+    write_frame(stream, &msg.to_json()).map_err(|e| anyhow!("worker send: {e}"))
+}
+
+fn recv(stream: &mut TcpStream) -> Result<ShardMsg> {
+    let v = read_frame(stream).map_err(|e| anyhow!("worker recv: {e}"))?;
+    ShardMsg::from_json(&v).map_err(|e| anyhow!("worker recv: {e}"))
+}
+
+/// Serve one run over an established coordinator connection. On a typed
+/// failure the worker answers `Fail` (best-effort) before returning, so
+/// the coordinator can distinguish a give-up from a death.
+pub fn serve(mut stream: TcpStream, hard_exit: bool) -> Result<()> {
+    // Rank is unknown until Init; report shard 0 on pre-Init failures.
+    let mut shard_for_fail = 0usize;
+    let r = serve_inner(&mut stream, hard_exit, &mut shard_for_fail);
+    if let Err(e) = &r {
+        let _ = send(
+            &mut stream,
+            &ShardMsg::Fail { shard: shard_for_fail, message: format!("{e:#}") },
+        );
+    }
+    r
+}
+
+fn serve_inner(
+    stream: &mut TcpStream,
+    hard_exit: bool,
+    shard_for_fail: &mut usize,
+) -> Result<()> {
+    // ---- Init: rank, mode, plan, inline programs, chaos schedule.
+    let (shard, shards, mode, plan, chaos) = match recv(stream)? {
+        ShardMsg::Init { shard, shards, mode, plan, programs, chaos } => {
+            *shard_for_fail = shard;
+            for p in &programs {
+                let prog = StencilProgram::from_json(p)
+                    .context("bad inline stencil program in init")?;
+                StencilRegistry::register(prog).context("stencil registration failed")?;
+            }
+            let built = plan.build().map_err(|e| anyhow!("worker plan build: {e}"))?;
+            let chaos = match chaos {
+                None => None,
+                Some(spec) => {
+                    Some(ChaosPlan::parse(&spec).map_err(|e| anyhow!("worker chaos: {e}"))?)
+                }
+            };
+            (shard, shards, mode, built, chaos)
+        }
+        other => bail!("worker expected init, got {other:?}"),
+    };
+    ensure!(shard < shards, "rank {shard} out of range for {shards} shards");
+    let def = plan.stencil.def();
+    let map = ShardMap::new(plan.grid_dims[0], shards);
+    let (lo, hi) = map.slab(shard);
+    let n = hi - lo;
+    let row_cells: usize = plan.grid_dims[1..].iter().product();
+    // Warm single-tenant execution context: one executor for every window
+    // of every chunk (buffers and threads stay hot across sweeps).
+    let exec = plan.executor();
+    send(stream, &ShardMsg::Ready { shard })?;
+
+    // ---- Load: interior slab + power pre-extended by the max halo.
+    let (mut cur, power, power_base) = match recv(stream)? {
+        ShardMsg::Load { slab, power } => {
+            let cur = slab.to_grid().map_err(|e| anyhow!("worker load: {e}"))?;
+            ensure!(
+                cur.dims()[0] == n && cur.dims()[1..] == plan.grid_dims[1..],
+                "load slab dims {:?} do not match shard {shard}'s {n} rows",
+                cur.dims()
+            );
+            let (plo, phi) = map.extended(shard, plan.max_halo());
+            let power = match power {
+                None => None,
+                Some(p) => {
+                    let g = p.to_grid().map_err(|e| anyhow!("worker load power: {e}"))?;
+                    ensure!(
+                        g.dims()[0] == phi - plo,
+                        "power slab dims {:?} do not match extended range [{plo}, {phi})",
+                        g.dims()
+                    );
+                    Some(g)
+                }
+            };
+            (cur, power, plo)
+        }
+        other => bail!("worker expected load, got {other:?}"),
+    };
+    ensure!(power.is_some() == def.has_power, "power slab mismatch");
+
+    // ---- The sweep loop: one Boundary/Halo round per chunk.
+    // Two-slot parity ring for received halos: slot chunk%2, so a
+    // neighbour running one chunk ahead never blocks behind us.
+    let mut ring: [Vec<(HaloSide, Vec<f32>)>; 2] = [Vec::new(), Vec::new()];
+    for (k, &steps) in plan.chunks.iter().enumerate() {
+        let h = def.radius * steps;
+        ensure!(n >= h, "shard {shard} interior {n} is thinner than the {h}-row halo");
+
+        // Chaos: die abruptly mid-sweep. The decision key is
+        // (job=chunk, attempt=shard+1, tile=shard), so `kill=1@R` kills
+        // exactly shards 0..R (rate 1, attempt cap R) at chunk 0.
+        if let Some(cp) = &chaos {
+            if cp.should(FaultKind::WorkerKill, k as u64, shard as u32 + 1, shard as u64) {
+                if hard_exit {
+                    std::process::exit(3);
+                }
+                stream.shutdown(std::net::Shutdown::Both).ok();
+                return Ok(());
+            }
+        }
+
+        let has_top = shard > 0; // neighbour above (smaller row index)
+        let has_bot = shard + 1 < shards;
+        if has_top || has_bot {
+            send(
+                stream,
+                &ShardMsg::Boundary {
+                    shard,
+                    chunk: k,
+                    top: has_top.then(|| encode_cells(&cur.data()[..h * row_cells])),
+                    bottom: has_bot.then(|| encode_cells(&cur.data()[(n - h) * row_cells..])),
+                },
+            )?;
+        }
+
+        let mut interior_out: Option<Vec<f32>> = None;
+        let valid_lo = if has_top { lo + h } else { lo };
+        let valid_hi = if has_bot { hi - h } else { hi };
+        if mode == ExchangeMode::Overlapped {
+            // Bulk interior first: needs only rows we own, so it runs
+            // while the boundary slabs are in flight.
+            interior_out = Some(sweep_window(
+                &plan,
+                exec.as_ref(),
+                steps,
+                &cur,
+                lo,
+                power.as_ref(),
+                power_base,
+                (lo, hi),
+                (valid_lo, valid_hi),
+            )?);
+        }
+
+        // Drain this chunk's halos (ring-buffered; chunk k+1 arrivals
+        // park in the other parity slot).
+        let mut top_halo: Option<Vec<f32>> = None;
+        let mut bot_halo: Option<Vec<f32>> = None;
+        let want = usize::from(has_top) + usize::from(has_bot);
+        while ring[k % 2].len() < want {
+            match recv(stream)? {
+                ShardMsg::Halo { chunk, side, cells } => {
+                    ensure!(
+                        (chunk == k || chunk == k + 1) && chunk < plan.chunks.len(),
+                        "halo for chunk {chunk} arrived during chunk {k} (ring overrun)"
+                    );
+                    let hc = def.radius * plan.chunks[chunk];
+                    ring[chunk % 2].push((side, decode_cells(&cells, hc * row_cells)?));
+                }
+                other => bail!("worker expected halo, got {other:?}"),
+            }
+        }
+        for (side, cells) in ring[k % 2].drain(..) {
+            match side {
+                HaloSide::Top => top_halo = Some(cells),
+                HaloSide::Bottom => bot_halo = Some(cells),
+            }
+        }
+        ensure!(top_halo.is_some() == has_top, "shard {shard}: top halo mismatch");
+        ensure!(bot_halo.is_some() == has_bot, "shard {shard}: bottom halo mismatch");
+
+        // Extended slab [elo, ehi): received top rows ++ interior ++
+        // received bottom rows.
+        let elo = lo - if has_top { h } else { 0 };
+        let ehi = hi + if has_bot { h } else { 0 };
+        let mut ext_data = Vec::with_capacity((ehi - elo) * row_cells);
+        if let Some(t) = &top_halo {
+            ext_data.extend_from_slice(t);
+        }
+        ext_data.extend_from_slice(cur.data());
+        if let Some(b) = &bot_halo {
+            ext_data.extend_from_slice(b);
+        }
+        let mut ext_dims = plan.grid_dims.clone();
+        ext_dims[0] = ehi - elo;
+        let ext = Grid::from_vec(&ext_dims, ext_data);
+
+        let mut out = Vec::with_capacity(n * row_cells);
+        match mode {
+            ExchangeMode::Overlapped => {
+                // Boundary strips from windows straddling the halos.
+                if has_top {
+                    let win = widen((lo - h, (lo + 2 * h).min(ehi)), (elo, ehi), plan.tile[0]);
+                    out.extend(sweep_window(
+                        &plan,
+                        exec.as_ref(),
+                        steps,
+                        &ext,
+                        elo,
+                        power.as_ref(),
+                        power_base,
+                        win,
+                        (lo, lo + h),
+                    )?);
+                }
+                out.extend(interior_out.expect("interior computed before drain"));
+                if has_bot {
+                    let win =
+                        widen((hi.saturating_sub(2 * h).max(elo), hi + h), (elo, ehi), plan.tile[0]);
+                    out.extend(sweep_window(
+                        &plan,
+                        exec.as_ref(),
+                        steps,
+                        &ext,
+                        elo,
+                        power.as_ref(),
+                        power_base,
+                        win,
+                        (hi - h, hi),
+                    )?);
+                }
+            }
+            ExchangeMode::Blocking => {
+                // Ablation baseline: exchange finished, now compute the
+                // whole extended slab and keep the interior.
+                out.extend(sweep_window(
+                    &plan,
+                    exec.as_ref(),
+                    steps,
+                    &ext,
+                    elo,
+                    power.as_ref(),
+                    power_base,
+                    (elo, ehi),
+                    (lo, hi),
+                )?);
+            }
+        }
+        ensure!(out.len() == n * row_cells, "chunk {k} output does not tile the slab");
+        let mut dims = plan.grid_dims.clone();
+        dims[0] = n;
+        cur = Grid::from_vec(&dims, out);
+    }
+
+    // ---- Collect / Shutdown.
+    match recv(stream)? {
+        ShardMsg::Collect => {}
+        other => bail!("worker expected collect, got {other:?}"),
+    }
+    send(stream, &ShardMsg::Interior { shard, grid: GridPayload::from_grid(&cur) })?;
+    match recv(stream) {
+        Ok(ShardMsg::Shutdown) | Err(_) => Ok(()), // a vanished coordinator is a clean end
+        Ok(other) => bail!("worker expected shutdown, got {other:?}"),
+    }
+}
+
+/// Widen `(win_lo, win_hi)` within `(avail_lo, avail_hi)` until it holds
+/// at least `min_rows` rows, so boundary-strip sub-plans always satisfy
+/// the plan's own tile along axis 0. Extra rows only enlarge the window's
+/// valid region — per-cell values are unchanged.
+fn widen(win: (usize, usize), avail: (usize, usize), min_rows: usize) -> (usize, usize) {
+    let (mut lo, mut hi) = (win.0.max(avail.0), win.1.min(avail.1));
+    if hi - lo < min_rows {
+        hi = (lo + min_rows).min(avail.1);
+    }
+    if hi - lo < min_rows {
+        lo = hi.saturating_sub(min_rows).max(avail.0);
+    }
+    (lo, hi)
+}
+
+/// Run `steps` fused time-steps over the global input window `[win)`,
+/// returning the rows `[keep)` of the result. `ext` holds the available
+/// input rows starting at global row `base`; `power` (when present)
+/// starts at global row `power_base`. Validity: every kept cell's
+/// `radius·steps` input cone lies inside the window (or the window edge
+/// is the physical grid edge), so the kept rows are bit-identical to the
+/// full-grid computation.
+fn sweep_window(
+    plan: &Plan,
+    exec: &(dyn Executor + Send + Sync),
+    steps: usize,
+    ext: &Grid,
+    base: usize,
+    power: Option<&Grid>,
+    power_base: usize,
+    win: (usize, usize),
+    keep: (usize, usize),
+) -> Result<Vec<f32>> {
+    let row_cells: usize = plan.grid_dims[1..].iter().product();
+    let mut sub = copy_rows(ext, win.0 - base, win.1 - base);
+    let psub = power.map(|p| copy_rows(p, win.0 - power_base, win.1 - power_base));
+    let mut dims = plan.grid_dims.clone();
+    dims[0] = win.1 - win.0;
+    let sub_plan = PlanBuilder::new(plan.stencil)
+        .grid_dims(dims)
+        .iterations(steps)
+        .coeffs(plan.coeffs.clone())
+        .tile(plan.tile.clone())
+        .step_sizes(vec![steps])
+        .backend(plan.backend)
+        .build()?;
+    Coordinator::new(sub_plan).run(exec, &mut sub, psub.as_ref())?;
+    let a = (keep.0 - win.0) * row_cells;
+    let b = (keep.1 - win.0) * row_cells;
+    Ok(sub.data()[a..b].to_vec())
+}

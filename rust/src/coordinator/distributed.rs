@@ -19,6 +19,7 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::cluster::geometry::{copy_rows, ShardMap};
 use crate::runtime::Executor;
 use crate::stencil::Grid;
 
@@ -64,24 +65,16 @@ impl DistributedCoordinator {
         DistributedCoordinator { plan, workers: workers.max(1) }
     }
 
-    /// Slab row-range `[lo, hi)` of worker `w` along axis 0.
-    fn slab(&self, w: usize) -> (usize, usize) {
-        let dim0 = self.plan.grid_dims[0];
-        let per = dim0.div_ceil(self.workers);
-        let lo = (w * per).min(dim0);
-        let hi = ((w + 1) * per).min(dim0);
-        (lo, hi)
+    /// The shared slab partition (one source of truth with the
+    /// multi-process [`crate::cluster::ClusterCoordinator`] and the
+    /// static auditor's shardability predicate).
+    fn map(&self) -> ShardMap {
+        ShardMap::new(self.plan.grid_dims[0], self.workers)
     }
 
-    /// Copy rows `[lo, hi)` (clamped coordinates are the caller's job) of
-    /// `src` into a fresh grid of the same trailing dims.
-    fn copy_rows(src: &Grid, lo: usize, hi: usize) -> Grid {
-        let dims = src.dims();
-        let row_cells: usize = dims[1..].iter().product();
-        let mut out_dims = dims.clone();
-        out_dims[0] = hi - lo;
-        let data = src.data()[lo * row_cells..hi * row_cells].to_vec();
-        Grid::from_vec(&out_dims, data)
+    /// Slab row-range `[lo, hi)` of worker `w` along axis 0.
+    fn slab(&self, w: usize) -> (usize, usize) {
+        self.map().slab(w)
     }
 
     /// Run with the executor the plan itself selects ([`Plan::executor`]):
@@ -137,8 +130,8 @@ impl DistributedCoordinator {
                                 // rows, clamped at the true grid edges
                                 let elo = lo.saturating_sub(halo);
                                 let ehi = (hi + halo).min(dim0);
-                                let mut slab = Self::copy_rows(cur_ref, elo, ehi);
-                                let pslab = power.map(|p| Self::copy_rows(p, elo, ehi));
+                                let mut slab = copy_rows(cur_ref, elo, ehi);
+                                let pslab = power.map(|p| copy_rows(p, elo, ehi));
                                 let mut dims = plan.grid_dims.clone();
                                 dims[0] = ehi - elo;
                                 let sub_plan = PlanBuilder::new(plan.stencil)

@@ -284,6 +284,16 @@ impl PlanBuilder {
         self.backend.validate()?;
         if let Some(w) = self.workers {
             ensure!(w > 0, "workers must be positive");
+            // Under the balanced slab partition (crate::cluster::ShardMap)
+            // a shard is empty exactly when workers outnumber rows — no
+            // partition scheme can give every worker a row then.
+            ensure!(
+                w <= grid_dims[0],
+                "{w} workers over {} rows leave workers with zero interior rows; \
+                 use at most {} workers",
+                grid_dims[0],
+                grid_dims[0]
+            );
         }
         ensure!(!self.step_sizes.is_empty(), "step_sizes must not be empty");
         // A zero step would satisfy the greedy scheduler's predicate
@@ -472,6 +482,28 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("workers"), "{err}");
+    }
+
+    #[test]
+    fn degenerate_worker_partition_rejected_at_build() {
+        // 9 rows cannot feed 12 workers: some worker must get zero rows
+        // under any slab partition.
+        let err = PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![9, 64])
+            .iterations(1)
+            .tile(vec![4, 32])
+            .workers(12)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("zero interior rows"), "{err}");
+        // One row per worker is the boundary: still buildable.
+        PlanBuilder::new(StencilKind::Diffusion2D)
+            .grid_dims(vec![9, 64])
+            .iterations(1)
+            .tile(vec![4, 32])
+            .workers(9)
+            .build()
+            .unwrap();
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //! - **[`super::wire::JobLedger`] IO**: `journal` drops an append, `short`
 //!   writes half a record with no newline (a torn tail for replay to skip);
 //! - the **wire frontend**: `ckpt` corrupts a checkpoint sidecar as it is
-//!   written, `drop` severs a connection after a response frame.
+//!   written, `drop` severs a connection after a response frame;
+//! - the **cluster coordinator** ([`crate::cluster`]): `kill` makes a
+//!   shard worker die abruptly mid-sweep (process exit / socket teardown),
+//!   exercising the worker-death → typed-failure path.
 //!
 //! CLI form: `serve --chaos '<seed>:<kind>=<rate>[@<max_attempt>],...'`,
 //! e.g. `--chaos '42:exec=0.05,slow=0.1,drop=0.01'`. The optional `@N`
@@ -44,17 +47,21 @@ pub enum FaultKind {
     CheckpointCorrupt,
     /// A wire connection is severed after answering a frame.
     ConnDrop,
+    /// A cluster worker process dies abruptly mid-sweep (the shard's
+    /// process exits / its socket is torn down without a goodbye).
+    WorkerKill,
 }
 
 impl FaultKind {
     /// Every kind, in spec-grammar order.
-    pub const ALL: [FaultKind; 6] = [
+    pub const ALL: [FaultKind; 7] = [
         FaultKind::ExecFail,
         FaultKind::SlowTile,
         FaultKind::JournalFail,
         FaultKind::JournalShortWrite,
         FaultKind::CheckpointCorrupt,
         FaultKind::ConnDrop,
+        FaultKind::WorkerKill,
     ];
 
     /// The spec-grammar spelling.
@@ -66,6 +73,7 @@ impl FaultKind {
             FaultKind::JournalShortWrite => "short",
             FaultKind::CheckpointCorrupt => "ckpt",
             FaultKind::ConnDrop => "drop",
+            FaultKind::WorkerKill => "kill",
         }
     }
 
@@ -84,6 +92,7 @@ impl FaultKind {
             FaultKind::JournalShortWrite => 0x5087_0004_9E37_79B9,
             FaultKind::CheckpointCorrupt => 0xCC97_0005_9E37_79B9,
             FaultKind::ConnDrop => 0xD809_0006_9E37_79B9,
+            FaultKind::WorkerKill => 0x3177_0007_9E37_79B9,
         }
     }
 
@@ -112,7 +121,7 @@ pub struct ChaosPlan {
     seed: u64,
     rules: Vec<Rule>,
     /// Injection counters per kind (observability: health check, logs).
-    injected: [AtomicU64; 6],
+    injected: [AtomicU64; 7],
 }
 
 /// splitmix64 finalizer: a cheap, well-mixed avalanche.
@@ -128,7 +137,7 @@ fn mix(mut x: u64) -> u64 {
 impl ChaosPlan {
     /// An empty (never-injecting) plan with the given seed.
     pub fn new(seed: u64) -> ChaosPlan {
-        ChaosPlan { seed, rules: Vec::new(), injected: [(); 6].map(|()| AtomicU64::new(0)) }
+        ChaosPlan { seed, rules: Vec::new(), injected: [(); 7].map(|()| AtomicU64::new(0)) }
     }
 
     /// Add or replace the rule for `kind`. `max_attempt == 0` means no
@@ -325,6 +334,22 @@ mod tests {
         assert!(!always.should(FaultKind::ConnDrop, 9, 1, 0));
         assert_eq!(always.injected(FaultKind::ExecFail), 64);
         assert_eq!(always.total_injected(), 64);
+    }
+
+    #[test]
+    fn worker_kill_kind_parses_and_draws_independently() {
+        let plan = ChaosPlan::parse("11:kill=1@1").unwrap();
+        assert!(plan.active());
+        assert!(plan.should(FaultKind::WorkerKill, 1, 1, 0));
+        assert!(!plan.should(FaultKind::WorkerKill, 1, 2, 0), "capped at attempt 1");
+        assert_eq!(plan.to_string(), "11:kill=1@1");
+        // kill draws from its own salt, not drop's.
+        let both =
+            ChaosPlan::new(5).rule(FaultKind::ConnDrop, 0.5, 0).rule(FaultKind::WorkerKill, 0.5, 0);
+        let diverges = (0..200u64).any(|t| {
+            both.should(FaultKind::ConnDrop, 1, 1, t) != both.should(FaultKind::WorkerKill, 1, 1, t)
+        });
+        assert!(diverges, "drop and kill schedules are identical — salts broken");
     }
 
     #[test]

@@ -40,6 +40,11 @@ pub enum EngineError {
     /// The session's worker pool disappeared mid-submission (a worker
     /// thread exited or a channel closed unexpectedly).
     WorkerLost,
+    /// A cluster shard worker process died (or its connection tore)
+    /// mid-sweep: the coordinator fails the whole job — a partially
+    /// exchanged grid is never returned. `shard` is the dead worker's
+    /// rank; `message` carries the transport-level cause.
+    ShardLost { shard: usize, message: String },
     /// The job's deadline passed before it finished: queued jobs fail
     /// fast at the next scheduler pass, active jobs stop dispatching and
     /// drain their in-flight tiles first.
@@ -80,6 +85,9 @@ impl fmt::Display for EngineError {
             EngineError::Cancelled => f.write_str("job cancelled"),
             EngineError::Shutdown => f.write_str("engine server is shut down"),
             EngineError::WorkerLost => f.write_str("session worker pool exited early"),
+            EngineError::ShardLost { shard, message } => {
+                write!(f, "cluster shard {shard} lost mid-sweep: {message}")
+            }
             EngineError::DeadlineExceeded => f.write_str("job deadline exceeded"),
             EngineError::NonFinite { tile, iter } => write!(
                 f,
@@ -122,6 +130,9 @@ mod tests {
             .to_string()
             .contains("[32, 32]"));
         assert!(EngineError::DeadlineExceeded.to_string().contains("deadline"));
+        let sl = EngineError::ShardLost { shard: 2, message: "connection closed".into() }
+            .to_string();
+        assert!(sl.contains("shard 2") && sl.contains("connection closed"));
         let nf = EngineError::NonFinite { tile: 3, iter: 8 }.to_string();
         assert!(nf.contains("tile 3") && nf.contains("iteration 8"));
     }

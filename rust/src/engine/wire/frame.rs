@@ -1,0 +1,366 @@
+//! The shared frame codec: length-prefixed JSON frames, base64, and the
+//! bit-exact grid payload encoding.
+//!
+//! One frame = a 4-byte big-endian length followed by that many bytes of
+//! UTF-8 JSON. Extracted out of [`super::protocol`] so the job protocol
+//! and the cluster halo/shard-control messages ([`crate::cluster`]) ride
+//! one implementation — there is exactly one framing codec and one base64
+//! in the tree, and both protocol layers inherit the same hostile-input
+//! guarantees (torn, oversized and garbage frames are typed rejections,
+//! never panics or hangs).
+
+use std::io::{Read, Write};
+
+use crate::stencil::Grid;
+use crate::util::json::Json;
+
+use super::protocol::WireError;
+
+/// Hard cap on one frame's body. Large enough for a 2048³ f32 grid in
+/// base64, small enough that a hostile length prefix cannot OOM the
+/// server: oversized frames are rejected before any body byte is read.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+// ---------------------------------------------------------------- framing
+
+/// Encode one frame (length prefix + serialized JSON) into a byte vector.
+pub fn encode_frame(msg: &Json) -> Vec<u8> {
+    let body = msg.to_string().into_bytes();
+    let mut out = Vec::with_capacity(4 + body.len());
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Write one frame to `w` (a single `write_all`, so small frames are one
+/// syscall; callers wanting Nagle off set `TCP_NODELAY` on the stream).
+pub fn write_frame<W: Write>(w: &mut W, msg: &Json) -> Result<(), WireError> {
+    w.write_all(&encode_frame(msg))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes, mapping EOF to [`WireError::Torn`].
+fn read_body<R: Read>(r: &mut R, buf: &mut [u8], want: usize) -> Result<(), WireError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => return Err(WireError::Torn { got, want }),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame. A clean EOF before any header byte is
+/// [`WireError::Closed`]; EOF inside the header or body is
+/// [`WireError::Torn`]; a hostile length prefix is rejected as
+/// [`WireError::Oversized`] *before* the body is read.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Json, WireError> {
+    let mut header = [0u8; 4];
+    // First byte separately: 0 bytes here is a clean close, not a tear.
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Err(WireError::Closed),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    header[0] = first[0];
+    read_body(r, &mut header[1..], 4)?;
+    let len = u32::from_be_bytes(header) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized { len, max: MAX_FRAME_BYTES });
+    }
+    let mut body = vec![0u8; len];
+    read_body(r, &mut body, len)?;
+    let text = String::from_utf8(body)
+        .map_err(|e| WireError::BadJson(format!("invalid utf-8: {e}")))?;
+    Json::parse(&text).map_err(|e| WireError::BadJson(e.to_string()))
+}
+
+// ----------------------------------------------------------------- base64
+
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 with padding (in-tree substrate; no crates offline).
+pub fn b64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = (u32::from(b[0]) << 16) | (u32::from(b[1]) << 8) | u32::from(b[2]);
+        out.push(B64_ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { B64_ALPHABET[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64_ALPHABET[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+fn b64_val(c: u8) -> Option<u32> {
+    match c {
+        b'A'..=b'Z' => Some(u32::from(c - b'A')),
+        b'a'..=b'z' => Some(u32::from(c - b'a') + 26),
+        b'0'..=b'9' => Some(u32::from(c - b'0') + 52),
+        b'+' => Some(62),
+        b'/' => Some(63),
+        _ => None,
+    }
+}
+
+/// Decode standard base64 (padding required). Rejects bad lengths,
+/// foreign characters and misplaced padding with a typed error.
+pub fn b64_decode(text: &str) -> Result<Vec<u8>, WireError> {
+    let bytes = text.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(WireError::BadMessage(format!(
+            "base64 length {} is not a multiple of 4",
+            bytes.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (ci, chunk) in bytes.chunks(4).enumerate() {
+        let last = ci + 1 == bytes.len() / 4;
+        let pads = chunk.iter().rev().take_while(|&&c| c == b'=').count();
+        if pads > 2 || (pads > 0 && !last) {
+            return Err(WireError::BadMessage("misplaced base64 padding".into()));
+        }
+        let mut n = 0u32;
+        for &c in &chunk[..4 - pads] {
+            n = (n << 6)
+                | b64_val(c).ok_or_else(|| {
+                    WireError::BadMessage(format!("bad base64 character {:?}", c as char))
+                })?;
+        }
+        n <<= 6 * pads as u32;
+        out.push((n >> 16) as u8);
+        if pads < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pads < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+// ----------------------------------------------------------- grid payload
+
+/// A grid on the wire: dims plus base64 of the little-endian f32 bytes.
+/// Byte-level encoding means results round-trip *bit*-exactly (NaN
+/// payloads included) — JSON numbers would be lossy and 3× bigger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridPayload {
+    pub dims: Vec<usize>,
+    pub data_b64: String,
+}
+
+impl GridPayload {
+    pub fn from_grid(grid: &Grid) -> GridPayload {
+        GridPayload { dims: grid.dims(), data_b64: b64_encode_f32(grid.data()) }
+    }
+
+    pub fn to_grid(&self) -> Result<Grid, WireError> {
+        let cells: usize = self.dims.iter().product();
+        if self.dims.is_empty() || cells == 0 {
+            return Err(WireError::BadMessage(format!("bad grid dims {:?}", self.dims)));
+        }
+        let data = b64_decode_f32(&self.data_b64)?;
+        if data.len() != cells {
+            return Err(WireError::BadMessage(format!(
+                "grid payload holds {} cells but dims {:?} need {}",
+                data.len(),
+                self.dims,
+                cells
+            )));
+        }
+        Ok(Grid::from_vec(&self.dims, data))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dims", usize_arr(&self.dims)),
+            ("data", Json::from(self.data_b64.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<GridPayload, WireError> {
+        Ok(GridPayload {
+            dims: req_usize_arr(v, "dims")?,
+            data_b64: req_str(v, "data")?.to_string(),
+        })
+    }
+}
+
+/// Base64 of a cell slice's little-endian f32 bytes — the bit-exact cell
+/// encoding shared by [`GridPayload`] and the cluster halo slabs (which
+/// ship raw row runs without a dims header).
+pub fn b64_encode_f32(cells: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(cells.len() * 4);
+    for v in cells {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    b64_encode(&bytes)
+}
+
+/// Inverse of [`b64_encode_f32`]; rejects byte counts that are not a
+/// multiple of the 4-byte cell size.
+pub fn b64_decode_f32(text: &str) -> Result<Vec<f32>, WireError> {
+    let bytes = b64_decode(text)?;
+    if bytes.len() % 4 != 0 {
+        return Err(WireError::BadMessage(format!(
+            "cell payload holds {} bytes, not a multiple of 4",
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+// ------------------------------------------------------------ json access
+
+/// u64 ids ride as JSON numbers; f64 is exact for ids below 2^53, far
+/// beyond any journal's lifetime.
+pub(crate) fn u64_json(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+pub(crate) fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::from(x)).collect())
+}
+
+pub(crate) fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, WireError> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| WireError::BadMessage(format!("missing string field {key:?}")))
+}
+
+pub(crate) fn req_u64(v: &Json, key: &str) -> Result<u64, WireError> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+        .map(|n| n as u64)
+        .ok_or_else(|| WireError::BadMessage(format!("missing integer field {key:?}")))
+}
+
+pub(crate) fn req_usize(v: &Json, key: &str) -> Result<usize, WireError> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| WireError::BadMessage(format!("missing integer field {key:?}")))
+}
+
+pub(crate) fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>, WireError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| Some(n as u64))
+            .ok_or_else(|| WireError::BadMessage(format!("field {key:?} must be an integer"))),
+    }
+}
+
+pub(crate) fn opt_usize(v: &Json, key: &str) -> Result<Option<usize>, WireError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| WireError::BadMessage(format!("field {key:?} must be an integer"))),
+    }
+}
+
+pub(crate) fn req_usize_arr(v: &Json, key: &str) -> Result<Vec<usize>, WireError> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .and_then(|a| a.iter().map(Json::as_usize).collect::<Option<Vec<_>>>())
+        .ok_or_else(|| WireError::BadMessage(format!("missing integer array {key:?}")))
+}
+
+pub(crate) fn opt_usize_arr(v: &Json, key: &str) -> Result<Option<Vec<usize>>, WireError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_arr()
+            .and_then(|a| a.iter().map(Json::as_usize).collect::<Option<Vec<_>>>())
+            .map(Some)
+            .ok_or_else(|| {
+                WireError::BadMessage(format!("field {key:?} must be an integer array"))
+            }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_round_trips() {
+        let msg = Json::obj(vec![("type", Json::from("ping")), ("n", Json::from(42usize))]);
+        let bytes = encode_frame(&msg);
+        let got = read_frame(&mut Cursor::new(bytes)).unwrap();
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn clean_eof_is_closed_not_torn() {
+        let empty: &[u8] = &[];
+        assert_eq!(read_frame(&mut Cursor::new(empty)), Err(WireError::Closed));
+    }
+
+    #[test]
+    fn oversized_prefix_rejected_before_body() {
+        let mut bytes = ((MAX_FRAME_BYTES + 1) as u32).to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"xx");
+        let err = read_frame(&mut Cursor::new(bytes)).unwrap_err();
+        assert!(matches!(err, WireError::Oversized { .. }));
+    }
+
+    #[test]
+    fn base64_vectors() {
+        assert_eq!(b64_encode(b""), "");
+        assert_eq!(b64_encode(b"f"), "Zg==");
+        assert_eq!(b64_encode(b"fo"), "Zm8=");
+        assert_eq!(b64_encode(b"foo"), "Zm9v");
+        assert_eq!(b64_decode("Zm9vYmFy").unwrap(), b"foobar");
+        assert!(b64_decode("Zm9").is_err());
+        assert!(b64_decode("Z=9v").is_err());
+        assert!(b64_decode("Zm9!").is_err());
+    }
+
+    #[test]
+    fn grid_payload_is_bit_exact() {
+        let mut g = Grid::new2d(5, 7);
+        g.fill_random(3, -10.0, 10.0);
+        g.data_mut()[0] = f32::NAN;
+        g.data_mut()[1] = f32::NEG_INFINITY;
+        g.data_mut()[2] = -0.0;
+        let p = GridPayload::from_grid(&g);
+        let back = p.to_grid().unwrap();
+        assert_eq!(back.dims(), g.dims());
+        for (a, b) in back.data().iter().zip(g.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_slab_codec_is_bit_exact_and_rejects_partial_cells() {
+        let cells = [1.5f32, f32::NAN, -0.0, f32::INFINITY, 3.25e-12];
+        let text = b64_encode_f32(&cells);
+        let back = b64_decode_f32(&text).unwrap();
+        assert_eq!(back.len(), cells.len());
+        for (a, b) in back.iter().zip(&cells) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // 3 bytes decodes fine as base64 but is not a whole f32 cell.
+        assert!(b64_decode_f32(&b64_encode(b"abc")).is_err());
+    }
+}

@@ -6,8 +6,11 @@
 //!
 //! Layering, bottom-up:
 //!
-//! - [`protocol`] — frame codec (u32 length prefix + JSON), base64 grid
-//!   payloads, typed requests/responses/errors;
+//! - [`frame`] — the shared frame codec (u32 length prefix + JSON),
+//!   base64, bit-exact grid payloads — also the transport substrate for
+//!   the cluster halo protocol ([`crate::cluster`]);
+//! - [`protocol`] — typed job-lifecycle requests/responses/errors over
+//!   the frame codec;
 //! - [`queue`] — job states, status ledger, journal replay + compaction;
 //! - [`checkpoint`] — crash-safe mid-job grid snapshots (sidecar files
 //!   next to the journal) that let a rebound frontend *resume* a job from
@@ -21,6 +24,7 @@
 
 pub mod checkpoint;
 pub mod client;
+pub mod frame;
 pub mod frontend;
 pub mod protocol;
 pub mod queue;

@@ -13,6 +13,8 @@
 //!   table2..table6, fig6
 //!             regenerate the paper's tables/figure
 //!   baseline  temporal-only prior-work comparison (input-size caps)
+//!   cluster   multi-process sharded run with radius×T halo exchange
+//!   worker    cluster worker entrypoint (spawned by `cluster`)
 //!
 //! `--stencil-file <path.json>` (accepted by every subcommand) registers
 //! runtime-defined stencil programs before anything else runs, so
@@ -96,6 +98,8 @@ fn dispatch(sub: &str, args: &Args) -> anyhow::Result<ExitCode> {
         "baseline" => cmd_baseline(args),
         "hlostats" => cmd_hlostats(args),
         "dram" => cmd_dram(args),
+        "cluster" => cmd_cluster(args),
+        "worker" => cmd_worker(args),
         _ => {
             // Same usage-error exit code (2) as the missing-subcommand
             // path, distinct from runtime failures (1).
@@ -158,6 +162,17 @@ USAGE: fstencil <subcommand> [options]
   hlostats  [--artifacts DIR]   per-artifact HLO instruction histograms
   dram      --stencil <name> [--bsize B] [--par-vec V] [--par-time T]
             DDR bank-state analysis of the blocked access pattern
+  cluster   --shards N [--stencil <name>] [--dims H,W[,D]] [--iters N]
+            [--tile a,b] [--backend scalar|vec|stream] [--par-vec V]
+            [--mode overlapped|blocking] [--threads] [--chaos SPEC] [--check]
+            multi-process sharded run: N real worker processes (this
+            binary, `worker` subcommand) over loopback TCP, slab-sharded
+            along axis 0 with per-chunk radius x T halo exchange;
+            --mode blocking disables compute/exchange overlap (ablation),
+            --threads hosts workers on threads (same wire traffic),
+            --check verifies bit-identity against the in-process oracle
+  worker    --connect <host:port>   cluster worker entrypoint (spawned by
+            `cluster`; not for interactive use)
 
 every subcommand also accepts --stencil-file <path.json>, which registers
 runtime-defined stencil programs (see stencils/vonneumann_r3.json); they
@@ -1297,4 +1312,96 @@ fn cmd_baseline(args: &Args) -> anyhow::Result<()> {
         "  combined blocking (this work) supports UNRESTRICTED dims — e.g. 16384+ cells wide"
     );
     Ok(())
+}
+
+/// `cluster`: the multi-process sharded run. Spawns `--shards` copies of
+/// this binary as workers (`worker --connect`), shards the grid into
+/// slabs along axis 0 and drives the per-chunk `radius x T` halo relay;
+/// workers overlap interior compute with the exchange unless
+/// `--mode blocking` (the ablation baseline). `--check` reruns the plan
+/// in-process and requires bit-identity — the subsystem's headline
+/// invariant.
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    use fstencil::cluster::{ClusterCoordinator, ExchangeMode, WorkerLauncher};
+
+    let kind = parse_stencil(args)?;
+    let dims = default_dims(args, kind);
+    let iters = args.opt_usize("iters").unwrap_or(8);
+    let shards = args.opt_usize("shards").unwrap_or(2).max(1);
+    let mode = match args.opt_or("mode", "overlapped") {
+        "overlapped" => ExchangeMode::Overlapped,
+        "blocking" => ExchangeMode::Blocking,
+        other => anyhow::bail!("unknown --mode {other:?} (overlapped | blocking)"),
+    };
+    let mut backend = Backend::parse(args.opt_or("backend", "vec"))?;
+    if let Some(pv) = args.opt_usize("par-vec") {
+        backend = backend.with_par_vec(pv);
+        backend.validate()?;
+    }
+    let mut builder =
+        PlanBuilder::new(kind).grid_dims(dims.clone()).iterations(iters).backend(backend);
+    if let Some(tile) = args.opt_usize_list("tile") {
+        builder = builder.tile(tile);
+    }
+    let plan = builder.build()?;
+
+    let mut grid = match dims.as_slice() {
+        [h, w] => Grid::new2d(*h, *w),
+        [d, h, w] => Grid::new3d(*d, *h, *w),
+        _ => anyhow::bail!("dims must be 2 or 3 long"),
+    };
+    grid.fill_gaussian(300.0, 50.0, 0.1);
+    let power = kind.def().has_power.then(|| {
+        let mut p = grid.clone();
+        p.fill_random(7, 0.0, 0.5);
+        p
+    });
+    let before = args.flag("check").then(|| grid.clone());
+
+    let mut coord = ClusterCoordinator::new(plan.clone(), shards).mode(mode);
+    coord = coord.launcher(if args.flag("threads") {
+        WorkerLauncher::Threads
+    } else {
+        WorkerLauncher::Process { program: std::env::current_exe()? }
+    });
+    if let Some(spec) = args.opt("chaos") {
+        coord = coord.chaos(spec);
+    }
+    let report = coord.run(&mut grid, power.as_ref())?;
+    println!(
+        "cluster: {} {:?} x{} iters over {} {} shard(s) ({:?} exchange): \
+         {} passes, {:.1} Mcell/s, {:.1} Mcell of halo traffic, {:.3}s",
+        kind,
+        dims,
+        iters,
+        report.shards,
+        if args.flag("threads") { "thread" } else { "process" },
+        report.mode,
+        report.passes,
+        report.mcells_per_s(),
+        report.halo_cells_exchanged as f64 / 1e6,
+        report.elapsed.as_secs_f64(),
+    );
+    if let Some(mut oracle) = before {
+        Coordinator::new(plan).run_planned(&mut oracle, power.as_ref())?;
+        anyhow::ensure!(
+            grid.data() == oracle.data(),
+            "sharded result is NOT bit-identical to the single-process oracle \
+             (max |d| = {:.3e})",
+            grid.max_abs_diff(&oracle)
+        );
+        println!("verification vs single-process oracle: bit-identical OK");
+    }
+    Ok(())
+}
+
+/// `worker`: the cluster worker entrypoint — spawned by `cluster` (or a
+/// `ClusterCoordinator` embedder) as `fstencil worker --connect <addr>`.
+/// Dials the coordinator, receives its shard assignment and plan over
+/// the wire, and serves the halo-exchange protocol until `Shutdown`.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let addr = args
+        .opt("connect")
+        .ok_or_else(|| anyhow::anyhow!("worker needs --connect <host:port>"))?;
+    fstencil::cluster::run_worker(addr, true)
 }

@@ -222,6 +222,53 @@ impl PerfModel {
         let roof_mcells = self.th_max_gbps * GB / 1e6 / def.bytes_pcu as f64;
         linear.min(roof_mcells * par_time.max(1) as f64)
     }
+
+    /// Eq 3 extended one level up, to the sharded cluster
+    /// ([`crate::cluster::ClusterCoordinator`]): `shards` nodes each
+    /// sweep their slab of `dims` at `node_mcells` (the measured
+    /// single-node rate, itself capped by this model's `par_time`-scaled
+    /// memory roof like [`PerfModel::host_stream_mcells`]), while every
+    /// pass moves `2 · radius · par_time` boundary rows per internal
+    /// seam over a `link_gbps` interconnect. Per pass,
+    ///
+    /// ```text
+    /// t_comp = (cells/shards) · par_time / node_rate
+    /// t_comm = 2 · radius · par_time · row_cells · CELL_BYTES / link
+    /// t_pass = max(t_comp, t_comm)   (overlapped exchange)
+    ///        = t_comp + t_comm       (blocking exchange)
+    /// ```
+    ///
+    /// — the same hide-communication-behind-compute argument the paper
+    /// makes for on-chip halo forwarding, restated for processes.
+    /// Returns the aggregate update rate in Mcell/s; the overlapped /
+    /// blocking ratio is the `halo_overlap` ablation's model line.
+    #[allow(clippy::too_many_arguments)]
+    pub fn cluster_mcells(
+        &self,
+        def: &StencilProgram,
+        node_mcells: f64,
+        shards: usize,
+        dims: &[usize],
+        par_time: usize,
+        link_gbps: f64,
+        overlapped: bool,
+    ) -> f64 {
+        let shards = shards.max(1);
+        let par_time = par_time.max(1) as f64;
+        let cells: f64 = dims.iter().product::<usize>() as f64;
+        let row_cells: f64 = dims[1..].iter().product::<usize>() as f64;
+        let roof_mcells = self.th_max_gbps * GB / 1e6 / def.bytes_pcu as f64;
+        let node_rate = node_mcells.min(roof_mcells * par_time) * 1e6;
+        let t_comp = cells / shards as f64 * par_time / node_rate;
+        let t_comm = if shards > 1 {
+            2.0 * def.radius as f64 * par_time * row_cells * CELL_BYTES as f64
+                / (link_gbps * GB)
+        } else {
+            0.0
+        };
+        let t_pass = if overlapped { t_comp.max(t_comm) } else { t_comp + t_comm };
+        cells * par_time / t_pass / 1e6
+    }
 }
 
 #[cfg(test)]
@@ -388,6 +435,40 @@ mod tests {
         }
         // T = 0 is treated as 1 (defensive).
         assert_eq!(m.host_stream_mcells(def, scalar, 8, 0), 2500.0);
+    }
+
+    #[test]
+    fn cluster_model_overlap_hides_or_exposes_the_link() {
+        // Same host roof as the stream-model test: 20 GB/s, Diffusion 2D
+        // (8 B per cell update), T = 4 -> 10000 Mcell/s roof per shard.
+        let m = PerfModel::new(20.0);
+        let def = StencilKind::Diffusion2D.def();
+        // One shard has no seams: both modes degenerate to the node rate.
+        let solo = m.cluster_mcells(def, 400.0, 1, &[4096, 4096], 4, 1.0, true);
+        assert!((solo - 400.0).abs() < 1e-9, "{solo}");
+        assert_eq!(
+            solo,
+            m.cluster_mcells(def, 400.0, 1, &[4096, 4096], 4, 1.0, false)
+        );
+        // Compute-bound shape (tall slabs, 1 Gbps link): overlap hides the
+        // exchange entirely -> ideal shards × node rate; blocking pays a
+        // small but nonzero link tax.
+        let over = m.cluster_mcells(def, 400.0, 4, &[4096, 4096], 4, 1.0, true);
+        let block = m.cluster_mcells(def, 400.0, 4, &[4096, 4096], 4, 1.0, false);
+        assert!((over - 1600.0).abs() < 1e-9, "{over}");
+        assert!(block < over && block > 1590.0, "{block}");
+        // Communication-bound shape (64 fat rows, 0.1 Gbps link): here
+        // t_comm = 2 · t_comp, so overlap degrades to the link rate while
+        // blocking pays compute *plus* link -> a 1.5× overlap win.
+        let over = m.cluster_mcells(def, 400.0, 4, &[64, 65536], 4, 0.1, true);
+        let block = m.cluster_mcells(def, 400.0, 4, &[64, 65536], 4, 0.1, false);
+        assert!((over - 800.0).abs() < 1e-9, "{over}");
+        assert!((block - 1600.0 / 3.0).abs() < 1e-6, "{block}");
+        assert!(over / block > 1.15, "ablation floor: {}", over / block);
+        // The node term stays roof-capped: a fantasy node rate cannot beat
+        // par_time × memory roof per shard (2500 × 4 × 2 shards).
+        let capped = m.cluster_mcells(def, 1e9, 2, &[4096, 4096], 4, 1e9, true);
+        assert!((capped - 20000.0).abs() < 1e-6, "{capped}");
     }
 
     #[test]

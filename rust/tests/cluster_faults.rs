@@ -1,0 +1,183 @@
+//! Cluster fault battery + bit-identity matrix (DESIGN.md §3.5).
+//!
+//! Two families:
+//! - **faults**: chaos-injected worker deaths (thread teardown and real
+//!   process `exit(3)`) must surface as typed [`EngineError::ShardLost`]
+//!   — never a hang, never a torn (partially written) caller grid;
+//! - **identity**: the sharded run must be *bit-identical* to the
+//!   single-process oracle for every built-in stencil plus a
+//!   file-defined program, at 2 and 4 shards, across all three host
+//!   backends — the subsystem's headline invariant.
+
+use std::path::Path;
+
+use fstencil::cluster::{ClusterCoordinator, ExchangeMode, WorkerLauncher};
+use fstencil::coordinator::{Coordinator, Plan, PlanBuilder};
+use fstencil::engine::{Backend, EngineError};
+use fstencil::stencil::{Grid, StencilRegistry};
+
+fn plan_with(name: &str, dims: &[usize], iters: usize, tile: &[usize], backend: Backend) -> Plan {
+    let id = StencilRegistry::lookup(name).unwrap_or_else(|| panic!("unknown stencil {name}"));
+    PlanBuilder::new(id)
+        .grid_dims(dims.to_vec())
+        .iterations(iters)
+        .tile(tile.to_vec())
+        .backend(backend)
+        .build()
+        .expect("plan builds")
+}
+
+fn grids_for(plan: &Plan, seed: u64) -> (Grid, Option<Grid>) {
+    let dims = &plan.grid_dims;
+    let mut g = if dims.len() == 2 {
+        Grid::new2d(dims[0], dims[1])
+    } else {
+        Grid::new3d(dims[0], dims[1], dims[2])
+    };
+    g.fill_random(seed, -1.0, 1.0);
+    let power = plan.stencil.def().has_power.then(|| {
+        let mut p = g.clone();
+        p.fill_random(seed + 101, 0.0, 0.25);
+        p
+    });
+    (g, power)
+}
+
+fn oracle(plan: &Plan, grid: &Grid, power: Option<&Grid>) -> Grid {
+    let mut g = grid.clone();
+    Coordinator::new(plan.clone()).run_planned(&mut g, power).expect("oracle runs");
+    g
+}
+
+/// Register the file-defined radius-3 program (idempotent across tests).
+fn register_vonneumann() {
+    let path = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/stencils/vonneumann_r3.json"));
+    StencilRegistry::load_file(path).expect("vonneumann_r3.json registers");
+}
+
+// ----------------------------------------------------------------- faults
+
+#[test]
+fn thread_worker_kill_is_typed_and_leaves_the_grid_untouched() {
+    // `kill=1@1`: rate 1 capped at attempt 1 — the worker keys the chaos
+    // decision on attempt = shard+1, so exactly shard 0 dies, at chunk 0.
+    let plan = plan_with("diffusion2d", &[64, 32], 6, &[16, 32], Backend::Scalar);
+    let (mut grid, _) = grids_for(&plan, 41);
+    let before = grid.clone();
+    let err = ClusterCoordinator::new(plan, 2)
+        .chaos("7:kill=1@1")
+        .run(&mut grid, None)
+        .expect_err("a dead shard must fail the run");
+    match err {
+        EngineError::ShardLost { shard, .. } => assert_eq!(shard, 0, "shard 0 was killed"),
+        other => panic!("expected ShardLost, got {other:?}"),
+    }
+    assert_eq!(grid.data(), before.data(), "failed run tore the caller's grid");
+}
+
+#[test]
+fn multiple_dead_shards_fail_fast_without_wedging_the_relay() {
+    // `kill=1@2` kills shards 0 and 1 of four: the relay must abort on the
+    // first loss and reap the remaining (healthy, still-connected) workers
+    // instead of deadlocking on their next frame.
+    let plan = plan_with("diffusion2d", &[64, 32], 6, &[16, 32], Backend::Vec { par_vec: 4 });
+    let (mut grid, _) = grids_for(&plan, 42);
+    let before = grid.clone();
+    let err = ClusterCoordinator::new(plan, 4)
+        .chaos("7:kill=1@2")
+        .run(&mut grid, None)
+        .expect_err("dead shards must fail the run");
+    assert!(matches!(err, EngineError::ShardLost { .. }), "got {err:?}");
+    assert_eq!(grid.data(), before.data());
+}
+
+#[test]
+fn process_worker_kill_exits_hard_and_is_still_typed() {
+    // Real worker processes die via `std::process::exit(3)` — the
+    // coordinator sees an abrupt transport death, reports it typed, and
+    // reaps the survivors (no zombie fleet, no hang).
+    let plan = plan_with("diffusion2d", &[64, 32], 6, &[16, 32], Backend::Scalar);
+    let (mut grid, _) = grids_for(&plan, 43);
+    let before = grid.clone();
+    let err = ClusterCoordinator::new(plan, 2)
+        .launcher(WorkerLauncher::Process {
+            program: env!("CARGO_BIN_EXE_fstencil").into(),
+        })
+        .chaos("9:kill=1@1")
+        .run(&mut grid, None)
+        .expect_err("a killed worker process must fail the run");
+    assert!(matches!(err, EngineError::ShardLost { .. }), "got {err:?}");
+    assert_eq!(grid.data(), before.data());
+}
+
+// --------------------------------------------------------------- identity
+
+#[test]
+fn spawned_processes_match_the_oracle_bit_for_bit() {
+    // The real deal: separate OS processes (this crate's binary), wire
+    // frames over loopback, overlapped halo exchange — bit-identical.
+    let plan = plan_with("diffusion2d", &[64, 32], 6, &[16, 32], Backend::Vec { par_vec: 4 });
+    let (mut grid, _) = grids_for(&plan, 17);
+    let want = oracle(&plan, &grid, None);
+    let report = ClusterCoordinator::new(plan, 2)
+        .launcher(WorkerLauncher::Process {
+            program: env!("CARGO_BIN_EXE_fstencil").into(),
+        })
+        .run(&mut grid, None)
+        .expect("process cluster runs");
+    assert_eq!(report.shards, 2);
+    assert!(report.halo_cells_exchanged > 0);
+    assert_eq!(grid.data(), want.data(), "process-sharded result deviates");
+}
+
+#[test]
+fn bit_identity_matrix_builtins_and_custom_across_backends() {
+    register_vonneumann();
+    // (stencil, dims, iters, tile) — dims sized so 4 shards still satisfy
+    // min_interior >= max(halo, tile[0]).
+    let shapes: &[(&str, &[usize], usize, &[usize])] = &[
+        ("diffusion2d", &[64, 32], 6, &[16, 32]),
+        ("hotspot2d", &[64, 32], 6, &[16, 32]),
+        ("diffusion2dr2", &[96, 32], 6, &[24, 32]),
+        ("diffusion3d", &[64, 16, 16], 5, &[16, 16, 16]),
+        ("hotspot3d", &[64, 16, 16], 5, &[16, 16, 16]),
+        ("vonneumann_r3", &[128, 32], 5, &[32, 32]),
+    ];
+    let backends =
+        [Backend::Scalar, Backend::Vec { par_vec: 4 }, Backend::Stream { par_vec: 4 }];
+    for &(name, dims, iters, tile) in shapes {
+        for backend in backends {
+            let plan = plan_with(name, dims, iters, tile, backend);
+            let (grid, power) = grids_for(&plan, 7);
+            let want = oracle(&plan, &grid, power.as_ref());
+            for shards in [2usize, 4] {
+                let mut got = grid.clone();
+                let report = ClusterCoordinator::new(plan.clone(), shards)
+                    .run(&mut got, power.as_ref())
+                    .unwrap_or_else(|e| panic!("{name}/{backend}/{shards} shards: {e}"));
+                assert_eq!(report.shards, shards);
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "{name} on {backend} at {shards} shards is not bit-identical"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn blocking_exchange_is_bit_identical_for_the_custom_program() {
+    // The ablation baseline path (drain-then-compute) through the deepest
+    // halo in the suite: radius 3, file-defined program, stream backend.
+    register_vonneumann();
+    let plan =
+        plan_with("vonneumann_r3", &[128, 32], 5, &[32, 32], Backend::Stream { par_vec: 4 });
+    let (mut grid, _) = grids_for(&plan, 29);
+    let want = oracle(&plan, &grid, None);
+    ClusterCoordinator::new(plan, 4)
+        .mode(ExchangeMode::Blocking)
+        .run(&mut grid, None)
+        .expect("blocking cluster runs");
+    assert_eq!(grid.data(), want.data());
+}

@@ -4,6 +4,7 @@
 use fstencil::blocking::geometry::{halo_width, BlockGeometry, DimBlocking};
 use fstencil::blocking::padding::{alignment_class, pad_words, AlignClass};
 use fstencil::blocking::traversal::{nested_order, CollapsedLoop, LoopStyle};
+use fstencil::cluster::ShardMap;
 use fstencil::coordinator::PlanBuilder;
 use fstencil::stencil::StencilKind;
 use fstencil::util::prop::{forall, Rng};
@@ -200,6 +201,141 @@ fn prop_redundancy_monotone_in_par_time() {
                     a.redundancy(),
                     b.redundancy()
                 ))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_shard_partition_tiles_exactly_and_balanced() {
+    forall(
+        "shard slabs tile axis 0 exactly, balanced to within one row",
+        80,
+        |r: &mut Rng| {
+            let dim0 = r.usize_in(1, 400);
+            let shards = r.usize_in(1, 24);
+            (dim0, shards)
+        },
+        |&(dim0, shards)| {
+            let map = ShardMap::new(dim0, shards);
+            let base = dim0 / shards;
+            let mut next = 0;
+            for s in 0..shards {
+                let (lo, hi) = map.slab(s);
+                if lo != next {
+                    return Err(format!("gap/overlap at shard {s}: lo {lo} != {next}"));
+                }
+                let rows = hi - lo;
+                if rows != base && rows != base + 1 {
+                    return Err(format!("shard {s} has {rows} rows, base {base}"));
+                }
+                if rows != map.interior(s) {
+                    return Err("interior() disagrees with slab()".into());
+                }
+                next = hi;
+            }
+            if next != dim0 {
+                return Err(format!("slabs cover {next} of {dim0} rows"));
+            }
+            // min_interior is the true minimum, and empty <=> shards > dim0.
+            let min = (0..shards).map(|s| map.interior(s)).min().unwrap();
+            if min != map.min_interior() {
+                return Err(format!("min_interior {} != actual {min}", map.min_interior()));
+            }
+            if map.has_empty_shard() != (shards > dim0) {
+                return Err("empty-shard predicate drifted".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shard_halo_windows_are_radius_t_wide() {
+    forall(
+        "extended windows add exactly rad*T rows per internal seam, clamped",
+        80,
+        |r: &mut Rng| {
+            let shards = r.usize_in(1, 8);
+            let rad = r.usize_in(1, 3);
+            let t = r.usize_in(1, 8);
+            // Keep every shard at least one halo tall so the window
+            // arithmetic is exercised away from the degenerate regime.
+            let dim0 = shards * rad * t + r.usize_in(0, 200);
+            (dim0, shards, rad * t)
+        },
+        |&(dim0, shards, halo)| {
+            let map = ShardMap::new(dim0, shards);
+            for s in 0..shards {
+                let (lo, hi) = map.slab(s);
+                let (elo, ehi) = map.extended(s, halo);
+                // Clamped at physical edges, exactly `halo` rows inside.
+                if elo > lo || ehi < hi || ehi > dim0 {
+                    return Err(format!("shard {s}: window ({elo},{ehi}) vs slab ({lo},{hi})"));
+                }
+                if s == 0 && elo != 0 {
+                    return Err("top shard must clamp at row 0".into());
+                }
+                if s + 1 == shards && ehi != dim0 && ehi != hi + halo {
+                    return Err("bottom shard must clamp at the last row".into());
+                }
+                if s > 0 && lo >= halo && lo - elo != halo {
+                    return Err(format!(
+                        "shard {s}: top halo is {} rows, want {halo}",
+                        lo - elo
+                    ));
+                }
+                if s + 1 < shards && hi + halo <= dim0 && ehi - hi != halo {
+                    return Err(format!(
+                        "shard {s}: bottom halo is {} rows, want {halo}",
+                        ehi - hi
+                    ));
+                }
+                if ehi > dim0 {
+                    return Err("extended window overruns the grid".into());
+                }
+            }
+            // The shardability predicate is exactly min_interior >= halo
+            // (with the halo floored at one row).
+            let want = map.min_interior() >= halo.max(1);
+            if map.shardable(halo) != want {
+                return Err("shardable() drifted from its definition".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shard_map_agrees_with_plan_builder_gate() {
+    // PlanBuilder's build-time rejection and ShardMap's emptiness
+    // predicate must be the same line: workers > rows <=> some shard
+    // owns nothing.
+    forall(
+        "PlanBuilder worker gate == ShardMap emptiness",
+        40,
+        |r: &mut Rng| {
+            let dim0 = 8 * r.usize_in(1, 12);
+            let workers = r.usize_in(1, 128);
+            (dim0, workers)
+        },
+        |&(dim0, workers)| {
+            let built = PlanBuilder::new(StencilKind::Diffusion2D)
+                .grid_dims(vec![dim0, 64])
+                .iterations(4)
+                .tile(vec![4, 32])
+                .workers(workers)
+                .build();
+            let empty = ShardMap::new(dim0, workers).has_empty_shard();
+            match built {
+                Ok(_) if empty => Err(format!(
+                    "builder accepted {workers} workers over {dim0} rows"
+                )),
+                Err(e) if !empty => Err(format!("builder rejected a fine split: {e}")),
+                Err(e) if !e.to_string().contains("zero interior rows") => {
+                    Err(format!("rejected for the wrong reason: {e}"))
+                }
+                _ => Ok(()),
             }
         },
     );

@@ -349,6 +349,44 @@ fn golden_table6_consistency_and_r2_extension() {
     }
 }
 
+/// Golden pinning: the inter-node extension of Eq 3
+/// (`PerfModel::cluster_mcells`, the model line behind the `halo_overlap`
+/// ablation and the paper's §8 multi-device future work). Values are
+/// exact mirror arithmetic of the documented `t_comp`/`t_comm` terms at a
+/// 20 GB/s host roof; a refactor of either term breaks these pins.
+#[test]
+fn golden_cluster_model_inter_node_term() {
+    let m = PerfModel::new(20.0);
+    let def = StencilKind::Diffusion2D.def();
+    // Compute-bound: 4096x4096, 4 shards x 400 Mcell/s nodes, T=4, 1 Gbps.
+    // t_comm/t_comp = 0.003125, so overlap reaches the ideal 1600 Mcell/s
+    // aggregate while blocking pays the tax: 1600/1.003125.
+    let over = m.cluster_mcells(def, 400.0, 4, &[4096, 4096], 4, 1.0, true);
+    let block = m.cluster_mcells(def, 400.0, 4, &[4096, 4096], 4, 1.0, false);
+    assert!((over - 1600.0).abs() < 1e-9, "overlapped pin drifted: {over}");
+    let want_block = 1600.0 / 1.003125;
+    assert!(
+        (block - want_block).abs() / want_block < 1e-12,
+        "blocking pin drifted: {block} vs {want_block}"
+    );
+    // Communication-bound: 64x65536, 0.1 Gbps -> t_comm = 2·t_comp.
+    // Overlap pins at the link rate (800); blocking at 1600/3; the ratio
+    // (1.5×) is the model twin of the measured ablation's ≥1.15× gate.
+    let over = m.cluster_mcells(def, 400.0, 4, &[64, 65536], 4, 0.1, true);
+    let block = m.cluster_mcells(def, 400.0, 4, &[64, 65536], 4, 0.1, false);
+    assert!((over - 800.0).abs() < 1e-9, "link-bound pin drifted: {over}");
+    assert!(
+        (block - 1600.0 / 3.0).abs() < 1e-6,
+        "blocking link-bound pin drifted: {block}"
+    );
+    assert!(over / block > 1.15, "model overlap win below ablation gate");
+    // Single shard: no seams, mode is irrelevant, rate is the node rate.
+    assert_eq!(
+        m.cluster_mcells(def, 400.0, 1, &[4096, 4096], 4, 0.1, true),
+        m.cluster_mcells(def, 400.0, 1, &[4096, 4096], 4, 0.1, false)
+    );
+}
+
 #[test]
 fn stratix10_projection_shape() {
     let p = project_stratix10(5000);
