@@ -832,6 +832,118 @@ fn main() {
         }
     }
 
+    // --- cluster_serve ablation: the front door's routing decision
+    //     itself — the SAME fat job submitted through the wire twice,
+    //     once pinned to the local DRR pool (`shards: 1`) and once
+    //     routed to a 2-shard thread-hosted cluster fleet, at equal
+    //     total compute workers. The pool's tile-granularity sharing
+    //     (buffer copies, write-backs, chunk barriers) buys fairness
+    //     across many tenants but taxes one huge job; the cluster route
+    //     gives that job dedicated slabs with overlapped halo exchange.
+    //     Acceptance: >= 1.1x. Environments without loopback skip with
+    //     an explicit payload line for the CI grep gate. -------------
+    use fstencil::engine::wire::ClusterConfig;
+    match std::net::TcpListener::bind("127.0.0.1:0") {
+        Err(e) => {
+            rep.payload(format!("cluster_serve ablation: SKIPPED (loopback bind: {e})"));
+        }
+        Ok(probe) => {
+            drop(probe);
+            let (srows, scols) = if sm { (64usize, 512usize) } else { (256, 2048) };
+            let siters = if sm { 8usize } else { 32 };
+            let sshards = 2usize;
+            let splan = PlanBuilder::new(kind)
+                .grid_dims(vec![srows, scols])
+                .iterations(siters)
+                .tile(vec![16, scols.min(512)])
+                .backend(Backend::Vec { par_vec: 8 })
+                .build()
+                .unwrap();
+            let mut sg = Grid::new2d(srows, scols);
+            sg.fill_random(11, 0.0, 1.0);
+            let s_updates = (srows * scols * siters) as f64;
+            // Identical front-door config for both arms: only the
+            // session's explicit shard request decides the route, so the
+            // measurement isolates the execution path, not the policy.
+            let wire_cfg = WireConfig {
+                cluster: Some(ClusterConfig {
+                    route_threshold_cells: u64::MAX,
+                    max_shards: sshards,
+                    ..ClusterConfig::default()
+                }),
+                ..WireConfig::default()
+            };
+            let mut serve_runs = Vec::new();
+            for (shards, label) in [(1usize, "pool"), (sshards, "cluster")] {
+                let mut spec = PlanSpec::from_plan(&splan);
+                spec.shards = Some(shards);
+                let cfg = wire_cfg.clone();
+                serve_runs.push(b.bench_with_metric(
+                    &format!("cluster_serve_{label}_{srows}x{scols}_x{siters}_w{sshards}"),
+                    "Mcell-updates/s",
+                    s_updates / 1e6,
+                    || {
+                        let mut front = WireFrontend::bind(
+                            "127.0.0.1:0",
+                            engine.serve(sshards),
+                            cfg.clone(),
+                        )
+                        .expect("loopback bind (probed above)");
+                        let addr = front.local_addr().to_string();
+                        let mut client = WireClient::connect(&addr).expect("connect");
+                        let session = client.open(spec.clone(), vec![]).expect("open");
+                        let job = client.submit(session, &sg, None, None).expect("submit");
+                        let deadline = std::time::Duration::from_secs(300);
+                        match client.wait_result(job, deadline).expect("wait") {
+                            WaitOutcome::Done { grid, report, .. } => {
+                                let backend = report
+                                    .get("backend")
+                                    .and_then(|j| j.as_str())
+                                    .unwrap_or("?");
+                                assert_eq!(backend == "cluster", shards > 1, "bad route");
+                                std::hint::black_box(grid);
+                            }
+                            other => panic!("serve job ended {other:?}"),
+                        }
+                        front.shutdown();
+                    },
+                ));
+            }
+            let pool_mcells = serve_runs[0].metric.unwrap().0;
+            let cl_mcells = serve_runs[1].metric.unwrap().0;
+            let s_ratio = rep.ablation(
+                "cluster_serve",
+                serve_runs[0].summary.mean,
+                serve_runs[1].summary.mean,
+                "cluster-routed vs pool-pinned for one fat wire job at equal \
+                 total workers; acceptance: >= 1.1x",
+            );
+            // The routing model's own verdict for this shape, printed
+            // next to the measurement (same Eq-3 twin as halo_overlap;
+            // notional loopback link rate, the shape is the point).
+            const S_LINK_GBPS: f64 = 2.0;
+            let s_node = model.host_par_vec_mcells(def, scalar_mcells, 8);
+            let s_deep = splan.chunks.iter().copied().max().unwrap_or(1);
+            let m_cluster = model.cluster_mcells(
+                def, s_node, sshards, &splan.grid_dims, s_deep, S_LINK_GBPS, true,
+            );
+            let m_node = model.cluster_mcells(
+                def, s_node, 1, &splan.grid_dims, s_deep, S_LINK_GBPS, true,
+            );
+            rep.payload(format!(
+                "cluster_serve ablation: cluster-routed {cl_mcells:.1} vs pool-pinned \
+                 {pool_mcells:.1} Mcell/s = {s_ratio:.2}x (acceptance: >= 1.1x, {}); \
+                 Eq-3 cluster model at {S_LINK_GBPS} Gbps link: {m_cluster:.0} Mcell/s \
+                 at {sshards} shards vs {m_node:.0} single-node ({:.2}x predicted win)",
+                if s_ratio >= 1.1 { "PASS" } else { "FAIL: cluster route not paying for itself" },
+                m_cluster / m_node,
+            ));
+            for r in serve_runs {
+                rep.push(r);
+            }
+        }
+    }
+
     // Smoke runs are correctness checks, not measurements — never let
     // them overwrite the persisted perf trajectory.
     if sm {

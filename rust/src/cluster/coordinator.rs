@@ -1,10 +1,11 @@
 //! The cluster coordinator: real worker processes over loopback TCP.
 //!
-//! [`ClusterCoordinator`] is the multi-process sibling of the in-process
-//! [`crate::coordinator::DistributedCoordinator`]: the same slab
-//! partition ([`ShardMap`]), the same `radius·T` halo arithmetic, but the
-//! shards are separate OS processes (or threads, for benches) connected
-//! by the wire frame codec. Topology is a star — every worker talks only
+//! [`ClusterCoordinator`] is the one sharded-execution engine in the
+//! tree — [`crate::coordinator::DistributedCoordinator`] is a thin shim
+//! over it on the thread launcher. One slab partition ([`ShardMap`]),
+//! one `radius·T` halo arithmetic; the shards are separate OS processes
+//! (or threads, for benches and the shim) connected by the wire frame
+//! codec. Topology is a star — every worker talks only
 //! to the coordinator, which relays each shard's `Boundary` slabs to its
 //! neighbours as `Halo` frames. The relay is a per-chunk barrier on the
 //! *coordinator*; the *workers* still overlap, because each one sends
@@ -23,6 +24,8 @@ use std::io::ErrorKind;
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -87,6 +90,7 @@ pub struct ClusterCoordinator {
     launcher: WorkerLauncher,
     chaos: Option<String>,
     programs: Vec<Json>,
+    abort: Option<Arc<AtomicBool>>,
 }
 
 impl ClusterCoordinator {
@@ -98,6 +102,7 @@ impl ClusterCoordinator {
             launcher: WorkerLauncher::Threads,
             chaos: None,
             programs: Vec::new(),
+            abort: None,
         }
     }
 
@@ -124,6 +129,21 @@ impl ClusterCoordinator {
     pub fn program(mut self, json: Json) -> ClusterCoordinator {
         self.programs.push(json);
         self
+    }
+
+    /// Cooperative cancellation: when `flag` flips true the run reaps
+    /// every worker at the next protocol step and returns
+    /// [`EngineError::Cancelled`]. Cancel beats failure — a worker lost
+    /// *while* the flag is set (e.g. killed by the teardown itself)
+    /// still reports `Cancelled`, never `ShardLost`, mirroring the
+    /// engine server's resolution precedence.
+    pub fn abort(mut self, flag: Arc<AtomicBool>) -> ClusterCoordinator {
+        self.abort = Some(flag);
+        self
+    }
+
+    fn aborted(&self) -> bool {
+        self.abort.as_ref().is_some_and(|a| a.load(Ordering::Acquire))
     }
 
     pub fn plan(&self) -> &Plan {
@@ -175,10 +195,16 @@ impl ClusterCoordinator {
                 plan.tile[0]
             )));
         }
+        if self.aborted() {
+            return Err(EngineError::Cancelled);
+        }
         let mut links = self.launch(&map)?;
         let r = self.drive(&mut links, &map, grid, power);
         reap(links, r.is_err());
-        let halo_cells = r?;
+        // Cancel beats failure: a shard lost because the teardown raced
+        // the abort still resolves as the cancellation the caller asked
+        // for, not a spurious ShardLost.
+        let halo_cells = r.map_err(|e| if self.aborted() { EngineError::Cancelled } else { e })?;
         Ok(ClusterReport {
             iterations: plan.iterations,
             passes: plan.chunks.len(),
@@ -322,6 +348,9 @@ impl ClusterCoordinator {
         let mut halo_cells: u64 = 0;
         if shards > 1 {
             for (k, &steps) in plan.chunks.iter().enumerate() {
+                if self.aborted() {
+                    return Err(EngineError::Cancelled);
+                }
                 let h = def.radius * steps;
                 let mut tops: Vec<Option<String>> = vec![None; shards];
                 let mut bots: Vec<Option<String>> = vec![None; shards];
@@ -359,6 +388,9 @@ impl ClusterCoordinator {
 
         // Collect. Stage every interior before touching the caller's
         // grid: a shard lost here fails the run with the input intact.
+        if self.aborted() {
+            return Err(EngineError::Cancelled);
+        }
         for (s, link) in links.iter_mut().enumerate() {
             link.send(s, &ShardMsg::Collect)?;
         }
@@ -570,6 +602,40 @@ mod tests {
             }
             other => panic!("expected InvalidPlan, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn way_too_many_shards_is_typed_before_launch() {
+        // 999 shards over 64 rows: the balanced split leaves most shards
+        // with zero interior rows. The run-entry guard (the cluster-side
+        // twin of auditor code E010) must reject with a typed error
+        // before any worker is launched.
+        let plan = plan_for("diffusion2d", &[64, 32], 4, &[16, 32]);
+        let mut grid = Grid::new2d(64, 32);
+        let err = ClusterCoordinator::new(plan, 999).run(&mut grid, None).unwrap_err();
+        match err {
+            EngineError::InvalidPlan(msg) => {
+                assert!(msg.contains("zero interior"), "got: {msg}")
+            }
+            other => panic!("expected InvalidPlan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn abort_beats_a_doomed_run() {
+        // Cancel precedence: with the abort flag raised, even a run whose
+        // chaos schedule guarantees a shard death reports Cancelled,
+        // never ShardLost.
+        let plan = plan_for("diffusion2d", &[64, 32], 6, &[16, 32]);
+        let mut grid = Grid::new2d(64, 32);
+        grid.fill_random(13, -1.0, 1.0);
+        let flag = Arc::new(AtomicBool::new(true));
+        let err = ClusterCoordinator::new(plan, 2)
+            .chaos("7:kill=1@1")
+            .abort(flag)
+            .run(&mut grid, None)
+            .unwrap_err();
+        assert!(matches!(err, EngineError::Cancelled), "got {err:?}");
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Shard partition geometry along the outermost axis.
 //!
 //! One source of truth for how a grid splits into contiguous slabs: the
-//! in-process [`crate::coordinator::DistributedCoordinator`], the
-//! multi-process [`super::ClusterCoordinator`], its workers, and the
-//! static auditor's shardability predicate all consult [`ShardMap`], so
+//! multi-process [`super::ClusterCoordinator`] (and through it the
+//! [`crate::coordinator::DistributedCoordinator`] shim), its workers,
+//! the wire front door's cluster routing, and the static auditor's
+//! shardability predicate all consult [`ShardMap`], so
 //! the partition arithmetic cannot drift between layers. The invariants
 //! (shards tile the grid exactly, halo slabs are exactly `radius·T` rows,
 //! boundary shards clamp at the physical edges) are property-tested in

@@ -13,9 +13,10 @@
 //! Layering (mirrors [`crate::engine::wire`]):
 //!
 //! * [`geometry`] — the slab partition ([`ShardMap`]) and its
-//!   invariants; shared with the in-process
-//!   [`crate::coordinator::DistributedCoordinator`] and the static
-//!   auditor's shardability predicate (code `E010`).
+//!   invariants; shared with the
+//!   [`crate::coordinator::DistributedCoordinator`] shim, the wire front
+//!   door's cluster routing, and the static auditor's shardability
+//!   predicate (code `E010`).
 //! * [`protocol`] — the halo-exchange message set ([`ShardMsg`]) on top
 //!   of the wire frame codec ([`crate::engine::wire::frame`]).
 //! * [`worker`] — one shard's process: boundary-first sends, interior

@@ -299,6 +299,7 @@ mod tests {
             step_sizes: None,
             workers: None,
             guard_nonfinite: None,
+            shards: None,
         };
         let msgs = vec![
             ShardMsg::Init {

@@ -4,27 +4,22 @@
 //! temporal-only designs cannot distribute because every PE needs the full
 //! row/plane).
 //!
-//! The grid is partitioned into contiguous slabs along the outermost axis,
-//! one per (simulated) device. Each pass of `T` fused steps requires
-//! `halo = rad×T` rows/planes of neighbour data on each internal boundary;
-//! the exchange is materialized by building an *extended slab* per worker
-//! (slab ± halo, clamped at true grid edges), running the normal blocked
-//! execution on it, and keeping the interior — identical validity argument
-//! to the single-device tile halos, one level up.
-//!
-//! Communication volume (the number the paper's future-work scaling would
-//! care about) is accounted per pass in [`DistReport`].
+//! This module is now a thin compatibility shim over the real
+//! multi-process implementation, [`crate::cluster::ClusterCoordinator`]:
+//! one partition ([`crate::cluster::ShardMap`]), one halo-exchange
+//! protocol, one set of run-entry guards. [`DistributedCoordinator`]
+//! keeps the old constructor and the [`DistReport`] shape for existing
+//! callers and tests, but every run goes through the cluster layer on the
+//! thread launcher — real loopback TCP traffic, no process spawn cost.
+//! The in-process slab simulation it used to carry was retired once the
+//! cluster path proved bit-identical (see `rust/tests/cluster_faults.rs`).
 
-use std::time::Instant;
+use anyhow::Result;
 
-use anyhow::{ensure, Result};
-
-use crate::cluster::geometry::{copy_rows, ShardMap};
-use crate::runtime::Executor;
+use crate::cluster::{ClusterCoordinator, WorkerLauncher};
 use crate::stencil::Grid;
 
 use super::plan::Plan;
-use super::{Coordinator, ExecReport, PlanBuilder};
 
 /// Report of a distributed run.
 #[derive(Debug, Clone)]
@@ -32,10 +27,13 @@ pub struct DistReport {
     pub iterations: usize,
     pub passes: usize,
     pub workers: usize,
+    /// Always 0 on the cluster path: tiles are executed inside the shard
+    /// workers and are not reported back per-tile. Kept for shape
+    /// compatibility with older tooling.
     pub tiles_executed: u64,
     pub cell_updates: u64,
     /// Halo cells shipped between neighbouring workers, summed over passes
-    /// (per direction, counted once per receiving worker).
+    /// (per direction, counted once per `Halo` frame).
     pub halo_cells_exchanged: u64,
     pub elapsed: std::time::Duration,
 }
@@ -53,7 +51,9 @@ impl DistReport {
     }
 }
 
-/// Distributes a [`Plan`] across `workers` simulated devices.
+/// Distributes a [`Plan`] across `workers` shard workers hosted on
+/// threads of this process (see [`crate::cluster`] for the process
+/// launcher and the full fault model).
 #[derive(Debug, Clone)]
 pub struct DistributedCoordinator {
     plan: Plan,
@@ -65,123 +65,26 @@ impl DistributedCoordinator {
         DistributedCoordinator { plan, workers: workers.max(1) }
     }
 
-    /// The shared slab partition (one source of truth with the
-    /// multi-process [`crate::cluster::ClusterCoordinator`] and the
-    /// static auditor's shardability predicate).
-    fn map(&self) -> ShardMap {
-        ShardMap::new(self.plan.grid_dims[0], self.workers)
-    }
-
-    /// Slab row-range `[lo, hi)` of worker `w` along axis 0.
-    fn slab(&self, w: usize) -> (usize, usize) {
-        self.map().slab(w)
-    }
-
     /// Run with the executor the plan itself selects ([`Plan::executor`]):
     /// scalar, vectorized or streaming. Results are bit-identical across
-    /// the three backends (property-tested).
+    /// the three backends (property-tested). Delegates to
+    /// [`ClusterCoordinator`] on the [`WorkerLauncher::Threads`] launcher;
+    /// infeasible partitions (slabs thinner than the halo or the tile)
+    /// surface as the cluster layer's typed
+    /// [`crate::engine::EngineError::InvalidPlan`].
     pub fn run_planned(&self, grid: &mut Grid, power: Option<&Grid>) -> Result<DistReport> {
-        let exec = self.plan.executor();
-        self.run(exec.as_ref(), grid, power)
-    }
-
-    /// Run the plan distributed over `workers` devices; each worker uses
-    /// `exec` (shared, so it must be `Sync` — the host executors all are;
-    /// a PJRT-per-worker variant would hold one client per thread).
-    pub fn run<E: Executor + Sync + ?Sized>(
-        &self,
-        exec: &E,
-        grid: &mut Grid,
-        power: Option<&Grid>,
-    ) -> Result<DistReport> {
-        let plan = &self.plan;
-        let def = plan.stencil.def();
-        ensure!(grid.dims() == plan.grid_dims, "grid dims do not match the plan");
-        ensure!(power.is_some() == def.has_power, "power grid mismatch");
-        let dim0 = plan.grid_dims[0];
-        let min_slab = dim0 / self.workers;
-        ensure!(
-            min_slab >= plan.tile[0],
-            "slabs of ~{min_slab} rows are thinner than the {}-row tile; \
-             use fewer workers or a smaller tile",
-            plan.tile[0]
-        );
-
-        let start = Instant::now();
-        let mut cur = std::mem::replace(grid, Grid::new2d(1, 1));
-        // Persistent double buffer: the slab interiors cover every row, so
-        // each pass fully overwrites `next` — no per-chunk grid clone.
-        let mut next = cur.clone();
-        let mut tiles_executed = 0u64;
-        let mut halo_exchanged = 0u64;
-        let row_cells: usize = plan.grid_dims[1..].iter().product();
-
-        for &steps in &plan.chunks {
-            let halo = def.radius * steps;
-            let cur_ref = &cur;
-            // Each worker computes its extended slab independently.
-            let results: Vec<Result<(usize, Grid, ExecReport, usize)>> =
-                std::thread::scope(|scope| {
-                    let handles: Vec<_> = (0..self.workers)
-                        .map(|w| {
-                            let (lo, hi) = self.slab(w);
-                            scope.spawn(move || -> Result<(usize, Grid, ExecReport, usize)> {
-                                // halo exchange: extend with real neighbour
-                                // rows, clamped at the true grid edges
-                                let elo = lo.saturating_sub(halo);
-                                let ehi = (hi + halo).min(dim0);
-                                let mut slab = copy_rows(cur_ref, elo, ehi);
-                                let pslab = power.map(|p| copy_rows(p, elo, ehi));
-                                let mut dims = plan.grid_dims.clone();
-                                dims[0] = ehi - elo;
-                                let sub_plan = PlanBuilder::new(plan.stencil)
-                                    .grid_dims(dims)
-                                    .iterations(steps)
-                                    .coeffs(plan.coeffs.clone())
-                                    .tile(plan.tile.clone())
-                                    .step_sizes(vec![steps])
-                                    .backend(plan.backend)
-                                    .build()?;
-                                let rep = Coordinator::new(sub_plan).run(
-                                    exec,
-                                    &mut slab,
-                                    pslab.as_ref(),
-                                )?;
-                                // received halo rows (from up to 2 neighbours)
-                                let received = (lo - elo) + (ehi - hi);
-                                Ok((w, slab, rep, received))
-                            })
-                        })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("worker panicked"))
-                        .collect()
-                });
-
-            // Assemble: keep each worker's interior rows.
-            for r in results {
-                let (w, slab, rep, received) = r?;
-                let (lo, hi) = self.slab(w);
-                let elo = lo.saturating_sub(halo);
-                let src_off = (lo - elo) * row_cells;
-                let n = (hi - lo) * row_cells;
-                next.data_mut()[lo * row_cells..hi * row_cells]
-                    .copy_from_slice(&slab.data()[src_off..src_off + n]);
-                tiles_executed += rep.tiles_executed;
-                halo_exchanged += (received * row_cells) as u64;
-            }
-            std::mem::swap(&mut cur, &mut next);
-        }
-        *grid = cur;
+        let rep = ClusterCoordinator::new(self.plan.clone(), self.workers)
+            .launcher(WorkerLauncher::Threads)
+            .run(grid, power)
+            .map_err(anyhow::Error::new)?;
         Ok(DistReport {
-            iterations: plan.iterations,
-            passes: plan.chunks.len(),
-            workers: self.workers,
-            tiles_executed,
-            cell_updates: plan.cell_updates(),
-            halo_cells_exchanged: halo_exchanged,
-            elapsed: start.elapsed(),
+            iterations: rep.iterations,
+            passes: rep.passes,
+            workers: rep.shards,
+            tiles_executed: 0,
+            cell_updates: rep.cell_updates,
+            halo_cells_exchanged: rep.halo_cells_exchanged,
+            elapsed: rep.elapsed,
         })
     }
 }
@@ -189,7 +92,7 @@ impl DistributedCoordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::HostExecutor;
+    use crate::coordinator::PlanBuilder;
     use crate::stencil::{reference, StencilKind};
 
     fn mk(kind: StencilKind, dims: &[usize], seed: u64) -> Grid {
@@ -214,7 +117,7 @@ mod tests {
             .build()
             .unwrap();
         let dist = DistributedCoordinator::new(plan, workers);
-        let rep = dist.run(&HostExecutor::new(), &mut grid, power.as_ref()).unwrap();
+        let rep = dist.run_planned(&mut grid, power.as_ref()).unwrap();
         let err = grid.max_abs_diff(&want);
         assert!(
             err < 1e-3,
@@ -284,7 +187,7 @@ mod tests {
                 .build()
                 .unwrap();
             DistributedCoordinator::new(plan, workers)
-                .run(&HostExecutor::new(), &mut g, None)
+                .run_planned(&mut g, None)
                 .unwrap();
             results.push(g);
         }
@@ -304,9 +207,7 @@ mod tests {
                 .tile(vec![32, 32])
                 .build()
                 .unwrap();
-            DistributedCoordinator::new(plan, 2)
-                .run(&HostExecutor::new(), &mut g, None)
-                .unwrap()
+            DistributedCoordinator::new(plan, 2).run_planned(&mut g, None).unwrap()
         };
         let short = mk_rep(64);
         let tall = mk_rep(256);
@@ -323,7 +224,7 @@ mod tests {
             .unwrap();
         let mut g = Grid::new2d(64, 64);
         let err = DistributedCoordinator::new(plan, 8)
-            .run(&HostExecutor::new(), &mut g, None)
+            .run_planned(&mut g, None)
             .unwrap_err();
         assert!(err.to_string().contains("thinner"), "{err}");
     }

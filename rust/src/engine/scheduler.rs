@@ -30,6 +30,10 @@ struct Slot {
     /// Times the client's credit was replenished (full rotations seen
     /// while it had work it could not yet afford).
     rounds: u64,
+    /// Cost the client ran *outside* the pool (cluster-routed jobs).
+    /// Observability only: bypassed work never consumes ring credit, but
+    /// the fairness ledger should still show where the cells went.
+    bypassed: u64,
 }
 
 /// Deficit round robin over a set of registered clients.
@@ -96,6 +100,20 @@ impl DeficitRoundRobin {
     /// Credit-replenishment count for `id` (0 for unknown ids).
     pub fn rounds(&self, id: usize) -> u64 {
         self.slots.get(id).and_then(|s| s.as_ref()).map_or(0, |s| s.rounds)
+    }
+
+    /// Record `cost` cell updates the client ran outside the pool (e.g.
+    /// a job the front door routed to the cluster). Accounting only —
+    /// no ring state changes, no credit is consumed or granted.
+    pub fn bypass(&mut self, id: usize, cost: u64) {
+        if let Some(Some(slot)) = self.slots.get_mut(id) {
+            slot.bypassed = slot.bypassed.saturating_add(cost);
+        }
+    }
+
+    /// Total bypassed cost recorded for `id` (0 for unknown ids).
+    pub fn bypassed(&self, id: usize) -> u64 {
+        self.slots.get(id).and_then(|s| s.as_ref()).map_or(0, |s| s.bypassed)
     }
 
     /// Pick the client whose head tile should be dispatched next and
@@ -318,6 +336,36 @@ mod tests {
         assert_eq!(b_left, 0);
         // freed slot is reused
         assert_eq!(drr.register(), a);
+    }
+
+    #[test]
+    fn bypassed_cost_is_ledgered_without_touching_fairness() {
+        let mut drr = DeficitRoundRobin::new(1);
+        let a = drr.register();
+        let b = drr.register();
+        drr.bypass(a, 1_000_000);
+        drr.bypass(a, 500);
+        assert_eq!(drr.bypassed(a), 1_000_500);
+        assert_eq!(drr.bypassed(b), 0);
+        assert_eq!(drr.served(a), 0, "bypassed work is not pool service");
+        // Pool fairness is untouched: equal-cost clients still alternate
+        // even though a banked a huge bypassed total.
+        drr.enqueue(a);
+        drr.enqueue(b);
+        let mut work = [(1u64, 6usize), (1, 6)];
+        let mut order = Vec::new();
+        while let Some(id) =
+            drr.next(|id| if work[id].1 > 0 { Some(work[id].0) } else { None })
+        {
+            work[id].1 -= 1;
+            order.push(id);
+        }
+        for w in order.windows(2) {
+            assert_ne!(w[0], w[1], "bypass must not skew the ring: {order:?}");
+        }
+        // Unknown ids are ignored, not panics.
+        drr.bypass(99, 5);
+        assert_eq!(drr.bypassed(99), 0);
     }
 
     #[test]

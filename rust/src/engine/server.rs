@@ -188,6 +188,17 @@ pub struct ClientStats {
     /// Times the numeric circuit breaker (`Plan::guard_nonfinite`)
     /// tripped on a NaN/Inf tile result for this client.
     pub nonfinite_trips: u64,
+    /// Cell-update cost ledgered against this client for work that
+    /// bypassed the DRR ring (cluster-routed jobs at the wire front
+    /// door). Kept separate from `sched_served` so the fairness
+    /// observable stays an honest account of pool dispatch.
+    pub sched_bypassed: u64,
+    /// Jobs routed through the cluster layer instead of the pool.
+    /// Maintained by the wire front door; always 0 for in-process use.
+    pub cluster_jobs: u64,
+    /// Shard-loss retry attempts charged to this client's cluster jobs.
+    /// Maintained by the wire front door; always 0 for in-process use.
+    pub cluster_shard_retries: u64,
 }
 
 // ------------------------------------------------------------------ job
@@ -805,7 +816,19 @@ impl ClientSession {
             sched_served: st.drr.served(self.id),
             sched_rounds: st.drr.rounds(self.id),
             nonfinite_trips: c.stats.nonfinite_trips,
+            sched_bypassed: st.drr.bypassed(self.id),
+            cluster_jobs: 0,
+            cluster_shard_retries: 0,
         }
+    }
+
+    /// Ledger `cost` cell updates against this client's DRR account
+    /// without scheduling anything: the work ran outside the pool (the
+    /// wire front door's cluster route) but should still show up in the
+    /// tenant's service accounting.
+    pub fn record_bypass(&self, cost: u64) {
+        let mut st = self.inner.state.lock().expect("server state poisoned");
+        st.drr.bypass(self.id, cost);
     }
 
     /// Submit one workload. Validation failures (shape, power, iteration

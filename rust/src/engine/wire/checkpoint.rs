@@ -222,6 +222,7 @@ mod tests {
                 step_sizes: None,
                 workers: None,
                 guard_nonfinite: Some(true),
+                shards: None,
             },
             grid: GridPayload::from_grid(&g),
             power: None,

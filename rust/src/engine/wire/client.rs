@@ -40,6 +40,12 @@ pub struct Health {
     pub jobs_active: u64,
     /// Whether seeded chaos injection is armed on the server.
     pub chaos: bool,
+    /// Cluster shard workers currently running for routed jobs.
+    pub shards_active: u64,
+    /// Halo cells whose exchange overlapped compute on the cluster path.
+    pub halo_overlapped: u64,
+    /// Shard-loss retry attempts the front door has re-spawned.
+    pub shard_retries: u64,
 }
 
 /// A connection to a [`super::WireFrontend`]. Sessions are server-side
@@ -95,9 +101,25 @@ impl WireClient {
     /// Liveness plus the server's health snapshot.
     pub fn health(&mut self) -> Result<Health, WireError> {
         match self.rpc(&Request::Ping)? {
-            Response::Pong { uptime_ms, workers, jobs_queued, jobs_active, chaos } => {
-                Ok(Health { uptime_ms, workers, jobs_queued, jobs_active, chaos })
-            }
+            Response::Pong {
+                uptime_ms,
+                workers,
+                jobs_queued,
+                jobs_active,
+                chaos,
+                shards_active,
+                halo_overlapped,
+                shard_retries,
+            } => Ok(Health {
+                uptime_ms,
+                workers,
+                jobs_queued,
+                jobs_active,
+                chaos,
+                shards_active,
+                halo_overlapped,
+                shard_retries,
+            }),
             other => Err(unexpected("pong", &other)),
         }
     }

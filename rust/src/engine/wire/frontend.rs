@@ -23,6 +23,16 @@
 //! death: `bind` replays the journal, finds each mid-flight job's
 //! [`Checkpoint`] sidecar, and *resumes* it from the last grid barrier —
 //! bit-identical to an uninterrupted run (DESIGN §3.4).
+//!
+//! With [`WireConfig::cluster`] set the front door is also the cluster
+//! router (DESIGN §3.3/§3.5): a submit whose total cell-update cost
+//! crosses the configured threshold — or whose session requested
+//! `shards > 1` — bypasses the DRR pool and runs on the sharded
+//! [`ClusterCoordinator`], in checkpoint-sized segments, on a dedicated
+//! runner thread the reaper watches exactly like a pool [`JobHandle`].
+//! A `ShardLost` there is a retryable attempt like any worker fault:
+//! the fleet is respawned, fast-forwarded from the last checkpoint
+//! sidecar when one exists.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -33,13 +43,17 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::cluster::{ClusterCoordinator, ShardMap, WorkerLauncher};
 use crate::coordinator::{ExecReport, Plan};
+use crate::model::PerfModel;
 use crate::stencil::{Grid, StencilProgram, StencilRegistry};
 use crate::util::json::Json;
 
 use super::super::chaos::{ChaosCtx, ChaosPlan, FaultKind};
 use super::super::server::{CheckpointSink, QUEUE_WAIT_BUCKETS};
-use super::super::{Backend, ClientSession, EngineError, EngineServer, JobHandle, Workload};
+use super::super::{
+    Backend, ClientSession, EngineError, EngineServer, JobHandle, JobOutput, Workload,
+};
 use super::checkpoint::Checkpoint;
 use super::protocol::{
     encode_frame, ErrorKind, GridPayload, PlanSpec, Request, Response, WireError,
@@ -53,6 +67,46 @@ const FRAME_DEADLINE: Duration = Duration::from_secs(30);
 
 /// Poll interval for the first byte of a frame (bounds shutdown latency).
 const IDLE_POLL: Duration = Duration::from_millis(100);
+
+/// Memory-throughput roof handed to the routing [`PerfModel`]. High
+/// enough that [`ClusterConfig::node_mcells`] — a *measured* rate — is
+/// what actually bounds the per-node term for every built-in stencil.
+const ROUTE_MODEL_GBPS: f64 = 20.0;
+
+/// Cluster routing policy (DESIGN §3.3). When [`WireConfig::cluster`]
+/// carries one of these, the front door routes big jobs through the
+/// sharded [`ClusterCoordinator`] instead of the local DRR pool.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Route to the cluster once `grid cells × iterations` reaches this
+    /// many cell updates *and* the perf model favours ≥ 2 shards. An
+    /// explicit per-session `shards` request bypasses the threshold
+    /// (`Some(1)` pins the session to the pool).
+    pub route_threshold_cells: u64,
+    /// Upper bound on shards per job; the partition's own feasibility
+    /// (halo and tile fit, [`ShardMap::shardable`]) clamps further.
+    pub max_shards: usize,
+    /// Interconnect rate fed to [`PerfModel::cluster_mcells`] when
+    /// scoring candidate shard counts.
+    pub link_gbps: f64,
+    /// Measured (or assumed) single-node rate in Mcell/s for the model.
+    pub node_mcells: f64,
+    /// How shard workers are hosted: real processes in production,
+    /// threads for benches and tests.
+    pub launcher: WorkerLauncher,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig {
+            route_threshold_cells: 8 << 20,
+            max_shards: 4,
+            link_gbps: 1.0,
+            node_mcells: 2000.0,
+            launcher: WorkerLauncher::Threads,
+        }
+    }
+}
 
 /// Front-door policy knobs. Defaults are deliberately modest — quotas are
 /// the backpressure mechanism, so they should trip in tests long before
@@ -82,6 +136,8 @@ pub struct WireConfig {
     /// through tile execution, journal IO, checkpoint writes and
     /// connection handling. `None` = no faults.
     pub chaos: Option<Arc<ChaosPlan>>,
+    /// Cluster routing policy; `None` keeps every job on the local pool.
+    pub cluster: Option<ClusterConfig>,
 }
 
 impl Default for WireConfig {
@@ -94,6 +150,7 @@ impl Default for WireConfig {
             checkpoint_every: 0,
             journal_rotate_bytes: 1 << 20,
             chaos: None,
+            cluster: None,
         }
     }
 }
@@ -111,6 +168,46 @@ struct RetryInput {
     total: usize,
 }
 
+/// A cluster attempt in flight: its runner thread plus the abort flag
+/// that [`ClusterCoordinator::abort`] polls between protocol steps.
+struct ClusterTask {
+    thread: JoinHandle<Result<JobOutput, EngineError>>,
+    abort: Arc<AtomicBool>,
+}
+
+/// Where one attempt is executing: the local DRR pool, or a cluster
+/// runner thread driving sharded workers. The reaper treats both
+/// identically — poll `is_done`, then `wait` for the typed result.
+enum Running {
+    Pool(JobHandle),
+    Cluster(ClusterTask),
+}
+
+impl Running {
+    fn is_done(&self) -> bool {
+        match self {
+            Running::Pool(h) => h.is_done(),
+            Running::Cluster(t) => t.thread.is_finished(),
+        }
+    }
+
+    fn cancel(&self) {
+        match self {
+            Running::Pool(h) => h.cancel(),
+            Running::Cluster(t) => t.abort.store(true, Ordering::SeqCst),
+        }
+    }
+
+    fn wait(self) -> Result<JobOutput, EngineError> {
+        match self {
+            Running::Pool(h) => h.wait(),
+            Running::Cluster(t) => t.thread.join().unwrap_or_else(|_| {
+                Err(EngineError::Execution("cluster runner panicked".to_string()))
+            }),
+        }
+    }
+}
+
 /// One wire job's front-door state. The ledger mirrors `state`; the
 /// ledger is the durable record, this is the live machinery.
 struct WireJob {
@@ -122,7 +219,11 @@ struct WireJob {
     cancel_requested: bool,
     /// Absolute wall-clock deadline; retries get the remaining budget.
     deadline: Option<Instant>,
-    handle: Option<JobHandle>,
+    /// `Some(shards)` when attempts run on the cluster path — retries
+    /// respawn the fleet at the same width instead of resubmitting to
+    /// the pool.
+    route: Option<usize>,
+    handle: Option<Running>,
     input: Option<RetryInput>,
     /// Held for exactly one fetch by a `wait` — then the state stays
     /// `Done` but later waits get a plain status.
@@ -136,6 +237,16 @@ struct Tenant {
     /// rebound frontend can rebuild this session without the original
     /// open request.
     spec: PlanSpec,
+    /// Plan facts the cluster router needs per submit, captured once at
+    /// open so routing never rebuilds the plan: `max_halo()`, `tile[0]`
+    /// and the deepest fused-step chunk (the model's `par_time`).
+    plan_halo: usize,
+    plan_tile0: usize,
+    plan_par_time: usize,
+    /// Jobs this tenant ran on the cluster path, and shard-loss retries
+    /// spent on them (surfaced through `stats`).
+    cluster_jobs: u64,
+    shard_retries: u64,
     outstanding_jobs: u64,
     outstanding_cells: u64,
     frames_in: u64,
@@ -159,7 +270,16 @@ struct Shared {
     state: Mutex<FrontState>,
     /// Signals job transitions to server-side `wait`ers and the reaper.
     jobs_cv: Condvar,
-    shutting: AtomicBool,
+    /// `Arc` so cluster runner threads can watch it without holding the
+    /// whole `Shared` (they do hold it — this keeps the flag cloneable
+    /// into [`ClusterCoordinator`] plumbing too).
+    shutting: Arc<AtomicBool>,
+    /// Shard-level health counters (wire `ping` surfaces them): shards
+    /// currently running, halo cells exchanged under overlap, and
+    /// shard-loss retries spent.
+    shards_active: AtomicU64,
+    halo_overlapped: AtomicU64,
+    shard_retries: AtomicU64,
     conns: Mutex<Vec<JoinHandle<()>>>,
     /// Bind time, for the health check's uptime.
     started: Instant,
@@ -217,7 +337,10 @@ impl WireFrontend {
                 next_session: 1,
             }),
             jobs_cv: Condvar::new(),
-            shutting: AtomicBool::new(false),
+            shutting: Arc::new(AtomicBool::new(false)),
+            shards_active: AtomicU64::new(0),
+            halo_overlapped: AtomicU64::new(0),
+            shard_retries: AtomicU64::new(0),
             conns: Mutex::new(Vec::new()),
             started: Instant::now(),
             ckpt_frozen: Arc::new(AtomicBool::new(false)),
@@ -325,6 +448,20 @@ impl WireFrontend {
                 let _ = h.join();
             }
             return;
+        }
+        // Cluster attempts poll their abort flag between protocol steps;
+        // raise it on every in-flight one so the fleets are reaped and
+        // the runners return promptly. With `shutting` already set the
+        // runner reports Shutdown, and resolve() turns that into
+        // `Failed{"interrupted..."}` — or Cancelled if the tenant had
+        // asked first — exactly like a drained pool job.
+        {
+            let st = self.shared.state.lock().expect("front state poisoned");
+            for j in st.jobs.values() {
+                if let Some(Running::Cluster(t)) = &j.handle {
+                    t.abort.store(true, Ordering::SeqCst);
+                }
+            }
         }
         // Wake the blocking accept() with a throwaway connection.
         let _ = TcpStream::connect(self.addr);
@@ -613,6 +750,9 @@ fn handle_ping(shared: &Arc<Shared>) -> Response {
         jobs_queued,
         jobs_active,
         chaos: shared.cfg.chaos.is_some(),
+        shards_active: shared.shards_active.load(Ordering::SeqCst),
+        halo_overlapped: shared.halo_overlapped.load(Ordering::SeqCst),
+        shard_retries: shared.shard_retries.load(Ordering::SeqCst),
     }
 }
 
@@ -673,7 +813,13 @@ fn handle_open(
     };
     // The fully-resolved spec (defaults filled in by the builder) is what
     // checkpoints embed — it must rebuild this exact plan after restart.
-    let full_spec = PlanSpec::from_plan(&plan);
+    // The shard request is routing policy, not a plan parameter, so the
+    // builder drops it; carry it over explicitly.
+    let mut full_spec = PlanSpec::from_plan(&plan);
+    full_spec.shards = spec.shards;
+    let plan_halo = plan.max_halo();
+    let plan_tile0 = plan.tile[0];
+    let plan_par_time = plan.chunks.iter().copied().max().unwrap_or(1);
     // Engine session queue depth exceeds the wire quota, so a quota-
     // admitted submit can never block on engine backpressure while the
     // front-state lock is held (quota is checked under that lock first).
@@ -697,6 +843,11 @@ fn handle_open(
         Tenant {
             client,
             spec: full_spec,
+            plan_halo,
+            plan_tile0,
+            plan_par_time,
+            cluster_jobs: 0,
+            shard_retries: 0,
             outstanding_jobs: 0,
             outstanding_cells: 0,
             frames_in: 0,
@@ -766,29 +917,80 @@ fn handle_submit(
     // tenant plan's default. Checkpoints track progress against this.
     let total = iterations.unwrap_or(tenant.spec.iterations);
     let spec = tenant.spec.clone();
-    let mut workload = Workload::new(grid.clone());
-    if let Some(p) = &power {
-        workload = workload.power(p.clone());
-    }
-    if let Some(i) = iterations {
-        workload = workload.iterations(i);
-    }
+    let route = route_shards(
+        shared.cfg.cluster.as_ref(),
+        &spec,
+        tenant.plan_halo,
+        tenant.plan_tile0,
+        tenant.plan_par_time,
+        cells,
+        total,
+    );
     let deadline = deadline_ms.map(Duration::from_millis);
-    if let Some(d) = deadline {
-        workload = workload.deadline(d);
-    }
+    let abs_deadline = deadline.map(|d| Instant::now() + d);
     // Allocate the id before the engine sees the job so the checkpoint
     // sink can be keyed on it. A submit the engine then rejects burns the
     // id — harmless, nothing was recorded under it.
     let job = st.ledger.allocate();
-    let workload =
-        arm_workload(shared, workload, job, session, 1, &spec, power.as_ref(), total, 0);
-    // Never blocks: quota admitted < engine queue depth (see handle_open).
-    let tenant = st.sessions.get(&session).expect("tenant checked above");
-    let handle = match tenant.client.submit(workload) {
-        Ok(h) => h,
-        // Validation failed — nothing was accepted, charge nothing.
-        Err(e) => return engine_error(&e),
+    let running = if let Some(shards) = route {
+        // Cluster path. The coordinator re-validates shape/power on its
+        // own run path, but those faults are *submission* errors, not
+        // retryable attempts — reject them here like the pool would.
+        if grid.dims() != spec.grid_dims {
+            return engine_error(&EngineError::GridShape {
+                expected: spec.grid_dims.clone(),
+                got: grid.dims(),
+            });
+        }
+        let has_power =
+            StencilRegistry::lookup(&spec.stencil).map(|id| id.def().has_power).unwrap_or(false);
+        if power.is_some() != has_power {
+            return engine_error(&EngineError::PowerMismatch {
+                expected: has_power,
+                got: power.is_some(),
+            });
+        }
+        // Charge the tenant's DRR slot for the bypassed work so pool
+        // fairness accounting stays honest against all-cluster tenants.
+        let t = st.sessions.get_mut(&session).expect("tenant checked above");
+        t.client.record_bypass(cells.saturating_mul(total as u64));
+        t.cluster_jobs += 1;
+        spawn_cluster(
+            shared,
+            ClusterAttempt {
+                spec: spec.clone(),
+                shards,
+                job,
+                tenant: session,
+                attempt: 1,
+                grid: grid.clone(),
+                power: power.clone(),
+                total,
+                base: 0,
+                deadline: abs_deadline,
+            },
+        )
+    } else {
+        let mut workload = Workload::new(grid.clone());
+        if let Some(p) = &power {
+            workload = workload.power(p.clone());
+        }
+        if let Some(i) = iterations {
+            workload = workload.iterations(i);
+        }
+        if let Some(d) = deadline {
+            workload = workload.deadline(d);
+        }
+        let workload =
+            arm_workload(shared, workload, job, session, 1, &spec, power.as_ref(), total, 0);
+        // Never blocks: quota admitted < engine queue depth (see
+        // handle_open).
+        let tenant = st.sessions.get(&session).expect("tenant checked above");
+        match tenant.client.submit(workload) {
+            Ok(h) => Running::Pool(h),
+            // Validation failed — nothing was accepted, charge nothing.
+            Err(e) => return engine_error(&e),
+        }
     };
     st.ledger.record(JobStatus {
         job,
@@ -812,8 +1014,9 @@ fn handle_submit(
             attempts: 1,
             cells,
             cancel_requested: false,
-            deadline: deadline.map(|d| Instant::now() + d),
-            handle: Some(handle),
+            deadline: abs_deadline,
+            route,
+            handle: Some(running),
             input: Some(RetryInput { grid, power, iterations, base_iter: 0, total }),
             output: None,
         },
@@ -919,7 +1122,11 @@ fn handle_stats(shared: &Arc<Shared>, session: u64) -> Response {
             message: format!("no session {session}"),
         };
     };
-    let es = t.client.stats();
+    let mut es = t.client.stats();
+    // Cluster-side counters live on the frontend, not the engine; fold
+    // them into the same stats surface the client already reads.
+    es.cluster_jobs = t.cluster_jobs;
+    es.cluster_shard_retries = t.shard_retries;
     let hist: Vec<Json> =
         (0..QUEUE_WAIT_BUCKETS).map(|i| Json::from(es.queue_wait_hist[i] as usize)).collect();
     let engine = Json::obj(vec![
@@ -933,6 +1140,9 @@ fn handle_stats(shared: &Arc<Shared>, session: u64) -> Response {
         ("max_queue_wait_us", Json::from(es.max_queue_wait.as_micros() as usize)),
         ("sched_served", Json::from(es.sched_served as usize)),
         ("sched_rounds", Json::from(es.sched_rounds as usize)),
+        ("sched_bypassed", Json::from(es.sched_bypassed as usize)),
+        ("cluster_jobs", Json::from(es.cluster_jobs as usize)),
+        ("cluster_shard_retries", Json::from(es.cluster_shard_retries as usize)),
         // Bucket i counts dispatches whose submit→dispatch wait fell in
         // [2^i, 2^(i+1)) microseconds; the last bucket absorbs the tail.
         ("queue_wait_hist_us_pow2", Json::Arr(hist)),
@@ -998,6 +1208,236 @@ fn engine_error(e: &EngineError) -> Response {
         _ => ErrorKind::Engine,
     };
     Response::Error { kind, message: e.to_string() }
+}
+
+// ------------------------------------------------------- cluster routing
+
+/// Decide whether (and how wide) one job leaves the pool for the cluster
+/// path. `None` = stay on the pool.
+///
+/// The widest *feasible* width comes first: every shard must keep at
+/// least `halo` and `tile0` interior rows ([`ShardMap::shardable`] plus
+/// the tile-fit guard — the same predicates the auditor's E010 check and
+/// the coordinator's run-entry guard apply). An explicit `shards`
+/// request is then clamped to that cap (`Some(1)` pins to the pool); an
+/// unrequested job routes only when its cell-update cost crosses the
+/// threshold *and* [`PerfModel::best_cluster_shards`] scores ≥ 2 shards
+/// faster at the configured link rate.
+fn route_shards(
+    cluster: Option<&ClusterConfig>,
+    spec: &PlanSpec,
+    halo: usize,
+    tile0: usize,
+    par_time: usize,
+    cells: u64,
+    total: usize,
+) -> Option<usize> {
+    let cfg = cluster?;
+    if spec.shards == Some(1) {
+        return None;
+    }
+    let dim0 = *spec.grid_dims.first()?;
+    let cap = (2..=cfg.max_shards.max(1).min(dim0)).rev().find(|&s| {
+        let map = ShardMap::new(dim0, s);
+        !map.has_empty_shard() && map.shardable(halo) && map.min_interior() >= tile0
+    })?;
+    if let Some(n) = spec.shards {
+        return Some(n.min(cap)).filter(|&w| w >= 2);
+    }
+    if cells.saturating_mul(total as u64) < cfg.route_threshold_cells {
+        return None;
+    }
+    let def = StencilRegistry::lookup(&spec.stencil)?.def();
+    let best = PerfModel::new(ROUTE_MODEL_GBPS).best_cluster_shards(
+        def,
+        cfg.node_mcells,
+        &spec.grid_dims,
+        par_time,
+        cfg.link_gbps,
+        cap,
+    );
+    (best >= 2).then_some(best)
+}
+
+/// Everything one cluster attempt needs, owned outright so the runner
+/// thread borrows nothing from front-door state.
+struct ClusterAttempt {
+    spec: PlanSpec,
+    shards: usize,
+    job: u64,
+    tenant: u64,
+    attempt: u32,
+    grid: Grid,
+    power: Option<Grid>,
+    total: usize,
+    /// Iterations already baked into `grid` (resume / sidecar retry).
+    base: usize,
+    deadline: Option<Instant>,
+}
+
+/// Start one cluster attempt on its own runner thread. The returned
+/// [`Running::Cluster`] is reaped exactly like a pool handle.
+fn spawn_cluster(shared: &Arc<Shared>, a: ClusterAttempt) -> Running {
+    let abort = Arc::new(AtomicBool::new(false));
+    let shared = Arc::clone(shared);
+    let flag = Arc::clone(&abort);
+    let thread = std::thread::spawn(move || run_cluster_attempt(&shared, &flag, a));
+    Running::Cluster(ClusterTask { thread, abort })
+}
+
+/// One cluster attempt: run the job on the [`ClusterCoordinator`] in
+/// checkpoint-sized segments, writing a [`Checkpoint`] sidecar at every
+/// segment barrier. Segments end on accumulated greedy-schedule chunks,
+/// so the stitched result is bit-identical to an uninterrupted run —
+/// the same prefix property the resume path relies on (DESIGN §3.4).
+fn run_cluster_attempt(
+    shared: &Arc<Shared>,
+    abort: &Arc<AtomicBool>,
+    a: ClusterAttempt,
+) -> Result<JobOutput, EngineError> {
+    let shards = a.shards as u64;
+    shared.shards_active.fetch_add(shards, Ordering::SeqCst);
+    let r = cluster_segments(shared, abort, a);
+    shared.shards_active.fetch_sub(shards, Ordering::SeqCst);
+    r
+}
+
+fn cluster_segments(
+    shared: &Arc<Shared>,
+    abort: &Arc<AtomicBool>,
+    a: ClusterAttempt,
+) -> Result<JobOutput, EngineError> {
+    let cluster =
+        shared.cfg.cluster.clone().expect("cluster-routed job without cluster config");
+    let started = Instant::now();
+    let base_plan = a.spec.build()?;
+    let checkpointing = shared.cfg.checkpoint_every > 0 && shared.cfg.journal.is_some();
+    let mut grid = a.grid;
+    let mut done = a.base;
+    let mut passes = 0usize;
+    while done < a.total {
+        if shared.shutting.load(Ordering::SeqCst) {
+            return Err(EngineError::Shutdown);
+        }
+        if abort.load(Ordering::SeqCst) {
+            return Err(EngineError::Cancelled);
+        }
+        if a.deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(EngineError::DeadlineExceeded);
+        }
+        let remaining = a.total - done;
+        let segment = if checkpointing {
+            segment_len(&base_plan, remaining, shared.cfg.checkpoint_every)
+        } else {
+            remaining
+        };
+        let mut seg_spec = a.spec.clone();
+        seg_spec.iterations = segment;
+        let seg_plan = seg_spec.build()?;
+        passes += seg_plan.chunks.len();
+        // Worker chaos is forwarded only on attempts the schedule
+        // selects, so `kill=1@1` fells attempt 1's fleet and lets the
+        // retry run clean — ShardLost-is-retryable, deterministically.
+        let forward = shared.cfg.chaos.as_ref().filter(|c| {
+            c.should(FaultKind::WorkerKill, a.job, a.attempt, done as u64)
+        });
+        let mut cc = ClusterCoordinator::new(seg_plan, a.shards)
+            .launcher(cluster.launcher.clone())
+            .abort(Arc::clone(abort));
+        if let Some(c) = forward {
+            cc = cc.chaos(c.to_string());
+        }
+        let rep = cc.run(&mut grid, a.power.as_ref()).map_err(|e| match e {
+            // The abort flag is also how shutdown stops a fleet; report
+            // what actually happened (resolve() still lets a tenant
+            // cancel win over shutdown).
+            EngineError::Cancelled if shared.shutting.load(Ordering::SeqCst) => {
+                EngineError::Shutdown
+            }
+            other => other,
+        })?;
+        shared.halo_overlapped.fetch_add(rep.halo_cells_exchanged, Ordering::SeqCst);
+        done += segment;
+        if checkpointing && done < a.total {
+            save_cluster_checkpoint(shared, &a, done, &grid);
+        }
+    }
+    let cells: u64 = a.spec.grid_dims.iter().product::<usize>() as u64;
+    Ok(JobOutput {
+        grid,
+        report: ExecReport {
+            iterations: a.total - a.base,
+            passes,
+            tiles_executed: 0,
+            cell_updates: cells * (a.total - a.base) as u64,
+            redundant_updates: 0,
+            elapsed: started.elapsed(),
+            backend: "cluster",
+            stages: None,
+        },
+    })
+}
+
+/// Iterations to run before the next checkpoint barrier: whole greedy
+/// chunks accumulated to at least `every`, mirroring the engine's
+/// chunk-barrier checkpoint cadence so segment seams land exactly where
+/// an uninterrupted schedule would put a pass boundary.
+fn segment_len(plan: &Plan, remaining: usize, every: usize) -> usize {
+    let Ok(chunks) = plan.schedule_for(remaining) else { return remaining };
+    let mut acc = 0usize;
+    for steps in chunks {
+        acc += steps;
+        if acc >= every {
+            break;
+        }
+    }
+    acc.clamp(1, remaining)
+}
+
+/// Sidecar write at a cluster segment barrier — same format, path and
+/// freeze/corrupt-chaos discipline as the engine-side [`CheckpointSink`].
+fn save_cluster_checkpoint(shared: &Arc<Shared>, a: &ClusterAttempt, done: usize, grid: &Grid) {
+    if shared.ckpt_frozen.load(Ordering::SeqCst) {
+        return;
+    }
+    let Some(journal) = &shared.cfg.journal else { return };
+    let ck = Checkpoint {
+        job: a.job,
+        tenant: a.tenant,
+        attempt: a.attempt,
+        total: a.total,
+        done,
+        plan: a.spec.clone(),
+        grid: GridPayload::from_grid(grid),
+        power: a.power.as_ref().map(GridPayload::from_grid),
+    };
+    let corrupt = shared.cfg.chaos.as_ref().is_some_and(|c| {
+        c.should(FaultKind::CheckpointCorrupt, a.job, a.attempt, done as u64)
+    });
+    let _ = ck.save(&Checkpoint::path_for(journal, a.job), corrupt);
+}
+
+/// Fast-forward a cluster retry from the job's checkpoint sidecar, when
+/// a valid one exists that is further along than the input already is.
+/// An invalid or stale sidecar is simply ignored — the retry then
+/// re-runs from the input it has (correct, just slower).
+fn refresh_from_sidecar(cfg: &WireConfig, job: u64, tenant: u64, input: &mut RetryInput) -> bool {
+    let Some(journal) = &cfg.journal else { return false };
+    let Ok(ck) = Checkpoint::load(&Checkpoint::path_for(journal, job)) else { return false };
+    if ck.job != job || ck.tenant != tenant || ck.total != input.total {
+        return false;
+    }
+    if ck.done <= input.base_iter || ck.done >= ck.total {
+        return false;
+    }
+    let Ok(grid) = ck.grid.to_grid() else { return false };
+    let Ok(power) = ck.power.as_ref().map(GridPayload::to_grid).transpose() else {
+        return false;
+    };
+    input.grid = grid;
+    input.power = power;
+    input.base_iter = ck.done;
+    true
 }
 
 // ------------------------------------------------- crash safety plumbing
@@ -1098,6 +1538,9 @@ fn resume_orphan(
     // one fails here and the job heals — the documented degradation.
     if !st.sessions.contains_key(&ck.tenant) {
         let plan = ck.plan.build().map_err(|e| e.to_string())?;
+        let plan_halo = plan.max_halo();
+        let plan_tile0 = plan.tile[0];
+        let plan_par_time = plan.chunks.iter().copied().max().unwrap_or(1);
         let depth = shared.cfg.max_queued_jobs.max(1) + 1;
         let client = {
             let guard = shared.engine.lock().expect("engine slot poisoned");
@@ -1113,6 +1556,11 @@ fn resume_orphan(
             Tenant {
                 client,
                 spec: ck.plan.clone(),
+                plan_halo,
+                plan_tile0,
+                plan_par_time,
+                cluster_jobs: 0,
+                shard_retries: 0,
                 outstanding_jobs: 0,
                 outstanding_cells: 0,
                 frames_in: 0,
@@ -1125,23 +1573,56 @@ fn resume_orphan(
     let attempts = prev.attempts + 1;
     let cells = grid.len() as u64;
     let remaining = ck.total - ck.done;
-    let mut w = Workload::new(grid.clone()).iterations(remaining);
-    if let Some(p) = &power {
-        w = w.power(p.clone());
-    }
-    w = arm_workload(
-        shared,
-        w,
-        id,
-        ck.tenant,
-        attempts,
-        &ck.plan,
-        power.as_ref(),
-        ck.total,
-        ck.done,
-    );
+    // The resumed remainder routes by the same rule a fresh submit would
+    // use, so a big job interrupted mid-cluster-run continues sharded.
     let tenant = st.sessions.get(&ck.tenant).expect("tenant ensured above");
-    let handle = tenant.client.submit(w).map_err(|e| e.to_string())?;
+    let route = route_shards(
+        shared.cfg.cluster.as_ref(),
+        &ck.plan,
+        tenant.plan_halo,
+        tenant.plan_tile0,
+        tenant.plan_par_time,
+        cells,
+        remaining,
+    );
+    let handle = if let Some(shards) = route {
+        let t = st.sessions.get_mut(&ck.tenant).expect("tenant ensured above");
+        t.client.record_bypass(cells.saturating_mul(remaining as u64));
+        t.cluster_jobs += 1;
+        spawn_cluster(
+            shared,
+            ClusterAttempt {
+                spec: ck.plan.clone(),
+                shards,
+                job: id,
+                tenant: ck.tenant,
+                attempt: attempts,
+                grid: grid.clone(),
+                power: power.clone(),
+                total: ck.total,
+                base: ck.done,
+                deadline: None,
+            },
+        )
+    } else {
+        let mut w = Workload::new(grid.clone()).iterations(remaining);
+        if let Some(p) = &power {
+            w = w.power(p.clone());
+        }
+        w = arm_workload(
+            shared,
+            w,
+            id,
+            ck.tenant,
+            attempts,
+            &ck.plan,
+            power.as_ref(),
+            ck.total,
+            ck.done,
+        );
+        let tenant = st.sessions.get(&ck.tenant).expect("tenant ensured above");
+        Running::Pool(tenant.client.submit(w).map_err(|e| e.to_string())?)
+    };
     st.ledger.mark_resumed(id, ck.done, attempts);
     st.jobs.insert(
         id,
@@ -1152,6 +1633,7 @@ fn resume_orphan(
             cells,
             cancel_requested: false,
             deadline: None,
+            route,
             handle: Some(handle),
             input: Some(RetryInput {
                 grid,
@@ -1192,7 +1674,7 @@ fn reaper_loop(shared: &Arc<Shared>) {
         let finished: Vec<u64> = st
             .jobs
             .iter()
-            .filter(|(_, j)| j.handle.as_ref().is_some_and(JobHandle::is_done))
+            .filter(|(_, j)| j.handle.as_ref().is_some_and(Running::is_done))
             .map(|(&id, _)| id)
             .collect();
         for id in finished {
@@ -1224,7 +1706,7 @@ fn reaper_loop(shared: &Arc<Shared>) {
 /// What one completed attempt amounted to, snapshotted so no job borrow
 /// survives into the state transitions below.
 enum Outcome {
-    Done(super::super::JobOutput),
+    Done(JobOutput),
     Cancelled,
     Shutdown,
     /// The deadline passed — terminal immediately, never retried (a
@@ -1241,7 +1723,7 @@ fn resolve(
     shared: &Arc<Shared>,
     st: &mut FrontState,
     id: u64,
-    result: Result<super::super::JobOutput, EngineError>,
+    result: Result<JobOutput, EngineError>,
 ) {
     let cfg = &shared.cfg;
     let (attempts, cancel_requested) = {
@@ -1329,14 +1811,40 @@ fn finish(shared: &Arc<Shared>, st: &mut FrontState, id: u64, state: JobState) {
     shared.jobs_cv.notify_all();
 }
 
-/// Re-submit a failed attempt through the tenant's engine session. The
-/// journal shows the full cycle: Queued(k) when the attempt fails,
-/// Active(k+1) when the next one starts.
+/// Re-submit a failed attempt through the tenant's engine session — or,
+/// for a cluster-routed job, respawn the shard fleet (fast-forwarded
+/// from the last checkpoint sidecar when a valid one exists): a
+/// `ShardLost` is a retryable ledger attempt, not a job failure. The
+/// journal shows the full cycle either way: Queued(k) when the attempt
+/// fails, Active(k+1) when the next one starts.
 fn retry(shared: &Arc<Shared>, st: &mut FrontState, id: u64, error: &str) {
     let FrontState { ledger, sessions, jobs, .. } = st;
     let job = jobs.get_mut(&id).expect("retrying a known job");
-    let (tenant_alive, resubmitted) = match sessions.get(&job.tenant) {
+    let (tenant_alive, resubmitted) = match sessions.get_mut(&job.tenant) {
         None => (false, Err(EngineError::Shutdown)),
+        Some(t) if job.route.is_some() => {
+            let shards = job.route.expect("checked in guard");
+            let input = job.input.as_mut().expect("retryable job keeps its input");
+            refresh_from_sidecar(&shared.cfg, id, job.tenant, input);
+            shared.shard_retries.fetch_add(1, Ordering::SeqCst);
+            t.shard_retries += 1;
+            let running = spawn_cluster(
+                shared,
+                ClusterAttempt {
+                    spec: t.spec.clone(),
+                    shards,
+                    job: id,
+                    tenant: job.tenant,
+                    attempt: job.attempts + 1,
+                    grid: input.grid.clone(),
+                    power: input.power.clone(),
+                    total: input.total,
+                    base: input.base_iter,
+                    deadline: job.deadline,
+                },
+            );
+            (true, Ok(running))
+        }
         Some(t) => {
             let input = job.input.as_ref().expect("retryable job keeps its input");
             let mut w = Workload::new(input.grid.clone());
@@ -1363,7 +1871,7 @@ fn retry(shared: &Arc<Shared>, st: &mut FrontState, id: u64, error: &str) {
                 input.total,
                 input.base_iter,
             );
-            (true, t.client.submit(w))
+            (true, t.client.submit(w).map(Running::Pool))
         }
     };
     match resubmitted {
@@ -1396,5 +1904,127 @@ fn retry(shared: &Arc<Shared>, st: &mut FrontState, id: u64, error: &str) {
             };
             finish(shared, st, id, JobState::Failed { attempts, error: reason });
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(dims: &[usize], iterations: usize, shards: Option<usize>) -> PlanSpec {
+        PlanSpec {
+            stencil: "diffusion2d".to_string(),
+            grid_dims: dims.to_vec(),
+            iterations,
+            backend: "scalar".to_string(),
+            tile: None,
+            coeffs: None,
+            step_sizes: None,
+            workers: None,
+            guard_nonfinite: None,
+            shards,
+        }
+    }
+
+    #[test]
+    fn explicit_shard_requests_clamp_to_the_feasible_cap() {
+        // Threshold astronomically high: only the explicit request can
+        // route. Cap over [256, 64] with a 32-row tile is 8 shards.
+        let cfg = ClusterConfig {
+            route_threshold_cells: u64::MAX,
+            max_shards: 8,
+            ..ClusterConfig::default()
+        };
+        let route = |sh| route_shards(Some(&cfg), &spec(&[256, 64], 8, sh), 2, 32, 2, 16384, 8);
+        assert_eq!(route(Some(6)), Some(6));
+        assert_eq!(route(Some(64)), Some(8), "request clamps to the feasible cap");
+        assert_eq!(route(Some(1)), None, "shards=1 pins the session to the pool");
+        // Unrequested jobs below the threshold stay on the pool.
+        assert_eq!(route(None), None);
+    }
+
+    #[test]
+    fn threshold_crossing_jobs_route_by_the_model() {
+        // Same pinned scenario as the perf-model test: a fat 4096² grid
+        // at 1 Gb/s favours the full 4 shards.
+        let cfg = ClusterConfig {
+            route_threshold_cells: 1,
+            max_shards: 4,
+            link_gbps: 1.0,
+            node_mcells: 400.0,
+            launcher: WorkerLauncher::Threads,
+        };
+        let sp = spec(&[4096, 4096], 8, None);
+        let cells = 4096u64 * 4096;
+        assert_eq!(route_shards(Some(&cfg), &sp, 4, 64, 4, cells, 8), Some(4));
+        // No cluster config at all: never routes.
+        assert_eq!(route_shards(None, &sp, 4, 64, 4, cells, 8), None);
+    }
+
+    #[test]
+    fn infeasible_partitions_stay_on_the_pool() {
+        // 64 rows with a 64-row tile: even 2 shards would leave slabs
+        // thinner than the tile, so the request is refused — mirroring
+        // the auditor's E010 predicate instead of failing at run time.
+        let cfg = ClusterConfig { route_threshold_cells: 0, ..ClusterConfig::default() };
+        let sp = spec(&[64, 64], 8, Some(2));
+        assert_eq!(route_shards(Some(&cfg), &sp, 4, 64, 4, 4096, 8), None);
+    }
+
+    #[test]
+    fn segments_end_on_greedy_chunk_boundaries() {
+        let plan = spec(&[64, 64], 12, None).build().expect("plan builds");
+        // Default step sizes [4,2,1] schedule 12 iterations as [4,4,4].
+        assert_eq!(segment_len(&plan, 12, 6), 8, "4 < 6, so a second chunk accrues");
+        assert_eq!(segment_len(&plan, 12, 1), 4, "never splits inside a chunk");
+        assert_eq!(segment_len(&plan, 12, 100), 12, "caps at the remaining work");
+        assert_eq!(segment_len(&plan, 2, 1), 2);
+    }
+
+    #[test]
+    fn sidecar_refresh_fast_forwards_only_valid_snapshots() {
+        let mut journal = std::env::temp_dir();
+        journal.push(format!("fstencil-frontend-sidecar-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&journal);
+        journal.push("journal.jsonl");
+        let cfg = WireConfig { journal: Some(journal.clone()), ..WireConfig::default() };
+        let sp = spec(&[8, 8], 10, None);
+        let mut snap = Grid::new2d(8, 8);
+        snap.fill_random(3, -1.0, 1.0);
+        let ck = Checkpoint {
+            job: 7,
+            tenant: 1,
+            attempt: 1,
+            total: 10,
+            done: 6,
+            plan: sp,
+            grid: GridPayload::from_grid(&snap),
+            power: None,
+        };
+        let path = Checkpoint::path_for(&journal, 7);
+        ck.save(&path, false).expect("sidecar writes");
+        let fresh_input = || RetryInput {
+            grid: Grid::new2d(8, 8),
+            power: None,
+            iterations: None,
+            base_iter: 0,
+            total: 10,
+        };
+        let mut input = fresh_input();
+        assert!(refresh_from_sidecar(&cfg, 7, 1, &mut input));
+        assert_eq!(input.base_iter, 6);
+        assert_eq!(input.grid.data(), snap.data(), "retry restarts from the snapshot");
+        // Rejected: wrong job id path (no sidecar), wrong tenant, stale
+        // progress, mismatched total — each leaves the input untouched.
+        let mut input = fresh_input();
+        assert!(!refresh_from_sidecar(&cfg, 8, 1, &mut input));
+        assert!(!refresh_from_sidecar(&cfg, 7, 2, &mut input));
+        input.total = 11;
+        assert!(!refresh_from_sidecar(&cfg, 7, 1, &mut input));
+        input.total = 10;
+        input.base_iter = 6;
+        assert!(!refresh_from_sidecar(&cfg, 7, 1, &mut input), "not beyond what we have");
+        assert_eq!(input.grid.data(), Grid::new2d(8, 8).data());
+        let _ = std::fs::remove_file(&path);
     }
 }

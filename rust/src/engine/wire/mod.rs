@@ -31,6 +31,6 @@ pub mod queue;
 
 pub use checkpoint::Checkpoint;
 pub use client::{Health, WaitOutcome, WireClient};
-pub use frontend::{WireConfig, WireFrontend};
+pub use frontend::{ClusterConfig, WireConfig, WireFrontend};
 pub use protocol::{ErrorKind, GridPayload, PlanSpec, Request, Response, WireError};
 pub use queue::{JobLedger, JobState, JobStatus};

@@ -175,6 +175,13 @@ pub struct PlanSpec {
     /// Opt-in numeric circuit breaker: trip a typed `NonFinite` failure
     /// when a tile result contains NaN/Inf instead of propagating poison.
     pub guard_nonfinite: Option<bool>,
+    /// Requested cluster shard count. `Some(n > 1)` asks the server to
+    /// route jobs through the sharded cluster path with (up to) `n`
+    /// worker processes; `Some(1)` pins the session to the local pool
+    /// even when the cost-based router would shard; `None` lets the
+    /// server decide from the configured routing threshold and
+    /// [`crate::model::PerfModel::cluster_mcells`].
+    pub shards: Option<usize>,
 }
 
 impl PlanSpec {
@@ -191,6 +198,7 @@ impl PlanSpec {
             step_sizes: Some(plan.step_sizes.clone()),
             workers: plan.workers,
             guard_nonfinite: plan.guard_nonfinite.then_some(true),
+            shards: None,
         }
     }
 
@@ -251,6 +259,9 @@ impl PlanSpec {
         if let Some(g) = self.guard_nonfinite {
             pairs.push(("guard_nonfinite", Json::from(g)));
         }
+        if let Some(s) = self.shards {
+            pairs.push(("shards", Json::from(s)));
+        }
         Json::obj(pairs)
     }
 
@@ -276,6 +287,7 @@ impl PlanSpec {
             step_sizes: opt_usize_arr(v, "step_sizes")?,
             workers: opt_usize(v, "workers")?,
             guard_nonfinite: v.get("guard_nonfinite").and_then(Json::as_bool),
+            shards: opt_usize(v, "shards")?,
         })
     }
 }
@@ -428,8 +440,19 @@ pub enum Response {
     Stats { session: u64, stats: Json },
     Closed { session: u64 },
     /// Liveness + health snapshot: server uptime, pool size, journal-level
-    /// job counts and whether chaos injection is armed.
-    Pong { uptime_ms: u64, workers: u64, jobs_queued: u64, jobs_active: u64, chaos: bool },
+    /// job counts, whether chaos injection is armed, and the shard-level
+    /// cluster counters (shard workers currently running, halo cells
+    /// overlapped with compute so far, shard-loss retries healed).
+    Pong {
+        uptime_ms: u64,
+        workers: u64,
+        jobs_queued: u64,
+        jobs_active: u64,
+        chaos: bool,
+        shards_active: u64,
+        halo_overlapped: u64,
+        shard_retries: u64,
+    },
     /// An `open` whose plan failed the server-side static audit: the
     /// message summarizes, `diagnostics` is the full serialized
     /// [`crate::analysis::AuditReport`] (subject, counts, per-diagnostic
@@ -471,16 +494,26 @@ impl Response {
                 ("type", Json::from("closed")),
                 ("session", u64_json(*session)),
             ]),
-            Response::Pong { uptime_ms, workers, jobs_queued, jobs_active, chaos } => {
-                Json::obj(vec![
-                    ("type", Json::from("pong")),
-                    ("uptime_ms", u64_json(*uptime_ms)),
-                    ("workers", u64_json(*workers)),
-                    ("jobs_queued", u64_json(*jobs_queued)),
-                    ("jobs_active", u64_json(*jobs_active)),
-                    ("chaos", Json::from(*chaos)),
-                ])
-            }
+            Response::Pong {
+                uptime_ms,
+                workers,
+                jobs_queued,
+                jobs_active,
+                chaos,
+                shards_active,
+                halo_overlapped,
+                shard_retries,
+            } => Json::obj(vec![
+                ("type", Json::from("pong")),
+                ("uptime_ms", u64_json(*uptime_ms)),
+                ("workers", u64_json(*workers)),
+                ("jobs_queued", u64_json(*jobs_queued)),
+                ("jobs_active", u64_json(*jobs_active)),
+                ("chaos", Json::from(*chaos)),
+                ("shards_active", u64_json(*shards_active)),
+                ("halo_overlapped", u64_json(*halo_overlapped)),
+                ("shard_retries", u64_json(*shard_retries)),
+            ]),
             Response::Rejected { message, diagnostics } => Json::obj(vec![
                 ("type", Json::from("rejected")),
                 ("message", Json::from(message.clone())),
@@ -527,6 +560,9 @@ impl Response {
                 jobs_queued: opt_u64(v, "jobs_queued")?.unwrap_or(0),
                 jobs_active: opt_u64(v, "jobs_active")?.unwrap_or(0),
                 chaos: v.get("chaos").and_then(Json::as_bool).unwrap_or(false),
+                shards_active: opt_u64(v, "shards_active")?.unwrap_or(0),
+                halo_overlapped: opt_u64(v, "halo_overlapped")?.unwrap_or(0),
+                shard_retries: opt_u64(v, "shard_retries")?.unwrap_or(0),
             }),
             // Tolerant decode: the diagnostics payload defaults to Null
             // so a summary-only rejection still parses.
@@ -562,6 +598,9 @@ mod tests {
             jobs_queued: 2,
             jobs_active: 1,
             chaos: true,
+            shards_active: 4,
+            halo_overlapped: 4096,
+            shard_retries: 1,
         };
         assert_eq!(Response::from_json(&p.to_json()).unwrap(), p);
         // An old-style bare pong still parses, with health zeroed out.
@@ -573,7 +612,10 @@ mod tests {
                 workers: 0,
                 jobs_queued: 0,
                 jobs_active: 0,
-                chaos: false
+                chaos: false,
+                shards_active: 0,
+                halo_overlapped: 0,
+                shard_retries: 0,
             }
         );
     }

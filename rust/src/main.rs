@@ -137,10 +137,18 @@ USAGE: fstencil <subcommand> [options]
             [--chaos <seed>:<kind>=<rate>[@attempts],...  deterministic
              fault injection; kinds exec slow journal short ckpt drop,
              e.g. --chaos 7:exec=0.2@2,drop=0.05]
+            [--cluster-threshold CELLS  route jobs whose cells x iters
+             reach CELLS through sharded worker processes; any
+             --cluster-* flag arms the cluster route]
+            [--cluster-max-shards N] [--cluster-link-gbps G]
+            [--cluster-node-mcells M  perf-model terms for shard scoring]
   client    --connect <host:port> [--clients N] [--jobs M] [--iters I]
             [--stencil <name>] [--backend <spec>] [--dims H,W[,D]]
             [--tile a,b] [--cancel-every K] [--deadline-ms MS]
             [--guard-nonfinite] [--stats] [--check]
+            [--shards N  request sharded cluster execution for every
+             session (needs a server with --cluster-* armed; 1 pins
+             jobs to the pool)]
             wire stress driver against `serve --listen`: N TCP sessions,
             M jobs each, quota-aware closed loop; --check verifies the
             last completed job per session against the scalar oracle
@@ -910,6 +918,33 @@ fn serve_listen(args: &Args, addr: &str) -> anyhow::Result<()> {
         eprintln!("chaos armed: {plan}");
         cfg.chaos = Some(std::sync::Arc::new(plan));
     }
+    let cluster_flags =
+        ["cluster-threshold", "cluster-max-shards", "cluster-link-gbps", "cluster-node-mcells"];
+    if cluster_flags.iter().any(|f| args.opt(f).is_some()) {
+        use fstencil::cluster::WorkerLauncher;
+        use fstencil::engine::wire::ClusterConfig;
+        let defaults = ClusterConfig::default();
+        let cc = ClusterConfig {
+            route_threshold_cells: args
+                .opt_usize("cluster-threshold")
+                .map_or(defaults.route_threshold_cells, |n| n as u64),
+            max_shards: args
+                .opt_usize("cluster-max-shards")
+                .map_or(defaults.max_shards, |n| n.max(1)),
+            link_gbps: args.opt_f64("cluster-link-gbps").unwrap_or(defaults.link_gbps),
+            node_mcells: args.opt_f64("cluster-node-mcells").unwrap_or(defaults.node_mcells),
+            // Shard workers are this binary's hidden `worker` subcommand.
+            launcher: WorkerLauncher::Process {
+                program: std::env::current_exe()
+                    .map_err(|e| anyhow::anyhow!("cannot locate own binary: {e}"))?,
+            },
+        };
+        eprintln!(
+            "cluster routing armed: threshold {} cells, <= {} shards, link {} Gb/s",
+            cc.route_threshold_cells, cc.max_shards, cc.link_gbps
+        );
+        cfg.cluster = Some(cc);
+    }
     let duration = args.opt_usize("duration").unwrap_or(0);
 
     let server = StencilEngine::new().serve(workers);
@@ -1020,6 +1055,7 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
             step_sizes: None,
             workers: None,
             guard_nonfinite: guard_nonfinite.then_some(true),
+            shards: args.opt_usize("shards"),
         };
         let label = format!("{kind} {backend} {dims:?} x{iters}");
         let addr = addr.clone();

@@ -269,6 +269,34 @@ impl PerfModel {
         let t_pass = if overlapped { t_comp.max(t_comm) } else { t_comp + t_comm };
         cells * par_time / t_pass / 1e6
     }
+
+    /// The wire front door's routing score: the shard count in
+    /// `1..=max_shards` that maximizes [`PerfModel::cluster_mcells`]
+    /// (overlapped exchange) for this workload and link. Returns `1`
+    /// when no split beats the single-node rate — i.e. the job should
+    /// stay on the local pool. Ties break toward fewer shards, so a
+    /// link-saturated plateau never pays for extra processes.
+    pub fn best_cluster_shards(
+        &self,
+        def: &StencilProgram,
+        node_mcells: f64,
+        dims: &[usize],
+        par_time: usize,
+        link_gbps: f64,
+        max_shards: usize,
+    ) -> usize {
+        let mut best = 1usize;
+        let mut best_rate = f64::MIN;
+        for s in 1..=max_shards.max(1) {
+            let rate =
+                self.cluster_mcells(def, node_mcells, s, dims, par_time, link_gbps, true);
+            if rate > best_rate {
+                best = s;
+                best_rate = rate;
+            }
+        }
+        best
+    }
 }
 
 #[cfg(test)]
@@ -469,6 +497,21 @@ mod tests {
         // par_time × memory roof per shard (2500 × 4 × 2 shards).
         let capped = m.cluster_mcells(def, 1e9, 2, &[4096, 4096], 4, 1e9, true);
         assert!((capped - 20000.0).abs() < 1e-6, "{capped}");
+    }
+
+    #[test]
+    fn best_shard_count_follows_the_link() {
+        let m = PerfModel::new(20.0);
+        let def = StencilKind::Diffusion2D.def();
+        // Compute-bound (tall slabs, healthy link): every extra shard
+        // pays off, so the router takes the whole budget.
+        assert_eq!(m.best_cluster_shards(def, 400.0, &[4096, 4096], 4, 1.0, 4), 4);
+        // Link-limited plateau (64 fat rows, 0.1 Gbps): the overlapped
+        // rate saturates at 2 shards; ties break toward fewer processes.
+        assert_eq!(m.best_cluster_shards(def, 400.0, &[64, 65536], 4, 0.1, 8), 2);
+        // Link-bound (same shape, 1 Mbps): any split loses to the single
+        // node, so the job stays on the pool.
+        assert_eq!(m.best_cluster_shards(def, 400.0, &[64, 65536], 4, 0.001, 8), 1);
     }
 
     #[test]

@@ -167,6 +167,61 @@ fn bit_identity_matrix_builtins_and_custom_across_backends() {
 }
 
 #[test]
+fn cancelled_cluster_job_reports_cancelled_not_shard_lost() {
+    // Wire-level cancel precedence on the cluster route: cancelling a job
+    // mid-flight must reap the whole shard fleet and resolve the ledger
+    // entry as `Cancelled` — the teardown racing the workers must never
+    // surface as a spurious `ShardLost` (or burn a retry attempt).
+    use fstencil::engine::wire::{
+        ClusterConfig, JobState, PlanSpec, WaitOutcome, WireClient, WireConfig, WireFrontend,
+    };
+    use fstencil::engine::EngineServer;
+    use std::time::Duration;
+
+    let cfg = WireConfig {
+        cluster: Some(ClusterConfig {
+            // Only the session's explicit shard request routes — keeps the
+            // test independent of the perf model's shard scoring.
+            route_threshold_cells: u64::MAX,
+            ..ClusterConfig::default()
+        }),
+        ..WireConfig::default()
+    };
+    let server = EngineServer::start(2);
+    let front = match WireFrontend::bind("127.0.0.1:0", server, cfg) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("SKIP: loopback bind unavailable in this environment ({e})");
+            return;
+        }
+    };
+    let addr = front.local_addr().to_string();
+    let mut client = WireClient::connect(&addr).expect("connect");
+    let spec = PlanSpec {
+        stencil: "diffusion2d".to_string(),
+        grid_dims: vec![256, 128],
+        iterations: 32,
+        backend: "scalar".to_string(),
+        tile: None,
+        coeffs: None,
+        step_sizes: None,
+        workers: None,
+        guard_nonfinite: None,
+        shards: Some(2),
+    };
+    let session = client.open(spec, vec![]).expect("open");
+    let mut grid = Grid::new2d(256, 128);
+    grid.fill_random(5, -1.0, 1.0);
+    let job = client.submit(session, &grid, None, None).expect("submit");
+    client.cancel(job).expect("cancel rpc");
+    match client.wait_result(job, Duration::from_secs(60)).expect("wait") {
+        WaitOutcome::Terminal { state: JobState::Cancelled, .. } => {}
+        other => panic!("cancelled cluster job resolved to {other:?}"),
+    }
+    client.close_session(session).expect("close");
+}
+
+#[test]
 fn blocking_exchange_is_bit_identical_for_the_custom_program() {
     // The ablation baseline path (drain-then-compute) through the deepest
     // halo in the suite: radius 3, file-defined program, stream backend.

@@ -8,9 +8,12 @@
 
 use std::time::Duration;
 
-use fstencil::engine::wire::{PlanSpec, WaitOutcome, WireClient, WireConfig, WireFrontend};
-use fstencil::engine::{EngineServer, StencilEngine, Workload};
+use fstencil::engine::wire::{
+    Checkpoint, ClusterConfig, PlanSpec, WaitOutcome, WireClient, WireConfig, WireFrontend,
+};
+use fstencil::engine::{ChaosPlan, EngineServer, StencilEngine, Workload};
 use fstencil::stencil::Grid;
+use fstencil::util::json::Json;
 
 const STRESS_WAIT: Duration = Duration::from_secs(60);
 const JOBS_PER_CLIENT: usize = 3;
@@ -37,6 +40,7 @@ fn spec(stencil: &str, dims: &[usize], iterations: usize, backend: &str) -> Plan
         step_sizes: None,
         workers: None,
         guard_nonfinite: None,
+        shards: None,
     }
 }
 
@@ -136,4 +140,194 @@ fn wire_clients_are_bit_identical_to_the_serial_oracle() {
             }
         }
     }
+}
+
+// --------------------------------------------------------------- cluster
+
+fn bind_cluster(workers: usize, cfg: WireConfig) -> Option<WireFrontend> {
+    let server = EngineServer::start(workers);
+    match WireFrontend::bind("127.0.0.1:0", server, cfg) {
+        Ok(f) => Some(f),
+        Err(e) => {
+            eprintln!("SKIP: loopback bind unavailable in this environment ({e})");
+            None
+        }
+    }
+}
+
+/// Explicit-request-only cluster policy: the astronomic threshold keeps
+/// the perf model out of these tests, so routing decisions are exactly
+/// the session's `shards` request clamped by partition feasibility.
+fn cluster_cfg() -> ClusterConfig {
+    ClusterConfig { route_threshold_cells: u64::MAX, ..ClusterConfig::default() }
+}
+
+/// Uninterrupted in-process run of the same spec — the bit-identity
+/// reference for every cluster-routed job.
+fn oracle_run(sp: &PlanSpec, input: &Grid) -> Grid {
+    let plan = sp.build().expect("oracle plan builds");
+    let engine = StencilEngine::new();
+    let mut session = engine.session(plan).expect("oracle session");
+    session.submit(Workload::new(input.clone())).wait().expect("oracle run").grid
+}
+
+fn assert_bits(got: &Grid, want: &Grid, what: &str) {
+    assert_eq!(got.dims(), want.dims(), "{what}: dims differ");
+    for (k, (a, b)) in got.data().iter().zip(want.data()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: cell {k} {a} != {b}");
+    }
+}
+
+#[test]
+fn cluster_routed_jobs_are_bit_identical_and_small_jobs_stay_on_the_pool() {
+    let cfg = WireConfig { cluster: Some(cluster_cfg()), ..WireConfig::default() };
+    let Some(front) = bind_cluster(2, cfg) else { return };
+    let addr = front.local_addr().to_string();
+    let mut client = WireClient::connect(&addr).expect("connect");
+
+    // 128 rows / 2 shards = 64-row slabs, exactly the default 64-row
+    // tile — feasible, so the explicit request routes to the cluster.
+    let mut big = spec("diffusion2d", &[128, 128], 12, "scalar");
+    big.shards = Some(2);
+    let input = mk_grid(&[128, 128], 77, -1.0, 1.0);
+    let session = client.open(big.clone(), vec![]).expect("open");
+    let job = client.submit(session, &input, None, None).expect("submit");
+    match client.wait_result(job, STRESS_WAIT).expect("wait") {
+        WaitOutcome::Done { grid, attempts, report } => {
+            assert_eq!(attempts, 1, "clean cluster run must not retry");
+            assert_eq!(
+                report.get("backend").and_then(Json::as_str),
+                Some("cluster"),
+                "large job did not route to the cluster: {report:?}"
+            );
+            assert_bits(&grid, &oracle_run(&big, &input), "cluster-routed job");
+        }
+        other => panic!("cluster job resolved to {other:?}"),
+    }
+    client.close_session(session).expect("close");
+
+    // 64 rows / 2 shards = 32-row slabs, thinner than the 64-row default
+    // tile: the infeasible request clamps back to the local pool.
+    let mut small = spec("diffusion2d", &[64, 64], 12, "scalar");
+    small.shards = Some(2);
+    let input = mk_grid(&[64, 64], 78, -1.0, 1.0);
+    let session = client.open(small.clone(), vec![]).expect("open");
+    let job = client.submit(session, &input, None, None).expect("submit");
+    match client.wait_result(job, STRESS_WAIT).expect("wait") {
+        WaitOutcome::Done { grid, attempts, report } => {
+            assert_eq!(attempts, 1);
+            assert_ne!(
+                report.get("backend").and_then(Json::as_str),
+                Some("cluster"),
+                "infeasible partition must stay on the pool"
+            );
+            assert_bits(&grid, &oracle_run(&small, &input), "pool job");
+        }
+        other => panic!("pool job resolved to {other:?}"),
+    }
+    client.close_session(session).expect("close");
+}
+
+#[test]
+fn chaos_killed_cluster_shard_is_retried_to_done() {
+    // `kill=1@1` fells shard 0 of attempt 1's fleet (the worker keys the
+    // kill on attempt = shard+1); the front door forwards chaos only on
+    // attempts the schedule selects, so the retry runs clean — the
+    // ShardLost is a retryable ledger attempt, deterministically.
+    let chaos = ChaosPlan::parse("9:kill=1@1").expect("chaos spec parses");
+    let cfg = WireConfig {
+        max_attempts: 3,
+        chaos: Some(std::sync::Arc::new(chaos)),
+        cluster: Some(cluster_cfg()),
+        ..WireConfig::default()
+    };
+    let Some(front) = bind_cluster(2, cfg) else { return };
+    let addr = front.local_addr().to_string();
+    let mut client = WireClient::connect(&addr).expect("connect");
+    let mut sp = spec("diffusion2d", &[128, 128], 12, "scalar");
+    sp.shards = Some(2);
+    let input = mk_grid(&[128, 128], 79, -1.0, 1.0);
+    let session = client.open(sp.clone(), vec![]).expect("open");
+    let job = client.submit(session, &input, None, None).expect("submit");
+    match client.wait_result(job, STRESS_WAIT).expect("wait") {
+        WaitOutcome::Done { grid, attempts, report } => {
+            assert_eq!(attempts, 2, "expected exactly one shard-loss retry");
+            assert_eq!(report.get("backend").and_then(Json::as_str), Some("cluster"));
+            assert_bits(&grid, &oracle_run(&sp, &input), "retried cluster job");
+        }
+        other => panic!("chaos cluster job resolved to {other:?}"),
+    }
+    let health = client.health().expect("health");
+    assert!(health.shard_retries >= 1, "shard retry not surfaced in health: {health:?}");
+    client.close_session(session).expect("close");
+}
+
+#[test]
+fn cluster_job_resumes_from_checkpoint_after_kill_and_rebind() {
+    use std::time::Instant;
+
+    let journal = std::env::temp_dir()
+        .join(format!("fstencil_e2e_cluster_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&journal);
+    let cfg = WireConfig {
+        journal: Some(journal.clone()),
+        checkpoint_every: 2,
+        cluster: Some(cluster_cfg()),
+        ..WireConfig::default()
+    };
+    let mut sp = spec("diffusion2d", &[128, 128], 48, "scalar");
+    sp.shards = Some(2);
+    let input = mk_grid(&[128, 128], 80, -1.0, 1.0);
+    let want = oracle_run(&sp, &input);
+
+    // Phase 1: start the sharded job; kill the frontend the instant a
+    // checkpoint sidecar exists, freezing journal + sidecars exactly as
+    // a SIGKILL would.
+    let job = {
+        let Some(mut front) = bind_cluster(2, cfg.clone()) else { return };
+        let addr = front.local_addr().to_string();
+        let mut client = WireClient::connect(&addr).expect("connect");
+        let session = client.open(sp.clone(), vec![]).expect("open");
+        let job = client.submit(session, &input, None, None).expect("submit");
+        let sidecar = Checkpoint::path_for(&journal, job);
+        let t0 = Instant::now();
+        while !sidecar.exists()
+            && !front.job_status(job).is_some_and(|s| s.state.is_terminal())
+            && t0.elapsed() < STRESS_WAIT
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        front.kill();
+        job
+    };
+
+    // Phase 2: rebind the same journal. A valid sidecar re-routes the
+    // job through the cluster, fast-forwarded past the checkpointed
+    // iterations; the greedy-schedule suffix property makes the resumed
+    // result bit-identical to the uninterrupted oracle.
+    {
+        let Some(front) = bind_cluster(2, cfg) else { return };
+        let addr = front.local_addr().to_string();
+        let mut client = WireClient::connect(&addr).expect("connect");
+        if front.resumed_jobs().iter().any(|(id, _)| *id == job) {
+            match client.wait_result(job, STRESS_WAIT).expect("wait") {
+                WaitOutcome::Done { grid, .. } => {
+                    assert_bits(&grid, &want, "resumed cluster job");
+                }
+                other => panic!("resumed cluster job ended {other:?}"),
+            }
+        } else {
+            // Legal non-resume outcomes (job finished before the kill, or
+            // the sidecar was unusable and it healed) must still replay
+            // to a terminal state, never a silent orphan.
+            let status = front.job_status(job).expect("job must replay");
+            assert!(
+                status.state.is_terminal(),
+                "non-resumed cluster job replayed {:?}",
+                status.state
+            );
+        }
+    }
+    let _ = std::fs::remove_file(Checkpoint::path_for(&journal, job));
+    let _ = std::fs::remove_file(&journal);
 }

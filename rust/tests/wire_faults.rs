@@ -66,6 +66,7 @@ fn spec(dims: &[usize], iterations: usize, backend: &str) -> PlanSpec {
         step_sizes: None,
         workers: None,
         guard_nonfinite: None,
+        shards: None,
     }
 }
 

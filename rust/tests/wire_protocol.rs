@@ -237,6 +237,7 @@ fn gen_plan_spec(rng: &mut Rng) -> PlanSpec {
         step_sizes: None,
         workers: rng.chance(0.3).then(|| rng.usize_in(1, 4)),
         guard_nonfinite: rng.chance(0.3).then(|| rng.bool()),
+        shards: rng.chance(0.3).then(|| rng.usize_in(1, 4)),
     }
 }
 
@@ -315,6 +316,9 @@ fn messages_round_trip_through_json() {
                     jobs_queued: rng.usize_in(0, 9) as u64,
                     jobs_active: rng.usize_in(0, 9) as u64,
                     chaos: rng.bool(),
+                    shards_active: rng.usize_in(0, 8) as u64,
+                    halo_overlapped: rng.next_u64() >> 40,
+                    shard_retries: rng.usize_in(0, 3) as u64,
                 },
                 _ => Response::Error {
                     kind: *rng.pick(&[
